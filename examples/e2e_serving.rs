@@ -1,0 +1,258 @@
+//! End-to-end serving driver (the repository's validation workload).
+//!
+//! Proves all three layers compose on a REAL model: the Pallas-kernel
+//! TinyLM is AOT-lowered to HLO text (L1+L2, `make artifacts`), loaded by
+//! the Rust PJRT runtime, and served as batched requests under two
+//! schedulers:
+//!
+//!   1. FCFS static batching (the no-SLO-awareness baseline), and
+//!   2. the paper's simulated-annealing SLO-aware scheduler,
+//!
+//! with the latency predictor FITTED FROM THE REAL ENGINE's own profiling
+//! rounds (paper §5.1 workflow) and SLOs derived as 10× the solo request
+//! latency (paper §5.1). Reports attainment / average latency / G for
+//! both. Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_serving
+
+use anyhow::Result;
+
+use slo_serve::config::SloTargets;
+use slo_serve::coordinator::objective::Evaluator;
+use slo_serve::coordinator::policies::Policy;
+use slo_serve::coordinator::predictor::LatencyPredictor;
+use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::coordinator::profiler::RequestProfiler;
+use slo_serve::coordinator::request::{Completion, Request, TaskType};
+use slo_serve::engine::real::RealEngine;
+use slo_serve::engine::{Engine, EngineRequest};
+use slo_serve::metrics::{fmt, RunMetrics, Table};
+use slo_serve::util::rng::Rng;
+use slo_serve::workload::dataset::RequestFactory;
+
+const MAX_BATCH: usize = 4;
+const N_REQUESTS: usize = 16;
+const MAX_INPUT: usize = 192;
+const MAX_OUTPUT: usize = 48;
+
+/// Profile the real engine: measure prefill/decode at several (batch, len)
+/// points and fit Eq. 14–15 (paper §5.1 profiling rounds).
+fn profile_engine(engine: &mut RealEngine) -> Result<LatencyPredictor> {
+    let mut profiler = RequestProfiler::new();
+    println!("compiling executables (warmup, excluded from profiling)...");
+    for &b in &[1usize, 2, 4] {
+        engine.warmup(b)?;
+    }
+    println!("profiling the real engine...");
+    let mut uid = 9_000_000u64;
+    for rep in 0..3 {
+        for &b in &[1usize, 2, 4] {
+            for &len in &[24usize, 56, 120, 240] {
+                let batch: Vec<EngineRequest> = (0..b)
+                    .map(|_| {
+                        uid += 1;
+                        EngineRequest {
+                            id: uid,
+                            input_len: len,
+                            max_new_tokens: 16,
+                            prompt: None,
+                        }
+                    })
+                    .collect();
+                let items = engine.run_batch(&batch)?;
+                if rep == 0 {
+                    continue; // first pass warms caches/allocators
+                }
+                for item in &items {
+                    let prefill_ms = item.first_token_ms - item.start_ms;
+                    profiler.observe_prefill(b, len, prefill_ms);
+                    if item.generated > 1 {
+                        profiler.observe_decode(b, len + 4, item.tpot_ms());
+                    }
+                }
+            }
+        }
+    }
+    let (predictor, r2p, r2d) = profiler
+        .fit_predictor()
+        .ok_or_else(|| anyhow::anyhow!("degenerate profiling fit"))?;
+    println!("fitted predictor: R²(prefill)={r2p:.3} R²(decode)={r2d:.3}");
+    println!(
+        "  prefill: α={:.4} β={:.2} γ={:.4} δ={:.2}",
+        predictor.prefill.alpha, predictor.prefill.beta,
+        predictor.prefill.gamma, predictor.prefill.delta
+    );
+    println!(
+        "  decode:  α={:.5} β={:.3} γ={:.5} δ={:.2}",
+        predictor.decode.alpha, predictor.decode.beta,
+        predictor.decode.gamma, predictor.decode.delta
+    );
+    Ok(predictor)
+}
+
+/// Derive SLO targets from the engine's measured solo latency (paper §5.1:
+/// e2e SLO = 10× the solo processing time of an average request).
+fn derive_slos(predictor: &LatencyPredictor) -> SloTargets {
+    let code_solo = predictor.predict(1, 150, 36);
+    let chat_solo = predictor.predict(1, 60, 24);
+    SloTargets {
+        // paper §5.1 sets e2e SLO at 10× solo processing time; this CPU
+        // testbed's wall-clock noise is far higher than a dedicated GPU's,
+        // so we tighten to 6× to keep the contended-but-feasible regime
+        // where ordering matters, and keep the paper's 1:3 TTFT/e2e ratio.
+        code_e2e_ms: 6.0 * code_solo.exec_ms,
+        chat_ttft_ms: 2.0 * code_solo.exec_ms,
+        chat_tpot_ms: 6.0 * chat_solo.tpot_ms,
+    }
+}
+
+fn execute(
+    engine: &mut RealEngine,
+    requests: &[Request],
+    plan: &slo_serve::coordinator::objective::Schedule,
+    epoch_ms: f64,
+) -> Result<Vec<Completion>> {
+    let mut completions = Vec::new();
+    for (_, start, size) in plan.batch_spans() {
+        let members: Vec<usize> = plan.order[start..start + size].to_vec();
+        let batch: Vec<EngineRequest> = members
+            .iter()
+            .map(|&i| {
+                let r = &requests[i];
+                EngineRequest {
+                    id: r.id,
+                    input_len: r.input_len,
+                    max_new_tokens: r.output_len,
+                    prompt: None,
+                }
+            })
+            .collect();
+        let items = engine.run_batch(&batch)?;
+        for (&i, item) in members.iter().zip(&items) {
+            let r = &requests[i];
+            completions.push(Completion {
+                id: r.id,
+                task: r.task,
+                slo: r.slo,
+                input_len: r.input_len,
+                generated: item.generated,
+                e2e_ms: item.finish_ms - epoch_ms,
+                ttft_ms: item.first_token_ms - epoch_ms,
+                tpot_ms: item.tpot_ms(),
+                wait_ms: item.start_ms - epoch_ms,
+                batch_size: item.batch_size,
+                text: None,
+            });
+        }
+    }
+    Ok(completions)
+}
+
+fn report(label: &str, completions: &[Completion]) -> RunMetrics {
+    let m = RunMetrics::from_completions(completions);
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["scheduler".into(), label.into()]);
+    t.row(vec![
+        "attainment".into(),
+        format!("{}/{} ({:.0}%)", m.met, m.n, m.attainment() * 100.0),
+    ]);
+    t.row(vec!["avg latency (ms)".into(), fmt(m.avg_latency_ms())]);
+    t.row(vec![
+        "p99 e2e (ms)".into(),
+        fmt(m.e2e.as_ref().map_or(0.0, |s| s.p99)),
+    ]);
+    t.row(vec!["G (req/s)".into(), format!("{:.4}", m.g_req_per_s)]);
+    for (task, att, n) in RunMetrics::attainment_by_task(completions) {
+        t.row(vec![
+            format!("  {} attainment", task.name()),
+            format!("{:.0}% of {n}", att * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!();
+    m
+}
+
+fn main() -> Result<()> {
+    println!("=== e2e_serving: TinyLM on PJRT CPU, SA vs FCFS ===\n");
+    let mut engine = RealEngine::load("artifacts")?;
+    println!(
+        "loaded {}: {} params buckets, max batch {}, max tokens {}\n",
+        engine.name(),
+        engine.spec().n_layers,
+        engine.max_batch(),
+        engine.max_total_tokens()
+    );
+
+    // ---- 1. profiling rounds on the real engine
+    let predictor = profile_engine(&mut engine)?;
+    let slos = derive_slos(&predictor);
+    println!(
+        "\nderived SLOs: code e2e {:.0} ms | chat TTFT {:.0} ms, TPOT {:.1} ms\n",
+        slos.code_e2e_ms, slos.chat_ttft_ms, slos.chat_tpot_ms
+    );
+
+    // ---- 2. workload: mixed chat+code wave scaled to the model
+    let mut factory =
+        RequestFactory::new(11, slos).with_caps(MAX_INPUT, MAX_OUTPUT);
+    let requests = factory.mixed_wave(N_REQUESTS);
+
+    // predicted output lengths from per-task history (profiler path)
+    let mut profiler = RequestProfiler::new();
+    let mut hist = RequestFactory::new(99, slos).with_caps(MAX_INPUT, MAX_OUTPUT);
+    for task in [TaskType::Chat, TaskType::Code] {
+        for r in hist.uniform_wave(100, task) {
+            profiler.observe_output(task, r.output_len);
+        }
+    }
+    let mut rng = Rng::new(11);
+    let predicted: Vec<usize> = requests
+        .iter()
+        .map(|r| profiler.predict_output(r.task, &mut rng, MAX_OUTPUT))
+        .collect();
+    let jobs: Vec<slo_serve::coordinator::objective::Job> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            slo_serve::coordinator::objective::Job::from_request(
+                i, r, predicted[i],
+            )
+        })
+        .collect();
+    let ev = Evaluator::new(&jobs, &predictor);
+
+    // ---- 3. FCFS baseline
+    let (fcfs_plan, _) = Policy::Fcfs.plan(&ev, MAX_BATCH);
+    let epoch = engine.now_ms();
+    let fcfs_completions = execute(&mut engine, &requests, &fcfs_plan, epoch)?;
+    let fcfs = report("fcfs (static batching)", &fcfs_completions);
+
+    // ---- 4. SLO-aware simulated annealing
+    let (sa_plan, stats) = Policy::SloAware(SaParams {
+        max_batch: MAX_BATCH,
+        seed: 11,
+        ..Default::default()
+    })
+    .plan(&ev, MAX_BATCH);
+    if let Some(s) = stats {
+        println!(
+            "SA search: {} evals, {} accepted, overhead {:.2} ms{}\n",
+            s.evals,
+            s.accepted,
+            s.overhead_ms,
+            if s.early_exit { " (early exit)" } else { "" }
+        );
+    }
+    let epoch = engine.now_ms();
+    let sa_completions = execute(&mut engine, &requests, &sa_plan, epoch)?;
+    let sa = report("slo-aware simulated annealing", &sa_completions);
+
+    println!(
+        "summary: attainment {} -> {} | avg latency {:.0} -> {:.0} ms | G {:.4} -> {:.4}",
+        fcfs.met, sa.met,
+        fcfs.avg_latency_ms(), sa.avg_latency_ms(),
+        fcfs.g_req_per_s, sa.g_req_per_s
+    );
+    println!("e2e_serving OK");
+    Ok(())
+}

@@ -1,0 +1,21 @@
+use slo_serve::engine::real::RealEngine;
+use slo_serve::engine::{Engine, EngineRequest};
+
+fn main() -> anyhow::Result<()> {
+    let mut e = RealEngine::load(&std::env::var("ARTS").unwrap_or("artifacts".into()))?;
+    e.warmup(4)?;
+    let batch: Vec<EngineRequest> = (0..4)
+        .map(|i| EngineRequest { id: i, input_len: 64, max_new_tokens: 24, prompt: None })
+        .collect();
+    let _ = e.run_batch(&batch)?; // warm
+    let steps0 = e.decode_steps;
+    let exec0 = e.execute_ms;
+    let t0 = std::time::Instant::now();
+    let _ = e.run_batch(&batch)?;
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    let steps = e.decode_steps - steps0;
+    let exec = e.execute_ms - exec0;
+    println!("wall {wall:.1} ms | {} steps | execute (incl. literal io) {exec:.1} ms ({:.1}/step) | host-side {:.1} ms",
+             steps, exec / steps as f64, wall - exec);
+    Ok(())
+}

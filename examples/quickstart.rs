@@ -1,0 +1,48 @@
+//! Quickstart: load the AOT-compiled TinyLM and serve one batch.
+//!
+//! Build artifacts first (`make artifacts`), then:
+//!     cargo run --release --example quickstart
+//!
+//! Demonstrates the full three-layer stack in ~30 lines: artifacts
+//! (Pallas kernels inside a JAX model, lowered to HLO text) are loaded by
+//! the Rust PJRT runtime and executed as a planned batch.
+
+use slo_serve::engine::real::RealEngine;
+use slo_serve::engine::{Engine, EngineRequest};
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = RealEngine::load("artifacts")?;
+    println!("engine: {} (max batch {}, max tokens {})",
+             engine.name(), engine.max_batch(), engine.max_total_tokens());
+
+    let batch = vec![
+        EngineRequest {
+            id: 0,
+            input_len: 0,
+            max_new_tokens: 16,
+            prompt: Some(b"def fibonacci(n):".to_vec()),
+        },
+        EngineRequest {
+            id: 1,
+            input_len: 0,
+            max_new_tokens: 12,
+            prompt: Some(b"Hello, how are you?".to_vec()),
+        },
+    ];
+    let results = engine.run_batch(&batch)?;
+    for r in &results {
+        println!(
+            "request {}: {} tokens, ttft {:.1} ms, tpot {:.2} ms, e2e {:.1} ms",
+            r.id,
+            r.generated,
+            r.first_token_ms - r.start_ms,
+            r.tpot_ms(),
+            r.finish_ms - r.start_ms,
+        );
+        if let Some(text) = &r.text {
+            println!("  bytes: {:?}", String::from_utf8_lossy(text));
+        }
+    }
+    println!("quickstart OK");
+    Ok(())
+}

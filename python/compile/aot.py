@@ -1,0 +1,181 @@
+"""AOT compile path: TinyLM → HLO text + weights + manifest.
+
+Runs ONCE at build time (``make artifacts``).  Python never touches the
+request path: the Rust runtime loads these artifacts and serves from them.
+
+Outputs (under ``--out``, default ``../artifacts``):
+
+* ``prefill_b{B}_s{S}.hlo.txt`` — one executable per (batch, seq) bucket.
+* ``decode_b{B}.hlo.txt``       — one executable per batch bucket.
+* ``weights.bin``               — TLMW1 binary tensor container (see below).
+* ``manifest.json``             — model config, parameter order/shapes,
+                                  bucket table, token conventions.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+TLMW1 weights format (little-endian):
+    magic   6 bytes  b"TLMW1\\0"
+    count   u32
+    per tensor:
+        name_len u32, name utf-8,
+        dtype    u8  (0 = f32),
+        ndim     u8,
+        dims     u32 × ndim,
+        data     f32 × prod(dims)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Bucket grid served by the Rust engine.  Requests are padded up to the
+# nearest bucket; keep the grid small — executables are compiled lazily by
+# the Rust runtime but each adds artifact bytes and compile time.
+PREFILL_BATCHES = (1, 2, 4)
+PREFILL_SEQS = (32, 64, 128, 256)
+DECODE_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, cfg: M.ModelConfig, params) -> None:
+    order = M.param_order(cfg)
+    with open(path, "wb") as f:
+        f.write(b"TLMW1\0")
+        f.write(struct.pack("<I", len(order)))
+        for name in order:
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes(order="C"))
+
+
+def _param_specs(cfg: M.ModelConfig):
+    shapes = M.param_shapes(cfg)
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+            for n in M.param_order(cfg)]
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int, seq: int,
+                  attn_impl: str = "pallas") -> str:
+    fn = M.prefill_flat(cfg, attn_impl)
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lowered = jax.jit(fn).lower(*_param_specs(cfg), tokens)
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int,
+                 attn_impl: str = "pallas") -> str:
+    fn = M.decode_flat(cfg, attn_impl)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim),
+        jnp.float32)
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(fn).lower(*_param_specs(cfg), cache, cache, tokens, pos)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, cfg: M.ModelConfig, seed: int = 42,
+          attn_impl: str = "pallas",
+          prefill_batches=PREFILL_BATCHES, prefill_seqs=PREFILL_SEQS,
+          decode_batches=DECODE_BATCHES, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+
+    params = M.init_params(cfg, seed)
+    write_weights(os.path.join(out_dir, "weights.bin"), cfg, params)
+
+    shapes = M.param_shapes(cfg)
+    manifest = {
+        "format": 1,
+        "model": cfg.to_dict(),
+        "seed": seed,
+        "attn_impl": attn_impl,
+        "weights": "weights.bin",
+        "params": [{"name": n, "shape": list(shapes[n])}
+                   for n in M.param_order(cfg)],
+        "tokens": {"vocab": cfg.vocab, "bos": M.BOS_ID, "eos": M.EOS_ID},
+        "buckets": {"prefill": [], "decode": []},
+        # Result tuple layouts for the rust runtime:
+        #   prefill -> (logits[B,S,V], k_caches[L,B,maxS,H,Dh], v_caches same)
+        #   decode  -> (logits[B,V],   k_caches,                v_caches)
+        "outputs": {"prefill": ["logits", "k_caches", "v_caches"],
+                    "decode": ["logits", "k_caches", "v_caches"]},
+    }
+
+    for b in prefill_batches:
+        for s in prefill_seqs:
+            if s > cfg.max_seq:
+                continue
+            name = f"prefill_b{b}_s{s}.hlo.txt"
+            if verbose:
+                print(f"lowering {name} ...", flush=True)
+            text = lower_prefill(cfg, b, s, attn_impl)
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(text)
+            manifest["buckets"]["prefill"].append(
+                {"batch": b, "seq": s, "file": name})
+
+    for b in decode_batches:
+        name = f"decode_b{b}.hlo.txt"
+        if verbose:
+            print(f"lowering {name} ...", flush=True)
+        text = lower_decode(cfg, b, attn_impl)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["buckets"]["decode"].append({"batch": b, "file": name})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        total = sum(os.path.getsize(os.path.join(out_dir, e))
+                    for e in os.listdir(out_dir))
+        print(f"artifacts complete: {out_dir} ({total / 1e6:.1f} MB, "
+              f"{cfg.param_count} params)")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--attn-impl", choices=("pallas", "ref"), default="pallas")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=384)
+    args = ap.parse_args(argv)
+    cfg = M.ModelConfig(d_model=args.d_model, n_layers=args.n_layers,
+                        n_heads=args.n_heads,
+                        head_dim=args.d_model // args.n_heads,
+                        max_seq=args.max_seq)
+    build(args.out, cfg, seed=args.seed, attn_impl=args.attn_impl)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

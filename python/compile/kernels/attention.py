@@ -1,0 +1,228 @@
+"""L1 Pallas attention kernels — the serving hot spot.
+
+Two kernels cover the two phases of LLM inference (paper §2.1):
+
+* :func:`flash_attention` — fused causal attention for the **prefill** phase.
+  Flash-style single pass over K/V blocks with running softmax statistics, so
+  the working set per grid step is one Q block + one K/V block + the f32
+  accumulator, independent of sequence length.
+
+* :func:`decode_attention` — one **decode** step: a single query token per
+  (batch, head) attends over the KV cache up to a per-row position.  This is
+  the TPU analogue of PagedAttention's one-pass KV scan: the cache is
+  streamed block-by-block from HBM into VMEM while the running softmax state
+  stays resident.
+
+Hardware adaptation (DESIGN.md §9): the paper's stack targets CUDA GPUs; we
+re-express its threadblock tiling as Pallas ``BlockSpec``s (HBM→VMEM
+schedule) and size blocks for the MXU (lane = 128, f32 sublane = 8).  All
+matmuls accumulate in f32 via ``preferred_element_type``.
+
+Kernels MUST be lowered with ``interpret=True`` in this environment: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default block sizes.  bq/bk = 128 matches the MXU tile edge; for the short
+# sequences of the CPU test model we shrink to the sequence length.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+# Large-negative constant used instead of -inf so fully-masked blocks produce
+# exp(x - m) == 0 without generating NaNs.
+_MASK_VALUE = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float,
+                  causal: bool):
+    """One grid step: one (batch, head, q-block) against all K/V blocks.
+
+    Refs arrive blocked as:
+      q_ref: [1, 1, bq, d]   — the query block
+      k_ref: [1, 1, S,  d]   — full K for this (b, h); streamed in bk chunks
+      v_ref: [1, 1, S,  d]
+      o_ref: [1, 1, bq, d]
+    """
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, d]
+    k = k_ref[0, 0]                                      # [S, d]
+    v = v_ref[0, 0]
+    bq, d = q.shape
+    s = k.shape[0]
+    n_kv_blocks = s // block_k
+
+    q_block_idx = pl.program_id(2)
+    q_offset = q_block_idx * bq
+    q_ids = q_offset + lax.iota(jnp.int32, bq)           # global q positions
+
+    # The KV loop is UNROLLED at trace time (static trip count, masking
+    # instead of data-dependent bounds). Structurally this is what a TPU
+    # pipeline wants (static schedule -> double-bufferable HBM->VMEM DMAs)
+    # and it is dramatically faster under interpret mode on CPU PJRT,
+    # where dynamic-trip-count while-loops defeat the XLA optimizer
+    # (EXPERIMENTS.md §Perf: 44x on the decode path).
+    m = jnp.full((bq,), _MASK_VALUE, dtype=jnp.float32)
+    l = jnp.zeros((bq,), dtype=jnp.float32)
+    acc = jnp.zeros((bq, d), dtype=jnp.float32)
+    for j in range(n_kv_blocks):
+        k_blk = k[j * block_k:(j + 1) * block_k]
+        v_blk = v[j * block_k:(j + 1) * block_k]
+        # scores: [bq, bk], accumulated in f32 on the MXU.
+        scores = jnp.dot(q, k_blk.T.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        if causal:
+            k_ids = j * block_k + lax.iota(jnp.int32, block_k)
+            mask = k_ids[None, :] <= q_ids[:, None]
+            scores = jnp.where(mask, scores, _MASK_VALUE)
+        m_cur = jnp.max(scores, axis=1)                  # [bq]
+        m_new = jnp.maximum(m, m_cur)
+        correction = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[:, None])             # [bq, bk]
+        l = l * correction + jnp.sum(p, axis=1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p, v_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    out = acc / l[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int | None = None,
+                    block_k: int | None = None,
+                    interpret: bool = True):
+    """Fused multi-head attention over ``[B, H, S, D]`` tensors.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]`` arrays (f32 or bf16).
+      causal: apply a causal mask (token *i* attends to keys ``<= i``).
+      block_q / block_k: VMEM tile sizes along the sequence axis; both must
+        divide ``seq``.  Defaults adapt to short sequences.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``[batch, heads, seq, head_dim]`` attention output in ``q.dtype``.
+    """
+    b, h, s, d = q.shape
+    if k.shape != (b, h, s, d) or v.shape != (b, h, s, d):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    bq = block_q or min(DEFAULT_BLOCK_Q, s)
+    bk = block_k or min(DEFAULT_BLOCK_K, s)
+    if s % bq or s % bk:
+        raise ValueError(f"seq {s} not divisible by blocks ({bq}, {bk})")
+    scale = 1.0 / math.sqrt(d)
+
+    grid = (b, h, s // bq)
+    kernel = functools.partial(_flash_kernel, block_k=bk, scale=scale,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                   scale: float):
+    """One grid step: one (batch, head) decode query against the KV cache.
+
+    Refs:
+      pos_ref: [1]              — this row's current position (0-based index
+                                  of the slot the new token occupies; keys
+                                  ``<= pos`` are valid).
+      q_ref:   [1, 1, d]
+      k_ref:   [1, 1, S, d]     — cache for this (b, h); streamed in chunks
+      v_ref:   [1, 1, S, d]
+      o_ref:   [1, 1, d]
+    """
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [d]
+    k = k_ref[0, 0]                                      # [S, d]
+    v = v_ref[0, 0]
+    s, d = k.shape
+    n_blocks_total = s // block_k
+
+    # Static trip count, mask by pos (see the note in _flash_kernel: trace-
+    # time unrolling keeps the schedule static for both the TPU pipeline
+    # and the CPU interpret path; blocks past pos contribute zero weight).
+    m = jnp.float32(_MASK_VALUE)
+    l = jnp.float32(0.0)
+    acc = jnp.zeros((d,), dtype=jnp.float32)
+    for j in range(n_blocks_total):
+        k_blk = k[j * block_k:(j + 1) * block_k]
+        v_blk = v[j * block_k:(j + 1) * block_k]
+        scores = jnp.dot(k_blk.astype(jnp.float32), q,
+                         preferred_element_type=jnp.float32)  # [bk]
+        k_ids = j * block_k + lax.iota(jnp.int32, block_k)
+        scores = jnp.where(k_ids <= pos, scores, _MASK_VALUE)
+        m_cur = jnp.max(scores)
+        m_new = jnp.maximum(m, m_cur)
+        correction = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new)                      # [bk]
+        l = l * correction + jnp.sum(p)
+        acc = acc * correction + jnp.dot(
+            p, v_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32)          # [d]
+        m = m_new
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_k: int | None = None,
+                     interpret: bool = True):
+    """Single-token decode attention against a (padded) KV cache.
+
+    Args:
+      q:        ``[batch, heads, head_dim]`` — the new token's query.
+      k_cache:  ``[batch, heads, max_seq, head_dim]`` — keys; slots beyond
+                ``pos`` may hold garbage (they are masked).
+      v_cache:  same shape as ``k_cache``.
+      pos:      ``[batch]`` int32 — index of the new token's slot per row;
+                the row attends over keys ``0..=pos`` (the new token's K/V
+                must already be written at ``pos``).
+      block_k:  KV streaming chunk; must divide ``max_seq``.
+
+    Returns:
+      ``[batch, heads, head_dim]`` in ``q.dtype``.
+    """
+    b, h, d = q.shape
+    bc, hc, s, dc = k_cache.shape
+    if (bc, hc, dc) != (b, h, d) or v_cache.shape != k_cache.shape:
+        raise ValueError(
+            f"cache shape mismatch: q={q.shape} k={k_cache.shape} v={v_cache.shape}")
+    if pos.shape != (b,):
+        raise ValueError(f"pos shape {pos.shape} != ({b},)")
+    bk = block_k or min(DEFAULT_BLOCK_K, s)
+    if s % bk:
+        raise ValueError(f"max_seq {s} not divisible by block_k {bk}")
+    scale = 1.0 / math.sqrt(d)
+
+    grid = (b, h)
+    kernel = functools.partial(_decode_kernel, block_k=bk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_: (b_,)),
+            pl.BlockSpec((1, 1, d), lambda b_, h_: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h_: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k_cache, v_cache)

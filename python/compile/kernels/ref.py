@@ -1,0 +1,51 @@
+"""Pure-`jnp` oracles for the Pallas kernels.
+
+These are the correctness references: deliberately naive, no blocking, no
+running-softmax tricks — just masked softmax attention.  The pytest suite
+(``python/tests/test_kernel.py``) sweeps shapes/dtypes with hypothesis and
+asserts the Pallas kernels match these to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Reference attention over ``[B, H, S, D]`` tensors (see flash_attention)."""
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        q_ids = jnp.arange(s)[:, None]
+        k_ids = jnp.arange(s)[None, :]
+        scores = jnp.where(k_ids <= q_ids, scores, _NEG)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Reference decode-step attention (see decode_attention).
+
+    q: [B, H, D]; caches: [B, H, S, D]; pos: [B] — attends over keys 0..=pos.
+    """
+    b, h, s, d = k_cache.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum(
+        "bhd,bhkd->bhk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    k_ids = jnp.arange(s)[None, None, :]
+    mask = k_ids <= pos[:, None, None]
+    scores = jnp.where(mask, scores, _NEG)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

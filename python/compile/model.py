@@ -1,0 +1,314 @@
+"""L2: TinyLM — a GPT-style decoder-only transformer in JAX.
+
+This is the model the Rust serving stack executes.  It is deliberately small
+(≈1 M parameters by default) so the whole three-layer stack — Pallas kernel →
+JAX graph → HLO text → Rust PJRT runtime — runs quickly on the CPU testbed,
+while keeping the *structure* of a production LLM: RMSNorm, rotary position
+embeddings, multi-head attention with an explicit KV cache, and a SwiGLU MLP.
+
+Two entry points mirror the two phases of inference (paper §2.1):
+
+* :func:`prefill` — process a right-padded prompt batch ``[B, S]`` in one
+  shot, producing logits for every position and a KV cache padded to
+  ``max_seq`` (slots ≥ the row's true length hold garbage; decode masks them
+  by position).
+* :func:`decode_step` — extend each row by one token at a per-row position,
+  updating the cache in place (functionally).
+
+The KV caches are explicit *arguments and results* — never module state — so
+the AOT-compiled executables are pure functions and the Rust runtime can keep
+the cache as opaque device buffers between steps (see rust/src/engine/real.rs).
+
+Attention is computed by the L1 Pallas kernels (``attn_impl="pallas"``) or by
+the pure-jnp oracle (``attn_impl="ref"``); tests assert both paths agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import attention as attn_kernels
+from .kernels import ref as attn_ref
+
+# Token conventions (byte-level tokenizer; mirrored in rust engine/tokenizer.rs).
+BOS_ID = 256
+EOS_ID = 257
+VOCAB_SIZE = 258
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """TinyLM hyperparameters.  Defaults are the shipped serving model."""
+
+    vocab: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ffn: int = 256
+    max_seq: int = 384
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model, \
+            "d_model must equal n_heads * head_dim"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def param_count(self) -> int:
+        per_layer = (4 * self.d_model * self.d_model
+                     + 3 * self.d_model * self.d_ffn
+                     + 2 * self.d_model)
+        return (self.vocab * self.d_model            # embed
+                + self.n_layers * per_layer
+                + self.d_model                       # final norm
+                + self.d_model * self.vocab)         # unembed
+
+
+def param_order(cfg: ModelConfig) -> List[str]:
+    """Canonical flat parameter order — the AOT argument order.
+
+    The Rust runtime feeds weight buffers in exactly this order; keep in sync
+    with ``artifacts/manifest.json`` (written by aot.py from this function).
+    """
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        names += [p + "attn_norm", p + "attn.wq", p + "attn.wk",
+                  p + "attn.wv", p + "attn.wo",
+                  p + "mlp_norm", p + "mlp.w_gate", p + "mlp.w_up",
+                  p + "mlp.w_down"]
+    names += ["final_norm", "unembed"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    shapes = {"embed": (v, d), "final_norm": (d,), "unembed": (d, v)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        shapes[p + "attn_norm"] = (d,)
+        shapes[p + "attn.wq"] = (d, d)
+        shapes[p + "attn.wk"] = (d, d)
+        shapes[p + "attn.wv"] = (d, d)
+        shapes[p + "attn.wo"] = (d, d)
+        shapes[p + "mlp_norm"] = (d,)
+        shapes[p + "mlp.w_gate"] = (d, f)
+        shapes[p + "mlp.w_up"] = (d, f)
+        shapes[p + "mlp.w_down"] = (f, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> Dict[str, jax.Array]:
+    """Scaled-normal initialisation (untrained weights — the serving benches
+    measure latency, not quality; generation length is driven by max_tokens)."""
+    shapes = param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name in param_order(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[n] for n in param_order(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    return dict(zip(param_order(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions [...]->angles [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotary embedding.  x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    half = x.shape[-1] // 2
+    ang = _rope_angles(positions, x.shape[-1], theta)       # [..., seq, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., seq, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _attention_prefill(x, layer, cfg: ModelConfig, positions, attn_impl: str):
+    """x: [B, S, D] -> (out [B, S, D], k [B, S, H, Dh], v [B, S, H, Dh])."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ layer["attn.wq"]).reshape(b, s, h, dh)
+    k = (x @ layer["attn.wk"]).reshape(b, s, h, dh)
+    v = (x @ layer["attn.wv"]).reshape(b, s, h, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # kernels want [B, H, S, Dh]
+    qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    if attn_impl == "pallas":
+        ot = attn_kernels.flash_attention(qt, kt, vt, causal=True)
+    else:
+        ot = attn_ref.flash_attention_ref(qt, kt, vt, causal=True)
+    out = ot.transpose(0, 2, 1, 3).reshape(b, s, d) @ layer["attn.wo"]
+    return out, k, v
+
+
+def _attention_decode(x, layer, cfg: ModelConfig, k_cache, v_cache, pos,
+                      attn_impl: str):
+    """One-token attention.
+
+    x: [B, D] (the new token's hidden state);
+    k_cache/v_cache: [B, max_seq, H, Dh] for this layer; pos: [B] int32.
+    Returns (out [B, D], k_cache', v_cache').
+    """
+    b, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ layer["attn.wq"]).reshape(b, h, dh)
+    k = (x @ layer["attn.wk"]).reshape(b, h, dh)
+    v = (x @ layer["attn.wv"]).reshape(b, h, dh)
+    # rope at per-row position: treat as seq len 1
+    q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    # write the new K/V into the cache at pos (per row)
+    def write(cache_row, new_row, p):
+        return lax.dynamic_update_slice(cache_row, new_row[None], (p, 0, 0))
+
+    k_cache = jax.vmap(write)(k_cache, k, pos)
+    v_cache = jax.vmap(write)(v_cache, v, pos)
+
+    # kernels want caches as [B, H, S, Dh]
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    if attn_impl == "pallas":
+        ot = attn_kernels.decode_attention(q, kt, vt, pos)
+    else:
+        ot = attn_ref.decode_attention_ref(q, kt, vt, pos)
+    out = ot.reshape(b, d) @ layer["attn.wo"]
+    return out, k_cache, v_cache
+
+
+def _mlp(x, layer):
+    gate = jax.nn.silu(x @ layer["mlp.w_gate"])
+    up = x @ layer["mlp.w_up"]
+    return (gate * up) @ layer["mlp.w_down"]
+
+
+def _layer_params(params: Dict[str, jax.Array], i: int) -> Dict[str, jax.Array]:
+    p = f"layers.{i}."
+    return {k[len(p):]: v for k, v in params.items() if k.startswith(p)}
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Dict[str, jax.Array], tokens,
+            attn_impl: str = "pallas"):
+    """Prompt processing.
+
+    tokens: [B, S] int32 (right-padded; padded tail is garbage but harmless —
+    causal attention keeps real positions clean and decode masks by pos).
+
+    Returns (logits [B, S, V], k_caches [L, B, max_seq, H, Dh], v_caches same).
+    """
+    b, s = tokens.shape
+    if s > cfg.max_seq:
+        raise ValueError(f"prefill seq {s} > max_seq {cfg.max_seq}")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        layer = _layer_params(params, i)
+        a_in = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        a_out, k, v = _attention_prefill(a_in, layer, cfg, positions, attn_impl)
+        x = x + a_out
+        m_in = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(m_in, layer)
+        pad = cfg.max_seq - s
+        k_caches.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(cfg: ModelConfig, params: Dict[str, jax.Array],
+                k_caches, v_caches, tokens, pos, attn_impl: str = "pallas"):
+    """One decode iteration.
+
+    k_caches/v_caches: [L, B, max_seq, H, Dh]; tokens: [B] int32 (the tokens
+    being fed this step); pos: [B] int32 (slot each token occupies — i.e. the
+    row's current length).  Rows that are inactive padding in the batch can
+    use pos pointing at a scratch slot; their outputs are ignored upstream.
+
+    Returns (logits [B, V], k_caches', v_caches').
+    """
+    x = params["embed"][tokens]          # [B, D]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        layer = _layer_params(params, i)
+        a_in = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        a_out, kc, vc = _attention_decode(
+            a_in, layer, cfg, k_caches[i], v_caches[i], pos, attn_impl)
+        x = x + a_out
+        m_in = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(m_in, layer)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# Convenience: flat-argument wrappers (the AOT lowering surface; aot.py uses
+# these so the HLO signature is (param_0, ..., param_n, data...) ).
+
+def prefill_flat(cfg: ModelConfig, attn_impl: str = "pallas"):
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        tokens = args[n]
+        return prefill(cfg, params, tokens, attn_impl)
+
+    return fn
+
+
+def decode_flat(cfg: ModelConfig, attn_impl: str = "pallas"):
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        k_caches, v_caches, tokens, pos = args[n:n + 4]
+        return decode_step(cfg, params, k_caches, v_caches, tokens, pos,
+                           attn_impl)
+
+    return fn

@@ -1,0 +1,117 @@
+"""AOT artifact contract tests: weights container, manifest, HLO text.
+
+The Rust runtime (rust/src/runtime/mod.rs) trusts this format; these tests
+pin it down on the producer side.
+"""
+
+import json
+import os
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.ModelConfig(d_model=32, n_layers=1, n_heads=2, head_dim=16,
+                     d_ffn=64, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, TINY, seed=3, prefill_batches=(1, 2),
+                         prefill_seqs=(16, 32), decode_batches=(1,),
+                         verbose=False)
+    return out, manifest
+
+
+def read_weights(path):
+    """Reference decoder for the TLMW1 container."""
+    tensors = {}
+    with open(path, "rb") as f:
+        assert f.read(6) == b"TLMW1\0"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            assert dtype == 0
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), np.float32).reshape(dims)
+            tensors[name] = data
+        assert f.read() == b""  # no trailing bytes
+    return tensors
+
+
+def test_weights_roundtrip(built):
+    out, _ = built
+    tensors = read_weights(os.path.join(out, "weights.bin"))
+    params = M.init_params(TINY, seed=3)
+    assert list(tensors.keys()) == M.param_order(TINY)
+    for name, arr in tensors.items():
+        np.testing.assert_array_equal(arr, np.asarray(params[name]))
+
+
+def test_manifest_contents(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["model"]["d_model"] == TINY.d_model
+    assert on_disk["tokens"] == {"vocab": M.VOCAB_SIZE, "bos": M.BOS_ID,
+                                 "eos": M.EOS_ID}
+    names = [p["name"] for p in on_disk["params"]]
+    assert names == M.param_order(TINY)
+    shapes = M.param_shapes(TINY)
+    for p in on_disk["params"]:
+        assert tuple(p["shape"]) == shapes[p["name"]]
+
+
+def test_manifest_buckets_exist(built):
+    out, manifest = built
+    assert len(manifest["buckets"]["prefill"]) == 4   # 2 batches × 2 seqs
+    assert len(manifest["buckets"]["decode"]) == 1
+    for entry in (manifest["buckets"]["prefill"]
+                  + manifest["buckets"]["decode"]):
+        path = os.path.join(out, entry["file"])
+        assert os.path.getsize(path) > 1000
+
+
+def test_hlo_is_text_with_entry(built):
+    out, manifest = built
+    path = os.path.join(out, manifest["buckets"]["prefill"][0]["file"])
+    with open(path) as f:
+        text = f.read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # interchange must be text, never a serialized proto blob
+    assert "\x00" not in text
+
+
+def test_hlo_param_arity(built):
+    """Entry computation must take n_params + data args (decode: k, v,
+    tokens, pos)."""
+    out, manifest = built
+    n_params = len(manifest["params"])
+    path = os.path.join(out, manifest["buckets"]["decode"][0]["file"])
+    with open(path) as f:
+        header = f.readline()
+    assert "entry_computation_layout" in header
+    args_part = header[header.index("{(") + 2:header.index(")->")]
+    n_args = args_part.count("f32[") + args_part.count("s32[")
+    assert n_args == n_params + 4
+
+
+def test_bucket_seq_filtered_by_max_seq(tmp_path):
+    cfg = M.ModelConfig(d_model=32, n_layers=1, n_heads=2, head_dim=16,
+                        d_ffn=64, max_seq=32)
+    manifest = aot.build(str(tmp_path), cfg, prefill_batches=(1,),
+                         prefill_seqs=(16, 32, 64), decode_batches=(1,),
+                         verbose=False)
+    seqs = [b["seq"] for b in manifest["buckets"]["prefill"]]
+    assert seqs == [16, 32]

@@ -1,0 +1,193 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/block sizes; numpy.testing asserts allclose.
+This is the CORE correctness signal for the compute hot spot — everything
+the Rust engine executes flows through these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32_TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (prefill)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_matches_ref_f32(b, h, s, d, causal, seed):
+    q = _rand(seed, (b, h, s, d), jnp.float32)
+    k = _rand(seed + 1, (b, h, s, d), jnp.float32)
+    v = _rand(seed + 2, (b, h, s, d), jnp.float32)
+    out = A.flash_attention(q, k, v, causal=causal)
+    ref = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, **F32_TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_matches_ref_bf16(s, seed):
+    shape = (2, 2, s, 32)
+    q = _rand(seed, shape, jnp.bfloat16)
+    k = _rand(seed + 1, shape, jnp.bfloat16)
+    v = _rand(seed + 2, shape, jnp.bfloat16)
+    out = A.flash_attention(q, k, v, causal=True)
+    ref = R.flash_attention_ref(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(out.astype(np.float32), ref.astype(np.float32),
+                               **BF16_TOL)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (16, 32), (32, 16), (64, 64)])
+def test_flash_block_size_invariance(bq, bk):
+    """Output must not depend on the VMEM tile decomposition."""
+    shape = (2, 2, 64, 32)
+    q, k, v = (_rand(i, shape, jnp.float32) for i in range(3))
+    base = A.flash_attention(q, k, v, block_q=64, block_k=64)
+    out = A.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(out, base, **F32_TOL)
+
+
+def test_flash_rejects_bad_blocks():
+    shape = (1, 1, 48, 16)
+    q, k, v = (_rand(i, shape, jnp.float32) for i in range(3))
+    with pytest.raises(ValueError):
+        A.flash_attention(q, k, v, block_q=32, block_k=32)
+
+
+def test_flash_rejects_shape_mismatch():
+    q = _rand(0, (1, 1, 32, 16), jnp.float32)
+    k = _rand(1, (1, 1, 64, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        A.flash_attention(q, k, k)
+    with pytest.raises(ValueError):
+        A.flash_attention(q, q, k)
+
+
+def test_flash_causal_ignores_future():
+    """Perturbing tokens after position p must not change output at p."""
+    shape = (1, 2, 64, 16)
+    q, k, v = (_rand(i, shape, jnp.float32) for i in range(3))
+    out1 = A.flash_attention(q, k, v, causal=True)
+    k2 = k.at[:, :, 40:, :].set(99.0)
+    v2 = v.at[:, :, 40:, :].set(-99.0)
+    out2 = A.flash_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:, :, :40], out2[:, :, :40], **F32_TOL)
+    # sanity: later positions DO change
+    assert not np.allclose(out1[:, :, 40:], out2[:, :, 40:], atol=1e-3)
+
+
+def test_flash_softmax_rowsum_property():
+    """With v = ones, attention output must be exactly ones (softmax sums 1)."""
+    q = _rand(0, (2, 2, 64, 16), jnp.float32)
+    k = _rand(1, (2, 2, 64, 16), jnp.float32)
+    v = jnp.ones((2, 2, 64, 16), jnp.float32)
+    out = A.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([64, 128, 384]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_decode_matches_ref_f32(b, h, s, d, seed, data):
+    pos = np.array(
+        [data.draw(st.integers(0, s - 1)) for _ in range(b)], np.int32)
+    q = _rand(seed, (b, h, d), jnp.float32)
+    kc = _rand(seed + 1, (b, h, s, d), jnp.float32)
+    vc = _rand(seed + 2, (b, h, s, d), jnp.float32)
+    out = A.decode_attention(q, kc, vc, jnp.asarray(pos))
+    ref = R.decode_attention_ref(q, kc, vc, jnp.asarray(pos))
+    np.testing.assert_allclose(out, ref, **F32_TOL)
+
+
+def test_decode_masks_garbage_beyond_pos():
+    """Slots beyond pos are garbage in real serving; they must not leak."""
+    b, h, s, d = 2, 2, 128, 16
+    q = _rand(0, (b, h, d), jnp.float32)
+    kc = _rand(1, (b, h, s, d), jnp.float32)
+    vc = _rand(2, (b, h, s, d), jnp.float32)
+    pos = jnp.array([10, 50], jnp.int32)
+    base = A.decode_attention(q, kc, vc, pos)
+    kc2 = kc.at[0, :, 11:, :].set(1e6).at[1, :, 51:, :].set(1e6)
+    vc2 = vc.at[0, :, 11:, :].set(-1e6).at[1, :, 51:, :].set(-1e6)
+    out = A.decode_attention(q, kc2, vc2, pos)
+    np.testing.assert_allclose(out, base, **F32_TOL)
+
+
+def test_decode_pos_zero():
+    """pos = 0: output must equal v[0] exactly (single-key softmax)."""
+    b, h, s, d = 1, 2, 64, 16
+    q = _rand(0, (b, h, d), jnp.float32)
+    kc = _rand(1, (b, h, s, d), jnp.float32)
+    vc = _rand(2, (b, h, s, d), jnp.float32)
+    out = A.decode_attention(q, kc, vc, jnp.zeros((b,), jnp.int32))
+    np.testing.assert_allclose(out, vc[:, :, 0, :], **F32_TOL)
+
+
+def test_decode_block_size_invariance():
+    b, h, s, d = 2, 2, 128, 32
+    q = _rand(0, (b, h, d), jnp.float32)
+    kc = _rand(1, (b, h, s, d), jnp.float32)
+    vc = _rand(2, (b, h, s, d), jnp.float32)
+    pos = jnp.array([17, 100], jnp.int32)
+    base = A.decode_attention(q, kc, vc, pos, block_k=128)
+    for bk in (16, 32, 64):
+        out = A.decode_attention(q, kc, vc, pos, block_k=bk)
+        np.testing.assert_allclose(out, base, **F32_TOL)
+
+
+def test_decode_rejects_bad_shapes():
+    q = _rand(0, (2, 2, 16), jnp.float32)
+    kc = _rand(1, (2, 2, 64, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        A.decode_attention(q, kc, kc, jnp.zeros((3,), jnp.int32))  # pos len
+    with pytest.raises(ValueError):
+        A.decode_attention(q, kc[:, :1], kc, jnp.zeros((2,), jnp.int32))
+
+
+def test_decode_matches_flash_last_row():
+    """Decode at pos = S-1 over a fully-populated cache must equal the last
+    row of causal flash attention with the same q/k/v."""
+    b, h, s, d = 2, 2, 64, 32
+    q = _rand(0, (b, h, s, d), jnp.float32)
+    k = _rand(1, (b, h, s, d), jnp.float32)
+    v = _rand(2, (b, h, s, d), jnp.float32)
+    full = A.flash_attention(q, k, v, causal=True)
+    last = A.decode_attention(q[:, :, -1, :], k, v,
+                              jnp.full((b,), s - 1, jnp.int32))
+    np.testing.assert_allclose(last, full[:, :, -1, :], **F32_TOL)

@@ -1,0 +1,154 @@
+"""L2 correctness: TinyLM prefill/decode semantics.
+
+The crucial invariant is *teacher-forcing consistency*: decoding token-by-
+token from a prefilled cache must reproduce exactly the logits that a longer
+prefill would produce.  This is what guarantees the Rust serving loop
+(prefill bucket → decode steps) computes the same function as the model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(max_seq=128)
+PARAMS = M.init_params(CFG, seed=7)
+TOL = dict(rtol=1e-3, atol=1e-3)
+
+
+def _tokens(seed, b, s):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, CFG.vocab)
+
+
+def test_config_validates():
+    with pytest.raises(AssertionError):
+        M.ModelConfig(d_model=128, n_heads=3, head_dim=32)
+
+
+def test_param_count_matches_shapes():
+    shapes = M.param_shapes(CFG)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert total == CFG.param_count
+
+
+def test_param_order_covers_all_shapes():
+    order = M.param_order(CFG)
+    assert sorted(order) == sorted(M.param_shapes(CFG).keys())
+    assert len(set(order)) == len(order)
+
+
+def test_flatten_roundtrip():
+    flat = M.flatten_params(CFG, PARAMS)
+    back = M.unflatten_params(CFG, flat)
+    for name in M.param_order(CFG):
+        np.testing.assert_array_equal(back[name], PARAMS[name])
+
+
+def test_prefill_shapes():
+    logits, kc, vc = M.prefill(CFG, PARAMS, _tokens(0, 2, 32), "ref")
+    assert logits.shape == (2, 32, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, 2, CFG.max_seq, CFG.n_heads, CFG.head_dim)
+    assert vc.shape == kc.shape
+
+
+def test_prefill_rejects_overlong():
+    with pytest.raises(ValueError):
+        M.prefill(CFG, PARAMS, _tokens(0, 1, CFG.max_seq + 1), "ref")
+
+
+def test_prefill_pallas_matches_ref():
+    toks = _tokens(1, 2, 64)
+    lp, kp, vp = M.prefill(CFG, PARAMS, toks, "pallas")
+    lr, kr, vr = M.prefill(CFG, PARAMS, toks, "ref")
+    np.testing.assert_allclose(lp, lr, **TOL)
+    np.testing.assert_allclose(kp, kr, **TOL)
+    np.testing.assert_allclose(vp, vr, **TOL)
+
+
+def test_decode_pallas_matches_ref():
+    toks = _tokens(2, 2, 32)
+    _, kc, vc = M.prefill(CFG, PARAMS, toks, "ref")
+    nxt = jnp.array([5, 77], jnp.int32)
+    pos = jnp.array([32, 32], jnp.int32)
+    lp, kp, vp = M.decode_step(CFG, PARAMS, kc, vc, nxt, pos, "pallas")
+    lr, kr, vr = M.decode_step(CFG, PARAMS, kc, vc, nxt, pos, "ref")
+    np.testing.assert_allclose(lp, lr, **TOL)
+    np.testing.assert_allclose(kp, kr, **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([8, 16, 31]), steps=st.sampled_from([1, 3]),
+       seed=st.integers(0, 2**16))
+def test_teacher_forcing_consistency(s, steps, seed):
+    """prefill(s) + `steps` decode steps == prefill(s + steps) logits."""
+    b = 2
+    full = _tokens(seed, b, s + steps)
+    logits, kc, vc = M.prefill(CFG, PARAMS, full[:, :s], "ref")
+    got = [logits[:, s - 1]]
+    for t in range(steps):
+        pos = jnp.full((b,), s + t, jnp.int32)
+        lg, kc, vc = M.decode_step(CFG, PARAMS, kc, vc, full[:, s + t], pos,
+                                   "ref")
+        got.append(lg)
+    ref_logits, _, _ = M.prefill(CFG, PARAMS, full, "ref")
+    for t in range(steps):
+        np.testing.assert_allclose(got[t + 1], ref_logits[:, s + t], **TOL)
+
+
+def test_right_padding_invariance():
+    """Garbage right-padding must not perturb logits at real positions —
+    this is what lets the Rust engine pad prompts up to a bucket."""
+    b, real, bucket = 2, 20, 32
+    toks = _tokens(3, b, real)
+    pad_a = jnp.concatenate(
+        [toks, jnp.zeros((b, bucket - real), jnp.int32)], axis=1)
+    pad_b = jnp.concatenate(
+        [toks, jnp.full((b, bucket - real), 199, jnp.int32)], axis=1)
+    la, _, _ = M.prefill(CFG, PARAMS, pad_a, "ref")
+    lb, _, _ = M.prefill(CFG, PARAMS, pad_b, "ref")
+    np.testing.assert_allclose(la[:, :real], lb[:, :real], **TOL)
+
+
+def test_batch_row_independence():
+    """Rows in a batch must not talk to each other (batching invariant the
+    scheduler relies on when packing unrelated requests)."""
+    t1 = _tokens(4, 1, 16)
+    t2 = _tokens(5, 1, 16)
+    both = jnp.concatenate([t1, t2], axis=0)
+    l_both, _, _ = M.prefill(CFG, PARAMS, both, "ref")
+    l1, _, _ = M.prefill(CFG, PARAMS, t1, "ref")
+    np.testing.assert_allclose(l_both[:1], l1, **TOL)
+
+
+def test_decode_per_row_positions():
+    """Different rows may sit at different sequence positions."""
+    b = 2
+    toks = _tokens(6, b, 24)
+    _, kc, vc = M.prefill(CFG, PARAMS, toks, "ref")
+    # row 0 has length 10, row 1 has length 24
+    pos = jnp.array([10, 24], jnp.int32)
+    nxt = jnp.array([1, 2], jnp.int32)
+    lg, _, _ = M.decode_step(CFG, PARAMS, kc, vc, nxt, pos, "ref")
+    # row 0 must match a batch-1 decode from a length-10 prefill
+    _, kc0, vc0 = M.prefill(CFG, PARAMS, toks[:1, :10], "ref")
+    lg0, _, _ = M.decode_step(CFG, PARAMS, kc0, vc0, nxt[:1],
+                              jnp.array([10], jnp.int32), "ref")
+    np.testing.assert_allclose(lg[:1], lg0, **TOL)
+
+
+def test_flat_wrappers_match_dict_api():
+    toks = _tokens(7, 1, 16)
+    flat = M.flatten_params(CFG, PARAMS)
+    l1, k1, v1 = M.prefill_flat(CFG, "ref")(*flat, toks)
+    l2, k2, v2 = M.prefill(CFG, PARAMS, toks, "ref")
+    np.testing.assert_array_equal(l1, l2)
+    nxt = jnp.array([9], jnp.int32)
+    pos = jnp.array([16], jnp.int32)
+    d1 = M.decode_flat(CFG, "ref")(*flat, k1, v1, nxt, pos)
+    d2 = M.decode_step(CFG, PARAMS, k2, v2, nxt, pos, "ref")
+    np.testing.assert_array_equal(d1[0], d2[0])

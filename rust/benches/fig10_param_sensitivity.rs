@@ -1,0 +1,69 @@
+//! Paper Fig. 10: sensitivity of G to perturbed latency-predictor fitting
+//! parameters (α, β, γ, δ for prefill and decode), 10 requests, max batch 4.
+//!
+//! The scheduler runs with one coefficient scaled by ±10% / ±25% / ±50%
+//! while the simulated engine keeps the true coefficients. Paper shape:
+//! degradation grows with deviation; α (the batch×length interaction) is
+//! the most sensitive; worst observed drop ≈ 1.9%.
+
+use slo_serve::bench::{fit_predictor_from_profile, run_scenario, run_scenario_with};
+use slo_serve::config::profiles::by_name;
+use slo_serve::config::{OutputPrediction, RunConfig, SloTargets};
+use slo_serve::coordinator::predictor::{Coeff, LatencyPredictor};
+use slo_serve::metrics::Table;
+
+fn cfg(seed: u64) -> RunConfig {
+    RunConfig {
+        policy: "slo-aware-sa".into(),
+        n_requests: 10,
+        max_batch: 4,
+        seed,
+        output_pred: OutputPrediction::Oracle { rel_err: 0.05 },
+        slos: SloTargets::default().scaled(0.4),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("== Fig. 10: G degradation under fitting-parameter variation ==");
+    println!("10 requests, max batch 4, qwen7b-v100x2-vllm\n");
+    let seeds: Vec<u64> = (0..4).collect();
+    let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    let fitted = fit_predictor_from_profile(&profile, 0);
+
+    let avg_g = |pred: Option<LatencyPredictor>| -> f64 {
+        let mut g = 0.0;
+        for &seed in &seeds {
+            g += run_scenario_with(&cfg(seed), pred)
+                .unwrap()
+                .metrics
+                .g_req_per_s;
+        }
+        g / seeds.len() as f64
+    };
+    let baseline = avg_g(Some(fitted));
+    let _ = run_scenario(&cfg(0)); // warm caches
+
+    let mut t = Table::new(&[
+        "phase", "coeff", "-50%", "-25%", "-10%", "+10%", "+25%", "+50%",
+    ]);
+    for phase in ["prefill", "decode"] {
+        for coeff in Coeff::ALL {
+            let mut row = vec![phase.to_string(), coeff.name().into()];
+            for rel in [-0.5, -0.25, -0.1, 0.1, 0.25, 0.5] {
+                let mut p = fitted;
+                if phase == "prefill" {
+                    p.prefill = p.prefill.perturbed(coeff, rel);
+                } else {
+                    p.decode = p.decode.perturbed(coeff, rel);
+                }
+                let g = avg_g(Some(p));
+                row.push(format!("{:+.1}%", (g / baseline - 1.0) * 100.0));
+            }
+            t.row(row);
+        }
+    }
+    print!("{}", t.render());
+    println!("\npaper shape: degradation correlates with deviation; α most impactful");
+    println!("(it scales the batch×length interaction); worst drop ≈ -1.9%.");
+}

@@ -1,0 +1,59 @@
+//! Paper Fig. 11: multi-instance scalability — (A) ΔG sustained across
+//! 1–4 instances; (B) scheduling overhead growing ~linearly when instances
+//! are mapped sequentially on one server.
+//!
+//! Methodology mirrors §5.5: a 10-request wave is replicated per instance
+//! (n = 10 × instances) and Algorithm 2 assigns + priority-maps each
+//! instance independently.
+
+use slo_serve::bench::run_scenario;
+use slo_serve::config::{OutputPrediction, RunConfig, SloTargets};
+use slo_serve::metrics::Table;
+
+fn cfg(policy: &str, instances: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        policy: policy.into(),
+        n_requests: 10 * instances,
+        n_instances: instances,
+        max_batch: 2,
+        seed,
+        output_pred: OutputPrediction::Oracle { rel_err: 0.05 },
+        slos: SloTargets::default().scaled(0.4),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("== Fig. 11: SLO-aware scheduling across 1–4 instances ==\n");
+    let seeds: Vec<u64> = (0..3).collect();
+    let mut t = Table::new(&[
+        "instances", "requests", "ΔG vs fcfs", "sched overhead (ms)",
+        "overhead/instance (ms)",
+    ]);
+    for instances in 1..=4usize {
+        let mut sa_g = 0.0;
+        let mut fcfs_g = 0.0;
+        let mut overhead = 0.0;
+        for &seed in &seeds {
+            let sa = run_scenario(&cfg("slo-aware-sa", instances, seed)).unwrap();
+            sa_g += sa.metrics.g_req_per_s;
+            overhead += sa.sched_overhead_ms;
+            fcfs_g += run_scenario(&cfg("fcfs", instances, seed))
+                .unwrap()
+                .metrics
+                .g_req_per_s;
+        }
+        overhead /= seeds.len() as f64;
+        t.row(vec![
+            instances.to_string(),
+            (10 * instances).to_string(),
+            format!("{:+.1}%", (sa_g / fcfs_g - 1.0) * 100.0),
+            format!("{overhead:.3}"),
+            format!("{:.3}", overhead / instances as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\npaper shape: ΔG sustained as instances scale; overhead grows ~linearly");
+    println!("with instance count (0.93 ms @2 → 1.91 ms @4 in the paper) because the");
+    println!("per-instance mappings run sequentially on one server.");
+}

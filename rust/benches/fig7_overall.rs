@@ -1,0 +1,92 @@
+//! Paper Fig. 7: overall performance — G, SLO attainment, average latency
+//! for the simulated-annealing SLO-aware scheduler (SA), the exhaustive
+//! counterpart, and the vLLM FCFS baseline, across request numbers 2–10 and
+//! maximum batch sizes 1 / 2 / 4 (Qwen2.5-7B @ 2×V100 profile).
+//!
+//! Exhaustive rows beyond the paper's feasibility cut (n > 10 at bs 1,
+//! n > 6 at bs 2/4) are skipped, mirroring Fig. 7's missing bars.
+
+use slo_serve::bench::{run_scenario, BenchRun};
+use slo_serve::config::RunConfig;
+use slo_serve::metrics::{fmt, Table};
+
+fn cfg(policy: &str, n: usize, bs: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        policy: policy.into(),
+        n_requests: n,
+        max_batch: bs,
+        seed,
+        // strict-enough SLOs that ordering matters at this scale
+        slos: slo_serve::config::SloTargets::default().scaled(0.4),
+        ..Default::default()
+    }
+}
+
+fn avg_runs(policy: &str, n: usize, bs: usize, seeds: &[u64]) -> BenchRun {
+    let mut runs: Vec<BenchRun> = seeds
+        .iter()
+        .map(|&s| run_scenario(&cfg(policy, n, bs, s)).unwrap())
+        .collect();
+    // aggregate by averaging the scalar metrics (keep last run's summaries)
+    let k = runs.len() as f64;
+    let mut out = runs.pop().unwrap();
+    let mut g = out.metrics.g_req_per_s;
+    let mut met = out.metrics.met as f64;
+    let mut tot = out.metrics.total_e2e_ms;
+    for r in &runs {
+        g += r.metrics.g_req_per_s;
+        met += r.metrics.met as f64;
+        tot += r.metrics.total_e2e_ms;
+    }
+    out.metrics.g_req_per_s = g / k;
+    out.metrics.met = (met / k).round() as usize;
+    out.metrics.total_e2e_ms = tot / k;
+    out
+}
+
+fn main() {
+    println!("== Fig. 7: overall performance (SA vs exhaustive vs vLLM-FCFS) ==");
+    println!("profile=qwen7b-v100x2-vllm, mixed ShareGPT-chat + Python-code wave, SLO scale 0.4\n");
+    let seeds: Vec<u64> = (0..3).collect();
+    for &bs in &[1usize, 2, 4] {
+        println!("-- Fig. 7({}) max batch size {bs}",
+                 ["A", "B", "C"][bs.trailing_zeros() as usize]);
+        let mut t = Table::new(&[
+            "req#", "policy", "attainment", "avg_latency_ms", "G(req/s)",
+            "ΔG vs fcfs",
+        ]);
+        for &n in &[2usize, 4, 6, 8, 10] {
+            let fcfs = avg_runs("fcfs", n, bs, &seeds);
+            let base_g = fcfs.metrics.g_req_per_s;
+            let mut rows = vec![("vllm-fcfs", fcfs)];
+            rows.push(("sa", avg_runs("slo-aware-sa", n, bs, &seeds)));
+            let exhaustive_ok = (bs == 1 && n <= 10) || n <= 6;
+            if exhaustive_ok {
+                rows.push((
+                    "exhaustive",
+                    avg_runs("slo-aware-exhaustive", n, bs, &seeds),
+                ));
+            }
+            for (name, run) in rows {
+                let m = &run.metrics;
+                let delta = if base_g > 0.0 {
+                    format!("{:+.1}%", (m.g_req_per_s / base_g - 1.0) * 100.0)
+                } else {
+                    "-".into()
+                };
+                t.row(vec![
+                    n.to_string(),
+                    name.into(),
+                    format!("{}/{} ({:.0}%)", m.met, m.n, m.attainment() * 100.0),
+                    fmt(m.avg_latency_ms()),
+                    format!("{:.4}", m.g_req_per_s),
+                    if name == "vllm-fcfs" { "-".into() } else { delta },
+                ]);
+            }
+        }
+        print!("{}", t.render());
+        println!();
+    }
+    println!("paper shape: SA ≥ FCFS on G in most cells (0.3%–46.5% gains; occasional");
+    println!("small regressions from execution-time noise); exhaustive ≈ SA (≤1% apart).");
+}

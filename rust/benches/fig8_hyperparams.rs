@@ -1,0 +1,60 @@
+//! Paper Fig. 8: ΔG vs simulated-annealing hyperparameters (T₀, iter) for
+//! (A) 10 requests bs 1, (B) 20 requests bs 2, (C) 40 requests bs 4.
+//!
+//! ΔG is the improvement of SA over the FCFS baseline G, averaged over
+//! seeds. Paper shape: raising T₀ helps more than raising iter; both
+//! saturate.
+
+use slo_serve::bench::run_scenario;
+use slo_serve::config::{OutputPrediction, RunConfig, SloTargets};
+use slo_serve::metrics::Table;
+
+fn cfg(policy: &str, n: usize, bs: usize, seed: u64) -> RunConfig {
+    RunConfig {
+        policy: policy.into(),
+        n_requests: n,
+        max_batch: bs,
+        seed,
+        output_pred: OutputPrediction::Oracle { rel_err: 0.05 },
+        slos: SloTargets::default().scaled(0.4),
+        ..Default::default()
+    }
+}
+
+fn delta_g(n: usize, bs: usize, t0: f64, iter: usize, seeds: &[u64]) -> f64 {
+    let mut sa_g = 0.0;
+    let mut fcfs_g = 0.0;
+    for &seed in seeds {
+        let mut c = cfg("slo-aware-sa", n, bs, seed);
+        c.sa.t0 = t0;
+        c.sa.iters_per_temp = iter;
+        sa_g += run_scenario(&c).unwrap().metrics.g_req_per_s;
+        fcfs_g += run_scenario(&cfg("fcfs", n, bs, seed))
+            .unwrap()
+            .metrics
+            .g_req_per_s;
+    }
+    (sa_g / fcfs_g - 1.0) * 100.0
+}
+
+fn main() {
+    println!("== Fig. 8: ΔG (%) vs initial temperature T₀ and iters-per-temp ==\n");
+    let seeds: Vec<u64> = (0..3).collect();
+    let panels = [(10usize, 1usize, "A"), (20, 2, "B"), (40, 4, "C")];
+    for (n, bs, label) in panels {
+        println!("-- Fig. 8({label}): {n} requests, max batch {bs}");
+        let mut t = Table::new(&["T0 \\ iter", "50", "100", "200"]);
+        for &t0 in &[100.0f64, 200.0, 500.0] {
+            let mut row = vec![format!("{t0}")];
+            for &iter in &[50usize, 100, 200] {
+                row.push(format!("{:+.1}%", delta_g(n, bs, t0, iter, &seeds)));
+            }
+            t.row(row);
+        }
+        print!("{}", t.render());
+        println!();
+    }
+    println!("paper shape: ΔG grows with T₀ (more escapes from local optima) more");
+    println!("than with iter; e.g. Fig. 8(A): 45.6%→49.8% raising T₀ 100→200 vs");
+    println!("45.6%→47.2% doubling iter.");
+}

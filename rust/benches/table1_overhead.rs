@@ -1,0 +1,56 @@
+//! Paper Table 1: priority-mapping overhead — simulated annealing vs
+//! exhaustive search at request numbers 4/6/8/10 (max batch size 1).
+//!
+//! Absolute times differ from the paper (Rust vs the authors' 1.7k-line
+//! Python; our testbed); the *shape* — SA flat vs exhaustive exploding
+//! factorially — is the claim under test.
+
+use slo_serve::bench::time_ms;
+use slo_serve::coordinator::objective::{Evaluator, Job};
+use slo_serve::coordinator::predictor::LatencyPredictor;
+use slo_serve::coordinator::priority::annealing::{priority_mapping, SaParams};
+use slo_serve::coordinator::priority::exhaustive::exhaustive_mapping;
+use slo_serve::coordinator::request::Slo;
+use slo_serve::metrics::Table;
+use slo_serve::util::rng::Rng;
+
+fn jobs(n: usize, seed: u64) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Job {
+            req_idx: i,
+            input_len: rng.range(50, 1500) as usize,
+            output_len: rng.range(20, 400) as usize,
+            slo: Slo::E2e { e2e_ms: rng.uniform(3_000.0, 30_000.0) },
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== Table 1: priority-mapping algorithm overhead (seconds) ==\n");
+    let pred = LatencyPredictor::paper_table2();
+    let mut t = Table::new(&[
+        "request number", "SA (s)", "exhaustive (s)", "exhaustive evals",
+    ]);
+    for &n in &[4usize, 6, 8, 10] {
+        let js = jobs(n, n as u64);
+        let ev = Evaluator::new(&js, &pred);
+        let sa_params = SaParams { max_batch: 1, seed: 7, ..Default::default() };
+        let sa_ms = time_ms(1, 5, || {
+            let _ = priority_mapping(&ev, &sa_params);
+        });
+        let mut evals = 0usize;
+        let ex_ms = time_ms(0, 1, || {
+            evals = exhaustive_mapping(&ev, 1).unwrap().evals;
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.5}", sa_ms / 1e3),
+            format!("{:.5}", ex_ms / 1e3),
+            evals.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\npaper shape: SA ~flat (0.00023→0.00048 s), exhaustive exponential");
+    println!("(0.0012 s @4 → 287 s @10 in the paper's Python implementation).");
+}

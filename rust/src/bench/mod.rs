@@ -1,0 +1,349 @@
+//! Shared experiment runner for the benchmark suite (criterion substitute).
+//!
+//! Every paper table/figure bench (rust/benches/*.rs) composes the same
+//! pipeline, faithful to the paper's §5.1 workflow:
+//!
+//! 1. **Profiling rounds** — sample the engine's (noisy) latencies over a
+//!    grid of batch sizes and lengths, then least-squares fit the
+//!    scheduler's predictor (the scheduler never sees the simulator's
+//!    ground-truth coefficients).
+//! 2. **Output-length history** — warm the profiler's per-task Gaussians
+//!    with completed-request lengths.
+//! 3. **Wave generation** — mixed 50/50 chat+code dataset, seeded.
+//! 4. **Schedule + execute** — the selected policy against per-instance
+//!    engines, measured metrics out.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::profiles::{by_name, HardwareProfile};
+use crate::config::RunConfig;
+use crate::coordinator::objective::Evaluator;
+use crate::coordinator::policies::Policy;
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::priority::annealing::{SaParams, SearchStats};
+use crate::coordinator::profiler::RequestProfiler;
+use crate::coordinator::request::{Request, TaskType};
+use crate::coordinator::scheduler::{assign_instances, InstanceInfo, InstancePlan};
+use crate::coordinator::{execute_fcfs_continuous, execute_plans, predict_outputs};
+use crate::engine::sim::SimEngine;
+use crate::engine::Engine;
+use crate::metrics::RunMetrics;
+use crate::util::rng::Rng;
+use crate::workload::dataset::RequestFactory;
+
+/// Result of one scenario run.
+#[derive(Debug, Clone)]
+pub struct BenchRun {
+    pub metrics: RunMetrics,
+    /// Scheduling overhead (priority mapping + assignment), ms.
+    pub sched_overhead_ms: f64,
+    /// Search stats of the priority mapper (when the policy has one).
+    pub search_stats: Option<SearchStats>,
+}
+
+/// Simulate the paper's profiling rounds against a hardware profile and fit
+/// the scheduler's latency predictor (§5.1: batch 1–32, lengths 100–8000).
+pub fn fit_predictor_from_profile(
+    profile: &HardwareProfile,
+    seed: u64,
+) -> LatencyPredictor {
+    let mut profiler = RequestProfiler::new();
+    let mut rng = Rng::new(seed ^ 0xF17);
+    for &b in &[1usize, 2, 4, 8, 16, 32] {
+        for &l in &[100usize, 250, 500, 1000, 2000, 4000, 8000] {
+            for _ in 0..3 {
+                let noise_p = rng.gaussian(1.0, profile.noise_std).max(0.05);
+                let noise_d = rng.gaussian(1.0, profile.noise_std).max(0.05);
+                profiler.observe_prefill(
+                    b,
+                    l,
+                    profile.truth.prefill.eval(b as f64, l as f64) * noise_p,
+                );
+                profiler.observe_decode(
+                    b,
+                    l,
+                    profile.truth.decode.eval(b as f64, l as f64) * noise_d,
+                );
+            }
+        }
+    }
+    profiler
+        .fit_predictor()
+        .map(|(p, _, _)| p)
+        .unwrap_or(profile.truth)
+}
+
+/// Warm a profiler's output-length models with `n` historical completions
+/// per task type (drawn from the same dataset distributions).
+pub fn warm_output_profiler(seed: u64, n: usize) -> RequestProfiler {
+    let mut profiler = RequestProfiler::new();
+    let mut factory = RequestFactory::new(
+        seed ^ 0x0117_0212,
+        crate::config::SloTargets::default(),
+    );
+    for task in [TaskType::Chat, TaskType::Code] {
+        for r in factory.uniform_wave(n, task) {
+            profiler.observe_output(task, r.output_len);
+        }
+    }
+    profiler
+}
+
+/// Parse a policy name (see [`Policy`]).
+pub fn policy_from_name(name: &str, sa: SaParams) -> Result<Policy> {
+    Ok(match name {
+        "fcfs" => Policy::Fcfs,
+        "sjf" => Policy::Sjf,
+        "edf" => Policy::Edf,
+        "mlfq" => Policy::Mlfq,
+        "slo-aware-sa" => Policy::SloAware(sa),
+        "slo-aware-exhaustive" => Policy::Exhaustive,
+        other => return Err(anyhow!("unknown policy '{other}'")),
+    })
+}
+
+/// Build one simulated engine per instance.
+pub fn sim_engines(
+    profile: &HardwareProfile,
+    cfg: &RunConfig,
+) -> Vec<SimEngine> {
+    (0..cfg.n_instances)
+        .map(|i| {
+            SimEngine::new(
+                profile.clone(),
+                cfg.max_batch,
+                cfg.seed ^ (i as u64).wrapping_mul(0xE5317),
+            )
+        })
+        .collect()
+}
+
+/// Generate the request wave for a config (the paper's mixed dataset).
+pub fn make_wave(cfg: &RunConfig) -> Vec<Request> {
+    let mut factory = RequestFactory::new(cfg.seed, cfg.slos);
+    factory.mixed_wave(cfg.n_requests)
+}
+
+/// Plan a wave with a planned-batch policy across instances.
+///
+/// Non-SLO-aware policies still need instance assignment; they share the
+/// round-robin memory-aware assigner (Algorithm 2 line 4) and then order
+/// their own instance-local queues.
+pub fn plan_wave(
+    requests: &[Request],
+    predicted_out: &[usize],
+    policy: &Policy,
+    predictor: &LatencyPredictor,
+    profile: &HardwareProfile,
+    cfg: &RunConfig,
+) -> (Vec<InstancePlan>, f64, Option<SearchStats>) {
+    let t0 = crate::util::now_ms();
+    let instances: Vec<InstanceInfo> = (0..cfg.n_instances)
+        .map(|id| InstanceInfo { id, mem_mb: profile.kv_pool_mb })
+        .collect();
+    let assignment =
+        assign_instances(requests, predicted_out, &instances, &profile.mem);
+    let mut plans = Vec::with_capacity(instances.len());
+    let mut agg_stats: Option<SearchStats> = None;
+    for (inst, req_indices) in assignment.into_iter().enumerate() {
+        let jobs: Vec<crate::coordinator::objective::Job> = req_indices
+            .iter()
+            .map(|&ri| {
+                crate::coordinator::objective::Job::from_request(
+                    ri,
+                    &requests[ri],
+                    predicted_out[ri],
+                )
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, predictor);
+        let policy_inst = match policy {
+            Policy::SloAware(sa) => Policy::SloAware(SaParams {
+                seed: sa.seed ^ (inst as u64).wrapping_mul(0x9E3779B9),
+                ..*sa
+            }),
+            p => *p,
+        };
+        let (schedule, stats) = policy_inst.plan(&ev, cfg.max_batch);
+        if let Some(s) = stats {
+            agg_stats = Some(match agg_stats {
+                None => s,
+                Some(prev) => SearchStats {
+                    evals: prev.evals + s.evals,
+                    accepted: prev.accepted + s.accepted,
+                    improved: prev.improved + s.improved,
+                    early_exit: prev.early_exit && s.early_exit,
+                    overhead_ms: prev.overhead_ms + s.overhead_ms,
+                },
+            });
+        }
+        plans.push(InstancePlan {
+            instance: inst,
+            jobs,
+            schedule,
+            stats: agg_stats.unwrap_or(SearchStats {
+                evals: 0,
+                accepted: 0,
+                improved: 0,
+                early_exit: false,
+                overhead_ms: 0.0,
+            }),
+        });
+    }
+    (plans, crate::util::now_ms() - t0, agg_stats)
+}
+
+/// Run a full scenario on the simulated engine fleet.
+///
+/// `scheduler_predictor`: override the fitted predictor (Fig. 10 study);
+/// None fits one from profiling rounds.
+pub fn run_scenario_with(
+    cfg: &RunConfig,
+    scheduler_predictor: Option<LatencyPredictor>,
+) -> Result<BenchRun> {
+    let profile = by_name(&cfg.profile)
+        .ok_or_else(|| anyhow!("unknown profile '{}'", cfg.profile))?;
+    let wave = make_wave(cfg);
+    let mut engines = sim_engines(&profile, cfg);
+
+    // vLLM-style FCFS baseline = continuous batching, no planning.
+    if cfg.policy == "fcfs" {
+        let mut profiler = RequestProfiler::new();
+        let completions =
+            execute_fcfs_continuous(&wave, &mut engines, &mut profiler)?;
+        return Ok(BenchRun {
+            metrics: RunMetrics::from_completions(&completions),
+            sched_overhead_ms: 0.0,
+            search_stats: None,
+        });
+    }
+
+    let predictor = scheduler_predictor
+        .unwrap_or_else(|| fit_predictor_from_profile(&profile, cfg.seed));
+    let mut profiler = warm_output_profiler(cfg.seed, 200);
+    let mut rng = Rng::new(cfg.seed ^ 0x007_FEED);
+    let max_out = profile.max_total_tokens / 2;
+    let predicted = predict_outputs(
+        &wave,
+        &profiler,
+        cfg.output_pred,
+        &mut rng,
+        max_out,
+    );
+    let policy = policy_from_name(&cfg.policy, SaParams {
+        max_batch: cfg.max_batch,
+        seed: cfg.seed,
+        ..cfg.sa
+    })?;
+    let (plans, overhead_ms, stats) =
+        plan_wave(&wave, &predicted, &policy, &predictor, &profile, cfg);
+    let mut boxed: Vec<Box<dyn Engine + Send>> = engines
+        .into_iter()
+        .map(|e| Box::new(e) as Box<dyn Engine + Send>)
+        .collect();
+    let completions =
+        execute_plans(&wave, &plans, &mut boxed, &mut profiler)?;
+    Ok(BenchRun {
+        metrics: RunMetrics::from_completions(&completions),
+        sched_overhead_ms: overhead_ms,
+        search_stats: stats,
+    })
+}
+
+/// Run a scenario with the default fitted predictor.
+pub fn run_scenario(cfg: &RunConfig) -> Result<BenchRun> {
+    run_scenario_with(cfg, None)
+}
+
+/// Timing helper for algorithm micro-benchmarks (Table 1): run `f` after
+/// `warmup` untimed calls, returning per-iteration ms over `iters` runs.
+pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: &str, n: usize, max_batch: usize) -> RunConfig {
+        RunConfig {
+            policy: policy.into(),
+            n_requests: n,
+            max_batch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fitted_predictor_close_to_truth() {
+        let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        let fitted = fit_predictor_from_profile(&profile, 0);
+        let rel = (fitted.prefill.alpha - profile.truth.prefill.alpha).abs()
+            / profile.truth.prefill.alpha;
+        assert!(rel < 0.05, "alpha rel err {rel}");
+    }
+
+    #[test]
+    fn scenario_runs_for_all_policies() {
+        for policy in ["fcfs", "sjf", "edf", "mlfq", "slo-aware-sa"] {
+            let run = run_scenario(&cfg(policy, 8, 2)).unwrap();
+            assert_eq!(run.metrics.n, 8, "{policy}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_runs_small() {
+        let run = run_scenario(&cfg("slo-aware-exhaustive", 5, 2)).unwrap();
+        assert_eq!(run.metrics.n, 5);
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        assert!(run_scenario(&cfg("random", 4, 2)).is_err());
+    }
+
+    #[test]
+    fn sa_beats_fcfs_attainment_with_oracle_outputs() {
+        // Across seeds, SA with accurate output-length prediction must beat
+        // the FCFS baseline on SLO attainment (the paper's headline; with
+        // the noisier profiler-Gaussian predictor individual seeds may
+        // regress slightly — §5.2 reports the same).
+        let mut sa_met = 0usize;
+        let mut fcfs_met = 0usize;
+        for seed in 0..5 {
+            let mut c = cfg("slo-aware-sa", 10, 2);
+            c.seed = seed;
+            c.output_pred =
+                crate::config::OutputPrediction::Oracle { rel_err: 0.0 };
+            // strict SLOs so ordering matters
+            c.slos = crate::config::SloTargets::default().scaled(0.4);
+            let sa = run_scenario(&c).unwrap();
+            let mut f = c.clone();
+            f.policy = "fcfs".into();
+            let fcfs = run_scenario(&f).unwrap();
+            sa_met += sa.metrics.met;
+            fcfs_met += fcfs.metrics.met;
+        }
+        assert!(
+            sa_met > fcfs_met,
+            "SA Σmet {sa_met} <= FCFS Σmet {fcfs_met}"
+        );
+    }
+
+    #[test]
+    fn time_ms_positive() {
+        let mut x = 0u64;
+        let ms = time_ms(1, 5, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(ms >= 0.0);
+        assert_eq!(x, 6);
+    }
+}

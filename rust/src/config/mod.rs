@@ -1,0 +1,290 @@
+//! Configuration system: hardware profiles, run configuration, JSON loading.
+//!
+//! Every experiment (benches, examples, the CLI) is described by a
+//! [`RunConfig`]; hardware/framework combinations from the paper's testbeds
+//! are described by [`profiles::HardwareProfile`]s.
+
+pub mod profiles;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::priority::annealing::SaParams;
+use crate::coordinator::request::Slo;
+use crate::util::json::Json;
+
+/// How the scheduler obtains output-length predictions (Fig. 9 knob).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OutputPrediction {
+    /// Running per-task Gaussian from the profiler (the shipped default).
+    Profiler,
+    /// Oracle with a relative error band: truth × U(1−err, 1+err).
+    Oracle { rel_err: f64 },
+}
+
+impl OutputPrediction {
+    pub fn name(&self) -> String {
+        match self {
+            OutputPrediction::Profiler => "profiler".into(),
+            OutputPrediction::Oracle { rel_err } => {
+                format!("oracle±{:.1}%", rel_err * 100.0)
+            }
+        }
+    }
+}
+
+/// SLO targets for the two task classes (paper §5.1 defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    /// Code-generation e2e bound (ms). Paper: 10× mean solo latency = 30 s.
+    pub code_e2e_ms: f64,
+    /// Chat TTFT bound (ms). Paper: 10 s.
+    pub chat_ttft_ms: f64,
+    /// Chat TPOT bound (ms). Paper: 50 ms.
+    pub chat_tpot_ms: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        SloTargets {
+            code_e2e_ms: 30_000.0,
+            chat_ttft_ms: 10_000.0,
+            chat_tpot_ms: 50.0,
+        }
+    }
+}
+
+impl SloTargets {
+    pub fn code_slo(&self) -> Slo {
+        Slo::E2e { e2e_ms: self.code_e2e_ms }
+    }
+
+    pub fn chat_slo(&self) -> Slo {
+        Slo::Interactive {
+            ttft_ms: self.chat_ttft_ms,
+            tpot_ms: self.chat_tpot_ms,
+        }
+    }
+
+    /// Uniformly scale all bounds (strictness sweeps).
+    pub fn scaled(&self, factor: f64) -> SloTargets {
+        SloTargets {
+            code_e2e_ms: self.code_e2e_ms * factor,
+            chat_ttft_ms: self.chat_ttft_ms * factor,
+            chat_tpot_ms: self.chat_tpot_ms * factor,
+        }
+    }
+}
+
+/// Complete description of one experiment run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    pub max_batch: usize,
+    pub n_instances: usize,
+    /// Hardware/framework profile name (see [`profiles::by_name`]).
+    pub profile: String,
+    /// Policy name: fcfs | sjf | edf | mlfq | slo-aware-sa |
+    /// slo-aware-exhaustive.
+    pub policy: String,
+    pub sa: SaParams,
+    pub output_pred: OutputPrediction,
+    pub slos: SloTargets,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 42,
+            n_requests: 10,
+            max_batch: 4,
+            n_instances: 1,
+            profile: "qwen7b-v100x2-vllm".into(),
+            policy: "slo-aware-sa".into(),
+            sa: SaParams::default(),
+            output_pred: OutputPrediction::Profiler,
+            slos: SloTargets::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON document; missing fields keep defaults.
+    pub fn from_json(v: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(s) = v.get("seed").as_i64() {
+            cfg.seed = s as u64;
+        }
+        if let Some(n) = v.get("n_requests").as_usize() {
+            cfg.n_requests = n;
+        }
+        if let Some(b) = v.get("max_batch").as_usize() {
+            if b == 0 {
+                return Err(anyhow!("max_batch must be >= 1"));
+            }
+            cfg.max_batch = b;
+        }
+        if let Some(i) = v.get("n_instances").as_usize() {
+            if i == 0 {
+                return Err(anyhow!("n_instances must be >= 1"));
+            }
+            cfg.n_instances = i;
+        }
+        if let Some(p) = v.get("profile").as_str() {
+            cfg.profile = p.to_string();
+        }
+        if let Some(p) = v.get("policy").as_str() {
+            cfg.policy = p.to_string();
+        }
+        let sa = v.get("sa");
+        if !sa.is_null() {
+            if let Some(t0) = sa.get("t0").as_f64() {
+                cfg.sa.t0 = t0;
+            }
+            if let Some(t) = sa.get("t_thres").as_f64() {
+                cfg.sa.t_thres = t;
+            }
+            if let Some(i) = sa.get("iters_per_temp").as_usize() {
+                cfg.sa.iters_per_temp = i;
+            }
+            if let Some(d) = sa.get("decay").as_f64() {
+                if !(0.0 < d && d < 1.0) {
+                    return Err(anyhow!("sa.decay must be in (0,1)"));
+                }
+                cfg.sa.decay = d;
+            }
+        }
+        let op = v.get("output_pred");
+        if let Some(kind) = op.get("kind").as_str() {
+            cfg.output_pred = match kind {
+                "profiler" => OutputPrediction::Profiler,
+                "oracle" => OutputPrediction::Oracle {
+                    rel_err: op.get("rel_err").as_f64().unwrap_or(0.0),
+                },
+                other => return Err(anyhow!("unknown output_pred {other}")),
+            };
+        }
+        let slos = v.get("slos");
+        if !slos.is_null() {
+            if let Some(x) = slos.get("code_e2e_ms").as_f64() {
+                cfg.slos.code_e2e_ms = x;
+            }
+            if let Some(x) = slos.get("chat_ttft_ms").as_f64() {
+                cfg.slos.chat_ttft_ms = x;
+            }
+            if let Some(x) = slos.get("chat_tpot_ms").as_f64() {
+                cfg.slos.chat_tpot_ms = x;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        RunConfig::from_json(&v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("n_requests", Json::num(self.n_requests as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("n_instances", Json::num(self.n_instances as f64)),
+            ("profile", Json::str(self.profile.clone())),
+            ("policy", Json::str(self.policy.clone())),
+            (
+                "sa",
+                Json::obj(vec![
+                    ("t0", Json::num(self.sa.t0)),
+                    ("t_thres", Json::num(self.sa.t_thres)),
+                    (
+                        "iters_per_temp",
+                        Json::num(self.sa.iters_per_temp as f64),
+                    ),
+                    ("decay", Json::num(self.sa.decay)),
+                ]),
+            ),
+            (
+                "slos",
+                Json::obj(vec![
+                    ("code_e2e_ms", Json::num(self.slos.code_e2e_ms)),
+                    ("chat_ttft_ms", Json::num(self.slos.chat_ttft_ms)),
+                    ("chat_tpot_ms", Json::num(self.slos.chat_tpot_ms)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.slos.code_e2e_ms, 30_000.0);
+        assert_eq!(c.slos.chat_ttft_ms, 10_000.0);
+        assert_eq!(c.slos.chat_tpot_ms, 50.0);
+        assert_eq!(c.sa.t0, 500.0);
+        assert_eq!(c.sa.t_thres, 20.0);
+        assert_eq!(c.sa.iters_per_temp, 100);
+        assert_eq!(c.sa.decay, 0.95);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default();
+        c.seed = 7;
+        c.n_requests = 40;
+        c.max_batch = 2;
+        c.policy = "fcfs".into();
+        c.sa.t0 = 200.0;
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.n_requests, 40);
+        assert_eq!(back.max_batch, 2);
+        assert_eq!(back.policy, "fcfs");
+        assert_eq!(back.sa.t0, 200.0);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let v = Json::parse(r#"{"n_requests": 6}"#).unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.n_requests, 6);
+        assert_eq!(c.max_batch, RunConfig::default().max_batch);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            r#"{"max_batch": 0}"#,
+            r#"{"n_instances": 0}"#,
+            r#"{"sa": {"decay": 1.5}}"#,
+            r#"{"output_pred": {"kind": "magic"}}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(RunConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn oracle_output_pred_parses() {
+        let v = Json::parse(
+            r#"{"output_pred": {"kind": "oracle", "rel_err": 0.05}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.output_pred, OutputPrediction::Oracle { rel_err: 0.05 });
+        assert_eq!(c.output_pred.name(), "oracle±5.0%");
+    }
+
+    #[test]
+    fn slo_scaling() {
+        let s = SloTargets::default().scaled(0.5);
+        assert_eq!(s.code_e2e_ms, 15_000.0);
+        assert_eq!(s.chat_tpot_ms, 25.0);
+    }
+}

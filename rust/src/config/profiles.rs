@@ -1,0 +1,218 @@
+//! Hardware/framework profiles for the simulated engine.
+//!
+//! The paper evaluates Qwen2.5-7B/32B on 2×V100, 4×V100, and 1×A800 under
+//! vLLM and LMDeploy (Figs. 7, 12–18). Those testbeds are unavailable here
+//! (DESIGN.md §2); each is modelled as a coefficient set for the paper's own
+//! latency structure (Eqs. 14–15), anchored at the paper's measured Table 2
+//! values for Qwen2.5-7B @ 2×V100 (vLLM) and scaled for the others:
+//!
+//! * Qwen2.5-32B ≈ 4.5× the compute of 7B (params ratio, same architecture
+//!   family) but runs on 4×V100 (2× the devices) ⇒ ~2.3× the latency.
+//! * A800 ≈ 2.5× the effective throughput of 2×V100 for FP16 inference.
+//! * LMDeploy's quantized kernels ⇒ ~0.85× of vLLM's latency on identical
+//!   hardware (its headline claim), with a slightly better decode constant.
+//!
+//! The *shape* of the scheduling results depends only on this latency
+//! structure + memory capacity, which is what the profiles preserve.
+
+use crate::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+use crate::coordinator::profiler::MemoryModel;
+
+/// A simulated serving testbed: model × hardware × framework.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// Ground-truth latency model for the simulated engine (the scheduler
+    /// must *fit* its own predictor from profiling, per §4.2).
+    pub truth: LatencyPredictor,
+    /// KV-cache pool (MB).
+    pub kv_pool_mb: f64,
+    pub mem: MemoryModel,
+    /// Relative execution-time noise (std of a ~N(1, σ) multiplier).
+    pub noise_std: f64,
+    /// Longest request (input + output tokens) the testbed accepts.
+    pub max_total_tokens: usize,
+}
+
+fn scale(p: &LatencyPredictor, factor: f64) -> LatencyPredictor {
+    LatencyPredictor {
+        prefill: p.prefill.scaled(factor),
+        decode: p.decode.scaled(factor),
+    }
+}
+
+/// Paper Table 2 anchor: Qwen2.5-7B @ 2×V100, vLLM (ms).
+fn table2() -> LatencyPredictor {
+    LatencyPredictor::paper_table2()
+}
+
+/// All built-in profiles (paper Figs. 7, 12–18 testbeds).
+pub fn builtin_profiles() -> Vec<HardwareProfile> {
+    let mem7b = MemoryModel { utility: 0.9, mb_per_token: 0.5 };
+    let mem32b = MemoryModel { utility: 0.9, mb_per_token: 1.6 };
+    let t2 = table2();
+    vec![
+        // ---- Fig. 7 / Fig. 12 testbed: Qwen2.5-7B @ 2×V100
+        HardwareProfile {
+            name: "qwen7b-v100x2-vllm".into(),
+            truth: t2,
+            // 2×32 GB minus ~15 GB weights, 90% usable
+            kv_pool_mb: 20_000.0,
+            mem: mem7b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        HardwareProfile {
+            name: "qwen7b-v100x2-lmdeploy".into(),
+            truth: LatencyPredictor {
+                prefill: t2.prefill.scaled(0.85),
+                decode: PhaseCoeffs { delta: t2.decode.delta * 0.80, ..t2.decode.scaled(0.85) },
+            },
+            kv_pool_mb: 22_000.0, // quantized weights free memory
+            mem: mem7b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        // ---- Fig. 13/14 testbed: Qwen2.5-32B @ 4×V100
+        HardwareProfile {
+            name: "qwen32b-v100x4-vllm".into(),
+            truth: scale(&t2, 2.3),
+            kv_pool_mb: 24_000.0,
+            mem: mem32b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        HardwareProfile {
+            name: "qwen32b-v100x4-lmdeploy".into(),
+            truth: scale(&t2, 2.3 * 0.85),
+            kv_pool_mb: 27_000.0,
+            mem: mem32b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        // ---- Fig. 15/16 testbed: Qwen2.5-7B @ 1×A800
+        HardwareProfile {
+            name: "qwen7b-a800-vllm".into(),
+            truth: scale(&t2, 0.4),
+            kv_pool_mb: 50_000.0,
+            mem: mem7b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        HardwareProfile {
+            name: "qwen7b-a800-lmdeploy".into(),
+            truth: scale(&t2, 0.4 * 0.85),
+            kv_pool_mb: 52_000.0,
+            mem: mem7b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        // ---- Fig. 17/18 testbed: Qwen2.5-32B @ 1×A800 (the "strict" corner
+        // that shows the paper's 5× attainment headline: slow model, one
+        // fast-but-saturated device)
+        HardwareProfile {
+            name: "qwen32b-a800-vllm".into(),
+            truth: scale(&t2, 1.8),
+            kv_pool_mb: 30_000.0,
+            mem: mem32b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        HardwareProfile {
+            name: "qwen32b-a800-lmdeploy".into(),
+            truth: scale(&t2, 1.8 * 0.85),
+            kv_pool_mb: 33_000.0,
+            mem: mem32b,
+            noise_std: 0.03,
+            max_total_tokens: 2048,
+        },
+        // ---- the real TinyLM CPU testbed (calibrated at startup by
+        // profiling the actual PJRT engine; placeholder coefficients here)
+        HardwareProfile {
+            name: "tinylm-cpu".into(),
+            truth: LatencyPredictor {
+                prefill: PhaseCoeffs {
+                    alpha: 0.002,
+                    beta: 2.0,
+                    gamma: 0.05,
+                    delta: 5.0,
+                },
+                decode: PhaseCoeffs {
+                    alpha: 0.0002,
+                    beta: 1.0,
+                    gamma: 0.002,
+                    delta: 8.0,
+                },
+            },
+            kv_pool_mb: 2_000.0,
+            mem: MemoryModel { utility: 0.9, mb_per_token: 0.03 },
+            noise_std: 0.05,
+            max_total_tokens: 380,
+        },
+    ]
+}
+
+/// Look up a profile by name.
+pub fn by_name(name: &str) -> Option<HardwareProfile> {
+    builtin_profiles().into_iter().find(|p| p.name == name)
+}
+
+/// Names of all built-in profiles.
+pub fn profile_names() -> Vec<String> {
+    builtin_profiles().into_iter().map(|p| p.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchor_profile_matches_table2() {
+        let p = by_name("qwen7b-v100x2-vllm").unwrap();
+        assert_eq!(p.truth, LatencyPredictor::paper_table2());
+    }
+
+    #[test]
+    fn all_profiles_resolvable_and_sane() {
+        for p in builtin_profiles() {
+            assert!(by_name(&p.name).is_some());
+            assert!(p.kv_pool_mb > 0.0);
+            assert!(p.noise_std >= 0.0);
+            assert!(p.max_total_tokens > 0);
+            // latency must be positive over the supported range
+            let solo = p.truth.predict(1, 100, 50);
+            assert!(solo.exec_ms > 0.0, "{}", p.name);
+            assert!(p.truth.prefill_ms(1, 1) > 0.0, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn lmdeploy_faster_than_vllm() {
+        for (v, l) in [
+            ("qwen7b-v100x2-vllm", "qwen7b-v100x2-lmdeploy"),
+            ("qwen32b-a800-vllm", "qwen32b-a800-lmdeploy"),
+        ] {
+            let v = by_name(v).unwrap();
+            let l = by_name(l).unwrap();
+            assert!(
+                l.truth.predict(4, 500, 100).exec_ms
+                    < v.truth.predict(4, 500, 100).exec_ms
+            );
+        }
+    }
+
+    #[test]
+    fn bigger_model_slower() {
+        let small = by_name("qwen7b-v100x2-vllm").unwrap();
+        let big = by_name("qwen32b-v100x4-vllm").unwrap();
+        assert!(
+            big.truth.predict(1, 500, 100).exec_ms
+                > small.truth.predict(1, 500, 100).exec_ms
+        );
+    }
+
+    #[test]
+    fn unknown_profile_is_none() {
+        assert!(by_name("h100-cluster").is_none());
+    }
+}

@@ -1,0 +1,306 @@
+//! L3 coordinator: the paper's SLO-aware serving system.
+//!
+//! Submodules implement the architecture of Fig. 6:
+//!
+//! ```text
+//!  requests ─> [profiler] ─> [predictor] ─> [priority mapper] ─> queues
+//!                  │              │         (SA / exhaustive /      │
+//!                  │              │          baselines)             ▼
+//!                  └── output-len & memory models        [instances: engines]
+//! ```
+//!
+//! * [`request`]   — task types, SLOs, lifecycle records.
+//! * [`profiler`]  — output-length + memory + latency-sample profiling.
+//! * [`predictor`] — Eq. 14–19 latency model (least-squares fitted).
+//! * [`objective`] — the G objective and schedule representation.
+//! * [`priority`]  — Algorithm 1 (SA) and the exhaustive strawman.
+//! * [`policies`]  — FCFS/SJF/EDF/MLFQ baselines + policy dispatch.
+//! * [`scheduler`] — Algorithm 2 multi-instance assignment.
+//! * this module   — plan execution against engines and completion records.
+
+pub mod objective;
+pub mod policies;
+pub mod predictor;
+pub mod priority;
+pub mod profiler;
+pub mod request;
+pub mod scheduler;
+
+use anyhow::Result;
+
+use crate::config::OutputPrediction;
+use crate::coordinator::profiler::RequestProfiler;
+use crate::coordinator::request::{Completion, Request};
+use crate::coordinator::scheduler::InstancePlan;
+use crate::engine::{Engine, EngineRequest};
+use crate::util::rng::Rng;
+
+/// Produce output-length predictions for a request wave (the Fig. 9 knob).
+///
+/// * `Profiler` — sample the per-task Gaussian the profiler fitted from
+///   completed requests.
+/// * `Oracle { rel_err }` — ground truth perturbed by ±rel_err uniform
+///   noise (the paper's 2.5% / 5% / 10% accuracy study).
+pub fn predict_outputs(
+    requests: &[Request],
+    profiler: &RequestProfiler,
+    mode: OutputPrediction,
+    rng: &mut Rng,
+    max_len: usize,
+) -> Vec<usize> {
+    requests
+        .iter()
+        .map(|r| match mode {
+            OutputPrediction::Profiler => {
+                profiler.predict_output(r.task, rng, max_len)
+            }
+            OutputPrediction::Oracle { rel_err } => {
+                let noisy = r.output_len as f64
+                    * rng.uniform(1.0 - rel_err, 1.0 + rel_err);
+                (noisy.round().max(1.0) as usize).min(max_len.max(1))
+            }
+        })
+        .collect()
+}
+
+/// Convert an engine [`crate::engine::ItemResult`] into a [`Completion`]
+/// using the request's arrival time for waiting/e2e accounting.
+fn to_completion(
+    req: &Request,
+    item: &crate::engine::ItemResult,
+) -> Completion {
+    Completion {
+        id: req.id,
+        task: req.task,
+        slo: req.slo,
+        input_len: req.input_len,
+        generated: item.generated,
+        e2e_ms: item.finish_ms - req.arrival_ms,
+        ttft_ms: item.first_token_ms - req.arrival_ms,
+        tpot_ms: item.tpot_ms(),
+        wait_ms: item.start_ms - req.arrival_ms,
+        batch_size: item.batch_size,
+        text: item.text.clone(),
+    }
+}
+
+/// Execute per-instance plans on their engines (planned/static-batch mode,
+/// the SLO-aware execution path). `engines[plan.instance]` runs each plan.
+///
+/// Feeds the profiler with actual output lengths so later waves predict
+/// better (the paper's dynamic output-length modelling).
+pub fn execute_plans(
+    requests: &[Request],
+    plans: &[InstancePlan],
+    engines: &mut [Box<dyn Engine + Send>],
+    profiler: &mut RequestProfiler,
+) -> Result<Vec<Completion>> {
+    assert!(plans.len() <= engines.len());
+    let mut completions = Vec::with_capacity(requests.len());
+    for plan in plans {
+        let engine = &mut engines[plan.instance];
+        for (_, start, size) in plan.schedule.batch_spans() {
+            let members: Vec<usize> = plan.schedule.order
+                [start..start + size]
+                .iter()
+                .map(|&j| plan.jobs[j].req_idx)
+                .collect();
+            let batch: Vec<EngineRequest> = members
+                .iter()
+                .map(|&ri| {
+                    let r = &requests[ri];
+                    EngineRequest {
+                        id: r.id,
+                        input_len: r.input_len,
+                        max_new_tokens: r.output_len,
+                        prompt: r.prompt.clone(),
+                    }
+                })
+                .collect();
+            let items = engine.run_batch(&batch)?;
+            for (&ri, item) in members.iter().zip(&items) {
+                let req = &requests[ri];
+                profiler.observe_output(req.task, item.generated);
+                completions.push(to_completion(req, item));
+            }
+        }
+    }
+    completions.sort_by_key(|c| c.id);
+    Ok(completions)
+}
+
+/// Execute the FCFS continuous-batching baseline on simulated engines
+/// (arrival-ordered, no SLO awareness). Requests are split across engines
+/// round-robin by index — the load balancing a vLLM fleet front-end applies.
+pub fn execute_fcfs_continuous(
+    requests: &[Request],
+    engines: &mut [crate::engine::sim::SimEngine],
+    profiler: &mut RequestProfiler,
+) -> Result<Vec<Completion>> {
+    let n_inst = engines.len().max(1);
+    let mut per_engine: Vec<Vec<(f64, EngineRequest)>> =
+        vec![Vec::new(); n_inst];
+    for (i, r) in requests.iter().enumerate() {
+        per_engine[i % n_inst].push((
+            r.arrival_ms,
+            EngineRequest {
+                id: r.id,
+                input_len: r.input_len,
+                max_new_tokens: r.output_len,
+                prompt: None,
+            },
+        ));
+    }
+    let mut completions = Vec::with_capacity(requests.len());
+    let by_id: std::collections::HashMap<u64, &Request> =
+        requests.iter().map(|r| (r.id, r)).collect();
+    for (engine, arrivals) in engines.iter_mut().zip(&mut per_engine) {
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let items = engine.run_continuous(arrivals)?;
+        for item in items {
+            let req = by_id[&item.id];
+            profiler.observe_output(req.task, item.generated);
+            completions.push(to_completion(req, &item));
+        }
+    }
+    completions.sort_by_key(|c| c.id);
+    Ok(completions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profiles::by_name;
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::priority::annealing::SaParams;
+    use crate::coordinator::profiler::MemoryModel;
+    use crate::coordinator::request::{Slo, TaskType};
+    use crate::coordinator::scheduler::{schedule, InstanceInfo};
+    use crate::engine::sim::SimEngine;
+
+    fn wave(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                Request::synthetic(
+                    i as u64,
+                    if i % 2 == 0 { TaskType::Code } else { TaskType::Chat },
+                    200 + 13 * i,
+                    20 + 7 * i,
+                    if i % 2 == 0 {
+                        Slo::E2e { e2e_ms: 30_000.0 }
+                    } else {
+                        Slo::Interactive { ttft_ms: 10_000.0, tpot_ms: 50.0 }
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn predict_outputs_oracle_accuracy() {
+        let reqs = wave(50);
+        let profiler = RequestProfiler::new();
+        let mut rng = Rng::new(0);
+        let preds = predict_outputs(
+            &reqs,
+            &profiler,
+            OutputPrediction::Oracle { rel_err: 0.05 },
+            &mut rng,
+            10_000,
+        );
+        for (p, r) in preds.iter().zip(&reqs) {
+            let rel = (*p as f64 - r.output_len as f64).abs()
+                / r.output_len as f64;
+            assert!(rel <= 0.06, "pred {p} truth {} rel {rel}", r.output_len);
+        }
+        // exact oracle
+        let exact = predict_outputs(
+            &reqs,
+            &profiler,
+            OutputPrediction::Oracle { rel_err: 0.0 },
+            &mut rng,
+            10_000,
+        );
+        assert_eq!(
+            exact,
+            reqs.iter().map(|r| r.output_len).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn end_to_end_planned_execution() {
+        let reqs = wave(8);
+        let mut profiler = RequestProfiler::new();
+        let mut rng = Rng::new(1);
+        let preds = predict_outputs(
+            &reqs,
+            &profiler,
+            OutputPrediction::Oracle { rel_err: 0.0 },
+            &mut rng,
+            2000,
+        );
+        let predictor = LatencyPredictor::paper_table2();
+        let outcome = schedule(
+            &reqs,
+            &preds,
+            &[InstanceInfo { id: 0, mem_mb: 16_000.0 }],
+            &predictor,
+            &MemoryModel::default(),
+            &SaParams::with_max_batch(4),
+        );
+        let mut engines: Vec<Box<dyn Engine + Send>> = vec![Box::new(
+            SimEngine::new(by_name("qwen7b-v100x2-vllm").unwrap(), 4, 0),
+        )];
+        let completions = execute_plans(
+            &reqs,
+            &outcome.plans,
+            &mut engines,
+            &mut profiler,
+        )
+        .unwrap();
+        assert_eq!(completions.len(), 8);
+        for c in &completions {
+            assert!(c.e2e_ms > 0.0);
+            assert!(c.ttft_ms <= c.e2e_ms + 1e-9);
+            assert!(c.wait_ms >= 0.0);
+            assert!(c.generated > 0);
+        }
+        // profiler learned output lengths
+        assert!(profiler.output_model(TaskType::Code).unwrap().count() >= 4);
+    }
+
+    #[test]
+    fn fcfs_continuous_baseline_runs() {
+        let reqs = wave(10);
+        let mut profiler = RequestProfiler::new();
+        let mut engines = vec![SimEngine::new(
+            by_name("qwen7b-v100x2-vllm").unwrap(),
+            4,
+            0,
+        )];
+        let completions =
+            execute_fcfs_continuous(&reqs, &mut engines, &mut profiler)
+                .unwrap();
+        assert_eq!(completions.len(), 10);
+        assert!(completions.windows(2).all(|w| w[0].id < w[1].id));
+    }
+
+    #[test]
+    fn multi_instance_split() {
+        let reqs = wave(12);
+        let mut profiler = RequestProfiler::new();
+        let mut engines: Vec<SimEngine> = (0..3)
+            .map(|i| {
+                SimEngine::new(
+                    by_name("qwen7b-v100x2-vllm").unwrap(),
+                    4,
+                    i as u64,
+                )
+            })
+            .collect();
+        let completions =
+            execute_fcfs_continuous(&reqs, &mut engines, &mut profiler)
+                .unwrap();
+        assert_eq!(completions.len(), 12);
+    }
+}

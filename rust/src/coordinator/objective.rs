@@ -1,0 +1,398 @@
+//! Objective function `G` and schedule representation (paper §3.1, Eqs. 1–13).
+//!
+//! A *schedule* is a permutation of the jobs plus a partition into
+//! consecutive batches (`b_0..b_{M-1}`, Eq. 10). Batches execute
+//! sequentially; a job's waiting time is the sum of the max execution times
+//! of all earlier batches (Eq. 11). `G = n / Σ t_e2e` (Eqs. 2–3) — the ratio
+//! of SLO attainment to accumulated latency.
+//!
+//! [`Evaluator`] computes G for a candidate schedule in O(N) with **zero
+//! heap allocation per call** — it is the inner loop of the simulated-
+//! annealing search (≈10⁴ calls per scheduling decision; DESIGN.md §10).
+
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::request::{Request, Slo};
+
+/// Scheduler's view of one job: lengths are *predictions* (the true output
+/// length is hidden from the scheduler — §4.2).
+#[derive(Debug, Clone, Copy)]
+pub struct Job {
+    /// Index into the coordinator's request slice.
+    pub req_idx: usize,
+    pub input_len: usize,
+    /// Predicted output length (from the profiler's per-task model or an
+    /// oracle variant in the Fig. 9 study).
+    pub output_len: usize,
+    pub slo: Slo,
+}
+
+impl Job {
+    pub fn from_request(req_idx: usize, r: &Request, predicted_out: usize) -> Job {
+        Job { req_idx, input_len: r.input_len, output_len: predicted_out, slo: r.slo }
+    }
+}
+
+/// A candidate scheduling solution: execution order + batch partition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    /// Job indices (into the `Job` slice) in execution order.
+    pub order: Vec<usize>,
+    /// Batch sizes; contiguous segments of `order`. `Σ batches == order.len()`.
+    pub batches: Vec<usize>,
+}
+
+impl Schedule {
+    /// Arrival order, greedily packed to `max_batch` (the FCFS seed —
+    /// Algorithm 1's first starting solution).
+    pub fn fcfs(n: usize, max_batch: usize) -> Schedule {
+        Schedule::from_order((0..n).collect(), max_batch)
+    }
+
+    /// Pack a given order into full batches of `max_batch`.
+    pub fn from_order(order: Vec<usize>, max_batch: usize) -> Schedule {
+        assert!(max_batch > 0);
+        let n = order.len();
+        let mut batches = vec![max_batch; n / max_batch];
+        if n % max_batch != 0 {
+            batches.push(n % max_batch);
+        }
+        Schedule { order, batches }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Structural invariants (used by tests and the property harness):
+    /// order is a permutation of 0..n; batches are positive, ≤ max_batch,
+    /// and partition the order.
+    pub fn validate(&self, max_batch: usize) -> Result<(), String> {
+        let n = self.order.len();
+        let mut seen = vec![false; n];
+        for &j in &self.order {
+            if j >= n {
+                return Err(format!("order contains out-of-range index {j}"));
+            }
+            if seen[j] {
+                return Err(format!("order repeats index {j}"));
+            }
+            seen[j] = true;
+        }
+        if self.batches.iter().any(|&b| b == 0) {
+            return Err("empty batch".into());
+        }
+        if let Some(&b) = self.batches.iter().find(|&&b| b > max_batch) {
+            return Err(format!("batch size {b} exceeds max {max_batch}"));
+        }
+        let total: usize = self.batches.iter().sum();
+        if total != n {
+            return Err(format!("batches sum {total} != n {n}"));
+        }
+        Ok(())
+    }
+
+    /// Iterate `(batch_index, start_offset, size)`.
+    pub fn batch_spans(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        let mut start = 0usize;
+        self.batches.iter().enumerate().map(move |(k, &size)| {
+            let span = (k, start, size);
+            start += size;
+            span
+        })
+    }
+
+    /// Position → batch index map (Eq. 10's `a_i`), written into `out`.
+    pub fn batch_of_position(&self, out: &mut Vec<usize>) {
+        out.clear();
+        for (k, _, size) in self.batch_spans() {
+            out.extend(std::iter::repeat(k).take(size));
+        }
+    }
+}
+
+/// Aggregate evaluation of a schedule under predicted latencies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Eval {
+    /// Objective `G = n / Σ t_e2e` (requests per millisecond here; benches
+    /// convert to req/s for display).
+    pub g: f64,
+    /// `n` — requests meeting their SLO (Eq. 6).
+    pub met: usize,
+    /// `Σ t_e2e` over all requests (ms).
+    pub total_e2e_ms: f64,
+    /// Makespan: completion time of the last batch (ms).
+    pub makespan_ms: f64,
+}
+
+impl Eval {
+    /// Average latency (the paper reports G alongside attainment & mean).
+    pub fn avg_latency_ms(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.total_e2e_ms / n as f64
+        }
+    }
+}
+
+/// Per-job predicted timeline (diagnostics / tests).
+#[derive(Debug, Clone, Copy)]
+pub struct JobTimeline {
+    pub job: usize,
+    pub batch: usize,
+    pub wait_ms: f64,
+    pub exec_ms: f64,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub met: bool,
+}
+
+/// Reusable evaluator: borrows the job set and predictor, owns scratch.
+pub struct Evaluator<'a> {
+    jobs: &'a [Job],
+    predictor: &'a LatencyPredictor,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(jobs: &'a [Job], predictor: &'a LatencyPredictor) -> Self {
+        Evaluator { jobs, predictor }
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        self.jobs
+    }
+
+    /// Evaluate G for a schedule (Eqs. 2–13). O(N), allocation-free.
+    pub fn eval(&self, schedule: &Schedule) -> Eval {
+        debug_assert_eq!(schedule.len(), self.jobs.len());
+        let mut wait_ms = 0.0f64;
+        let mut total_e2e = 0.0f64;
+        let mut met = 0usize;
+        let mut start = 0usize;
+        for &bsize in &schedule.batches {
+            let mut batch_max = 0.0f64;
+            for &j in &schedule.order[start..start + bsize] {
+                let job = &self.jobs[j];
+                let p = self.predictor.predict(bsize, job.input_len, job.output_len);
+                let e2e = wait_ms + p.exec_ms;
+                let ttft = wait_ms + p.prefill_ms;
+                total_e2e += e2e;
+                if job.slo.met(e2e, ttft, p.tpot_ms) {
+                    met += 1;
+                }
+                if p.exec_ms > batch_max {
+                    batch_max = p.exec_ms;
+                }
+            }
+            wait_ms += batch_max;
+            start += bsize;
+        }
+        let g = if total_e2e > 0.0 { met as f64 / total_e2e } else { 0.0 };
+        Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: wait_ms }
+    }
+
+    /// Like [`eval`] but also returns per-job timelines (allocates).
+    pub fn eval_detailed(&self, schedule: &Schedule) -> (Eval, Vec<JobTimeline>) {
+        let mut timelines = Vec::with_capacity(self.jobs.len());
+        let mut wait_ms = 0.0f64;
+        let mut total_e2e = 0.0f64;
+        let mut met = 0usize;
+        for (k, start, bsize) in schedule.batch_spans() {
+            let mut batch_max = 0.0f64;
+            for &j in &schedule.order[start..start + bsize] {
+                let job = &self.jobs[j];
+                let p = self.predictor.predict(bsize, job.input_len, job.output_len);
+                let e2e = wait_ms + p.exec_ms;
+                let ttft = wait_ms + p.prefill_ms;
+                let ok = job.slo.met(e2e, ttft, p.tpot_ms);
+                total_e2e += e2e;
+                met += ok as usize;
+                batch_max = batch_max.max(p.exec_ms);
+                timelines.push(JobTimeline {
+                    job: j,
+                    batch: k,
+                    wait_ms,
+                    exec_ms: p.exec_ms,
+                    ttft_ms: ttft,
+                    tpot_ms: p.tpot_ms,
+                    met: ok,
+                });
+            }
+            wait_ms += batch_max;
+        }
+        let g = if total_e2e > 0.0 { met as f64 / total_e2e } else { 0.0 };
+        (
+            Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: wait_ms },
+            timelines,
+        )
+    }
+
+    /// Predicted e2e at batch size 1 (the sort key for Algorithm 1's second
+    /// starting solution).
+    pub fn solo_e2e_ms(&self, job: usize) -> f64 {
+        let j = &self.jobs[job];
+        self.predictor.predict(1, j.input_len, j.output_len).exec_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+
+    /// Predictor with trivially controllable costs:
+    /// prefill = l_i ms, per-token decode = 1 ms (so exec = l_i + l_o).
+    fn unit_predictor() -> LatencyPredictor {
+        LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 1.0, delta: 0.0 },
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 0.0, delta: 1.0 },
+        )
+    }
+
+    fn e2e_job(input: usize, output: usize, bound: f64) -> Job {
+        Job {
+            req_idx: 0,
+            input_len: input,
+            output_len: output,
+            slo: Slo::E2e { e2e_ms: bound },
+        }
+    }
+
+    #[test]
+    fn schedule_fcfs_packing() {
+        let s = Schedule::fcfs(7, 3);
+        assert_eq!(s.batches, vec![3, 3, 1]);
+        assert_eq!(s.order, (0..7).collect::<Vec<_>>());
+        s.validate(3).unwrap();
+        let exact = Schedule::fcfs(6, 3);
+        assert_eq!(exact.batches, vec![3, 3]);
+    }
+
+    #[test]
+    fn schedule_validation_catches_errors() {
+        let mut s = Schedule::fcfs(4, 2);
+        s.order[0] = 9;
+        assert!(s.validate(2).is_err());
+        let mut s = Schedule::fcfs(4, 2);
+        s.order[1] = 0;
+        assert!(s.validate(2).is_err());
+        let mut s = Schedule::fcfs(4, 2);
+        s.batches = vec![3, 1];
+        assert!(s.validate(2).is_err()); // exceeds max
+        let mut s = Schedule::fcfs(4, 2);
+        s.batches = vec![2, 1];
+        assert!(s.validate(2).is_err()); // sum mismatch
+    }
+
+    #[test]
+    fn figure3_example() {
+        // Paper Fig. 3: exec {300,500,800} ms, SLOs {800,500,1800} ms, bs=1.
+        // (B) order 1,2,3 -> 2/3 met, Σe2e = 2700 -> G = 0.74 req/s.
+        // (C) order 2,1,3 -> 3/3 met, Σe2e = 2900 -> G = 1.03 req/s.
+        let pred = unit_predictor();
+        let jobs = [
+            e2e_job(300, 0, 800.0),
+            e2e_job(500, 0, 500.0),
+            e2e_job(800, 0, 1800.0),
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+
+        let b = Schedule { order: vec![0, 1, 2], batches: vec![1, 1, 1] };
+        let eb = ev.eval(&b);
+        assert_eq!(eb.met, 2);
+        assert!((eb.total_e2e_ms - 2700.0).abs() < 1e-9);
+        assert!((eb.g * 1000.0 - 0.7407).abs() < 1e-3); // req/s
+
+        let c = Schedule { order: vec![1, 0, 2], batches: vec![1, 1, 1] };
+        let ec = ev.eval(&c);
+        assert_eq!(ec.met, 3);
+        assert!((ec.total_e2e_ms - 2900.0).abs() < 1e-9);
+        assert!((ec.g * 1000.0 - 1.0345).abs() < 1e-3);
+        assert!(ec.g > eb.g);
+    }
+
+    #[test]
+    fn waiting_time_accumulates_batch_maxima() {
+        let pred = unit_predictor();
+        // batch 1: {100, 200} -> max 200; batch 2: {50}
+        let jobs = [
+            e2e_job(100, 0, 1e9),
+            e2e_job(200, 0, 1e9),
+            e2e_job(50, 0, 1e9),
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+        let s = Schedule { order: vec![0, 1, 2], batches: vec![2, 1] };
+        let (_, tl) = ev.eval_detailed(&s);
+        assert_eq!(tl[0].wait_ms, 0.0);
+        assert_eq!(tl[1].wait_ms, 0.0);
+        assert!((tl[2].wait_ms - 200.0).abs() < 1e-9);
+        assert_eq!(tl[2].batch, 1);
+    }
+
+    #[test]
+    fn interactive_slo_uses_ttft_tpot() {
+        let pred = unit_predictor();
+        let jobs = [
+            Job {
+                req_idx: 0,
+                input_len: 100,
+                output_len: 10,
+                slo: Slo::Interactive { ttft_ms: 100.0, tpot_ms: 1.0 },
+            },
+            e2e_job(50, 0, 1e9),
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+        // job 0 first: ttft = 0 + 100 <= 100, tpot = 1.0 <= 1.0 -> met
+        let s1 = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+        assert_eq!(ev.eval(&s1).met, 2);
+        // job 0 second: waits 50 -> ttft = 150 > 100 -> missed
+        let s2 = Schedule { order: vec![1, 0], batches: vec![1, 1] };
+        assert_eq!(ev.eval(&s2).met, 1);
+    }
+
+    #[test]
+    fn eval_matches_eval_detailed() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..9)
+            .map(|i| e2e_job(100 + 37 * i, 30 + 11 * i, 20_000.0))
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let s = Schedule { order: (0..9).rev().collect(), batches: vec![4, 4, 1] };
+        let a = ev.eval(&s);
+        let (b, tl) = ev.eval_detailed(&s);
+        assert_eq!(a, b);
+        assert_eq!(tl.len(), 9);
+        let sum: f64 = tl.iter().map(|t| t.wait_ms + t.exec_ms).sum();
+        assert!((sum - a.total_e2e_ms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_of_position_matches_spans() {
+        let s = Schedule { order: (0..5).collect(), batches: vec![2, 2, 1] };
+        let mut map = Vec::new();
+        s.batch_of_position(&mut map);
+        assert_eq!(map, vec![0, 0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn larger_batch_slows_everyone() {
+        // Eq. 14/15 interaction term: batching raises per-request latency.
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..4).map(|_| e2e_job(500, 100, 1e12)).collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let batched = Schedule { order: (0..4).collect(), batches: vec![4] };
+        let solo = Schedule { order: (0..4).collect(), batches: vec![1, 1, 1, 1] };
+        let eb = ev.eval(&batched);
+        let es = ev.eval(&solo);
+        // batched: all see exec(b=4); solo: first sees exec(b=1) with no wait
+        let (_, tlb) = ev.eval_detailed(&batched);
+        let (_, tls) = ev.eval_detailed(&solo);
+        assert!(tlb[0].exec_ms > tls[0].exec_ms);
+        // but batching reduces makespan
+        assert!(eb.makespan_ms < es.makespan_ms);
+    }
+}

@@ -1,0 +1,218 @@
+//! Scheduling policies: the SLO-aware mapper plus the baselines it is
+//! evaluated against (paper §2.2, §5.1).
+//!
+//! * `Fcfs`       — vLLM/LMDeploy behaviour: arrival order, engine-packed
+//!                  maximal batches, no SLO awareness.
+//! * `Sjf`        — shortest predicted execution first (no SLO awareness).
+//! * `Edf`        — earliest deadline first over the SLO bound.
+//! * `Mlfq`       — FastServe-like: priority from *input length only*
+//!                  (its skip-join MLFQ assigns queues by prompt length).
+//! * `SloAware`   — Algorithm 1 (simulated annealing).
+//! * `Exhaustive` — the optimality strawman (small N only).
+
+use crate::coordinator::objective::{Evaluator, Job, Schedule};
+use crate::coordinator::priority::annealing::{
+    priority_mapping, SaParams, SearchStats,
+};
+use crate::coordinator::priority::exhaustive::exhaustive_mapping;
+use crate::coordinator::request::Slo;
+
+/// Policy selector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    Fcfs,
+    Sjf,
+    Edf,
+    Mlfq,
+    SloAware(SaParams),
+    Exhaustive,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::Sjf => "sjf",
+            Policy::Edf => "edf",
+            Policy::Mlfq => "mlfq",
+            Policy::SloAware(_) => "slo-aware-sa",
+            Policy::Exhaustive => "slo-aware-exhaustive",
+        }
+    }
+
+    /// Produce an execution plan for `jobs` (indices local to the slice).
+    ///
+    /// Returns the schedule and, where applicable, search statistics.
+    pub fn plan(
+        &self,
+        ev: &Evaluator,
+        max_batch: usize,
+    ) -> (Schedule, Option<SearchStats>) {
+        let n = ev.jobs().len();
+        match self {
+            Policy::Fcfs => (Schedule::fcfs(n, max_batch), None),
+            Policy::Sjf => {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    ev.solo_e2e_ms(a).partial_cmp(&ev.solo_e2e_ms(b)).unwrap()
+                });
+                (Schedule::from_order(order, max_batch), None)
+            }
+            Policy::Edf => {
+                let deadline = |j: &Job| match j.slo {
+                    Slo::E2e { e2e_ms } => e2e_ms,
+                    Slo::Interactive { ttft_ms, .. } => ttft_ms,
+                };
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    deadline(&ev.jobs()[a])
+                        .partial_cmp(&deadline(&ev.jobs()[b]))
+                        .unwrap()
+                });
+                (Schedule::from_order(order, max_batch), None)
+            }
+            Policy::Mlfq => {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by_key(|&a| ev.jobs()[a].input_len);
+                (Schedule::from_order(order, max_batch), None)
+            }
+            Policy::SloAware(params) => {
+                let params = SaParams { max_batch, ..*params };
+                let res = priority_mapping(ev, &params);
+                (res.schedule, Some(res.stats))
+            }
+            Policy::Exhaustive => {
+                match exhaustive_mapping(ev, max_batch) {
+                    Some(res) => {
+                        let stats = SearchStats {
+                            evals: res.evals,
+                            accepted: 0,
+                            improved: 0,
+                            early_exit: false,
+                            overhead_ms: res.overhead_ms,
+                        };
+                        (res.schedule, Some(stats))
+                    }
+                    // fall back to FCFS beyond the feasibility cap
+                    None => (Schedule::fcfs(n, max_batch), None),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+    use crate::coordinator::request::Slo;
+
+    fn unit_predictor() -> LatencyPredictor {
+        LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 1.0, delta: 0.0 },
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 0.0, delta: 1.0 },
+        )
+    }
+
+    fn jobs() -> Vec<Job> {
+        vec![
+            Job { req_idx: 0, input_len: 500, output_len: 0, slo: Slo::E2e { e2e_ms: 900.0 } },
+            Job { req_idx: 1, input_len: 100, output_len: 0, slo: Slo::E2e { e2e_ms: 5000.0 } },
+            Job {
+                req_idx: 2,
+                input_len: 300,
+                output_len: 10,
+                slo: Slo::Interactive { ttft_ms: 400.0, tpot_ms: 50.0 },
+            },
+        ]
+    }
+
+    #[test]
+    fn fcfs_keeps_arrival_order() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        let (s, stats) = Policy::Fcfs.plan(&ev, 2);
+        assert_eq!(s.order, vec![0, 1, 2]);
+        assert_eq!(s.batches, vec![2, 1]);
+        assert!(stats.is_none());
+    }
+
+    #[test]
+    fn sjf_sorts_by_predicted_exec() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        let (s, _) = Policy::Sjf.plan(&ev, 1);
+        // exec: j0=500, j1=100, j2=310
+        assert_eq!(s.order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn edf_sorts_by_deadline() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        let (s, _) = Policy::Edf.plan(&ev, 1);
+        // deadlines: j0=900, j1=5000, j2=400 (ttft)
+        assert_eq!(s.order, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn mlfq_sorts_by_input_len() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        let (s, _) = Policy::Mlfq.plan(&ev, 1);
+        assert_eq!(s.order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn slo_aware_beats_or_matches_fcfs() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        let (fcfs, _) = Policy::Fcfs.plan(&ev, 1);
+        let (sa, stats) =
+            Policy::SloAware(SaParams::default()).plan(&ev, 1);
+        assert!(ev.eval(&sa).g >= ev.eval(&fcfs).g);
+        assert!(stats.is_some());
+    }
+
+    #[test]
+    fn exhaustive_fallback_beyond_cap() {
+        let pred = unit_predictor();
+        let js: Vec<Job> = (0..20)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 10,
+                output_len: 0,
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        let ev = Evaluator::new(&js, &pred);
+        let (s, stats) = Policy::Exhaustive.plan(&ev, 2);
+        assert_eq!(s.order, (0..20).collect::<Vec<_>>()); // FCFS fallback
+        assert!(stats.is_none());
+    }
+
+    #[test]
+    fn all_policies_produce_valid_schedules() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        for policy in [
+            Policy::Fcfs,
+            Policy::Sjf,
+            Policy::Edf,
+            Policy::Mlfq,
+            Policy::SloAware(SaParams::default()),
+            Policy::Exhaustive,
+        ] {
+            let (s, _) = policy.plan(&ev, 2);
+            s.validate(2).unwrap_or_else(|e| {
+                panic!("{} produced invalid schedule: {e}", policy.name())
+            });
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Latency predictor (paper §4.2, Eqs. 14–19).
+//!
+//! Prefill time and per-token decode time are multiple linear regressions
+//! with an interaction term:
+//!
+//! ```text
+//! t_p(b, l_i)  = α_p·b·l_i + β_p·b + γ_p·l_i + δ_p          (Eq. 14)
+//! τ_d(b, l_a)  = α_d·b·l_a + β_d·b + γ_d·l_a + δ_d          (Eq. 15)
+//! t_d(b, l_i, l_o) = Σ_{k=1..l_o} τ_d(b, l_i + k)           (Eq. 16)
+//! ```
+//!
+//! The decode sum has a closed form (arithmetic series), making e2e/TTFT/
+//! TPOT prediction O(1). This matters: `calculateG` inside the simulated-
+//! annealing loop is the scheduler's hot path (DESIGN.md §10).
+//!
+//! Coefficients are fitted from profiling samples with ordinary least
+//! squares ([`fit_phase`]), exactly as §4.2 prescribes.
+
+use crate::util::stats::{least_squares, r_squared};
+
+/// Fitting coefficients for one phase (Eq. 14 / Eq. 15).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseCoeffs {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+}
+
+impl PhaseCoeffs {
+    pub const ZERO: PhaseCoeffs =
+        PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 0.0, delta: 0.0 };
+
+    /// Evaluate `α·b·l + β·b + γ·l + δ`.
+    #[inline]
+    pub fn eval(&self, b: f64, l: f64) -> f64 {
+        self.alpha * b * l + self.beta * b + self.gamma * l + self.delta
+    }
+
+    /// Multiply every coefficient (used for hardware-profile scaling and the
+    /// Fig. 10 perturbation study).
+    pub fn scaled(&self, factor: f64) -> PhaseCoeffs {
+        PhaseCoeffs {
+            alpha: self.alpha * factor,
+            beta: self.beta * factor,
+            gamma: self.gamma * factor,
+            delta: self.delta * factor,
+        }
+    }
+
+    /// Perturb one coefficient by a relative factor (Fig. 10).
+    pub fn perturbed(&self, which: Coeff, rel: f64) -> PhaseCoeffs {
+        let mut c = *self;
+        match which {
+            Coeff::Alpha => c.alpha *= 1.0 + rel,
+            Coeff::Beta => c.beta *= 1.0 + rel,
+            Coeff::Gamma => c.gamma *= 1.0 + rel,
+            Coeff::Delta => c.delta *= 1.0 + rel,
+        }
+        c
+    }
+}
+
+/// Coefficient selector for sensitivity studies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coeff {
+    Alpha,
+    Beta,
+    Gamma,
+    Delta,
+}
+
+impl Coeff {
+    pub const ALL: [Coeff; 4] =
+        [Coeff::Alpha, Coeff::Beta, Coeff::Gamma, Coeff::Delta];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Coeff::Alpha => "alpha",
+            Coeff::Beta => "beta",
+            Coeff::Gamma => "gamma",
+            Coeff::Delta => "delta",
+        }
+    }
+}
+
+/// One profiling observation: measured phase latency at (batch, length).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSample {
+    pub batch: usize,
+    pub len: usize,
+    /// Measured prefill time (ms) or per-token decode time (ms).
+    pub ms: f64,
+}
+
+/// Fit Eq. 14/15 coefficients from samples via least squares.
+/// Returns `(coeffs, r²)`; None if the design matrix is degenerate
+/// (e.g. all samples at one batch size).
+pub fn fit_phase(samples: &[PhaseSample]) -> Option<(PhaseCoeffs, f64)> {
+    if samples.len() < 4 {
+        return None;
+    }
+    let rows: Vec<Vec<f64>> = samples
+        .iter()
+        .map(|s| {
+            let b = s.batch as f64;
+            let l = s.len as f64;
+            vec![b * l, b, l, 1.0]
+        })
+        .collect();
+    let y: Vec<f64> = samples.iter().map(|s| s.ms).collect();
+    let beta = least_squares(&rows, &y)?;
+    let coeffs = PhaseCoeffs {
+        alpha: beta[0],
+        beta: beta[1],
+        gamma: beta[2],
+        delta: beta[3],
+    };
+    let predicted: Vec<f64> = samples
+        .iter()
+        .map(|s| coeffs.eval(s.batch as f64, s.len as f64))
+        .collect();
+    Some((coeffs, r_squared(&predicted, &y)))
+}
+
+/// The latency predictor used by the priority mapper and the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyPredictor {
+    pub prefill: PhaseCoeffs,
+    pub decode: PhaseCoeffs,
+}
+
+/// Predicted phase latencies for one request at a given batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictedLatency {
+    /// Execution e2e (Eq. 17) — excludes waiting time.
+    pub exec_ms: f64,
+    /// Prefill time (Eq. 18).
+    pub prefill_ms: f64,
+    /// Mean per-output-token decode time (Eq. 19).
+    pub tpot_ms: f64,
+}
+
+impl LatencyPredictor {
+    pub fn new(prefill: PhaseCoeffs, decode: PhaseCoeffs) -> Self {
+        LatencyPredictor { prefill, decode }
+    }
+
+    /// Paper Table 2 coefficients (Qwen2.5-7B on 2×V100, ms units).
+    pub fn paper_table2() -> Self {
+        LatencyPredictor {
+            prefill: PhaseCoeffs {
+                alpha: 0.1,
+                beta: 5.7,
+                gamma: 0.01,
+                delta: 43.67,
+            },
+            decode: PhaseCoeffs {
+                alpha: 0.0002,
+                beta: 0.275,
+                gamma: 0.00088,
+                delta: 15.85,
+            },
+        }
+    }
+
+    /// Eq. 14: prefill latency (ms).
+    #[inline]
+    pub fn prefill_ms(&self, batch: usize, input_len: usize) -> f64 {
+        self.prefill.eval(batch as f64, input_len as f64)
+    }
+
+    /// Eq. 15: per-token decode latency at accumulated length `l_a` (ms).
+    #[inline]
+    pub fn tpot_at(&self, batch: usize, accumulated_len: usize) -> f64 {
+        self.decode.eval(batch as f64, accumulated_len as f64)
+    }
+
+    /// Eq. 16 in closed form:
+    ///
+    /// Σ_{k=1..lo} [α·b·(li+k) + β·b + γ·(li+k) + δ]
+    ///   = lo·(β·b + δ) + (α·b + γ)·(lo·li + lo·(lo+1)/2)
+    #[inline]
+    pub fn decode_total_ms(
+        &self,
+        batch: usize,
+        input_len: usize,
+        output_len: usize,
+    ) -> f64 {
+        let b = batch as f64;
+        let li = input_len as f64;
+        let lo = output_len as f64;
+        let d = &self.decode;
+        lo * (d.beta * b + d.delta)
+            + (d.alpha * b + d.gamma) * (lo * li + lo * (lo + 1.0) * 0.5)
+    }
+
+    /// Eqs. 17–19 bundled: predicted exec/prefill/TPOT (no waiting time).
+    #[inline]
+    pub fn predict(
+        &self,
+        batch: usize,
+        input_len: usize,
+        output_len: usize,
+    ) -> PredictedLatency {
+        let prefill_ms = self.prefill_ms(batch, input_len);
+        let decode_ms = self.decode_total_ms(batch, input_len, output_len);
+        let tpot_ms = if output_len > 0 {
+            decode_ms / output_len as f64
+        } else {
+            0.0
+        };
+        PredictedLatency { exec_ms: prefill_ms + decode_ms, prefill_ms, tpot_ms }
+    }
+
+    /// Fit both phases from profiling data (§4.2 workflow).
+    pub fn fit(
+        prefill_samples: &[PhaseSample],
+        decode_samples: &[PhaseSample],
+    ) -> Option<(Self, f64, f64)> {
+        let (prefill, r2_p) = fit_phase(prefill_samples)?;
+        let (decode, r2_d) = fit_phase(decode_samples)?;
+        Some((LatencyPredictor { prefill, decode }, r2_p, r2_d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn p() -> LatencyPredictor {
+        LatencyPredictor::paper_table2()
+    }
+
+    #[test]
+    fn prefill_matches_eq14() {
+        // α_p·b·l + β_p·b + γ_p·l + δ_p with Table 2 values
+        let got = p().prefill_ms(4, 500);
+        let want = 0.1 * 4.0 * 500.0 + 5.7 * 4.0 + 0.01 * 500.0 + 43.67;
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_closed_form_matches_naive_sum() {
+        let pred = p();
+        for &(b, li, lo) in
+            &[(1usize, 10usize, 5usize), (4, 100, 64), (8, 1999, 1), (2, 0, 300)]
+        {
+            let naive: f64 =
+                (1..=lo).map(|k| pred.tpot_at(b, li + k)).sum();
+            let closed = pred.decode_total_ms(b, li, lo);
+            assert!(
+                (naive - closed).abs() < 1e-6,
+                "b={b} li={li} lo={lo}: naive={naive} closed={closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_bundles_eq17_to_19() {
+        let pred = p();
+        let out = pred.predict(2, 128, 64);
+        assert!((out.exec_ms
+            - (pred.prefill_ms(2, 128) + pred.decode_total_ms(2, 128, 64)))
+            .abs()
+            < 1e-9);
+        assert!((out.tpot_ms - pred.decode_total_ms(2, 128, 64) / 64.0).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn predict_zero_output() {
+        let out = p().predict(1, 100, 0);
+        assert_eq!(out.tpot_ms, 0.0);
+        assert!((out.exec_ms - out.prefill_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_monotonic_in_batch_and_len() {
+        let pred = p();
+        assert!(pred.prefill_ms(2, 100) < pred.prefill_ms(4, 100));
+        assert!(pred.prefill_ms(2, 100) < pred.prefill_ms(2, 200));
+        assert!(pred.decode_total_ms(1, 100, 10)
+            < pred.decode_total_ms(1, 100, 20));
+    }
+
+    #[test]
+    fn fit_recovers_table2() {
+        // Generate noiseless samples from Table 2 and re-fit (§4.2).
+        let truth = p();
+        let mut prefill = Vec::new();
+        let mut decode = Vec::new();
+        for &b in &[1usize, 2, 4, 8, 16, 32] {
+            for &l in &[100usize, 500, 1000, 2000, 4000, 8000] {
+                prefill.push(PhaseSample {
+                    batch: b,
+                    len: l,
+                    ms: truth.prefill.eval(b as f64, l as f64),
+                });
+                decode.push(PhaseSample {
+                    batch: b,
+                    len: l,
+                    ms: truth.decode.eval(b as f64, l as f64),
+                });
+            }
+        }
+        let (fitted, r2p, r2d) =
+            LatencyPredictor::fit(&prefill, &decode).unwrap();
+        assert!(r2p > 0.999999 && r2d > 0.999999);
+        assert!((fitted.prefill.alpha - 0.1).abs() < 1e-6);
+        assert!((fitted.decode.delta - 15.85).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fit_with_noise_close() {
+        let truth = p();
+        let mut rng = Rng::new(5);
+        let mut samples = Vec::new();
+        for _ in 0..500 {
+            let b = rng.range(1, 32) as usize;
+            let l = rng.range(100, 8000) as usize;
+            let ms = truth.prefill.eval(b as f64, l as f64)
+                * rng.uniform(0.97, 1.03);
+            samples.push(PhaseSample { batch: b, len: l, ms });
+        }
+        let (coeffs, r2) = fit_phase(&samples).unwrap();
+        assert!(r2 > 0.99, "r2 {r2}");
+        assert!((coeffs.alpha - 0.1).abs() / 0.1 < 0.05);
+    }
+
+    #[test]
+    fn fit_degenerate_returns_none() {
+        // all at one (b,l) point — singular design
+        let s = vec![PhaseSample { batch: 1, len: 100, ms: 1.0 }; 10];
+        assert!(fit_phase(&s).is_none());
+        assert!(fit_phase(&s[..2]).is_none());
+    }
+
+    #[test]
+    fn perturbation_selectors() {
+        let c = p().prefill;
+        assert!((c.perturbed(Coeff::Alpha, 0.5).alpha - 0.15).abs() < 1e-12);
+        assert_eq!(c.perturbed(Coeff::Beta, 0.0), c);
+        assert!((c.perturbed(Coeff::Delta, -0.1).delta - 43.67 * 0.9).abs()
+            < 1e-9);
+        assert!((c.scaled(2.0).gamma - 0.02).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,344 @@
+//! Simulated-annealing priority mapping (paper §4.3, Algorithm 1).
+//!
+//! Searches the joint space of (priority sequence, batch partition) for the
+//! schedule maximizing `G`. Two starting solutions are considered:
+//!
+//! 1. the arrival order with all batches at the maximum size, and
+//! 2. the order sorted by predicted solo e2e latency (shortest first) —
+//!    if this one already meets *every* SLO it is provably optimal for `G`'s
+//!    upper bound (smallest Σe2e with the largest achievable `n`) and the
+//!    search exits early (Algorithm 1 lines 7–10).
+//!
+//! Otherwise, Metropolis-style annealing runs from the better seed.
+//!
+//! **Acceptance-rule note** (DESIGN.md §5): Algorithm 1 line 32 reads
+//! `exp(-(f_new - f)/T) < rand(0,1)` which, taken literally, *rejects* worse
+//! solutions almost always and accepts them *less* often at high
+//! temperature — inverted from classical SA. We implement the standard
+//! maximizing Metropolis rule: a worse solution is accepted with probability
+//! `exp((f_new - f) / T_eff)`. Because `G` is tiny (~1e-3 for ms-scale
+//! latencies) while the paper's temperatures are O(100), a raw ratio would
+//! accept everything; `T_eff` therefore normalizes by the seed objective:
+//! `T_eff = (T / T₀) · |f_seed|`. At `T = T₀` a candidate worse by the full
+//! seed objective survives with p = e⁻¹, decaying as T cools — matching the
+//! qualitative behaviour Fig. 8 reports (higher T₀ ⇒ more escapes).
+
+use crate::coordinator::objective::{Eval, Evaluator, Schedule};
+use crate::coordinator::priority::moves;
+use crate::util::rng::Rng;
+
+/// Hyperparameters (paper §5.1 defaults: T₀=500, T_thres=20, iter=100,
+/// τ=0.95).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SaParams {
+    pub t0: f64,
+    pub t_thres: f64,
+    pub iters_per_temp: usize,
+    pub decay: f64,
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for SaParams {
+    fn default() -> Self {
+        SaParams {
+            t0: 500.0,
+            t_thres: 20.0,
+            iters_per_temp: 100,
+            decay: 0.95,
+            max_batch: 8,
+            seed: 0,
+        }
+    }
+}
+
+impl SaParams {
+    pub fn with_max_batch(max_batch: usize) -> Self {
+        SaParams { max_batch, ..Default::default() }
+    }
+
+    /// Number of temperature levels until `t_thres` (the `t` in the paper's
+    /// O(t·iter) complexity).
+    pub fn temp_levels(&self) -> usize {
+        if self.t0 <= self.t_thres {
+            return 0;
+        }
+        ((self.t_thres / self.t0).ln() / self.decay.ln()).ceil() as usize
+    }
+}
+
+/// Search diagnostics (Table 1 overhead, Fig. 8 sweeps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchStats {
+    /// Objective evaluations performed.
+    pub evals: usize,
+    /// Candidate acceptances (better or Metropolis).
+    pub accepted: usize,
+    /// Strict improvements over the incumbent best.
+    pub improved: usize,
+    /// True if the sorted seed met all SLOs (lines 7–10 fast path).
+    pub early_exit: bool,
+    /// Wall-clock search time (ms).
+    pub overhead_ms: f64,
+}
+
+/// Result: the best schedule found plus its evaluation and stats.
+#[derive(Debug, Clone)]
+pub struct SaResult {
+    pub schedule: Schedule,
+    pub eval: Eval,
+    pub stats: SearchStats,
+}
+
+/// Algorithm 1: map jobs to a priority sequence + batch partition.
+pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
+    let t_start = crate::util::now_ms();
+    let n = ev.jobs().len();
+    let max_batch = params.max_batch.max(1);
+    let mut stats = SearchStats {
+        evals: 0,
+        accepted: 0,
+        improved: 0,
+        early_exit: false,
+        overhead_ms: 0.0,
+    };
+
+    if n == 0 {
+        return SaResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval { g: 0.0, met: 0, total_e2e_ms: 0.0, makespan_ms: 0.0 },
+            stats,
+        };
+    }
+
+    // Seed 2: sorted by predicted solo e2e (line 3).
+    let mut by_e2e: Vec<usize> = (0..n).collect();
+    by_e2e.sort_by(|&a, &b| {
+        ev.solo_e2e_ms(a).partial_cmp(&ev.solo_e2e_ms(b)).unwrap()
+    });
+    let sorted_seed = Schedule::from_order(by_e2e, max_batch);
+    let sorted_eval = ev.eval(&sorted_seed);
+    stats.evals += 1;
+
+    // Lines 7–10: if the minimal-Σe2e sequence meets every SLO it maximizes G.
+    if sorted_eval.met == n {
+        stats.early_exit = true;
+        stats.overhead_ms = crate::util::now_ms() - t_start;
+        return SaResult { schedule: sorted_seed, eval: sorted_eval, stats };
+    }
+
+    // Seed 1: the arrival order (lines 12–15 pick the better start).
+    let fcfs_seed = Schedule::fcfs(n, max_batch);
+    let fcfs_eval = ev.eval(&fcfs_seed);
+    stats.evals += 1;
+
+    let (mut current, mut f_cur) = if sorted_eval.g >= fcfs_eval.g {
+        (sorted_seed, sorted_eval)
+    } else {
+        (fcfs_seed, fcfs_eval)
+    };
+    let mut best = current.clone();
+    let mut f_best = f_cur;
+
+    let f_scale = f_cur.g.abs().max(1e-12);
+    let mut rng = Rng::new(params.seed);
+    let mut t = params.t0;
+    let mut candidate = current.clone();
+
+    while t >= params.t_thres {
+        for _ in 0..params.iters_per_temp {
+            candidate.order.clear();
+            candidate.order.extend_from_slice(&current.order);
+            candidate.batches.clear();
+            candidate.batches.extend_from_slice(&current.batches);
+            if !moves::random_move(&mut candidate, max_batch, &mut rng) {
+                continue;
+            }
+            let f_new = ev.eval(&candidate);
+            stats.evals += 1;
+            let accept = if f_new.g > f_cur.g {
+                true
+            } else {
+                // Metropolis with normalized temperature (see module docs).
+                let t_eff = (t / params.t0) * f_scale;
+                let p = ((f_new.g - f_cur.g) / t_eff).exp();
+                rng.chance(p)
+            };
+            if accept {
+                std::mem::swap(&mut current, &mut candidate);
+                f_cur = f_new;
+                stats.accepted += 1;
+                if f_cur.g > f_best.g {
+                    best.order.clear();
+                    best.order.extend_from_slice(&current.order);
+                    best.batches.clear();
+                    best.batches.extend_from_slice(&current.batches);
+                    f_best = f_cur;
+                    stats.improved += 1;
+                }
+            }
+        }
+        t *= params.decay;
+    }
+
+    stats.overhead_ms = crate::util::now_ms() - t_start;
+    SaResult { schedule: best, eval: f_best, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::objective::Job;
+    use crate::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+    use crate::coordinator::request::Slo;
+
+    fn unit_predictor() -> LatencyPredictor {
+        LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 1.0, delta: 0.0 },
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 0.0, delta: 1.0 },
+        )
+    }
+
+    fn e2e_job(input: usize, bound: f64) -> Job {
+        Job {
+            req_idx: 0,
+            input_len: input,
+            output_len: 0,
+            slo: Slo::E2e { e2e_ms: bound },
+        }
+    }
+
+    fn params(max_batch: usize, seed: u64) -> SaParams {
+        SaParams { max_batch, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn early_exit_when_sjf_meets_all() {
+        let pred = unit_predictor();
+        let jobs =
+            vec![e2e_job(100, 1e6), e2e_job(300, 1e6), e2e_job(200, 1e6)];
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = priority_mapping(&ev, &params(1, 0));
+        assert!(res.stats.early_exit);
+        assert_eq!(res.eval.met, 3);
+        // order should be shortest-first
+        assert_eq!(res.schedule.order, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn solves_figure3() {
+        // Fig. 3: SA must discover order (2,1,3) meeting all three SLOs.
+        let pred = unit_predictor();
+        let jobs = vec![
+            e2e_job(300, 800.0),
+            e2e_job(500, 500.0),
+            e2e_job(800, 1800.0),
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = priority_mapping(&ev, &params(1, 1));
+        assert_eq!(res.eval.met, 3, "SA should meet all SLOs: {:?}", res.eval);
+        assert_eq!(res.schedule.order, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn solves_figure5_defers_impossible_job() {
+        // Fig. 5: job 1 cannot meet its SLO; greedy strict-first ordering
+        // sacrifices job 2. SA should defer job 1 and meet 2 of 3.
+        let pred = unit_predictor();
+        let jobs = vec![
+            e2e_job(800, 500.0),  // impossible
+            e2e_job(500, 600.0),
+            e2e_job(1400, 2900.0),
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = priority_mapping(&ev, &params(1, 2));
+        assert_eq!(res.eval.met, 2, "{:?}", res.eval);
+        // job 1 (idx 0) must not run first
+        assert_ne!(res.schedule.order[0], 0);
+    }
+
+    #[test]
+    fn batch_splitting_discovered() {
+        // Fig. 4 analogue: with interaction-heavy costs, batching all three
+        // requests together violates two strict SLOs; deferring the loose
+        // one into a second iteration meets all three.
+        let pred = LatencyPredictor::new(
+            // prefill: strongly batch-sensitive
+            PhaseCoeffs { alpha: 1.0, beta: 0.0, gamma: 0.0, delta: 0.0 },
+            PhaseCoeffs::ZERO,
+        );
+        let jobs = vec![
+            e2e_job(100, 220.0), // exec(b) = 100*b
+            e2e_job(100, 220.0),
+            e2e_job(100, 1000.0), // loose
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+        // max batch 3: batching all -> exec 300 > 220 for strict jobs.
+        let res = priority_mapping(&ev, &params(3, 3));
+        assert_eq!(res.eval.met, 3, "{:?} {:?}", res.eval, res.schedule);
+        assert!(res.schedule.batches.len() >= 2);
+    }
+
+    #[test]
+    fn result_is_never_worse_than_seeds() {
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(seed + 100);
+            let jobs: Vec<Job> = (0..12)
+                .map(|_| {
+                    let input = rng.range(50, 1500) as usize;
+                    let output = rng.range(20, 400) as usize;
+                    let bound = rng.uniform(2_000.0, 60_000.0);
+                    Job {
+                        req_idx: 0,
+                        input_len: input,
+                        output_len: output,
+                        slo: Slo::E2e { e2e_ms: bound },
+                    }
+                })
+                .collect();
+            let ev = Evaluator::new(&jobs, &pred);
+            let res = priority_mapping(
+                &ev,
+                &params(4, seed),
+            );
+            let fcfs = ev.eval(&Schedule::fcfs(12, 4));
+            assert!(
+                res.eval.g >= fcfs.g - 1e-15,
+                "seed {seed}: SA {:?} worse than FCFS {:?}",
+                res.eval,
+                fcfs
+            );
+            res.schedule.validate(4).unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> =
+            (0..8).map(|i| e2e_job(100 * (i + 1), 5_000.0)).collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let a = priority_mapping(&ev, &params(2, 9));
+        let b = priority_mapping(&ev, &params(2, 9));
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.eval, b.eval);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pred = unit_predictor();
+        let jobs: Vec<Job> = vec![];
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = priority_mapping(&ev, &params(4, 0));
+        assert!(res.schedule.is_empty());
+        assert_eq!(res.eval.met, 0);
+    }
+
+    #[test]
+    fn temp_levels_matches_paper_defaults() {
+        let p = SaParams::default();
+        // ln(20/500)/ln(0.95) ≈ 62.7 -> 63 levels
+        assert_eq!(p.temp_levels(), 63);
+    }
+}

@@ -1,0 +1,234 @@
+//! Exhaustive-search priority mapping (the paper's strawman, §4.3).
+//!
+//! Enumerates every permutation of the execution order (Heap's algorithm)
+//! × every batch composition with parts ≤ max_batch, evaluating `G` for
+//! each — `O(N! · 2^N)` total. Used as the optimality baseline in Fig. 7 and
+//! the overhead comparison in Table 1; infeasible beyond ~10 requests
+//! (the paper stops displaying it at 8–10).
+
+use crate::coordinator::objective::{Eval, Evaluator, Schedule};
+
+/// Hard cap to protect callers from accidental factorial blow-up.
+pub const MAX_EXHAUSTIVE_N: usize = 11;
+
+/// Result of the exhaustive search.
+#[derive(Debug, Clone)]
+pub struct ExhaustiveResult {
+    pub schedule: Schedule,
+    pub eval: Eval,
+    /// Number of (permutation × composition) candidates evaluated.
+    pub evals: usize,
+    pub overhead_ms: f64,
+}
+
+/// Enumerate all compositions of `n` into parts in `1..=max_batch`.
+pub fn batch_compositions(n: usize, max_batch: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    fn rec(
+        remaining: usize,
+        max_batch: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if remaining == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        for part in 1..=max_batch.min(remaining) {
+            cur.push(part);
+            rec(remaining - part, max_batch, cur, out);
+            cur.pop();
+        }
+    }
+    rec(n, max_batch.max(1), &mut cur, &mut out);
+    out
+}
+
+/// Exhaustively search for the schedule maximizing `G`.
+///
+/// Returns None if `n > MAX_EXHAUSTIVE_N` (caller should fall back to SA).
+pub fn exhaustive_mapping(
+    ev: &Evaluator,
+    max_batch: usize,
+) -> Option<ExhaustiveResult> {
+    let n = ev.jobs().len();
+    if n > MAX_EXHAUSTIVE_N {
+        return None;
+    }
+    let t_start = crate::util::now_ms();
+    if n == 0 {
+        return Some(ExhaustiveResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval { g: 0.0, met: 0, total_e2e_ms: 0.0, makespan_ms: 0.0 },
+            evals: 0,
+            overhead_ms: crate::util::now_ms() - t_start,
+        });
+    }
+
+    let compositions = batch_compositions(n, max_batch);
+    let mut best: Option<(Schedule, Eval)> = None;
+    let mut evals = 0usize;
+
+    // Heap's algorithm over the order; for each permutation, try every
+    // batch composition.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut c = vec![0usize; n];
+    let mut candidate =
+        Schedule { order: order.clone(), batches: Vec::new() };
+
+    let consider = |order: &[usize],
+                        candidate: &mut Schedule,
+                        best: &mut Option<(Schedule, Eval)>,
+                        evals: &mut usize| {
+        for comp in &compositions {
+            candidate.order.clear();
+            candidate.order.extend_from_slice(order);
+            candidate.batches.clear();
+            candidate.batches.extend_from_slice(comp);
+            let eval = ev.eval(candidate);
+            *evals += 1;
+            let better = match best {
+                None => true,
+                Some((_, b)) => eval.g > b.g,
+            };
+            if better {
+                *best = Some((candidate.clone(), eval));
+            }
+        }
+    };
+
+    consider(&order, &mut candidate, &mut best, &mut evals);
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                order.swap(0, i);
+            } else {
+                order.swap(c[i], i);
+            }
+            consider(&order, &mut candidate, &mut best, &mut evals);
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+
+    let (schedule, eval) = best.unwrap();
+    Some(ExhaustiveResult {
+        schedule,
+        eval,
+        evals,
+        overhead_ms: crate::util::now_ms() - t_start,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::objective::Job;
+    use crate::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+    use crate::coordinator::priority::annealing::{
+        priority_mapping, SaParams,
+    };
+    use crate::coordinator::request::Slo;
+    use crate::util::rng::Rng;
+
+    fn unit_predictor() -> LatencyPredictor {
+        LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 1.0, delta: 0.0 },
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 0.0, delta: 1.0 },
+        )
+    }
+
+    #[test]
+    fn compositions_counts() {
+        // parts ≤ 1: exactly one composition
+        assert_eq!(batch_compositions(5, 1), vec![vec![1; 5]]);
+        // parts ≤ 2 of n follow Fibonacci: n=4 -> 5
+        assert_eq!(batch_compositions(4, 2).len(), 5);
+        // parts ≤ n: 2^(n-1) compositions
+        assert_eq!(batch_compositions(5, 5).len(), 16);
+        // all compositions sum to n and respect the cap
+        for comp in batch_compositions(6, 3) {
+            assert_eq!(comp.iter().sum::<usize>(), 6);
+            assert!(comp.iter().all(|&p| (1..=3).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn finds_figure3_optimum() {
+        let pred = unit_predictor();
+        let jobs = vec![
+            Job { req_idx: 0, input_len: 300, output_len: 0, slo: Slo::E2e { e2e_ms: 800.0 } },
+            Job { req_idx: 1, input_len: 500, output_len: 0, slo: Slo::E2e { e2e_ms: 500.0 } },
+            Job { req_idx: 2, input_len: 800, output_len: 0, slo: Slo::E2e { e2e_ms: 1800.0 } },
+        ];
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = exhaustive_mapping(&ev, 1).unwrap();
+        assert_eq!(res.eval.met, 3);
+        assert_eq!(res.schedule.order, vec![1, 0, 2]);
+        assert_eq!(res.evals, 6); // 3! perms × 1 composition
+    }
+
+    #[test]
+    fn refuses_oversized_input() {
+        let pred = unit_predictor();
+        let jobs: Vec<Job> = (0..MAX_EXHAUSTIVE_N + 1)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 10,
+                output_len: 0,
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        assert!(exhaustive_mapping(&ev, 1).is_none());
+    }
+
+    #[test]
+    fn sa_within_one_percent_of_exhaustive() {
+        // The paper reports SA ≤1.0% worse than exhaustive across tests.
+        let pred = LatencyPredictor::paper_table2();
+        let mut worst_ratio: f64 = 1.0;
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(seed);
+            let jobs: Vec<Job> = (0..6)
+                .map(|i| Job {
+                    req_idx: i,
+                    input_len: rng.range(50, 1200) as usize,
+                    output_len: rng.range(10, 300) as usize,
+                    slo: Slo::E2e {
+                        e2e_ms: rng.uniform(1_500.0, 20_000.0),
+                    },
+                })
+                .collect();
+            let ev = Evaluator::new(&jobs, &pred);
+            let ex = exhaustive_mapping(&ev, 2).unwrap();
+            let sa = priority_mapping(
+                &ev,
+                &SaParams { max_batch: 2, seed, ..Default::default() },
+            );
+            assert!(sa.eval.g <= ex.eval.g + 1e-15, "SA beat exhaustive?!");
+            if ex.eval.g > 0.0 {
+                worst_ratio = worst_ratio.min(sa.eval.g / ex.eval.g);
+            }
+        }
+        assert!(
+            worst_ratio >= 0.99,
+            "SA degradation {:.2}% > 1%",
+            (1.0 - worst_ratio) * 100.0
+        );
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let pred = unit_predictor();
+        let jobs: Vec<Job> = vec![];
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = exhaustive_mapping(&ev, 4).unwrap();
+        assert_eq!(res.evals, 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Priority mapping: the paper's core contribution (§4.3).
+//!
+//! * [`annealing`]  — simulated-annealing search (Algorithm 1), the
+//!   production path (~1 ms overhead).
+//! * [`exhaustive`] — `O(N!·2^N)` strawman used as the optimality baseline.
+//! * [`moves`]      — the neighbourhood operators shared by the search.
+
+pub mod annealing;
+pub mod exhaustive;
+pub mod moves;
+
+pub use annealing::{priority_mapping, SaParams, SaResult, SearchStats};
+pub use exhaustive::{exhaustive_mapping, ExhaustiveResult, MAX_EXHAUSTIVE_N};

@@ -1,0 +1,222 @@
+//! Neighbourhood moves for the simulated-annealing search (Algorithm 1).
+//!
+//! Three perturbations generate a new candidate from the current schedule:
+//!
+//! * [`squeeze_prev`]  — `squeezeLastIter`: pull a request into the
+//!   *previous* batch iteration (if it is not in the first iteration and the
+//!   previous batch has room).
+//! * [`delay_next`]    — `delayNextIter`: push a request into the *next*
+//!   batch iteration (if it has room; delaying out of the final batch opens
+//!   a fresh iteration — the Fig. 4(C) move).
+//! * [`rand_swap`]     — `randSwapping`: exchange two positions in the
+//!   priority sequence.
+//!
+//! All moves preserve the schedule invariants (permutation; positive batch
+//! sizes ≤ max; partition) — enforced by the property tests.
+
+use crate::coordinator::objective::Schedule;
+use crate::util::rng::Rng;
+
+/// Try to move one random job into the previous batch. Returns false if no
+/// job is eligible (then the caller should pick another move).
+pub fn squeeze_prev(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+    if s.batches.len() < 2 {
+        return false;
+    }
+    // Eligible batches k>0 with batches[k-1] < max_batch.
+    let eligible: Vec<usize> = (1..s.batches.len())
+        .filter(|&k| s.batches[k - 1] < max_batch)
+        .collect();
+    if eligible.is_empty() {
+        return false;
+    }
+    let k = *rng.choose(&eligible);
+    let start_k: usize = s.batches[..k].iter().sum();
+    // pick a random member of batch k and move it to the end of batch k-1
+    let pick = start_k + rng.below(s.batches[k]);
+    let job = s.order.remove(pick);
+    s.order.insert(start_k, job);
+    s.batches[k - 1] += 1;
+    s.batches[k] -= 1;
+    if s.batches[k] == 0 {
+        s.batches.remove(k);
+    }
+    true
+}
+
+/// Try to move one random job into the next batch (creating a new final
+/// batch when delaying from the last one). Returns false if nothing moved.
+pub fn delay_next(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+    if s.order.is_empty() {
+        return false;
+    }
+    let m = s.batches.len();
+    // Eligible source batches: k < m-1 with batches[k+1] < max_batch, or the
+    // final batch if it holds more than one job (otherwise delaying is a
+    // no-op that recreates the same batch).
+    let eligible: Vec<usize> = (0..m)
+        .filter(|&k| {
+            if k + 1 < m {
+                s.batches[k + 1] < max_batch
+            } else {
+                s.batches[k] > 1
+            }
+        })
+        .collect();
+    if eligible.is_empty() {
+        return false;
+    }
+    let k = *rng.choose(&eligible);
+    let start_k: usize = s.batches[..k].iter().sum();
+    let pick = start_k + rng.below(s.batches[k]);
+    let job = s.order.remove(pick);
+    // insert at the START of batch k+1's span (which, after removal, begins
+    // at start_k + batches[k] - 1)
+    let insert_at = start_k + s.batches[k] - 1;
+    s.order.insert(insert_at, job);
+    if k + 1 < m {
+        s.batches[k] -= 1;
+        s.batches[k + 1] += 1;
+        if s.batches[k] == 0 {
+            s.batches.remove(k);
+        }
+    } else {
+        s.batches[k] -= 1;
+        s.batches.push(1);
+    }
+    true
+}
+
+/// Swap two random positions in the priority sequence. Returns false only
+/// for schedules with fewer than two jobs.
+pub fn rand_swap(s: &mut Schedule, rng: &mut Rng) -> bool {
+    let n = s.order.len();
+    if n < 2 {
+        return false;
+    }
+    let i = rng.below(n);
+    let mut j = rng.below(n - 1);
+    if j >= i {
+        j += 1;
+    }
+    s.order.swap(i, j);
+    true
+}
+
+/// Apply one randomly-selected move (the `rand(0,1,2)` of Algorithm 1,
+/// line 20), retrying with the other moves if the chosen one is infeasible.
+/// Returns false only if no move is possible at all.
+pub fn random_move(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+    let first = rng.below(3);
+    for offset in 0..3 {
+        let moved = match (first + offset) % 3 {
+            0 => squeeze_prev(s, max_batch, rng),
+            1 => delay_next(s, max_batch, rng),
+            _ => rand_swap(s, rng),
+        };
+        if moved {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn sorted(v: &[usize]) -> Vec<usize> {
+        let mut s = v.to_vec();
+        s.sort_unstable();
+        s
+    }
+
+    #[test]
+    fn squeeze_moves_job_backward() {
+        let mut rng = Rng::new(0);
+        let mut s = Schedule { order: vec![0, 1, 2, 3], batches: vec![1, 1, 1, 1] };
+        assert!(squeeze_prev(&mut s, 2, &mut rng));
+        s.validate(2).unwrap();
+        assert_eq!(s.order.len(), 4);
+        assert_eq!(s.batches.iter().sum::<usize>(), 4);
+        assert_eq!(s.batches.len(), 3); // one batch merged away
+    }
+
+    #[test]
+    fn squeeze_respects_max_batch() {
+        let mut rng = Rng::new(1);
+        let mut s = Schedule { order: vec![0, 1, 2, 3], batches: vec![2, 2] };
+        assert!(!squeeze_prev(&mut s, 2, &mut rng)); // previous batch full
+        assert_eq!(s.batches, vec![2, 2]);
+    }
+
+    #[test]
+    fn squeeze_single_batch_impossible() {
+        let mut rng = Rng::new(2);
+        let mut s = Schedule { order: vec![0, 1], batches: vec![2] };
+        assert!(!squeeze_prev(&mut s, 4, &mut rng));
+    }
+
+    #[test]
+    fn delay_from_last_creates_new_batch() {
+        let mut rng = Rng::new(3);
+        let mut s = Schedule { order: vec![0, 1], batches: vec![2] };
+        assert!(delay_next(&mut s, 2, &mut rng));
+        s.validate(2).unwrap();
+        assert_eq!(s.batches, vec![1, 1]);
+    }
+
+    #[test]
+    fn delay_singleton_last_batch_refused() {
+        let mut rng = Rng::new(4);
+        let mut s = Schedule { order: vec![0], batches: vec![1] };
+        assert!(!delay_next(&mut s, 4, &mut rng));
+        // two batches, next full, last is singleton -> nothing eligible
+        let mut s =
+            Schedule { order: vec![0, 1], batches: vec![1, 1] };
+        assert!(!delay_next(&mut s, 1, &mut rng) || s.validate(1).is_ok());
+    }
+
+    #[test]
+    fn swap_preserves_multiset() {
+        let mut rng = Rng::new(5);
+        let mut s = Schedule { order: vec![3, 1, 4, 0, 2], batches: vec![5] };
+        let before = sorted(&s.order);
+        assert!(rand_swap(&mut s, &mut rng));
+        assert_eq!(sorted(&s.order), before);
+        assert_ne!(s.order, vec![3, 1, 4, 0, 2]); // a swap always changes order
+    }
+
+    #[test]
+    fn random_move_always_valid() {
+        check("random_move preserves schedule invariants", 300, |rng| {
+            let n = 1 + rng.below(12);
+            let max_batch = 1 + rng.below(4);
+            let mut s = Schedule::fcfs(n, max_batch);
+            for _ in 0..30 {
+                random_move(&mut s, max_batch, rng);
+                s.validate(max_batch).map_err(|e| {
+                    format!("n={n} max_batch={max_batch}: {e} ({s:?})")
+                })?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn moves_reach_different_batch_counts() {
+        // SA must be able to both split and merge batches.
+        let mut rng = Rng::new(7);
+        let mut min_batches = usize::MAX;
+        let mut max_batches = 0;
+        let mut s = Schedule::fcfs(6, 3);
+        for _ in 0..2000 {
+            random_move(&mut s, 3, &mut rng);
+            min_batches = min_batches.min(s.batches.len());
+            max_batches = max_batches.max(s.batches.len());
+        }
+        assert!(min_batches <= 2, "min {min_batches}");
+        assert!(max_batches >= 4, "max {max_batches}");
+    }
+}

@@ -1,0 +1,330 @@
+//! Request profiler (paper §4.2, §4.4, §5.1 "Workflows").
+//!
+//! Three responsibilities:
+//!
+//! 1. **Output-length modelling** — tracks actual output lengths per task
+//!    type and fits a running Gaussian (Welford's online algorithm); the
+//!    priority mapper samples predicted output lengths from it. Business
+//!    users may instead supply a fixed range/distribution per task type.
+//! 2. **Memory accounting** — maintains the memory-utility factor μ and the
+//!    per-token memory consumption σ of Eq. 20 (`token_num(m) = m·μ/σ`).
+//! 3. **Latency sample collection** — gathers (batch, length, latency)
+//!    observations feeding the predictor's least-squares fit.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::predictor::{LatencyPredictor, PhaseSample};
+use crate::coordinator::request::TaskType;
+use crate::util::rng::Rng;
+
+/// Running Gaussian over observed output lengths (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct OutputLenModel {
+    count: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl OutputLenModel {
+    pub fn observe(&mut self, len: usize) {
+        self.count += 1;
+        let x = len as f64;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.m2 / self.count as f64).sqrt()
+        }
+    }
+
+    /// Sample a predicted output length (≥1), clamped to `max_len`.
+    pub fn sample(&self, rng: &mut Rng, max_len: usize) -> usize {
+        if self.count == 0 {
+            // no data yet: fall back to a broad prior
+            return (max_len / 4).max(1);
+        }
+        let v = rng.gaussian(self.mean, self.std());
+        (v.round().max(1.0) as usize).min(max_len.max(1))
+    }
+}
+
+/// Optional business-supplied output spec (§4.2: "an optional input variable
+/// to allow business users to specify a typical output range or
+/// distribution for each task type").
+#[derive(Debug, Clone, Copy)]
+pub enum OutputSpec {
+    /// Fixed Gaussian (mean, std).
+    Gaussian { mean: f64, std: f64 },
+    /// Uniform range [lo, hi].
+    Range { lo: usize, hi: usize },
+}
+
+/// Memory model parameters of Eq. 20.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryModel {
+    /// μ — memory utility (< 1 due to fragmentation).
+    pub utility: f64,
+    /// σ — memory per token (MB/token).
+    pub mb_per_token: f64,
+}
+
+impl MemoryModel {
+    /// Eq. 20: number of tokens a given remaining memory can host.
+    pub fn token_capacity(&self, remaining_mb: f64) -> usize {
+        if remaining_mb <= 0.0 {
+            return 0;
+        }
+        (remaining_mb * self.utility / self.mb_per_token).floor() as usize
+    }
+
+    /// Inverse: memory footprint of a token count (MB).
+    pub fn tokens_to_mb(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.mb_per_token / self.utility
+    }
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        // vLLM-style defaults: 0.9 utilization (paper §5.1); per-token KV
+        // footprint of Qwen2.5-7B-class models ≈ 0.5 MB/token at FP16.
+        MemoryModel { utility: 0.9, mb_per_token: 0.5 }
+    }
+}
+
+/// The request profiler.
+#[derive(Debug, Clone, Default)]
+pub struct RequestProfiler {
+    output_models: BTreeMap<TaskType, OutputLenModel>,
+    output_specs: BTreeMap<TaskType, OutputSpec>,
+    prefill_samples: Vec<PhaseSample>,
+    decode_samples: Vec<PhaseSample>,
+    mem_ratio_sum: f64,
+    mem_ratio_count: usize,
+    mem_bytes_sum: f64,
+    mem_tokens_sum: f64,
+}
+
+impl RequestProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a business-supplied output spec for a task type.
+    pub fn set_output_spec(&mut self, task: TaskType, spec: OutputSpec) {
+        self.output_specs.insert(task, spec);
+    }
+
+    /// Record the actual output length of a completed request.
+    pub fn observe_output(&mut self, task: TaskType, len: usize) {
+        self.output_models.entry(task).or_default().observe(len);
+    }
+
+    pub fn output_model(&self, task: TaskType) -> Option<&OutputLenModel> {
+        self.output_models.get(&task)
+    }
+
+    /// Predict an output length for a new request of `task`.
+    ///
+    /// Priority: business spec > fitted Gaussian > broad prior.
+    pub fn predict_output(
+        &self,
+        task: TaskType,
+        rng: &mut Rng,
+        max_len: usize,
+    ) -> usize {
+        if let Some(spec) = self.output_specs.get(&task) {
+            let v = match *spec {
+                OutputSpec::Gaussian { mean, std } => {
+                    rng.gaussian(mean, std).round()
+                }
+                OutputSpec::Range { lo, hi } => {
+                    rng.range(lo as i64, hi.max(lo) as i64) as f64
+                }
+            };
+            return (v.max(1.0) as usize).min(max_len.max(1));
+        }
+        match self.output_models.get(&task) {
+            Some(m) => m.sample(rng, max_len),
+            None => (max_len / 4).max(1),
+        }
+    }
+
+    /// Record a prefill latency observation (profiling rounds, §5.1).
+    pub fn observe_prefill(&mut self, batch: usize, input_len: usize, ms: f64) {
+        self.prefill_samples.push(PhaseSample { batch, len: input_len, ms });
+    }
+
+    /// Record a per-token decode latency observation.
+    pub fn observe_decode(
+        &mut self,
+        batch: usize,
+        accumulated_len: usize,
+        ms_per_token: f64,
+    ) {
+        self.decode_samples.push(PhaseSample {
+            batch,
+            len: accumulated_len,
+            ms: ms_per_token,
+        });
+    }
+
+    pub fn sample_counts(&self) -> (usize, usize) {
+        (self.prefill_samples.len(), self.decode_samples.len())
+    }
+
+    /// Fit a latency predictor from the collected samples (§4.2).
+    /// Returns `(predictor, r²_prefill, r²_decode)`.
+    pub fn fit_predictor(&self) -> Option<(LatencyPredictor, f64, f64)> {
+        LatencyPredictor::fit(&self.prefill_samples, &self.decode_samples)
+    }
+
+    /// Record an observed (peak memory used / available) ratio — updates μ.
+    pub fn observe_memory_ratio(&mut self, used_over_available: f64) {
+        self.mem_ratio_sum += used_over_available.clamp(0.0, 1.0);
+        self.mem_ratio_count += 1;
+    }
+
+    /// Record aggregate memory consumption for a token count — updates σ.
+    pub fn observe_memory_per_token(&mut self, total_mb: f64, tokens: usize) {
+        self.mem_bytes_sum += total_mb;
+        self.mem_tokens_sum += tokens as f64;
+    }
+
+    /// Current memory model (falls back to defaults where unobserved).
+    pub fn memory_model(&self) -> MemoryModel {
+        let default = MemoryModel::default();
+        let utility = if self.mem_ratio_count > 0 {
+            self.mem_ratio_sum / self.mem_ratio_count as f64
+        } else {
+            default.utility
+        };
+        let mb_per_token = if self.mem_tokens_sum > 0.0 {
+            self.mem_bytes_sum / self.mem_tokens_sum
+        } else {
+            default.mb_per_token
+        };
+        MemoryModel { utility, mb_per_token }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch_stats() {
+        let mut m = OutputLenModel::default();
+        let data = [10usize, 20, 30, 40, 50];
+        for &d in &data {
+            m.observe(d);
+        }
+        assert_eq!(m.count(), 5);
+        assert!((m.mean() - 30.0).abs() < 1e-9);
+        let var: f64 = data
+            .iter()
+            .map(|&d| (d as f64 - 30.0).powi(2))
+            .sum::<f64>()
+            / 5.0;
+        assert!((m.std() - var.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_clamps_and_floors() {
+        let mut m = OutputLenModel::default();
+        m.observe(1);
+        m.observe(1);
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let s = m.sample(&mut rng, 5);
+            assert!((1..=5).contains(&s));
+        }
+    }
+
+    #[test]
+    fn sample_without_data_uses_prior() {
+        let m = OutputLenModel::default();
+        let mut rng = Rng::new(0);
+        assert_eq!(m.sample(&mut rng, 400), 100);
+    }
+
+    #[test]
+    fn gaussian_prediction_tracks_observations() {
+        let mut p = RequestProfiler::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let len = rng.gaussian(200.0, 20.0).max(1.0) as usize;
+            p.observe_output(TaskType::Chat, len);
+        }
+        let m = p.output_model(TaskType::Chat).unwrap();
+        assert!((m.mean() - 200.0).abs() < 3.0, "mean {}", m.mean());
+        assert!((m.std() - 20.0).abs() < 3.0, "std {}", m.std());
+        // sampled predictions should centre on the same mean
+        let samples: Vec<f64> = (0..2000)
+            .map(|_| p.predict_output(TaskType::Chat, &mut rng, 10_000) as f64)
+            .collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((mean - 200.0).abs() < 5.0, "sampled mean {mean}");
+    }
+
+    #[test]
+    fn business_spec_overrides_model() {
+        let mut p = RequestProfiler::new();
+        p.observe_output(TaskType::Code, 500);
+        p.set_output_spec(TaskType::Code, OutputSpec::Range { lo: 7, hi: 9 });
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let s = p.predict_output(TaskType::Code, &mut rng, 1000);
+            assert!((7..=9).contains(&s));
+        }
+    }
+
+    #[test]
+    fn token_capacity_eq20() {
+        let m = MemoryModel { utility: 0.9, mb_per_token: 0.5 };
+        // token_num = m·μ/σ = 1000·0.9/0.5 = 1800
+        assert_eq!(m.token_capacity(1000.0), 1800);
+        assert_eq!(m.token_capacity(0.0), 0);
+        assert_eq!(m.token_capacity(-5.0), 0);
+        // inverse within rounding
+        assert!((m.tokens_to_mb(1800) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_model_from_observations() {
+        let mut p = RequestProfiler::new();
+        p.observe_memory_ratio(0.8);
+        p.observe_memory_ratio(0.9);
+        p.observe_memory_per_token(500.0, 2000);
+        let m = p.memory_model();
+        assert!((m.utility - 0.85).abs() < 1e-9);
+        assert!((m.mb_per_token - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_predictor_via_profiler() {
+        let mut p = RequestProfiler::new();
+        let truth = LatencyPredictor::paper_table2();
+        for b in [1usize, 2, 4, 8] {
+            for l in [100usize, 500, 1000, 2000] {
+                p.observe_prefill(b, l, truth.prefill.eval(b as f64, l as f64));
+                p.observe_decode(b, l, truth.decode.eval(b as f64, l as f64));
+            }
+        }
+        let (fitted, r2p, r2d) = p.fit_predictor().unwrap();
+        assert!(r2p > 0.99 && r2d > 0.99);
+        assert!((fitted.prefill.alpha - truth.prefill.alpha).abs() < 1e-6);
+    }
+}

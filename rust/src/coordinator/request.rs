@@ -1,0 +1,231 @@
+//! Request model: task types, SLO specifications, lifecycle timestamps.
+//!
+//! Mirrors the paper's problem formulation (§3.1): every request carries a
+//! task type `h_i` (e2e-latency-oriented vs interactivity-oriented) and the
+//! corresponding SLO targets; attainment `x_i` is judged per Eq. 7.
+
+use crate::util::json::Json;
+
+/// Application task class. The paper's evaluation mixes two streaming
+/// service types (§3.1); `Custom` supports additional classes in configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TaskType {
+    /// Chatbot-style interaction (ShareGPT_Vicuna_unfiltered): judged on
+    /// TTFT + TPOT.
+    Chat,
+    /// Code generation (Python-Code-23k-ShareGPT): judged on e2e latency —
+    /// "a code is useful only when completed".
+    Code,
+    /// Config-defined class (id into the workload spec).
+    Custom(u8),
+}
+
+impl TaskType {
+    pub fn name(&self) -> String {
+        match self {
+            TaskType::Chat => "chat".into(),
+            TaskType::Code => "code".into(),
+            TaskType::Custom(i) => format!("custom{i}"),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<TaskType> {
+        match name {
+            "chat" => Some(TaskType::Chat),
+            "code" => Some(TaskType::Code),
+            other => other
+                .strip_prefix("custom")
+                .and_then(|i| i.parse().ok())
+                .map(TaskType::Custom),
+        }
+    }
+}
+
+/// Per-request service-level objective (all milliseconds).
+///
+/// `h_i = 1` (e2e-prioritizing) requests use [`Slo::E2e`]; `h_i = 0` use
+/// [`Slo::Interactive`] (Eq. 5/7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Slo {
+    /// End-to-end latency bound: `t_e2e <= e2e_ms`.
+    E2e { e2e_ms: f64 },
+    /// Interactivity bounds: `t_TTFT <= ttft_ms && t_TPOT <= tpot_ms`.
+    Interactive { ttft_ms: f64, tpot_ms: f64 },
+}
+
+impl Slo {
+    /// `h_i` indicator from Eq. 5.
+    pub fn prioritizes_e2e(&self) -> bool {
+        matches!(self, Slo::E2e { .. })
+    }
+
+    /// Eq. 7: does a measured (e2e, ttft, tpot) triple meet this SLO?
+    pub fn met(&self, e2e_ms: f64, ttft_ms: f64, tpot_ms: f64) -> bool {
+        match *self {
+            Slo::E2e { e2e_ms: bound } => e2e_ms <= bound,
+            Slo::Interactive { ttft_ms: tb, tpot_ms: pb } => {
+                ttft_ms <= tb && tpot_ms <= pb
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            Slo::E2e { e2e_ms } => Json::obj(vec![
+                ("kind", Json::str("e2e")),
+                ("e2e_ms", Json::num(e2e_ms)),
+            ]),
+            Slo::Interactive { ttft_ms, tpot_ms } => Json::obj(vec![
+                ("kind", Json::str("interactive")),
+                ("ttft_ms", Json::num(ttft_ms)),
+                ("tpot_ms", Json::num(tpot_ms)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<Slo> {
+        match v.get("kind").as_str()? {
+            "e2e" => Some(Slo::E2e { e2e_ms: v.get("e2e_ms").as_f64()? }),
+            "interactive" => Some(Slo::Interactive {
+                ttft_ms: v.get("ttft_ms").as_f64()?,
+                tpot_ms: v.get("tpot_ms").as_f64()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// An inference request as seen by the scheduler.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub task: TaskType,
+    /// Prompt length in tokens.
+    pub input_len: usize,
+    /// True output length (generation stops here or at EOS). The scheduler
+    /// must NOT read this — it is ground truth for the engine and for the
+    /// oracle output-length predictors in Fig. 9.
+    pub output_len: usize,
+    pub slo: Slo,
+    /// Arrival time on the coordinator clock (ms).
+    pub arrival_ms: f64,
+    /// Raw prompt bytes for the real engine (None ⇒ synthetic length-only).
+    pub prompt: Option<Vec<u8>>,
+}
+
+impl Request {
+    pub fn synthetic(
+        id: u64,
+        task: TaskType,
+        input_len: usize,
+        output_len: usize,
+        slo: Slo,
+    ) -> Request {
+        Request {
+            id,
+            task,
+            input_len,
+            output_len,
+            slo,
+            arrival_ms: 0.0,
+            prompt: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("task", Json::str(self.task.name())),
+            ("input_len", Json::num(self.input_len as f64)),
+            ("output_len", Json::num(self.output_len as f64)),
+            ("slo", self.slo.to_json()),
+            ("arrival_ms", Json::num(self.arrival_ms)),
+        ])
+    }
+}
+
+/// Completion record produced by an engine for a finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub task: TaskType,
+    pub slo: Slo,
+    pub input_len: usize,
+    /// Tokens actually generated.
+    pub generated: usize,
+    /// Wall/virtual-clock timings (ms).
+    pub e2e_ms: f64,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub wait_ms: f64,
+    /// Engine batch size this request was prefilled at (diagnostics).
+    pub batch_size: usize,
+    /// Generated text for real-engine runs.
+    pub text: Option<Vec<u8>>,
+}
+
+impl Completion {
+    /// Eq. 7 attainment flag.
+    pub fn slo_met(&self) -> bool {
+        self.slo.met(self.e2e_ms, self.ttft_ms, self.tpot_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_e2e_judgement() {
+        let slo = Slo::E2e { e2e_ms: 100.0 };
+        assert!(slo.met(100.0, 999.0, 999.0)); // boundary inclusive
+        assert!(!slo.met(100.1, 0.0, 0.0));
+        assert!(slo.prioritizes_e2e());
+    }
+
+    #[test]
+    fn slo_interactive_judgement() {
+        let slo = Slo::Interactive { ttft_ms: 10.0, tpot_ms: 1.0 };
+        assert!(slo.met(1e9, 10.0, 1.0)); // e2e irrelevant
+        assert!(!slo.met(0.0, 10.1, 1.0));
+        assert!(!slo.met(0.0, 10.0, 1.1));
+        assert!(!slo.prioritizes_e2e());
+    }
+
+    #[test]
+    fn slo_json_roundtrip() {
+        for slo in [
+            Slo::E2e { e2e_ms: 30_000.0 },
+            Slo::Interactive { ttft_ms: 10_000.0, tpot_ms: 50.0 },
+        ] {
+            assert_eq!(Slo::from_json(&slo.to_json()), Some(slo));
+        }
+        assert_eq!(Slo::from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn task_type_names_roundtrip() {
+        for t in [TaskType::Chat, TaskType::Code, TaskType::Custom(3)] {
+            assert_eq!(TaskType::from_name(&t.name()), Some(t));
+        }
+        assert_eq!(TaskType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn completion_attainment() {
+        let c = Completion {
+            id: 1,
+            task: TaskType::Code,
+            slo: Slo::E2e { e2e_ms: 50.0 },
+            input_len: 10,
+            generated: 5,
+            e2e_ms: 49.0,
+            ttft_ms: 1.0,
+            tpot_ms: 1.0,
+            wait_ms: 0.0,
+            batch_size: 1,
+            text: None,
+        };
+        assert!(c.slo_met());
+    }
+}

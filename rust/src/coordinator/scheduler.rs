@@ -1,0 +1,277 @@
+//! Multi-instance SLO-aware scheduling (paper §4.4, Algorithm 2).
+//!
+//! The scheduling solution decomposes into **instance assignment** followed
+//! by **per-instance priority mapping** (run independently — parallelizable
+//! across instances):
+//!
+//! 1. predict request latencies;
+//! 2. assign requests round-robin to the instance with the largest
+//!    remaining memory (token capacity via Eq. 20); when the largest
+//!    remaining memory cannot host the next request, remaining memories are
+//!    reset — a new "iteration" of assignments begins;
+//! 3. run Algorithm 1 inside each instance;
+//! 4. enqueue each instance's priority sequence for execution.
+
+use crate::coordinator::objective::{Evaluator, Job, Schedule};
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::priority::annealing::{
+    priority_mapping, SaParams, SearchStats,
+};
+use crate::coordinator::profiler::MemoryModel;
+use crate::coordinator::request::Request;
+
+/// Static description of one LLM inference instance.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceInfo {
+    pub id: usize,
+    /// KV-cache memory pool size (MB).
+    pub mem_mb: f64,
+}
+
+/// Per-instance execution plan produced by the scheduler.
+#[derive(Debug, Clone)]
+pub struct InstancePlan {
+    pub instance: usize,
+    /// Scheduler's job views (with predicted output lengths); `req_idx`
+    /// points into the request slice given to [`schedule`].
+    pub jobs: Vec<Job>,
+    /// Priority sequence + batch partition over `jobs` (local indices).
+    pub schedule: Schedule,
+    pub stats: SearchStats,
+}
+
+impl InstancePlan {
+    /// Request indices in execution order.
+    pub fn request_order(&self) -> Vec<usize> {
+        self.schedule.order.iter().map(|&j| self.jobs[j].req_idx).collect()
+    }
+}
+
+/// Result of Algorithm 2 over one wave of requests.
+#[derive(Debug, Clone)]
+pub struct ScheduleOutcome {
+    pub plans: Vec<InstancePlan>,
+    /// Total scheduling overhead (ms) — Fig. 11(B). Per the paper's setup,
+    /// instances are mapped sequentially on one server, so this is the sum
+    /// of per-instance mapping times plus assignment time.
+    pub overhead_ms: f64,
+}
+
+/// Instance assignment (Algorithm 2 line 4, "Instance Assignment" ¶).
+///
+/// Requests are considered in arrival order; each goes to the instance with
+/// the largest remaining memory. A request's footprint is its total token
+/// count (input + predicted output) converted through Eq. 20. If even the
+/// largest-remaining instance lacks room, all remaining memories reset
+/// (a maximum-capacity wave has been packed) and assignment continues.
+pub fn assign_instances(
+    requests: &[Request],
+    predicted_out: &[usize],
+    instances: &[InstanceInfo],
+    mem: &MemoryModel,
+) -> Vec<Vec<usize>> {
+    assert_eq!(requests.len(), predicted_out.len());
+    assert!(!instances.is_empty());
+    let mut remaining: Vec<f64> = instances.iter().map(|i| i.mem_mb).collect();
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); instances.len()];
+
+    for (ri, req) in requests.iter().enumerate() {
+        let tokens = req.input_len + predicted_out[ri];
+        let need_mb = mem.tokens_to_mb(tokens);
+        // pick instance with the largest remaining memory
+        let (best, _) = remaining
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if remaining[best] < need_mb {
+            // reset: a full wave has been packed (§4.4)
+            for (slot, inst) in remaining.iter_mut().zip(instances) {
+                *slot = inst.mem_mb;
+            }
+        }
+        let (best, _) = remaining
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        remaining[best] -= need_mb;
+        out[best].push(ri);
+    }
+    out
+}
+
+/// Algorithm 2: full SLO-aware scheduling across instances.
+///
+/// `predicted_out[i]` is the predicted output length for `requests[i]`
+/// (from the profiler or an oracle — the Fig. 9 knob).
+pub fn schedule(
+    requests: &[Request],
+    predicted_out: &[usize],
+    instances: &[InstanceInfo],
+    predictor: &LatencyPredictor,
+    mem: &MemoryModel,
+    sa: &SaParams,
+) -> ScheduleOutcome {
+    let t0 = crate::util::now_ms();
+    let assignment = assign_instances(requests, predicted_out, instances, mem);
+    let mut plans = Vec::with_capacity(instances.len());
+    for (inst, req_indices) in assignment.into_iter().enumerate() {
+        let jobs: Vec<Job> = req_indices
+            .iter()
+            .map(|&ri| {
+                Job::from_request(ri, &requests[ri], predicted_out[ri])
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, predictor);
+        // derive a per-instance seed so instances explore independently
+        let params = SaParams {
+            seed: sa.seed.wrapping_add(inst as u64).wrapping_mul(0x9E3779B9),
+            ..*sa
+        };
+        let result = priority_mapping(&ev, &params);
+        plans.push(InstancePlan {
+            instance: inst,
+            jobs,
+            schedule: result.schedule,
+            stats: result.stats,
+        });
+    }
+    ScheduleOutcome { plans, overhead_ms: crate::util::now_ms() - t0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Slo, TaskType};
+    use crate::util::prop::check;
+
+    fn req(id: u64, input: usize, output: usize) -> Request {
+        Request::synthetic(
+            id,
+            TaskType::Code,
+            input,
+            output,
+            Slo::E2e { e2e_ms: 30_000.0 },
+        )
+    }
+
+    fn instances(n: usize, mem_mb: f64) -> Vec<InstanceInfo> {
+        (0..n).map(|id| InstanceInfo { id, mem_mb }).collect()
+    }
+
+    #[test]
+    fn assignment_balances_memory() {
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        let reqs: Vec<Request> =
+            (0..6).map(|i| req(i, 100, 0)).collect();
+        let outs = vec![0usize; 6];
+        let asg = assign_instances(&reqs, &outs, &instances(2, 10_000.0), &mem);
+        // equal-size requests alternate between equal instances
+        assert_eq!(asg[0].len(), 3);
+        assert_eq!(asg[1].len(), 3);
+    }
+
+    #[test]
+    fn assignment_prefers_larger_memory() {
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, 10, 0)).collect();
+        let outs = vec![0usize; 4];
+        let inst = vec![
+            InstanceInfo { id: 0, mem_mb: 100.0 },
+            InstanceInfo { id: 1, mem_mb: 10_000.0 },
+        ];
+        let asg = assign_instances(&reqs, &outs, &inst, &mem);
+        // the big instance keeps winning until its remaining dips below
+        assert!(asg[1].len() >= 3, "{asg:?}");
+    }
+
+    #[test]
+    fn assignment_resets_when_full() {
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        // each request needs 80 MB; instance holds 100 MB -> resets every req
+        let reqs: Vec<Request> = (0..5).map(|i| req(i, 80, 0)).collect();
+        let outs = vec![0usize; 5];
+        let asg = assign_instances(&reqs, &outs, &instances(1, 100.0), &mem);
+        assert_eq!(asg[0].len(), 5); // all still assigned (across waves)
+    }
+
+    #[test]
+    fn assignment_covers_all_requests() {
+        check("assignment partitions requests", 100, |rng| {
+            let n_req = 1 + rng.below(40);
+            let n_inst = 1 + rng.below(4);
+            let reqs: Vec<Request> = (0..n_req)
+                .map(|i| {
+                    req(i as u64, 1 + rng.below(2000), rng.below(500))
+                })
+                .collect();
+            let outs: Vec<usize> =
+                reqs.iter().map(|r| r.output_len).collect();
+            let mem = MemoryModel::default();
+            let asg = assign_instances(
+                &reqs,
+                &outs,
+                &instances(n_inst, 16_000.0),
+                &mem,
+            );
+            let mut seen = vec![false; n_req];
+            for list in &asg {
+                for &ri in list {
+                    if seen[ri] {
+                        return Err(format!("request {ri} assigned twice"));
+                    }
+                    seen[ri] = true;
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("request dropped".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedule_produces_valid_plans() {
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| req(i, 100 + 50 * i as usize, 20 + 10 * i as usize))
+            .collect();
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let predictor = LatencyPredictor::paper_table2();
+        let mem = MemoryModel::default();
+        let sa = SaParams::with_max_batch(4);
+        let outcome = schedule(
+            &reqs,
+            &outs,
+            &instances(3, 16_000.0),
+            &predictor,
+            &mem,
+            &sa,
+        );
+        assert_eq!(outcome.plans.len(), 3);
+        let mut all: Vec<usize> = Vec::new();
+        for plan in &outcome.plans {
+            plan.schedule.validate(4).unwrap();
+            assert_eq!(plan.schedule.len(), plan.jobs.len());
+            all.extend(plan.request_order());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+        assert!(outcome.overhead_ms >= 0.0);
+    }
+
+    #[test]
+    fn single_instance_gets_everything() {
+        let reqs: Vec<Request> = (0..5).map(|i| req(i, 100, 10)).collect();
+        let outs = vec![10usize; 5];
+        let outcome = schedule(
+            &reqs,
+            &outs,
+            &instances(1, 16_000.0),
+            &LatencyPredictor::paper_table2(),
+            &MemoryModel::default(),
+            &SaParams::with_max_batch(2),
+        );
+        assert_eq!(outcome.plans[0].jobs.len(), 5);
+    }
+}

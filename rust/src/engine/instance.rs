@@ -1,0 +1,153 @@
+//! Instance workers: one OS thread per LLM inference instance.
+//!
+//! tokio is unavailable offline (DESIGN.md §2); the concurrency model is a
+//! worker thread per instance with an mpsc command channel — the same
+//! leader/worker topology a tokio runtime would express, with the leader
+//! (coordinator / server) dispatching planned batches and collecting
+//! results.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{Engine, EngineRequest, ItemResult};
+
+enum Cmd {
+    RunBatch(Vec<EngineRequest>, Sender<Result<Vec<ItemResult>>>),
+    Clock(Sender<f64>),
+    Shutdown,
+}
+
+/// Handle to a running instance worker.
+pub struct InstanceHandle {
+    pub id: usize,
+    tx: Sender<Cmd>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl InstanceHandle {
+    /// Spawn a worker owning `engine`.
+    pub fn spawn(id: usize, mut engine: Box<dyn Engine + Send>) -> Self {
+        let (tx, rx): (Sender<Cmd>, Receiver<Cmd>) = channel();
+        let join = std::thread::Builder::new()
+            .name(format!("instance-{id}"))
+            .spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::RunBatch(batch, reply) => {
+                            let _ = reply.send(engine.run_batch(&batch));
+                        }
+                        Cmd::Clock(reply) => {
+                            let _ = reply.send(engine.now_ms());
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn instance worker");
+        InstanceHandle { id, tx, join: Some(join) }
+    }
+
+    /// Submit a batch; returns a receiver for the result (non-blocking
+    /// dispatch — await with [`BatchTicket::wait`]).
+    pub fn submit(&self, batch: Vec<EngineRequest>) -> BatchTicket {
+        let (reply_tx, reply_rx) = channel();
+        let _ = self.tx.send(Cmd::RunBatch(batch, reply_tx));
+        BatchTicket { rx: reply_rx }
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn run_batch(
+        &self,
+        batch: Vec<EngineRequest>,
+    ) -> Result<Vec<ItemResult>> {
+        self.submit(batch).wait()
+    }
+
+    /// Engine clock (ms).
+    pub fn now_ms(&self) -> Result<f64> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Clock(tx))
+            .map_err(|_| anyhow!("instance worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("instance worker gone"))
+    }
+}
+
+impl Drop for InstanceHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Pending batch execution.
+pub struct BatchTicket {
+    rx: Receiver<Result<Vec<ItemResult>>>,
+}
+
+impl BatchTicket {
+    pub fn wait(self) -> Result<Vec<ItemResult>> {
+        self.rx.recv().map_err(|_| anyhow!("instance worker dropped"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profiles::by_name;
+    use crate::engine::sim::SimEngine;
+
+    fn sim_instance(id: usize) -> InstanceHandle {
+        let engine = SimEngine::new(
+            by_name("qwen7b-v100x2-vllm").unwrap(),
+            4,
+            id as u64,
+        );
+        InstanceHandle::spawn(id, Box::new(engine))
+    }
+
+    fn req(id: u64) -> EngineRequest {
+        EngineRequest { id, input_len: 100, max_new_tokens: 5, prompt: None }
+    }
+
+    #[test]
+    fn run_batch_roundtrip() {
+        let inst = sim_instance(0);
+        let out = inst.run_batch(vec![req(1), req(2)]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(inst.now_ms().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn concurrent_instances_progress_independently() {
+        let a = sim_instance(0);
+        let b = sim_instance(1);
+        let ta = a.submit(vec![req(1)]);
+        let tb = b.submit(vec![req(2)]);
+        assert!(ta.wait().is_ok());
+        assert!(tb.wait().is_ok());
+    }
+
+    #[test]
+    fn error_propagates() {
+        let inst = sim_instance(0);
+        // batch too large for max_batch=4
+        let batch: Vec<EngineRequest> = (0..9).map(req).collect();
+        assert!(inst.run_batch(batch).is_err());
+    }
+
+    #[test]
+    fn queued_batches_execute_in_order() {
+        let inst = sim_instance(0);
+        let t1 = inst.submit(vec![req(1)]);
+        let t2 = inst.submit(vec![req(2)]);
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        // second batch starts after the first finishes (same engine clock)
+        assert!(r2[0].start_ms >= r1[0].finish_ms);
+    }
+}

@@ -1,0 +1,295 @@
+//! Paged KV-cache block allocator (PagedAttention-style substrate).
+//!
+//! vLLM's core memory trick — carving KV memory into fixed-size token
+//! blocks so sequences grow without contiguous reservations — is the
+//! substrate both engines use for admission control and memory metrics.
+//! The allocator tracks per-sequence block lists, exposes utilization and
+//! internal fragmentation, and refuses allocations beyond capacity (the
+//! signal the continuous-batching loop uses for admission).
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("out of KV memory: need {need_blocks} blocks, {free_blocks} free")]
+    OutOfMemory { need_blocks: usize, free_blocks: usize },
+    #[error("sequence {0} already allocated")]
+    AlreadyAllocated(u64),
+    #[error("sequence {0} not found")]
+    NotFound(u64),
+}
+
+/// Allocator configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheConfig {
+    /// Tokens per block (vLLM default 16).
+    pub block_tokens: usize,
+    /// Total number of blocks in the pool.
+    pub total_blocks: usize,
+}
+
+impl KvCacheConfig {
+    /// Derive a pool from a memory budget and per-token cost.
+    pub fn from_memory(pool_mb: f64, mb_per_token: f64, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        let tokens = (pool_mb / mb_per_token).max(0.0) as usize;
+        KvCacheConfig { block_tokens, total_blocks: tokens / block_tokens }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.block_tokens * self.total_blocks
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    blocks: Vec<u32>,
+    tokens: usize,
+}
+
+/// Block allocator with per-sequence accounting.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    cfg: KvCacheConfig,
+    free: Vec<u32>,
+    seqs: HashMap<u64, SeqAlloc>,
+}
+
+impl BlockAllocator {
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        BlockAllocator {
+            cfg,
+            free: (0..cfg.total_blocks as u32).rev().collect(),
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> KvCacheConfig {
+        self.cfg
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_tokens)
+    }
+
+    /// Allocate a new sequence holding `tokens` tokens.
+    pub fn alloc_seq(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        if self.seqs.contains_key(&seq) {
+            return Err(KvError::AlreadyAllocated(seq));
+        }
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free.len() {
+            return Err(KvError::OutOfMemory {
+                need_blocks: need,
+                free_blocks: self.free.len(),
+            });
+        }
+        let blocks = self.free.split_off(self.free.len() - need);
+        self.seqs.insert(seq, SeqAlloc { blocks, tokens });
+        Ok(())
+    }
+
+    /// Grow a sequence by `extra` tokens (decode steps appending KV).
+    pub fn extend_seq(&mut self, seq: u64, extra: usize) -> Result<(), KvError> {
+        let alloc = self.seqs.get_mut(&seq).ok_or(KvError::NotFound(seq))?;
+        let new_tokens = alloc.tokens + extra;
+        let need_total = new_tokens.div_ceil(self.cfg.block_tokens);
+        let extra_blocks = need_total.saturating_sub(alloc.blocks.len());
+        if extra_blocks > self.free.len() {
+            return Err(KvError::OutOfMemory {
+                need_blocks: extra_blocks,
+                free_blocks: self.free.len(),
+            });
+        }
+        let mut newly = self.free.split_off(self.free.len() - extra_blocks);
+        alloc.blocks.append(&mut newly);
+        alloc.tokens = new_tokens;
+        Ok(())
+    }
+
+    /// Release a sequence's blocks.
+    pub fn free_seq(&mut self, seq: u64) -> Result<(), KvError> {
+        let alloc = self.seqs.remove(&seq).ok_or(KvError::NotFound(seq))?;
+        self.free.extend(alloc.blocks);
+        Ok(())
+    }
+
+    /// Would `tokens` more tokens (as a fresh sequence) fit right now?
+    pub fn fits(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens.max(1)) <= self.free.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.total_blocks - self.free.len()
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn seq_tokens(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|a| a.tokens)
+    }
+
+    /// Fraction of the pool allocated.
+    pub fn utilization(&self) -> f64 {
+        if self.cfg.total_blocks == 0 {
+            return 0.0;
+        }
+        self.used_blocks() as f64 / self.cfg.total_blocks as f64
+    }
+
+    /// Internal fragmentation: allocated token slots never usable by other
+    /// sequences (block granularity waste), as a fraction of allocated slots.
+    pub fn internal_fragmentation(&self) -> f64 {
+        let allocated_slots: usize = self
+            .seqs
+            .values()
+            .map(|a| a.blocks.len() * self.cfg.block_tokens)
+            .sum();
+        if allocated_slots == 0 {
+            return 0.0;
+        }
+        let used_tokens: usize = self.seqs.values().map(|a| a.tokens).sum();
+        (allocated_slots - used_tokens) as f64 / allocated_slots as f64
+    }
+
+    /// Release everything (engine reset between experiment waves).
+    pub fn reset(&mut self) {
+        self.free = (0..self.cfg.total_blocks as u32).rev().collect();
+        self.seqs.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn alloc(blocks: usize) -> BlockAllocator {
+        BlockAllocator::new(KvCacheConfig {
+            block_tokens: 16,
+            total_blocks: blocks,
+        })
+    }
+
+    #[test]
+    fn from_memory_derivation() {
+        // 100 MB at 0.5 MB/token = 200 tokens = 12 blocks of 16 (192 tokens)
+        let cfg = KvCacheConfig::from_memory(100.0, 0.5, 16);
+        assert_eq!(cfg.total_blocks, 12);
+        assert_eq!(cfg.total_tokens(), 192);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = alloc(10);
+        a.alloc_seq(1, 33).unwrap(); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        assert_eq!(a.seq_tokens(1), Some(33));
+        a.free_seq(1).unwrap();
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(a.free_blocks(), 10);
+    }
+
+    #[test]
+    fn rejects_double_alloc_and_missing_free() {
+        let mut a = alloc(10);
+        a.alloc_seq(1, 5).unwrap();
+        assert_eq!(a.alloc_seq(1, 5), Err(KvError::AlreadyAllocated(1)));
+        assert_eq!(a.free_seq(2), Err(KvError::NotFound(2)));
+        assert_eq!(a.extend_seq(2, 1), Err(KvError::NotFound(2)));
+    }
+
+    #[test]
+    fn out_of_memory() {
+        let mut a = alloc(2);
+        assert!(matches!(
+            a.alloc_seq(1, 100),
+            Err(KvError::OutOfMemory { .. })
+        ));
+        a.alloc_seq(2, 32).unwrap(); // exactly 2 blocks
+        assert!(!a.fits(1));
+    }
+
+    #[test]
+    fn extend_grows_blocks_lazily() {
+        let mut a = alloc(4);
+        a.alloc_seq(1, 10).unwrap(); // 1 block, 6 slack
+        a.extend_seq(1, 6).unwrap(); // exactly fills the block
+        assert_eq!(a.used_blocks(), 1);
+        a.extend_seq(1, 1).unwrap(); // spills into a second block
+        assert_eq!(a.used_blocks(), 2);
+        assert_eq!(a.seq_tokens(1), Some(17));
+    }
+
+    #[test]
+    fn fragmentation_accounting() {
+        let mut a = alloc(10);
+        a.alloc_seq(1, 1).unwrap(); // 1 token in a 16-slot block
+        assert!((a.internal_fragmentation() - 15.0 / 16.0).abs() < 1e-9);
+        a.extend_seq(1, 15).unwrap();
+        assert_eq!(a.internal_fragmentation(), 0.0);
+        assert_eq!(alloc(5).internal_fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn zero_token_alloc_takes_one_block() {
+        let mut a = alloc(2);
+        a.alloc_seq(1, 0).unwrap();
+        assert_eq!(a.used_blocks(), 1);
+    }
+
+    #[test]
+    fn conservation_property() {
+        check("block conservation under random ops", 200, |rng: &mut Rng| {
+            let total = 1 + rng.below(64);
+            let mut a = alloc(total);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..100 {
+                match rng.below(3) {
+                    0 => {
+                        let tokens = rng.below(200);
+                        if a.alloc_seq(next_id, tokens).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let idx = rng.below(live.len());
+                        let _ = a.extend_seq(live[idx], rng.below(40));
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = rng.below(live.len());
+                        let id = live.swap_remove(idx);
+                        a.free_seq(id).unwrap();
+                    }
+                    _ => {}
+                }
+                let used: usize = a.used_blocks();
+                if used + a.free_blocks() != total {
+                    return Err(format!(
+                        "leak: used {used} + free {} != {total}",
+                        a.free_blocks()
+                    ));
+                }
+            }
+            // free everything and verify full recovery
+            for id in live {
+                a.free_seq(id).unwrap();
+            }
+            if a.free_blocks() != total {
+                return Err("blocks not fully recovered".into());
+            }
+            Ok(())
+        });
+    }
+}

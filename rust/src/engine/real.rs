@@ -1,0 +1,248 @@
+//! Real engine: TinyLM on the PJRT CPU client (the end-to-end truth path).
+//!
+//! Wraps [`crate::runtime::ModelRuntime`] in the [`Engine`] interface:
+//! prompts → byte tokens → bucketed prefill → per-step decode with the KV
+//! cache round-tripping as literals → sampled tokens → bytes. All timing is
+//! wall clock. Used by the examples and integration tests to prove the full
+//! three-layer stack composes; paper-scale benchmarks use the simulated
+//! engine (DESIGN.md §2).
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::kv_cache::{BlockAllocator, KvCacheConfig};
+use crate::engine::sampling::Sampler;
+use crate::engine::tokenizer::ByteTokenizer;
+use crate::engine::{validate_batch, Engine, EngineRequest, ItemResult};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// PJRT-backed engine over AOT artifacts.
+pub struct RealEngine {
+    rt: ModelRuntime,
+    tokenizer: ByteTokenizer,
+    sampler: Sampler,
+    rng: Rng,
+    kv: BlockAllocator,
+    epoch_ms: f64,
+    /// Prefill + decode batch cap (min over bucket grids).
+    max_batch: usize,
+    /// Decode iterations executed (diagnostics / perf accounting).
+    pub decode_steps: usize,
+    /// Total wall ms inside PJRT execute calls (perf accounting).
+    pub execute_ms: f64,
+}
+
+// SAFETY: the `xla` crate's handles (PjRtClient is an `Rc` over the C
+// client; literals/executables are raw pointers) are not `Send` because
+// `Rc` clones could be split across threads. RealEngine owns *every* clone
+// (client, executables, weight literals) inside one struct and the engine
+// is only ever moved wholesale onto a single instance worker thread
+// (engine/instance.rs); no handle is shared across threads concurrently.
+unsafe impl Send for RealEngine {}
+
+impl RealEngine {
+    /// Load artifacts from a directory (`make artifacts` output).
+    pub fn load(dir: &str) -> Result<RealEngine> {
+        let rt = ModelRuntime::load(dir)?;
+        let spec = rt.spec().clone();
+        let max_batch = rt
+            .manifest
+            .max_prefill_batch()
+            .min(rt.manifest.decode_buckets.iter().map(|(b, _)| *b).max().unwrap_or(1));
+        // KV accounting: f32 K+V per token = 2 · L · H · Dh · 4 bytes.
+        let mb_per_token = (2 * spec.n_layers * spec.n_heads * spec.head_dim * 4)
+            as f64
+            / 1e6;
+        let pool_mb =
+            mb_per_token * (spec.max_seq * max_batch * 4) as f64; // 4 waves
+        let kv = BlockAllocator::new(KvCacheConfig::from_memory(
+            pool_mb,
+            mb_per_token,
+            16,
+        ));
+        Ok(RealEngine {
+            rt,
+            tokenizer: ByteTokenizer::new(spec.bos, spec.eos),
+            sampler: Sampler::Greedy,
+            rng: Rng::new(0xEA1),
+            kv,
+            epoch_ms: crate::util::now_ms(),
+            max_batch,
+            decode_steps: 0,
+            execute_ms: 0.0,
+        })
+    }
+
+    pub fn set_sampler(&mut self, sampler: Sampler) {
+        self.sampler = sampler;
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ModelSpec {
+        self.rt.spec()
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut ModelRuntime {
+        &mut self.rt
+    }
+
+    /// Eagerly compile the executables for a batch size (avoids paying
+    /// compile time inside the first measured request).
+    pub fn warmup(&mut self, batch: usize) -> Result<()> {
+        let seqs: Vec<usize> = self
+            .rt
+            .manifest
+            .prefill_buckets
+            .iter()
+            .filter(|(b, _)| b.batch >= batch)
+            .map(|(b, _)| b.seq)
+            .collect();
+        for s in seqs {
+            if let Some(bucket) = self.rt.manifest.pick_prefill(batch, s) {
+                self.rt.ensure_prefill(bucket)?;
+            }
+        }
+        if let Some(db) = self.rt.manifest.pick_decode(batch) {
+            self.rt.ensure_decode(db)?;
+        }
+        Ok(())
+    }
+
+    fn rows_for(&mut self, batch: &[EngineRequest]) -> Vec<Vec<i32>> {
+        batch
+            .iter()
+            .map(|r| match &r.prompt {
+                Some(p) => self.tokenizer.encode(p),
+                None => {
+                    let synth = self
+                        .tokenizer
+                        .synthetic_prompt(r.id, r.input_len.max(1));
+                    self.tokenizer.encode(&synth)
+                }
+            })
+            .collect()
+    }
+}
+
+impl Engine for RealEngine {
+    fn name(&self) -> String {
+        "real:tinylm-pjrt-cpu".into()
+    }
+
+    fn now_ms(&self) -> f64 {
+        crate::util::now_ms() - self.epoch_ms
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn max_total_tokens(&self) -> usize {
+        // one slot is reserved: the last generated token occupies pos
+        // max_seq-1 at most
+        self.rt.spec().max_seq - 1
+    }
+
+    fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
+        validate_batch(self, batch)?;
+        let rows = self.rows_for(batch);
+        let b = batch.len();
+        for (r, row) in batch.iter().zip(&rows) {
+            self.kv.alloc_seq(r.id, row.len() + r.max_new_tokens)?;
+        }
+        let start_ms = self.now_ms();
+
+        // ---- prefill
+        let t0 = crate::util::now_ms();
+        let prefill = self.rt.prefill(&rows)?;
+        self.execute_ms += crate::util::now_ms() - t0;
+        let first_token_ms = self.now_ms();
+
+        // sample the first generated token per row
+        let mut tokens_out: Vec<Vec<i32>> = Vec::with_capacity(b);
+        for logits in &prefill.last_logits {
+            tokens_out.push(vec![self.sampler.sample(logits, &mut self.rng)]);
+        }
+
+        // ---- decode loop at the decode bucket size
+        let db = self
+            .rt
+            .manifest
+            .pick_decode(b)
+            .ok_or_else(|| anyhow!("no decode bucket for batch {b}"))?;
+        let mut k = self.rt.pad_cache_batch(
+            &prefill.k_caches,
+            prefill.bucket.batch,
+            db,
+        )?;
+        let mut v = self.rt.pad_cache_batch(
+            &prefill.v_caches,
+            prefill.bucket.batch,
+            db,
+        )?;
+
+        let eos = self.rt.spec().eos;
+        let mut done: Vec<bool> = batch
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.max_new_tokens <= 1 || tokens_out[i][0] == eos
+            })
+            .collect();
+        let mut finish = vec![first_token_ms; b];
+        let mut generated: Vec<usize> = vec![1; b];
+
+        while done.iter().any(|d| !d) {
+            let mut feed = vec![0i32; db];
+            let mut pos = vec![0i32; db];
+            for i in 0..b {
+                // feed every live row its latest token at its current slot;
+                // finished rows re-feed their last token at the same pos
+                // (harmless rewrite of an already-final cache slot)
+                let cur_len = rows[i].len() + generated[i] - 1;
+                feed[i] = *tokens_out[i].last().unwrap();
+                pos[i] = cur_len as i32;
+            }
+            let t0 = crate::util::now_ms();
+            let step = self.rt.decode_step(db, &k, &v, &feed, &pos)?;
+            self.execute_ms += crate::util::now_ms() - t0;
+            self.decode_steps += 1;
+            k = step.k_caches;
+            v = step.v_caches;
+            let now = self.now_ms();
+            for i in 0..b {
+                if done[i] {
+                    continue;
+                }
+                let tok = self.sampler.sample(&step.logits[i], &mut self.rng);
+                tokens_out[i].push(tok);
+                generated[i] += 1;
+                finish[i] = now;
+                if tok == eos || generated[i] >= batch[i].max_new_tokens {
+                    done[i] = true;
+                }
+            }
+        }
+
+        let results = batch
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ItemResult {
+                id: r.id,
+                start_ms,
+                first_token_ms,
+                finish_ms: finish[i],
+                generated: generated[i],
+                batch_size: b,
+                text: Some(self.tokenizer.decode(&tokens_out[i])),
+            })
+            .collect();
+        for r in batch {
+            self.kv.free_seq(r.id)?;
+        }
+        Ok(results)
+    }
+
+    fn advance_to(&mut self, _target_ms: f64) {
+        // wall clock advances on its own
+    }
+}

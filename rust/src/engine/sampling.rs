@@ -1,0 +1,117 @@
+//! Token sampling strategies for the real engine.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampler {
+    /// Deterministic argmax.
+    Greedy,
+    /// Top-k sampling with temperature.
+    TopK { k: usize, temperature: f64 },
+}
+
+impl Sampler {
+    /// Pick the next token id from a logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { k, temperature } => {
+                top_k_sample(logits, k.max(1), temperature.max(1e-6), rng)
+            }
+        }
+    }
+}
+
+/// Index of the maximum logit (first on ties).
+pub fn argmax(logits: &[f32]) -> i32 {
+    assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_v = logits[0];
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as i32
+}
+
+/// Softmax-normalized top-k sampling with temperature.
+pub fn top_k_sample(
+    logits: &[f32],
+    k: usize,
+    temperature: f64,
+    rng: &mut Rng,
+) -> i32 {
+    assert!(!logits.is_empty());
+    let k = k.min(logits.len());
+    // indices of the k largest logits
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    let max_logit = logits[idx[0]] as f64;
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max_logit) / temperature).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut target = rng.f64() * total;
+    for (w, &i) in weights.iter().zip(&idx) {
+        target -= w;
+        if target <= 0.0 {
+            return i as i32;
+        }
+    }
+    idx[k - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0); // first wins ties
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn greedy_sampler_matches_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0f32, 9.0, 3.0];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_only_picks_top_k() {
+        let mut rng = Rng::new(1);
+        let logits = vec![10.0f32, 9.0, -50.0, -50.0];
+        for _ in 0..200 {
+            let t = top_k_sample(&logits, 2, 1.0, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = vec![2.0f32, 1.0, 0.0];
+        let picks: Vec<i32> = (0..200)
+            .map(|_| top_k_sample(&logits, 3, 0.01, &mut rng))
+            .collect();
+        assert!(picks.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let mut rng = Rng::new(3);
+        let logits = vec![2.0f32, 1.9, 1.8];
+        let mut seen = [false; 3];
+        for _ in 0..500 {
+            seen[top_k_sample(&logits, 3, 5.0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,435 @@
+//! Simulated engine: virtual-clock execution from an analytic latency model.
+//!
+//! Substitutes for the paper's GPU testbeds (DESIGN.md §2): per-batch
+//! latencies follow the paper's own cost structure (Eqs. 14–16) with the
+//! profile's ground-truth coefficients plus seeded multiplicative noise.
+//! The scheduler never sees these coefficients — it must fit its predictor
+//! from profiling runs, exactly as on real hardware.
+//!
+//! Two execution modes:
+//!
+//! * **planned** ([`Engine::run_batch`]) — the SLO-aware path: batches
+//!   arrive pre-formed and run to completion.
+//! * **continuous** ([`SimEngine::run_continuous`]) — the vLLM-FCFS
+//!   baseline: arrival-ordered admission into a continuously-batched decode
+//!   loop, bounded by `max_batch` and KV-cache capacity; new requests
+//!   prefill into freed slots (hybrid batches à la chunked-prefill).
+
+use anyhow::Result;
+
+use crate::config::profiles::HardwareProfile;
+use crate::engine::kv_cache::{BlockAllocator, KvCacheConfig};
+use crate::engine::{validate_batch, Engine, EngineRequest, ItemResult};
+use crate::util::rng::Rng;
+
+/// Virtual-clock engine over a hardware profile.
+pub struct SimEngine {
+    profile: HardwareProfile,
+    max_batch: usize,
+    clock_ms: f64,
+    rng: Rng,
+    kv: BlockAllocator,
+    /// Batches executed (diagnostics).
+    pub batches_run: usize,
+    /// Decode iterations executed (diagnostics).
+    pub decode_steps: usize,
+}
+
+impl SimEngine {
+    pub fn new(profile: HardwareProfile, max_batch: usize, seed: u64) -> Self {
+        let kv_cfg = KvCacheConfig::from_memory(
+            profile.kv_pool_mb,
+            profile.mem.mb_per_token,
+            16,
+        );
+        SimEngine {
+            profile,
+            max_batch,
+            clock_ms: 0.0,
+            rng: Rng::new(seed ^ 0x51_E2_61_4E),
+            kv: BlockAllocator::new(kv_cfg),
+            batches_run: 0,
+            decode_steps: 0,
+        }
+    }
+
+    pub fn profile(&self) -> &HardwareProfile {
+        &self.profile
+    }
+
+    pub fn kv(&self) -> &BlockAllocator {
+        &self.kv
+    }
+
+    /// Multiplicative execution noise ~ N(1, σ), clamped positive.
+    fn noise(&mut self) -> f64 {
+        self.rng.gaussian(1.0, self.profile.noise_std).max(0.05)
+    }
+
+    /// Reset clock + KV state (between experiment repetitions).
+    pub fn reset(&mut self, seed: u64) {
+        self.clock_ms = 0.0;
+        self.rng = Rng::new(seed ^ 0x51_E2_61_4E);
+        self.kv.reset();
+        self.batches_run = 0;
+        self.decode_steps = 0;
+    }
+
+    /// Continuous-batching FCFS execution (the vLLM baseline).
+    ///
+    /// `arrivals` must be sorted by arrival time (ms). Admission: requests
+    /// join in arrival order whenever a slot (max_batch) and KV memory are
+    /// available; each admission wave prefills as one sub-batch, then the
+    /// whole active set decodes one token per iteration.
+    pub fn run_continuous(
+        &mut self,
+        arrivals: &[(f64, EngineRequest)],
+    ) -> Result<Vec<ItemResult>> {
+        let mut pending: std::collections::VecDeque<&(f64, EngineRequest)> =
+            arrivals.iter().collect();
+        let mut active: Vec<Active> = Vec::new();
+        let mut done: Vec<ItemResult> = Vec::new();
+
+        while !pending.is_empty() || !active.is_empty() {
+            // jump to the next arrival if idle
+            if active.is_empty() {
+                if let Some((t, _)) = pending.front() {
+                    if *t > self.clock_ms {
+                        self.clock_ms = *t;
+                    }
+                }
+            }
+            // admit: arrival time passed + slot free + KV fits
+            let mut admitted: Vec<&EngineRequest> = Vec::new();
+            while let Some((t, req)) = pending.front() {
+                if *t > self.clock_ms
+                    || active.len() + admitted.len() >= self.max_batch
+                {
+                    break;
+                }
+                let total = req.input_len + req.max_new_tokens;
+                if !self.kv.fits(total) {
+                    break; // head-of-line blocks on memory (FCFS)
+                }
+                self.kv.alloc_seq(req.id, total)?;
+                admitted.push(req);
+                pending.pop_front();
+            }
+            if !admitted.is_empty() {
+                // prefill the admission wave as one sub-batch
+                let b = admitted.len();
+                let max_in = admitted
+                    .iter()
+                    .map(|r| r.input_len)
+                    .max()
+                    .unwrap_or(1);
+                let start = self.clock_ms;
+                let t_prefill = self.profile.truth.prefill_ms(b, max_in)
+                    * self.noise();
+                self.clock_ms += t_prefill;
+                self.batches_run += 1;
+                for req in admitted {
+                    active.push(Active {
+                        id: req.id,
+                        // prefill emits the first token
+                        remaining: req.max_new_tokens.max(1) - 1,
+                        accumulated: req.input_len + 1,
+                        start_ms: start,
+                        first_token_ms: self.clock_ms,
+                        generated: 1,
+                        batch_at_prefill: b,
+                    });
+                }
+                // first token may already complete a 1-token request
+                let batch_now = active.len();
+                Self::retire(
+                    &mut active,
+                    &mut done,
+                    &mut self.kv,
+                    self.clock_ms,
+                    batch_now,
+                );
+                continue;
+            }
+            if active.is_empty() {
+                continue; // waiting for arrivals
+            }
+            // one decode iteration over the active set
+            let b = active.len();
+            let max_acc =
+                active.iter().map(|a| a.accumulated).max().unwrap_or(1);
+            let step = self.profile.truth.tpot_at(b, max_acc) * self.noise();
+            self.clock_ms += step;
+            self.decode_steps += 1;
+            for a in active.iter_mut() {
+                a.accumulated += 1;
+                a.generated += 1;
+                a.remaining = a.remaining.saturating_sub(1);
+            }
+            Self::retire(&mut active, &mut done, &mut self.kv, self.clock_ms, b);
+        }
+        done.sort_by_key(|r| r.id);
+        Ok(done)
+    }
+
+    fn retire(
+        active: &mut Vec<Active>,
+        done: &mut Vec<ItemResult>,
+        kv: &mut BlockAllocator,
+        now_ms: f64,
+        batch_size: usize,
+    ) {
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining == 0 {
+                let a = active.swap_remove(i);
+                let _ = kv.free_seq(a.id);
+                done.push(ItemResult {
+                    id: a.id,
+                    start_ms: a.start_ms,
+                    first_token_ms: a.first_token_ms,
+                    finish_ms: now_ms,
+                    generated: a.generated,
+                    batch_size: batch_size.max(a.batch_at_prefill),
+                    text: None,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Continuous-mode in-flight sequence state.
+struct Active {
+    id: u64,
+    remaining: usize,
+    accumulated: usize,
+    start_ms: f64,
+    first_token_ms: f64,
+    generated: usize,
+    batch_at_prefill: usize,
+}
+
+impl Engine for SimEngine {
+    fn name(&self) -> String {
+        format!("sim:{}", self.profile.name)
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.clock_ms
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn max_total_tokens(&self) -> usize {
+        self.profile.max_total_tokens
+    }
+
+    fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
+        validate_batch(self, batch)?;
+        let b = batch.len();
+        // KV admission for the whole batch (scheduler sized it to fit)
+        for r in batch {
+            self.kv.alloc_seq(r.id, r.input_len + r.max_new_tokens)?;
+        }
+        let start = self.clock_ms;
+        let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
+        let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
+        self.clock_ms += t_prefill;
+        self.batches_run += 1;
+        let first_token_ms = self.clock_ms;
+
+        // decode: every member advances one token per iteration until all
+        // reach their budget; the batch-size term stays b for stragglers
+        // (static batch semantics: slots are not refilled).
+        let mut remaining: Vec<usize> =
+            batch.iter().map(|r| r.max_new_tokens.saturating_sub(1)).collect();
+        let mut accumulated: Vec<usize> =
+            batch.iter().map(|r| r.input_len + 1).collect();
+        let mut finish = vec![first_token_ms; b];
+        let mut live = remaining.iter().filter(|&&r| r > 0).count();
+        while live > 0 {
+            let max_acc = accumulated
+                .iter()
+                .zip(&remaining)
+                .filter(|(_, rem)| **rem > 0)
+                .map(|(a, _)| *a)
+                .max()
+                .unwrap_or(0);
+            let step = self.profile.truth.tpot_at(b, max_acc) * self.noise();
+            self.clock_ms += step;
+            self.decode_steps += 1;
+            for i in 0..b {
+                if remaining[i] > 0 {
+                    remaining[i] -= 1;
+                    accumulated[i] += 1;
+                    finish[i] = self.clock_ms;
+                    if remaining[i] == 0 {
+                        live -= 1;
+                    }
+                }
+            }
+        }
+        let results = batch
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ItemResult {
+                id: r.id,
+                start_ms: start,
+                first_token_ms,
+                finish_ms: finish[i],
+                generated: r.max_new_tokens.max(1),
+                batch_size: b,
+                text: None,
+            })
+            .collect();
+        for r in batch {
+            self.kv.free_seq(r.id)?;
+        }
+        Ok(results)
+    }
+
+    fn advance_to(&mut self, target_ms: f64) {
+        if target_ms > self.clock_ms {
+            self.clock_ms = target_ms;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profiles::by_name;
+
+    fn quiet_profile() -> HardwareProfile {
+        let mut p = by_name("qwen7b-v100x2-vllm").unwrap();
+        p.noise_std = 0.0; // deterministic timing for assertions
+        p
+    }
+
+    fn req(id: u64, input: usize, output: usize) -> EngineRequest {
+        EngineRequest { id, input_len: input, max_new_tokens: output, prompt: None }
+    }
+
+    #[test]
+    fn planned_batch_timing_matches_model() {
+        let p = quiet_profile();
+        let truth = p.truth;
+        let mut e = SimEngine::new(p, 4, 0);
+        let batch = vec![req(1, 500, 10), req(2, 300, 5)];
+        let out = e.run_batch(&batch).unwrap();
+        // prefill at b=2, max input 500
+        let t_prefill = truth.prefill_ms(2, 500);
+        assert!((out[0].first_token_ms - t_prefill).abs() < 1e-6);
+        // request 1 decodes 9 more tokens, request 2 decodes 4 more; the
+        // batch runs 9 iterations; finish of request 2 is at iteration 4.
+        assert!(out[0].finish_ms > out[1].finish_ms);
+        assert_eq!(out[0].generated, 10);
+        assert_eq!(out[1].generated, 5);
+        assert_eq!(e.decode_steps, 9);
+        // KV fully released
+        assert_eq!(e.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn batch_exceeding_max_rejected() {
+        let mut e = SimEngine::new(quiet_profile(), 2, 0);
+        let batch: Vec<EngineRequest> =
+            (0..3).map(|i| req(i, 10, 2)).collect();
+        assert!(e.run_batch(&batch).is_err());
+    }
+
+    #[test]
+    fn overlong_request_rejected() {
+        let mut e = SimEngine::new(quiet_profile(), 2, 0);
+        let batch = vec![req(1, 2000, 100)]; // > 2048 total
+        assert!(e.run_batch(&batch).is_err());
+    }
+
+    #[test]
+    fn clock_accumulates_across_batches() {
+        let mut e = SimEngine::new(quiet_profile(), 4, 0);
+        e.run_batch(&[req(1, 100, 5)]).unwrap();
+        let t1 = e.now_ms();
+        e.run_batch(&[req(2, 100, 5)]).unwrap();
+        assert!(e.now_ms() > t1);
+        e.advance_to(1e9);
+        assert_eq!(e.now_ms(), 1e9);
+        e.advance_to(5.0); // never goes backward
+        assert_eq!(e.now_ms(), 1e9);
+    }
+
+    #[test]
+    fn continuous_respects_arrival_times() {
+        let p = quiet_profile();
+        let truth = p.truth;
+        let mut e = SimEngine::new(p, 4, 0);
+        let arrivals = vec![
+            (0.0, req(1, 100, 3)),
+            (100_000.0, req(2, 100, 3)), // arrives long after 1 finishes
+        ];
+        let out = e.run_continuous(&arrivals).unwrap();
+        assert_eq!(out.len(), 2);
+        let r2 = out.iter().find(|r| r.id == 2).unwrap();
+        assert!(r2.start_ms >= 100_000.0);
+        let expected_first =
+            100_000.0 + truth.prefill_ms(1, 100);
+        assert!((r2.first_token_ms - expected_first).abs() < 1e-6);
+    }
+
+    #[test]
+    fn continuous_batches_concurrent_arrivals() {
+        let mut e = SimEngine::new(quiet_profile(), 4, 0);
+        let arrivals: Vec<(f64, EngineRequest)> =
+            (0..4).map(|i| (0.0, req(i, 100, 10))).collect();
+        let out = e.run_continuous(&arrivals).unwrap();
+        // all four prefill together
+        assert!(out.iter().all(|r| r.batch_size == 4));
+        // TPOT reflects batch-4 decode
+        assert!(out[0].tpot_ms() > 0.0);
+    }
+
+    #[test]
+    fn continuous_respects_max_batch() {
+        let mut e = SimEngine::new(quiet_profile(), 2, 0);
+        let arrivals: Vec<(f64, EngineRequest)> =
+            (0..5).map(|i| (0.0, req(i, 100, 50))).collect();
+        let out = e.run_continuous(&arrivals).unwrap();
+        assert_eq!(out.len(), 5);
+        // later arrivals waited: first-token times are staggered
+        let mut fts: Vec<f64> = out.iter().map(|r| r.first_token_ms).collect();
+        fts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(fts[4] > fts[0]);
+        assert_eq!(e.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut e = SimEngine::new(
+                by_name("qwen7b-v100x2-vllm").unwrap(),
+                4,
+                seed,
+            );
+            e.run_batch(&[req(1, 500, 20), req(2, 400, 10)])
+                .unwrap()
+                .iter()
+                .map(|r| r.finish_ms)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4)); // noise differs across seeds
+    }
+
+    #[test]
+    fn one_token_requests_finish_at_prefill() {
+        let mut e = SimEngine::new(quiet_profile(), 4, 0);
+        let out = e.run_batch(&[req(1, 50, 1)]).unwrap();
+        assert_eq!(out[0].generated, 1);
+        assert!((out[0].finish_ms - out[0].first_token_ms).abs() < 1e-9);
+        assert_eq!(out[0].tpot_ms(), 0.0);
+    }
+}

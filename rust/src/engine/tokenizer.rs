@@ -1,0 +1,104 @@
+//! Byte-level tokenizer substrate.
+//!
+//! TinyLM uses a byte vocabulary (0–255) plus BOS (256) and EOS (257) —
+//! mirrored from python/compile/model.py. One byte = one token keeps the
+//! substrate honest (real prompt lengths drive real compute) without
+//! requiring a trained BPE merge table.
+
+/// Byte-level tokenizer with BOS/EOS specials.
+#[derive(Debug, Clone, Copy)]
+pub struct ByteTokenizer {
+    pub bos: i32,
+    pub eos: i32,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        ByteTokenizer { bos: 256, eos: 257 }
+    }
+}
+
+impl ByteTokenizer {
+    pub fn new(bos: i32, eos: i32) -> Self {
+        ByteTokenizer { bos, eos }
+    }
+
+    /// Encode raw bytes (no specials added).
+    pub fn encode(&self, bytes: &[u8]) -> Vec<i32> {
+        bytes.iter().map(|&b| b as i32).collect()
+    }
+
+    /// Encode with a leading BOS.
+    pub fn encode_with_bos(&self, bytes: &[u8]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(bytes.len() + 1);
+        out.push(self.bos);
+        out.extend(bytes.iter().map(|&b| b as i32));
+        out
+    }
+
+    /// Decode token ids back to bytes, stopping at EOS; specials and
+    /// out-of-range ids are dropped.
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            if t == self.eos {
+                break;
+            }
+            if (0..=255).contains(&t) {
+                out.push(t as u8);
+            }
+        }
+        out
+    }
+
+    /// Generate a deterministic printable synthetic prompt of `len` tokens
+    /// (used when a scheduler-level request carries only a length).
+    pub fn synthetic_prompt(&self, seed: u64, len: usize) -> Vec<u8> {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x70_6B_6E);
+        (0..len)
+            .map(|_| {
+                // printable ASCII 32..=126
+                (32 + rng.below(95)) as u8
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let tok = ByteTokenizer::default();
+        let text = b"def fib(n):\n    return n".to_vec();
+        let ids = tok.encode(&text);
+        assert_eq!(ids.len(), text.len());
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let tok = ByteTokenizer::default();
+        let ids = tok.encode_with_bos(b"ab");
+        assert_eq!(ids, vec![256, 97, 98]);
+    }
+
+    #[test]
+    fn decode_stops_at_eos_and_skips_specials() {
+        let tok = ByteTokenizer::default();
+        assert_eq!(tok.decode(&[104, 105, 257, 106]), b"hi".to_vec());
+        assert_eq!(tok.decode(&[256, 104, 300, 105]), b"hi".to_vec());
+    }
+
+    #[test]
+    fn synthetic_prompt_deterministic_printable() {
+        let tok = ByteTokenizer::default();
+        let a = tok.synthetic_prompt(5, 64);
+        let b = tok.synthetic_prompt(5, 64);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&c| (32..=126).contains(&c)));
+        assert_ne!(a, tok.synthetic_prompt(6, 64));
+    }
+}

@@ -1,0 +1,51 @@
+//! # slo-serve
+//!
+//! A reproduction of *"SLO-Aware Scheduling for Large Language Model
+//! Inferences"* (Huang et al., CS.DC 2025) as a three-layer Rust + JAX +
+//! Pallas serving framework:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas attention kernels
+//!   (prefill flash-attention + decode-step KV-cache attention).
+//! * **L2** (`python/compile/model.py`) — TinyLM, a GPT-style decoder in
+//!   JAX, AOT-lowered to HLO text per (batch, seq) bucket.
+//! * **L3** (this crate) — the serving system: the paper's simulated-
+//!   annealing SLO-aware scheduler ([`coordinator`]), LLM engines
+//!   ([`engine`]: a PJRT-backed real engine and a calibrated simulator),
+//!   the PJRT runtime ([`runtime`]), workload generators ([`workload`]),
+//!   metrics ([`metrics`]), a TCP serving front-end ([`server`]), and the
+//!   bench harness ([`bench`]) that regenerates every table/figure of the
+//!   paper's evaluation.
+//!
+//! Python runs only at build time (`make artifacts`); the request path is
+//! pure Rust. See DESIGN.md for the architecture and the experiment index,
+//! EXPERIMENTS.md for measured results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Common imports for examples and benches.
+pub mod prelude {
+    pub use crate::config::profiles::{by_name, HardwareProfile};
+    pub use crate::config::{OutputPrediction, RunConfig, SloTargets};
+    pub use crate::coordinator::objective::{Evaluator, Job, Schedule};
+    pub use crate::coordinator::policies::Policy;
+    pub use crate::coordinator::predictor::LatencyPredictor;
+    pub use crate::coordinator::priority::annealing::{
+        priority_mapping, SaParams,
+    };
+    pub use crate::coordinator::profiler::RequestProfiler;
+    pub use crate::coordinator::request::{Request, Slo, TaskType};
+    pub use crate::coordinator::scheduler::{schedule, InstanceInfo};
+    pub use crate::engine::sim::SimEngine;
+    pub use crate::engine::{Engine, EngineRequest};
+    pub use crate::metrics::RunMetrics;
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::dataset::RequestFactory;
+}

@@ -1,0 +1,196 @@
+//! slo-serve CLI: leader entrypoint for the SLO-aware serving system.
+//!
+//! Subcommands:
+//!   run       — run a scheduling scenario on the simulated fleet
+//!   serve     — start the TCP JSON-lines serving front-end
+//!   profile   — profiling rounds + least-squares fit (paper Table 2)
+//!   profiles  — list built-in hardware profiles
+//!   help      — this text
+
+use anyhow::{anyhow, Result};
+
+use slo_serve::bench;
+use slo_serve::config::profiles;
+use slo_serve::config::RunConfig;
+use slo_serve::coordinator::predictor::LatencyPredictor;
+use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::engine::instance::InstanceHandle;
+use slo_serve::engine::real::RealEngine;
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::engine::Engine;
+use slo_serve::metrics::{fmt, Table};
+use slo_serve::server;
+use slo_serve::util::cli::{render_help, Args, OptSpec};
+
+fn run_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", help: "JSON config file", default: Some("") },
+        OptSpec { name: "policy", help: "fcfs|sjf|edf|mlfq|slo-aware-sa|slo-aware-exhaustive", default: Some("slo-aware-sa") },
+        OptSpec { name: "profile", help: "hardware profile name", default: Some("qwen7b-v100x2-vllm") },
+        OptSpec { name: "requests", help: "wave size", default: Some("10") },
+        OptSpec { name: "max-batch", help: "engine batch cap", default: Some("4") },
+        OptSpec { name: "instances", help: "instance count", default: Some("1") },
+        OptSpec { name: "seed", help: "rng seed", default: Some("42") },
+        OptSpec { name: "slo-scale", help: "scale all SLO bounds", default: Some("1.0") },
+        OptSpec { name: "output-pred", help: "profiler | oracle:<rel_err>", default: Some("profiler") },
+    ]
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &run_specs())?;
+    let mut cfg = if args.str("config").is_empty() {
+        RunConfig::default()
+    } else {
+        RunConfig::from_file(&args.str("config"))?
+    };
+    cfg.policy = args.str("policy");
+    cfg.profile = args.str("profile");
+    cfg.n_requests = args.usize("requests")?;
+    cfg.max_batch = args.usize("max-batch")?;
+    cfg.n_instances = args.usize("instances")?;
+    cfg.seed = args.u64("seed")?;
+    cfg.slos = cfg.slos.scaled(args.f64("slo-scale")?);
+    let op = args.str("output-pred");
+    cfg.output_pred = if op == "profiler" {
+        slo_serve::config::OutputPrediction::Profiler
+    } else if let Some(err) = op.strip_prefix("oracle:") {
+        slo_serve::config::OutputPrediction::Oracle { rel_err: err.parse().unwrap_or(0.0) }
+    } else {
+        return Err(anyhow!("bad --output-pred {op}"));
+    };
+    let run = bench::run_scenario(&cfg)?;
+    let m = &run.metrics;
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["policy".into(), cfg.policy.clone()]);
+    t.row(vec!["profile".into(), cfg.profile.clone()]);
+    t.row(vec!["requests".into(), m.n.to_string()]);
+    t.row(vec!["slo_met".into(), m.met.to_string()]);
+    t.row(vec!["attainment".into(), fmt(m.attainment())]);
+    t.row(vec!["avg_latency_ms".into(), fmt(m.avg_latency_ms())]);
+    t.row(vec!["G (req/s)".into(), fmt(m.g_req_per_s)]);
+    t.row(vec!["sched_overhead_ms".into(), fmt(run.sched_overhead_ms)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_profile(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "profile", help: "hardware profile", default: Some("qwen7b-v100x2-vllm") },
+        OptSpec { name: "seed", help: "rng seed", default: Some("42") },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let profile = profiles::by_name(&args.str("profile"))
+        .ok_or_else(|| anyhow!("unknown profile"))?;
+    let fitted = bench::fit_predictor_from_profile(&profile, args.u64("seed")?);
+    print_fit_table(&fitted);
+    Ok(())
+}
+
+fn print_fit_table(p: &LatencyPredictor) {
+    let mut t = Table::new(&["parameter", "alpha", "beta", "gamma", "delta"]);
+    t.row(vec![
+        "for prefill".into(),
+        format!("{:.4}", p.prefill.alpha),
+        format!("{:.3}", p.prefill.beta),
+        format!("{:.5}", p.prefill.gamma),
+        format!("{:.2}", p.prefill.delta),
+    ]);
+    t.row(vec![
+        "for decode".into(),
+        format!("{:.6}", p.decode.alpha),
+        format!("{:.4}", p.decode.beta),
+        format!("{:.6}", p.decode.gamma),
+        format!("{:.2}", p.decode.delta),
+    ]);
+    print!("{}", t.render());
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "engine", help: "real|sim", default: Some("sim") },
+        OptSpec { name: "artifacts", help: "artifacts dir (real engine)", default: Some("artifacts") },
+        OptSpec { name: "profile", help: "profile (sim engine)", default: Some("qwen7b-v100x2-vllm") },
+        OptSpec { name: "instances", help: "instance count", default: Some("1") },
+        OptSpec { name: "max-batch", help: "batch cap", default: Some("4") },
+        OptSpec { name: "window-ms", help: "dispatch window", default: Some("20") },
+        OptSpec { name: "requests", help: "exit after N served (0 = forever)", default: Some("0") },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let n_inst = args.usize("instances")?.max(1);
+    let max_batch = args.usize("max-batch")?.max(1);
+    let mut instances = Vec::new();
+    let (predictor, max_total) = if args.str("engine") == "real" {
+        let mut max_total = 0;
+        for i in 0..n_inst {
+            let mut e = RealEngine::load(&args.str("artifacts"))?;
+            e.warmup(max_batch.min(e.max_batch()))?;
+            max_total = e.max_total_tokens();
+            instances.push(InstanceHandle::spawn(i, Box::new(e)));
+        }
+        let p = profiles::by_name("tinylm-cpu").unwrap();
+        (p.truth, max_total)
+    } else {
+        let profile = profiles::by_name(&args.str("profile"))
+            .ok_or_else(|| anyhow!("unknown profile"))?;
+        let max_total = profile.max_total_tokens;
+        for i in 0..n_inst {
+            let e = SimEngine::new(profile.clone(), max_batch, i as u64);
+            instances.push(InstanceHandle::spawn(i, Box::new(e)));
+        }
+        (bench::fit_predictor_from_profile(&profile, 0), max_total)
+    };
+    let cfg = server::ServerConfig {
+        policy: slo_serve::coordinator::policies::Policy::SloAware(
+            SaParams::with_max_batch(max_batch),
+        ),
+        predictor,
+        window_ms: args.u64("window-ms")?,
+        max_batch,
+        max_total_tokens: max_total,
+    };
+    let handle = server::start(cfg, instances)?;
+    println!("slo-serve listening on {}", handle.addr);
+    let stop_after = args.usize("requests")?;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if stop_after > 0 && handle.served() >= stop_after {
+            break;
+        }
+    }
+    handle.shutdown();
+    Ok(())
+}
+
+fn cmd_profiles() {
+    let mut t = Table::new(&["profile", "kv_pool_mb", "max_tokens"]);
+    for p in profiles::builtin_profiles() {
+        t.row(vec![
+            p.name.clone(),
+            fmt(p.kv_pool_mb),
+            p.max_total_tokens.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("profile") => cmd_profile(&argv[1..]),
+        Some("profiles") => {
+            cmd_profiles();
+            Ok(())
+        }
+        Some("help") | None => {
+            println!(
+                "slo-serve — SLO-aware LLM inference scheduling (CS.DC 2025 reproduction)\n\n\
+                 subcommands: run | serve | profile | profiles | help\n"
+            );
+            print!("{}", render_help("slo-serve run", "run a scheduling scenario", &run_specs()));
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try help)")),
+    }
+}

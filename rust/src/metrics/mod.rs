@@ -1,0 +1,234 @@
+//! Serving metrics: SLO attainment, the paper's objective `G`, latency
+//! summaries, and table rendering for the bench harness.
+
+use crate::coordinator::request::{Completion, TaskType};
+use crate::util::stats::Summary;
+
+/// Aggregated metrics over a set of completions (measured, not predicted).
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub n: usize,
+    /// Requests meeting their SLO (Eq. 6/7).
+    pub met: usize,
+    /// Σ t_e2e over all requests (ms).
+    pub total_e2e_ms: f64,
+    /// `G = n_met / Σ t_e2e`, in req/s (paper Eq. 2; the paper plots req/s).
+    pub g_req_per_s: f64,
+    pub e2e: Option<Summary>,
+    pub ttft: Option<Summary>,
+    pub tpot: Option<Summary>,
+    pub wait: Option<Summary>,
+}
+
+impl RunMetrics {
+    pub fn from_completions(completions: &[Completion]) -> RunMetrics {
+        let n = completions.len();
+        let met = completions.iter().filter(|c| c.slo_met()).count();
+        let total_e2e_ms: f64 = completions.iter().map(|c| c.e2e_ms).sum();
+        let g = if total_e2e_ms > 0.0 {
+            met as f64 / (total_e2e_ms / 1000.0)
+        } else {
+            0.0
+        };
+        let collect = |f: fn(&Completion) -> f64| {
+            Summary::from(&completions.iter().map(f).collect::<Vec<_>>())
+        };
+        RunMetrics {
+            n,
+            met,
+            total_e2e_ms,
+            g_req_per_s: g,
+            e2e: collect(|c| c.e2e_ms),
+            ttft: collect(|c| c.ttft_ms),
+            tpot: collect(|c| c.tpot_ms),
+            wait: collect(|c| c.wait_ms),
+        }
+    }
+
+    /// SLO attainment ratio in [0, 1].
+    pub fn attainment(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.n as f64
+        }
+    }
+
+    /// Average e2e latency (ms).
+    pub fn avg_latency_ms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.total_e2e_ms / self.n as f64
+        }
+    }
+
+    /// Per-task-type attainment breakdown.
+    pub fn attainment_by_task(
+        completions: &[Completion],
+    ) -> Vec<(TaskType, f64, usize)> {
+        let mut tasks: Vec<TaskType> =
+            completions.iter().map(|c| c.task).collect();
+        tasks.sort();
+        tasks.dedup();
+        tasks
+            .into_iter()
+            .map(|t| {
+                let of_task: Vec<&Completion> =
+                    completions.iter().filter(|c| c.task == t).collect();
+                let met =
+                    of_task.iter().filter(|c| c.slo_met()).count();
+                (t, met as f64 / of_task.len() as f64, of_task.len())
+            })
+            .collect()
+    }
+}
+
+/// Markdown-style table renderer for bench output (criterion substitute).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |\n", padded.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format a float compactly for table cells.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Slo;
+
+    fn completion(id: u64, task: TaskType, e2e: f64, bound: f64) -> Completion {
+        Completion {
+            id,
+            task,
+            slo: Slo::E2e { e2e_ms: bound },
+            input_len: 10,
+            generated: 5,
+            e2e_ms: e2e,
+            ttft_ms: e2e * 0.2,
+            tpot_ms: 10.0,
+            wait_ms: 0.0,
+            batch_size: 1,
+            text: None,
+        }
+    }
+
+    #[test]
+    fn g_matches_paper_units() {
+        // Fig. 3(C): 3 met, Σe2e = 2900 ms -> G = 1.03 req/s
+        let completions = vec![
+            completion(0, TaskType::Code, 800.0, 800.0),
+            completion(1, TaskType::Code, 500.0, 500.0),
+            completion(2, TaskType::Code, 1600.0, 1800.0),
+        ];
+        let m = RunMetrics::from_completions(&completions);
+        assert_eq!(m.met, 3);
+        assert!((m.g_req_per_s - 1.0345).abs() < 1e-3);
+        assert_eq!(m.attainment(), 1.0);
+        assert!((m.avg_latency_ms() - 2900.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attainment_counts_misses() {
+        let completions = vec![
+            completion(0, TaskType::Code, 100.0, 50.0), // miss
+            completion(1, TaskType::Chat, 100.0, 200.0), // met
+        ];
+        let m = RunMetrics::from_completions(&completions);
+        assert_eq!(m.met, 1);
+        assert_eq!(m.attainment(), 0.5);
+        let per_task = RunMetrics::attainment_by_task(&completions);
+        assert_eq!(per_task.len(), 2);
+        assert_eq!(per_task[0].0, TaskType::Chat);
+        assert_eq!(per_task[0].1, 1.0);
+        assert_eq!(per_task[1].1, 0.0);
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = RunMetrics::from_completions(&[]);
+        assert_eq!(m.n, 0);
+        assert_eq!(m.attainment(), 0.0);
+        assert_eq!(m.avg_latency_ms(), 0.0);
+        assert!(m.e2e.is_none());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["short".into(), "1".into()]);
+        t.row(vec!["a-much-longer-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| name "));
+        assert!(s.contains("| a-much-longer-name | 2.5"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(123.4), "123");
+        assert_eq!(fmt(3.14159), "3.14");
+        assert_eq!(fmt(0.012345), "0.0123");
+    }
+}

@@ -1,0 +1,623 @@
+//! AOT runtime: load `artifacts/` (HLO text + weights + manifest) and
+//! execute TinyLM on the PJRT CPU client.
+//!
+//! This is the only module that touches the `xla` crate. Flow (see
+//! /opt/xla-example/README.md for the interchange gotchas):
+//!
+//! ```text
+//! manifest.json ─┐
+//! weights.bin  ──┼─> ModelRuntime::load(dir)
+//! *.hlo.txt    ──┘       │ HloModuleProto::from_text_file (HLO TEXT — the
+//!                        │ xla_extension 0.5.1 proto parser rejects jax≥0.5
+//!                        │ 64-bit instruction ids)
+//!                        ▼
+//!            PjRtClient::cpu().compile(…)  (lazy, cached per bucket)
+//!                        ▼
+//!            prefill(tokens)  /  decode_step(caches, tokens, pos)
+//! ```
+//!
+//! Executables are compiled **lazily** per bucket and cached. All results
+//! come back as a single tuple buffer (the published `xla` crate cannot
+//! split tuple buffers on-device), so KV caches round-trip through host
+//! literals; EXPERIMENTS.md §Perf quantifies the copy cost.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model hyperparameters from the manifest (must match python ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub bos: i32,
+    pub eos: i32,
+}
+
+/// One prefill bucket (batch × padded sequence length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillBucket {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub spec: ModelSpec,
+    /// Parameter (name, shape) in AOT argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub prefill_buckets: Vec<(PrefillBucket, String)>,
+    pub decode_buckets: Vec<(usize, String)>,
+    pub weights_file: String,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("manifest.json parse")?;
+        let model = v.get("model");
+        let req_usize = |node: &Json, key: &str| -> Result<usize> {
+            node.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let spec = ModelSpec {
+            vocab: req_usize(model, "vocab")?,
+            d_model: req_usize(model, "d_model")?,
+            n_layers: req_usize(model, "n_layers")?,
+            n_heads: req_usize(model, "n_heads")?,
+            head_dim: req_usize(model, "head_dim")?,
+            max_seq: req_usize(model, "max_seq")?,
+            bos: v.get("tokens").get("bos").as_i64().unwrap_or(256) as i32,
+            eos: v.get("tokens").get("eos").as_i64().unwrap_or(257) as i32,
+        };
+        let params = v
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: params missing"))?
+            .iter()
+            .map(|p| {
+                let name = p.get("name").as_str().unwrap_or("").to_string();
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect();
+                (name, shape)
+            })
+            .collect();
+        let prefill_buckets = v
+            .get("buckets")
+            .get("prefill")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|b| {
+                Ok((
+                    PrefillBucket {
+                        batch: b
+                            .get("batch")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("bad prefill bucket"))?,
+                        seq: b
+                            .get("seq")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("bad prefill bucket"))?,
+                    },
+                    b.get("file").as_str().unwrap_or("").to_string(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let decode_buckets = v
+            .get("buckets")
+            .get("decode")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|b| {
+                Ok((
+                    b.get("batch")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("bad decode bucket"))?,
+                    b.get("file").as_str().unwrap_or("").to_string(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if prefill_buckets.is_empty() || decode_buckets.is_empty() {
+            bail!("manifest: empty bucket tables");
+        }
+        Ok(Manifest {
+            spec,
+            params,
+            prefill_buckets,
+            decode_buckets,
+            weights_file: v
+                .get("weights")
+                .as_str()
+                .unwrap_or("weights.bin")
+                .to_string(),
+        })
+    }
+
+    /// Smallest prefill bucket covering (batch, seq). None if none fits.
+    pub fn pick_prefill(
+        &self,
+        batch: usize,
+        seq: usize,
+    ) -> Option<PrefillBucket> {
+        self.prefill_buckets
+            .iter()
+            .map(|(b, _)| *b)
+            .filter(|b| b.batch >= batch && b.seq >= seq)
+            .min_by_key(|b| (b.batch * b.seq, b.batch))
+    }
+
+    /// Smallest decode bucket covering `batch`.
+    pub fn pick_decode(&self, batch: usize) -> Option<usize> {
+        self.decode_buckets
+            .iter()
+            .map(|(b, _)| *b)
+            .filter(|&b| b >= batch)
+            .min()
+    }
+
+    pub fn max_prefill_batch(&self) -> usize {
+        self.prefill_buckets.iter().map(|(b, _)| b.batch).max().unwrap_or(1)
+    }
+
+    pub fn max_prefill_seq(&self) -> usize {
+        self.prefill_buckets.iter().map(|(b, _)| b.seq).max().unwrap_or(0)
+    }
+}
+
+/// A host tensor loaded from the TLMW1 weights container.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Parse the TLMW1 weights container (see python/compile/aot.py).
+pub fn parse_weights(bytes: &[u8]) -> Result<Vec<HostTensor>> {
+    let mut off = 0usize;
+    fn take<'a>(
+        bytes: &'a [u8],
+        off: &mut usize,
+        n: usize,
+    ) -> Result<&'a [u8]> {
+        if *off + n > bytes.len() {
+            bail!("weights: truncated at offset {}", *off);
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    }
+    let magic = take(bytes, &mut off, 6)?;
+    if magic != b"TLMW1\0" {
+        bail!("weights: bad magic {magic:?}");
+    }
+    let count =
+        u32::from_le_bytes(take(bytes, &mut off, 4)?.try_into()?) as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len =
+            u32::from_le_bytes(take(bytes, &mut off, 4)?.try_into()?) as usize;
+        let name =
+            String::from_utf8(take(bytes, &mut off, name_len)?.to_vec())
+                .context("weights: non-utf8 tensor name")?;
+        let dtype = take(bytes, &mut off, 1)?[0];
+        if dtype != 0 {
+            bail!("weights: unsupported dtype {dtype}");
+        }
+        let ndim = take(bytes, &mut off, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(
+                take(bytes, &mut off, 4)?.try_into()?,
+            ) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = take(bytes, &mut off, 4 * n)?;
+        let mut data = Vec::with_capacity(n);
+        for chunk in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into()?));
+        }
+        tensors.push(HostTensor { name, shape, data });
+    }
+    if off != bytes.len() {
+        bail!("weights: {} trailing bytes", bytes.len() - off);
+    }
+    Ok(tensors)
+}
+
+/// Result of one prefill call.
+pub struct PrefillResult {
+    /// `[batch][vocab]` logits at each row's last *real* position.
+    pub last_logits: Vec<Vec<f32>>,
+    pub k_caches: xla::Literal,
+    pub v_caches: xla::Literal,
+    /// Bucket actually executed.
+    pub bucket: PrefillBucket,
+}
+
+/// Result of one decode step.
+pub struct DecodeResult {
+    /// `[batch][vocab]` next-token logits per row.
+    pub logits: Vec<Vec<f32>>,
+    pub k_caches: xla::Literal,
+    pub v_caches: xla::Literal,
+}
+
+/// The loaded model: PJRT client + weights + lazily-compiled executables.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    /// Weight literals in AOT argument order (host-resident; the execute
+    /// API re-uploads per call — see module docs).
+    weights: Vec<xla::Literal>,
+    prefill_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    decode_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load manifest + weights from an artifacts directory. Executables are
+    /// compiled on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {dir:?}/manifest.json"))?;
+        let manifest = Manifest::parse(&manifest_text)?;
+        let weight_bytes = std::fs::read(dir.join(&manifest.weights_file))
+            .with_context(|| format!("reading {:?}", manifest.weights_file))?;
+        let tensors = parse_weights(&weight_bytes)?;
+        // Validate against the manifest's parameter table.
+        if tensors.len() != manifest.params.len() {
+            bail!(
+                "weights/manifest mismatch: {} tensors vs {} params",
+                tensors.len(),
+                manifest.params.len()
+            );
+        }
+        let mut weights = Vec::with_capacity(tensors.len());
+        for (t, (name, shape)) in tensors.iter().zip(&manifest.params) {
+            if &t.name != name || &t.shape != shape {
+                bail!(
+                    "weights/manifest mismatch: got {}{:?}, manifest says {}{:?}",
+                    t.name,
+                    t.shape,
+                    name,
+                    shape
+                );
+            }
+            weights.push(f32_literal(&t.data, &t.shape)?);
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(ModelRuntime {
+            client,
+            manifest,
+            dir,
+            weights,
+            prefill_exes: HashMap::new(),
+            decode_exes: HashMap::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.manifest.spec
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {file}: {e}"))
+    }
+
+    /// Ensure the prefill executable for a bucket is compiled.
+    pub fn ensure_prefill(&mut self, bucket: PrefillBucket) -> Result<()> {
+        if self.prefill_exes.contains_key(&(bucket.batch, bucket.seq)) {
+            return Ok(());
+        }
+        let file = self
+            .manifest
+            .prefill_buckets
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, f)| f.clone())
+            .ok_or_else(|| anyhow!("no prefill bucket {bucket:?}"))?;
+        let exe = self.compile(&file)?;
+        self.prefill_exes.insert((bucket.batch, bucket.seq), exe);
+        Ok(())
+    }
+
+    /// Ensure the decode executable for a batch bucket is compiled.
+    pub fn ensure_decode(&mut self, batch: usize) -> Result<()> {
+        if self.decode_exes.contains_key(&batch) {
+            return Ok(());
+        }
+        let file = self
+            .manifest
+            .decode_buckets
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, f)| f.clone())
+            .ok_or_else(|| anyhow!("no decode bucket b{batch}"))?;
+        let exe = self.compile(&file)?;
+        self.decode_exes.insert(batch, exe);
+        Ok(())
+    }
+
+    /// Run prefill over token rows (`rows[i]` is row *i*'s prompt tokens).
+    /// Rows are right-padded to the selected bucket; `last_logits[i]` is the
+    /// logits at `rows[i].len() - 1`.
+    pub fn prefill(&mut self, rows: &[Vec<i32>]) -> Result<PrefillResult> {
+        let batch = rows.len();
+        let max_len = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        if batch == 0 || max_len == 0 {
+            bail!("prefill: empty input");
+        }
+        let bucket =
+            self.manifest.pick_prefill(batch, max_len).ok_or_else(|| {
+                anyhow!("no prefill bucket for batch={batch} seq={max_len}")
+            })?;
+        self.ensure_prefill(bucket)?;
+        // pad tokens into the bucket
+        let mut tokens = vec![0i32; bucket.batch * bucket.seq];
+        for (i, row) in rows.iter().enumerate() {
+            tokens[i * bucket.seq..i * bucket.seq + row.len()]
+                .copy_from_slice(row);
+        }
+        let tokens_lit = i32_literal(&tokens, &[bucket.batch, bucket.seq])?;
+        let exe = &self.prefill_exes[&(bucket.batch, bucket.seq)];
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&tokens_lit);
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("prefill execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill fetch: {e}"))?;
+        let mut parts =
+            result.to_tuple().map_err(|e| anyhow!("prefill untuple: {e}"))?;
+        if parts.len() != 3 {
+            bail!("prefill: expected 3 outputs, got {}", parts.len());
+        }
+        let v_caches = parts.pop().unwrap();
+        let k_caches = parts.pop().unwrap();
+        let logits = parts.pop().unwrap();
+        let vocab = self.manifest.spec.vocab;
+        let all = logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e}"))?;
+        // all: [bucket.batch, bucket.seq, vocab] row-major
+        let mut last_logits = Vec::with_capacity(batch);
+        for (i, row) in rows.iter().enumerate() {
+            let pos = row.len() - 1;
+            let base = (i * bucket.seq + pos) * vocab;
+            last_logits.push(all[base..base + vocab].to_vec());
+        }
+        Ok(PrefillResult { last_logits, k_caches, v_caches, bucket })
+    }
+
+    /// One decode step at batch bucket `batch` (caches must be that bucket's
+    /// shape). `tokens[i]`/`pos[i]` per row; rows beyond the live set should
+    /// carry `pos = 0, token = 0` and their logits ignored.
+    pub fn decode_step(
+        &mut self,
+        batch: usize,
+        k_caches: &xla::Literal,
+        v_caches: &xla::Literal,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<DecodeResult> {
+        if tokens.len() != batch || pos.len() != batch {
+            bail!("decode: tokens/pos must have length {batch}");
+        }
+        self.ensure_decode(batch)?;
+        let tokens_lit = i32_literal(tokens, &[batch])?;
+        let pos_lit = i32_literal(pos, &[batch])?;
+        let exe = &self.decode_exes[&batch];
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(k_caches);
+        args.push(v_caches);
+        args.push(&tokens_lit);
+        args.push(&pos_lit);
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("decode execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode fetch: {e}"))?;
+        let mut parts =
+            result.to_tuple().map_err(|e| anyhow!("decode untuple: {e}"))?;
+        if parts.len() != 3 {
+            bail!("decode: expected 3 outputs, got {}", parts.len());
+        }
+        let v_caches = parts.pop().unwrap();
+        let k_caches = parts.pop().unwrap();
+        let logits_lit = parts.pop().unwrap();
+        let vocab = self.manifest.spec.vocab;
+        let all = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("decode logits: {e}"))?;
+        let logits =
+            all.chunks(vocab).map(|c| c.to_vec()).collect::<Vec<_>>();
+        Ok(DecodeResult { logits, k_caches, v_caches })
+    }
+
+    /// Grow prefill caches (bucket batch) to the decode bucket batch size by
+    /// zero-padding rows. Caches are `[L, B, max_seq, H, Dh]`.
+    pub fn pad_cache_batch(
+        &self,
+        cache: &xla::Literal,
+        from_batch: usize,
+        to_batch: usize,
+    ) -> Result<xla::Literal> {
+        if from_batch == to_batch {
+            return Ok(cache.clone());
+        }
+        let s = &self.manifest.spec;
+        let row = s.max_seq * s.n_heads * s.head_dim;
+        let data =
+            cache.to_vec::<f32>().map_err(|e| anyhow!("cache to_vec: {e}"))?;
+        let mut out = vec![0f32; s.n_layers * to_batch * row];
+        for l in 0..s.n_layers {
+            for b in 0..from_batch.min(to_batch) {
+                let src = (l * from_batch + b) * row;
+                let dst = (l * to_batch + b) * row;
+                out[dst..dst + row].copy_from_slice(&data[src..src + row]);
+            }
+        }
+        f32_literal(
+            &out,
+            &[s.n_layers, to_batch, s.max_seq, s.n_heads, s.head_dim],
+        )
+    }
+}
+
+/// Build an f32 literal from host data.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )
+    .map_err(|e| anyhow!("f32 literal: {e}"))
+}
+
+/// Build an i32 literal from host data.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )
+    .map_err(|e| anyhow!("i32 literal: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_picks_buckets() {
+        let text = r#"{
+            "model": {"vocab": 258, "d_model": 128, "n_layers": 4,
+                      "n_heads": 4, "head_dim": 32, "max_seq": 384,
+                      "rope_theta": 10000.0, "norm_eps": 1e-5},
+            "tokens": {"vocab": 258, "bos": 256, "eos": 257},
+            "weights": "weights.bin",
+            "params": [{"name": "embed", "shape": [258, 128]}],
+            "buckets": {
+              "prefill": [
+                {"batch": 1, "seq": 32, "file": "p1_32"},
+                {"batch": 4, "seq": 32, "file": "p4_32"},
+                {"batch": 4, "seq": 256, "file": "p4_256"}
+              ],
+              "decode": [{"batch": 1, "file": "d1"},
+                          {"batch": 4, "file": "d4"}]
+            }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.spec.vocab, 258);
+        assert_eq!(m.spec.eos, 257);
+        assert_eq!(
+            m.pick_prefill(1, 20),
+            Some(PrefillBucket { batch: 1, seq: 32 })
+        );
+        assert_eq!(
+            m.pick_prefill(2, 32),
+            Some(PrefillBucket { batch: 4, seq: 32 })
+        );
+        assert_eq!(
+            m.pick_prefill(3, 100),
+            Some(PrefillBucket { batch: 4, seq: 256 })
+        );
+        assert_eq!(m.pick_prefill(5, 32), None);
+        assert_eq!(m.pick_prefill(1, 1000), None);
+        assert_eq!(m.pick_decode(1), Some(1));
+        assert_eq!(m.pick_decode(2), Some(4));
+        assert_eq!(m.pick_decode(9), None);
+        assert_eq!(m.max_prefill_batch(), 4);
+        assert_eq!(m.max_prefill_seq(), 256);
+    }
+
+    #[test]
+    fn manifest_rejects_empty() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn weights_parser_roundtrip() {
+        // hand-build a container with two tensors
+        let mut bytes: Vec<u8> = b"TLMW1\0".to_vec();
+        bytes.extend(2u32.to_le_bytes());
+        for (name, shape, data) in [
+            ("a", vec![2usize, 2], vec![1.0f32, 2.0, 3.0, 4.0]),
+            ("b.c", vec![3usize], vec![-1.0f32, 0.5, 9.0]),
+        ] {
+            bytes.extend((name.len() as u32).to_le_bytes());
+            bytes.extend(name.as_bytes());
+            bytes.push(0); // f32
+            bytes.push(shape.len() as u8);
+            for d in &shape {
+                bytes.extend((*d as u32).to_le_bytes());
+            }
+            for f in &data {
+                bytes.extend(f.to_le_bytes());
+            }
+        }
+        let tensors = parse_weights(&bytes).unwrap();
+        assert_eq!(tensors.len(), 2);
+        assert_eq!(tensors[0].name, "a");
+        assert_eq!(tensors[0].shape, vec![2, 2]);
+        assert_eq!(tensors[1].data, vec![-1.0, 0.5, 9.0]);
+    }
+
+    #[test]
+    fn weights_parser_rejects_corruption() {
+        assert!(parse_weights(b"BAD").is_err());
+        let mut ok: Vec<u8> = b"TLMW1\0".to_vec();
+        ok.extend(1u32.to_le_bytes());
+        ok.extend(1u32.to_le_bytes());
+        ok.extend(b"x");
+        ok.push(0);
+        ok.push(1);
+        ok.extend(4u32.to_le_bytes());
+        ok.extend(&[0u8; 8]); // truncated: 4 floats declared, 2 given
+        assert!(parse_weights(&ok).is_err());
+        // trailing garbage
+        let mut t: Vec<u8> = b"TLMW1\0".to_vec();
+        t.extend(0u32.to_le_bytes());
+        t.push(7);
+        assert!(parse_weights(&t).is_err());
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let i = i32_literal(&[7, -3], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, -3]);
+        assert!(f32_literal(&[1.0], &[2]).is_err()); // count mismatch
+    }
+}

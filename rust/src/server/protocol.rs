@@ -1,0 +1,153 @@
+//! JSON-lines wire protocol: request parsing + completion serialization.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::request::{Completion, Request, Slo, TaskType};
+use crate::util::json::Json;
+
+/// Parse a `{"op":"generate", …}` message into a [`Request`].
+///
+/// Either `prompt` (text; its byte length is the input length) or
+/// `input_len` (synthetic prompt) must be present. `slo` defaults per task
+/// type when omitted (chat → interactive 10 s / 50 ms; code → e2e 30 s).
+pub fn parse_generate(
+    msg: &Json,
+    id: u64,
+    max_total_tokens: usize,
+) -> Result<Request> {
+    let task = match msg.get("task").as_str() {
+        Some(name) => TaskType::from_name(name)
+            .ok_or_else(|| anyhow!("unknown task '{name}'"))?,
+        None => TaskType::Chat,
+    };
+    let prompt: Option<Vec<u8>> =
+        msg.get("prompt").as_str().map(|s| s.as_bytes().to_vec());
+    let input_len = match (&prompt, msg.get("input_len").as_usize()) {
+        (Some(p), _) => p.len(),
+        (None, Some(n)) => n,
+        (None, None) => {
+            return Err(anyhow!("generate needs 'prompt' or 'input_len'"))
+        }
+    };
+    if input_len == 0 {
+        return Err(anyhow!("empty prompt"));
+    }
+    let max_tokens = msg.get("max_tokens").as_usize().unwrap_or(32).max(1);
+    if input_len + max_tokens > max_total_tokens {
+        return Err(anyhow!(
+            "input_len {input_len} + max_tokens {max_tokens} exceeds cap {max_total_tokens}"
+        ));
+    }
+    let slo = match Slo::from_json(&msg.get("slo")) {
+        Some(s) => s,
+        None => match task {
+            TaskType::Code => Slo::E2e { e2e_ms: 30_000.0 },
+            _ => Slo::Interactive { ttft_ms: 10_000.0, tpot_ms: 50.0 },
+        },
+    };
+    Ok(Request {
+        id,
+        task,
+        input_len,
+        output_len: max_tokens,
+        slo,
+        arrival_ms: crate::util::now_ms(),
+        prompt,
+    })
+}
+
+/// Serialize a completion into the reply object.
+pub fn completion_to_json(c: &Completion) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(c.id as f64)),
+        ("task", Json::str(c.task.name())),
+        ("generated", Json::num(c.generated as f64)),
+        ("e2e_ms", Json::num(c.e2e_ms)),
+        ("ttft_ms", Json::num(c.ttft_ms)),
+        ("tpot_ms", Json::num(c.tpot_ms)),
+        ("wait_ms", Json::num(c.wait_ms)),
+        ("batch_size", Json::num(c.batch_size as f64)),
+        ("slo_met", Json::Bool(c.slo_met())),
+    ];
+    if let Some(text) = &c.text {
+        fields.push(("text", Json::str(String::from_utf8_lossy(text))));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_with_prompt() {
+        let msg = Json::parse(
+            r#"{"op":"generate","task":"code","prompt":"def f():","max_tokens":16}"#,
+        )
+        .unwrap();
+        let r = parse_generate(&msg, 5, 380).unwrap();
+        assert_eq!(r.id, 5);
+        assert_eq!(r.task, TaskType::Code);
+        assert_eq!(r.input_len, 8);
+        assert_eq!(r.output_len, 16);
+        assert!(r.slo.prioritizes_e2e()); // code default SLO
+        assert_eq!(r.prompt.as_deref(), Some(b"def f():".as_ref()));
+    }
+
+    #[test]
+    fn parse_generate_with_input_len_and_slo() {
+        let msg = Json::parse(
+            r#"{"op":"generate","task":"chat","input_len":100,"max_tokens":8,
+                "slo":{"kind":"interactive","ttft_ms":500,"tpot_ms":20}}"#,
+        )
+        .unwrap();
+        let r = parse_generate(&msg, 0, 380).unwrap();
+        assert_eq!(r.input_len, 100);
+        assert_eq!(
+            r.slo,
+            Slo::Interactive { ttft_ms: 500.0, tpot_ms: 20.0 }
+        );
+        assert!(r.prompt.is_none());
+    }
+
+    #[test]
+    fn parse_generate_rejects_bad_input() {
+        let over = Json::parse(
+            r#"{"op":"generate","input_len":350,"max_tokens":50}"#,
+        )
+        .unwrap();
+        assert!(parse_generate(&over, 0, 380).is_err());
+        let none = Json::parse(r#"{"op":"generate"}"#).unwrap();
+        assert!(parse_generate(&none, 0, 380).is_err());
+        let bad_task =
+            Json::parse(r#"{"op":"generate","task":"x","input_len":5}"#)
+                .unwrap();
+        assert!(parse_generate(&bad_task, 0, 380).is_err());
+    }
+
+    #[test]
+    fn completion_roundtrips_to_json() {
+        let c = Completion {
+            id: 9,
+            task: TaskType::Chat,
+            slo: Slo::Interactive { ttft_ms: 100.0, tpot_ms: 10.0 },
+            input_len: 20,
+            generated: 4,
+            e2e_ms: 50.0,
+            ttft_ms: 30.0,
+            tpot_ms: 5.0,
+            wait_ms: 2.0,
+            batch_size: 2,
+            text: Some(b"hello".to_vec()),
+        };
+        let v = completion_to_json(&c);
+        assert_eq!(v.get("ok"), &Json::Bool(true));
+        assert_eq!(v.get("id").as_i64(), Some(9));
+        assert_eq!(v.get("slo_met"), &Json::Bool(true));
+        assert_eq!(v.get("text").as_str(), Some("hello"));
+        // parseable end-to-end
+        let text = v.to_string_compact();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+}

@@ -1,0 +1,217 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! typed accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// A parsed argument set.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for parsing + help generation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag, Some(default) => value option.
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1:?}")]
+    BadValue(String, String),
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(
+        argv: &[String],
+        specs: &[OptSpec],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        // seed defaults
+        for spec in specs {
+            if let Some(d) = spec.default {
+                out.flags.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let find = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = find(name)
+                    .ok_or_else(|| CliError::Unknown(name.to_string()))?;
+                let value = if spec.default.is_none() && inline_val.is_none() {
+                    "true".to_string() // boolean flag
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(name.into()))?
+                };
+                out.flags.insert(name.to_string(), value);
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true" | "1" | "yes"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let raw = self.get(name).unwrap_or("0");
+        raw.parse()
+            .map_err(|_| CliError::BadValue(name.into(), raw.into()))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let raw = self.get(name).unwrap_or("0");
+        raw.parse()
+            .map_err(|_| CliError::BadValue(name.into(), raw.into()))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let raw = self.get(name).unwrap_or("0");
+        raw.parse()
+            .map_err(|_| CliError::BadValue(name.into(), raw.into()))
+    }
+
+    /// Comma-separated list of usize (e.g. `--batch-sizes 1,2,4`).
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        let raw = self.get(name).unwrap_or("");
+        if raw.is_empty() {
+            return Ok(vec![]);
+        }
+        raw.split(',')
+            .map(|p| {
+                p.trim().parse().map_err(|_| {
+                    CliError::BadValue(name.into(), raw.into())
+                })
+            })
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render help text for a command.
+pub fn render_help(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{program} — {about}\n\nOptions:\n");
+    for s in specs {
+        let left = match s.default {
+            Some(d) => format!("  --{} <value>  [default: {}]", s.name, d),
+            None => format!("  --{}", s.name),
+        };
+        out.push_str(&format!("{left:<44}{}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "seed", help: "rng seed", default: Some("42") },
+            OptSpec { name: "name", help: "label", default: Some("x") },
+            OptSpec { name: "verbose", help: "chatty", default: None },
+            OptSpec { name: "sizes", help: "list", default: Some("") },
+        ]
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.usize("seed").unwrap(), 42);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&argv(&["--seed", "7", "--name=run1"]), &specs())
+            .unwrap();
+        assert_eq!(a.usize("seed").unwrap(), 7);
+        assert_eq!(a.str("name"), "run1");
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&argv(&["--verbose"]), &specs()).unwrap();
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::parse(&argv(&["serve", "--seed", "1", "extra"]),
+                            &specs()).unwrap();
+        assert_eq!(a.positional(), &["serve", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(Args::parse(&argv(&["--nope"]), &specs()),
+                         Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(Args::parse(&argv(&["--seed"]), &specs()),
+                         Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let a = Args::parse(&argv(&["--seed", "abc"]), &specs()).unwrap();
+        assert!(matches!(a.usize("seed"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = Args::parse(&argv(&["--sizes", "1,2, 4"]), &specs()).unwrap();
+        assert_eq!(a.usize_list("sizes").unwrap(), vec![1, 2, 4]);
+        let b = Args::parse(&[], &specs()).unwrap();
+        assert!(b.usize_list("sizes").unwrap().is_empty());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let text = render_help("prog", "does things", &specs());
+        assert!(text.contains("--seed"));
+        assert!(text.contains("default: 42"));
+    }
+}

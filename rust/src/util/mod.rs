@@ -1,0 +1,20 @@
+//! Utility substrates: deterministic RNG, JSON, statistics / least squares,
+//! CLI parsing, and a mini property-test harness.
+//!
+//! These fill the roles of `rand`, `serde_json`, `clap`, and `proptest`,
+//! which are unavailable in this offline build environment (DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Milliseconds since an arbitrary process-local epoch (monotonic).
+pub fn now_ms() -> f64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_secs_f64() * 1e3
+}

@@ -1,0 +1,103 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing case number and seed so the case can be replayed exactly:
+//!
+//! ```
+//! use slo_serve::util::prop::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let a = rng.range(-1000, 1000);
+//!     let b = rng.range(-1000, 1000);
+//!     if a + b != b + a { return Err(format!("a={a} b={b}")); }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Set `PROP_SEED=<n>` to replay a single failing case, `PROP_CASES=<n>` to
+//! override the case count.
+
+use crate::util::rng::Rng;
+
+/// Run `property` over `cases` seeded random cases; panics on first failure
+/// with replay instructions. Returns the number of cases run.
+pub fn check<F>(name: &str, cases: usize, mut property: F) -> usize
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(seed_text) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed_text.parse().expect("PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed on PROP_SEED={seed}: {msg}");
+        }
+        return 1;
+    }
+    let cases = std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    for case in 0..cases {
+        // Per-case seed is deterministic and independent of run order.
+        let seed = 0x5EED_0000_0000_0000u64 ^ (case as u64).wrapping_mul(
+            0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}/{cases}): {msg}\n\
+                 replay with: PROP_SEED={seed}"
+            );
+        }
+    }
+    cases
+}
+
+/// Generate a random vector with the given length range and element generator.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    len_range: (usize, usize),
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let (lo, hi) = len_range;
+    let len = lo + rng.below(hi - lo + 1);
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let n = check("tautology", 50, |_| Ok(()));
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with: PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn vec_of_respects_length_range() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, (2, 5), |r| r.below(10));
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut firsts = Vec::new();
+        for _ in 0..2 {
+            let mut captured = Vec::new();
+            check("capture", 3, |rng| {
+                captured.push(rng.next_u64());
+                Ok(())
+            });
+            firsts.push(captured);
+        }
+        assert_eq!(firsts[0], firsts[1]);
+    }
+}

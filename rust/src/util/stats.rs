@@ -1,0 +1,256 @@
+//! Statistics + small linear algebra substrate.
+//!
+//! Provides the summary statistics used by the metrics module and the
+//! least-squares solver behind the paper's latency predictor (Eqs. 14–15 are
+//! multiple linear regressions with an interaction term — a 4-coefficient
+//! normal-equations solve).
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute from a sample (unsorted). Returns None for empty input.
+    pub fn from(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        Some(Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+}
+
+/// Percentile over a pre-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = q * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Mean of a sample (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Solve the linear system `A x = b` in place (Gaussian elimination with
+/// partial pivoting). `a` is row-major `n × n`. Returns None if singular.
+pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // pivot
+        let mut best = col;
+        for row in (col + 1)..n {
+            if a[row * n + col].abs() > a[best * n + col].abs() {
+                best = row;
+            }
+        }
+        if a[best * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if best != col {
+            for k in 0..n {
+                a.swap(col * n + k, best * n + k);
+            }
+            b.swap(col, best);
+        }
+        // eliminate
+        let pivot = a[col * n + col];
+        for row in (col + 1)..n {
+            let factor = a[row * n + col] / pivot;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row * n + k] -= factor * a[col * n + k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in (row + 1)..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Some(x)
+}
+
+/// Ordinary least squares: find `beta` minimizing `‖X beta − y‖²`.
+///
+/// `rows` are feature vectors (each length `k`); solves the normal equations
+/// `XᵀX beta = Xᵀy`. Returns None if the design matrix is rank-deficient.
+pub fn least_squares(rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(rows.len(), y.len());
+    if rows.is_empty() {
+        return None;
+    }
+    let k = rows[0].len();
+    let mut xtx = vec![0.0; k * k];
+    let mut xty = vec![0.0; k];
+    for (row, &target) in rows.iter().zip(y) {
+        assert_eq!(row.len(), k, "inconsistent feature width");
+        for i in 0..k {
+            xty[i] += row[i] * target;
+            for j in 0..k {
+                xtx[i * k + j] += row[i] * row[j];
+            }
+        }
+    }
+    solve_linear(&mut xtx, &mut xty, k)
+}
+
+/// Coefficient of determination for a fitted model.
+pub fn r_squared(predicted: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    let m = mean(actual);
+    let ss_res: f64 = predicted
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| (a - p).powi(2))
+        .sum();
+    let ss_tot: f64 = actual.iter().map(|a| (a - m).powi(2)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(Summary::from(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, 4.0];
+        let x = solve_linear(&mut a, &mut b, 2).unwrap();
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // first pivot is zero — needs row swap
+        let mut a = vec![0.0, 1.0, 1.0, 0.0];
+        let mut b = vec![2.0, 5.0];
+        let x = solve_linear(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve_linear(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_model() {
+        // y = 2*x0 + 3*x1 - 1 (paper Eq.14 form: interaction + linears + const)
+        let mut rng = Rng::new(0);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..50 {
+            let x0 = rng.uniform(0.0, 10.0);
+            let x1 = rng.uniform(0.0, 10.0);
+            rows.push(vec![x0, x1, 1.0]);
+            ys.push(2.0 * x0 + 3.0 * x1 - 1.0);
+        }
+        let beta = least_squares(&rows, &ys).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-8);
+        assert!((beta[1] - 3.0).abs() < 1e-8);
+        assert!((beta[2] + 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn least_squares_with_noise_is_close() {
+        let mut rng = Rng::new(1);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..2000 {
+            let b = rng.uniform(1.0, 32.0);
+            let l = rng.uniform(100.0, 2000.0);
+            rows.push(vec![b * l, b, l, 1.0]);
+            let y = 0.1 * b * l + 5.7 * b + 0.01 * l + 43.67
+                + rng.gaussian(0.0, 1.0);
+            ys.push(y);
+        }
+        let beta = least_squares(&rows, &ys).unwrap();
+        assert!((beta[0] - 0.1).abs() < 1e-3, "alpha {}", beta[0]);
+        assert!((beta[1] - 5.7).abs() < 0.2, "beta {}", beta[1]);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_flat() {
+        assert!((r_squared(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(r_squared(&[5.0, 5.0], &[5.0, 5.0]), 1.0);
+    }
+}

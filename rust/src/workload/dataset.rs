@@ -1,0 +1,230 @@
+//! Synthetic dataset generators matching the ShareGPT-family marginals.
+
+use crate::config::SloTargets;
+use crate::coordinator::request::{Request, TaskType};
+use crate::util::rng::Rng;
+
+/// Length-distribution spec for one task class (log-normal, truncated).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    pub task: TaskType,
+    /// log-normal parameters for input length (tokens)
+    pub input_mu: f64,
+    pub input_sigma: f64,
+    /// log-normal parameters for output length (tokens)
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    /// truncation caps (the paper restricts requests to < 2 k tokens)
+    pub min_tokens: usize,
+    pub max_input: usize,
+    pub max_output: usize,
+}
+
+impl DatasetSpec {
+    /// ShareGPT_Vicuna_unfiltered-like chat traffic: conversational prompts
+    /// (median ≈ 90 tokens, heavy tail) with medium responses (median ≈ 200).
+    pub fn sharegpt_chat() -> DatasetSpec {
+        DatasetSpec {
+            task: TaskType::Chat,
+            input_mu: 4.5, // e^4.5 ≈ 90
+            input_sigma: 1.0,
+            output_mu: 5.3, // e^5.3 ≈ 200
+            output_sigma: 0.35,
+            min_tokens: 4,
+            max_input: 1500,
+            max_output: 500,
+        }
+    }
+
+    /// Python-Code-23k-ShareGPT-like code generation: instruction prompts
+    /// (median ≈ 150) with long completions (median ≈ 330) — "a code is
+    /// useful only when completed".
+    pub fn python_code() -> DatasetSpec {
+        DatasetSpec {
+            task: TaskType::Code,
+            input_mu: 5.0, // e^5.0 ≈ 150
+            input_sigma: 0.7,
+            output_mu: 5.8, // e^5.8 ≈ 330
+            output_sigma: 0.3,
+            min_tokens: 8,
+            max_input: 1500,
+            max_output: 500,
+        }
+    }
+
+    /// Scaled copy fitting a smaller engine (the TinyLM CPU testbed).
+    pub fn scaled_to(&self, max_input: usize, max_output: usize) -> DatasetSpec {
+        let in_scale = max_input as f64 / self.max_input as f64;
+        let out_scale = max_output as f64 / self.max_output as f64;
+        DatasetSpec {
+            input_mu: self.input_mu + in_scale.ln(),
+            output_mu: self.output_mu + out_scale.ln(),
+            max_input,
+            max_output,
+            min_tokens: self.min_tokens.min(max_input / 2).max(1),
+            ..*self
+        }
+    }
+
+    /// Draw (input_len, output_len).
+    pub fn sample_lengths(&self, rng: &mut Rng) -> (usize, usize) {
+        let draw = |rng: &mut Rng, mu: f64, sigma: f64, cap: usize, min: usize| {
+            let v = rng.lognormal(mu, sigma).round() as usize;
+            v.clamp(min, cap)
+        };
+        (
+            draw(rng, self.input_mu, self.input_sigma, self.max_input, self.min_tokens),
+            draw(rng, self.output_mu, self.output_sigma, self.max_output, 1),
+        )
+    }
+}
+
+/// Builds request waves from dataset specs + SLO targets (the paper's
+/// mixed-dataset workflow: equal sampling, tagged by task, shuffled).
+#[derive(Debug, Clone)]
+pub struct RequestFactory {
+    pub chat: DatasetSpec,
+    pub code: DatasetSpec,
+    pub slos: SloTargets,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl RequestFactory {
+    pub fn new(seed: u64, slos: SloTargets) -> RequestFactory {
+        RequestFactory {
+            chat: DatasetSpec::sharegpt_chat(),
+            code: DatasetSpec::python_code(),
+            slos,
+            rng: Rng::new(seed ^ 0xDA7A_5E7),
+            next_id: 0,
+        }
+    }
+
+    /// Cap lengths for a smaller engine (e.g. TinyLM: ≤ max_total tokens).
+    pub fn with_caps(mut self, max_input: usize, max_output: usize) -> Self {
+        self.chat = self.chat.scaled_to(max_input, max_output);
+        self.code = self.code.scaled_to(max_input, max_output);
+        self
+    }
+
+    fn make(&mut self, spec_is_code: bool) -> Request {
+        let spec = if spec_is_code { self.code } else { self.chat };
+        let (input, output) = spec.sample_lengths(&mut self.rng);
+        let slo = if spec_is_code {
+            self.slos.code_slo()
+        } else {
+            self.slos.chat_slo()
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::synthetic(id, spec.task, input, output, slo)
+    }
+
+    /// The paper's mixed wave: ⌈n/2⌉ code + ⌊n/2⌋ chat, shuffled.
+    pub fn mixed_wave(&mut self, n: usize) -> Vec<Request> {
+        let mut out: Vec<Request> = (0..n)
+            .map(|i| self.make(i < n.div_ceil(2)))
+            .collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let mut shuffled: Vec<Request> =
+            order.into_iter().map(|i| out[i].clone()).collect();
+        // ids follow the shuffled arrival order
+        for (i, r) in shuffled.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        out.clear();
+        shuffled
+    }
+
+    /// Single-task wave.
+    pub fn uniform_wave(&mut self, n: usize, task: TaskType) -> Vec<Request> {
+        (0..n).map(|_| self.make(task == TaskType::Code)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_respect_caps() {
+        let mut rng = Rng::new(0);
+        for spec in [DatasetSpec::sharegpt_chat(), DatasetSpec::python_code()] {
+            for _ in 0..2000 {
+                let (i, o) = spec.sample_lengths(&mut rng);
+                assert!(i >= spec.min_tokens && i <= spec.max_input);
+                assert!(o >= 1 && o <= spec.max_output);
+            }
+        }
+    }
+
+    #[test]
+    fn chat_and_code_marginals_differ() {
+        let mut rng = Rng::new(1);
+        let mean = |spec: &DatasetSpec, rng: &mut Rng| {
+            let n = 3000;
+            let s: usize =
+                (0..n).map(|_| spec.sample_lengths(rng).1).sum();
+            s as f64 / n as f64
+        };
+        let chat_out = mean(&DatasetSpec::sharegpt_chat(), &mut rng);
+        let code_out = mean(&DatasetSpec::python_code(), &mut rng);
+        assert!(
+            code_out > chat_out,
+            "code outputs ({code_out:.0}) should exceed chat ({chat_out:.0})"
+        );
+    }
+
+    #[test]
+    fn mixed_wave_is_half_and_half() {
+        let mut f = RequestFactory::new(7, SloTargets::default());
+        let wave = f.mixed_wave(20);
+        assert_eq!(wave.len(), 20);
+        let code = wave.iter().filter(|r| r.task == TaskType::Code).count();
+        assert_eq!(code, 10);
+        // ids are arrival-ordered
+        for (i, r) in wave.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        // SLO matches task
+        for r in &wave {
+            match r.task {
+                TaskType::Code => assert!(r.slo.prioritizes_e2e()),
+                _ => assert!(!r.slo.prioritizes_e2e()),
+            }
+        }
+    }
+
+    #[test]
+    fn odd_wave_rounds_up_code() {
+        let mut f = RequestFactory::new(3, SloTargets::default());
+        let wave = f.mixed_wave(7);
+        let code = wave.iter().filter(|r| r.task == TaskType::Code).count();
+        assert_eq!(code, 4);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let gen = |seed| {
+            let mut f = RequestFactory::new(seed, SloTargets::default());
+            f.mixed_wave(10)
+                .iter()
+                .map(|r| (r.input_len, r.output_len))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(gen(5), gen(5));
+        assert_ne!(gen(5), gen(6));
+    }
+
+    #[test]
+    fn scaled_caps_apply() {
+        let mut f = RequestFactory::new(11, SloTargets::default())
+            .with_caps(200, 60);
+        for r in f.mixed_wave(200) {
+            assert!(r.input_len <= 200);
+            assert!(r.output_len <= 60);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload generation: synthetic stand-ins for the paper's datasets.
+//!
+//! The paper mixes two ShareGPT-family datasets 50/50 (§5.1):
+//!
+//! * **ShareGPT_Vicuna_unfiltered** — chatbot conversations; judged on
+//!   TTFT + TPOT.
+//! * **Python-Code-23k-ShareGPT** — code generation; judged on e2e latency.
+//!
+//! The datasets themselves are not redistributable here (DESIGN.md §2); the
+//! generators reproduce their *length marginals* — log-normal input/output
+//! token lengths with the published medians, truncated to the paper's 2 k
+//! cap — which is all the scheduler consumes (task type, lengths, SLO).
+
+pub mod dataset;
+pub mod trace;
+
+pub use dataset::{DatasetSpec, RequestFactory};
+pub use trace::{ArrivalProcess, TraceSpec};

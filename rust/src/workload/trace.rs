@@ -1,0 +1,98 @@
+//! Arrival processes: turn request waves into timed traces.
+//!
+//! The paper's evaluation submits waves of concurrent requests (arrival at
+//! t=0); production front-ends see Poisson or bursty arrivals. All three
+//! are supported so the serving example and ablations can exercise the
+//! continuous-batching path under load.
+
+use crate::coordinator::request::Request;
+use crate::util::rng::Rng;
+
+/// Arrival-time process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// All requests arrive at t = 0 (the paper's wave methodology).
+    Concurrent,
+    /// Poisson arrivals at `rps` requests/second.
+    Poisson { rps: f64 },
+    /// Bursts of `burst` concurrent requests every `period_ms`.
+    Bursty { burst: usize, period_ms: f64 },
+}
+
+/// Trace spec: how many requests and how they arrive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    pub n: usize,
+    pub arrivals: ArrivalProcess,
+}
+
+impl ArrivalProcess {
+    /// Stamp arrival times onto a request wave (in place, preserving order).
+    pub fn apply(&self, requests: &mut [Request], rng: &mut Rng) {
+        match *self {
+            ArrivalProcess::Concurrent => {
+                for r in requests.iter_mut() {
+                    r.arrival_ms = 0.0;
+                }
+            }
+            ArrivalProcess::Poisson { rps } => {
+                assert!(rps > 0.0, "Poisson rate must be positive");
+                let mut t = 0.0;
+                for r in requests.iter_mut() {
+                    t += rng.exponential(rps / 1000.0); // gaps in ms
+                    r.arrival_ms = t;
+                }
+            }
+            ArrivalProcess::Bursty { burst, period_ms } => {
+                assert!(burst > 0);
+                for (i, r) in requests.iter_mut().enumerate() {
+                    r.arrival_ms = (i / burst) as f64 * period_ms;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SloTargets;
+    use crate::workload::dataset::RequestFactory;
+
+    fn wave(n: usize) -> Vec<Request> {
+        RequestFactory::new(0, SloTargets::default()).mixed_wave(n)
+    }
+
+    #[test]
+    fn concurrent_zeroes_arrivals() {
+        let mut reqs = wave(5);
+        let mut rng = Rng::new(0);
+        ArrivalProcess::Concurrent.apply(&mut reqs, &mut rng);
+        assert!(reqs.iter().all(|r| r.arrival_ms == 0.0));
+    }
+
+    #[test]
+    fn poisson_is_monotone_with_correct_rate() {
+        let mut reqs = wave(2000);
+        let mut rng = Rng::new(1);
+        ArrivalProcess::Poisson { rps: 10.0 }.apply(&mut reqs, &mut rng);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        // 2000 requests at 10 rps ≈ 200 s span
+        let span_s = reqs.last().unwrap().arrival_ms / 1000.0;
+        assert!((span_s - 200.0).abs() < 20.0, "span {span_s}");
+    }
+
+    #[test]
+    fn bursty_groups() {
+        let mut reqs = wave(10);
+        let mut rng = Rng::new(2);
+        ArrivalProcess::Bursty { burst: 4, period_ms: 100.0 }
+            .apply(&mut reqs, &mut rng);
+        assert_eq!(reqs[0].arrival_ms, 0.0);
+        assert_eq!(reqs[3].arrival_ms, 0.0);
+        assert_eq!(reqs[4].arrival_ms, 100.0);
+        assert_eq!(reqs[9].arrival_ms, 200.0);
+    }
+}

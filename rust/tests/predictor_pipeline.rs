@@ -1,0 +1,72 @@
+//! Integration: profiling → least-squares fit → prediction accuracy on the
+//! simulated engine (the §4.2/§5.1 pipeline end to end).
+
+use slo_serve::bench::fit_predictor_from_profile;
+use slo_serve::config::profiles::{builtin_profiles, by_name};
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::engine::{Engine, EngineRequest};
+
+#[test]
+fn fitted_predictor_predicts_engine_latency() {
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    let fitted = fit_predictor_from_profile(&profile, 3);
+    let mut engine = SimEngine::new(profile, 4, 0);
+    for (b, li, lo) in [(1usize, 300usize, 50usize), (2, 700, 120), (4, 1200, 200)] {
+        let batch: Vec<EngineRequest> = (0..b)
+            .map(|i| EngineRequest {
+                id: i as u64,
+                input_len: li,
+                max_new_tokens: lo,
+                prompt: None,
+            })
+            .collect();
+        let t0 = engine.now_ms();
+        let out = engine.run_batch(&batch).unwrap();
+        let measured = out[0].finish_ms - t0;
+        let predicted = fitted.predict(b, li, lo).exec_ms;
+        let rel = (measured - predicted).abs() / measured;
+        assert!(
+            rel < 0.03,
+            "b={b} li={li} lo={lo}: measured {measured:.1} predicted {predicted:.1} rel {rel:.3}"
+        );
+    }
+}
+
+#[test]
+fn fit_works_for_every_builtin_profile() {
+    for profile in builtin_profiles() {
+        let fitted = fit_predictor_from_profile(&profile, 1);
+        // fitted alpha must be within 20% of truth for all profiles
+        let rel = (fitted.prefill.alpha - profile.truth.prefill.alpha).abs()
+            / profile.truth.prefill.alpha.abs().max(1e-9);
+        assert!(rel < 0.2, "{}: prefill alpha rel {rel}", profile.name);
+    }
+}
+
+#[test]
+fn ttft_tpot_decomposition_consistent() {
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    let truth = profile.truth;
+    let mut engine = SimEngine::new(profile, 2, 0);
+    let out = engine
+        .run_batch(&[EngineRequest {
+            id: 0,
+            input_len: 500,
+            max_new_tokens: 100,
+            prompt: None,
+        }])
+        .unwrap();
+    let item = &out[0];
+    // TTFT == prefill time (no wait in an empty engine)
+    let ttft = item.first_token_ms - item.start_ms;
+    assert!((ttft - truth.prefill_ms(1, 500)).abs() / ttft < 0.01);
+    // decode total == closed-form Eq. 16 over the 99 post-first tokens
+    let decode = item.finish_ms - item.first_token_ms;
+    let expected: f64 = (2..=100).map(|k| truth.tpot_at(1, 500 + k)).sum();
+    assert!(
+        (decode - expected).abs() / expected < 0.01,
+        "decode {decode} vs {expected}"
+    );
+}

@@ -1,0 +1,131 @@
+//! Integration: TCP JSON-lines server over simulated instances.
+
+use slo_serve::config::profiles::by_name;
+use slo_serve::coordinator::policies::Policy;
+use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::engine::instance::InstanceHandle;
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::server::{start, Client, ServerConfig};
+use slo_serve::util::json::Json;
+
+fn boot(n_instances: usize) -> slo_serve::server::ServerHandle {
+    let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    let instances: Vec<InstanceHandle> = (0..n_instances)
+        .map(|i| {
+            InstanceHandle::spawn(
+                i,
+                Box::new(SimEngine::new(profile.clone(), 4, i as u64)),
+            )
+        })
+        .collect();
+    let cfg = ServerConfig {
+        policy: Policy::SloAware(SaParams::with_max_batch(4)),
+        predictor: profile.truth,
+        window_ms: 10,
+        max_batch: 4,
+        max_total_tokens: profile.max_total_tokens,
+    };
+    start(cfg, instances).unwrap()
+}
+
+#[test]
+fn generate_roundtrip() {
+    let server = boot(1);
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client
+        .call(
+            &Json::parse(
+                r#"{"op":"generate","task":"chat","input_len":100,"max_tokens":10}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(true), "{reply}");
+    assert!(reply.get("e2e_ms").as_f64().unwrap() > 0.0);
+    assert!(reply.get("ttft_ms").as_f64().unwrap() > 0.0);
+    assert_eq!(reply.get("generated").as_usize(), Some(10));
+    server.shutdown();
+}
+
+#[test]
+fn stats_accumulate() {
+    let server = boot(2);
+    let mut a = Client::connect(server.addr).unwrap();
+    let mut b = Client::connect(server.addr).unwrap();
+    for client in [&mut a, &mut b] {
+        let reply = client
+            .call(
+                &Json::parse(
+                    r#"{"op":"generate","task":"code","input_len":50,"max_tokens":5,
+                        "slo":{"kind":"e2e","e2e_ms":60000}}"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(reply.get("ok"), &Json::Bool(true), "{reply}");
+    }
+    let stats = a.call(&Json::parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("served").as_usize(), Some(2));
+    assert!(stats.get("attainment").as_f64().unwrap() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_rejected() {
+    let server = boot(1);
+    let mut client = Client::connect(server.addr).unwrap();
+    // bad json
+    let reply = client.call(&Json::str("not an op")).unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    // missing fields
+    let reply = client
+        .call(&Json::parse(r#"{"op":"generate"}"#).unwrap())
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    // unknown op
+    let reply = client
+        .call(&Json::parse(r#"{"op":"fly"}"#).unwrap())
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    // oversized request
+    let reply = client
+        .call(
+            &Json::parse(
+                r#"{"op":"generate","input_len":999999,"max_tokens":10}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_batched_together() {
+    let server = boot(1);
+    let addr = server.addr;
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.call(
+                    &Json::parse(
+                        r#"{"op":"generate","task":"chat","input_len":80,"max_tokens":6}"#,
+                    )
+                    .unwrap(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let mut max_batch_seen = 0;
+    for t in threads {
+        let reply = t.join().unwrap();
+        assert_eq!(reply.get("ok"), &Json::Bool(true), "{reply}");
+        max_batch_seen =
+            max_batch_seen.max(reply.get("batch_size").as_usize().unwrap());
+    }
+    // at least some of the 4 concurrent requests shared a batch
+    assert!(max_batch_seen >= 2, "no batching observed");
+    server.shutdown();
+}
