@@ -46,8 +46,12 @@ fn main() -> anyhow::Result<()> {
         &requests, &predicted, &infos, &predictor,
         &profile.mem, &SaParams::with_max_batch(MAX_BATCH),
     );
-    println!("scheduling overhead: {:.3} ms across {INSTANCES} instances",
-             outcome.overhead_ms);
+    println!(
+        "scheduling overhead across {INSTANCES} instances: {:.3} ms wall \
+         (parallel mapping), {:.3} ms cpu (Σ per-instance, the paper's \
+         sequential-mapping cost)",
+        outcome.overhead_ms, outcome.cpu_ms,
+    );
 
     // Execute concurrently: one worker thread per instance.
     let handles: Vec<InstanceHandle> = (0..INSTANCES)

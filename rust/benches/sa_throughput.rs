@@ -1,0 +1,118 @@
+//! SA scheduler throughput: incremental (prediction table + delta
+//! evaluation + zero-alloc moves) vs the full-evaluation reference path,
+//! at wave sizes N ∈ {16, 64, 256, 512}.
+//!
+//! Reports per-mapping wall time and objective evaluations per second for
+//! both paths, and writes machine-readable results to
+//! `BENCH_sa_throughput.json` (cargo package root) so future PRs can track
+//! the perf trajectory.
+//!
+//!     cargo bench --bench sa_throughput
+
+use slo_serve::bench::time_ms;
+use slo_serve::coordinator::objective::{Evaluator, Job};
+use slo_serve::coordinator::predictor::LatencyPredictor;
+use slo_serve::coordinator::priority::annealing::{
+    priority_mapping, priority_mapping_full, SaParams,
+};
+use slo_serve::coordinator::request::Slo;
+use slo_serve::metrics::Table;
+use slo_serve::util::json::Json;
+use slo_serve::util::rng::Rng;
+
+const MAX_BATCH: usize = 8;
+
+/// Mixed wave with SLOs tight enough that the sorted seed never meets them
+/// all — the early-exit fast path would otherwise skip the search entirely
+/// and the measurement would be meaningless.
+fn jobs(n: usize, seed: u64) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let input_len = rng.range(50, 1500) as usize;
+            let output_len = rng.range(20, 400) as usize;
+            let slo = if i % 10 == 0 {
+                // a few unmeetable bounds pin the search away from early exit
+                Slo::E2e { e2e_ms: 1.0 }
+            } else if rng.chance(0.5) {
+                Slo::E2e { e2e_ms: rng.uniform(500.0, 30_000.0) }
+            } else {
+                Slo::Interactive {
+                    ttft_ms: rng.uniform(200.0, 8_000.0),
+                    tpot_ms: rng.uniform(10.0, 50.0),
+                }
+            };
+            Job { req_idx: i, input_len, output_len, slo }
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== SA priority-mapping throughput: incremental vs full eval ==\n");
+    let pred = LatencyPredictor::paper_table2();
+    let mut t = Table::new(&[
+        "N",
+        "full (ms)",
+        "incremental (ms)",
+        "speedup",
+        "full evals/s",
+        "incremental evals/s",
+    ]);
+    let mut sizes: Vec<Json> = Vec::new();
+
+    for &n in &[16usize, 64, 256, 512] {
+        let js = jobs(n, 0xBEEF ^ n as u64);
+        let ev = Evaluator::new(&js, &pred);
+        let params =
+            SaParams { max_batch: MAX_BATCH, seed: 7, ..Default::default() };
+
+        // deterministic for a fixed seed, so stats come from one dry run
+        let res = priority_mapping(&ev, &params);
+        assert!(!res.stats.early_exit, "N={n}: early exit would skew timing");
+        let evals = res.stats.evals;
+
+        let iters = if n >= 256 { 3 } else { 10 };
+        let inc_ms = time_ms(1, iters, || {
+            let _ = priority_mapping(&ev, &params);
+        });
+        let full_ms = time_ms(1, iters, || {
+            let _ = priority_mapping_full(&ev, &params);
+        });
+
+        let speedup = full_ms / inc_ms;
+        let full_eps = evals as f64 / (full_ms / 1e3);
+        let inc_eps = evals as f64 / (inc_ms / 1e3);
+        t.row(vec![
+            n.to_string(),
+            format!("{full_ms:.3}"),
+            format!("{inc_ms:.3}"),
+            format!("{speedup:.1}x"),
+            format!("{full_eps:.0}"),
+            format!("{inc_eps:.0}"),
+        ]);
+        sizes.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("sa_evals", Json::num(evals as f64)),
+            ("full_ms", Json::num(full_ms)),
+            ("incremental_ms", Json::num(inc_ms)),
+            ("speedup", Json::num(speedup)),
+            ("full_evals_per_s", Json::num(full_eps)),
+            ("incremental_evals_per_s", Json::num(inc_eps)),
+        ]));
+    }
+    print!("{}", t.render());
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sa_throughput")),
+        ("max_batch", Json::num(MAX_BATCH as f64)),
+        ("sa_t0", Json::num(SaParams::default().t0)),
+        ("sa_iters_per_temp", Json::num(SaParams::default().iters_per_temp as f64)),
+        ("sizes", Json::arr(sizes)),
+    ]);
+    let out = format!("{}\n", doc.to_string_pretty());
+    std::fs::write("BENCH_sa_throughput.json", out)
+        .expect("writing BENCH_sa_throughput.json");
+    println!("\nwrote BENCH_sa_throughput.json");
+    println!("paths are bit-identical (tests/incremental_eval_equivalence.rs);");
+    println!("the speedup is pure hot-path restructuring.");
+}

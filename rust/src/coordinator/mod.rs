@@ -9,17 +9,21 @@
 //!                  └── output-len & memory models        [instances: engines]
 //! ```
 //!
-//! * [`request`]   — task types, SLOs, lifecycle records.
-//! * [`profiler`]  — output-length + memory + latency-sample profiling.
-//! * [`predictor`] — Eq. 14–19 latency model (least-squares fitted).
-//! * [`objective`] — the G objective and schedule representation.
-//! * [`priority`]  — Algorithm 1 (SA) and the exhaustive strawman.
-//! * [`policies`]  — FCFS/SJF/EDF/MLFQ baselines + policy dispatch.
-//! * [`scheduler`] — Algorithm 2 multi-instance assignment.
-//! * this module   — plan execution against engines and completion records.
+//! * [`request`]    — task types, SLOs, lifecycle records.
+//! * [`profiler`]   — output-length + memory + latency-sample profiling.
+//! * [`predictor`]  — Eq. 14–19 latency model (least-squares fitted).
+//! * [`pred_table`] — per-wave (job, batch) prediction table feeding the
+//!   SA hot path.
+//! * [`objective`]  — the G objective, schedule representation, and the
+//!   full + incremental evaluators.
+//! * [`priority`]   — Algorithm 1 (SA) and the exhaustive strawman.
+//! * [`policies`]   — FCFS/SJF/EDF/MLFQ baselines + policy dispatch.
+//! * [`scheduler`]  — Algorithm 2 multi-instance assignment.
+//! * this module    — plan execution against engines and completion records.
 
 pub mod objective;
 pub mod policies;
+pub mod pred_table;
 pub mod predictor;
 pub mod priority;
 pub mod profiler;

@@ -6,12 +6,33 @@
 //! of all earlier batches (Eq. 11). `G = n / Σ t_e2e` (Eqs. 2–3) — the ratio
 //! of SLO attainment to accumulated latency.
 //!
-//! [`Evaluator`] computes G for a candidate schedule in O(N) with **zero
-//! heap allocation per call** — it is the inner loop of the simulated-
-//! annealing search (≈10⁴ calls per scheduling decision; DESIGN.md §10).
+//! Two evaluators implement Eqs. 2–13:
+//!
+//! * [`Evaluator`] — the reference full evaluation: O(N) predictor calls,
+//!   zero heap allocation per call. Used for seeds, baselines, and as the
+//!   ground truth the delta path is checked against.
+//! * [`IncrementalEval`] — the simulated-annealing hot path (≈10⁴ calls per
+//!   scheduling decision). It owns the candidate schedule plus per-batch
+//!   aggregates (max exec, Σ(wait+exec), met count, entry wait) backed by a
+//!   per-wave [`PredTable`], so a neighbourhood move recomputes only the
+//!   touched batches plus the downstream suffix whose entry wait actually
+//!   shifted (exact `f64` comparison), then re-reduces the per-batch
+//!   partials.
+//!
+//! **Equivalence guarantee**: both evaluators accumulate `Σ t_e2e` as
+//! per-batch partial sums (job order within the batch, then batch order)
+//! and waiting time as the running sum of batch maxima. Because the
+//! groupings are identical, the table entries are stored predictor outputs,
+//! and the unchanged-suffix shortcut fires only on exact `f64` equality of
+//! the entry wait, every [`IncrementalEval`] result is **bit-identical** to
+//! a fresh [`Evaluator::eval`] of the same schedule — enforced by
+//! `tests/incremental_eval_equivalence.rs`.
 
+use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::priority::moves::{self, OrderUndo};
 use crate::coordinator::request::{Request, Slo};
+use crate::util::rng::Rng;
 
 /// Scheduler's view of one job: lengths are *predictions* (the true output
 /// length is hidden from the scheduler — §4.2).
@@ -129,6 +150,9 @@ pub struct Eval {
 }
 
 impl Eval {
+    pub const ZERO: Eval =
+        Eval { g: 0.0, met: 0, total_e2e_ms: 0.0, makespan_ms: 0.0 };
+
     /// Average latency (the paper reports G alongside attainment & mean).
     pub fn avg_latency_ms(&self, n: usize) -> f64 {
         if n == 0 {
@@ -166,7 +190,15 @@ impl<'a> Evaluator<'a> {
         self.jobs
     }
 
+    pub fn predictor(&self) -> &LatencyPredictor {
+        self.predictor
+    }
+
     /// Evaluate G for a schedule (Eqs. 2–13). O(N), allocation-free.
+    ///
+    /// `Σ t_e2e` is accumulated as per-batch partial sums — the same
+    /// grouping [`IncrementalEval`] reduces over, which is what makes the
+    /// two paths bit-identical (module docs).
     pub fn eval(&self, schedule: &Schedule) -> Eval {
         debug_assert_eq!(schedule.len(), self.jobs.len());
         let mut wait_ms = 0.0f64;
@@ -175,12 +207,13 @@ impl<'a> Evaluator<'a> {
         let mut start = 0usize;
         for &bsize in &schedule.batches {
             let mut batch_max = 0.0f64;
+            let mut batch_sum = 0.0f64;
             for &j in &schedule.order[start..start + bsize] {
                 let job = &self.jobs[j];
                 let p = self.predictor.predict(bsize, job.input_len, job.output_len);
                 let e2e = wait_ms + p.exec_ms;
                 let ttft = wait_ms + p.prefill_ms;
-                total_e2e += e2e;
+                batch_sum += e2e;
                 if job.slo.met(e2e, ttft, p.tpot_ms) {
                     met += 1;
                 }
@@ -188,6 +221,7 @@ impl<'a> Evaluator<'a> {
                     batch_max = p.exec_ms;
                 }
             }
+            total_e2e += batch_sum;
             wait_ms += batch_max;
             start += bsize;
         }
@@ -195,7 +229,8 @@ impl<'a> Evaluator<'a> {
         Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: wait_ms }
     }
 
-    /// Like [`eval`] but also returns per-job timelines (allocates).
+    /// Like [`Evaluator::eval`] but also returns per-job timelines
+    /// (allocates).
     pub fn eval_detailed(&self, schedule: &Schedule) -> (Eval, Vec<JobTimeline>) {
         let mut timelines = Vec::with_capacity(self.jobs.len());
         let mut wait_ms = 0.0f64;
@@ -203,13 +238,14 @@ impl<'a> Evaluator<'a> {
         let mut met = 0usize;
         for (k, start, bsize) in schedule.batch_spans() {
             let mut batch_max = 0.0f64;
+            let mut batch_sum = 0.0f64;
             for &j in &schedule.order[start..start + bsize] {
                 let job = &self.jobs[j];
                 let p = self.predictor.predict(bsize, job.input_len, job.output_len);
                 let e2e = wait_ms + p.exec_ms;
                 let ttft = wait_ms + p.prefill_ms;
                 let ok = job.slo.met(e2e, ttft, p.tpot_ms);
-                total_e2e += e2e;
+                batch_sum += e2e;
                 met += ok as usize;
                 batch_max = batch_max.max(p.exec_ms);
                 timelines.push(JobTimeline {
@@ -222,6 +258,7 @@ impl<'a> Evaluator<'a> {
                     met: ok,
                 });
             }
+            total_e2e += batch_sum;
             wait_ms += batch_max;
         }
         let g = if total_e2e > 0.0 { met as f64 / total_e2e } else { 0.0 };
@@ -236,6 +273,254 @@ impl<'a> Evaluator<'a> {
     pub fn solo_e2e_ms(&self, job: usize) -> f64 {
         let j = &self.jobs[job];
         self.predictor.predict(1, j.input_len, j.output_len).exec_ms
+    }
+}
+
+/// Delta evaluator driving the simulated-annealing hot path.
+///
+/// Owns the current candidate [`Schedule`] plus per-batch aggregates; a
+/// [`IncrementalEval::try_random_move`] applies one neighbourhood move
+/// in-place, updates only what the move invalidated, and returns the new
+/// [`Eval`]. The caller then either [`IncrementalEval::commit`]s (free) or
+/// [`IncrementalEval::rollback`]s (restores the pre-move state from
+/// reused snapshot buffers). No heap allocation occurs per move once the
+/// snapshot buffers are warm.
+///
+/// Cost per move: O(touched-batch sizes) table lookups, plus a recompute of
+/// the downstream suffix only while its entry wait differs (exact `f64`
+/// comparison) from the cached value, plus an O(M) re-reduction over
+/// per-batch partials (M = batch count). See the module docs for why the
+/// result is bit-identical to [`Evaluator::eval`].
+pub struct IncrementalEval<'a> {
+    jobs: &'a [Job],
+    table: &'a PredTable,
+    schedule: Schedule,
+    /// Max exec time in batch k (at its current size).
+    bmax: Vec<f64>,
+    /// Σ (entry wait + exec) over batch k's jobs, in order.
+    bsum: Vec<f64>,
+    /// SLO-met count in batch k at its current entry wait.
+    bmet: Vec<usize>,
+    /// Entry wait of batch k (= Σ bmax of earlier batches, sequentially).
+    wait: Vec<f64>,
+    eval: Eval,
+    // Pre-move snapshots (reused buffers) for rollback.
+    saved_batches: Vec<usize>,
+    saved_bmax: Vec<f64>,
+    saved_bsum: Vec<f64>,
+    saved_bmet: Vec<usize>,
+    saved_wait: Vec<f64>,
+    saved_eval: Eval,
+    pending: Option<OrderUndo>,
+}
+
+impl<'a> IncrementalEval<'a> {
+    /// Build the incremental state for `schedule` (O(N) table lookups).
+    pub fn new(jobs: &'a [Job], table: &'a PredTable, schedule: Schedule) -> Self {
+        assert_eq!(schedule.len(), jobs.len());
+        let mut s = IncrementalEval {
+            jobs,
+            table,
+            schedule,
+            bmax: Vec::new(),
+            bsum: Vec::new(),
+            bmet: Vec::new(),
+            wait: Vec::new(),
+            eval: Eval::ZERO,
+            saved_batches: Vec::new(),
+            saved_bmax: Vec::new(),
+            saved_bsum: Vec::new(),
+            saved_bmet: Vec::new(),
+            saved_wait: Vec::new(),
+            saved_eval: Eval::ZERO,
+            pending: None,
+        };
+        s.rebuild();
+        s
+    }
+
+    /// The current candidate schedule.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Consume the evaluator, yielding its schedule.
+    pub fn into_schedule(self) -> Schedule {
+        self.schedule
+    }
+
+    /// Evaluation of the current schedule (bit-identical to
+    /// [`Evaluator::eval`] on the same schedule).
+    pub fn eval(&self) -> Eval {
+        self.eval
+    }
+
+    /// Replace the schedule and rebuild all aggregates from scratch.
+    pub fn reset(&mut self, schedule: Schedule) {
+        assert_eq!(schedule.len(), self.jobs.len());
+        self.schedule = schedule;
+        self.pending = None;
+        self.rebuild();
+    }
+
+    fn rebuild(&mut self) {
+        let m = self.schedule.batches.len();
+        self.bmax.clear();
+        self.bmax.resize(m, 0.0);
+        self.bsum.clear();
+        self.bsum.resize(m, 0.0);
+        self.bmet.clear();
+        self.bmet.resize(m, 0);
+        self.wait.clear();
+        self.wait.resize(m, 0.0);
+        let mut w = 0.0f64;
+        let mut start = 0usize;
+        for k in 0..m {
+            self.wait[k] = w;
+            self.recompute_batch(k, start, w);
+            w += self.bmax[k];
+            start += self.schedule.batches[k];
+        }
+        self.reduce();
+    }
+
+    /// Recompute batch k's aggregates at entry wait `wait` — the same
+    /// per-job order and accumulation as [`Evaluator::eval`]'s inner loop.
+    fn recompute_batch(&mut self, k: usize, start: usize, wait: f64) {
+        let bsize = self.schedule.batches[k];
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut met = 0usize;
+        for &j in &self.schedule.order[start..start + bsize] {
+            let job = &self.jobs[j];
+            let p = self.table.get(j, bsize);
+            let e2e = wait + p.exec_ms;
+            let ttft = wait + p.prefill_ms;
+            sum += e2e;
+            if job.slo.met(e2e, ttft, p.tpot_ms) {
+                met += 1;
+            }
+            if p.exec_ms > max {
+                max = p.exec_ms;
+            }
+        }
+        self.bmax[k] = max;
+        self.bsum[k] = sum;
+        self.bmet[k] = met;
+    }
+
+    /// Re-reduce totals over per-batch partials — same grouping as the
+    /// full evaluator, so the result is bit-identical.
+    fn reduce(&mut self) {
+        let m = self.schedule.batches.len();
+        let mut total = 0.0f64;
+        let mut met = 0usize;
+        for k in 0..m {
+            total += self.bsum[k];
+            met += self.bmet[k];
+        }
+        let makespan =
+            if m == 0 { 0.0 } else { self.wait[m - 1] + self.bmax[m - 1] };
+        let g = if total > 0.0 { met as f64 / total } else { 0.0 };
+        self.eval = Eval { g, met, total_e2e_ms: total, makespan_ms: makespan };
+    }
+
+    /// Apply one random neighbourhood move in-place. Returns the candidate
+    /// evaluation, or `None` if no move was possible (state untouched).
+    /// Must be followed by [`IncrementalEval::commit`] or
+    /// [`IncrementalEval::rollback`] before the next move.
+    pub fn try_random_move(
+        &mut self,
+        max_batch: usize,
+        rng: &mut Rng,
+    ) -> Option<Eval> {
+        debug_assert!(self.pending.is_none(), "move pending; commit or rollback");
+        // Snapshot into reused buffers (no allocation once warm).
+        self.saved_batches.clear();
+        self.saved_batches.extend_from_slice(&self.schedule.batches);
+        self.saved_bmax.clear();
+        self.saved_bmax.extend_from_slice(&self.bmax);
+        self.saved_bsum.clear();
+        self.saved_bsum.extend_from_slice(&self.bsum);
+        self.saved_bmet.clear();
+        self.saved_bmet.extend_from_slice(&self.bmet);
+        self.saved_wait.clear();
+        self.saved_wait.extend_from_slice(&self.wait);
+        self.saved_eval = self.eval;
+
+        let mv = moves::random_move_desc(&mut self.schedule, max_batch, rng)?;
+        self.pending = Some(mv.undo);
+
+        // Mirror the move's structural edits on the per-batch arrays so
+        // entry k still describes the batch now at index k.
+        if let Some(r) = mv.removed_batch {
+            self.bmax.remove(r);
+            self.bsum.remove(r);
+            self.bmet.remove(r);
+            self.wait.remove(r);
+        }
+        if mv.appended_batch {
+            self.bmax.push(0.0);
+            self.bsum.push(0.0);
+            self.bmet.push(0);
+            self.wait.push(0.0);
+        }
+        let m = self.schedule.batches.len();
+        debug_assert_eq!(self.bmax.len(), m);
+
+        // Entry wait of the first touched batch, derived from the untouched
+        // prefix exactly as the sequential full evaluation would.
+        let b_lo = mv.b_lo;
+        let mut w = if b_lo == 0 {
+            0.0
+        } else {
+            self.wait[b_lo - 1] + self.bmax[b_lo - 1]
+        };
+        let mut start: usize = self.schedule.batches[..b_lo].iter().sum();
+        let mut k = b_lo;
+        while k < m {
+            let membership_changed = k == mv.b_lo || k == mv.b_hi;
+            if !membership_changed && w == self.wait[k] {
+                if k > mv.b_hi {
+                    // Unchanged membership and exactly unchanged entry wait:
+                    // the whole remaining suffix is still valid.
+                    break;
+                }
+                // Untouched batch between two swapped positions — cached
+                // aggregates remain valid, just pass through.
+            } else {
+                self.recompute_batch(k, start, w);
+                self.wait[k] = w;
+            }
+            w += self.bmax[k];
+            start += self.schedule.batches[k];
+            k += 1;
+        }
+        self.reduce();
+        Some(self.eval)
+    }
+
+    /// Accept the pending move (free — state is already updated).
+    pub fn commit(&mut self) {
+        self.pending = None;
+    }
+
+    /// Reject the pending move: restore schedule and aggregates to the
+    /// pre-move state from the snapshot buffers.
+    pub fn rollback(&mut self) {
+        let undo = self.pending.take().expect("rollback without a pending move");
+        undo.revert(&mut self.schedule.order);
+        self.schedule.batches.clear();
+        self.schedule.batches.extend_from_slice(&self.saved_batches);
+        self.bmax.clear();
+        self.bmax.extend_from_slice(&self.saved_bmax);
+        self.bsum.clear();
+        self.bsum.extend_from_slice(&self.saved_bsum);
+        self.bmet.clear();
+        self.bmet.extend_from_slice(&self.saved_bmet);
+        self.wait.clear();
+        self.wait.extend_from_slice(&self.saved_wait);
+        self.eval = self.saved_eval;
     }
 }
 
@@ -394,5 +679,63 @@ mod tests {
         assert!(tlb[0].exec_ms > tls[0].exec_ms);
         // but batching reduces makespan
         assert!(eb.makespan_ms < es.makespan_ms);
+    }
+
+    #[test]
+    fn incremental_init_matches_full_eval() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..11)
+            .map(|i| e2e_job(100 + 53 * i, 20 + 9 * i, 8_000.0))
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build(&jobs, &pred, 4);
+        let s = Schedule { order: (0..11).rev().collect(), batches: vec![4, 4, 3] };
+        let inc = IncrementalEval::new(&jobs, &table, s.clone());
+        assert_eq!(inc.eval(), ev.eval(&s));
+        assert_eq!(inc.schedule(), &s);
+    }
+
+    #[test]
+    fn incremental_move_commit_and_rollback_match_full_eval() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| e2e_job(80 + 41 * i, 15 + 7 * i, 6_000.0))
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build(&jobs, &pred, 3);
+        let mut inc =
+            IncrementalEval::new(&jobs, &table, Schedule::fcfs(10, 3));
+        let mut rng = Rng::new(42);
+        for step in 0..200 {
+            let before = inc.eval();
+            let before_schedule = inc.schedule().clone();
+            match inc.try_random_move(3, &mut rng) {
+                None => continue,
+                Some(e) => {
+                    inc.schedule().validate(3).unwrap();
+                    assert_eq!(e, ev.eval(inc.schedule()), "step {step}");
+                    if step % 2 == 0 {
+                        inc.commit();
+                    } else {
+                        inc.rollback();
+                        assert_eq!(inc.eval(), before, "rollback step {step}");
+                        assert_eq!(inc.schedule(), &before_schedule);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_reset_rebuilds() {
+        let pred = unit_predictor();
+        let jobs = [e2e_job(100, 0, 1e9), e2e_job(200, 0, 1e9)];
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build(&jobs, &pred, 2);
+        let mut inc = IncrementalEval::new(&jobs, &table, Schedule::fcfs(2, 2));
+        let solo = Schedule { order: vec![1, 0], batches: vec![1, 1] };
+        inc.reset(solo.clone());
+        assert_eq!(inc.eval(), ev.eval(&solo));
+        assert_eq!(inc.into_schedule(), solo);
     }
 }

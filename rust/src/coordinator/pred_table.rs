@@ -1,0 +1,131 @@
+//! Per-wave prediction table: the first layer of the SA hot-path
+//! optimisation.
+//!
+//! The simulated-annealing search evaluates ~10⁴ candidate schedules per
+//! scheduling decision, and every full evaluation used to call
+//! [`LatencyPredictor::predict`] once per job — redoing the same Eq. 14–19
+//! arithmetic for the same `(job, batch_size)` pair thousands of times.
+//! A wave's job set and the batch-size domain (`1..=max_batch`) are fixed
+//! for the whole search, so [`PredTable`] precomputes every
+//! `(job, batch_size)` prediction once, turning all predictor calls inside
+//! the search into a single indexed load.
+//!
+//! Entries are stored exactly as [`LatencyPredictor::predict`] returned
+//! them, so table lookups are bit-identical to direct predictor calls —
+//! the property the incremental evaluator's equivalence guarantee
+//! ([`crate::coordinator::objective::IncrementalEval`]) rests on.
+
+use crate::coordinator::objective::Job;
+use crate::coordinator::predictor::{LatencyPredictor, PredictedLatency};
+
+/// Dense `(job, batch_size)` → predicted-latency table.
+///
+/// Layout: row-major by job, `max_batch` entries per job, batch sizes
+/// `1..=max_batch` (index `job * max_batch + batch - 1`).
+#[derive(Debug, Clone)]
+pub struct PredTable {
+    n: usize,
+    max_batch: usize,
+    entries: Vec<PredictedLatency>,
+}
+
+impl PredTable {
+    /// Precompute predictions for every `(job, batch_size ≤ max_batch)`
+    /// pair. O(N · max_batch) predictor calls, done once per wave.
+    pub fn build(
+        jobs: &[Job],
+        predictor: &LatencyPredictor,
+        max_batch: usize,
+    ) -> PredTable {
+        let max_batch = max_batch.max(1);
+        let mut entries = Vec::with_capacity(jobs.len() * max_batch);
+        for job in jobs {
+            for b in 1..=max_batch {
+                entries.push(predictor.predict(b, job.input_len, job.output_len));
+            }
+        }
+        PredTable { n: jobs.len(), max_batch, entries }
+    }
+
+    /// Look up the prediction for `job` at `batch` (1-based, ≤ max_batch).
+    #[inline]
+    pub fn get(&self, job: usize, batch: usize) -> PredictedLatency {
+        debug_assert!(batch >= 1 && batch <= self.max_batch, "batch {batch}");
+        self.entries[job * self.max_batch + batch - 1]
+    }
+
+    /// Predicted solo (batch size 1) execution e2e — the sort key for
+    /// Algorithm 1's second starting solution.
+    #[inline]
+    pub fn solo_exec_ms(&self, job: usize) -> f64 {
+        self.get(job, 1).exec_ms
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Slo;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table_matches_direct_predictor_calls() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(3);
+        let jobs: Vec<Job> = (0..17)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 1 + rng.below(2000),
+                output_len: rng.below(500),
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        let table = PredTable::build(&jobs, &pred, 6);
+        assert_eq!(table.len(), 17);
+        assert_eq!(table.max_batch(), 6);
+        for (j, job) in jobs.iter().enumerate() {
+            for b in 1..=6 {
+                let direct = pred.predict(b, job.input_len, job.output_len);
+                // bit-identical, not merely close
+                assert_eq!(table.get(j, b), direct, "job {j} batch {b}");
+            }
+            assert_eq!(
+                table.solo_exec_ms(j),
+                pred.predict(1, job.input_len, job.output_len).exec_ms
+            );
+        }
+    }
+
+    #[test]
+    fn zero_max_batch_clamped_to_one() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs = vec![Job {
+            req_idx: 0,
+            input_len: 100,
+            output_len: 10,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        }];
+        let table = PredTable::build(&jobs, &pred, 0);
+        assert_eq!(table.max_batch(), 1);
+        assert!(table.get(0, 1).exec_ms > 0.0);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let pred = LatencyPredictor::paper_table2();
+        let table = PredTable::build(&[], &pred, 4);
+        assert!(table.is_empty());
+    }
+}

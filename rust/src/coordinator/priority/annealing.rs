@@ -11,6 +11,21 @@
 //!
 //! Otherwise, Metropolis-style annealing runs from the better seed.
 //!
+//! **Hot-path structure**: [`priority_mapping`] is the production path. It
+//! precomputes a per-wave [`PredTable`] (every `(job, batch_size)`
+//! prediction once), then drives the search through
+//! [`IncrementalEval`] — moves are applied in-place against the
+//! incremental state and either committed (free) or rolled back from
+//! reused snapshot buffers, so the loop performs no per-iteration cloning
+//! of `order`/`batches` and no heap allocation once warm. Candidate
+//! evaluations recompute only the batches a move touched plus the
+//! downstream suffix whose entry wait actually shifted; results are
+//! bit-identical to the full evaluation (see `objective.rs` module docs and
+//! `tests/incremental_eval_equivalence.rs`).
+//! [`priority_mapping_full`] keeps the original full-evaluation loop as the
+//! reference path for equivalence tests and the old-vs-new throughput bench
+//! (`benches/sa_throughput.rs`).
+//!
 //! **Acceptance-rule note** (DESIGN.md §5): Algorithm 1 line 32 reads
 //! `exp(-(f_new - f)/T) < rand(0,1)` which, taken literally, *rejects* worse
 //! solutions almost always and accepts them *less* often at high
@@ -23,7 +38,8 @@
 //! seed objective survives with p = e⁻¹, decaying as T cools — matching the
 //! qualitative behaviour Fig. 8 reports (higher T₀ ⇒ more escapes).
 
-use crate::coordinator::objective::{Eval, Evaluator, Schedule};
+use crate::coordinator::objective::{Eval, Evaluator, IncrementalEval, Schedule};
+use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::priority::moves;
 use crate::util::rng::Rng;
 
@@ -82,6 +98,18 @@ pub struct SearchStats {
     pub overhead_ms: f64,
 }
 
+impl SearchStats {
+    fn start() -> SearchStats {
+        SearchStats {
+            evals: 0,
+            accepted: 0,
+            improved: 0,
+            early_exit: false,
+            overhead_ms: 0.0,
+        }
+    }
+}
+
 /// Result: the best schedule found plus its evaluation and stats.
 #[derive(Debug, Clone)]
 pub struct SaResult {
@@ -90,41 +118,36 @@ pub struct SaResult {
     pub stats: SearchStats,
 }
 
-/// Algorithm 1: map jobs to a priority sequence + batch partition.
-pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
-    let t_start = crate::util::now_ms();
-    let n = ev.jobs().len();
-    let max_batch = params.max_batch.max(1);
-    let mut stats = SearchStats {
-        evals: 0,
-        accepted: 0,
-        improved: 0,
-        early_exit: false,
-        overhead_ms: 0.0,
-    };
+/// Bit-level [`Eval`] equality (NaN-tolerant, unlike `PartialEq`): used by
+/// the debug cross-check between the incremental and full seed evaluations.
+#[allow(dead_code)] // used only under debug_assertions
+fn eval_bits_equal(a: &Eval, b: &Eval) -> bool {
+    a.g.to_bits() == b.g.to_bits()
+        && a.met == b.met
+        && a.total_e2e_ms.to_bits() == b.total_e2e_ms.to_bits()
+        && a.makespan_ms.to_bits() == b.makespan_ms.to_bits()
+}
 
-    if n == 0 {
-        return SaResult {
-            schedule: Schedule { order: vec![], batches: vec![] },
-            eval: Eval { g: 0.0, met: 0, total_e2e_ms: 0.0, makespan_ms: 0.0 },
-            stats,
-        };
-    }
-
-    // Seed 2: sorted by predicted solo e2e (line 3).
+/// Seeds shared by both search paths: the solo-e2e-sorted schedule
+/// (Algorithm 1 line 3) and, when it does not meet every SLO, the FCFS
+/// arrival order. Returns `(chosen schedule, its eval, early_exit)`.
+fn seed_solution(
+    ev: &Evaluator,
+    n: usize,
+    max_batch: usize,
+    stats: &mut SearchStats,
+) -> (Schedule, Eval, bool) {
+    // Seed 2: sorted by predicted solo e2e (line 3). `total_cmp` so NaN
+    // predictor coefficients (misconfigured fit) degrade instead of panic.
     let mut by_e2e: Vec<usize> = (0..n).collect();
-    by_e2e.sort_by(|&a, &b| {
-        ev.solo_e2e_ms(a).partial_cmp(&ev.solo_e2e_ms(b)).unwrap()
-    });
+    by_e2e.sort_by(|&a, &b| ev.solo_e2e_ms(a).total_cmp(&ev.solo_e2e_ms(b)));
     let sorted_seed = Schedule::from_order(by_e2e, max_batch);
     let sorted_eval = ev.eval(&sorted_seed);
     stats.evals += 1;
 
     // Lines 7–10: if the minimal-Σe2e sequence meets every SLO it maximizes G.
     if sorted_eval.met == n {
-        stats.early_exit = true;
-        stats.overhead_ms = crate::util::now_ms() - t_start;
-        return SaResult { schedule: sorted_seed, eval: sorted_eval, stats };
+        return (sorted_seed, sorted_eval, true);
     }
 
     // Seed 1: the arrival order (lines 12–15 pick the better start).
@@ -132,11 +155,127 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
     let fcfs_eval = ev.eval(&fcfs_seed);
     stats.evals += 1;
 
-    let (mut current, mut f_cur) = if sorted_eval.g >= fcfs_eval.g {
-        (sorted_seed, sorted_eval)
+    if sorted_eval.g >= fcfs_eval.g {
+        (sorted_seed, sorted_eval, false)
     } else {
-        (fcfs_seed, fcfs_eval)
-    };
+        (fcfs_seed, fcfs_eval, false)
+    }
+}
+
+/// Algorithm 1: map jobs to a priority sequence + batch partition.
+///
+/// Production path: prediction-table + incremental-evaluation SA (see
+/// module docs). Bit-identical evaluations to [`priority_mapping_full`]'s
+/// per-candidate full evaluation, at a fraction of the cost.
+pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
+    let t_start = crate::util::now_ms();
+    let n = ev.jobs().len();
+    let max_batch = params.max_batch.max(1);
+    let mut stats = SearchStats::start();
+
+    if n == 0 {
+        return SaResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval::ZERO,
+            stats,
+        };
+    }
+
+    let (seed_schedule, f_seed, early_exit) =
+        seed_solution(ev, n, max_batch, &mut stats);
+    if early_exit {
+        stats.early_exit = true;
+        stats.overhead_ms = crate::util::now_ms() - t_start;
+        return SaResult { schedule: seed_schedule, eval: f_seed, stats };
+    }
+
+    // Layer 1: precompute every (job, batch_size) prediction for the wave.
+    let table = PredTable::build(ev.jobs(), ev.predictor(), max_batch);
+    // Layer 2: incremental evaluator owns the walking candidate state.
+    let mut inc = IncrementalEval::new(ev.jobs(), &table, seed_schedule);
+    debug_assert!(
+        eval_bits_equal(&inc.eval(), &f_seed),
+        "incremental seed eval {:?} != full {:?}",
+        inc.eval(),
+        f_seed
+    );
+
+    let mut f_cur = f_seed;
+    let mut best = inc.schedule().clone();
+    let mut f_best = f_cur;
+
+    let f_scale = f_cur.g.abs().max(1e-12);
+    let mut rng = Rng::new(params.seed);
+    let mut t = params.t0;
+
+    while t >= params.t_thres {
+        for _ in 0..params.iters_per_temp {
+            // Layer 3: allocation-free move applied against the
+            // incremental state; commit or rollback below.
+            let f_new = match inc.try_random_move(max_batch, &mut rng) {
+                Some(e) => e,
+                None => continue,
+            };
+            stats.evals += 1;
+            let accept = if f_new.g > f_cur.g {
+                true
+            } else {
+                // Metropolis with normalized temperature (see module docs).
+                let t_eff = (t / params.t0) * f_scale;
+                let p = ((f_new.g - f_cur.g) / t_eff).exp();
+                rng.chance(p)
+            };
+            if accept {
+                inc.commit();
+                f_cur = f_new;
+                stats.accepted += 1;
+                if f_cur.g > f_best.g {
+                    best.order.clear();
+                    best.order.extend_from_slice(&inc.schedule().order);
+                    best.batches.clear();
+                    best.batches.extend_from_slice(&inc.schedule().batches);
+                    f_best = f_cur;
+                    stats.improved += 1;
+                }
+            } else {
+                inc.rollback();
+            }
+        }
+        t *= params.decay;
+    }
+
+    stats.overhead_ms = crate::util::now_ms() - t_start;
+    SaResult { schedule: best, eval: f_best, stats }
+}
+
+/// Algorithm 1 with per-candidate **full** evaluation — the pre-table
+/// reference path. Kept for the equivalence property tests and the
+/// old-vs-new comparison in `benches/sa_throughput.rs`; use
+/// [`priority_mapping`] everywhere else.
+pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
+    let t_start = crate::util::now_ms();
+    let n = ev.jobs().len();
+    let max_batch = params.max_batch.max(1);
+    let mut stats = SearchStats::start();
+
+    if n == 0 {
+        return SaResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval::ZERO,
+            stats,
+        };
+    }
+
+    let (seed_schedule, f_seed, early_exit) =
+        seed_solution(ev, n, max_batch, &mut stats);
+    if early_exit {
+        stats.early_exit = true;
+        stats.overhead_ms = crate::util::now_ms() - t_start;
+        return SaResult { schedule: seed_schedule, eval: f_seed, stats };
+    }
+
+    let mut current = seed_schedule;
+    let mut f_cur = f_seed;
     let mut best = current.clone();
     let mut f_best = f_cur;
 
@@ -159,7 +298,6 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
             let accept = if f_new.g > f_cur.g {
                 true
             } else {
-                // Metropolis with normalized temperature (see module docs).
                 let t_eff = (t / params.t0) * f_scale;
                 let p = ((f_new.g - f_cur.g) / t_eff).exp();
                 rng.chance(p)
@@ -323,6 +461,57 @@ mod tests {
         let b = priority_mapping(&ev, &params(2, 9));
         assert_eq!(a.schedule, b.schedule);
         assert_eq!(a.eval, b.eval);
+    }
+
+    #[test]
+    fn incremental_path_matches_full_path_exactly() {
+        // Same RNG stream + bit-identical evaluations => the two search
+        // paths must walk the same trajectory and return the same result.
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(seed ^ 0xA5A5);
+            let jobs: Vec<Job> = (0..14)
+                .map(|_| Job {
+                    req_idx: 0,
+                    input_len: 1 + rng.below(1200),
+                    output_len: 1 + rng.below(300),
+                    slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+                })
+                .collect();
+            let ev = Evaluator::new(&jobs, &pred);
+            let p = SaParams {
+                max_batch: 4,
+                seed,
+                t0: 100.0,
+                iters_per_temp: 25,
+                ..Default::default()
+            };
+            let fast = priority_mapping(&ev, &p);
+            let full = priority_mapping_full(&ev, &p);
+            assert_eq!(fast.schedule, full.schedule, "seed {seed}");
+            assert_eq!(fast.eval, full.eval, "seed {seed}");
+            assert_eq!(fast.stats.evals, full.stats.evals, "seed {seed}");
+            assert_eq!(fast.stats.accepted, full.stats.accepted, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn nan_predictor_coefficients_do_not_panic() {
+        // A degenerate fit can produce NaN coefficients; the seed sort uses
+        // total_cmp and the Metropolis rule rejects NaN objectives, so the
+        // mapper must still return a structurally valid schedule.
+        let pred = LatencyPredictor::new(
+            PhaseCoeffs { alpha: f64::NAN, beta: 0.0, gamma: 1.0, delta: 0.0 },
+            PhaseCoeffs { alpha: 0.0, beta: f64::NAN, gamma: 0.0, delta: 1.0 },
+        );
+        let jobs: Vec<Job> =
+            (0..6).map(|i| e2e_job(100 * (i + 1), 5_000.0)).collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let res = priority_mapping(&ev, &params(3, 0));
+        res.schedule.validate(3).unwrap();
+        assert_eq!(res.schedule.len(), 6);
+        let res_full = priority_mapping_full(&ev, &params(3, 0));
+        res_full.schedule.validate(3).unwrap();
     }
 
     #[test]

@@ -9,5 +9,7 @@ pub mod annealing;
 pub mod exhaustive;
 pub mod moves;
 
-pub use annealing::{priority_mapping, SaParams, SaResult, SearchStats};
+pub use annealing::{
+    priority_mapping, priority_mapping_full, SaParams, SaResult, SearchStats,
+};
 pub use exhaustive::{exhaustive_mapping, ExhaustiveResult, MAX_EXHAUSTIVE_N};

@@ -11,88 +11,202 @@
 //! * [`rand_swap`]     — `randSwapping`: exchange two positions in the
 //!   priority sequence.
 //!
+//! All moves are **allocation-free**: eligible batches are selected by
+//! count-then-take-k-th sampling instead of collecting an `eligible`
+//! vector, and the `order` edits are in-place slice rotations
+//! (`rotate_left`/`rotate_right`) instead of `remove`/`insert` pairs. Each
+//! `*_desc` variant returns an [`AppliedMove`] describing exactly which
+//! batches changed membership and how to revert the `order` edit — the
+//! contract the incremental evaluator
+//! ([`crate::coordinator::objective::IncrementalEval`]) builds on.
+//!
 //! All moves preserve the schedule invariants (permutation; positive batch
 //! sizes ≤ max; partition) — enforced by the property tests.
 
 use crate::coordinator::objective::Schedule;
 use crate::util::rng::Rng;
 
-/// Try to move one random job into the previous batch. Returns false if no
-/// job is eligible (then the caller should pick another move).
-pub fn squeeze_prev(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+/// How to revert an in-place `order` edit (the `order` length never
+/// changes, so every move is undone by one rotation or one swap).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderUndo {
+    /// `order[lo..=hi]` was rotated right by one; rotate left to revert.
+    RotateLeft { lo: usize, hi: usize },
+    /// `order[lo..=hi]` was rotated left by one; rotate right to revert.
+    RotateRight { lo: usize, hi: usize },
+    /// Positions `i` and `j` were swapped; swap again to revert.
+    Swap { i: usize, j: usize },
+}
+
+impl OrderUndo {
+    /// Revert the order edit this record describes.
+    pub fn revert(self, order: &mut [usize]) {
+        match self {
+            OrderUndo::RotateLeft { lo, hi } => order[lo..=hi].rotate_left(1),
+            OrderUndo::RotateRight { lo, hi } => order[lo..=hi].rotate_right(1),
+            OrderUndo::Swap { i, j } => order.swap(i, j),
+        }
+    }
+}
+
+/// Description of a successfully applied move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AppliedMove {
+    /// The (new-indexing) batch indices whose *membership* changed.
+    /// `b_lo <= b_hi`; equal when only one batch changed. Batches strictly
+    /// between the two (possible for [`rand_swap`]) are untouched.
+    pub b_lo: usize,
+    pub b_hi: usize,
+    /// `Some(k)`: the source batch emptied and was removed at index `k`
+    /// (pre-removal indexing; batches ≥ k shifted down by one).
+    pub removed_batch: Option<usize>,
+    /// A new singleton final batch was appended (delay from the last batch).
+    pub appended_batch: bool,
+    /// How to revert the `order` edit.
+    pub undo: OrderUndo,
+}
+
+/// Index of the `r`-th batch (ascending) satisfying `elig`, given that at
+/// least `r + 1` batches do. Zero-allocation replacement for collecting an
+/// eligible-batch vector and indexing into it.
+#[inline]
+fn nth_eligible(
+    range: std::ops::Range<usize>,
+    r: usize,
+    mut elig: impl FnMut(usize) -> bool,
+) -> usize {
+    let mut seen = 0usize;
+    for k in range {
+        if elig(k) {
+            if seen == r {
+                return k;
+            }
+            seen += 1;
+        }
+    }
+    unreachable!("nth_eligible: fewer eligible batches than counted")
+}
+
+/// Batch index containing position `pos` (`pos` must be < Σ batches).
+#[inline]
+fn batch_of(batches: &[usize], pos: usize) -> usize {
+    let mut end = 0usize;
+    for (k, &b) in batches.iter().enumerate() {
+        end += b;
+        if pos < end {
+            return k;
+        }
+    }
+    unreachable!("position {pos} beyond schedule")
+}
+
+/// Try to move one random job into the previous batch. Returns a move
+/// description, or `None` (schedule untouched) if no batch is eligible.
+pub fn squeeze_prev_desc(
+    s: &mut Schedule,
+    max_batch: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     if s.batches.len() < 2 {
-        return false;
+        return None;
     }
     // Eligible batches k>0 with batches[k-1] < max_batch.
-    let eligible: Vec<usize> = (1..s.batches.len())
-        .filter(|&k| s.batches[k - 1] < max_batch)
-        .collect();
-    if eligible.is_empty() {
-        return false;
+    let elig = |k: usize| s.batches[k - 1] < max_batch;
+    let count = (1..s.batches.len()).filter(|&k| elig(k)).count();
+    if count == 0 {
+        return None;
     }
-    let k = *rng.choose(&eligible);
+    let k = nth_eligible(1..s.batches.len(), rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     // pick a random member of batch k and move it to the end of batch k-1
     let pick = start_k + rng.below(s.batches[k]);
-    let job = s.order.remove(pick);
-    s.order.insert(start_k, job);
+    s.order[start_k..=pick].rotate_right(1);
     s.batches[k - 1] += 1;
     s.batches[k] -= 1;
-    if s.batches[k] == 0 {
+    let removed_batch = if s.batches[k] == 0 {
         s.batches.remove(k);
-    }
-    true
+        Some(k)
+    } else {
+        None
+    };
+    Some(AppliedMove {
+        b_lo: k - 1,
+        b_hi: if removed_batch.is_some() { k - 1 } else { k },
+        removed_batch,
+        appended_batch: false,
+        undo: OrderUndo::RotateLeft { lo: start_k, hi: pick },
+    })
 }
 
 /// Try to move one random job into the next batch (creating a new final
-/// batch when delaying from the last one). Returns false if nothing moved.
-pub fn delay_next(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+/// batch when delaying from the last one). Returns `None` (schedule
+/// untouched) if nothing can move.
+pub fn delay_next_desc(
+    s: &mut Schedule,
+    max_batch: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     if s.order.is_empty() {
-        return false;
+        return None;
     }
     let m = s.batches.len();
     // Eligible source batches: k < m-1 with batches[k+1] < max_batch, or the
     // final batch if it holds more than one job (otherwise delaying is a
     // no-op that recreates the same batch).
-    let eligible: Vec<usize> = (0..m)
-        .filter(|&k| {
-            if k + 1 < m {
-                s.batches[k + 1] < max_batch
-            } else {
-                s.batches[k] > 1
-            }
-        })
-        .collect();
-    if eligible.is_empty() {
-        return false;
+    let elig = |k: usize| {
+        if k + 1 < m {
+            s.batches[k + 1] < max_batch
+        } else {
+            s.batches[k] > 1
+        }
+    };
+    let count = (0..m).filter(|&k| elig(k)).count();
+    if count == 0 {
+        return None;
     }
-    let k = *rng.choose(&eligible);
+    let k = nth_eligible(0..m, rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     let pick = start_k + rng.below(s.batches[k]);
-    let job = s.order.remove(pick);
-    // insert at the START of batch k+1's span (which, after removal, begins
-    // at start_k + batches[k] - 1)
+    // rotate the picked job to the START of batch k+1's span (the slot at
+    // start_k + batches[k] - 1 once the boundary moves)
     let insert_at = start_k + s.batches[k] - 1;
-    s.order.insert(insert_at, job);
+    s.order[pick..=insert_at].rotate_left(1);
     if k + 1 < m {
         s.batches[k] -= 1;
         s.batches[k + 1] += 1;
-        if s.batches[k] == 0 {
+        let removed_batch = if s.batches[k] == 0 {
             s.batches.remove(k);
-        }
+            Some(k)
+        } else {
+            None
+        };
+        Some(AppliedMove {
+            b_lo: k,
+            b_hi: if removed_batch.is_some() { k } else { k + 1 },
+            removed_batch,
+            appended_batch: false,
+            undo: OrderUndo::RotateRight { lo: pick, hi: insert_at },
+        })
     } else {
+        // delaying out of the final (multi-job) batch opens a new iteration
         s.batches[k] -= 1;
         s.batches.push(1);
+        Some(AppliedMove {
+            b_lo: k,
+            b_hi: k + 1,
+            removed_batch: None,
+            appended_batch: true,
+            undo: OrderUndo::RotateRight { lo: pick, hi: insert_at },
+        })
     }
-    true
 }
 
-/// Swap two random positions in the priority sequence. Returns false only
+/// Swap two random positions in the priority sequence. Returns `None` only
 /// for schedules with fewer than two jobs.
-pub fn rand_swap(s: &mut Schedule, rng: &mut Rng) -> bool {
+pub fn rand_swap_desc(s: &mut Schedule, rng: &mut Rng) -> Option<AppliedMove> {
     let n = s.order.len();
     if n < 2 {
-        return false;
+        return None;
     }
     let i = rng.below(n);
     let mut j = rng.below(n - 1);
@@ -100,25 +214,56 @@ pub fn rand_swap(s: &mut Schedule, rng: &mut Rng) -> bool {
         j += 1;
     }
     s.order.swap(i, j);
-    true
+    let (lo_pos, hi_pos) = if i < j { (i, j) } else { (j, i) };
+    Some(AppliedMove {
+        b_lo: batch_of(&s.batches, lo_pos),
+        b_hi: batch_of(&s.batches, hi_pos),
+        removed_batch: None,
+        appended_batch: false,
+        undo: OrderUndo::Swap { i, j },
+    })
 }
 
 /// Apply one randomly-selected move (the `rand(0,1,2)` of Algorithm 1,
 /// line 20), retrying with the other moves if the chosen one is infeasible.
-/// Returns false only if no move is possible at all.
-pub fn random_move(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+/// Returns `None` (schedule untouched) only if no move is possible at all.
+pub fn random_move_desc(
+    s: &mut Schedule,
+    max_batch: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let first = rng.below(3);
     for offset in 0..3 {
-        let moved = match (first + offset) % 3 {
-            0 => squeeze_prev(s, max_batch, rng),
-            1 => delay_next(s, max_batch, rng),
-            _ => rand_swap(s, rng),
+        let mv = match (first + offset) % 3 {
+            0 => squeeze_prev_desc(s, max_batch, rng),
+            1 => delay_next_desc(s, max_batch, rng),
+            _ => rand_swap_desc(s, rng),
         };
-        if moved {
-            return true;
+        if mv.is_some() {
+            return mv;
         }
     }
-    false
+    None
+}
+
+/// Boolean-returning convenience wrapper over [`squeeze_prev_desc`].
+pub fn squeeze_prev(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+    squeeze_prev_desc(s, max_batch, rng).is_some()
+}
+
+/// Boolean-returning convenience wrapper over [`delay_next_desc`].
+pub fn delay_next(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+    delay_next_desc(s, max_batch, rng).is_some()
+}
+
+/// Boolean-returning convenience wrapper over [`rand_swap_desc`].
+pub fn rand_swap(s: &mut Schedule, rng: &mut Rng) -> bool {
+    rand_swap_desc(s, rng).is_some()
+}
+
+/// Boolean-returning convenience wrapper over [`random_move_desc`].
+pub fn random_move(s: &mut Schedule, max_batch: usize, rng: &mut Rng) -> bool {
+    random_move_desc(s, max_batch, rng).is_some()
 }
 
 #[cfg(test)]
@@ -218,5 +363,75 @@ mod tests {
         }
         assert!(min_batches <= 2, "min {min_batches}");
         assert!(max_batches >= 4, "max {max_batches}");
+    }
+
+    #[test]
+    fn undo_reverts_every_move_exactly() {
+        check("OrderUndo::revert restores the order", 300, |rng| {
+            let n = 1 + rng.below(14);
+            let max_batch = 1 + rng.below(4);
+            let mut s = Schedule::fcfs(n, max_batch);
+            // walk to a random state first
+            for _ in 0..10 {
+                random_move_desc(&mut s, max_batch, rng);
+            }
+            let before_order = s.order.clone();
+            let before_batches = s.batches.clone();
+            match random_move_desc(&mut s, max_batch, rng) {
+                None => {
+                    if s.order != before_order || s.batches != before_batches {
+                        return Err("failed move mutated schedule".into());
+                    }
+                }
+                Some(mv) => {
+                    s.validate(max_batch)
+                        .map_err(|e| format!("after move: {e}"))?;
+                    mv.undo.revert(&mut s.order);
+                    if s.order != before_order {
+                        return Err(format!(
+                            "undo mismatch: {:?} != {before_order:?} ({mv:?})",
+                            s.order
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn applied_move_reports_touched_batches() {
+        // squeeze from batch 1 of [2,2]: batch 0 grows, batch 1 shrinks.
+        let mut rng = Rng::new(8);
+        let mut s = Schedule { order: vec![0, 1, 2, 3], batches: vec![2, 2] };
+        let mv = squeeze_prev_desc(&mut s, 3, &mut rng).unwrap();
+        assert_eq!((mv.b_lo, mv.b_hi), (0, 1));
+        assert_eq!(mv.removed_batch, None);
+        assert!(!mv.appended_batch);
+        assert_eq!(s.batches, vec![3, 1]);
+
+        // squeeze from a singleton batch removes it.
+        let mut s = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+        let mv = squeeze_prev_desc(&mut s, 2, &mut rng).unwrap();
+        assert_eq!((mv.b_lo, mv.b_hi), (0, 0));
+        assert_eq!(mv.removed_batch, Some(1));
+        assert_eq!(s.batches, vec![2]);
+
+        // delay out of the final multi-job batch appends a batch.
+        let mut s = Schedule { order: vec![0, 1], batches: vec![2] };
+        let mv = delay_next_desc(&mut s, 2, &mut rng).unwrap();
+        assert_eq!((mv.b_lo, mv.b_hi), (0, 1));
+        assert!(mv.appended_batch);
+        assert_eq!(s.batches, vec![1, 1]);
+    }
+
+    #[test]
+    fn batch_of_positions() {
+        let batches = vec![2, 3, 1];
+        assert_eq!(batch_of(&batches, 0), 0);
+        assert_eq!(batch_of(&batches, 1), 0);
+        assert_eq!(batch_of(&batches, 2), 1);
+        assert_eq!(batch_of(&batches, 4), 1);
+        assert_eq!(batch_of(&batches, 5), 2);
     }
 }

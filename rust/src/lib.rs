@@ -25,6 +25,10 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod metrics;
+/// PJRT runtime — requires the external `xla` crate; gated behind the
+/// `real-engine` feature so the default (offline/CI) build stays
+/// self-contained.
+#[cfg(feature = "real-engine")]
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -15,9 +15,7 @@ use slo_serve::config::RunConfig;
 use slo_serve::coordinator::predictor::LatencyPredictor;
 use slo_serve::coordinator::priority::annealing::SaParams;
 use slo_serve::engine::instance::InstanceHandle;
-use slo_serve::engine::real::RealEngine;
 use slo_serve::engine::sim::SimEngine;
-use slo_serve::engine::Engine;
 use slo_serve::metrics::{fmt, Table};
 use slo_serve::server;
 use slo_serve::util::cli::{render_help, Args, OptSpec};
@@ -120,15 +118,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let max_batch = args.usize("max-batch")?.max(1);
     let mut instances = Vec::new();
     let (predictor, max_total) = if args.str("engine") == "real" {
-        let mut max_total = 0;
-        for i in 0..n_inst {
-            let mut e = RealEngine::load(&args.str("artifacts"))?;
-            e.warmup(max_batch.min(e.max_batch()))?;
-            max_total = e.max_total_tokens();
-            instances.push(InstanceHandle::spawn(i, Box::new(e)));
-        }
-        let p = profiles::by_name("tinylm-cpu").unwrap();
-        (p.truth, max_total)
+        spawn_real_instances(&args, n_inst, max_batch, &mut instances)?
     } else {
         let profile = profiles::by_name(&args.str("profile"))
             .ok_or_else(|| anyhow!("unknown profile"))?;
@@ -159,6 +149,41 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     handle.shutdown();
     Ok(())
+}
+
+/// Spawn PJRT-backed real-engine instances (requires the `real-engine`
+/// feature, which in turn needs the external `xla` crate).
+#[cfg(feature = "real-engine")]
+fn spawn_real_instances(
+    args: &Args,
+    n_inst: usize,
+    max_batch: usize,
+    instances: &mut Vec<InstanceHandle>,
+) -> Result<(LatencyPredictor, usize)> {
+    use slo_serve::engine::real::RealEngine;
+    use slo_serve::engine::Engine;
+    let mut max_total = 0;
+    for i in 0..n_inst {
+        let mut e = RealEngine::load(&args.str("artifacts"))?;
+        e.warmup(max_batch.min(e.max_batch()))?;
+        max_total = e.max_total_tokens();
+        instances.push(InstanceHandle::spawn(i, Box::new(e)));
+    }
+    let p = profiles::by_name("tinylm-cpu").unwrap();
+    Ok((p.truth, max_total))
+}
+
+#[cfg(not(feature = "real-engine"))]
+fn spawn_real_instances(
+    _args: &Args,
+    _n_inst: usize,
+    _max_batch: usize,
+    _instances: &mut Vec<InstanceHandle>,
+) -> Result<(LatencyPredictor, usize)> {
+    Err(anyhow!(
+        "this binary was built without the 'real-engine' feature \
+         (the PJRT runtime needs the external xla crate); use --engine sim"
+    ))
 }
 
 fn cmd_profiles() {

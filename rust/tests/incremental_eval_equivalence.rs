@@ -1,0 +1,208 @@
+//! Equivalence guarantee of the SA hot path: after ANY sequence of
+//! neighbourhood moves, the incremental evaluator's `Eval` must be
+//! **bit-identical** (`==` on every field, not merely close) to a fresh
+//! full `Evaluator::eval` of the same schedule — across random wave sizes,
+//! `max_batch`, SLO mixes (`E2e` and `Interactive`), and predictor
+//! coefficient sets. Rollback must restore both the schedule and the
+//! evaluation exactly.
+//!
+//! Thousands of random move sequences run per test (see the case counts);
+//! replay a failure with `PROP_SEED=<n>` as printed by the harness.
+
+use slo_serve::coordinator::objective::{
+    Evaluator, IncrementalEval, Job, Schedule,
+};
+use slo_serve::coordinator::pred_table::PredTable;
+use slo_serve::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+use slo_serve::coordinator::priority::annealing::{
+    priority_mapping, priority_mapping_full, SaParams,
+};
+use slo_serve::coordinator::request::Slo;
+use slo_serve::util::prop::check;
+use slo_serve::util::rng::Rng;
+
+fn random_coeffs(rng: &mut Rng, scale: f64) -> PhaseCoeffs {
+    PhaseCoeffs {
+        alpha: rng.uniform(0.0, 0.5) * scale,
+        beta: rng.uniform(0.0, 8.0) * scale,
+        gamma: rng.uniform(0.0, 0.05) * scale,
+        delta: rng.uniform(0.0, 60.0) * scale,
+    }
+}
+
+fn random_predictor(rng: &mut Rng) -> LatencyPredictor {
+    LatencyPredictor::new(
+        random_coeffs(rng, 1.0),
+        random_coeffs(rng, 0.02),
+    )
+}
+
+fn random_jobs(rng: &mut Rng, n: usize) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job {
+            req_idx: i,
+            input_len: 1 + rng.below(2000),
+            output_len: rng.below(400),
+            slo: if rng.chance(0.5) {
+                Slo::E2e { e2e_ms: rng.uniform(100.0, 60_000.0) }
+            } else {
+                Slo::Interactive {
+                    ttft_ms: rng.uniform(100.0, 15_000.0),
+                    tpot_ms: rng.uniform(5.0, 60.0),
+                }
+            },
+        })
+        .collect()
+}
+
+fn random_start(rng: &mut Rng, n: usize, max_batch: usize) -> Schedule {
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    Schedule::from_order(order, max_batch)
+}
+
+#[test]
+fn incremental_eval_bit_identical_to_full_eval_after_every_move() {
+    // 250 cases × up to 80 moves ≈ 20k random move applications.
+    check("incremental == full after every move", 250, |rng| {
+        let n = 1 + rng.below(28);
+        let max_batch = 1 + rng.below(8);
+        let pred = random_predictor(rng);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build(&jobs, &pred, max_batch);
+        let mut inc =
+            IncrementalEval::new(&jobs, &table, random_start(rng, n, max_batch));
+        // initial state must already agree
+        if inc.eval() != ev.eval(inc.schedule()) {
+            return Err(format!(
+                "init mismatch: inc {:?} full {:?}",
+                inc.eval(),
+                ev.eval(inc.schedule())
+            ));
+        }
+        for step in 0..80 {
+            let pre_eval = inc.eval();
+            let pre_schedule = inc.schedule().clone();
+            let moved = match inc.try_random_move(max_batch, rng) {
+                None => {
+                    if inc.schedule() != &pre_schedule {
+                        return Err("failed move mutated schedule".into());
+                    }
+                    continue;
+                }
+                Some(e) => e,
+            };
+            inc.schedule()
+                .validate(max_batch)
+                .map_err(|e| format!("step {step}: invalid schedule: {e}"))?;
+            let full = ev.eval(inc.schedule());
+            if moved != full {
+                return Err(format!(
+                    "step {step} (n={n} mb={max_batch}): incremental {moved:?} \
+                     != full {full:?} for {:?}",
+                    inc.schedule()
+                ));
+            }
+            if rng.chance(0.5) {
+                inc.commit();
+            } else {
+                inc.rollback();
+                if inc.schedule() != &pre_schedule {
+                    return Err(format!(
+                        "step {step}: rollback changed schedule: {:?} != {:?}",
+                        inc.schedule(),
+                        pre_schedule
+                    ));
+                }
+                if inc.eval() != pre_eval {
+                    return Err(format!(
+                        "step {step}: rollback eval {:?} != {pre_eval:?}",
+                        inc.eval()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_eval_survives_long_committed_walks() {
+    // All-commit walks drift far from the initial partition; the aggregates
+    // must never decay. Checked sparsely to keep full evals cheap.
+    check("long committed walk stays exact", 60, |rng| {
+        let n = 8 + rng.below(40);
+        let max_batch = 1 + rng.below(6);
+        let pred = random_predictor(rng);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build(&jobs, &pred, max_batch);
+        let mut inc =
+            IncrementalEval::new(&jobs, &table, random_start(rng, n, max_batch));
+        for step in 0..400 {
+            if inc.try_random_move(max_batch, rng).is_some() {
+                inc.commit();
+            }
+            if step % 40 == 0 {
+                let full = ev.eval(inc.schedule());
+                if inc.eval() != full {
+                    return Err(format!(
+                        "step {step}: drift: inc {:?} != full {full:?}",
+                        inc.eval()
+                    ));
+                }
+            }
+        }
+        let full = ev.eval(inc.schedule());
+        if inc.eval() != full {
+            return Err(format!("final drift: inc {:?} != {full:?}", inc.eval()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_and_full_search_paths_agree_end_to_end() {
+    // Bit-identical evaluations + a shared RNG stream force the two
+    // priority_mapping implementations onto the same trajectory.
+    check("priority_mapping == priority_mapping_full", 25, |rng| {
+        let n = 2 + rng.below(16);
+        let max_batch = 1 + rng.below(5);
+        let pred = random_predictor(rng);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let params = SaParams {
+            max_batch,
+            seed: rng.next_u64(),
+            t0: 100.0,
+            iters_per_temp: 20,
+            ..Default::default()
+        };
+        let fast = priority_mapping(&ev, &params);
+        let full = priority_mapping_full(&ev, &params);
+        if fast.schedule != full.schedule {
+            return Err(format!(
+                "schedules diverge (n={n} mb={max_batch}): {:?} vs {:?}",
+                fast.schedule, full.schedule
+            ));
+        }
+        if fast.eval != full.eval {
+            return Err(format!(
+                "evals diverge: {:?} vs {:?}",
+                fast.eval, full.eval
+            ));
+        }
+        if fast.stats.evals != full.stats.evals
+            || fast.stats.accepted != full.stats.accepted
+            || fast.stats.improved != full.stats.improved
+            || fast.stats.early_exit != full.stats.early_exit
+        {
+            return Err(format!(
+                "stats diverge: {:?} vs {:?}",
+                fast.stats, full.stats
+            ));
+        }
+        Ok(())
+    });
+}
