@@ -21,6 +21,9 @@ use slo_serve::util::json::Json;
 use slo_serve::util::rng::Rng;
 
 const MAX_BATCH: usize = 8;
+/// SA search seed; recorded in the JSON so CI's regression gate compares
+/// reproducible runs (the workload seed per size is `0xBEEF ^ n`).
+const SA_SEED: u64 = 7;
 
 /// Mixed wave with SLOs tight enough that the sorted seed never meets them
 /// all — the early-exit fast path would otherwise skip the search entirely
@@ -61,10 +64,11 @@ fn main() {
     let mut sizes: Vec<Json> = Vec::new();
 
     for &n in &[16usize, 64, 256, 512] {
-        let js = jobs(n, 0xBEEF ^ n as u64);
+        let jobs_seed = 0xBEEF ^ n as u64;
+        let js = jobs(n, jobs_seed);
         let ev = Evaluator::new(&js, &pred);
         let params =
-            SaParams { max_batch: MAX_BATCH, seed: 7, ..Default::default() };
+            SaParams { max_batch: MAX_BATCH, seed: SA_SEED, ..Default::default() };
 
         // deterministic for a fixed seed, so stats come from one dry run
         let res = priority_mapping(&ev, &params);
@@ -92,6 +96,7 @@ fn main() {
         ]);
         sizes.push(Json::obj(vec![
             ("n", Json::num(n as f64)),
+            ("jobs_seed", Json::num(jobs_seed as f64)),
             ("sa_evals", Json::num(evals as f64)),
             ("full_ms", Json::num(full_ms)),
             ("incremental_ms", Json::num(inc_ms)),
@@ -105,6 +110,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("bench", Json::str("sa_throughput")),
         ("max_batch", Json::num(MAX_BATCH as f64)),
+        ("sa_seed", Json::num(SA_SEED as f64)),
         ("sa_t0", Json::num(SaParams::default().t0)),
         ("sa_iters_per_temp", Json::num(SaParams::default().iters_per_temp as f64)),
         ("sizes", Json::arr(sizes)),

@@ -19,9 +19,12 @@
 //! * [`priority`]   — Algorithm 1 (SA) and the exhaustive strawman.
 //! * [`policies`]   — FCFS/SJF/EDF/MLFQ baselines + policy dispatch.
 //! * [`scheduler`]  — Algorithm 2 multi-instance assignment.
+//! * [`online`]     — online wave admission: warm-started SA replanning
+//!   over timestamped arrival streams (the batch-to-streaming bridge).
 //! * this module    — plan execution against engines and completion records.
 
 pub mod objective;
+pub mod online;
 pub mod policies;
 pub mod pred_table;
 pub mod predictor;

@@ -434,6 +434,21 @@ impl<'a> IncrementalEval<'a> {
         max_batch: usize,
         rng: &mut Rng,
     ) -> Option<Eval> {
+        self.try_random_move_masked(max_batch, 0, rng)
+    }
+
+    /// [`IncrementalEval::try_random_move`] with the first `frozen_batches`
+    /// batches masked off (online admission: they are already dispatched).
+    /// Masked moves never change the frozen prefix's membership, order, or
+    /// boundaries, so its cached aggregates stay valid by construction.
+    /// With `frozen_batches == 0` this is bit-identical (same RNG stream,
+    /// same edits) to the unmasked path.
+    pub fn try_random_move_masked(
+        &mut self,
+        max_batch: usize,
+        frozen_batches: usize,
+        rng: &mut Rng,
+    ) -> Option<Eval> {
         debug_assert!(self.pending.is_none(), "move pending; commit or rollback");
         // Snapshot into reused buffers (no allocation once warm).
         self.saved_batches.clear();
@@ -448,7 +463,12 @@ impl<'a> IncrementalEval<'a> {
         self.saved_wait.extend_from_slice(&self.wait);
         self.saved_eval = self.eval;
 
-        let mv = moves::random_move_desc(&mut self.schedule, max_batch, rng)?;
+        let mv = moves::random_move_desc_masked(
+            &mut self.schedule,
+            max_batch,
+            frozen_batches,
+            rng,
+        )?;
         self.pending = Some(mv.undo);
 
         // Mirror the move's structural edits on the per-batch arrays so
@@ -720,6 +740,48 @@ mod tests {
                         inc.rollback();
                         assert_eq!(inc.eval(), before, "rollback step {step}");
                         assert_eq!(inc.schedule(), &before_schedule);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_masked_moves_match_full_eval_and_freeze_prefix() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..12)
+            .map(|i| e2e_job(60 + 37 * i, 10 + 5 * i, 7_000.0))
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build(&jobs, &pred, 3);
+        let mut inc =
+            IncrementalEval::new(&jobs, &table, Schedule::fcfs(12, 3));
+        let frozen = 2usize;
+        let frozen_pos: usize =
+            inc.schedule().batches[..frozen].iter().sum();
+        let order_prefix = inc.schedule().order[..frozen_pos].to_vec();
+        let batch_prefix = inc.schedule().batches[..frozen].to_vec();
+        let mut rng = Rng::new(9);
+        for step in 0..300 {
+            match inc.try_random_move_masked(3, frozen, &mut rng) {
+                None => continue,
+                Some(e) => {
+                    inc.schedule().validate(3).unwrap();
+                    assert_eq!(e, ev.eval(inc.schedule()), "step {step}");
+                    assert_eq!(
+                        inc.schedule().order[..frozen_pos],
+                        order_prefix[..],
+                        "step {step}"
+                    );
+                    assert_eq!(
+                        inc.schedule().batches[..frozen],
+                        batch_prefix[..],
+                        "step {step}"
+                    );
+                    if step % 3 == 0 {
+                        inc.rollback();
+                    } else {
+                        inc.commit();
                     }
                 }
             }

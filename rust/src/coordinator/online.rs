@@ -1,0 +1,722 @@
+//! Online wave admission: warm-started SA replanning over arrival streams.
+//!
+//! The paper plans one **closed wave** at a time: every request is present
+//! before Algorithm 1 runs, and the plan executes to completion. A serving
+//! front-end under live multi-SLO traffic instead sees a *stream* of
+//! arrivals that must be admitted into an in-flight plan. This module is
+//! the batch-to-streaming bridge:
+//!
+//! * [`WaveController`] owns the growing wave of one instance. On each
+//!   admission it extends the per-wave prediction table **in place**
+//!   ([`PredTable::extend`] — no recomputation of existing rows), freezes
+//!   the already-dispatched prefix of the current plan, and re-runs the SA
+//!   search **warm-started from the current best order** with frozen-prefix
+//!   move masking
+//!   ([`priority_mapping_warm`]).
+//! * [`run_online`] is the event loop gluing a controller to an engine:
+//!   admit everything that has arrived, dispatch the next planned batch,
+//!   let the (virtual) clock advance, repeat — so dispatch and replanning
+//!   interleave exactly as they would on a live server.
+//! * [`run_online_fleet`] drives one controller per instance with the
+//!   round-robin arrival split a fleet front-end applies; instance clocks
+//!   are independent, so per-instance runs compose without a global event
+//!   queue.
+//!
+//! **Equivalence guarantee** (tests/online_admission.rs): when every
+//! request arrives at t = 0 the controller admits the whole wave in one
+//! step with nothing frozen and no warm seed, and
+//! [`priority_mapping_warm`] then replays the closed-wave
+//! [`crate::coordinator::priority::annealing::priority_mapping`] bit for
+//! bit — same seeds, same RNG stream, same plan and objective. Online
+//! admission strictly generalizes the paper's wave scheduling.
+//!
+//! **Objective under a frozen prefix**: the controller keeps dispatched
+//! jobs in the evaluated schedule. Their e2e contributions are constants
+//! with respect to every masked move, but the frozen batch maxima still
+//! feed the suffix's entry wait — so a request stuck behind already
+//! dispatched work is correctly modelled as closer to its SLO bound. Wait
+//! accrued while the engine idled between waves is not modelled; measured
+//! attainment (from [`Completion`]s) is the ground truth the predicted
+//! objective approximates.
+
+use anyhow::Result;
+
+use crate::coordinator::objective::{Eval, Evaluator, Job, Schedule};
+use crate::coordinator::pred_table::PredTable;
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::priority::annealing::{
+    priority_mapping_warm, SaParams, SearchStats,
+};
+use crate::coordinator::request::{Completion, Request};
+use crate::coordinator::scheduler::instance_seed;
+use crate::engine::{Engine, EngineRequest};
+
+/// How a replan seeds its search when arrivals are admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanStrategy {
+    /// Warm start: previous best order with the new jobs appended seeds the
+    /// search (plus Algorithm 1's cold seeds while nothing is frozen).
+    Warm,
+    /// Cold restart at the same iteration budget: the learned suffix order
+    /// is discarded and the search re-seeds from the frozen prefix plus the
+    /// undispatched jobs in admission order (the ablation baseline the
+    /// warm/cold comparison in `examples/online_serving.rs` reports).
+    Cold,
+}
+
+impl ReplanStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanStrategy::Warm => "warm",
+            ReplanStrategy::Cold => "cold",
+        }
+    }
+}
+
+/// Controller-side diagnostics accumulated across a run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineStats {
+    /// Jobs admitted into the wave.
+    pub admitted: usize,
+    /// Replans executed (one per non-empty admission).
+    pub replans: usize,
+    /// Total replanning wall time (ms).
+    pub replan_ms_total: f64,
+    /// Total objective evaluations across all replans.
+    pub sa_evals: usize,
+    /// Batches dispatched (frozen).
+    pub dispatched_batches: usize,
+    /// Jobs dispatched.
+    pub dispatched_jobs: usize,
+}
+
+impl OnlineStats {
+    /// Mean replanning time (ms) per admission.
+    pub fn avg_replan_ms(&self) -> f64 {
+        if self.replans == 0 {
+            0.0
+        } else {
+            self.replan_ms_total / self.replans as f64
+        }
+    }
+}
+
+/// One dispatchable unit: the next undispatched batch of the plan.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    /// Batch index within the controller's plan.
+    pub batch: usize,
+    /// Scheduler job views; `req_idx` points into the caller's request
+    /// slice, in the planned intra-batch order.
+    pub jobs: Vec<Job>,
+}
+
+/// Online admission controller for one instance (module docs).
+pub struct WaveController<'a> {
+    predictor: &'a LatencyPredictor,
+    params: SaParams,
+    strategy: ReplanStrategy,
+    /// All admitted jobs, in admission order (indices are plan order ids).
+    jobs: Vec<Job>,
+    /// Grown in place on every admission — never rebuilt.
+    table: PredTable,
+    plan: Schedule,
+    eval: Eval,
+    /// Leading batches of `plan` already dispatched (frozen).
+    frozen_batches: usize,
+    stats: OnlineStats,
+    /// Last replan's search stats (None before the first admission).
+    last_search: Option<SearchStats>,
+}
+
+impl<'a> WaveController<'a> {
+    pub fn new(
+        predictor: &'a LatencyPredictor,
+        params: SaParams,
+        strategy: ReplanStrategy,
+    ) -> Self {
+        let max_batch = params.max_batch.max(1);
+        WaveController {
+            predictor,
+            params,
+            strategy,
+            jobs: Vec::new(),
+            table: PredTable::build(&[], predictor, max_batch),
+            plan: Schedule { order: vec![], batches: vec![] },
+            eval: Eval::ZERO,
+            frozen_batches: 0,
+            stats: OnlineStats::default(),
+            last_search: None,
+        }
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// The current plan over all admitted jobs (frozen prefix included).
+    pub fn plan(&self) -> &Schedule {
+        &self.plan
+    }
+
+    /// Predicted evaluation of the current plan.
+    pub fn eval(&self) -> Eval {
+        self.eval
+    }
+
+    pub fn frozen_batches(&self) -> usize {
+        self.frozen_batches
+    }
+
+    /// Number of leading plan positions that are frozen (dispatched).
+    pub fn frozen_positions(&self) -> usize {
+        self.plan.batches[..self.frozen_batches].iter().sum()
+    }
+
+    pub fn stats(&self) -> &OnlineStats {
+        &self.stats
+    }
+
+    pub fn last_search(&self) -> Option<&SearchStats> {
+        self.last_search.as_ref()
+    }
+
+    /// True when every planned batch has been dispatched.
+    pub fn drained(&self) -> bool {
+        self.frozen_batches == self.plan.batches.len()
+    }
+
+    /// Per-replan SA seed: the first replan uses the configured seed
+    /// verbatim (the online-equals-offline equivalence), later replans
+    /// derive fresh streams so repeated searches do not replay each other.
+    fn replan_seed(&self) -> u64 {
+        let r = self.stats.replans as u64;
+        self.params
+            .seed
+            .wrapping_add(r.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// The warm seed for this admission: current plan order with the new
+    /// jobs appended in admission order, packed into fresh trailing
+    /// batches of up to `max_batch`.
+    fn warm_seed(&self, old_n: usize) -> Schedule {
+        let max_batch = self.params.max_batch.max(1);
+        let mut warm = self.plan.clone();
+        warm.order.extend(old_n..self.jobs.len());
+        let mut fresh = self.jobs.len() - old_n;
+        while fresh > 0 {
+            let b = fresh.min(max_batch);
+            warm.batches.push(b);
+            fresh -= b;
+        }
+        warm
+    }
+
+    /// The cold re-seed: frozen prefix as dispatched, then every
+    /// undispatched job in admission order, packed to `max_batch`.
+    fn cold_seed(&self, old_n: usize) -> Schedule {
+        let max_batch = self.params.max_batch.max(1);
+        let frozen_pos = self.frozen_positions();
+        let mut order: Vec<usize> = self.plan.order[..frozen_pos].to_vec();
+        let mut in_prefix = vec![false; self.jobs.len()];
+        for &j in &order {
+            in_prefix[j] = true;
+        }
+        // previously admitted, undispatched jobs — then the new arrivals
+        order.extend((0..old_n).filter(|&j| !in_prefix[j]));
+        order.extend(old_n..self.jobs.len());
+        let mut batches: Vec<usize> =
+            self.plan.batches[..self.frozen_batches].to_vec();
+        let mut rest = self.jobs.len() - frozen_pos;
+        while rest > 0 {
+            let b = rest.min(max_batch);
+            batches.push(b);
+            rest -= b;
+        }
+        Schedule { order, batches }
+    }
+
+    /// Admit newly arrived jobs and replan the undispatched suffix.
+    ///
+    /// Grows the job set and prediction table in place, then re-runs the
+    /// SA search with the dispatched prefix frozen, seeded per the
+    /// controller's [`ReplanStrategy`]. Returns the stats of this replan.
+    ///
+    /// The very first admission (nothing planned, nothing frozen) runs
+    /// the plain closed-wave search — bit-identical to
+    /// [`crate::coordinator::priority::annealing::priority_mapping`] over
+    /// the same jobs and seed.
+    pub fn admit(&mut self, new_jobs: &[Job]) -> SearchStats {
+        assert!(!new_jobs.is_empty(), "admit called with no jobs");
+        let old_n = self.jobs.len();
+        self.jobs.extend_from_slice(new_jobs);
+        self.table.extend(new_jobs, self.predictor);
+
+        let params = SaParams { seed: self.replan_seed(), ..self.params };
+        let ev = Evaluator::new(&self.jobs, self.predictor);
+        let first_admission = old_n == 0 && self.frozen_batches == 0;
+        let warm = if first_admission {
+            // No prior plan: both strategies are the plain cold search.
+            None
+        } else {
+            match self.strategy {
+                ReplanStrategy::Warm => Some(self.warm_seed(old_n)),
+                ReplanStrategy::Cold => Some(self.cold_seed(old_n)),
+            }
+        };
+        // A cold restart without frozen work re-seeds from scratch.
+        let warm = match (self.strategy, self.frozen_batches) {
+            (ReplanStrategy::Cold, 0) => None,
+            _ => warm,
+        };
+        let res = priority_mapping_warm(
+            &ev,
+            &self.table,
+            &params,
+            warm.as_ref(),
+            self.frozen_batches,
+        );
+        debug_assert!(res.schedule.validate(params.max_batch.max(1)).is_ok());
+        self.plan = res.schedule;
+        self.eval = res.eval;
+        self.stats.admitted += new_jobs.len();
+        self.stats.replans += 1;
+        self.stats.replan_ms_total += res.stats.overhead_ms;
+        self.stats.sa_evals += res.stats.evals;
+        self.last_search = Some(res.stats);
+        res.stats
+    }
+
+    /// Pop the next undispatched batch, freezing it in place. Returns
+    /// `None` when the whole plan has been dispatched.
+    pub fn dispatch_next(&mut self) -> Option<Dispatch> {
+        if self.drained() {
+            return None;
+        }
+        let k = self.frozen_batches;
+        let start: usize = self.plan.batches[..k].iter().sum();
+        let size = self.plan.batches[k];
+        let jobs: Vec<Job> = self.plan.order[start..start + size]
+            .iter()
+            .map(|&j| self.jobs[j])
+            .collect();
+        self.frozen_batches += 1;
+        self.stats.dispatched_batches += 1;
+        self.stats.dispatched_jobs += size;
+        Some(Dispatch { batch: k, jobs })
+    }
+}
+
+/// Outcome of one online serving run.
+#[derive(Debug, Clone)]
+pub struct OnlineOutcome {
+    /// Measured completions, sorted by request id.
+    pub completions: Vec<Completion>,
+    pub stats: OnlineStats,
+    /// Predicted evaluation of the final plan (diagnostics).
+    pub final_eval: Eval,
+    /// Base SA seed of the run — with the trace seed, everything needed to
+    /// reproduce the run exactly.
+    pub seed: u64,
+}
+
+/// Event loop: drive one engine from a timestamped arrival stream (module
+/// docs). `requests` must be sorted by `arrival_ms`; `predicted_out[i]`
+/// is the output-length prediction for `requests[i]`.
+///
+/// Designed for virtual-clock engines ([`crate::engine::sim::SimEngine`]):
+/// idle gaps jump via [`Engine::advance_to`]. Wall-clock engines (whose
+/// `advance_to` is a no-op) are handled by sleeping until the next arrival.
+pub fn run_online(
+    requests: &[Request],
+    predicted_out: &[usize],
+    engine: &mut dyn Engine,
+    predictor: &LatencyPredictor,
+    params: &SaParams,
+    strategy: ReplanStrategy,
+) -> Result<OnlineOutcome> {
+    assert_eq!(requests.len(), predicted_out.len());
+    // A NaN arrival would never satisfy the admission compare nor move
+    // the virtual clock — the loop below would spin forever. Fail loudly.
+    assert!(
+        requests.iter().all(|r| r.arrival_ms.is_finite()),
+        "arrival times must be finite"
+    );
+    debug_assert!(
+        requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+        "arrival stream must be sorted by arrival_ms"
+    );
+    let mut ctl = WaveController::new(predictor, *params, strategy);
+    let mut completions: Vec<Completion> = Vec::with_capacity(requests.len());
+    let mut next = 0usize;
+
+    loop {
+        // Admit everything that has arrived by the engine clock.
+        let now = engine.now_ms();
+        let mut fresh: Vec<Job> = Vec::new();
+        while next < requests.len() && requests[next].arrival_ms <= now {
+            fresh.push(Job::from_request(
+                next,
+                &requests[next],
+                predicted_out[next],
+            ));
+            next += 1;
+        }
+        if !fresh.is_empty() {
+            ctl.admit(&fresh);
+        }
+        // Dispatch the next planned batch (work-conserving: we never hold
+        // a ready batch back to wait for better arrivals).
+        if let Some(d) = ctl.dispatch_next() {
+            let batch: Vec<EngineRequest> = d
+                .jobs
+                .iter()
+                .map(|job| {
+                    let r = &requests[job.req_idx];
+                    EngineRequest {
+                        id: r.id,
+                        input_len: r.input_len,
+                        max_new_tokens: r.output_len,
+                        prompt: r.prompt.clone(),
+                    }
+                })
+                .collect();
+            let items = engine.run_batch(&batch)?;
+            for (job, item) in d.jobs.iter().zip(&items) {
+                completions
+                    .push(super::to_completion(&requests[job.req_idx], item));
+            }
+            continue;
+        }
+        // Nothing dispatchable: either wait for the next arrival or stop.
+        if next >= requests.len() {
+            break;
+        }
+        let arrival = requests[next].arrival_ms;
+        engine.advance_to(arrival);
+        if engine.now_ms() < arrival {
+            // Wall-clock engine: let real time pass until the arrival.
+            let wait = (arrival - engine.now_ms()).clamp(1.0, 50.0);
+            std::thread::sleep(std::time::Duration::from_millis(wait as u64));
+        }
+    }
+
+    completions.sort_by_key(|c| c.id);
+    Ok(OnlineOutcome {
+        completions,
+        stats: *ctl.stats(),
+        final_eval: ctl.eval(),
+        seed: params.seed,
+    })
+}
+
+/// Fleet event loop: round-robin the arrival stream over `engines` (the
+/// split a vLLM-style front-end applies) and run one [`WaveController`]
+/// per instance at its [`instance_seed`]. Instance virtual clocks are
+/// independent, so the per-instance loops compose exactly.
+///
+/// Returns merged completions (sorted by id) plus per-instance outcomes.
+pub fn run_online_fleet(
+    requests: &[Request],
+    predicted_out: &[usize],
+    engines: &mut [Box<dyn Engine + Send>],
+    predictor: &LatencyPredictor,
+    params: &SaParams,
+    strategy: ReplanStrategy,
+) -> Result<(Vec<Completion>, Vec<OnlineOutcome>)> {
+    assert_eq!(requests.len(), predicted_out.len());
+    assert!(!engines.is_empty());
+    let n_inst = engines.len();
+    let mut per_req: Vec<Vec<Request>> = vec![Vec::new(); n_inst];
+    let mut per_out: Vec<Vec<usize>> = vec![Vec::new(); n_inst];
+    for (i, r) in requests.iter().enumerate() {
+        per_req[i % n_inst].push(r.clone());
+        per_out[i % n_inst].push(predicted_out[i]);
+    }
+    let mut outcomes = Vec::with_capacity(n_inst);
+    let mut completions = Vec::with_capacity(requests.len());
+    for (inst, engine) in engines.iter_mut().enumerate() {
+        let p = SaParams { seed: instance_seed(params.seed, inst), ..*params };
+        let outcome = run_online(
+            &per_req[inst],
+            &per_out[inst],
+            engine.as_mut(),
+            predictor,
+            &p,
+            strategy,
+        )?;
+        completions.extend_from_slice(&outcome.completions);
+        outcomes.push(outcome);
+    }
+    completions.sort_by_key(|c| c.id);
+    Ok((completions, outcomes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profiles::by_name;
+    use crate::coordinator::priority::annealing::priority_mapping;
+    use crate::coordinator::request::{Slo, TaskType};
+    use crate::engine::sim::SimEngine;
+    use crate::util::rng::Rng;
+
+    fn predictor() -> LatencyPredictor {
+        LatencyPredictor::paper_table2()
+    }
+
+    fn job(i: usize, rng: &mut Rng) -> Job {
+        Job {
+            req_idx: i,
+            input_len: 1 + rng.below(1200),
+            output_len: 1 + rng.below(300),
+            slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+        }
+    }
+
+    fn params(max_batch: usize, seed: u64) -> SaParams {
+        SaParams {
+            max_batch,
+            seed,
+            t0: 100.0,
+            iters_per_temp: 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_admission_matches_priority_mapping() {
+        let pred = predictor();
+        let mut rng = Rng::new(3);
+        let jobs: Vec<Job> = (0..14).map(|i| job(i, &mut rng)).collect();
+        let p = params(4, 9);
+        let mut ctl = WaveController::new(&pred, p, ReplanStrategy::Warm);
+        ctl.admit(&jobs);
+        let ev = Evaluator::new(&jobs, &pred);
+        let offline = priority_mapping(&ev, &p);
+        assert_eq!(ctl.plan(), &offline.schedule);
+        assert_eq!(ctl.eval(), offline.eval);
+    }
+
+    #[test]
+    fn dispatch_freezes_batches_in_plan_order() {
+        let pred = predictor();
+        let mut rng = Rng::new(4);
+        let jobs: Vec<Job> = (0..10).map(|i| job(i, &mut rng)).collect();
+        let mut ctl =
+            WaveController::new(&pred, params(3, 1), ReplanStrategy::Warm);
+        ctl.admit(&jobs);
+        let plan = ctl.plan().clone();
+        let mut seen = Vec::new();
+        let mut k = 0;
+        while let Some(d) = ctl.dispatch_next() {
+            assert_eq!(d.batch, k);
+            assert_eq!(d.jobs.len(), plan.batches[k]);
+            seen.extend(d.jobs.iter().map(|j| j.req_idx));
+            k += 1;
+        }
+        assert!(ctl.drained());
+        let planned: Vec<usize> =
+            plan.order.iter().map(|&j| jobs[j].req_idx).collect();
+        assert_eq!(seen, planned);
+    }
+
+    #[test]
+    fn replanning_after_dispatch_respects_frozen_prefix_and_warm_seed() {
+        let pred = predictor();
+        let mut rng = Rng::new(5);
+        let first: Vec<Job> = (0..8).map(|i| job(i, &mut rng)).collect();
+        for strategy in [ReplanStrategy::Warm, ReplanStrategy::Cold] {
+            let mut ctl =
+                WaveController::new(&pred, params(3, 2), strategy);
+            ctl.admit(&first);
+            let d = ctl.dispatch_next().unwrap();
+            let dispatched: Vec<usize> =
+                d.jobs.iter().map(|j| j.req_idx).collect();
+            let second: Vec<Job> =
+                (8..13).map(|i| job(i, &mut rng)).collect();
+            ctl.admit(&second);
+            ctl.plan().validate(3).unwrap();
+            assert_eq!(ctl.plan().len(), 13);
+            // dispatched batch unchanged at the head of the new plan
+            let fp = ctl.frozen_positions();
+            assert_eq!(fp, dispatched.len());
+            let head: Vec<usize> = ctl.plan().order[..fp]
+                .iter()
+                .map(|&j| ctl.jobs()[j].req_idx)
+                .collect();
+            assert_eq!(head, dispatched, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn warm_replan_never_ends_below_its_warm_seed() {
+        let pred = predictor();
+        let mut rng = Rng::new(6);
+        let mut ctl =
+            WaveController::new(&pred, params(4, 3), ReplanStrategy::Warm);
+        let mut admitted = 0usize;
+        for round in 0..4 {
+            let fresh: Vec<Job> = (admitted..admitted + 4 + round)
+                .map(|i| job(i, &mut rng))
+                .collect();
+            let old_n = admitted;
+            admitted += fresh.len();
+            // reconstruct the warm seed the controller will use
+            let warm_eval = if old_n == 0 {
+                None
+            } else {
+                let mut all: Vec<Job> = ctl.jobs().to_vec();
+                all.extend_from_slice(&fresh);
+                let warm = {
+                    let mut w = ctl.plan().clone();
+                    w.order.extend(old_n..admitted);
+                    let mut left = fresh.len();
+                    while left > 0 {
+                        let b = left.min(4);
+                        w.batches.push(b);
+                        left -= b;
+                    }
+                    w
+                };
+                Some(Evaluator::new(&all, &pred).eval(&warm))
+            };
+            ctl.admit(&fresh);
+            if let Some(seed_eval) = warm_eval {
+                assert!(
+                    ctl.eval().g >= seed_eval.g,
+                    "round {round}: replan {:?} below warm seed {:?}",
+                    ctl.eval(),
+                    seed_eval
+                );
+            }
+            ctl.dispatch_next();
+        }
+    }
+
+    #[test]
+    fn run_online_serves_every_request_and_replans() {
+        let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        profile.noise_std = 0.0;
+        let pred = profile.truth;
+        let mut engine = SimEngine::new(profile, 4, 0);
+        let mut reqs: Vec<Request> = (0..16)
+            .map(|i| {
+                Request::synthetic(
+                    i as u64,
+                    TaskType::Code,
+                    100 + 40 * i as usize,
+                    10 + 5 * i as usize,
+                    Slo::E2e { e2e_ms: 60_000.0 },
+                )
+            })
+            .collect();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.arrival_ms = 400.0 * (i / 4) as f64; // 4 waves of 4
+        }
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let out = run_online(
+            &reqs,
+            &outs,
+            &mut engine,
+            &pred,
+            &params(4, 11),
+            ReplanStrategy::Warm,
+        )
+        .unwrap();
+        assert_eq!(out.completions.len(), 16);
+        for (i, c) in out.completions.iter().enumerate() {
+            assert_eq!(c.id, i as u64);
+            assert!(c.wait_ms >= -1e-9, "negative wait: {c:?}");
+            assert!(c.e2e_ms > 0.0);
+        }
+        assert!(out.stats.replans >= 2, "{:?}", out.stats);
+        assert_eq!(out.stats.admitted, 16);
+        assert_eq!(out.stats.dispatched_jobs, 16);
+        assert_eq!(out.seed, 11);
+    }
+
+    #[test]
+    fn run_online_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+            profile.noise_std = 0.0;
+            let pred = profile.truth;
+            let mut engine = SimEngine::new(profile, 2, seed);
+            let mut reqs: Vec<Request> = (0..10)
+                .map(|i| {
+                    Request::synthetic(
+                        i as u64,
+                        TaskType::Code,
+                        150 + 30 * i as usize,
+                        12,
+                        Slo::E2e { e2e_ms: 30_000.0 },
+                    )
+                })
+                .collect();
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ms = 250.0 * (i / 2) as f64;
+            }
+            let outs: Vec<usize> =
+                reqs.iter().map(|r| r.output_len).collect();
+            let out = run_online(
+                &reqs,
+                &outs,
+                &mut engine,
+                &pred,
+                &params(2, seed),
+                ReplanStrategy::Warm,
+            )
+            .unwrap();
+            out.completions
+                .iter()
+                .map(|c| (c.id, c.e2e_ms.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn fleet_round_robin_covers_all_requests() {
+        let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        profile.noise_std = 0.0;
+        let pred = profile.truth;
+        let mut engines: Vec<Box<dyn Engine + Send>> = (0..3)
+            .map(|i| {
+                Box::new(SimEngine::new(profile.clone(), 2, i as u64))
+                    as Box<dyn Engine + Send>
+            })
+            .collect();
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| {
+                let mut r = Request::synthetic(
+                    i as u64,
+                    TaskType::Code,
+                    100 + 20 * i as usize,
+                    8,
+                    Slo::E2e { e2e_ms: 60_000.0 },
+                );
+                r.arrival_ms = 100.0 * i as f64;
+                r
+            })
+            .collect();
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let (completions, outcomes) = run_online_fleet(
+            &reqs,
+            &outs,
+            &mut engines,
+            &pred,
+            &params(2, 5),
+            ReplanStrategy::Warm,
+        )
+        .unwrap();
+        assert_eq!(completions.len(), 12);
+        assert!(completions.windows(2).all(|w| w[0].id < w[1].id));
+        assert_eq!(outcomes.len(), 3);
+        let total: usize = outcomes.iter().map(|o| o.stats.admitted).sum();
+        assert_eq!(total, 12);
+        // per-instance seeds are derived, not shared
+        assert_eq!(outcomes[0].seed, instance_seed(5, 0));
+        assert_eq!(outcomes[1].seed, instance_seed(5, 1));
+    }
+}

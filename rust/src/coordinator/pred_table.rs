@@ -47,6 +47,26 @@ impl PredTable {
         PredTable { n: jobs.len(), max_batch, entries }
     }
 
+    /// Grow the table in place with predictions for newly admitted jobs
+    /// (online wave admission): O(new · max_batch) predictor calls, no
+    /// recomputation of existing rows. Appended entries are laid out
+    /// exactly as [`PredTable::build`] would have placed them, so a table
+    /// built empty and grown job-batch-by-job-batch is bit-identical to a
+    /// table built over the full job set at once.
+    pub fn extend(&mut self, new_jobs: &[Job], predictor: &LatencyPredictor) {
+        self.entries.reserve(new_jobs.len() * self.max_batch);
+        for job in new_jobs {
+            for b in 1..=self.max_batch {
+                self.entries.push(predictor.predict(
+                    b,
+                    job.input_len,
+                    job.output_len,
+                ));
+            }
+        }
+        self.n += new_jobs.len();
+    }
+
     /// Look up the prediction for `job` at `batch` (1-based, ≤ max_batch).
     #[inline]
     pub fn get(&self, job: usize, batch: usize) -> PredictedLatency {
@@ -120,6 +140,32 @@ mod tests {
         let table = PredTable::build(&jobs, &pred, 0);
         assert_eq!(table.max_batch(), 1);
         assert!(table.get(0, 1).exec_ms > 0.0);
+    }
+
+    #[test]
+    fn grown_table_is_bit_identical_to_rebuilt_table() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(5);
+        let jobs: Vec<Job> = (0..13)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 1 + rng.below(1800),
+                output_len: rng.below(400),
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        // grow from empty in uneven admission chunks
+        let mut grown = PredTable::build(&[], &pred, 4);
+        grown.extend(&jobs[..1], &pred);
+        grown.extend(&jobs[1..6], &pred);
+        grown.extend(&jobs[6..], &pred);
+        let rebuilt = PredTable::build(&jobs, &pred, 4);
+        assert_eq!(grown.len(), rebuilt.len());
+        for j in 0..jobs.len() {
+            for b in 1..=4 {
+                assert_eq!(grown.get(j, b), rebuilt.get(j, b), "{j} {b}");
+            }
+        }
     }
 
     #[test]

@@ -162,37 +162,23 @@ fn seed_solution(
     }
 }
 
-/// Algorithm 1: map jobs to a priority sequence + batch partition.
-///
-/// Production path: prediction-table + incremental-evaluation SA (see
-/// module docs). Bit-identical evaluations to [`priority_mapping_full`]'s
-/// per-candidate full evaluation, at a fraction of the cost.
-pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
-    let t_start = crate::util::now_ms();
-    let n = ev.jobs().len();
-    let max_batch = params.max_batch.max(1);
-    let mut stats = SearchStats::start();
-
-    if n == 0 {
-        return SaResult {
-            schedule: Schedule { order: vec![], batches: vec![] },
-            eval: Eval::ZERO,
-            stats,
-        };
-    }
-
-    let (seed_schedule, f_seed, early_exit) =
-        seed_solution(ev, n, max_batch, &mut stats);
-    if early_exit {
-        stats.early_exit = true;
-        stats.overhead_ms = crate::util::now_ms() - t_start;
-        return SaResult { schedule: seed_schedule, eval: f_seed, stats };
-    }
-
-    // Layer 1: precompute every (job, batch_size) prediction for the wave.
-    let table = PredTable::build(ev.jobs(), ev.predictor(), max_batch);
+/// The shared Metropolis loop: anneal from `seed_schedule` against a
+/// prebuilt prediction table, with the first `frozen_batches` batches
+/// masked off from every move. `frozen_batches == 0` reproduces the
+/// classic closed-wave search bit for bit.
+fn anneal(
+    ev: &Evaluator,
+    table: &PredTable,
+    params: &SaParams,
+    max_batch: usize,
+    frozen_batches: usize,
+    seed_schedule: Schedule,
+    f_seed: Eval,
+    mut stats: SearchStats,
+    t_start: f64,
+) -> SaResult {
     // Layer 2: incremental evaluator owns the walking candidate state.
-    let mut inc = IncrementalEval::new(ev.jobs(), &table, seed_schedule);
+    let mut inc = IncrementalEval::new(ev.jobs(), table, seed_schedule);
     debug_assert!(
         eval_bits_equal(&inc.eval(), &f_seed),
         "incremental seed eval {:?} != full {:?}",
@@ -212,7 +198,8 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
         for _ in 0..params.iters_per_temp {
             // Layer 3: allocation-free move applied against the
             // incremental state; commit or rollback below.
-            let f_new = match inc.try_random_move(max_batch, &mut rng) {
+            let mv = inc.try_random_move_masked(max_batch, frozen_batches, &mut rng);
+            let f_new = match mv {
                 Some(e) => e,
                 None => continue,
             };
@@ -246,6 +233,145 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
 
     stats.overhead_ms = crate::util::now_ms() - t_start;
     SaResult { schedule: best, eval: f_best, stats }
+}
+
+/// Algorithm 1: map jobs to a priority sequence + batch partition.
+///
+/// Production path: prediction-table + incremental-evaluation SA (see
+/// module docs). Bit-identical evaluations to [`priority_mapping_full`]'s
+/// per-candidate full evaluation, at a fraction of the cost.
+pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
+    let t_start = crate::util::now_ms();
+    let n = ev.jobs().len();
+    let max_batch = params.max_batch.max(1);
+    let mut stats = SearchStats::start();
+
+    if n == 0 {
+        return SaResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval::ZERO,
+            stats,
+        };
+    }
+
+    let (seed_schedule, f_seed, early_exit) =
+        seed_solution(ev, n, max_batch, &mut stats);
+    if early_exit {
+        stats.early_exit = true;
+        stats.overhead_ms = crate::util::now_ms() - t_start;
+        return SaResult { schedule: seed_schedule, eval: f_seed, stats };
+    }
+
+    // Layer 1: precompute every (job, batch_size) prediction for the wave.
+    let table = PredTable::build(ev.jobs(), ev.predictor(), max_batch);
+    anneal(
+        ev,
+        &table,
+        params,
+        max_batch,
+        0,
+        seed_schedule,
+        f_seed,
+        stats,
+        t_start,
+    )
+}
+
+/// Algorithm 1 with **warm start** and **frozen-prefix masking** over a
+/// caller-supplied prediction table — the online replanning entry point
+/// ([`crate::coordinator::online::WaveController`]).
+///
+/// * `table` — grown in place across admissions ([`PredTable::extend`]);
+///   must cover all `ev.jobs()` at `params.max_batch`.
+/// * `warm` — the current best schedule (typically the previous plan with
+///   newly admitted jobs appended). With `frozen_batches == 0` it competes
+///   against Algorithm 1's two cold seeds and the best of the three starts
+///   the search, so a warm search never starts below a cold one; with
+///   `frozen_batches > 0` the cold seeds would reorder dispatched work, so
+///   `warm` is required and seeds the search alone.
+/// * `frozen_batches` — leading batches already dispatched: no move ever
+///   changes their membership, order, or boundaries.
+///
+/// With `warm == None` and `frozen_batches == 0` this is bit-identical to
+/// [`priority_mapping`] (same seeds, same RNG stream, same result) apart
+/// from reusing the supplied table — the online-equals-offline guarantee.
+pub fn priority_mapping_warm(
+    ev: &Evaluator,
+    table: &PredTable,
+    params: &SaParams,
+    warm: Option<&Schedule>,
+    frozen_batches: usize,
+) -> SaResult {
+    let t_start = crate::util::now_ms();
+    let n = ev.jobs().len();
+    let max_batch = params.max_batch.max(1);
+    let mut stats = SearchStats::start();
+
+    if n == 0 {
+        return SaResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval::ZERO,
+            stats,
+        };
+    }
+    assert_eq!(table.len(), n, "prediction table does not cover the jobs");
+    assert!(
+        table.max_batch() >= max_batch,
+        "prediction table built for max_batch {} < {}",
+        table.max_batch(),
+        max_batch
+    );
+
+    if frozen_batches > 0 {
+        let warm = warm.expect("a frozen prefix requires a warm-start schedule");
+        assert_eq!(warm.len(), n, "warm schedule does not cover the jobs");
+        assert!(
+            frozen_batches <= warm.batches.len(),
+            "frozen prefix beyond the warm schedule"
+        );
+        let seed_schedule = warm.clone();
+        let f_seed = ev.eval(&seed_schedule);
+        stats.evals += 1;
+        return anneal(
+            ev,
+            table,
+            params,
+            max_batch,
+            frozen_batches,
+            seed_schedule,
+            f_seed,
+            stats,
+            t_start,
+        );
+    }
+
+    let (mut seed_schedule, mut f_seed, early_exit) =
+        seed_solution(ev, n, max_batch, &mut stats);
+    if early_exit {
+        stats.early_exit = true;
+        stats.overhead_ms = crate::util::now_ms() - t_start;
+        return SaResult { schedule: seed_schedule, eval: f_seed, stats };
+    }
+    if let Some(w) = warm {
+        assert_eq!(w.len(), n, "warm schedule does not cover the jobs");
+        let f_w = ev.eval(w);
+        stats.evals += 1;
+        if f_w.g > f_seed.g {
+            seed_schedule = w.clone();
+            f_seed = f_w;
+        }
+    }
+    anneal(
+        ev,
+        table,
+        params,
+        max_batch,
+        0,
+        seed_schedule,
+        f_seed,
+        stats,
+        t_start,
+    )
 }
 
 /// Algorithm 1 with per-candidate **full** evaluation — the pre-table
@@ -493,6 +619,67 @@ mod tests {
             assert_eq!(fast.stats.evals, full.stats.evals, "seed {seed}");
             assert_eq!(fast.stats.accepted, full.stats.accepted, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn warm_entry_without_warm_seed_matches_priority_mapping_exactly() {
+        use crate::coordinator::pred_table::PredTable;
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(seed ^ 0x11CE);
+            let jobs: Vec<Job> = (0..13)
+                .map(|_| Job {
+                    req_idx: 0,
+                    input_len: 1 + rng.below(1400),
+                    output_len: 1 + rng.below(350),
+                    slo: Slo::E2e { e2e_ms: rng.uniform(800.0, 15_000.0) },
+                })
+                .collect();
+            let ev = Evaluator::new(&jobs, &pred);
+            let p = params(4, seed);
+            let table = PredTable::build(&jobs, &pred, p.max_batch);
+            let cold = priority_mapping(&ev, &p);
+            let warm = priority_mapping_warm(&ev, &table, &p, None, 0);
+            assert_eq!(cold.schedule, warm.schedule, "seed {seed}");
+            assert_eq!(cold.eval, warm.eval, "seed {seed}");
+            assert_eq!(cold.stats.evals, warm.stats.evals, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn warm_start_never_ends_below_its_seed_and_keeps_frozen_prefix() {
+        use crate::coordinator::pred_table::PredTable;
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0xF00D);
+        let jobs: Vec<Job> = (0..12)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(1200),
+                output_len: 1 + rng.below(300),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 10_000.0) },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let p = params(3, 4);
+        let table = PredTable::build(&jobs, &pred, p.max_batch);
+        let warm = Schedule::fcfs(12, 3);
+        let f_warm = ev.eval(&warm);
+        let frozen = 2usize;
+        let frozen_pos: usize = warm.batches[..frozen].iter().sum();
+        let res = priority_mapping_warm(&ev, &table, &p, Some(&warm), frozen);
+        res.schedule.validate(3).unwrap();
+        assert!(
+            res.eval.g >= f_warm.g,
+            "warm result {:?} below its seed {:?}",
+            res.eval,
+            f_warm
+        );
+        assert_eq!(
+            res.schedule.order[..frozen_pos],
+            warm.order[..frozen_pos],
+            "frozen prefix reordered"
+        );
+        assert_eq!(res.schedule.batches[..frozen], warm.batches[..frozen]);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod exhaustive;
 pub mod moves;
 
 pub use annealing::{
-    priority_mapping, priority_mapping_full, SaParams, SaResult, SearchStats,
+    priority_mapping, priority_mapping_full, priority_mapping_warm, SaParams,
+    SaResult, SearchStats,
 };
 pub use exhaustive::{exhaustive_mapping, ExhaustiveResult, MAX_EXHAUSTIVE_N};

@@ -22,6 +22,17 @@
 //!
 //! All moves preserve the schedule invariants (permutation; positive batch
 //! sizes ≤ max; partition) — enforced by the property tests.
+//!
+//! **Frozen-prefix masking** (online admission): every move has a
+//! `*_masked` variant taking `frozen_batches` — the number of leading
+//! batches already dispatched to an engine. Masked moves never change the
+//! membership, order, or boundaries of the frozen prefix: eligible source
+//! batches start at `frozen_batches` (and squeeze targets at
+//! `frozen_batches` too), and swaps only sample positions at or beyond the
+//! first unfrozen position. With `frozen_batches == 0` the masked variants
+//! draw the exact same RNG stream and produce the exact same edits as the
+//! unmasked ones — the bit-identity the online-equals-offline equivalence
+//! test rests on.
 
 use crate::coordinator::objective::Schedule;
 use crate::util::rng::Rng;
@@ -107,16 +118,31 @@ pub fn squeeze_prev_desc(
     max_batch: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
-    if s.batches.len() < 2 {
+    squeeze_prev_desc_masked(s, max_batch, 0, rng)
+}
+
+/// [`squeeze_prev_desc`] with the first `frozen_batches` batches frozen:
+/// both the source batch and the (previous) target batch must lie beyond
+/// the frozen prefix.
+pub fn squeeze_prev_desc_masked(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
+    let m = s.batches.len();
+    // Source k needs an unfrozen target k-1: k ranges over first..m.
+    let first = frozen_batches + 1;
+    if m < first + 1 {
         return None;
     }
-    // Eligible batches k>0 with batches[k-1] < max_batch.
+    // Eligible batches k >= first with batches[k-1] < max_batch.
     let elig = |k: usize| s.batches[k - 1] < max_batch;
-    let count = (1..s.batches.len()).filter(|&k| elig(k)).count();
+    let count = (first..m).filter(|&k| elig(k)).count();
     if count == 0 {
         return None;
     }
-    let k = nth_eligible(1..s.batches.len(), rng.below(count), elig);
+    let k = nth_eligible(first..m, rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     // pick a random member of batch k and move it to the end of batch k-1
     let pick = start_k + rng.below(s.batches[k]);
@@ -146,10 +172,25 @@ pub fn delay_next_desc(
     max_batch: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    delay_next_desc_masked(s, max_batch, 0, rng)
+}
+
+/// [`delay_next_desc`] with the first `frozen_batches` batches frozen: the
+/// source batch must lie beyond the frozen prefix (the target batch is
+/// always later still).
+pub fn delay_next_desc_masked(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     if s.order.is_empty() {
         return None;
     }
     let m = s.batches.len();
+    if frozen_batches >= m {
+        return None;
+    }
     // Eligible source batches: k < m-1 with batches[k+1] < max_batch, or the
     // final batch if it holds more than one job (otherwise delaying is a
     // no-op that recreates the same batch).
@@ -160,11 +201,11 @@ pub fn delay_next_desc(
             s.batches[k] > 1
         }
     };
-    let count = (0..m).filter(|&k| elig(k)).count();
+    let count = (frozen_batches..m).filter(|&k| elig(k)).count();
     if count == 0 {
         return None;
     }
-    let k = nth_eligible(0..m, rng.below(count), elig);
+    let k = nth_eligible(frozen_batches..m, rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     let pick = start_k + rng.below(s.batches[k]);
     // rotate the picked job to the START of batch k+1's span (the slot at
@@ -204,12 +245,26 @@ pub fn delay_next_desc(
 /// Swap two random positions in the priority sequence. Returns `None` only
 /// for schedules with fewer than two jobs.
 pub fn rand_swap_desc(s: &mut Schedule, rng: &mut Rng) -> Option<AppliedMove> {
+    rand_swap_desc_masked(s, 0, rng)
+}
+
+/// [`rand_swap_desc`] with the first `frozen_batches` batches frozen: both
+/// swapped positions are sampled from the unfrozen suffix.
+pub fn rand_swap_desc_masked(
+    s: &mut Schedule,
+    frozen_batches: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let n = s.order.len();
-    if n < 2 {
+    let frozen_pos: usize = s.batches[..frozen_batches.min(s.batches.len())]
+        .iter()
+        .sum();
+    if n - frozen_pos < 2 {
         return None;
     }
-    let i = rng.below(n);
-    let mut j = rng.below(n - 1);
+    let free = n - frozen_pos;
+    let i = frozen_pos + rng.below(free);
+    let mut j = frozen_pos + rng.below(free - 1);
     if j >= i {
         j += 1;
     }
@@ -232,12 +287,23 @@ pub fn random_move_desc(
     max_batch: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    random_move_desc_masked(s, max_batch, 0, rng)
+}
+
+/// [`random_move_desc`] with the first `frozen_batches` batches frozen.
+/// Returns `None` (schedule untouched) only if no masked move is possible.
+pub fn random_move_desc_masked(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let first = rng.below(3);
     for offset in 0..3 {
         let mv = match (first + offset) % 3 {
-            0 => squeeze_prev_desc(s, max_batch, rng),
-            1 => delay_next_desc(s, max_batch, rng),
-            _ => rand_swap_desc(s, rng),
+            0 => squeeze_prev_desc_masked(s, max_batch, frozen_batches, rng),
+            1 => delay_next_desc_masked(s, max_batch, frozen_batches, rng),
+            _ => rand_swap_desc_masked(s, frozen_batches, rng),
         };
         if mv.is_some() {
             return mv;
@@ -423,6 +489,75 @@ mod tests {
         assert_eq!((mv.b_lo, mv.b_hi), (0, 1));
         assert!(mv.appended_batch);
         assert_eq!(s.batches, vec![1, 1]);
+    }
+
+    #[test]
+    fn masked_moves_never_touch_frozen_prefix() {
+        check("masked moves preserve the frozen prefix", 300, |rng| {
+            let n = 1 + rng.below(14);
+            let max_batch = 1 + rng.below(4);
+            let mut s = Schedule::fcfs(n, max_batch);
+            // walk to a random state first
+            for _ in 0..10 {
+                random_move_desc(&mut s, max_batch, rng);
+            }
+            let frozen = rng.below(s.batches.len() + 1);
+            let frozen_pos: usize = s.batches[..frozen].iter().sum();
+            for _ in 0..30 {
+                let order_prefix = s.order[..frozen_pos].to_vec();
+                let batch_prefix = s.batches[..frozen].to_vec();
+                if let Some(mv) =
+                    random_move_desc_masked(&mut s, max_batch, frozen, rng)
+                {
+                    s.validate(max_batch)
+                        .map_err(|e| format!("after masked move: {e}"))?;
+                    if s.order[..frozen_pos] != order_prefix[..] {
+                        return Err(format!(
+                            "frozen order changed: {:?} != {order_prefix:?}",
+                            &s.order[..frozen_pos]
+                        ));
+                    }
+                    if s.batches[..frozen] != batch_prefix[..] {
+                        return Err(format!(
+                            "frozen batches changed: {:?} != {batch_prefix:?}",
+                            &s.batches[..frozen]
+                        ));
+                    }
+                    if mv.b_lo < frozen {
+                        return Err(format!(
+                            "move reports frozen batch touched: {mv:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_with_zero_frozen_matches_unmasked_stream() {
+        // Same seed, same schedule: frozen = 0 must replay the exact edits
+        // of the unmasked path (the online-equals-offline bit-identity).
+        let mut a = Schedule::fcfs(9, 3);
+        let mut b = Schedule::fcfs(9, 3);
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        for _ in 0..200 {
+            let ma = random_move_desc(&mut a, 3, &mut rng_a);
+            let mb = random_move_desc_masked(&mut b, 3, 0, &mut rng_b);
+            assert_eq!(ma, mb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn fully_frozen_schedule_admits_no_moves() {
+        let mut rng = Rng::new(12);
+        let mut s = Schedule::fcfs(6, 2);
+        let m = s.batches.len();
+        let before = s.clone();
+        assert!(random_move_desc_masked(&mut s, 2, m, &mut rng).is_none());
+        assert_eq!(s, before);
     }
 
     #[test]

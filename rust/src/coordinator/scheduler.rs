@@ -67,6 +67,18 @@ pub struct ScheduleOutcome {
     /// numbers, whose instances are mapped sequentially on one server —
     /// report this, not `overhead_ms`, when reproducing that figure.
     pub cpu_ms: f64,
+    /// Base RNG seed the wave was planned with (each instance searches at
+    /// [`instance_seed`] of it). Recorded so a plan — and the bench JSON
+    /// rows derived from it — can be reproduced exactly.
+    pub seed: u64,
+}
+
+/// Per-instance search seed derived from the wave's base seed: instances
+/// explore independently, and the derivation is shared with the online
+/// path ([`crate::coordinator::online`]) so a single-instance online run
+/// with t=0 arrivals replays the closed-wave search bit for bit.
+pub fn instance_seed(base: u64, inst: usize) -> u64 {
+    base.wrapping_add(inst as u64).wrapping_mul(0x9E3779B9)
 }
 
 /// Instance assignment (Algorithm 2 line 4, "Instance Assignment" ¶).
@@ -162,10 +174,7 @@ pub fn schedule(
         .collect();
     // Derive a per-instance seed so instances explore independently.
     let params: Vec<SaParams> = (0..job_sets.len())
-        .map(|inst| SaParams {
-            seed: sa.seed.wrapping_add(inst as u64).wrapping_mul(0x9E3779B9),
-            ..*sa
-        })
+        .map(|inst| SaParams { seed: instance_seed(sa.seed, inst), ..*sa })
         .collect();
 
     let busy = job_sets.iter().filter(|jobs| !jobs.is_empty()).count();
@@ -226,6 +235,7 @@ pub fn schedule(
         plans,
         overhead_ms: crate::util::now_ms() - t0,
         cpu_ms: assign_ms + mapping_cpu_ms,
+        seed: sa.seed,
     }
 }
 
@@ -364,6 +374,7 @@ mod tests {
         assert_eq!(all, (0..12).collect::<Vec<_>>());
         assert!(outcome.overhead_ms >= 0.0);
         assert!(outcome.cpu_ms >= 0.0);
+        assert_eq!(outcome.seed, sa.seed); // reproducibility record
         // cpu time covers every instance's mapping; each one individually
         // can never exceed the total
         for plan in &outcome.plans {

@@ -28,6 +28,9 @@ pub struct SimEngine {
     max_batch: usize,
     clock_ms: f64,
     rng: Rng,
+    /// Noise seed this engine was (re)initialized with — recorded so a
+    /// run's timing can be reproduced exactly (online/bench provenance).
+    seed: u64,
     kv: BlockAllocator,
     /// Batches executed (diagnostics).
     pub batches_run: usize,
@@ -47,6 +50,7 @@ impl SimEngine {
             max_batch,
             clock_ms: 0.0,
             rng: Rng::new(seed ^ 0x51_E2_61_4E),
+            seed,
             kv: BlockAllocator::new(kv_cfg),
             batches_run: 0,
             decode_steps: 0,
@@ -55,6 +59,11 @@ impl SimEngine {
 
     pub fn profile(&self) -> &HardwareProfile {
         &self.profile
+    }
+
+    /// The noise seed of the current run (set by `new`/`reset`).
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     pub fn kv(&self) -> &BlockAllocator {
@@ -70,6 +79,7 @@ impl SimEngine {
     pub fn reset(&mut self, seed: u64) {
         self.clock_ms = 0.0;
         self.rng = Rng::new(seed ^ 0x51_E2_61_4E);
+        self.seed = seed;
         self.kv.reset();
         self.batches_run = 0;
         self.decode_steps = 0;
@@ -422,6 +432,40 @@ mod tests {
         };
         assert_eq!(run(3), run(3));
         assert_ne!(run(3), run(4)); // noise differs across seeds
+    }
+
+    #[test]
+    fn seed_is_recorded_across_reset() {
+        let mut e = SimEngine::new(quiet_profile(), 2, 41);
+        assert_eq!(e.seed(), 41);
+        e.reset(99);
+        assert_eq!(e.seed(), 99);
+        assert_eq!(e.now_ms(), 0.0);
+    }
+
+    #[test]
+    fn planned_batches_interleave_with_arrival_jumps() {
+        // The online event loop alternates run_batch with advance_to the
+        // next arrival; the virtual clock must honor both directions of
+        // progress (batch execution and idle jumps) without going back.
+        let p = quiet_profile();
+        let truth = p.truth;
+        let mut e = SimEngine::new(p, 2, 0);
+        e.run_batch(&[req(1, 200, 5)]).unwrap();
+        let after_first = e.now_ms();
+        assert!(after_first > 0.0);
+        // idle until an arrival far in the future
+        e.advance_to(after_first + 5_000.0);
+        let t_arrival = e.now_ms();
+        assert_eq!(t_arrival, after_first + 5_000.0);
+        let out = e.run_batch(&[req(2, 100, 3)]).unwrap();
+        // the second batch starts at the arrival jump, not before
+        assert!((out[0].start_ms - t_arrival).abs() < 1e-9);
+        let expected_first = t_arrival + truth.prefill_ms(1, 100);
+        assert!((out[0].first_token_ms - expected_first).abs() < 1e-6);
+        // an arrival in the past never rewinds the clock
+        e.advance_to(1.0);
+        assert!(e.now_ms() >= expected_first);
     }
 
     #[test]

@@ -39,17 +39,23 @@ pub mod prelude {
     pub use crate::config::profiles::{by_name, HardwareProfile};
     pub use crate::config::{OutputPrediction, RunConfig, SloTargets};
     pub use crate::coordinator::objective::{Evaluator, Job, Schedule};
+    pub use crate::coordinator::online::{
+        run_online, run_online_fleet, ReplanStrategy, WaveController,
+    };
     pub use crate::coordinator::policies::Policy;
     pub use crate::coordinator::predictor::LatencyPredictor;
     pub use crate::coordinator::priority::annealing::{
-        priority_mapping, SaParams,
+        priority_mapping, priority_mapping_warm, SaParams,
     };
     pub use crate::coordinator::profiler::RequestProfiler;
     pub use crate::coordinator::request::{Request, Slo, TaskType};
-    pub use crate::coordinator::scheduler::{schedule, InstanceInfo};
+    pub use crate::coordinator::scheduler::{
+        instance_seed, schedule, InstanceInfo,
+    };
     pub use crate::engine::sim::SimEngine;
     pub use crate::engine::{Engine, EngineRequest};
     pub use crate::metrics::RunMetrics;
     pub use crate::util::rng::Rng;
     pub use crate::workload::dataset::RequestFactory;
+    pub use crate::workload::trace::{ArrivalProcess, ClassMix, TraceSpec};
 }

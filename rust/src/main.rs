@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       — run a scheduling scenario on the simulated fleet
+//!   online    — online wave admission over a timed arrival trace
 //!   serve     — start the TCP JSON-lines serving front-end
 //!   profile   — profiling rounds + least-squares fit (paper Table 2)
 //!   profiles  — list built-in hardware profiles
@@ -12,13 +13,20 @@ use anyhow::{anyhow, Result};
 use slo_serve::bench;
 use slo_serve::config::profiles;
 use slo_serve::config::RunConfig;
+use slo_serve::coordinator::online::{run_online_fleet, ReplanStrategy};
+use slo_serve::coordinator::predict_outputs;
 use slo_serve::coordinator::predictor::LatencyPredictor;
 use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::coordinator::request::TaskType;
 use slo_serve::engine::instance::InstanceHandle;
 use slo_serve::engine::sim::SimEngine;
-use slo_serve::metrics::{fmt, Table};
+use slo_serve::engine::Engine;
+use slo_serve::metrics::{fmt, RunMetrics, Table};
 use slo_serve::server;
 use slo_serve::util::cli::{render_help, Args, OptSpec};
+use slo_serve::util::rng::Rng;
+use slo_serve::workload::trace::{ArrivalProcess, TraceSpec};
+use slo_serve::workload::RequestFactory;
 
 fn run_specs() -> Vec<OptSpec> {
     vec![
@@ -68,6 +76,135 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     t.row(vec!["G (req/s)".into(), fmt(m.g_req_per_s)]);
     t.row(vec!["sched_overhead_ms".into(), fmt(run.sched_overhead_ms)]);
     print!("{}", t.render());
+    Ok(())
+}
+
+fn online_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec {
+            name: "profile",
+            help: "hardware profile name",
+            default: Some("qwen7b-v100x2-vllm"),
+        },
+        OptSpec { name: "requests", help: "trace length", default: Some("64") },
+        OptSpec { name: "max-batch", help: "engine batch cap", default: Some("4") },
+        OptSpec { name: "instances", help: "instance count", default: Some("1") },
+        OptSpec {
+            name: "seed",
+            help: "rng seed (trace + search + noise)",
+            default: Some("42"),
+        },
+        OptSpec {
+            name: "slo-scale",
+            help: "scale all SLO bounds",
+            default: Some("1.0"),
+        },
+        OptSpec {
+            name: "arrival",
+            help: "concurrent | poisson:RPS | bursty:B:PERIOD_MS | \
+                   onoff:RPS:ON_MS:OFF_MS",
+            default: Some("poisson:8"),
+        },
+        OptSpec {
+            name: "replan",
+            help: "warm | cold | compare",
+            default: Some("compare"),
+        },
+    ]
+}
+
+/// Online wave admission over a timed arrival trace: warm-started SA
+/// replanning on every admission, per-SLO-class attainment + replanning
+/// overhead out (ISSUE 2's serving path; `compare` also runs the
+/// cold-restart ablation at the same iteration budget).
+fn cmd_online(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &online_specs())?;
+    let profile = profiles::by_name(&args.str("profile"))
+        .ok_or_else(|| anyhow!("unknown profile"))?;
+    let n = args.usize("requests")?;
+    let max_batch = args.usize("max-batch")?.max(1);
+    let n_inst = args.usize("instances")?.max(1);
+    let seed = args.u64("seed")?;
+    let arrivals =
+        ArrivalProcess::parse(&args.str("arrival")).map_err(|e| anyhow!(e))?;
+    let strategies: Vec<ReplanStrategy> = match args.str("replan").as_str() {
+        "warm" => vec![ReplanStrategy::Warm],
+        "cold" => vec![ReplanStrategy::Cold],
+        "compare" => vec![ReplanStrategy::Warm, ReplanStrategy::Cold],
+        other => return Err(anyhow!("bad --replan {other}")),
+    };
+
+    let slos = slo_serve::config::SloTargets::default()
+        .scaled(args.f64("slo-scale")?);
+    let mut factory = RequestFactory::new(seed, slos);
+    let mut trace_rng = Rng::new(seed ^ 0x0411_13E);
+    let trace = TraceSpec { n, arrivals }.generate(&mut factory, &mut trace_rng);
+
+    let predictor = bench::fit_predictor_from_profile(&profile, seed);
+    let profiler = bench::warm_output_profiler(seed, 200);
+    let mut pred_rng = Rng::new(seed ^ 0x007_FEED);
+    let predicted = predict_outputs(
+        &trace,
+        &profiler,
+        slo_serve::config::OutputPrediction::Profiler,
+        &mut pred_rng,
+        profile.max_total_tokens / 2,
+    );
+    let sa = SaParams { max_batch, seed, ..Default::default() };
+
+    let mut t = Table::new(&[
+        "replan",
+        "attainment",
+        "chat",
+        "code",
+        "G (req/s)",
+        "replans",
+        "avg replan ms",
+        "pred G (req/s)",
+    ]);
+    for strategy in strategies {
+        let mut engines: Vec<Box<dyn Engine + Send>> = (0..n_inst)
+            .map(|i| {
+                Box::new(SimEngine::new(
+                    profile.clone(),
+                    max_batch,
+                    seed ^ (i as u64).wrapping_mul(0xE5317),
+                )) as Box<dyn Engine + Send>
+            })
+            .collect();
+        let (completions, outcomes) = run_online_fleet(
+            &trace, &predicted, &mut engines, &predictor, &sa, strategy,
+        )?;
+        let m = RunMetrics::from_completions(&completions);
+        let by_task = RunMetrics::attainment_by_task(&completions);
+        let task_att = |task: TaskType| {
+            by_task
+                .iter()
+                .find(|(tt, _, _)| *tt == task)
+                .map_or("-".to_string(), |(_, a, _)| fmt(*a))
+        };
+        let replans: usize = outcomes.iter().map(|o| o.stats.replans).sum();
+        let replan_ms: f64 =
+            outcomes.iter().map(|o| o.stats.replan_ms_total).sum();
+        let pred_g: f64 =
+            outcomes.iter().map(|o| o.final_eval.g * 1000.0).sum();
+        t.row(vec![
+            strategy.name().into(),
+            fmt(m.attainment()),
+            task_att(TaskType::Chat),
+            task_att(TaskType::Code),
+            fmt(m.g_req_per_s),
+            replans.to_string(),
+            fmt(if replans == 0 { 0.0 } else { replan_ms / replans as f64 }),
+            fmt(pred_g),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "trace: {} requests, {:?}, seed {seed} (recorded; reruns are \
+         bit-identical)",
+        n, arrivals
+    );
     Ok(())
 }
 
@@ -202,6 +339,7 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
+        Some("online") => cmd_online(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("profile") => cmd_profile(&argv[1..]),
         Some("profiles") => {
@@ -211,9 +349,17 @@ fn main() -> Result<()> {
         Some("help") | None => {
             println!(
                 "slo-serve — SLO-aware LLM inference scheduling (CS.DC 2025 reproduction)\n\n\
-                 subcommands: run | serve | profile | profiles | help\n"
+                 subcommands: run | online | serve | profile | profiles | help\n"
             );
             print!("{}", render_help("slo-serve run", "run a scheduling scenario", &run_specs()));
+            print!(
+                "{}",
+                render_help(
+                    "slo-serve online",
+                    "online admission over an arrival trace",
+                    &online_specs(),
+                )
+            );
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' (try help)")),

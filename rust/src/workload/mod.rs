@@ -15,4 +15,4 @@ pub mod dataset;
 pub mod trace;
 
 pub use dataset::{DatasetSpec, RequestFactory};
-pub use trace::{ArrivalProcess, TraceSpec};
+pub use trace::{finalize_trace, ArrivalProcess, ClassMix, ClassSpec, TraceSpec};

@@ -1,14 +1,54 @@
 //! Arrival processes: turn request waves into timed traces.
 //!
 //! The paper's evaluation submits waves of concurrent requests (arrival at
-//! t=0); production front-ends see Poisson or bursty arrivals. All three
-//! are supported so the serving example and ablations can exercise the
-//! continuous-batching path under load.
+//! t = 0); production front-ends see continuous traffic. This module
+//! provides the arrival-time generators feeding the online admission path
+//! ([`crate::coordinator::online`]) as well as the continuous-batching
+//! baseline.
+//!
+//! # Trace formats
+//!
+//! A *trace* is a `Vec<Request>` sorted by `arrival_ms`, ids re-assigned
+//! in arrival order (`0..n`). Arrival times are stamped by an
+//! [`ArrivalProcess`]:
+//!
+//! * [`ArrivalProcess::Concurrent`] — all requests at t = 0 (the paper's
+//!   closed-wave methodology; the online-equals-offline equivalence case).
+//! * [`ArrivalProcess::Poisson`] — exponential inter-arrival gaps at
+//!   `rps` requests/second (steady open-loop traffic).
+//! * [`ArrivalProcess::Bursty`] — `burst` concurrent requests every
+//!   `period_ms` (thundering-herd waves).
+//! * [`ArrivalProcess::OnOff`] — an ON-OFF modulated Poisson process:
+//!   Poisson at `rps` during `on_ms`-long phases, silence for `off_ms`
+//!   between them (diurnal/bursty service traffic; the "Beyond Greedy
+//!   Chunking" sliding-window setting).
+//!
+//! The textual spec accepted by [`ArrivalProcess::parse`] (CLI `--arrival`
+//! flag, config files) is:
+//!
+//! ```text
+//! concurrent | poisson:RPS | bursty:BURST:PERIOD_MS | onoff:RPS:ON_MS:OFF_MS
+//! ```
+//!
+//! [`ClassMix`] builds multi-SLO-class traces: each class (task type ⇒ SLO
+//! family) gets its own request count and arrival process; the per-class
+//! streams are merged and sorted into one trace.
+//!
+//! # Determinism
+//!
+//! Every generator draws from an explicit caller-supplied [`Rng`]; equal
+//! seeds produce bit-identical traces on every platform (the RNG is pure
+//! u64 arithmetic). [`ClassMix::generate`] additionally forks one child
+//! stream per class, so adding a class never perturbs the arrival times of
+//! the classes before it. Record the seed alongside results — the bench
+//! JSON and `ScheduleOutcome::seed` do — and a run can be reproduced
+//! exactly.
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Request, TaskType};
 use crate::util::rng::Rng;
+use crate::workload::dataset::RequestFactory;
 
-/// Arrival-time process.
+/// Arrival-time process (see module docs for the trace formats).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalProcess {
     /// All requests arrive at t = 0 (the paper's wave methodology).
@@ -17,6 +57,9 @@ pub enum ArrivalProcess {
     Poisson { rps: f64 },
     /// Bursts of `burst` concurrent requests every `period_ms`.
     Bursty { burst: usize, period_ms: f64 },
+    /// ON-OFF modulated Poisson: `rps` during `on_ms`-long ON phases,
+    /// nothing during the `off_ms`-long OFF phases between them.
+    OnOff { rps: f64, on_ms: f64, off_ms: f64 },
 }
 
 /// Trace spec: how many requests and how they arrive.
@@ -26,8 +69,25 @@ pub struct TraceSpec {
     pub arrivals: ArrivalProcess,
 }
 
+impl TraceSpec {
+    /// Generate a mixed-dataset trace: `n` requests from the factory's
+    /// 50/50 chat+code wave, stamped by `arrivals` and sorted by arrival
+    /// time with ids re-assigned in arrival order.
+    pub fn generate(
+        &self,
+        factory: &mut RequestFactory,
+        rng: &mut Rng,
+    ) -> Vec<Request> {
+        let mut reqs = factory.mixed_wave(self.n);
+        self.arrivals.apply(&mut reqs, rng);
+        finalize_trace(&mut reqs);
+        reqs
+    }
+}
+
 impl ArrivalProcess {
     /// Stamp arrival times onto a request wave (in place, preserving order).
+    /// All processes emit non-decreasing times in slice order.
     pub fn apply(&self, requests: &mut [Request], rng: &mut Rng) {
         match *self {
             ArrivalProcess::Concurrent => {
@@ -49,7 +109,133 @@ impl ArrivalProcess {
                     r.arrival_ms = (i / burst) as f64 * period_ms;
                 }
             }
+            ArrivalProcess::OnOff { rps, on_ms, off_ms } => {
+                assert!(rps > 0.0, "ON-phase rate must be positive");
+                assert!(on_ms > 0.0, "ON phase must have positive length");
+                assert!(off_ms >= 0.0);
+                // Draw on an "ON-time" clock, then splice the OFF gaps in:
+                // ON-time u maps to wall time by inserting one OFF period
+                // per completed ON phase.
+                let mut u = 0.0f64;
+                for r in requests.iter_mut() {
+                    u += rng.exponential(rps / 1000.0);
+                    let phase = (u / on_ms).floor();
+                    r.arrival_ms = phase * (on_ms + off_ms) + (u - phase * on_ms);
+                }
+            }
         }
+    }
+
+    /// Parse the textual spec (module docs):
+    /// `concurrent | poisson:RPS | bursty:BURST:PERIOD_MS |
+    /// onoff:RPS:ON_MS:OFF_MS`.
+    pub fn parse(spec: &str) -> Result<ArrivalProcess, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || format!("bad arrival spec '{spec}'");
+        // Finite-only: NaN/inf would slip past `<= 0.0` rejections (NaN
+        // comparisons are false) and then panic in `apply` — or worse,
+        // stamp NaN arrival times that spin the online event loop forever.
+        let f = |s: &str| match s.parse::<f64>() {
+            Ok(v) if v.is_finite() => Ok(v),
+            _ => Err(bad()),
+        };
+        let u = |s: &str| s.parse::<usize>().map_err(|_| bad());
+        match parts.as_slice() {
+            ["concurrent"] => Ok(ArrivalProcess::Concurrent),
+            ["poisson", rps] => {
+                let rps = f(rps)?;
+                if rps <= 0.0 {
+                    return Err(bad());
+                }
+                Ok(ArrivalProcess::Poisson { rps })
+            }
+            ["bursty", burst, period] => {
+                let burst = u(burst)?;
+                let period_ms = f(period)?;
+                if burst == 0 || period_ms <= 0.0 {
+                    return Err(bad());
+                }
+                Ok(ArrivalProcess::Bursty { burst, period_ms })
+            }
+            ["onoff", rps, on, off] => {
+                let (rps, on_ms, off_ms) = (f(rps)?, f(on)?, f(off)?);
+                if rps <= 0.0 || on_ms <= 0.0 || off_ms < 0.0 {
+                    return Err(bad());
+                }
+                Ok(ArrivalProcess::OnOff { rps, on_ms, off_ms })
+            }
+            _ => Err(bad()),
+        }
+    }
+}
+
+/// One SLO class of a [`ClassMix`]: a task type (which fixes the SLO
+/// family — e2e for code, TTFT+TPOT for chat), a request count, and its
+/// own arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassSpec {
+    pub task: TaskType,
+    pub n: usize,
+    pub arrivals: ArrivalProcess,
+}
+
+/// Per-SLO-class arrival mix: independent arrival streams per class,
+/// merged into one trace (module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassMix {
+    pub classes: Vec<ClassSpec>,
+}
+
+impl ClassMix {
+    /// The paper's 50/50 chat+code mix, with each class on its own
+    /// arrival process.
+    pub fn chat_code(
+        n: usize,
+        chat: ArrivalProcess,
+        code: ArrivalProcess,
+    ) -> ClassMix {
+        ClassMix {
+            classes: vec![
+                ClassSpec { task: TaskType::Code, n: n.div_ceil(2), arrivals: code },
+                ClassSpec { task: TaskType::Chat, n: n / 2, arrivals: chat },
+            ],
+        }
+    }
+
+    /// Total request count across classes.
+    pub fn total(&self) -> usize {
+        self.classes.iter().map(|c| c.n).sum()
+    }
+
+    /// Generate the merged trace: per class, draw `n` requests of its task
+    /// type from the factory and stamp its arrival process using a forked
+    /// child RNG stream (class `i` gets `rng.fork(i)`, so class streams
+    /// are mutually independent and insertion-order stable); then merge
+    /// all classes, sort by arrival time (stable: ties keep class order),
+    /// and re-assign ids in arrival order.
+    pub fn generate(
+        &self,
+        factory: &mut RequestFactory,
+        rng: &mut Rng,
+    ) -> Vec<Request> {
+        let mut all: Vec<Request> = Vec::with_capacity(self.total());
+        for (i, class) in self.classes.iter().enumerate() {
+            let mut class_rng = rng.fork(i as u64);
+            let mut reqs = factory.uniform_wave(class.n, class.task);
+            class.arrivals.apply(&mut reqs, &mut class_rng);
+            all.extend(reqs);
+        }
+        finalize_trace(&mut all);
+        all
+    }
+}
+
+/// Sort a stamped wave into trace form: ascending `arrival_ms` (stable;
+/// NaN-safe via `total_cmp`) with ids re-assigned in arrival order.
+pub fn finalize_trace(requests: &mut [Request]) {
+    requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
     }
 }
 
@@ -94,5 +280,130 @@ mod tests {
         assert_eq!(reqs[3].arrival_ms, 0.0);
         assert_eq!(reqs[4].arrival_ms, 100.0);
         assert_eq!(reqs[9].arrival_ms, 200.0);
+    }
+
+    #[test]
+    fn onoff_is_monotone_and_skips_off_phases() {
+        let mut reqs = wave(3000);
+        let mut rng = Rng::new(3);
+        let (on_ms, off_ms) = (500.0, 1500.0);
+        ArrivalProcess::OnOff { rps: 20.0, on_ms, off_ms }
+            .apply(&mut reqs, &mut rng);
+        let cycle = on_ms + off_ms;
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        for r in &reqs {
+            // every arrival lands inside an ON window
+            let in_cycle = r.arrival_ms % cycle;
+            assert!(
+                in_cycle < on_ms,
+                "arrival {} in OFF phase (offset {in_cycle})",
+                r.arrival_ms
+            );
+        }
+        // effective rate = rps · on/(on+off) = 5 rps -> 3000 reqs ≈ 600 s
+        let span_s = reqs.last().unwrap().arrival_ms / 1000.0;
+        assert!((span_s - 600.0).abs() < 80.0, "span {span_s}");
+    }
+
+    #[test]
+    fn onoff_with_zero_off_matches_poisson_stream() {
+        let mut a = wave(500);
+        let mut b = a.clone();
+        let mut rng_a = Rng::new(9);
+        let mut rng_b = Rng::new(9);
+        ArrivalProcess::OnOff { rps: 8.0, on_ms: 1000.0, off_ms: 0.0 }
+            .apply(&mut a, &mut rng_a);
+        ArrivalProcess::Poisson { rps: 8.0 }.apply(&mut b, &mut rng_b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.arrival_ms - y.arrival_ms).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip_and_rejects_garbage() {
+        assert_eq!(
+            ArrivalProcess::parse("concurrent"),
+            Ok(ArrivalProcess::Concurrent)
+        );
+        assert_eq!(
+            ArrivalProcess::parse("poisson:12.5"),
+            Ok(ArrivalProcess::Poisson { rps: 12.5 })
+        );
+        assert_eq!(
+            ArrivalProcess::parse("bursty:8:250"),
+            Ok(ArrivalProcess::Bursty { burst: 8, period_ms: 250.0 })
+        );
+        assert_eq!(
+            ArrivalProcess::parse("onoff:20:500:1500"),
+            Ok(ArrivalProcess::OnOff {
+                rps: 20.0,
+                on_ms: 500.0,
+                off_ms: 1500.0
+            })
+        );
+        for bad in [
+            "", "nope", "poisson", "poisson:0", "poisson:x", "poisson:nan",
+            "poisson:inf", "bursty:0:100", "bursty:8:nan", "bursty:8:0",
+            "onoff:nan:500:1500", "onoff:20:0:100", "onoff:20:100",
+        ] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn trace_spec_generates_sorted_reid_trace() {
+        let mut factory = RequestFactory::new(5, SloTargets::default());
+        let mut rng = Rng::new(5);
+        let spec =
+            TraceSpec { n: 40, arrivals: ArrivalProcess::Poisson { rps: 20.0 } };
+        let trace = spec.generate(&mut factory, &mut rng);
+        assert_eq!(trace.len(), 40);
+        for (i, w) in trace.windows(2).enumerate() {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms, "at {i}");
+        }
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn class_mix_merges_streams_deterministically() {
+        let gen = |seed: u64| {
+            let mut factory = RequestFactory::new(seed, SloTargets::default());
+            let mut rng = Rng::new(seed);
+            ClassMix::chat_code(
+                30,
+                ArrivalProcess::Poisson { rps: 15.0 },
+                ArrivalProcess::OnOff {
+                    rps: 30.0,
+                    on_ms: 400.0,
+                    off_ms: 800.0,
+                },
+            )
+            .generate(&mut factory, &mut rng)
+        };
+        let a = gen(11);
+        let b = gen(11);
+        assert_eq!(a.len(), 30);
+        assert_eq!(
+            a.iter().filter(|r| r.task == TaskType::Code).count(),
+            15
+        );
+        for w in a.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.arrival_ms.to_bits(), y.arrival_ms.to_bits());
+        }
+        // different seed -> different trace
+        let c = gen(12);
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| x.arrival_ms.to_bits() != y.arrival_ms.to_bits()));
     }
 }
