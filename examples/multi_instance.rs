@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let outcome = schedule(
         &requests, &predicted, &infos, &predictor,
         &profile.mem, &SaParams::with_max_batch(MAX_BATCH),
-    );
+    )?;
     println!(
         "scheduling overhead across {INSTANCES} instances: {:.3} ms wall \
          (parallel mapping), {:.3} ms cpu (Σ per-instance, the paper's \

@@ -127,8 +127,9 @@ pub fn make_wave(cfg: &RunConfig) -> Vec<Request> {
 /// Plan a wave with a planned-batch policy across instances.
 ///
 /// Non-SLO-aware policies still need instance assignment; they share the
-/// round-robin memory-aware assigner (Algorithm 2 line 4) and then order
-/// their own instance-local queues.
+/// round-robin memory-aware assigner (Algorithm 2 line 4, in Eq. 20 KV
+/// blocks) and then order their own instance-local queues. Fails when a
+/// request's KV footprint exceeds every instance pool.
 pub fn plan_wave(
     requests: &[Request],
     predicted_out: &[usize],
@@ -136,13 +137,22 @@ pub fn plan_wave(
     predictor: &LatencyPredictor,
     profile: &HardwareProfile,
     cfg: &RunConfig,
-) -> (Vec<InstancePlan>, f64, Option<SearchStats>) {
+) -> Result<(Vec<InstancePlan>, f64, Option<SearchStats>)> {
     let t0 = crate::util::now_ms();
+    let block_tokens = match policy {
+        Policy::SloAware(sa) => sa.kv.block_tokens,
+        _ => crate::coordinator::kv::DEFAULT_BLOCK_TOKENS,
+    };
     let instances: Vec<InstanceInfo> = (0..cfg.n_instances)
         .map(|id| InstanceInfo { id, mem_mb: profile.kv_pool_mb })
         .collect();
-    let assignment =
-        assign_instances(requests, predicted_out, &instances, &profile.mem);
+    let assignment = assign_instances(
+        requests,
+        predicted_out,
+        &instances,
+        &profile.mem,
+        block_tokens,
+    )?;
     let mut plans = Vec::with_capacity(instances.len());
     let mut agg_stats: Option<SearchStats> = None;
     for (inst, req_indices) in assignment.into_iter().enumerate() {
@@ -190,7 +200,7 @@ pub fn plan_wave(
             }),
         });
     }
-    (plans, crate::util::now_ms() - t0, agg_stats)
+    Ok((plans, crate::util::now_ms() - t0, agg_stats))
 }
 
 /// Run a full scenario on the simulated engine fleet.
@@ -236,7 +246,7 @@ pub fn run_scenario_with(
         ..cfg.sa
     })?;
     let (plans, overhead_ms, stats) =
-        plan_wave(&wave, &predicted, &policy, &predictor, &profile, cfg);
+        plan_wave(&wave, &predicted, &policy, &predictor, &profile, cfg)?;
     let mut boxed: Vec<Box<dyn Engine + Send>> = engines
         .into_iter()
         .map(|e| Box::new(e) as Box<dyn Engine + Send>)

@@ -1,0 +1,328 @@
+//! KV-cache feasibility model for the scheduler core (paper Eq. 20).
+//!
+//! The paper uses Eq. 20 (`token_num(m) = m·μ/σ`) only for *instance
+//! assignment*: a wave is packed onto instances by total token footprint,
+//! but nothing stops the SA search from forming a single batch whose
+//! combined KV demand exceeds the instance's block pool — a plan the
+//! engine then refuses at execution time. This module makes the block
+//! pool a first-class input of the search:
+//!
+//! * [`KvConfig`] carries the pool geometry (tokens per block, pool size
+//!   in blocks) and the enforcement [`KvMode`];
+//! * per-job block footprints are precomputed into the per-wave
+//!   [`crate::coordinator::pred_table::PredTable`];
+//! * [`crate::coordinator::objective::IncrementalEval`] maintains
+//!   per-batch block occupancy alongside its latency partials;
+//! * the move generator and the annealing acceptance rule reject
+//!   ([`KvMode::Hard`]) or penalize ([`KvMode::Soft`]) candidates that
+//!   overcommit any batch.
+//!
+//! **Bit-identity contract**: with [`KvMode::Unlimited`] (the default) or
+//! a `u64::MAX` pool, every excess is zero, no move is ever vetoed, and
+//! the search draws the exact RNG stream of the pre-KV implementation —
+//! enforced by `tests/kv_feasibility.rs`.
+//!
+//! A job's footprint is its *total* token count (prompt plus predicted
+//! decode growth) rounded up to blocks: planned batches are static
+//! (Eq. 10), so the engine reserves input + output KV up front and the
+//! footprint is independent of the batch size the job executes at.
+
+use crate::coordinator::profiler::MemoryModel;
+
+/// Tokens per KV block (vLLM's default block size, shared with
+/// [`crate::engine::kv_cache::KvCacheConfig`]).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// How KV-block pressure enters the objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KvMode {
+    /// Pre-KV behaviour: footprints are tracked but never constrain the
+    /// search. Guarantees bit-identical trajectories to the legacy path.
+    Unlimited,
+    /// Hard feasibility: moves that would push any batch over the pool
+    /// are vetoed before application, and the acceptance rule orders
+    /// candidates by (excess, G) lexicographically — so a search seeded
+    /// from an infeasible schedule descends into feasibility first and
+    /// never accepts a regression in excess.
+    Hard,
+    /// Soft penalty: candidates are scored as `G − weight · excess_blocks`
+    /// and the standard Metropolis rule applies to the penalized score.
+    Soft {
+        /// Penalty per excess block, in G units (G ≈ 1e-3 for ms-scale
+        /// latencies, so weights around `1.0` make any overcommit dominate
+        /// while still letting the search traverse infeasible states).
+        weight: f64,
+    },
+}
+
+/// KV-pool geometry + enforcement mode threaded through the search via
+/// [`crate::coordinator::priority::annealing::SaParams::kv`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvConfig {
+    /// Tokens per block (must match the engine's allocator granularity).
+    pub block_tokens: usize,
+    /// Pool capacity in blocks; `u64::MAX` means unlimited.
+    pub pool_blocks: u64,
+    pub mode: KvMode,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig::UNLIMITED
+    }
+}
+
+impl KvConfig {
+    /// The legacy configuration: footprints tracked, nothing enforced.
+    pub const UNLIMITED: KvConfig = KvConfig {
+        block_tokens: DEFAULT_BLOCK_TOKENS,
+        pool_blocks: u64::MAX,
+        mode: KvMode::Unlimited,
+    };
+
+    /// Hard-feasibility pool of `pool_blocks` blocks.
+    pub fn hard(pool_blocks: u64) -> KvConfig {
+        KvConfig {
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            pool_blocks,
+            mode: KvMode::Hard,
+        }
+    }
+
+    /// Soft-penalty pool of `pool_blocks` blocks.
+    pub fn soft(pool_blocks: u64, weight: f64) -> KvConfig {
+        KvConfig {
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            pool_blocks,
+            mode: KvMode::Soft { weight },
+        }
+    }
+
+    /// Derive a pool from a memory budget through Eq. 20
+    /// (`token_num(m) = m·μ/σ`, then blocks at `block_tokens` granularity).
+    pub fn from_pool_mb(
+        pool_mb: f64,
+        mem: &MemoryModel,
+        block_tokens: usize,
+        mode: KvMode,
+    ) -> KvConfig {
+        let block_tokens = block_tokens.max(1);
+        KvConfig {
+            block_tokens,
+            pool_blocks: pool_blocks_from_mb(pool_mb, mem, block_tokens),
+            mode,
+        }
+    }
+
+    /// Blocks needed to hold `tokens` tokens (≥ 1 block, mirroring the
+    /// engine allocator: even an empty sequence pins one block).
+    #[inline]
+    pub fn blocks_for_tokens(&self, tokens: usize) -> u64 {
+        blocks_for(tokens, self.block_tokens)
+    }
+
+    /// Total KV footprint of one job: prompt + predicted decode growth
+    /// (the engine reserves both up front for a planned batch).
+    #[inline]
+    pub fn job_blocks(&self, input_len: usize, output_len: usize) -> u64 {
+        self.blocks_for_tokens(input_len + output_len)
+    }
+
+    /// Footprint right after prefill (before any decode growth) —
+    /// diagnostics for peak-occupancy breakdowns.
+    #[inline]
+    pub fn prefill_blocks(&self, input_len: usize) -> u64 {
+        self.blocks_for_tokens(input_len)
+    }
+
+    /// True when the pool can actually constrain the search: a finite pool
+    /// under [`KvMode::Hard`] or [`KvMode::Soft`].
+    #[inline]
+    pub fn binding(&self) -> bool {
+        !matches!(self.mode, KvMode::Unlimited) && self.pool_blocks != u64::MAX
+    }
+
+    /// True when moves should be vetoed pre-application (hard mode only;
+    /// soft mode lets the search traverse infeasible states).
+    #[inline]
+    pub fn vetoes_moves(&self) -> bool {
+        matches!(self.mode, KvMode::Hard) && self.pool_blocks != u64::MAX
+    }
+
+    /// Blocks by which one batch's occupancy exceeds the pool (0 when the
+    /// config is not binding).
+    #[inline]
+    pub fn batch_excess(&self, batch_blocks: u64) -> u64 {
+        if self.binding() {
+            batch_blocks.saturating_sub(self.pool_blocks)
+        } else {
+            0
+        }
+    }
+
+    /// Can a job of `blocks` blocks ever execute (alone in a batch)?
+    #[inline]
+    pub fn fits_alone(&self, blocks: u64) -> bool {
+        !self.binding() || blocks <= self.pool_blocks
+    }
+
+    /// Soft-mode score: `G − weight · excess`. Returns `g` untouched (same
+    /// bits) at zero excess, preserving the bit-identity contract.
+    #[inline]
+    pub fn soft_score(g: f64, excess_blocks: u64, weight: f64) -> f64 {
+        if excess_blocks == 0 {
+            g
+        } else {
+            g - weight * excess_blocks as f64
+        }
+    }
+}
+
+/// The scheduler-side block-rounding rule, shared by every footprint
+/// computation ([`KvConfig::blocks_for_tokens`], instance assignment):
+/// `⌈max(tokens, 1) / block_tokens⌉`. Must stay in lockstep with the
+/// engine allocator's accounting
+/// ([`crate::engine::kv_cache::BlockAllocator::blocks_needed`]) — the
+/// search's occupancy sums are only a feasibility proof if both sides
+/// round identically.
+#[inline]
+pub fn blocks_for(tokens: usize, block_tokens: usize) -> u64 {
+    (tokens.max(1).div_ceil(block_tokens.max(1))) as u64
+}
+
+/// Greedily pack `order[from..]` into batches of at most `max_batch`
+/// jobs whose block sums stay within `pool_blocks`, appending the batch
+/// sizes to `batches`. Pass `u64::MAX` for an unconstrained pool (plain
+/// fixed-size chunking). A job whose footprint alone exceeds the pool
+/// still gets a singleton batch — callers reject such jobs upstream.
+/// This is **the** feasible-packing rule, shared by the online seed
+/// packing and the hard-mode repack fallback so the two can never
+/// diverge.
+pub fn pack_greedy(
+    order: &[usize],
+    from: usize,
+    job_blocks: &[u64],
+    max_batch: usize,
+    pool_blocks: u64,
+    batches: &mut Vec<usize>,
+) {
+    let max_batch = max_batch.max(1);
+    let mut size = 0usize;
+    let mut blocks = 0u64;
+    for &j in &order[from..] {
+        let jb = job_blocks[j];
+        if size == max_batch || (size > 0 && blocks + jb > pool_blocks) {
+            batches.push(size);
+            size = 0;
+            blocks = 0;
+        }
+        size += 1;
+        blocks += jb;
+    }
+    if size > 0 {
+        batches.push(size);
+    }
+}
+
+/// Eq. 20 pool derivation shared by the scheduler and the CLI: tokens a
+/// memory budget can host (`m·μ/σ`), floored to whole blocks. NaN or
+/// non-positive budgets yield an empty pool (a broken instance must not
+/// look infinite).
+///
+/// Deliberately **conservative** relative to the engine allocator, which
+/// sizes its pool without μ ([`crate::engine::kv_cache::KvCacheConfig`]):
+/// Eq. 20's utility factor (μ < 1, paper §4.2) is headroom for
+/// fragmentation and accounting slack, so the search plans against
+/// `μ · pool` while the engine admits against the full pool — a plan
+/// feasible under the scheduler's pool is always feasible at execution.
+/// The *rounding* of individual footprints, by contrast, matches the
+/// allocator exactly ([`blocks_for`]).
+pub fn pool_blocks_from_mb(
+    mem_mb: f64,
+    mem: &MemoryModel,
+    block_tokens: usize,
+) -> u64 {
+    (mem.token_capacity(mem_mb) / block_tokens.max(1)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_rounding_mirrors_engine_allocator() {
+        let kv = KvConfig::hard(100);
+        assert_eq!(kv.blocks_for_tokens(0), 1); // empty seq pins a block
+        assert_eq!(kv.blocks_for_tokens(1), 1);
+        assert_eq!(kv.blocks_for_tokens(16), 1);
+        assert_eq!(kv.blocks_for_tokens(17), 2);
+        assert_eq!(kv.job_blocks(30, 3), 3); // 33 tokens -> 3 blocks
+        assert_eq!(kv.prefill_blocks(30), 2);
+    }
+
+    #[test]
+    fn unlimited_is_never_binding() {
+        let kv = KvConfig::UNLIMITED;
+        assert!(!kv.binding());
+        assert!(!kv.vetoes_moves());
+        assert_eq!(kv.batch_excess(u64::MAX - 1), 0);
+        assert!(kv.fits_alone(u64::MAX));
+        // finite pool under Unlimited mode is still legacy behaviour
+        let legacy = KvConfig { pool_blocks: 4, ..KvConfig::UNLIMITED };
+        assert!(!legacy.binding());
+        assert_eq!(legacy.batch_excess(10), 0);
+        // hard mode with an infinite pool never vetoes either
+        let inf_hard = KvConfig::hard(u64::MAX);
+        assert!(!inf_hard.binding());
+        assert!(!inf_hard.vetoes_moves());
+    }
+
+    #[test]
+    fn excess_and_modes() {
+        let hard = KvConfig::hard(10);
+        assert!(hard.binding() && hard.vetoes_moves());
+        assert_eq!(hard.batch_excess(10), 0); // exact fit is feasible
+        assert_eq!(hard.batch_excess(13), 3);
+        assert!(!hard.fits_alone(11));
+        let soft = KvConfig::soft(10, 0.5);
+        assert!(soft.binding() && !soft.vetoes_moves());
+    }
+
+    #[test]
+    fn soft_score_identity_at_zero_excess() {
+        let g = 1.23456789e-3;
+        assert_eq!(KvConfig::soft_score(g, 0, 7.0).to_bits(), g.to_bits());
+        assert!(KvConfig::soft_score(g, 2, 0.5) < g);
+    }
+
+    #[test]
+    fn pack_greedy_respects_both_caps() {
+        // blocks: jobs 0..5 -> [3, 3, 2, 2, 2]; pool 6, max_batch 3
+        let job_blocks = [3u64, 3, 2, 2, 2];
+        let order = [0usize, 1, 2, 3, 4];
+        let mut batches = Vec::new();
+        pack_greedy(&order, 0, &job_blocks, 3, 6, &mut batches);
+        // [0,1] = 6 (exact fit), then [2,3,4] = 6 (size and pool cap)
+        assert_eq!(batches, vec![2, 3]);
+        // unconstrained pool: plain fixed-size chunking
+        let mut plain = Vec::new();
+        pack_greedy(&order, 0, &job_blocks, 2, u64::MAX, &mut plain);
+        assert_eq!(plain, vec![2, 2, 1]);
+        // `from` skips a frozen prefix; appends after existing entries
+        let mut tail = vec![9usize];
+        pack_greedy(&order, 3, &job_blocks, 3, 6, &mut tail);
+        assert_eq!(tail, vec![9, 2]);
+    }
+
+    #[test]
+    fn eq20_pool_derivation() {
+        let mem = MemoryModel { utility: 0.9, mb_per_token: 0.5 };
+        // 1000 MB -> 1800 tokens -> 112 blocks of 16
+        assert_eq!(pool_blocks_from_mb(1000.0, &mem, 16), 112);
+        assert_eq!(pool_blocks_from_mb(0.0, &mem, 16), 0);
+        assert_eq!(pool_blocks_from_mb(f64::NAN, &mem, 16), 0);
+        let kv = KvConfig::from_pool_mb(1000.0, &mem, 16, KvMode::Hard);
+        assert_eq!(kv.pool_blocks, 112);
+        assert!(kv.vetoes_moves());
+    }
+}

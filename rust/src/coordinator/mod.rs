@@ -12,8 +12,10 @@
 //! * [`request`]    — task types, SLOs, lifecycle records.
 //! * [`profiler`]   — output-length + memory + latency-sample profiling.
 //! * [`predictor`]  — Eq. 14–19 latency model (least-squares fitted).
+//! * [`kv`]         — Eq. 20 KV-block feasibility model (pool geometry +
+//!   hard/soft enforcement threaded through the SA search).
 //! * [`pred_table`] — per-wave (job, batch) prediction table feeding the
-//!   SA hot path.
+//!   SA hot path, including per-job KV-block footprints.
 //! * [`objective`]  — the G objective, schedule representation, and the
 //!   full + incremental evaluators.
 //! * [`priority`]   — Algorithm 1 (SA) and the exhaustive strawman.
@@ -23,6 +25,7 @@
 //!   over timestamped arrival streams (the batch-to-streaming bridge).
 //! * this module    — plan execution against engines and completion records.
 
+pub mod kv;
 pub mod objective;
 pub mod online;
 pub mod policies;
@@ -254,7 +257,8 @@ mod tests {
             &predictor,
             &MemoryModel::default(),
             &SaParams::with_max_batch(4),
-        );
+        )
+        .unwrap();
         let mut engines: Vec<Box<dyn Engine + Send>> = vec![Box::new(
             SimEngine::new(by_name("qwen7b-v100x2-vllm").unwrap(), 4, 0),
         )];

@@ -27,7 +27,18 @@
 //! the entry wait, every [`IncrementalEval`] result is **bit-identical** to
 //! a fresh [`Evaluator::eval`] of the same schedule — enforced by
 //! `tests/incremental_eval_equivalence.rs`.
+//!
+//! **KV-block occupancy** (Eq. 20): [`IncrementalEval`] additionally
+//! maintains each batch's KV-block occupancy (sum of member footprints
+//! from the [`PredTable`]) and the total excess over the configured pool
+//! ([`IncrementalEval::kv_excess`]), updated by the same touched-batch
+//! rule as the latency partials. Under a hard [`KvConfig`] it hands the
+//! move generator a [`moves::KvVeto`] so infeasible candidates are never
+//! materialized. [`Evaluator::kv_excess`] is the O(N) reference the
+//! equivalence tests check against. With an unlimited pool the excess is
+//! identically zero and nothing about the pre-KV behaviour changes.
 
+use crate::coordinator::kv::KvConfig;
 use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::moves::{self, OrderUndo};
@@ -179,11 +190,29 @@ pub struct JobTimeline {
 pub struct Evaluator<'a> {
     jobs: &'a [Job],
     predictor: &'a LatencyPredictor,
+    /// Wait already accrued before the first batch starts (compacted
+    /// dispatched-prefix accounting in the online controller); 0.0 for
+    /// closed waves, in which case every result is bit-identical to the
+    /// pre-offset implementation.
+    base_wait_ms: f64,
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(jobs: &'a [Job], predictor: &'a LatencyPredictor) -> Self {
-        Evaluator { jobs, predictor }
+        Evaluator { jobs, predictor, base_wait_ms: 0.0 }
+    }
+
+    /// [`Evaluator::new`] with an initial waiting time: every job's entry
+    /// wait starts at `base_wait_ms` instead of zero. Used by
+    /// [`crate::coordinator::online::WaveController`] after compacting
+    /// dispatched batches out of the wave, so the surviving suffix still
+    /// sees the wait the dispatched prefix imposed (Eq. 11).
+    pub fn with_base_wait(
+        jobs: &'a [Job],
+        predictor: &'a LatencyPredictor,
+        base_wait_ms: f64,
+    ) -> Self {
+        Evaluator { jobs, predictor, base_wait_ms }
     }
 
     pub fn jobs(&self) -> &[Job] {
@@ -194,6 +223,33 @@ impl<'a> Evaluator<'a> {
         self.predictor
     }
 
+    /// The initial waiting time every batch chain starts from.
+    pub fn base_wait_ms(&self) -> f64 {
+        self.base_wait_ms
+    }
+
+    /// Total KV-block excess of a schedule under `kv` (Eq. 20): for each
+    /// batch, the sum of member footprints minus the pool, clamped at
+    /// zero, summed over batches. O(N) from the raw job lengths — the
+    /// reference [`IncrementalEval::kv_excess`] is checked against.
+    pub fn kv_excess(&self, schedule: &Schedule, kv: &KvConfig) -> u64 {
+        if !kv.binding() {
+            return 0;
+        }
+        let mut excess = 0u64;
+        for (_, start, size) in schedule.batch_spans() {
+            let blocks: u64 = schedule.order[start..start + size]
+                .iter()
+                .map(|&j| {
+                    let job = &self.jobs[j];
+                    kv.job_blocks(job.input_len, job.output_len)
+                })
+                .sum();
+            excess += kv.batch_excess(blocks);
+        }
+        excess
+    }
+
     /// Evaluate G for a schedule (Eqs. 2–13). O(N), allocation-free.
     ///
     /// `Σ t_e2e` is accumulated as per-batch partial sums — the same
@@ -201,7 +257,7 @@ impl<'a> Evaluator<'a> {
     /// two paths bit-identical (module docs).
     pub fn eval(&self, schedule: &Schedule) -> Eval {
         debug_assert_eq!(schedule.len(), self.jobs.len());
-        let mut wait_ms = 0.0f64;
+        let mut wait_ms = self.base_wait_ms;
         let mut total_e2e = 0.0f64;
         let mut met = 0usize;
         let mut start = 0usize;
@@ -233,7 +289,7 @@ impl<'a> Evaluator<'a> {
     /// (allocates).
     pub fn eval_detailed(&self, schedule: &Schedule) -> (Eval, Vec<JobTimeline>) {
         let mut timelines = Vec::with_capacity(self.jobs.len());
-        let mut wait_ms = 0.0f64;
+        let mut wait_ms = self.base_wait_ms;
         let mut total_e2e = 0.0f64;
         let mut met = 0usize;
         for (k, start, bsize) in schedule.batch_spans() {
@@ -276,6 +332,26 @@ impl<'a> Evaluator<'a> {
     }
 }
 
+/// Per-batch KV-block occupancy of `schedule` written into `out` (index =
+/// batch). `job_blocks[j]` is job `j`'s footprint. Shared by the
+/// full-evaluation reference search path, which has no incremental
+/// aggregates to borrow a [`moves::KvVeto`] from.
+pub fn batch_kv_blocks(
+    schedule: &Schedule,
+    job_blocks: &[u64],
+    out: &mut Vec<u64>,
+) {
+    out.clear();
+    for (_, start, size) in schedule.batch_spans() {
+        out.push(
+            schedule.order[start..start + size]
+                .iter()
+                .map(|&j| job_blocks[j])
+                .sum(),
+        );
+    }
+}
+
 /// Delta evaluator driving the simulated-annealing hot path.
 ///
 /// Owns the current candidate [`Schedule`] plus per-batch aggregates; a
@@ -294,6 +370,10 @@ impl<'a> Evaluator<'a> {
 pub struct IncrementalEval<'a> {
     jobs: &'a [Job],
     table: &'a PredTable,
+    kv: KvConfig,
+    /// Wait accrued before the first batch (see
+    /// [`Evaluator::with_base_wait`]); 0.0 for closed waves.
+    base_wait_ms: f64,
     schedule: Schedule,
     /// Max exec time in batch k (at its current size).
     bmax: Vec<f64>,
@@ -303,6 +383,10 @@ pub struct IncrementalEval<'a> {
     bmet: Vec<usize>,
     /// Entry wait of batch k (= Σ bmax of earlier batches, sequentially).
     wait: Vec<f64>,
+    /// KV-block occupancy of batch k (Σ member footprints, Eq. 20).
+    bkv: Vec<u64>,
+    /// Σ over batches of occupancy beyond the pool (0 when not binding).
+    kv_excess: u64,
     eval: Eval,
     // Pre-move snapshots (reused buffers) for rollback.
     saved_batches: Vec<usize>,
@@ -310,28 +394,53 @@ pub struct IncrementalEval<'a> {
     saved_bsum: Vec<f64>,
     saved_bmet: Vec<usize>,
     saved_wait: Vec<f64>,
+    saved_bkv: Vec<u64>,
+    saved_kv_excess: u64,
     saved_eval: Eval,
     pending: Option<OrderUndo>,
 }
 
 impl<'a> IncrementalEval<'a> {
-    /// Build the incremental state for `schedule` (O(N) table lookups).
+    /// Build the incremental state for `schedule` (O(N) table lookups)
+    /// with an unlimited KV pool — the pre-KV behaviour.
     pub fn new(jobs: &'a [Job], table: &'a PredTable, schedule: Schedule) -> Self {
+        IncrementalEval::new_kv(jobs, table, schedule, KvConfig::UNLIMITED, 0.0)
+    }
+
+    /// [`IncrementalEval::new`] with a KV configuration and a base wait.
+    /// Under [`crate::coordinator::kv::KvMode::Hard`] every
+    /// [`IncrementalEval::try_random_move_masked`] hands the move
+    /// generator a [`moves::KvVeto`] over the current per-batch occupancy,
+    /// so candidates that would overcommit a batch are refused before
+    /// application.
+    pub fn new_kv(
+        jobs: &'a [Job],
+        table: &'a PredTable,
+        schedule: Schedule,
+        kv: KvConfig,
+        base_wait_ms: f64,
+    ) -> Self {
         assert_eq!(schedule.len(), jobs.len());
         let mut s = IncrementalEval {
             jobs,
             table,
+            kv,
+            base_wait_ms,
             schedule,
             bmax: Vec::new(),
             bsum: Vec::new(),
             bmet: Vec::new(),
             wait: Vec::new(),
+            bkv: Vec::new(),
+            kv_excess: 0,
             eval: Eval::ZERO,
             saved_batches: Vec::new(),
             saved_bmax: Vec::new(),
             saved_bsum: Vec::new(),
             saved_bmet: Vec::new(),
             saved_wait: Vec::new(),
+            saved_bkv: Vec::new(),
+            saved_kv_excess: 0,
             saved_eval: Eval::ZERO,
             pending: None,
         };
@@ -355,6 +464,23 @@ impl<'a> IncrementalEval<'a> {
         self.eval
     }
 
+    /// Total KV-block excess of the current schedule (bit-identical to
+    /// [`Evaluator::kv_excess`] under the same [`KvConfig`]); 0 whenever
+    /// the pool is unlimited.
+    pub fn kv_excess(&self) -> u64 {
+        self.kv_excess
+    }
+
+    /// KV-block occupancy of batch `k` (Σ member footprints).
+    pub fn batch_kv_blocks(&self, k: usize) -> u64 {
+        self.bkv[k]
+    }
+
+    /// The KV configuration this evaluator enforces.
+    pub fn kv_config(&self) -> &KvConfig {
+        &self.kv
+    }
+
     /// Replace the schedule and rebuild all aggregates from scratch.
     pub fn reset(&mut self, schedule: Schedule) {
         assert_eq!(schedule.len(), self.jobs.len());
@@ -373,7 +499,9 @@ impl<'a> IncrementalEval<'a> {
         self.bmet.resize(m, 0);
         self.wait.clear();
         self.wait.resize(m, 0.0);
-        let mut w = 0.0f64;
+        self.bkv.clear();
+        self.bkv.resize(m, 0);
+        let mut w = self.base_wait_ms;
         let mut start = 0usize;
         for k in 0..m {
             self.wait[k] = w;
@@ -385,12 +513,14 @@ impl<'a> IncrementalEval<'a> {
     }
 
     /// Recompute batch k's aggregates at entry wait `wait` — the same
-    /// per-job order and accumulation as [`Evaluator::eval`]'s inner loop.
+    /// per-job order and accumulation as [`Evaluator::eval`]'s inner loop
+    /// — plus its KV-block occupancy.
     fn recompute_batch(&mut self, k: usize, start: usize, wait: f64) {
         let bsize = self.schedule.batches[k];
         let mut max = 0.0f64;
         let mut sum = 0.0f64;
         let mut met = 0usize;
+        let mut kvb = 0u64;
         for &j in &self.schedule.order[start..start + bsize] {
             let job = &self.jobs[j];
             let p = self.table.get(j, bsize);
@@ -403,10 +533,12 @@ impl<'a> IncrementalEval<'a> {
             if p.exec_ms > max {
                 max = p.exec_ms;
             }
+            kvb += self.table.kv_blocks(j);
         }
         self.bmax[k] = max;
         self.bsum[k] = sum;
         self.bmet[k] = met;
+        self.bkv[k] = kvb;
     }
 
     /// Re-reduce totals over per-batch partials — same grouping as the
@@ -415,13 +547,16 @@ impl<'a> IncrementalEval<'a> {
         let m = self.schedule.batches.len();
         let mut total = 0.0f64;
         let mut met = 0usize;
+        let mut excess = 0u64;
         for k in 0..m {
             total += self.bsum[k];
             met += self.bmet[k];
+            excess += self.kv.batch_excess(self.bkv[k]);
         }
         let makespan =
             if m == 0 { 0.0 } else { self.wait[m - 1] + self.bmax[m - 1] };
         let g = if total > 0.0 { met as f64 / total } else { 0.0 };
+        self.kv_excess = excess;
         self.eval = Eval { g, met, total_e2e_ms: total, makespan_ms: makespan };
     }
 
@@ -461,12 +596,29 @@ impl<'a> IncrementalEval<'a> {
         self.saved_bmet.extend_from_slice(&self.bmet);
         self.saved_wait.clear();
         self.saved_wait.extend_from_slice(&self.wait);
+        self.saved_bkv.clear();
+        self.saved_bkv.extend_from_slice(&self.bkv);
+        self.saved_kv_excess = self.kv_excess;
         self.saved_eval = self.eval;
 
-        let mv = moves::random_move_desc_masked(
+        // Hard KV mode: the generator consults the live occupancy and
+        // refuses overcommitting candidates before any mutation. With an
+        // unlimited pool no veto is constructed and the RNG stream is the
+        // pre-KV one.
+        let veto = if self.kv.vetoes_moves() {
+            Some(moves::KvVeto {
+                job_blocks: self.table.kv_blocks_all(),
+                batch_blocks: &self.bkv,
+                pool_blocks: self.kv.pool_blocks,
+            })
+        } else {
+            None
+        };
+        let mv = moves::random_move_desc_kv(
             &mut self.schedule,
             max_batch,
             frozen_batches,
+            veto.as_ref(),
             rng,
         )?;
         self.pending = Some(mv.undo);
@@ -478,12 +630,14 @@ impl<'a> IncrementalEval<'a> {
             self.bsum.remove(r);
             self.bmet.remove(r);
             self.wait.remove(r);
+            self.bkv.remove(r);
         }
         if mv.appended_batch {
             self.bmax.push(0.0);
             self.bsum.push(0.0);
             self.bmet.push(0);
             self.wait.push(0.0);
+            self.bkv.push(0);
         }
         let m = self.schedule.batches.len();
         debug_assert_eq!(self.bmax.len(), m);
@@ -492,7 +646,7 @@ impl<'a> IncrementalEval<'a> {
         // prefix exactly as the sequential full evaluation would.
         let b_lo = mv.b_lo;
         let mut w = if b_lo == 0 {
-            0.0
+            self.base_wait_ms
         } else {
             self.wait[b_lo - 1] + self.bmax[b_lo - 1]
         };
@@ -540,6 +694,9 @@ impl<'a> IncrementalEval<'a> {
         self.bmet.extend_from_slice(&self.saved_bmet);
         self.wait.clear();
         self.wait.extend_from_slice(&self.saved_wait);
+        self.bkv.clear();
+        self.bkv.extend_from_slice(&self.saved_bkv);
+        self.kv_excess = self.saved_kv_excess;
         self.eval = self.saved_eval;
     }
 }
@@ -784,6 +941,103 @@ mod tests {
                         inc.commit();
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_kv_occupancy_matches_reference_after_moves() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..12)
+            .map(|i| e2e_job(40 + 95 * i, 10 + 11 * i, 9_000.0))
+            .collect();
+        // soft mode: moves are NOT vetoed, so the walk visits
+        // overcommitted states and the excess must track them exactly.
+        let kv = KvConfig::soft(20, 1.0);
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build_kv(&jobs, &pred, 4, &kv);
+        let mut inc = IncrementalEval::new_kv(
+            &jobs,
+            &table,
+            Schedule::fcfs(12, 4),
+            kv,
+            0.0,
+        );
+        let mut rng = Rng::new(77);
+        for step in 0..300 {
+            if let Some(e) = inc.try_random_move_masked(4, 0, &mut rng) {
+                assert_eq!(e, ev.eval(inc.schedule()), "step {step}");
+                assert_eq!(
+                    inc.kv_excess(),
+                    ev.kv_excess(inc.schedule(), &kv),
+                    "step {step}"
+                );
+                if step % 3 == 0 {
+                    inc.rollback();
+                } else {
+                    inc.commit();
+                }
+                // after commit or rollback the invariant must still hold
+                assert_eq!(inc.kv_excess(), ev.kv_excess(inc.schedule(), &kv));
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_hard_mode_preserves_feasibility() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        // every job: 1..=4 blocks; FCFS at max_batch 3 must fit pool 12
+        let jobs: Vec<Job> = (0..9)
+            .map(|i| e2e_job(1 + 16 * (i % 4), 0, 9_000.0))
+            .collect();
+        let kv = KvConfig::hard(12);
+        let table = PredTable::build_kv(&jobs, &pred, 3, &kv);
+        let mut inc = IncrementalEval::new_kv(
+            &jobs,
+            &table,
+            Schedule::fcfs(9, 3),
+            kv,
+            0.0,
+        );
+        assert_eq!(inc.kv_excess(), 0, "seed must be feasible");
+        let mut rng = Rng::new(13);
+        for step in 0..400 {
+            if inc.try_random_move_masked(3, 0, &mut rng).is_some() {
+                assert_eq!(inc.kv_excess(), 0, "step {step}: veto leaked");
+                for k in 0..inc.schedule().batches.len() {
+                    assert!(inc.batch_kv_blocks(k) <= 12, "step {step}");
+                }
+                inc.commit();
+            }
+        }
+    }
+
+    #[test]
+    fn base_wait_shifts_every_entry_wait() {
+        let pred = unit_predictor();
+        let jobs = [e2e_job(100, 0, 1e9), e2e_job(200, 0, 1e9)];
+        let shifted = Evaluator::with_base_wait(&jobs, &pred, 50.0);
+        let plain = Evaluator::new(&jobs, &pred);
+        assert_eq!(plain.base_wait_ms(), 0.0);
+        assert_eq!(shifted.base_wait_ms(), 50.0);
+        let s = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+        let (es, tls) = shifted.eval_detailed(&s);
+        let (ep, tlp) = plain.eval_detailed(&s);
+        assert!((tls[0].wait_ms - 50.0).abs() < 1e-12);
+        assert!((tls[1].wait_ms - (tlp[1].wait_ms + 50.0)).abs() < 1e-9);
+        assert!((es.total_e2e_ms - (ep.total_e2e_ms + 100.0)).abs() < 1e-9);
+        // incremental path agrees bit for bit with the shifted evaluator
+        let table = PredTable::build(&jobs, &pred, 2);
+        let mut inc =
+            IncrementalEval::new_kv(&jobs, &table, s.clone(), Default::default(), 50.0);
+        assert_eq!(inc.eval(), es);
+        let mut rng = Rng::new(3);
+        for _ in 0..60 {
+            if let Some(e) = inc.try_random_move(2, &mut rng) {
+                assert_eq!(e, shifted.eval(inc.schedule()));
+                inc.commit();
             }
         }
     }

@@ -38,9 +38,30 @@
 //! accrued while the engine idled between waves is not modelled; measured
 //! attainment (from [`Completion`]s) is the ground truth the predicted
 //! objective approximates.
+//!
+//! **KV admission** ([`SaParams::kv`], Eq. 20): with a binding pool the
+//! controller refuses jobs that could never execute (footprint beyond the
+//! pool — a hard error), packs newly admitted jobs into seed batches that
+//! respect the pool, and exposes [`WaveController::saturated`] so the
+//! event loop can defer admissions while a full pool's worth of planned
+//! work is still undispatched — the deferred jobs are admitted at a later
+//! replan, once dispatching has drained the backlog.
+//!
+//! **Prefix compaction** ([`WaveController::with_compaction`]): by default
+//! the job set and prediction table grow for the lifetime of the
+//! controller — on long traces, without bound. Compaction drops fully
+//! dispatched batches at the next admission: their wait contribution is
+//! preserved as a base-wait offset ([`Evaluator::with_base_wait`]) so the
+//! surviving suffix sees identical entry waits, and the prediction table
+//! rows are dropped by memmove (no predictor recomputation). Dispatched
+//! jobs then no longer contribute their (constant) e2e terms to `G`, so
+//! the replanned objective ranks suffixes slightly differently than the
+//! non-compacted controller — compaction is opt-in, and the default
+//! controller remains bit-identical to the pre-compaction behaviour.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::coordinator::kv;
 use crate::coordinator::objective::{Eval, Evaluator, Job, Schedule};
 use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::predictor::LatencyPredictor;
@@ -116,7 +137,8 @@ pub struct WaveController<'a> {
     predictor: &'a LatencyPredictor,
     params: SaParams,
     strategy: ReplanStrategy,
-    /// All admitted jobs, in admission order (indices are plan order ids).
+    /// All admitted, still-tracked jobs in admission order (indices are
+    /// plan order ids; compaction drops dispatched ones).
     jobs: Vec<Job>,
     /// Grown in place on every admission — never rebuilt.
     table: PredTable,
@@ -124,6 +146,13 @@ pub struct WaveController<'a> {
     eval: Eval,
     /// Leading batches of `plan` already dispatched (frozen).
     frozen_batches: usize,
+    /// Compact dispatched batches out of the wave at each admission
+    /// (opt-in: changes the replanned objective — module docs).
+    compact: bool,
+    /// Wait the compacted-away prefix imposes on the surviving suffix.
+    base_wait_ms: f64,
+    /// Jobs dropped by compaction so far.
+    retired_jobs: usize,
     stats: OnlineStats,
     /// Last replan's search stats (None before the first admission).
     last_search: Option<SearchStats>,
@@ -141,13 +170,28 @@ impl<'a> WaveController<'a> {
             params,
             strategy,
             jobs: Vec::new(),
-            table: PredTable::build(&[], predictor, max_batch),
+            table: PredTable::build_kv(&[], predictor, max_batch, &params.kv),
             plan: Schedule { order: vec![], batches: vec![] },
             eval: Eval::ZERO,
             frozen_batches: 0,
+            compact: false,
+            base_wait_ms: 0.0,
+            retired_jobs: 0,
             stats: OnlineStats::default(),
             last_search: None,
         }
+    }
+
+    /// Enable dispatched-prefix compaction (ROADMAP follow-up: the job set
+    /// and prediction table otherwise grow unboundedly on long traces).
+    /// At each admission, fully dispatched batches are dropped from the
+    /// wave: their batch maxima are folded into a base-wait offset so the
+    /// suffix's predicted entry waits are unchanged, and their table rows
+    /// are released. See the module docs for the objective-semantics
+    /// caveat.
+    pub fn with_compaction(mut self) -> Self {
+        self.compact = true;
+        self
     }
 
     pub fn jobs(&self) -> &[Job] {
@@ -186,6 +230,38 @@ impl<'a> WaveController<'a> {
         self.frozen_batches == self.plan.batches.len()
     }
 
+    /// Wait the compacted-away prefix imposes on the live suffix (0 until
+    /// compaction is enabled and something has been compacted).
+    pub fn base_wait_ms(&self) -> f64 {
+        self.base_wait_ms
+    }
+
+    /// Jobs dropped from the wave by compaction so far.
+    pub fn retired_jobs(&self) -> usize {
+        self.retired_jobs
+    }
+
+    /// KV blocks of the planned-but-undispatched suffix (Eq. 20
+    /// footprints from the prediction table).
+    pub fn undispatched_blocks(&self) -> u64 {
+        let frozen_pos = self.frozen_positions();
+        self.plan.order[frozen_pos..]
+            .iter()
+            .map(|&j| self.table.kv_blocks(j))
+            .sum()
+    }
+
+    /// True when a binding KV pool is fully covered by undispatched work:
+    /// admitting more now would plan beyond a pool's worth of backlog, so
+    /// the event loop defers new arrivals to a later replan (module docs).
+    /// A degenerate empty pool never reads as saturated — deferring on it
+    /// would spin forever, while admitting surfaces
+    /// [`WaveController::admit`]'s clear oversize error.
+    pub fn saturated(&self) -> bool {
+        self.params.kv.binding()
+            && self.undispatched_blocks() >= self.params.kv.pool_blocks.max(1)
+    }
+
     /// Per-replan SA seed: the first replan uses the configured seed
     /// verbatim (the online-equals-offline equivalence), later replans
     /// derive fresh streams so repeated searches do not replay each other.
@@ -196,26 +272,44 @@ impl<'a> WaveController<'a> {
             .wrapping_add(r.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Pack the jobs at `order[from..]` into trailing batches appended to
+    /// `batches`: greedy up to `max_batch`, and — with a binding KV pool —
+    /// never letting a seed batch's block occupancy exceed the pool (each
+    /// job individually fits; [`WaveController::admit`] rejected the rest).
+    /// With an unlimited pool this is the plain fixed-size chunking of the
+    /// pre-KV controller, bit for bit. Shares [`kv::pack_greedy`] with the
+    /// hard-mode repack fallback so the two packings cannot diverge.
+    fn pack_tail(&self, order: &[usize], from: usize, batches: &mut Vec<usize>) {
+        let pool = if self.params.kv.binding() {
+            self.params.kv.pool_blocks
+        } else {
+            u64::MAX
+        };
+        kv::pack_greedy(
+            order,
+            from,
+            self.table.kv_blocks_all(),
+            self.params.max_batch,
+            pool,
+            batches,
+        );
+    }
+
     /// The warm seed for this admission: current plan order with the new
     /// jobs appended in admission order, packed into fresh trailing
-    /// batches of up to `max_batch`.
+    /// batches (KV-aware — [`WaveController::pack_tail`]).
     fn warm_seed(&self, old_n: usize) -> Schedule {
-        let max_batch = self.params.max_batch.max(1);
         let mut warm = self.plan.clone();
+        let from = warm.order.len();
         warm.order.extend(old_n..self.jobs.len());
-        let mut fresh = self.jobs.len() - old_n;
-        while fresh > 0 {
-            let b = fresh.min(max_batch);
-            warm.batches.push(b);
-            fresh -= b;
-        }
+        self.pack_tail(&warm.order, from, &mut warm.batches);
         warm
     }
 
     /// The cold re-seed: frozen prefix as dispatched, then every
-    /// undispatched job in admission order, packed to `max_batch`.
+    /// undispatched job in admission order, packed into fresh batches
+    /// (KV-aware — [`WaveController::pack_tail`]).
     fn cold_seed(&self, old_n: usize) -> Schedule {
-        let max_batch = self.params.max_batch.max(1);
         let frozen_pos = self.frozen_positions();
         let mut order: Vec<usize> = self.plan.order[..frozen_pos].to_vec();
         let mut in_prefix = vec![false; self.jobs.len()];
@@ -227,13 +321,57 @@ impl<'a> WaveController<'a> {
         order.extend(old_n..self.jobs.len());
         let mut batches: Vec<usize> =
             self.plan.batches[..self.frozen_batches].to_vec();
-        let mut rest = self.jobs.len() - frozen_pos;
-        while rest > 0 {
-            let b = rest.min(max_batch);
-            batches.push(b);
-            rest -= b;
-        }
+        self.pack_tail(&order, frozen_pos, &mut batches);
         Schedule { order, batches }
+    }
+
+    /// Drop fully dispatched batches from the wave (see
+    /// [`WaveController::with_compaction`]): fold their batch maxima into
+    /// the base wait, drop their jobs and prediction-table rows, and remap
+    /// the surviving plan onto the compacted indices.
+    fn compact_dispatched(&mut self) {
+        if self.frozen_batches == 0 {
+            return;
+        }
+        let frozen_pos = self.frozen_positions();
+        // Accumulate the dispatched batches' maxima exactly as the
+        // sequential evaluation would have (same order, same values), so
+        // the suffix's predicted entry waits are unchanged.
+        let mut start = 0usize;
+        for k in 0..self.frozen_batches {
+            let bsize = self.plan.batches[k];
+            let mut bmax = 0.0f64;
+            for &j in &self.plan.order[start..start + bsize] {
+                let e = self.table.get(j, bsize).exec_ms;
+                if e > bmax {
+                    bmax = e;
+                }
+            }
+            self.base_wait_ms += bmax;
+            start += bsize;
+        }
+        let n = self.jobs.len();
+        let mut keep = vec![true; n];
+        for &j in &self.plan.order[..frozen_pos] {
+            keep[j] = false;
+        }
+        let mut remap = vec![usize::MAX; n];
+        let mut w = 0usize;
+        let mut jobs = Vec::with_capacity(n - frozen_pos);
+        for (j, &k) in keep.iter().enumerate() {
+            if k {
+                remap[j] = w;
+                jobs.push(self.jobs[j]);
+                w += 1;
+            }
+        }
+        self.jobs = jobs;
+        self.table.compact(&keep);
+        self.plan.order =
+            self.plan.order[frozen_pos..].iter().map(|&j| remap[j]).collect();
+        self.plan.batches.drain(..self.frozen_batches);
+        self.retired_jobs += frozen_pos;
+        self.frozen_batches = 0;
     }
 
     /// Admit newly arrived jobs and replan the undispatched suffix.
@@ -246,17 +384,45 @@ impl<'a> WaveController<'a> {
     /// the plain closed-wave search — bit-identical to
     /// [`crate::coordinator::priority::annealing::priority_mapping`] over
     /// the same jobs and seed.
-    pub fn admit(&mut self, new_jobs: &[Job]) -> SearchStats {
+    ///
+    /// # Errors
+    /// With a binding KV pool, a job whose footprint alone exceeds the
+    /// pool can never execute on this instance; admission fails with a
+    /// descriptive error rather than planning a fiction.
+    pub fn admit(&mut self, new_jobs: &[Job]) -> Result<SearchStats> {
         assert!(!new_jobs.is_empty(), "admit called with no jobs");
+        let kv = self.params.kv;
+        if kv.binding() {
+            for job in new_jobs {
+                let need = kv.job_blocks(job.input_len, job.output_len);
+                if need > kv.pool_blocks {
+                    bail!(
+                        "request {} needs {need} KV blocks but the \
+                         instance pool holds {} — it can never be batched \
+                         on this instance",
+                        job.req_idx,
+                        kv.pool_blocks,
+                    );
+                }
+            }
+        }
+        if self.compact {
+            self.compact_dispatched();
+        }
         let old_n = self.jobs.len();
         self.jobs.extend_from_slice(new_jobs);
         self.table.extend(new_jobs, self.predictor);
 
         let params = SaParams { seed: self.replan_seed(), ..self.params };
-        let ev = Evaluator::new(&self.jobs, self.predictor);
+        let ev = Evaluator::with_base_wait(
+            &self.jobs,
+            self.predictor,
+            self.base_wait_ms,
+        );
         let first_admission = old_n == 0 && self.frozen_batches == 0;
         let warm = if first_admission {
-            // No prior plan: both strategies are the plain cold search.
+            // No live plan (first admission, or everything dispatched and
+            // compacted): both strategies are the plain cold search.
             None
         } else {
             match self.strategy {
@@ -284,7 +450,7 @@ impl<'a> WaveController<'a> {
         self.stats.replan_ms_total += res.stats.overhead_ms;
         self.stats.sa_evals += res.stats.evals;
         self.last_search = Some(res.stats);
-        res.stats
+        Ok(res.stats)
     }
 
     /// Pop the next undispatched batch, freezing it in place. Returns
@@ -320,6 +486,17 @@ pub struct OnlineOutcome {
     pub seed: u64,
 }
 
+/// Tuning knobs for [`run_online_opts`]. The default reproduces
+/// [`run_online`]'s historical behaviour exactly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineOpts {
+    /// Compact fully dispatched batches out of the controller at each
+    /// admission ([`WaveController::with_compaction`]): bounded memory on
+    /// long traces, at the cost of the dispatched jobs' constant terms
+    /// dropping out of the replanned objective.
+    pub compact_dispatched: bool,
+}
+
 /// Event loop: drive one engine from a timestamped arrival stream (module
 /// docs). `requests` must be sorted by `arrival_ms`; `predicted_out[i]`
 /// is the output-length prediction for `requests[i]`.
@@ -335,6 +512,34 @@ pub fn run_online(
     params: &SaParams,
     strategy: ReplanStrategy,
 ) -> Result<OnlineOutcome> {
+    run_online_opts(
+        requests,
+        predicted_out,
+        engine,
+        predictor,
+        params,
+        strategy,
+        OnlineOpts::default(),
+    )
+}
+
+/// [`run_online`] with explicit [`OnlineOpts`].
+///
+/// **KV deferral**: with a binding pool ([`SaParams::kv`]), arrivals are
+/// deferred — not admitted — while the controller is
+/// [`WaveController::saturated`] (a full pool's worth of planned work is
+/// still undispatched). Deferred jobs are retried on the next loop
+/// iteration, i.e. at the next replan opportunity after a dispatch has
+/// drained backlog; with an unlimited pool nothing is ever deferred.
+pub fn run_online_opts(
+    requests: &[Request],
+    predicted_out: &[usize],
+    engine: &mut dyn Engine,
+    predictor: &LatencyPredictor,
+    params: &SaParams,
+    strategy: ReplanStrategy,
+    opts: OnlineOpts,
+) -> Result<OnlineOutcome> {
     assert_eq!(requests.len(), predicted_out.len());
     // A NaN arrival would never satisfy the admission compare nor move
     // the virtual clock — the loop below would spin forever. Fail loudly.
@@ -347,13 +552,18 @@ pub fn run_online(
         "arrival stream must be sorted by arrival_ms"
     );
     let mut ctl = WaveController::new(predictor, *params, strategy);
+    if opts.compact_dispatched {
+        ctl = ctl.with_compaction();
+    }
     let mut completions: Vec<Completion> = Vec::with_capacity(requests.len());
     let mut next = 0usize;
+    let mut deferred: Vec<Job> = Vec::new();
 
     loop {
-        // Admit everything that has arrived by the engine clock.
+        // Admit everything that has arrived by the engine clock, starting
+        // with jobs deferred while the KV backlog was saturated.
         let now = engine.now_ms();
-        let mut fresh: Vec<Job> = Vec::new();
+        let mut fresh: Vec<Job> = std::mem::take(&mut deferred);
         while next < requests.len() && requests[next].arrival_ms <= now {
             fresh.push(Job::from_request(
                 next,
@@ -363,7 +573,13 @@ pub fn run_online(
             next += 1;
         }
         if !fresh.is_empty() {
-            ctl.admit(&fresh);
+            if ctl.saturated() {
+                // Admission would overcommit the planned backlog: defer to
+                // the next replan (after dispatching frees the pool).
+                deferred = fresh;
+            } else {
+                ctl.admit(&fresh)?;
+            }
         }
         // Dispatch the next planned batch (work-conserving: we never hold
         // a ready batch back to wait for better arrivals).
@@ -388,9 +604,14 @@ pub fn run_online(
             }
             continue;
         }
-        // Nothing dispatchable: either wait for the next arrival or stop.
-        if next >= requests.len() {
+        // Nothing dispatchable: deferred jobs go in at the next iteration
+        // (the drained controller cannot be saturated), otherwise wait for
+        // the next arrival or stop.
+        if next >= requests.len() && deferred.is_empty() {
             break;
+        }
+        if !deferred.is_empty() {
+            continue;
         }
         let arrival = requests[next].arrival_ms;
         engine.advance_to(arrival);
@@ -424,6 +645,28 @@ pub fn run_online_fleet(
     params: &SaParams,
     strategy: ReplanStrategy,
 ) -> Result<(Vec<Completion>, Vec<OnlineOutcome>)> {
+    run_online_fleet_opts(
+        requests,
+        predicted_out,
+        engines,
+        predictor,
+        params,
+        strategy,
+        OnlineOpts::default(),
+    )
+}
+
+/// [`run_online_fleet`] with explicit [`OnlineOpts`] applied to every
+/// per-instance event loop.
+pub fn run_online_fleet_opts(
+    requests: &[Request],
+    predicted_out: &[usize],
+    engines: &mut [Box<dyn Engine + Send>],
+    predictor: &LatencyPredictor,
+    params: &SaParams,
+    strategy: ReplanStrategy,
+    opts: OnlineOpts,
+) -> Result<(Vec<Completion>, Vec<OnlineOutcome>)> {
     assert_eq!(requests.len(), predicted_out.len());
     assert!(!engines.is_empty());
     let n_inst = engines.len();
@@ -437,13 +680,14 @@ pub fn run_online_fleet(
     let mut completions = Vec::with_capacity(requests.len());
     for (inst, engine) in engines.iter_mut().enumerate() {
         let p = SaParams { seed: instance_seed(params.seed, inst), ..*params };
-        let outcome = run_online(
+        let outcome = run_online_opts(
             &per_req[inst],
             &per_out[inst],
             engine.as_mut(),
             predictor,
             &p,
             strategy,
+            opts,
         )?;
         completions.extend_from_slice(&outcome.completions);
         outcomes.push(outcome);
@@ -491,7 +735,7 @@ mod tests {
         let jobs: Vec<Job> = (0..14).map(|i| job(i, &mut rng)).collect();
         let p = params(4, 9);
         let mut ctl = WaveController::new(&pred, p, ReplanStrategy::Warm);
-        ctl.admit(&jobs);
+        ctl.admit(&jobs).unwrap();
         let ev = Evaluator::new(&jobs, &pred);
         let offline = priority_mapping(&ev, &p);
         assert_eq!(ctl.plan(), &offline.schedule);
@@ -505,7 +749,7 @@ mod tests {
         let jobs: Vec<Job> = (0..10).map(|i| job(i, &mut rng)).collect();
         let mut ctl =
             WaveController::new(&pred, params(3, 1), ReplanStrategy::Warm);
-        ctl.admit(&jobs);
+        ctl.admit(&jobs).unwrap();
         let plan = ctl.plan().clone();
         let mut seen = Vec::new();
         let mut k = 0;
@@ -529,13 +773,13 @@ mod tests {
         for strategy in [ReplanStrategy::Warm, ReplanStrategy::Cold] {
             let mut ctl =
                 WaveController::new(&pred, params(3, 2), strategy);
-            ctl.admit(&first);
+            ctl.admit(&first).unwrap();
             let d = ctl.dispatch_next().unwrap();
             let dispatched: Vec<usize> =
                 d.jobs.iter().map(|j| j.req_idx).collect();
             let second: Vec<Job> =
                 (8..13).map(|i| job(i, &mut rng)).collect();
-            ctl.admit(&second);
+            ctl.admit(&second).unwrap();
             ctl.plan().validate(3).unwrap();
             assert_eq!(ctl.plan().len(), 13);
             // dispatched batch unchanged at the head of the new plan
@@ -581,7 +825,7 @@ mod tests {
                 };
                 Some(Evaluator::new(&all, &pred).eval(&warm))
             };
-            ctl.admit(&fresh);
+            ctl.admit(&fresh).unwrap();
             if let Some(seed_eval) = warm_eval {
                 assert!(
                     ctl.eval().g >= seed_eval.g,
@@ -718,5 +962,139 @@ mod tests {
         // per-instance seeds are derived, not shared
         assert_eq!(outcomes[0].seed, instance_seed(5, 0));
         assert_eq!(outcomes[1].seed, instance_seed(5, 1));
+    }
+
+    #[test]
+    fn compaction_bounds_wave_size_on_long_traces() {
+        // ROADMAP follow-up: the job set / prediction table must not grow
+        // unboundedly on long traces. 60 waves of 4 jobs each, fully
+        // dispatched between admissions: a compacting controller stays at
+        // one wave's worth of live jobs; the legacy one keeps them all.
+        let pred = predictor();
+        let mut rng = Rng::new(17);
+        let mut compacting =
+            WaveController::new(&pred, params(2, 3), ReplanStrategy::Warm)
+                .with_compaction();
+        let mut legacy =
+            WaveController::new(&pred, params(2, 3), ReplanStrategy::Warm);
+        let mut dispatched: Vec<usize> = Vec::new();
+        let mut admitted = 0usize;
+        for wave in 0..60 {
+            let fresh: Vec<Job> =
+                (admitted..admitted + 4).map(|i| job(i, &mut rng)).collect();
+            admitted += 4;
+            compacting.admit(&fresh).unwrap();
+            legacy.admit(&fresh).unwrap();
+            assert!(
+                compacting.jobs().len() <= 4,
+                "wave {wave}: compacted controller holds {} jobs",
+                compacting.jobs().len()
+            );
+            assert_eq!(legacy.jobs().len(), admitted);
+            while let Some(d) = compacting.dispatch_next() {
+                dispatched.extend(d.jobs.iter().map(|j| j.req_idx));
+            }
+            while legacy.dispatch_next().is_some() {}
+            // suffix entry waits survive compaction as the base offset
+            assert!(compacting.base_wait_ms() > 0.0 || wave == 0);
+        }
+        assert_eq!(compacting.retired_jobs(), admitted - 4);
+        // every admitted job was dispatched exactly once, in req_idx terms
+        let mut sorted = dispatched.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..admitted).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn compaction_preserves_suffix_entry_wait() {
+        // One admission, fully dispatched, then a second admission: the
+        // compacted controller's base wait must equal the dispatched
+        // batches' predicted maxima — the wait the suffix would have seen
+        // without compaction.
+        let pred = predictor();
+        let mut rng = Rng::new(23);
+        let first: Vec<Job> = (0..6).map(|i| job(i, &mut rng)).collect();
+        let mut ctl =
+            WaveController::new(&pred, params(3, 9), ReplanStrategy::Warm)
+                .with_compaction();
+        ctl.admit(&first).unwrap();
+        let plan = ctl.plan().clone();
+        let mut expected_wait = 0.0f64;
+        for (_, start, size) in plan.batch_spans() {
+            let bmax = plan.order[start..start + size]
+                .iter()
+                .map(|&j| pred.predict(size, first[j].input_len, first[j].output_len).exec_ms)
+                .fold(0.0f64, f64::max);
+            expected_wait += bmax;
+        }
+        while ctl.dispatch_next().is_some() {}
+        let second: Vec<Job> = (6..9).map(|i| job(i, &mut rng)).collect();
+        ctl.admit(&second).unwrap();
+        assert_eq!(ctl.jobs().len(), 3);
+        assert!(
+            (ctl.base_wait_ms() - expected_wait).abs() < 1e-9,
+            "base wait {} != dispatched prefix wait {expected_wait}",
+            ctl.base_wait_ms()
+        );
+        ctl.plan().validate(3).unwrap();
+    }
+
+    #[test]
+    fn kv_admission_rejects_job_larger_than_pool() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = predictor();
+        let p = SaParams { kv: KvConfig::hard(4), ..params(2, 0) };
+        let mut ctl = WaveController::new(&pred, p, ReplanStrategy::Warm);
+        let giant = Job {
+            req_idx: 0,
+            input_len: 100, // 7 blocks > 4-block pool
+            output_len: 0,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        };
+        let err = ctl.admit(&[giant]).unwrap_err();
+        assert!(format!("{err}").contains("KV blocks"), "{err}");
+    }
+
+    #[test]
+    fn saturated_controller_defers_and_then_serves_everything() {
+        use crate::coordinator::kv::KvConfig;
+        let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        profile.noise_std = 0.0;
+        let pred = profile.truth;
+        // pool of 12 blocks; every request is 160+16 tokens = 11 blocks,
+        // so batches are singletons and one undispatched job saturates.
+        let kv = KvConfig::hard(12);
+        let mut engine = SimEngine::new(profile, 4, 0);
+        let mut reqs: Vec<Request> = (0..10)
+            .map(|i| {
+                Request::synthetic(
+                    i as u64,
+                    TaskType::Code,
+                    160,
+                    16,
+                    Slo::E2e { e2e_ms: 1e9 },
+                )
+            })
+            .collect();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            // ~312 ms per singleton batch vs 200 ms inter-arrival: the
+            // backlog builds past the pool and admissions get deferred.
+            r.arrival_ms = 200.0 * i as f64;
+        }
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let out = run_online_opts(
+            &reqs,
+            &outs,
+            &mut engine,
+            &pred,
+            &SaParams { kv, ..params(4, 7) },
+            ReplanStrategy::Warm,
+            OnlineOpts { compact_dispatched: true },
+        )
+        .unwrap();
+        assert_eq!(out.completions.len(), 10);
+        assert_eq!(out.stats.dispatched_jobs, 10);
+        // every executed batch was a singleton (pool fits only one job)
+        assert!(out.completions.iter().all(|c| c.batch_size == 1));
     }
 }

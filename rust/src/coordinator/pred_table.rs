@@ -14,11 +14,21 @@
 //! them, so table lookups are bit-identical to direct predictor calls —
 //! the property the incremental evaluator's equivalence guarantee
 //! ([`crate::coordinator::objective::IncrementalEval`]) rests on.
+//!
+//! Alongside the latency entries, the table precomputes each job's
+//! **KV-block footprint** (prompt + predicted decode growth, rounded to
+//! blocks — see [`KvConfig::job_blocks`]). Planned batches are static
+//! (Eq. 10): the engine reserves a job's full input + output KV up front,
+//! so the footprint is one number per job, independent of batch size, and
+//! a batch's occupancy is the plain sum over its members — what the
+//! incremental evaluator maintains per batch.
 
+use crate::coordinator::kv::KvConfig;
 use crate::coordinator::objective::Job;
 use crate::coordinator::predictor::{LatencyPredictor, PredictedLatency};
 
-/// Dense `(job, batch_size)` → predicted-latency table.
+/// Dense `(job, batch_size)` → predicted-latency table plus per-job
+/// KV-block footprints.
 ///
 /// Layout: row-major by job, `max_batch` entries per job, batch sizes
 /// `1..=max_batch` (index `job * max_batch + batch - 1`).
@@ -26,25 +36,51 @@ use crate::coordinator::predictor::{LatencyPredictor, PredictedLatency};
 pub struct PredTable {
     n: usize,
     max_batch: usize,
+    block_tokens: usize,
     entries: Vec<PredictedLatency>,
+    /// Per-job KV footprint in blocks (index = job).
+    kv_blocks: Vec<u64>,
 }
 
 impl PredTable {
     /// Precompute predictions for every `(job, batch_size ≤ max_batch)`
     /// pair. O(N · max_batch) predictor calls, done once per wave.
+    /// KV footprints use the default block granularity
+    /// ([`crate::coordinator::kv::DEFAULT_BLOCK_TOKENS`]); use
+    /// [`PredTable::build_kv`] when the pool geometry matters.
     pub fn build(
         jobs: &[Job],
         predictor: &LatencyPredictor,
         max_batch: usize,
     ) -> PredTable {
+        PredTable::build_kv(jobs, predictor, max_batch, &KvConfig::UNLIMITED)
+    }
+
+    /// [`PredTable::build`] with an explicit KV configuration: footprints
+    /// are rounded at `kv.block_tokens` granularity so the search's
+    /// occupancy sums match the engine allocator's accounting exactly.
+    pub fn build_kv(
+        jobs: &[Job],
+        predictor: &LatencyPredictor,
+        max_batch: usize,
+        kv: &KvConfig,
+    ) -> PredTable {
         let max_batch = max_batch.max(1);
         let mut entries = Vec::with_capacity(jobs.len() * max_batch);
+        let mut kv_blocks = Vec::with_capacity(jobs.len());
         for job in jobs {
             for b in 1..=max_batch {
                 entries.push(predictor.predict(b, job.input_len, job.output_len));
             }
+            kv_blocks.push(kv.job_blocks(job.input_len, job.output_len));
         }
-        PredTable { n: jobs.len(), max_batch, entries }
+        PredTable {
+            n: jobs.len(),
+            max_batch,
+            block_tokens: kv.block_tokens,
+            entries,
+            kv_blocks,
+        }
     }
 
     /// Grow the table in place with predictions for newly admitted jobs
@@ -55,6 +91,7 @@ impl PredTable {
     /// table built over the full job set at once.
     pub fn extend(&mut self, new_jobs: &[Job], predictor: &LatencyPredictor) {
         self.entries.reserve(new_jobs.len() * self.max_batch);
+        let kv = KvConfig { block_tokens: self.block_tokens, ..KvConfig::UNLIMITED };
         for job in new_jobs {
             for b in 1..=self.max_batch {
                 self.entries.push(predictor.predict(
@@ -63,8 +100,33 @@ impl PredTable {
                     job.output_len,
                 ));
             }
+            self.kv_blocks.push(kv.job_blocks(job.input_len, job.output_len));
         }
         self.n += new_jobs.len();
+    }
+
+    /// Drop the rows of jobs whose `keep[job]` is false (dispatched-prefix
+    /// compaction in [`crate::coordinator::online::WaveController`]): pure
+    /// memmove, no predictor calls. Remaining rows keep their relative
+    /// order, so job index `j` maps to `keep[..j].count(true)` afterwards.
+    pub fn compact(&mut self, keep: &[bool]) {
+        assert_eq!(keep.len(), self.n, "keep mask does not cover the table");
+        let mut w = 0usize;
+        for (j, &k) in keep.iter().enumerate() {
+            if k {
+                if w != j {
+                    let (dst, src) = (w * self.max_batch, j * self.max_batch);
+                    for b in 0..self.max_batch {
+                        self.entries[dst + b] = self.entries[src + b];
+                    }
+                    self.kv_blocks[w] = self.kv_blocks[j];
+                }
+                w += 1;
+            }
+        }
+        self.entries.truncate(w * self.max_batch);
+        self.kv_blocks.truncate(w);
+        self.n = w;
     }
 
     /// Look up the prediction for `job` at `batch` (1-based, ≤ max_batch).
@@ -79,6 +141,24 @@ impl PredTable {
     #[inline]
     pub fn solo_exec_ms(&self, job: usize) -> f64 {
         self.get(job, 1).exec_ms
+    }
+
+    /// KV footprint of `job` in blocks (prompt + predicted output).
+    #[inline]
+    pub fn kv_blocks(&self, job: usize) -> u64 {
+        self.kv_blocks[job]
+    }
+
+    /// All per-job KV footprints (index = job) — the move generator's
+    /// veto reads this slice directly.
+    #[inline]
+    pub fn kv_blocks_all(&self) -> &[u64] {
+        &self.kv_blocks
+    }
+
+    /// Block granularity the footprints were rounded at.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
     }
 
     pub fn max_batch(&self) -> usize {
@@ -172,6 +252,62 @@ mod tests {
     fn empty_jobs() {
         let pred = LatencyPredictor::paper_table2();
         let table = PredTable::build(&[], &pred, 4);
+        assert!(table.is_empty());
+    }
+
+    #[test]
+    fn kv_footprints_match_config_math() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let jobs = vec![
+            Job { req_idx: 0, input_len: 30, output_len: 3, slo: Slo::E2e { e2e_ms: 1e9 } },
+            Job { req_idx: 1, input_len: 16, output_len: 0, slo: Slo::E2e { e2e_ms: 1e9 } },
+        ];
+        let kv = KvConfig::hard(100);
+        let table = PredTable::build_kv(&jobs, &pred, 3, &kv);
+        assert_eq!(table.kv_blocks(0), 3); // 33 tokens -> 3 blocks of 16
+        assert_eq!(table.kv_blocks(1), 1);
+        assert_eq!(table.kv_blocks_all(), &[3, 1]);
+        assert_eq!(table.block_tokens(), 16);
+        // extend keeps the same granularity
+        let mut grown = table.clone();
+        grown.extend(
+            &[Job { req_idx: 2, input_len: 17, output_len: 0, slo: Slo::E2e { e2e_ms: 1e9 } }],
+            &pred,
+        );
+        assert_eq!(grown.kv_blocks(2), 2);
+    }
+
+    #[test]
+    fn compact_drops_rows_and_preserves_the_rest() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(11);
+        let jobs: Vec<Job> = (0..9)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 1 + rng.below(1500),
+                output_len: rng.below(300),
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        let mut table = PredTable::build(&jobs, &pred, 3);
+        let keep = [true, false, false, true, true, false, true, true, false];
+        table.compact(&keep);
+        let kept: Vec<&Job> =
+            jobs.iter().zip(&keep).filter(|(_, &k)| k).map(|(j, _)| j).collect();
+        assert_eq!(table.len(), kept.len());
+        for (new_j, job) in kept.iter().enumerate() {
+            for b in 1..=3 {
+                assert_eq!(
+                    table.get(new_j, b),
+                    pred.predict(b, job.input_len, job.output_len),
+                    "job {new_j} batch {b}"
+                );
+            }
+        }
+        // compacting everything away leaves an empty, still-usable table
+        let mask = vec![false; table.len()];
+        table.compact(&mask);
         assert!(table.is_empty());
     }
 }

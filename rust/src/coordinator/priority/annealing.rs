@@ -37,14 +37,23 @@
 //! `T_eff = (T / T₀) · |f_seed|`. At `T = T₀` a candidate worse by the full
 //! seed objective survives with p = e⁻¹, decaying as T cools — matching the
 //! qualitative behaviour Fig. 8 reports (higher T₀ ⇒ more escapes).
+//!
+//! **KV feasibility** ([`SaParams::kv`], Eq. 20): the search carries each
+//! batch's KV-block occupancy. Hard mode vetoes overcommitting moves
+//! inside the generator and ranks candidates by (excess, G); soft mode
+//! penalizes the score by `weight · excess`. The default unlimited pool
+//! reproduces the pre-KV search bit for bit (`tests/kv_feasibility.rs`).
 
-use crate::coordinator::objective::{Eval, Evaluator, IncrementalEval, Schedule};
+use crate::coordinator::kv::{self, KvConfig, KvMode};
+use crate::coordinator::objective::{
+    batch_kv_blocks, Eval, Evaluator, IncrementalEval, Schedule,
+};
 use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::priority::moves;
 use crate::util::rng::Rng;
 
 /// Hyperparameters (paper §5.1 defaults: T₀=500, T_thres=20, iter=100,
-/// τ=0.95).
+/// τ=0.95) plus the KV-pool configuration the search must respect.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SaParams {
     pub t0: f64,
@@ -53,6 +62,12 @@ pub struct SaParams {
     pub decay: f64,
     pub max_batch: usize,
     pub seed: u64,
+    /// KV-block feasibility (Eq. 20). The default,
+    /// [`KvConfig::UNLIMITED`], reproduces the pre-KV search bit for bit;
+    /// a finite pool under [`KvMode::Hard`] vetoes overcommitting moves
+    /// and orders candidates by (excess, G), under [`KvMode::Soft`]
+    /// penalizes the score by `weight · excess_blocks`.
+    pub kv: KvConfig,
 }
 
 impl Default for SaParams {
@@ -64,6 +79,7 @@ impl Default for SaParams {
             decay: 0.95,
             max_batch: 8,
             seed: 0,
+            kv: KvConfig::UNLIMITED,
         }
     }
 }
@@ -135,6 +151,7 @@ fn seed_solution(
     ev: &Evaluator,
     n: usize,
     max_batch: usize,
+    kv: &KvConfig,
     stats: &mut SearchStats,
 ) -> (Schedule, Eval, bool) {
     // Seed 2: sorted by predicted solo e2e (line 3). `total_cmp` so NaN
@@ -145,8 +162,10 @@ fn seed_solution(
     let sorted_eval = ev.eval(&sorted_seed);
     stats.evals += 1;
 
-    // Lines 7–10: if the minimal-Σe2e sequence meets every SLO it maximizes G.
-    if sorted_eval.met == n {
+    // Lines 7–10: if the minimal-Σe2e sequence meets every SLO it
+    // maximizes G — but only a KV-feasible plan may exit early (an
+    // unlimited pool always is; the binding check is free there).
+    if sorted_eval.met == n && ev.kv_excess(&sorted_seed, kv) == 0 {
         return (sorted_seed, sorted_eval, true);
     }
 
@@ -162,10 +181,40 @@ fn seed_solution(
     }
 }
 
+/// Deterministic hard-mode safety net: greedily repack `order`'s suffix
+/// (everything past the `prefix_batches` frozen prefix, which is kept
+/// verbatim) into batches respecting both `max_batch` and the block pool
+/// (via the shared [`kv::pack_greedy`] rule). Whenever every job
+/// individually fits the pool, the repacked suffix is feasible by
+/// construction — so a hard-mode search that ran out of budget before
+/// descending to zero excess still returns a plan the engine will
+/// accept.
+fn hard_repack(
+    order: &[usize],
+    prefix_batches: &[usize],
+    job_blocks: &[u64],
+    max_batch: usize,
+    pool_blocks: u64,
+) -> Schedule {
+    let frozen_pos: usize = prefix_batches.iter().sum();
+    let mut batches: Vec<usize> = prefix_batches.to_vec();
+    kv::pack_greedy(order, frozen_pos, job_blocks, max_batch, pool_blocks, &mut batches);
+    Schedule { order: order.to_vec(), batches }
+}
+
 /// The shared Metropolis loop: anneal from `seed_schedule` against a
 /// prebuilt prediction table, with the first `frozen_batches` batches
 /// masked off from every move. `frozen_batches == 0` reproduces the
 /// classic closed-wave search bit for bit.
+///
+/// **KV acceptance** (`params.kv`): with an unlimited pool every excess
+/// is zero and the rule below collapses to the pre-KV comparison, drawing
+/// the identical RNG stream. Under [`KvMode::Hard`] candidates are
+/// ordered lexicographically by (excess, G) — the veto inside the move
+/// generator already prevents excess from growing, and the lexicon lets a
+/// search seeded infeasibly descend into feasibility first. Under
+/// [`KvMode::Soft`] the Metropolis rule runs on the penalized score
+/// `G − weight · excess`.
 fn anneal(
     ev: &Evaluator,
     table: &PredTable,
@@ -177,8 +226,15 @@ fn anneal(
     mut stats: SearchStats,
     t_start: f64,
 ) -> SaResult {
+    let kv = params.kv;
     // Layer 2: incremental evaluator owns the walking candidate state.
-    let mut inc = IncrementalEval::new(ev.jobs(), table, seed_schedule);
+    let mut inc = IncrementalEval::new_kv(
+        ev.jobs(),
+        table,
+        seed_schedule,
+        kv,
+        ev.base_wait_ms(),
+    );
     debug_assert!(
         eval_bits_equal(&inc.eval(), &f_seed),
         "incremental seed eval {:?} != full {:?}",
@@ -187,8 +243,10 @@ fn anneal(
     );
 
     let mut f_cur = f_seed;
+    let mut x_cur = inc.kv_excess();
     let mut best = inc.schedule().clone();
     let mut f_best = f_cur;
+    let mut x_best = x_cur;
 
     let f_scale = f_cur.g.abs().max(1e-12);
     let mut rng = Rng::new(params.seed);
@@ -203,25 +261,55 @@ fn anneal(
                 Some(e) => e,
                 None => continue,
             };
+            let x_new = inc.kv_excess();
             stats.evals += 1;
-            let accept = if f_new.g > f_cur.g {
-                true
-            } else {
-                // Metropolis with normalized temperature (see module docs).
-                let t_eff = (t / params.t0) * f_scale;
-                let p = ((f_new.g - f_cur.g) / t_eff).exp();
-                rng.chance(p)
+            let accept = match kv.mode {
+                KvMode::Soft { weight } => {
+                    let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
+                    let s_cur = KvConfig::soft_score(f_cur.g, x_cur, weight);
+                    if s_new > s_cur {
+                        true
+                    } else {
+                        // Metropolis with normalized temperature
+                        // (see module docs).
+                        let t_eff = (t / params.t0) * f_scale;
+                        rng.chance(((s_new - s_cur) / t_eff).exp())
+                    }
+                }
+                // Unlimited (x always 0) and Hard share one structure.
+                _ => {
+                    if x_new != x_cur {
+                        x_new < x_cur
+                    } else if f_new.g > f_cur.g {
+                        true
+                    } else {
+                        let t_eff = (t / params.t0) * f_scale;
+                        rng.chance(((f_new.g - f_cur.g) / t_eff).exp())
+                    }
+                }
             };
             if accept {
                 inc.commit();
                 f_cur = f_new;
+                x_cur = x_new;
                 stats.accepted += 1;
-                if f_cur.g > f_best.g {
+                let improved = match kv.mode {
+                    KvMode::Soft { weight } => {
+                        KvConfig::soft_score(f_cur.g, x_cur, weight)
+                            > KvConfig::soft_score(f_best.g, x_best, weight)
+                    }
+                    _ => {
+                        x_cur < x_best
+                            || (x_cur == x_best && f_cur.g > f_best.g)
+                    }
+                };
+                if improved {
                     best.order.clear();
                     best.order.extend_from_slice(&inc.schedule().order);
                     best.batches.clear();
                     best.batches.extend_from_slice(&inc.schedule().batches);
                     f_best = f_cur;
+                    x_best = x_cur;
                     stats.improved += 1;
                 }
             } else {
@@ -229,6 +317,28 @@ fn anneal(
             }
         }
         t *= params.decay;
+    }
+
+    // Hard-mode fallback: if the budgeted walk never reached zero excess,
+    // repack the best order within the pool (feasible whenever every job
+    // fits alone). Never fires with an unlimited pool (x_best == 0), so
+    // the bit-identity contract is untouched; mirrored verbatim in
+    // `priority_mapping_full` to keep the fast == full equivalence.
+    if matches!(kv.mode, KvMode::Hard) && x_best > 0 {
+        let repacked = hard_repack(
+            &best.order,
+            &best.batches[..frozen_batches],
+            table.kv_blocks_all(),
+            max_batch,
+            kv.pool_blocks,
+        );
+        let f_re = ev.eval(&repacked);
+        let x_re = ev.kv_excess(&repacked, &kv);
+        stats.evals += 1;
+        if x_re < x_best || (x_re == x_best && f_re.g > f_best.g) {
+            best = repacked;
+            f_best = f_re;
+        }
     }
 
     stats.overhead_ms = crate::util::now_ms() - t_start;
@@ -255,15 +365,16 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
     }
 
     let (seed_schedule, f_seed, early_exit) =
-        seed_solution(ev, n, max_batch, &mut stats);
+        seed_solution(ev, n, max_batch, &params.kv, &mut stats);
     if early_exit {
         stats.early_exit = true;
         stats.overhead_ms = crate::util::now_ms() - t_start;
         return SaResult { schedule: seed_schedule, eval: f_seed, stats };
     }
 
-    // Layer 1: precompute every (job, batch_size) prediction for the wave.
-    let table = PredTable::build(ev.jobs(), ev.predictor(), max_batch);
+    // Layer 1: precompute every (job, batch_size) prediction — and each
+    // job's KV-block footprint — for the wave.
+    let table = PredTable::build_kv(ev.jobs(), ev.predictor(), max_batch, &params.kv);
     anneal(
         ev,
         &table,
@@ -321,6 +432,14 @@ pub fn priority_mapping_warm(
         table.max_batch(),
         max_batch
     );
+    assert!(
+        !params.kv.binding()
+            || table.block_tokens() == params.kv.block_tokens,
+        "prediction table footprints rounded at {} tokens/block but the \
+         search enforces {} tokens/block",
+        table.block_tokens(),
+        params.kv.block_tokens
+    );
 
     if frozen_batches > 0 {
         let warm = warm.expect("a frozen prefix requires a warm-start schedule");
@@ -346,7 +465,7 @@ pub fn priority_mapping_warm(
     }
 
     let (mut seed_schedule, mut f_seed, early_exit) =
-        seed_solution(ev, n, max_batch, &mut stats);
+        seed_solution(ev, n, max_batch, &params.kv, &mut stats);
     if early_exit {
         stats.early_exit = true;
         stats.overhead_ms = crate::util::now_ms() - t_start;
@@ -392,18 +511,30 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
         };
     }
 
+    let kv = params.kv;
     let (seed_schedule, f_seed, early_exit) =
-        seed_solution(ev, n, max_batch, &mut stats);
+        seed_solution(ev, n, max_batch, &kv, &mut stats);
     if early_exit {
         stats.early_exit = true;
         stats.overhead_ms = crate::util::now_ms() - t_start;
         return SaResult { schedule: seed_schedule, eval: f_seed, stats };
     }
 
+    // KV mirror of the fast path: per-job footprints once, per-candidate
+    // occupancy recomputed from scratch (this is the O(N) reference).
+    let job_blocks: Vec<u64> = ev
+        .jobs()
+        .iter()
+        .map(|j| kv.job_blocks(j.input_len, j.output_len))
+        .collect();
+    let mut bb: Vec<u64> = Vec::new();
+
     let mut current = seed_schedule;
     let mut f_cur = f_seed;
+    let mut x_cur = ev.kv_excess(&current, &kv);
     let mut best = current.clone();
     let mut f_best = f_cur;
+    let mut x_best = x_cur;
 
     let f_scale = f_cur.g.abs().max(1e-12);
     let mut rng = Rng::new(params.seed);
@@ -416,33 +547,97 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
             candidate.order.extend_from_slice(&current.order);
             candidate.batches.clear();
             candidate.batches.extend_from_slice(&current.batches);
-            if !moves::random_move(&mut candidate, max_batch, &mut rng) {
+            let moved = if kv.vetoes_moves() {
+                batch_kv_blocks(&candidate, &job_blocks, &mut bb);
+                let veto = moves::KvVeto {
+                    job_blocks: &job_blocks,
+                    batch_blocks: &bb,
+                    pool_blocks: kv.pool_blocks,
+                };
+                moves::random_move_desc_kv(
+                    &mut candidate,
+                    max_batch,
+                    0,
+                    Some(&veto),
+                    &mut rng,
+                )
+                .is_some()
+            } else {
+                moves::random_move(&mut candidate, max_batch, &mut rng)
+            };
+            if !moved {
                 continue;
             }
             let f_new = ev.eval(&candidate);
+            let x_new = ev.kv_excess(&candidate, &kv);
             stats.evals += 1;
-            let accept = if f_new.g > f_cur.g {
-                true
-            } else {
-                let t_eff = (t / params.t0) * f_scale;
-                let p = ((f_new.g - f_cur.g) / t_eff).exp();
-                rng.chance(p)
+            let accept = match kv.mode {
+                KvMode::Soft { weight } => {
+                    let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
+                    let s_cur = KvConfig::soft_score(f_cur.g, x_cur, weight);
+                    if s_new > s_cur {
+                        true
+                    } else {
+                        let t_eff = (t / params.t0) * f_scale;
+                        rng.chance(((s_new - s_cur) / t_eff).exp())
+                    }
+                }
+                _ => {
+                    if x_new != x_cur {
+                        x_new < x_cur
+                    } else if f_new.g > f_cur.g {
+                        true
+                    } else {
+                        let t_eff = (t / params.t0) * f_scale;
+                        rng.chance(((f_new.g - f_cur.g) / t_eff).exp())
+                    }
+                }
             };
             if accept {
                 std::mem::swap(&mut current, &mut candidate);
                 f_cur = f_new;
+                x_cur = x_new;
                 stats.accepted += 1;
-                if f_cur.g > f_best.g {
+                let improved = match kv.mode {
+                    KvMode::Soft { weight } => {
+                        KvConfig::soft_score(f_cur.g, x_cur, weight)
+                            > KvConfig::soft_score(f_best.g, x_best, weight)
+                    }
+                    _ => {
+                        x_cur < x_best
+                            || (x_cur == x_best && f_cur.g > f_best.g)
+                    }
+                };
+                if improved {
                     best.order.clear();
                     best.order.extend_from_slice(&current.order);
                     best.batches.clear();
                     best.batches.extend_from_slice(&current.batches);
                     f_best = f_cur;
+                    x_best = x_cur;
                     stats.improved += 1;
                 }
             }
         }
         t *= params.decay;
+    }
+
+    // Hard-mode fallback, mirroring `anneal` (see the comment there).
+    if matches!(kv.mode, KvMode::Hard) && x_best > 0 {
+        let repacked = hard_repack(
+            &best.order,
+            &best.batches[..0],
+            &job_blocks,
+            max_batch,
+            kv.pool_blocks,
+        );
+        let f_re = ev.eval(&repacked);
+        let x_re = ev.kv_excess(&repacked, &kv);
+        stats.evals += 1;
+        if x_re < x_best || (x_re == x_best && f_re.g > f_best.g) {
+            best = repacked;
+            f_best = f_re;
+        }
     }
 
     stats.overhead_ms = crate::util::now_ms() - t_start;
@@ -680,6 +875,92 @@ mod tests {
             "frozen prefix reordered"
         );
         assert_eq!(res.schedule.batches[..frozen], warm.batches[..frozen]);
+    }
+
+    #[test]
+    fn hard_kv_mode_returns_feasible_plans() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0xCAFE);
+        for seed in 0..4u64 {
+            let jobs: Vec<Job> = (0..14)
+                .map(|_| Job {
+                    req_idx: 0,
+                    input_len: 1 + rng.below(120),
+                    output_len: 1 + rng.below(60),
+                    slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+                })
+                .collect();
+            // pool large enough for any single job (<= 12 blocks) but far
+            // below max_batch * max job footprint
+            let kv = KvConfig::hard(20);
+            let p = SaParams { kv, ..params(6, seed) };
+            let ev = Evaluator::new(&jobs, &pred);
+            let res = priority_mapping(&ev, &p);
+            res.schedule.validate(6).unwrap();
+            assert_eq!(
+                ev.kv_excess(&res.schedule, &kv),
+                0,
+                "seed {seed}: infeasible plan {:?}",
+                res.schedule
+            );
+        }
+    }
+
+    #[test]
+    fn soft_kv_mode_discourages_overcommit() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0xBEEF);
+        let jobs: Vec<Job> = (0..12)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(120),
+                output_len: 1 + rng.below(60),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+            })
+            .collect();
+        let kv = KvConfig::soft(20, 1.0); // 1 excess block ≫ any G gain
+        let ev = Evaluator::new(&jobs, &pred);
+        let res =
+            priority_mapping(&ev, &SaParams { kv, ..params(6, 1) });
+        assert_eq!(ev.kv_excess(&res.schedule, &kv), 0, "{:?}", res.schedule);
+    }
+
+    #[test]
+    fn fast_and_full_paths_agree_under_finite_pools() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        for (seed, kv) in [
+            (0u64, KvConfig::hard(18)),
+            (1, KvConfig::soft(18, 0.5)),
+            (2, KvConfig::hard(6)),
+        ] {
+            let mut rng = Rng::new(seed ^ 0x3A3A);
+            let jobs: Vec<Job> = (0..13)
+                .map(|_| Job {
+                    req_idx: 0,
+                    input_len: 1 + rng.below(90),
+                    output_len: 1 + rng.below(40),
+                    slo: Slo::E2e { e2e_ms: rng.uniform(800.0, 12_000.0) },
+                })
+                .collect();
+            let ev = Evaluator::new(&jobs, &pred);
+            let p = SaParams {
+                max_batch: 4,
+                seed,
+                t0: 100.0,
+                iters_per_temp: 25,
+                kv,
+                ..Default::default()
+            };
+            let fast = priority_mapping(&ev, &p);
+            let full = priority_mapping_full(&ev, &p);
+            assert_eq!(fast.schedule, full.schedule, "seed {seed}");
+            assert_eq!(fast.eval, full.eval, "seed {seed}");
+            assert_eq!(fast.stats.evals, full.stats.evals, "seed {seed}");
+            assert_eq!(fast.stats.accepted, full.stats.accepted, "seed {seed}");
+        }
     }
 
     #[test]

@@ -1,9 +1,22 @@
 //! Priority mapping: the paper's core contribution (§4.3).
 //!
 //! * [`annealing`]  — simulated-annealing search (Algorithm 1), the
-//!   production path (~1 ms overhead).
+//!   production path (~1 ms overhead). Optimizes `G = n / Σ t_e2e`
+//!   (Eqs. 2–13) under the Eq. 20 KV-block feasibility model
+//!   ([`crate::coordinator::kv`]).
 //! * [`exhaustive`] — `O(N!·2^N)` strawman used as the optimality baseline.
-//! * [`moves`]      — the neighbourhood operators shared by the search.
+//! * [`moves`]      — the neighbourhood operators shared by the search
+//!   (Algorithm 1 line 20), each with a frozen-prefix-masked and a
+//!   KV-vetoed variant.
+//!
+//! **Frozen-prefix masking contract** (online admission): a move invoked
+//! with `frozen_batches = f` must not change the membership, order, or
+//! boundaries of the first `f` batches, and with `f = 0` must draw the
+//! exact RNG stream of the unmasked move. The KV veto composes the same
+//! way: with no veto (or an unlimited pool) the `*_kv` variants are
+//! bit-identical to the masked ones. See [`moves`] for the operator-level
+//! statement and `tests/online_admission.rs` / `tests/kv_feasibility.rs`
+//! for the enforcing tests.
 
 pub mod annealing;
 pub mod exhaustive;

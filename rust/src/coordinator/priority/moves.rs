@@ -33,9 +33,63 @@
 //! draw the exact same RNG stream and produce the exact same edits as the
 //! unmasked ones — the bit-identity the online-equals-offline equivalence
 //! test rests on.
+//!
+//! **KV-block feasibility** (Eq. 20): every move also has a `*_kv`
+//! variant taking an optional [`KvVeto`] — a view of the per-job block
+//! footprints and current per-batch occupancy maintained by the
+//! incremental evaluator. With a veto present (hard KV mode), a move that
+//! would push any batch's occupancy over the pool is refused *after* its
+//! RNG draws but *before* any mutation, so the schedule is untouched and
+//! [`random_move_desc_kv`] falls through to the next move family. Because
+//! the source batch only ever shrinks, a vetoed generator can never
+//! increase any batch's excess — a feasible schedule stays feasible for
+//! the whole search. With `kv == None` the `*_kv` variants draw the exact
+//! RNG stream of the plain/masked ones.
 
 use crate::coordinator::objective::Schedule;
 use crate::util::rng::Rng;
+
+/// Read-only KV state the hard-feasibility veto consults (borrowed from
+/// [`crate::coordinator::objective::IncrementalEval`]'s per-batch
+/// aggregates and the
+/// [`crate::coordinator::pred_table::PredTable`] footprints).
+#[derive(Debug, Clone, Copy)]
+pub struct KvVeto<'a> {
+    /// Per-job KV footprint in blocks (index = job id).
+    pub job_blocks: &'a [u64],
+    /// Current per-batch occupancy in blocks (index = batch).
+    pub batch_blocks: &'a [u64],
+    /// Pool capacity in blocks.
+    pub pool_blocks: u64,
+}
+
+impl KvVeto<'_> {
+    /// Would moving `job` into existing batch `target` overcommit it?
+    #[inline]
+    fn into_batch_ok(&self, target: usize, job: usize) -> bool {
+        self.batch_blocks[target] + self.job_blocks[job] <= self.pool_blocks
+    }
+
+    /// Can `job` open a fresh singleton batch?
+    #[inline]
+    fn alone_ok(&self, job: usize) -> bool {
+        self.job_blocks[job] <= self.pool_blocks
+    }
+
+    /// Would exchanging `job_a` (in batch `ba`) with `job_b` (in batch
+    /// `bb`) overcommit either batch?
+    #[inline]
+    fn swap_ok(&self, ba: usize, job_a: usize, bb: usize, job_b: usize) -> bool {
+        if ba == bb {
+            return true; // intra-batch swap never changes occupancy
+        }
+        let a = self.batch_blocks[ba] - self.job_blocks[job_a]
+            + self.job_blocks[job_b];
+        let b = self.batch_blocks[bb] - self.job_blocks[job_b]
+            + self.job_blocks[job_a];
+        a <= self.pool_blocks && b <= self.pool_blocks
+    }
+}
 
 /// How to revert an in-place `order` edit (the `order` length never
 /// changes, so every move is undone by one rotation or one swap).
@@ -130,6 +184,19 @@ pub fn squeeze_prev_desc_masked(
     frozen_batches: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    squeeze_prev_desc_kv(s, max_batch, frozen_batches, None, rng)
+}
+
+/// [`squeeze_prev_desc_masked`] with an optional KV-feasibility veto: the
+/// move is refused (schedule untouched) if pulling the picked job into the
+/// previous batch would push that batch's block occupancy over the pool.
+pub fn squeeze_prev_desc_kv(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let m = s.batches.len();
     // Source k needs an unfrozen target k-1: k ranges over first..m.
     let first = frozen_batches + 1;
@@ -146,6 +213,11 @@ pub fn squeeze_prev_desc_masked(
     let start_k: usize = s.batches[..k].iter().sum();
     // pick a random member of batch k and move it to the end of batch k-1
     let pick = start_k + rng.below(s.batches[k]);
+    if let Some(v) = kv {
+        if !v.into_batch_ok(k - 1, s.order[pick]) {
+            return None; // target batch would overcommit the KV pool
+        }
+    }
     s.order[start_k..=pick].rotate_right(1);
     s.batches[k - 1] += 1;
     s.batches[k] -= 1;
@@ -184,6 +256,20 @@ pub fn delay_next_desc_masked(
     frozen_batches: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    delay_next_desc_kv(s, max_batch, frozen_batches, None, rng)
+}
+
+/// [`delay_next_desc_masked`] with an optional KV-feasibility veto: the
+/// move is refused (schedule untouched) if pushing the picked job into the
+/// next batch would overcommit it (or if the job cannot even hold a
+/// singleton batch, when delaying out of the final batch).
+pub fn delay_next_desc_kv(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     if s.order.is_empty() {
         return None;
     }
@@ -208,6 +294,16 @@ pub fn delay_next_desc_masked(
     let k = nth_eligible(frozen_batches..m, rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     let pick = start_k + rng.below(s.batches[k]);
+    if let Some(v) = kv {
+        let feasible = if k + 1 < m {
+            v.into_batch_ok(k + 1, s.order[pick])
+        } else {
+            v.alone_ok(s.order[pick])
+        };
+        if !feasible {
+            return None; // target batch would overcommit the KV pool
+        }
+    }
     // rotate the picked job to the START of batch k+1's span (the slot at
     // start_k + batches[k] - 1 once the boundary moves)
     let insert_at = start_k + s.batches[k] - 1;
@@ -255,6 +351,19 @@ pub fn rand_swap_desc_masked(
     frozen_batches: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    rand_swap_desc_kv(s, frozen_batches, None, rng)
+}
+
+/// [`rand_swap_desc_masked`] with an optional KV-feasibility veto: the
+/// swap is refused (schedule untouched) if exchanging the two jobs would
+/// overcommit either batch. Intra-batch swaps never change occupancy and
+/// are always allowed.
+pub fn rand_swap_desc_kv(
+    s: &mut Schedule,
+    frozen_batches: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let n = s.order.len();
     let frozen_pos: usize = s.batches[..frozen_batches.min(s.batches.len())]
         .iter()
@@ -268,11 +377,18 @@ pub fn rand_swap_desc_masked(
     if j >= i {
         j += 1;
     }
-    s.order.swap(i, j);
     let (lo_pos, hi_pos) = if i < j { (i, j) } else { (j, i) };
+    let b_lo = batch_of(&s.batches, lo_pos);
+    let b_hi = batch_of(&s.batches, hi_pos);
+    if let Some(v) = kv {
+        if !v.swap_ok(b_lo, s.order[lo_pos], b_hi, s.order[hi_pos]) {
+            return None; // exchange would overcommit a batch's KV pool
+        }
+    }
+    s.order.swap(i, j);
     Some(AppliedMove {
-        b_lo: batch_of(&s.batches, lo_pos),
-        b_hi: batch_of(&s.batches, hi_pos),
+        b_lo,
+        b_hi,
         removed_batch: None,
         appended_batch: false,
         undo: OrderUndo::Swap { i, j },
@@ -298,12 +414,27 @@ pub fn random_move_desc_masked(
     frozen_batches: usize,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    random_move_desc_kv(s, max_batch, frozen_batches, None, rng)
+}
+
+/// [`random_move_desc_masked`] with an optional KV-feasibility veto. A
+/// vetoed move family counts as infeasible and the rotation falls through
+/// to the next one; `None` is returned (schedule untouched) only when all
+/// three fail. With `kv == None` the RNG stream and edits are identical to
+/// the plain masked path.
+pub fn random_move_desc_kv(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let first = rng.below(3);
     for offset in 0..3 {
         let mv = match (first + offset) % 3 {
-            0 => squeeze_prev_desc_masked(s, max_batch, frozen_batches, rng),
-            1 => delay_next_desc_masked(s, max_batch, frozen_batches, rng),
-            _ => rand_swap_desc_masked(s, frozen_batches, rng),
+            0 => squeeze_prev_desc_kv(s, max_batch, frozen_batches, kv, rng),
+            1 => delay_next_desc_kv(s, max_batch, frozen_batches, kv, rng),
+            _ => rand_swap_desc_kv(s, frozen_batches, kv, rng),
         };
         if mv.is_some() {
             return mv;
@@ -558,6 +689,87 @@ mod tests {
         let before = s.clone();
         assert!(random_move_desc_masked(&mut s, 2, m, &mut rng).is_none());
         assert_eq!(s, before);
+    }
+
+    fn batch_blocks_of(s: &Schedule, job_blocks: &[u64]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(s.batches.len());
+        let mut start = 0usize;
+        for &b in &s.batches {
+            out.push(s.order[start..start + b].iter().map(|&j| job_blocks[j]).sum());
+            start += b;
+        }
+        out
+    }
+
+    #[test]
+    fn kv_none_matches_masked_stream() {
+        let mut a = Schedule::fcfs(9, 3);
+        let mut b = Schedule::fcfs(9, 3);
+        let mut rng_a = Rng::new(31);
+        let mut rng_b = Rng::new(31);
+        for _ in 0..200 {
+            let ma = random_move_desc_masked(&mut a, 3, 0, &mut rng_a);
+            let mb = random_move_desc_kv(&mut b, 3, 0, None, &mut rng_b);
+            assert_eq!(ma, mb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn kv_veto_never_overcommits_a_feasible_schedule() {
+        check("vetoed moves keep every batch within the pool", 200, |rng| {
+            let n = 2 + rng.below(12);
+            let max_batch = 1 + rng.below(4);
+            let job_blocks: Vec<u64> =
+                (0..n).map(|_| 1 + rng.below(5) as u64).collect();
+            // pool just big enough that FCFS packing is feasible
+            let mut s = Schedule::fcfs(n, max_batch);
+            let pool = *batch_blocks_of(&s, &job_blocks).iter().max().unwrap()
+                + rng.below(3) as u64;
+            for step in 0..60 {
+                let bb = batch_blocks_of(&s, &job_blocks);
+                if bb.iter().any(|&b| b > pool) {
+                    return Err(format!("step {step}: overcommitted {bb:?}"));
+                }
+                let veto = KvVeto {
+                    job_blocks: &job_blocks,
+                    batch_blocks: &bb,
+                    pool_blocks: pool,
+                };
+                random_move_desc_kv(&mut s, max_batch, 0, Some(&veto), rng);
+                s.validate(max_batch)
+                    .map_err(|e| format!("step {step}: {e}"))?;
+            }
+            let bb = batch_blocks_of(&s, &job_blocks);
+            if bb.iter().any(|&b| b > pool) {
+                return Err(format!("final state overcommitted: {bb:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kv_veto_refuses_infeasible_squeeze_but_allows_delay() {
+        // Two singleton batches of 3 blocks each, pool of 4: squeezing
+        // them together (6 blocks) must be vetoed; delaying job 0 out of
+        // batch 0 is a no-op candidate set, but a swap stays legal.
+        let job_blocks = vec![3u64, 3u64];
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let mut s = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+            let bb = batch_blocks_of(&s, &job_blocks);
+            let veto = KvVeto {
+                job_blocks: &job_blocks,
+                batch_blocks: &bb,
+                pool_blocks: 4,
+            };
+            if let Some(_mv) =
+                random_move_desc_kv(&mut s, 2, 0, Some(&veto), &mut rng)
+            {
+                // only the swap is feasible: batches must stay [1, 1]
+                assert_eq!(s.batches, vec![1, 1], "{s:?}");
+            }
+        }
     }
 
     #[test]

@@ -7,12 +7,17 @@
 //!
 //! 1. predict request latencies;
 //! 2. assign requests round-robin to the instance with the largest
-//!    remaining memory (token capacity via Eq. 20); when the largest
-//!    remaining memory cannot host the next request, remaining memories are
-//!    reset — a new "iteration" of assignments begins;
+//!    remaining memory — accounted in KV blocks via Eq. 20
+//!    ([`InstanceInfo::pool_blocks`]); when the largest remaining capacity
+//!    cannot host the next request, remaining capacities are reset — a new
+//!    "iteration" of assignments begins. A request no instance can ever
+//!    host is a hard scheduling error;
 //! 3. run Algorithm 1 inside each instance — one scoped thread per
 //!    instance, since the searches share nothing but the immutable
-//!    predictor and their own job slices;
+//!    predictor and their own job slices. With KV enforcement on
+//!    ([`crate::coordinator::kv::KvMode`]), each instance's search is
+//!    additionally bound to its own block pool, so planned batches never
+//!    overcommit at execution time;
 //! 4. enqueue each instance's priority sequence for execution.
 //!
 //! [`ScheduleOutcome`] reports the scheduling overhead both ways: wall
@@ -20,6 +25,9 @@
 //! of per-instance mapping times — the quantity comparable to the paper's
 //! Fig. 11(B), whose instances are mapped sequentially on one server).
 
+use anyhow::{bail, Result};
+
+use crate::coordinator::kv::{self, KvConfig, KvMode};
 use crate::coordinator::objective::{Evaluator, Job, Schedule};
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::annealing::{
@@ -34,6 +42,14 @@ pub struct InstanceInfo {
     pub id: usize,
     /// KV-cache memory pool size (MB).
     pub mem_mb: f64,
+}
+
+impl InstanceInfo {
+    /// This instance's KV pool in blocks, through Eq. 20
+    /// (`token_num(m) = m·μ/σ`) at `block_tokens` granularity.
+    pub fn pool_blocks(&self, mem: &MemoryModel, block_tokens: usize) -> u64 {
+        kv::pool_blocks_from_mb(self.mem_mb, mem, block_tokens)
+    }
 }
 
 /// Per-instance execution plan produced by the scheduler.
@@ -83,60 +99,74 @@ pub fn instance_seed(base: u64, inst: usize) -> u64 {
 
 /// Instance assignment (Algorithm 2 line 4, "Instance Assignment" ¶).
 ///
-/// Requests are considered in arrival order; each goes to the instance with
-/// the largest remaining memory. A request's footprint is its total token
-/// count (input + predicted output) converted through Eq. 20. If even the
-/// largest-remaining instance lacks room, all remaining memories reset
-/// (a maximum-capacity wave has been packed) and assignment continues.
+/// Requests are considered in arrival order; each goes to the instance
+/// with the largest remaining memory. All accounting is in **KV blocks**
+/// (the same Eq. 20 conversion plus block rounding the SA search and the
+/// engine allocator use): a request's footprint is its total token count
+/// (input + predicted output) rounded up to blocks, and an instance's
+/// capacity is [`InstanceInfo::pool_blocks`]. If even the largest-
+/// remaining instance lacks room, all remaining capacities reset (a
+/// maximum-capacity wave has been packed) and assignment continues.
 ///
-/// One largest-remaining scan per request (a second scan only after a
-/// reset); `total_cmp` so NaN capacities/footprints cannot panic.
+/// # Errors
+/// A request whose footprint alone exceeds **every** instance's pool can
+/// never execute; assignment fails with a descriptive error instead of
+/// silently overcommitting (the pre-KV behaviour let the remaining-memory
+/// counter go negative).
 pub fn assign_instances(
     requests: &[Request],
     predicted_out: &[usize],
     instances: &[InstanceInfo],
     mem: &MemoryModel,
-) -> Vec<Vec<usize>> {
+    block_tokens: usize,
+) -> Result<Vec<Vec<usize>>> {
     assert_eq!(requests.len(), predicted_out.len());
     assert!(!instances.is_empty());
-    let mut remaining: Vec<f64> = instances.iter().map(|i| i.mem_mb).collect();
+    let block_tokens = block_tokens.max(1);
+    let pools: Vec<u64> = instances
+        .iter()
+        .map(|i| i.pool_blocks(mem, block_tokens))
+        .collect();
+    let mut remaining: Vec<u64> = pools.clone();
     let mut out: Vec<Vec<usize>> = vec![Vec::new(); instances.len()];
 
-    fn largest(remaining: &[f64]) -> usize {
-        // NaN ranks lowest (total_cmp alone would rank +NaN above +inf and
-        // silently funnel every request onto a broken instance).
-        fn rank(v: f64) -> f64 {
-            if v.is_nan() {
-                f64::NEG_INFINITY
-            } else {
-                v
-            }
-        }
+    // Integer blocks: NaN/negative capacities became empty pools in the
+    // Eq. 20 conversion, so a plain max suffices (ties keep the previous
+    // float-path behaviour of picking the last maximal instance).
+    fn largest(remaining: &[u64]) -> usize {
         remaining
             .iter()
             .enumerate()
-            .max_by(|a, b| rank(*a.1).total_cmp(&rank(*b.1)))
+            .max_by(|a, b| a.1.cmp(b.1))
             .map(|(i, _)| i)
             .unwrap()
     }
 
     for (ri, req) in requests.iter().enumerate() {
         let tokens = req.input_len + predicted_out[ri];
-        let need_mb = mem.tokens_to_mb(tokens);
-        // pick instance with the largest remaining memory
+        let need = kv::blocks_for(tokens, block_tokens);
+        // pick instance with the largest remaining capacity
         let mut best = largest(&remaining);
-        if remaining[best] < need_mb {
+        if remaining[best] < need {
             // reset: a full wave has been packed (§4.4); re-scan since the
             // globally-largest instance may differ from the current one
-            for (slot, inst) in remaining.iter_mut().zip(instances) {
-                *slot = inst.mem_mb;
-            }
+            remaining.copy_from_slice(&pools);
             best = largest(&remaining);
+            if remaining[best] < need {
+                bail!(
+                    "request {ri} (id {}): KV footprint of {need} blocks \
+                     ({tokens} tokens at {block_tokens} tokens/block) \
+                     exceeds every instance's pool (largest: {} blocks) — \
+                     the request can never be scheduled",
+                    req.id,
+                    remaining[best],
+                );
+            }
         }
-        remaining[best] -= need_mb;
+        remaining[best] -= need;
         out[best].push(ri);
     }
-    out
+    Ok(out)
 }
 
 /// Algorithm 2: full SLO-aware scheduling across instances.
@@ -147,6 +177,18 @@ pub fn assign_instances(
 /// plan order is deterministic (by instance index) and each instance's
 /// search keeps its own derived RNG seed, so results are identical to the
 /// sequential execution.
+///
+/// **KV threading**: instance assignment always accounts in Eq. 20 blocks.
+/// When `sa.kv` enforces a pool ([`KvMode::Hard`]/[`KvMode::Soft`]), each
+/// instance's search additionally runs against *its own* pool — the
+/// smaller of the instance's [`InstanceInfo::pool_blocks`] and any
+/// engine-level cap in `sa.kv.pool_blocks` — replacing the old standalone
+/// Eq. 20 check with end-to-end feasibility. With the default unlimited
+/// config the searches are bit-identical to the pre-KV scheduler.
+///
+/// # Errors
+/// Fails when a request's KV footprint exceeds every instance's pool
+/// (see [`assign_instances`]).
 pub fn schedule(
     requests: &[Request],
     predicted_out: &[usize],
@@ -154,9 +196,15 @@ pub fn schedule(
     predictor: &LatencyPredictor,
     mem: &MemoryModel,
     sa: &SaParams,
-) -> ScheduleOutcome {
+) -> Result<ScheduleOutcome> {
     let t0 = crate::util::now_ms();
-    let assignment = assign_instances(requests, predicted_out, instances, mem);
+    let assignment = assign_instances(
+        requests,
+        predicted_out,
+        instances,
+        mem,
+        sa.kv.block_tokens,
+    )?;
     let assign_ms = crate::util::now_ms() - t0;
 
     // Materialize per-instance job sets first so the mapping threads borrow
@@ -172,9 +220,22 @@ pub fn schedule(
                 .collect()
         })
         .collect();
-    // Derive a per-instance seed so instances explore independently.
+    // Derive a per-instance seed so instances explore independently, and
+    // bind each search to its instance's KV pool when enforcement is on.
     let params: Vec<SaParams> = (0..job_sets.len())
-        .map(|inst| SaParams { seed: instance_seed(sa.seed, inst), ..*sa })
+        .map(|inst| SaParams {
+            seed: instance_seed(sa.seed, inst),
+            kv: match sa.kv.mode {
+                KvMode::Unlimited => sa.kv,
+                _ => KvConfig {
+                    pool_blocks: sa.kv.pool_blocks.min(
+                        instances[inst].pool_blocks(mem, sa.kv.block_tokens),
+                    ),
+                    ..sa.kv
+                },
+            },
+            ..*sa
+        })
         .collect();
 
     let busy = job_sets.iter().filter(|jobs| !jobs.is_empty()).count();
@@ -231,12 +292,12 @@ pub fn schedule(
         })
         .collect();
 
-    ScheduleOutcome {
+    Ok(ScheduleOutcome {
         plans,
         overhead_ms: crate::util::now_ms() - t0,
         cpu_ms: assign_ms + mapping_cpu_ms,
         seed: sa.seed,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -265,7 +326,9 @@ mod tests {
         let reqs: Vec<Request> =
             (0..6).map(|i| req(i, 100, 0)).collect();
         let outs = vec![0usize; 6];
-        let asg = assign_instances(&reqs, &outs, &instances(2, 10_000.0), &mem);
+        let asg =
+            assign_instances(&reqs, &outs, &instances(2, 10_000.0), &mem, 16)
+                .unwrap();
         // equal-size requests alternate between equal instances
         assert_eq!(asg[0].len(), 3);
         assert_eq!(asg[1].len(), 3);
@@ -280,7 +343,7 @@ mod tests {
             InstanceInfo { id: 0, mem_mb: 100.0 },
             InstanceInfo { id: 1, mem_mb: 10_000.0 },
         ];
-        let asg = assign_instances(&reqs, &outs, &inst, &mem);
+        let asg = assign_instances(&reqs, &outs, &inst, &mem, 16).unwrap();
         // the big instance keeps winning until its remaining dips below
         assert!(asg[1].len() >= 3, "{asg:?}");
     }
@@ -288,11 +351,27 @@ mod tests {
     #[test]
     fn assignment_resets_when_full() {
         let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
-        // each request needs 80 MB; instance holds 100 MB -> resets every req
+        // each request needs 5 blocks; the instance holds 6 (100 tokens at
+        // 16 tokens/block) -> the pool resets on every second request
         let reqs: Vec<Request> = (0..5).map(|i| req(i, 80, 0)).collect();
         let outs = vec![0usize; 5];
-        let asg = assign_instances(&reqs, &outs, &instances(1, 100.0), &mem);
+        let asg = assign_instances(&reqs, &outs, &instances(1, 100.0), &mem, 16)
+            .unwrap();
         assert_eq!(asg[0].len(), 5); // all still assigned (across waves)
+    }
+
+    #[test]
+    fn assignment_rejects_request_larger_than_every_pool() {
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        // 100-token pool (6 blocks); a 200-token request needs 13 blocks
+        let reqs = vec![req(0, 150, 50)];
+        let outs = vec![50usize];
+        let err =
+            assign_instances(&reqs, &outs, &instances(2, 100.0), &mem, 16)
+                .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("KV footprint"), "unhelpful error: {msg}");
+        assert!(msg.contains("13 blocks"), "unhelpful error: {msg}");
     }
 
     #[test]
@@ -313,7 +392,9 @@ mod tests {
                 &outs,
                 &instances(n_inst, 16_000.0),
                 &mem,
-            );
+                16,
+            )
+            .map_err(|e| e.to_string())?;
             let mut seen = vec![false; n_req];
             for list in &asg {
                 for &ri in list {
@@ -332,7 +413,8 @@ mod tests {
 
     #[test]
     fn assignment_survives_nan_capacity() {
-        // total_cmp ordering: a NaN pool must not panic the scheduler.
+        // a NaN pool converts to zero blocks (Eq. 20 derivation): the
+        // broken instance must neither panic nor absorb the wave.
         let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
         let reqs: Vec<Request> = (0..4).map(|i| req(i, 10, 0)).collect();
         let outs = vec![0usize; 4];
@@ -340,9 +422,9 @@ mod tests {
             InstanceInfo { id: 0, mem_mb: f64::NAN },
             InstanceInfo { id: 1, mem_mb: 1_000.0 },
         ];
-        let asg = assign_instances(&reqs, &outs, &inst, &mem);
+        assert_eq!(inst[0].pool_blocks(&mem, 16), 0);
+        let asg = assign_instances(&reqs, &outs, &inst, &mem, 16).unwrap();
         assert_eq!(asg.iter().map(Vec::len).sum::<usize>(), 4);
-        // and the broken instance must not absorb the wave
         assert_eq!(asg[1].len(), 4, "{asg:?}");
     }
 
@@ -362,7 +444,8 @@ mod tests {
             &predictor,
             &mem,
             &sa,
-        );
+        )
+        .unwrap();
         assert_eq!(outcome.plans.len(), 3);
         let mut all: Vec<usize> = Vec::new();
         for plan in &outcome.plans {
@@ -391,8 +474,10 @@ mod tests {
         let predictor = LatencyPredictor::paper_table2();
         let mem = MemoryModel::default();
         let sa = SaParams::with_max_batch(4);
-        let a = schedule(&reqs, &outs, &instances(4, 16_000.0), &predictor, &mem, &sa);
-        let b = schedule(&reqs, &outs, &instances(4, 16_000.0), &predictor, &mem, &sa);
+        let a = schedule(&reqs, &outs, &instances(4, 16_000.0), &predictor, &mem, &sa)
+            .unwrap();
+        let b = schedule(&reqs, &outs, &instances(4, 16_000.0), &predictor, &mem, &sa)
+            .unwrap();
         assert_eq!(a.plans.len(), b.plans.len());
         for (pa, pb) in a.plans.iter().zip(&b.plans) {
             assert_eq!(pa.instance, pb.instance);
@@ -411,7 +496,45 @@ mod tests {
             &LatencyPredictor::paper_table2(),
             &MemoryModel::default(),
             &SaParams::with_max_batch(2),
-        );
+        )
+        .unwrap();
         assert_eq!(outcome.plans[0].jobs.len(), 5);
+    }
+
+    #[test]
+    fn hard_kv_schedule_binds_each_instance_to_its_pool() {
+        use crate::coordinator::kv::{KvConfig, KvMode};
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        // 1024-token pools -> 64 blocks each; requests of ~200 tokens
+        // (13 blocks) so a max_batch of 8 would overcommit (104 blocks)
+        // without KV-aware search.
+        let reqs: Vec<Request> =
+            (0..12).map(|i| req(i, 150, 50)).collect();
+        let outs = vec![50usize; 12];
+        let kv = KvConfig::from_pool_mb(1024.0, &mem, 16, KvMode::Hard);
+        assert_eq!(kv.pool_blocks, 64);
+        let sa = SaParams { kv, ..SaParams::with_max_batch(8) };
+        let outcome = schedule(
+            &reqs,
+            &outs,
+            &instances(2, 1024.0),
+            &LatencyPredictor::paper_table2(),
+            &mem,
+            &sa,
+        )
+        .unwrap();
+        for plan in &outcome.plans {
+            let ev = Evaluator::new(
+                &plan.jobs,
+                &LatencyPredictor::paper_table2(),
+            );
+            assert_eq!(
+                ev.kv_excess(&plan.schedule, &kv),
+                0,
+                "instance {} overcommits: {:?}",
+                plan.instance,
+                plan.schedule
+            );
+        }
     }
 }

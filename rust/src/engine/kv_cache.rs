@@ -74,12 +74,22 @@ impl BlockAllocator {
         tokens.div_ceil(self.cfg.block_tokens)
     }
 
+    /// Blocks a fresh sequence of `tokens` tokens would pin (≥ 1 — even
+    /// an empty sequence takes a block). The allocator-side twin of the
+    /// scheduler's rounding rule
+    /// ([`crate::coordinator::kv::blocks_for`]); admission pre-checks
+    /// must use this so they agree with [`BlockAllocator::alloc_seq`]
+    /// exactly.
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        self.blocks_for(tokens.max(1))
+    }
+
     /// Allocate a new sequence holding `tokens` tokens.
     pub fn alloc_seq(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
         if self.seqs.contains_key(&seq) {
             return Err(KvError::AlreadyAllocated(seq));
         }
-        let need = self.blocks_for(tokens.max(1));
+        let need = self.blocks_needed(tokens);
         if need > self.free.len() {
             return Err(KvError::OutOfMemory {
                 need_blocks: need,
@@ -118,7 +128,7 @@ impl BlockAllocator {
 
     /// Would `tokens` more tokens (as a fresh sequence) fit right now?
     pub fn fits(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens.max(1)) <= self.free.len()
+        self.blocks_needed(tokens) <= self.free.len()
     }
 
     pub fn free_blocks(&self) -> usize {

@@ -36,6 +36,9 @@ pub struct SimEngine {
     pub batches_run: usize,
     /// Decode iterations executed (diagnostics).
     pub decode_steps: usize,
+    /// High-water mark of KV-block occupancy (diagnostics: a KV-aware
+    /// scheduler must keep this at or below the pool by construction).
+    peak_used_blocks: usize,
 }
 
 impl SimEngine {
@@ -54,6 +57,7 @@ impl SimEngine {
             kv: BlockAllocator::new(kv_cfg),
             batches_run: 0,
             decode_steps: 0,
+            peak_used_blocks: 0,
         }
     }
 
@@ -70,6 +74,11 @@ impl SimEngine {
         &self.kv
     }
 
+    /// High-water mark of KV-block occupancy across the run.
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used_blocks
+    }
+
     /// Multiplicative execution noise ~ N(1, σ), clamped positive.
     fn noise(&mut self) -> f64 {
         self.rng.gaussian(1.0, self.profile.noise_std).max(0.05)
@@ -83,6 +92,7 @@ impl SimEngine {
         self.kv.reset();
         self.batches_run = 0;
         self.decode_steps = 0;
+        self.peak_used_blocks = 0;
     }
 
     /// Continuous-batching FCFS execution (the vLLM baseline).
@@ -122,6 +132,8 @@ impl SimEngine {
                     break; // head-of-line blocks on memory (FCFS)
                 }
                 self.kv.alloc_seq(req.id, total)?;
+                self.peak_used_blocks =
+                    self.peak_used_blocks.max(self.kv.used_blocks());
                 admitted.push(req);
                 pending.pop_front();
             }
@@ -241,10 +253,37 @@ impl Engine for SimEngine {
     fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
         validate_batch(self, batch)?;
         let b = batch.len();
-        // KV admission for the whole batch (scheduler sized it to fit)
-        for r in batch {
-            self.kv.alloc_seq(r.id, r.input_len + r.max_new_tokens)?;
+        // KV admission for the whole batch, checked up front: a planned
+        // batch that does not fit the pool is a scheduler bug (the
+        // KV-aware search guarantees feasibility), and failing before any
+        // allocation keeps the allocator consistent — no partial batch
+        // ever holds blocks.
+        let need_blocks: usize = batch
+            .iter()
+            .map(|r| self.kv.blocks_needed(r.input_len + r.max_new_tokens))
+            .sum();
+        if need_blocks > self.kv.free_blocks() {
+            anyhow::bail!(
+                "planned batch of {b} requests overcommits the KV pool: \
+                 needs {need_blocks} blocks, {} free of {} total — the \
+                 scheduler planned an infeasible batch",
+                self.kv.free_blocks(),
+                self.kv.config().total_blocks,
+            );
         }
+        for (i, r) in batch.iter().enumerate() {
+            if let Err(e) =
+                self.kv.alloc_seq(r.id, r.input_len + r.max_new_tokens)
+            {
+                // e.g. duplicate request ids within one batch: release the
+                // already-allocated prefix so the refusal leaks nothing.
+                for done in &batch[..i] {
+                    let _ = self.kv.free_seq(done.id);
+                }
+                return Err(e.into());
+            }
+        }
+        self.peak_used_blocks = self.peak_used_blocks.max(self.kv.used_blocks());
         let start = self.clock_ms;
         let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
         let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
@@ -466,6 +505,39 @@ mod tests {
         // an arrival in the past never rewinds the clock
         e.advance_to(1.0);
         assert!(e.now_ms() >= expected_first);
+    }
+
+    #[test]
+    fn overcommitted_planned_batch_fails_cleanly() {
+        let mut p = quiet_profile();
+        p.kv_pool_mb = 100.0; // 200 tokens at 0.5 MB/token -> 12 blocks
+        let mut e = SimEngine::new(p, 4, 0);
+        assert_eq!(e.kv().config().total_blocks, 12);
+        // two requests of 110 tokens = 7 blocks each -> 14 > 12
+        let batch = vec![req(1, 100, 10), req(2, 100, 10)];
+        let err = e.run_batch(&batch).unwrap_err();
+        assert!(
+            format!("{err}").contains("overcommits the KV pool"),
+            "unhelpful error: {err}"
+        );
+        // the refused batch must not leak blocks (no partial allocation)
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), 12);
+        // a feasible singleton still runs, and peak occupancy is recorded
+        e.run_batch(&[req(3, 100, 10)]).unwrap();
+        assert_eq!(e.peak_used_blocks(), 7);
+        assert_eq!(e.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn duplicate_ids_in_batch_leak_nothing() {
+        // passes the pool pre-check, fails at the second alloc_seq: the
+        // already-allocated prefix must be released before erroring.
+        let mut e = SimEngine::new(quiet_profile(), 4, 0);
+        let batch = vec![req(1, 100, 10), req(1, 100, 10)];
+        assert!(e.run_batch(&batch).is_err());
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
     }
 
     #[test]

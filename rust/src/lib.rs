@@ -11,7 +11,8 @@
 //! * **L3** (this crate) — the serving system: the paper's simulated-
 //!   annealing SLO-aware scheduler ([`coordinator`]), LLM engines
 //!   ([`engine`]: a PJRT-backed real engine and a calibrated simulator),
-//!   the PJRT runtime ([`runtime`]), workload generators ([`workload`]),
+//!   the PJRT runtime (`runtime`, feature-gated), workload generators
+//!   ([`workload`]),
 //!   metrics ([`metrics`]), a TCP serving front-end ([`server`]), and the
 //!   bench harness ([`bench`]) that regenerates every table/figure of the
 //!   paper's evaluation.
@@ -38,9 +39,11 @@ pub mod workload;
 pub mod prelude {
     pub use crate::config::profiles::{by_name, HardwareProfile};
     pub use crate::config::{OutputPrediction, RunConfig, SloTargets};
+    pub use crate::coordinator::kv::{KvConfig, KvMode};
     pub use crate::coordinator::objective::{Evaluator, Job, Schedule};
     pub use crate::coordinator::online::{
-        run_online, run_online_fleet, ReplanStrategy, WaveController,
+        run_online, run_online_fleet, run_online_fleet_opts, run_online_opts,
+        OnlineOpts, ReplanStrategy, WaveController,
     };
     pub use crate::coordinator::policies::Policy;
     pub use crate::coordinator::predictor::LatencyPredictor;

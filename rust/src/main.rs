@@ -13,7 +13,10 @@ use anyhow::{anyhow, Result};
 use slo_serve::bench;
 use slo_serve::config::profiles;
 use slo_serve::config::RunConfig;
-use slo_serve::coordinator::online::{run_online_fleet, ReplanStrategy};
+use slo_serve::coordinator::kv::{KvConfig, KvMode};
+use slo_serve::coordinator::online::{
+    run_online_fleet_opts, OnlineOpts, ReplanStrategy,
+};
 use slo_serve::coordinator::predict_outputs;
 use slo_serve::coordinator::predictor::LatencyPredictor;
 use slo_serve::coordinator::priority::annealing::SaParams;
@@ -39,6 +42,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "rng seed", default: Some("42") },
         OptSpec { name: "slo-scale", help: "scale all SLO bounds", default: Some("1.0") },
         OptSpec { name: "output-pred", help: "profiler | oracle:<rel_err>", default: Some("profiler") },
+        OptSpec { name: "kv", help: "off | hard | soft:<weight> (Eq. 20 pool from the profile)", default: Some("off") },
     ]
 }
 
@@ -64,6 +68,20 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     } else {
         return Err(anyhow!("bad --output-pred {op}"));
     };
+    let kv_spec = args.str("kv");
+    if kv_spec != "off" {
+        // KV enforcement lives in the SA search; for baseline policies the
+        // flag would silently do nothing — refuse instead of misleading.
+        if cfg.policy != "slo-aware-sa" {
+            return Err(anyhow!(
+                "--kv {kv_spec} requires --policy slo-aware-sa (the \
+                 baselines do not consult the Eq. 20 pool)"
+            ));
+        }
+        let profile = profiles::by_name(&cfg.profile)
+            .ok_or_else(|| anyhow!("unknown profile '{}'", cfg.profile))?;
+        cfg.sa.kv = parse_kv(&kv_spec, &profile)?;
+    }
     let run = bench::run_scenario(&cfg)?;
     let m = &run.metrics;
     let mut t = Table::new(&["metric", "value"]);
@@ -110,7 +128,44 @@ fn online_specs() -> Vec<OptSpec> {
             help: "warm | cold | compare",
             default: Some("compare"),
         },
+        OptSpec {
+            name: "kv",
+            help: "off | hard | soft:<weight> (Eq. 20 pool from the profile)",
+            default: Some("off"),
+        },
+        OptSpec {
+            name: "compact",
+            help: "compact dispatched batches out of the controller (0|1)",
+            default: Some("0"),
+        },
     ]
+}
+
+/// Parse `--kv off|hard|soft:<w>` into a [`KvConfig`] over the profile's
+/// Eq. 20 pool (μ·pool_mb/σ tokens at the engine's 16-token blocks).
+fn parse_kv(
+    spec: &str,
+    profile: &slo_serve::config::profiles::HardwareProfile,
+) -> Result<KvConfig> {
+    let mode = match spec {
+        "off" => return Ok(KvConfig::UNLIMITED),
+        "hard" => KvMode::Hard,
+        other => match other.strip_prefix("soft:") {
+            Some(w) => {
+                let weight: f64 = w
+                    .parse()
+                    .map_err(|_| anyhow!("bad soft weight in --kv {other}"))?;
+                if !weight.is_finite() || weight <= 0.0 {
+                    return Err(anyhow!(
+                        "--kv soft weight must be finite and > 0, got {weight}"
+                    ));
+                }
+                KvMode::Soft { weight }
+            }
+            None => return Err(anyhow!("bad --kv {spec} (off|hard|soft:<w>)")),
+        },
+    };
+    Ok(KvConfig::from_pool_mb(profile.kv_pool_mb, &profile.mem, 16, mode))
 }
 
 /// Online wave admission over a timed arrival trace: warm-started SA
@@ -150,7 +205,11 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         &mut pred_rng,
         profile.max_total_tokens / 2,
     );
-    let sa = SaParams { max_batch, seed, ..Default::default() };
+    let kv = parse_kv(&args.str("kv"), &profile)?;
+    let opts = OnlineOpts {
+        compact_dispatched: args.str("compact") == "1",
+    };
+    let sa = SaParams { max_batch, seed, kv, ..Default::default() };
 
     let mut t = Table::new(&[
         "replan",
@@ -172,8 +231,8 @@ fn cmd_online(argv: &[String]) -> Result<()> {
                 )) as Box<dyn Engine + Send>
             })
             .collect();
-        let (completions, outcomes) = run_online_fleet(
-            &trace, &predicted, &mut engines, &predictor, &sa, strategy,
+        let (completions, outcomes) = run_online_fleet_opts(
+            &trace, &predicted, &mut engines, &predictor, &sa, strategy, opts,
         )?;
         let m = RunMetrics::from_completions(&completions);
         let by_task = RunMetrics::attainment_by_task(&completions);

@@ -1,0 +1,307 @@
+//! KV-aware batching acceptance tests (ISSUE 3):
+//!
+//! * **unlimited-pool bit-identity** — with a `u64::MAX` pool (any mode)
+//!   the search draws the pre-KV RNG stream: plans, evaluations, and
+//!   search stats are identical across `Unlimited`, `Hard`, and `Soft`,
+//!   and `schedule` outcomes match batch for batch.
+//! * **oversize hard-fail** — a single job larger than every pool fails
+//!   loudly at instance assignment, online admission, and the engine.
+//! * **exact-fit boundary** — a batch occupying exactly the pool is
+//!   feasible; one block less flips it to excess 1.
+//! * **constrained pool end-to-end** — where the pre-KV path plans a
+//!   batch the engine refuses (KV overcommit), the hard-mode scheduler
+//!   produces a feasible plan that executes within the block pool.
+
+use slo_serve::config::profiles::by_name;
+use slo_serve::coordinator::execute_plans;
+use slo_serve::coordinator::kv::{KvConfig, KvMode};
+use slo_serve::coordinator::objective::{Evaluator, Job, Schedule};
+use slo_serve::coordinator::online::{ReplanStrategy, WaveController};
+use slo_serve::coordinator::predictor::LatencyPredictor;
+use slo_serve::coordinator::priority::annealing::{priority_mapping, SaParams};
+use slo_serve::coordinator::profiler::{MemoryModel, RequestProfiler};
+use slo_serve::coordinator::request::{Request, Slo, TaskType};
+use slo_serve::coordinator::scheduler::{schedule, InstanceInfo};
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::engine::Engine;
+use slo_serve::util::rng::Rng;
+
+fn random_jobs(rng: &mut Rng, n: usize) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job {
+            req_idx: i,
+            input_len: 1 + rng.below(1500),
+            output_len: 1 + rng.below(400),
+            slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 30_000.0) },
+        })
+        .collect()
+}
+
+/// Acceptance: `pool_blocks = u64::MAX` under every mode draws the exact
+/// RNG stream of the pre-KV search — trajectories and results are
+/// bit-identical to the `Unlimited` (legacy) configuration.
+#[test]
+fn unlimited_pool_is_bit_identical_across_modes() {
+    let pred = LatencyPredictor::paper_table2();
+    for seed in [0u64, 3, 11] {
+        let mut rng = Rng::new(seed ^ 0x77AA);
+        let jobs = random_jobs(&mut rng, 15);
+        let ev = Evaluator::new(&jobs, &pred);
+        let base = SaParams {
+            max_batch: 4,
+            seed,
+            t0: 200.0,
+            iters_per_temp: 30,
+            ..Default::default()
+        };
+        let legacy = priority_mapping(&ev, &base);
+        for kv in [
+            KvConfig { pool_blocks: u64::MAX, ..KvConfig::hard(0) },
+            KvConfig { pool_blocks: u64::MAX, ..KvConfig::soft(0, 123.0) },
+        ] {
+            let res = priority_mapping(&ev, &SaParams { kv, ..base });
+            assert_eq!(res.schedule, legacy.schedule, "seed {seed} {kv:?}");
+            assert_eq!(
+                res.eval.g.to_bits(),
+                legacy.eval.g.to_bits(),
+                "seed {seed} {kv:?}: objective not bit-identical"
+            );
+            assert_eq!(res.stats.evals, legacy.stats.evals, "seed {seed}");
+            assert_eq!(res.stats.accepted, legacy.stats.accepted, "seed {seed}");
+            assert_eq!(res.stats.improved, legacy.stats.improved, "seed {seed}");
+        }
+    }
+}
+
+/// The multi-instance outcome is equally unchanged: `ScheduleOutcome`
+/// plans under an infinite hard pool equal the legacy configuration's,
+/// batch partition included.
+#[test]
+fn unlimited_pool_schedule_outcome_matches_legacy() {
+    let pred = LatencyPredictor::paper_table2();
+    let reqs: Vec<Request> = (0..14)
+        .map(|i| {
+            Request::synthetic(
+                i as u64,
+                TaskType::Code,
+                100 + 40 * i as usize,
+                10 + 7 * i as usize,
+                Slo::E2e { e2e_ms: 30_000.0 },
+            )
+        })
+        .collect();
+    let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+    let instances: Vec<InstanceInfo> = (0..3)
+        .map(|id| InstanceInfo { id, mem_mb: 16_000.0 })
+        .collect();
+    let mem = MemoryModel::default();
+    let base = SaParams::with_max_batch(4);
+    let legacy =
+        schedule(&reqs, &outs, &instances, &pred, &mem, &base).unwrap();
+    let infinite_hard = SaParams {
+        kv: KvConfig { pool_blocks: u64::MAX, ..KvConfig::hard(0) },
+        ..base
+    };
+    let kvd =
+        schedule(&reqs, &outs, &instances, &pred, &mem, &infinite_hard)
+            .unwrap();
+    assert_eq!(legacy.plans.len(), kvd.plans.len());
+    assert_eq!(legacy.seed, kvd.seed);
+    for (a, b) in legacy.plans.iter().zip(&kvd.plans) {
+        assert_eq!(a.instance, b.instance);
+        assert_eq!(a.schedule, b.schedule, "instance {}", a.instance);
+        assert_eq!(a.request_order(), b.request_order());
+    }
+}
+
+/// Acceptance: a single job larger than the pool hard-fails with a clear
+/// error at every layer that could otherwise plan a fiction.
+#[test]
+fn oversize_job_fails_loudly_everywhere() {
+    let pred = LatencyPredictor::paper_table2();
+    let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+    // 100-token instance pools (6 blocks); the request needs 750 tokens.
+    let reqs = vec![Request::synthetic(
+        9,
+        TaskType::Code,
+        700,
+        50,
+        Slo::E2e { e2e_ms: 1e9 },
+    )];
+    let outs = vec![50usize];
+    let instances: Vec<InstanceInfo> =
+        (0..2).map(|id| InstanceInfo { id, mem_mb: 100.0 }).collect();
+    // scheduler: instance assignment refuses
+    let err = schedule(
+        &reqs,
+        &outs,
+        &instances,
+        &pred,
+        &mem,
+        &SaParams::with_max_batch(4),
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("KV footprint"), "{err}");
+
+    // online admission: the controller refuses
+    let p = SaParams {
+        kv: KvConfig::from_pool_mb(100.0, &mem, 16, KvMode::Hard),
+        ..SaParams::with_max_batch(4)
+    };
+    let mut ctl = WaveController::new(&pred, p, ReplanStrategy::Warm);
+    let job = Job::from_request(0, &reqs[0], outs[0]);
+    let err = ctl.admit(&[job]).unwrap_err();
+    assert!(format!("{err}").contains("KV blocks"), "{err}");
+
+    // engine: the allocator-backed pre-check refuses
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    profile.kv_pool_mb = 100.0; // 200 tokens -> 12 blocks
+    let mut engine = SimEngine::new(profile, 4, 0);
+    let err = engine
+        .run_batch(&[slo_serve::engine::EngineRequest {
+            id: 9,
+            input_len: 700,
+            max_new_tokens: 50,
+            prompt: None,
+        }])
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("overcommits the KV pool"),
+        "{err}"
+    );
+}
+
+/// Acceptance: exact fit sits on the feasible side of the boundary.
+#[test]
+fn exact_fit_boundary() {
+    let pred = LatencyPredictor::paper_table2();
+    // two jobs of exactly 10 blocks each (160 tokens)
+    let jobs: Vec<Job> = (0..2)
+        .map(|i| Job {
+            req_idx: i,
+            input_len: 150,
+            output_len: 10,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        })
+        .collect();
+    let both = Schedule { order: vec![0, 1], batches: vec![2] };
+    let ev = Evaluator::new(&jobs, &pred);
+    let exact = KvConfig::hard(20);
+    assert_eq!(ev.kv_excess(&both, &exact), 0, "exact fit must be feasible");
+    let short = KvConfig::hard(19);
+    assert_eq!(ev.kv_excess(&both, &short), 1, "one block short -> excess 1");
+    // the hard search at the exact-fit pool keeps batching legal and
+    // returns a feasible plan
+    let res = priority_mapping(
+        &ev,
+        &SaParams { kv: exact, ..SaParams::with_max_batch(2) },
+    );
+    assert_eq!(ev.kv_excess(&res.schedule, &exact), 0);
+    // one block short: the plan must fall back to singleton batches
+    let res = priority_mapping(
+        &ev,
+        &SaParams { kv: short, ..SaParams::with_max_batch(2) },
+    );
+    assert_eq!(ev.kv_excess(&res.schedule, &short), 0);
+    assert_eq!(res.schedule.batches, vec![1, 1], "{:?}", res.schedule);
+}
+
+/// Acceptance: on a constrained pool the legacy path plans batches the
+/// engine refuses at execution time; the hard-mode scheduler produces a
+/// feasible plan that runs to completion within the block pool.
+#[test]
+fn constrained_pool_feasible_where_legacy_overcommits() {
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    profile.kv_pool_mb = 200.0; // engine: 400 tokens -> 25 blocks
+    let pred = profile.truth;
+    let mem = profile.mem; // μ=0.9, σ=0.5 -> scheduler pool 22 blocks
+    // 8 requests × 160 tokens (10 blocks): 3 to a batch overcommits the
+    // 25-block engine pool; the 22-block scheduler pool allows 2.
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| {
+            Request::synthetic(
+                i as u64,
+                TaskType::Code,
+                150,
+                10,
+                Slo::E2e { e2e_ms: 1e12 }, // loose: legacy early-exits
+            )
+        })
+        .collect();
+    let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+    let instances = vec![InstanceInfo { id: 0, mem_mb: profile.kv_pool_mb }];
+
+    // Legacy (unlimited) packs max_batch-sized batches: 4 × 10 blocks
+    // = 40 > 25 — the engine refuses the very first batch.
+    let legacy = schedule(
+        &reqs,
+        &outs,
+        &instances,
+        &pred,
+        &mem,
+        &SaParams::with_max_batch(4),
+    )
+    .unwrap();
+    assert!(legacy.plans[0].schedule.batches.iter().any(|&b| b >= 3));
+    let mut engines: Vec<Box<dyn Engine + Send>> =
+        vec![Box::new(SimEngine::new(profile.clone(), 4, 0))];
+    let mut profiler = RequestProfiler::new();
+    let err = execute_plans(&reqs, &legacy.plans, &mut engines, &mut profiler)
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("overcommits the KV pool"),
+        "legacy plan should have overcommitted: {err}"
+    );
+
+    // Hard mode: per-instance pool (22 blocks) bounds every batch; the
+    // plan executes to completion and the engine's high-water mark stays
+    // within the pool.
+    let kv = KvConfig::from_pool_mb(profile.kv_pool_mb, &mem, 16, KvMode::Hard);
+    assert_eq!(kv.pool_blocks, 22);
+    let outcome = schedule(
+        &reqs,
+        &outs,
+        &instances,
+        &pred,
+        &mem,
+        &SaParams { kv, ..SaParams::with_max_batch(4) },
+    )
+    .unwrap();
+    let ev = Evaluator::new(&outcome.plans[0].jobs, &pred);
+    assert_eq!(ev.kv_excess(&outcome.plans[0].schedule, &kv), 0);
+    let mut profiler = RequestProfiler::new();
+    let mut engines: Vec<Box<dyn Engine + Send>> =
+        vec![Box::new(SimEngine::new(profile.clone(), 4, 0))];
+    let completions =
+        execute_plans(&reqs, &outcome.plans, &mut engines, &mut profiler)
+            .unwrap();
+    assert_eq!(completions.len(), 8);
+    // replay on a directly owned engine to read the high-water mark
+    let mut sim = SimEngine::new(profile.clone(), 4, 0);
+    for plan in &outcome.plans {
+        for (_, start, size) in plan.schedule.batch_spans() {
+            let batch: Vec<slo_serve::engine::EngineRequest> = plan.schedule
+                .order[start..start + size]
+                .iter()
+                .map(|&j| {
+                    let r = &reqs[plan.jobs[j].req_idx];
+                    slo_serve::engine::EngineRequest {
+                        id: r.id,
+                        input_len: r.input_len,
+                        max_new_tokens: r.output_len,
+                        prompt: None,
+                    }
+                })
+                .collect();
+            sim.run_batch(&batch).unwrap();
+        }
+    }
+    assert!(
+        sim.peak_used_blocks() <= 25,
+        "peak {} blocks exceeds the engine pool",
+        sim.peak_used_blocks()
+    );
+    assert!(sim.peak_used_blocks() > 0);
+}

@@ -57,7 +57,8 @@ fn online_equals_offline_for_t0_arrivals() {
             &predictor,
             &MemoryModel::default(),
             &sa,
-        );
+        )
+        .unwrap();
         assert_eq!(offline.seed, seed);
         let off_plan = &offline.plans[0];
 
@@ -74,7 +75,7 @@ fn online_equals_offline_for_t0_arrivals() {
             .enumerate()
             .map(|(i, r)| Job::from_request(i, r, outs[i]))
             .collect();
-        ctl.admit(&jobs);
+        ctl.admit(&jobs).unwrap();
 
         assert_eq!(
             ctl.plan(),
@@ -111,7 +112,8 @@ fn online_execution_matches_offline_execution_at_t0() {
         &predictor,
         &MemoryModel::default(),
         &sa,
-    );
+    )
+    .unwrap();
     let mut engines: Vec<Box<dyn Engine + Send>> =
         vec![Box::new(SimEngine::new(profile.clone(), 4, 0))];
     let mut profiler = RequestProfiler::new();
@@ -175,7 +177,7 @@ fn frozen_prefix_is_never_reordered() {
                 })
                 .collect();
             admitted += fresh_n;
-            ctl.admit(&fresh);
+            ctl.admit(&fresh).map_err(|e| e.to_string())?;
             ctl.plan()
                 .validate(max_batch)
                 .map_err(|e| format!("invalid plan after admit: {e}"))?;
