@@ -102,7 +102,10 @@ pub fn policy_from_name(name: &str, sa: SaParams) -> Result<Policy> {
     })
 }
 
-/// Build one simulated engine per instance.
+/// Build one simulated engine per instance. The engines mirror the
+/// scheduler's KV demand model (`cfg.sa.kv.phase`), so a phased-planned
+/// wave is admitted against the same occupancy-peak accounting it was
+/// planned with (the default `Reserve` keeps the legacy behaviour).
 pub fn sim_engines(
     profile: &HardwareProfile,
     cfg: &RunConfig,
@@ -114,6 +117,7 @@ pub fn sim_engines(
                 cfg.max_batch,
                 cfg.seed ^ (i as u64).wrapping_mul(0xE5317),
             )
+            .with_kv_phase(cfg.sa.kv.phase)
         })
         .collect()
 }

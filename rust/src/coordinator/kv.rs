@@ -26,6 +26,18 @@
 //! decode growth) rounded up to blocks: planned batches are static
 //! (Eq. 10), so the engine reserves input + output KV up front and the
 //! footprint is independent of the batch size the job executes at.
+//!
+//! **Phase-aware demand** ([`KvPhaseModel`]): reserving every job's full
+//! footprint for the whole batch ([`KvPhaseModel::Reserve`], the legacy
+//! and default model) overstates the true peak whenever output lengths
+//! are staggered — a short job frees its blocks long before the batch
+//! ends. [`KvPhaseModel::Phased`] instead models the lockstep-decode
+//! occupancy profile exactly: every member holds its prompt blocks at
+//! prefill, grows one token per decode step, and releases everything the
+//! step it completes. [`phased_peak_blocks`] computes the exact peak of
+//! that profile, which is what the evaluators charge a batch under
+//! `Phased` (and what the phased engine pre-check in
+//! [`crate::engine::sim::SimEngine`] admits against).
 
 use crate::coordinator::profiler::MemoryModel;
 
@@ -55,8 +67,38 @@ pub enum KvMode {
     },
 }
 
+/// How a planned batch's block **demand** is modelled (module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvPhaseModel {
+    /// Reserve-up-front: a batch demands the sum of its members' full
+    /// footprints (prompt + predicted decode) for its whole duration.
+    /// The legacy model — bit-identical to the pre-phase scheduler.
+    #[default]
+    Reserve,
+    /// Phase-aware: a batch demands the exact peak of the lockstep
+    /// prefill/decode occupancy profile, with per-member release at
+    /// completion ([`phased_peak_blocks`]). Never exceeds the `Reserve`
+    /// demand, so on the same pool a phased search can only batch more,
+    /// never less.
+    Phased,
+}
+
 /// KV-pool geometry + enforcement mode threaded through the search via
 /// [`crate::coordinator::priority::annealing::SaParams::kv`].
+///
+/// ```
+/// use slo_serve::coordinator::kv::{KvConfig, KvPhaseModel};
+///
+/// let kv = KvConfig::hard(64);
+/// assert_eq!(kv.job_blocks(30, 3), 3); // 33 tokens -> 3 blocks of 16
+/// assert_eq!(kv.batch_excess(70), 6);  // 6 blocks over the 64-block pool
+/// assert!(kv.fits_alone(64) && !kv.fits_alone(65));
+/// // demand-model escape hatch: Reserve is the default; Phased charges
+/// // batches their exact lockstep-decode occupancy peak instead.
+/// assert_eq!(kv.phase, KvPhaseModel::Reserve);
+/// let phased = kv.with_phase(KvPhaseModel::Phased);
+/// assert!(phased.phased() && phased.binding());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct KvConfig {
     /// Tokens per block (must match the engine's allocator granularity).
@@ -64,6 +106,9 @@ pub struct KvConfig {
     /// Pool capacity in blocks; `u64::MAX` means unlimited.
     pub pool_blocks: u64,
     pub mode: KvMode,
+    /// Batch demand model; [`KvPhaseModel::Reserve`] reproduces the
+    /// pre-phase accounting bit for bit.
+    pub phase: KvPhaseModel,
 }
 
 impl Default for KvConfig {
@@ -78,6 +123,7 @@ impl KvConfig {
         block_tokens: DEFAULT_BLOCK_TOKENS,
         pool_blocks: u64::MAX,
         mode: KvMode::Unlimited,
+        phase: KvPhaseModel::Reserve,
     };
 
     /// Hard-feasibility pool of `pool_blocks` blocks.
@@ -86,6 +132,7 @@ impl KvConfig {
             block_tokens: DEFAULT_BLOCK_TOKENS,
             pool_blocks,
             mode: KvMode::Hard,
+            phase: KvPhaseModel::Reserve,
         }
     }
 
@@ -95,7 +142,19 @@ impl KvConfig {
             block_tokens: DEFAULT_BLOCK_TOKENS,
             pool_blocks,
             mode: KvMode::Soft { weight },
+            phase: KvPhaseModel::Reserve,
         }
+    }
+
+    /// This configuration with a different batch demand model.
+    pub fn with_phase(self, phase: KvPhaseModel) -> KvConfig {
+        KvConfig { phase, ..self }
+    }
+
+    /// True when batch demand uses the phase-aware occupancy model.
+    #[inline]
+    pub fn phased(&self) -> bool {
+        matches!(self.phase, KvPhaseModel::Phased)
     }
 
     /// Derive a pool from a memory budget through Eq. 20
@@ -111,6 +170,7 @@ impl KvConfig {
             block_tokens,
             pool_blocks: pool_blocks_from_mb(pool_mb, mem, block_tokens),
             mode,
+            phase: KvPhaseModel::Reserve,
         }
     }
 
@@ -178,6 +238,64 @@ impl KvConfig {
     }
 }
 
+/// Exact peak block occupancy of one planned batch under phase-aware
+/// execution ([`KvPhaseModel::Phased`]). `members` holds each member's
+/// `(input_len, predicted_output_len)`.
+///
+/// Model (mirrors the engine's lockstep static-batch semantics): after
+/// the batch has generated `g` tokens per member, a member with output
+/// `o_i` holds `blocks(input_i + min(g, o_i))` blocks while alive, and
+/// releases everything once it completes at `max(o_i, 1)` generated
+/// tokens (per-member release at completion — the thing
+/// [`KvPhaseModel::Reserve`] ignores; the `min` caps a member's KV at
+/// its reserve footprint, zero-output requests included). Occupancy is
+/// non-decreasing between completions, so the peak is attained at some
+/// member's completion point:
+///
+/// ```text
+/// peak = max over j of  Σ_{i alive at gⱼ} blocks(input_i + min(gⱼ, o_i))
+///        where gⱼ = max(o_j, 1)
+/// ```
+///
+/// O(b²) over the batch — b is bounded by `max_batch`, so this stays
+/// cheap inside the SA hot path.
+///
+/// Bounds (enforced by tests): the peak never exceeds the `Reserve` sum
+/// of full footprints, and never falls below any single member's full
+/// footprint — which is what makes the footprint-sum greedy packer
+/// conservative-but-sound under `Phased` and keeps the move veto's
+/// arithmetic safe.
+pub fn phased_peak_blocks(members: &[(usize, usize)], block_tokens: usize) -> u64 {
+    phased_peak_over(members.len(), |i| members[i], block_tokens)
+}
+
+/// [`phased_peak_blocks`] over a *virtual* member set resolved through
+/// `get` — the allocation-free form the move generator's veto uses to
+/// price candidate batches (member list plus one added/substituted job)
+/// without materializing them. The two entry points share this one
+/// implementation so the veto can never diverge from the evaluators.
+pub fn phased_peak_over(
+    n: usize,
+    get: impl Fn(usize) -> (usize, usize),
+    block_tokens: usize,
+) -> u64 {
+    let mut peak = 0u64;
+    for j in 0..n {
+        let g = get(j).1.max(1);
+        let mut occ = 0u64;
+        for i in 0..n {
+            let (input_i, out_i) = get(i);
+            if out_i.max(1) >= g {
+                occ += blocks_for(input_i + g.min(out_i), block_tokens);
+            }
+        }
+        if occ > peak {
+            peak = occ;
+        }
+    }
+    peak
+}
+
 /// The scheduler-side block-rounding rule, shared by every footprint
 /// computation ([`KvConfig::blocks_for_tokens`], instance assignment):
 /// `⌈max(tokens, 1) / block_tokens⌉`. Must stay in lockstep with the
@@ -197,7 +315,10 @@ pub fn blocks_for(tokens: usize, block_tokens: usize) -> u64 {
 /// still gets a singleton batch — callers reject such jobs upstream.
 /// This is **the** feasible-packing rule, shared by the online seed
 /// packing and the hard-mode repack fallback so the two can never
-/// diverge.
+/// diverge. Packing always sums full footprints (`Reserve` accounting);
+/// since a batch's phased peak never exceeds that sum, packings stay
+/// feasible under [`KvPhaseModel::Phased`] too — conservative, and the
+/// SA search is then free to re-batch more aggressively.
 pub fn pack_greedy(
     order: &[usize],
     from: usize,
@@ -312,6 +433,73 @@ mod tests {
         let mut tail = vec![9usize];
         pack_greedy(&order, 3, &job_blocks, 3, 6, &mut tail);
         assert_eq!(tail, vec![9, 2]);
+    }
+
+    #[test]
+    fn phased_peak_matches_hand_computed_profile() {
+        // A: 100 in / 10 out (full 7 blocks of 16); B: 100 in / 100 out
+        // (full 13 blocks). Reserve charges 20; the lockstep profile peaks
+        // when both are alive at g = 10: 2 × blocks(110) = 2 × 7 = 14.
+        let members = [(100usize, 10usize), (100, 100)];
+        assert_eq!(phased_peak_blocks(&members, 16), 14);
+        let reserve: u64 = members
+            .iter()
+            .map(|&(i, o)| blocks_for(i + o, 16))
+            .sum();
+        assert_eq!(reserve, 20);
+        // identical members never release early: phased == reserve
+        assert_eq!(phased_peak_blocks(&[(100, 100); 2], 16), 26);
+        // zero-output members complete at prefill holding their prompt
+        assert_eq!(phased_peak_blocks(&[(15, 0)], 16), 1);
+        assert_eq!(phased_peak_blocks(&[], 16), 0);
+        // the closure form is the same computation
+        let m = [(100usize, 10usize), (100, 100)];
+        assert_eq!(phased_peak_over(2, |i| m[i], 16), 14);
+    }
+
+    #[test]
+    fn phased_peak_bounds() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x9A5E);
+        for _ in 0..200 {
+            let b = 1 + rng.below(8);
+            let members: Vec<(usize, usize)> = (0..b)
+                .map(|_| (1 + rng.below(800), rng.below(300)))
+                .collect();
+            let peak = phased_peak_blocks(&members, 16);
+            // bounds are against the *production* footprint (input +
+            // output, no output clamp — what job_blocks/pack_greedy use)
+            let reserve: u64 = members
+                .iter()
+                .map(|&(i, o)| blocks_for(i + o, 16))
+                .sum();
+            let max_member = members
+                .iter()
+                .map(|&(i, o)| blocks_for(i + o, 16))
+                .max()
+                .unwrap();
+            assert!(peak <= reserve, "{members:?}: {peak} > reserve {reserve}");
+            assert!(
+                peak >= max_member,
+                "{members:?}: {peak} < largest member {max_member}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_output_singleton_peak_equals_its_footprint() {
+        // regression: a block-aligned prompt with output 0 must not be
+        // charged an extra phantom decode block — its peak is exactly its
+        // reserve footprint, so fits_alone/admission/engine agree.
+        let kv = KvConfig::hard(1);
+        assert_eq!(kv.job_blocks(16, 0), 1);
+        assert_eq!(phased_peak_blocks(&[(16, 0)], 16), 1);
+        assert!(kv.fits_alone(phased_peak_blocks(&[(16, 0)], 16)));
+        // and with_phase changes only the demand model
+        let phased = kv.with_phase(KvPhaseModel::Phased);
+        assert!(phased.phased() && !kv.phased());
+        assert_eq!(phased.pool_blocks, kv.pool_blocks);
+        assert_eq!(phased.mode, kv.mode);
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //! * [`profiler`]   — output-length + memory + latency-sample profiling.
 //! * [`predictor`]  — Eq. 14–19 latency model (least-squares fitted).
 //! * [`kv`]         — Eq. 20 KV-block feasibility model (pool geometry +
-//!   hard/soft enforcement threaded through the SA search).
+//!   hard/soft enforcement + reserve/phased batch demand, threaded
+//!   through the SA search).
 //! * [`pred_table`] — per-wave (job, batch) prediction table feeding the
-//!   SA hot path, including per-job KV-block footprints.
-//! * [`objective`]  — the G objective, schedule representation, and the
+//!   SA hot path, including per-job KV-block footprints and arrival
+//!   times.
+//! * [`objective`]  — the G objective, schedule representation, the
+//!   arrival-aware timeline ([`objective::TimelineOrigin`]), and the
 //!   full + incremental evaluators.
 //! * [`priority`]   — Algorithm 1 (SA) and the exhaustive strawman.
 //! * [`policies`]   — FCFS/SJF/EDF/MLFQ baselines + policy dispatch.

@@ -2,9 +2,14 @@
 //!
 //! A *schedule* is a permutation of the jobs plus a partition into
 //! consecutive batches (`b_0..b_{M-1}`, Eq. 10). Batches execute
-//! sequentially; a job's waiting time is the sum of the max execution times
-//! of all earlier batches (Eq. 11). `G = n / Σ t_e2e` (Eqs. 2–3) — the ratio
-//! of SLO attainment to accumulated latency.
+//! sequentially on an explicit **timeline** ([`TimelineOrigin`]): batch
+//! `k` starts at `max(end of batch k−1, latest member arrival)`, so both
+//! engine idle gaps between arrival waves and per-job arrival offsets
+//! flow into every entry wait. A job's waiting time is its batch's start
+//! time minus its own arrival (Eq. 11 generalized); with every arrival at
+//! t = 0 this collapses — bit for bit — to the paper's closed-wave sum of
+//! earlier batch maxima. `G = n / Σ t_e2e` (Eqs. 2–3) — the ratio of SLO
+//! attainment to accumulated latency.
 //!
 //! Two evaluators implement Eqs. 2–13:
 //!
@@ -29,16 +34,20 @@
 //! `tests/incremental_eval_equivalence.rs`.
 //!
 //! **KV-block occupancy** (Eq. 20): [`IncrementalEval`] additionally
-//! maintains each batch's KV-block occupancy (sum of member footprints
-//! from the [`PredTable`]) and the total excess over the configured pool
-//! ([`IncrementalEval::kv_excess`]), updated by the same touched-batch
-//! rule as the latency partials. Under a hard [`KvConfig`] it hands the
-//! move generator a [`moves::KvVeto`] so infeasible candidates are never
-//! materialized. [`Evaluator::kv_excess`] is the O(N) reference the
+//! maintains each batch's KV-block demand — the member-footprint sum
+//! under [`KvPhaseModel::Reserve`], the exact phase-aware occupancy peak
+//! ([`crate::coordinator::kv::phased_peak_blocks`]) under
+//! [`KvPhaseModel::Phased`] — and the total excess over the configured
+//! pool ([`IncrementalEval::kv_excess`]), updated by the same
+//! touched-batch rule as the latency partials. Under a hard [`KvConfig`]
+//! it hands the move generator a [`moves::KvVeto`] — pricing candidates
+//! by footprint sums under `Reserve` and by exact occupancy peaks under
+//! `Phased` — so infeasible candidates are never materialized.
+//! [`Evaluator::kv_excess`] is the O(N) reference the
 //! equivalence tests check against. With an unlimited pool the excess is
 //! identically zero and nothing about the pre-KV behaviour changes.
 
-use crate::coordinator::kv::KvConfig;
+use crate::coordinator::kv::{self, KvConfig, KvPhaseModel};
 use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::moves::{self, OrderUndo};
@@ -179,6 +188,10 @@ impl Eval {
 pub struct JobTimeline {
     pub job: usize,
     pub batch: usize,
+    /// Absolute start time of the job's batch on the wave timeline (ms).
+    pub start_ms: f64,
+    /// Waiting time measured from the job's arrival (Eq. 11 generalized):
+    /// `start_ms − arrival_ms`.
     pub wait_ms: f64,
     pub exec_ms: f64,
     pub ttft_ms: f64,
@@ -186,33 +199,133 @@ pub struct JobTimeline {
     pub met: bool,
 }
 
+/// The time origin of a predicted schedule: when the engine becomes free
+/// for the first batch (`t0`) plus each job's arrival time. This is what
+/// replaced the scalar base-wait offset: idle gaps between arrival waves
+/// and per-job arrival offsets both flow through the same
+/// `max(previous batch end, latest member arrival)` start-time rule.
+///
+/// An empty `arrivals` vector means *every job arrived at t = 0* (the
+/// paper's closed-wave setting) — evaluation is then bit-identical to the
+/// arrival-free implementation.
+///
+/// ```
+/// use slo_serve::coordinator::objective::{
+///     Evaluator, Job, Schedule, TimelineOrigin,
+/// };
+/// use slo_serve::coordinator::predictor::LatencyPredictor;
+/// use slo_serve::coordinator::request::Slo;
+///
+/// let predictor = LatencyPredictor::paper_table2();
+/// let job = |i| Job {
+///     req_idx: i,
+///     input_len: 100,
+///     output_len: 10,
+///     slo: Slo::E2e { e2e_ms: 1e9 },
+/// };
+/// let jobs = vec![job(0), job(1)];
+/// // job 1 arrives 5 s into the trace: its batch cannot start earlier,
+/// // and its wait is measured from that arrival — the engine idles in
+/// // between, which the closed-wave model could not express.
+/// let origin = TimelineOrigin { t0: 0.0, arrivals: vec![0.0, 5_000.0] };
+/// let ev = Evaluator::with_timeline(&jobs, &predictor, &origin);
+/// let s = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+/// let (_, tl) = ev.eval_detailed(&s);
+/// assert_eq!(tl[1].start_ms, 5_000.0); // idle gap modeled
+/// assert_eq!(tl[1].wait_ms, 0.0);      // wait measured from arrival
+/// ```
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TimelineOrigin {
+    /// Time (ms) at which the engine is free to start the first batch —
+    /// for the online controller, the predicted end of the compacted
+    /// dispatched prefix; 0.0 for closed waves.
+    pub t0: f64,
+    /// Per-job arrival times (ms); empty ⇒ all jobs at t = 0.
+    pub arrivals: Vec<f64>,
+}
+
+impl TimelineOrigin {
+    /// A timeline starting at `t0` with every job at t = 0 (the compacted
+    /// online controller before arrival awareness is enabled).
+    pub fn at(t0: f64) -> TimelineOrigin {
+        TimelineOrigin { t0, arrivals: Vec::new() }
+    }
+
+    /// The start time of a batch whose members' latest arrival is `arr`,
+    /// given the engine becomes free at `free`: `max(free, arr)`, written
+    /// so that `free` is returned verbatim (same bits) whenever `arr`
+    /// does not exceed it — the closed-wave bit-identity hinge.
+    #[inline]
+    pub fn batch_start(free: f64, arr: f64) -> f64 {
+        if arr > free {
+            arr
+        } else {
+            free
+        }
+    }
+}
+
 /// Reusable evaluator: borrows the job set and predictor, owns scratch.
 pub struct Evaluator<'a> {
     jobs: &'a [Job],
     predictor: &'a LatencyPredictor,
-    /// Wait already accrued before the first batch starts (compacted
-    /// dispatched-prefix accounting in the online controller); 0.0 for
-    /// closed waves, in which case every result is bit-identical to the
-    /// pre-offset implementation.
-    base_wait_ms: f64,
+    /// Time the engine becomes free for the first batch (the
+    /// [`TimelineOrigin::t0`] of this wave); 0.0 for closed waves, in
+    /// which case every result is bit-identical to the pre-timeline
+    /// implementation.
+    t0_ms: f64,
+    /// Per-job arrival times; empty ⇒ all at t = 0.
+    arrivals: &'a [f64],
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(jobs: &'a [Job], predictor: &'a LatencyPredictor) -> Self {
-        Evaluator { jobs, predictor, base_wait_ms: 0.0 }
+        Evaluator { jobs, predictor, t0_ms: 0.0, arrivals: &[] }
     }
 
     /// [`Evaluator::new`] with an initial waiting time: every job's entry
-    /// wait starts at `base_wait_ms` instead of zero. Used by
-    /// [`crate::coordinator::online::WaveController`] after compacting
-    /// dispatched batches out of the wave, so the surviving suffix still
-    /// sees the wait the dispatched prefix imposed (Eq. 11).
+    /// wait starts at `base_wait_ms` instead of zero.
+    #[deprecated(
+        since = "0.1.0",
+        note = "superseded by the explicit timeline: use \
+                `Evaluator::with_timeline` (or `with_arrivals`) with a \
+                `TimelineOrigin { t0, arrivals }` — a scalar base wait is \
+                the degenerate all-arrivals-at-zero case"
+    )]
     pub fn with_base_wait(
         jobs: &'a [Job],
         predictor: &'a LatencyPredictor,
         base_wait_ms: f64,
     ) -> Self {
-        Evaluator { jobs, predictor, base_wait_ms }
+        Evaluator { jobs, predictor, t0_ms: base_wait_ms, arrivals: &[] }
+    }
+
+    /// Evaluate on an explicit timeline (module docs): batch `k` starts at
+    /// `max(end of batch k−1, latest member arrival)` with the first
+    /// batch's "previous end" being `origin.t0`; per-job waits are
+    /// measured from each job's own arrival.
+    pub fn with_timeline(
+        jobs: &'a [Job],
+        predictor: &'a LatencyPredictor,
+        origin: &'a TimelineOrigin,
+    ) -> Self {
+        Evaluator::with_arrivals(jobs, predictor, origin.t0, &origin.arrivals)
+    }
+
+    /// [`Evaluator::with_timeline`] over borrowed parts — lets the online
+    /// controller lend the arrival column straight out of its
+    /// [`PredTable`] without cloning.
+    pub fn with_arrivals(
+        jobs: &'a [Job],
+        predictor: &'a LatencyPredictor,
+        t0_ms: f64,
+        arrivals: &'a [f64],
+    ) -> Self {
+        assert!(
+            arrivals.is_empty() || arrivals.len() == jobs.len(),
+            "arrival column must cover every job (or be empty for t = 0)"
+        );
+        Evaluator { jobs, predictor, t0_ms, arrivals }
     }
 
     pub fn jobs(&self) -> &[Job] {
@@ -223,29 +336,80 @@ impl<'a> Evaluator<'a> {
         self.predictor
     }
 
-    /// The initial waiting time every batch chain starts from.
+    /// The timeline origin's `t0`: when the engine is free for the first
+    /// batch.
+    pub fn t0_ms(&self) -> f64 {
+        self.t0_ms
+    }
+
+    /// Alias of [`Evaluator::t0_ms`] kept for the pre-timeline name.
     pub fn base_wait_ms(&self) -> f64 {
-        self.base_wait_ms
+        self.t0_ms
+    }
+
+    /// The per-job arrival column (empty ⇒ all jobs at t = 0).
+    pub fn arrivals(&self) -> &[f64] {
+        self.arrivals
+    }
+
+    /// Arrival time of `job` (0.0 when the column is empty).
+    #[inline]
+    fn arrival(&self, job: usize) -> f64 {
+        if self.arrivals.is_empty() {
+            0.0
+        } else {
+            self.arrivals[job]
+        }
+    }
+
+    /// Latest arrival among `members` (0.0 when the column is empty, so
+    /// `batch_start` degenerates to the running free time).
+    #[inline]
+    fn batch_arrival_max(&self, members: &[usize]) -> f64 {
+        if self.arrivals.is_empty() {
+            return 0.0;
+        }
+        let mut arr = f64::NEG_INFINITY;
+        for &j in members {
+            if self.arrivals[j] > arr {
+                arr = self.arrivals[j];
+            }
+        }
+        arr
     }
 
     /// Total KV-block excess of a schedule under `kv` (Eq. 20): for each
-    /// batch, the sum of member footprints minus the pool, clamped at
-    /// zero, summed over batches. O(N) from the raw job lengths — the
+    /// batch, its demand under `kv.phase` (footprint sum for `Reserve`,
+    /// phase-aware occupancy peak for `Phased`) minus the pool, clamped
+    /// at zero, summed over batches. O(N) from the raw job lengths — the
     /// reference [`IncrementalEval::kv_excess`] is checked against.
     pub fn kv_excess(&self, schedule: &Schedule, kv: &KvConfig) -> u64 {
         if !kv.binding() {
             return 0;
         }
         let mut excess = 0u64;
+        let mut members: Vec<(usize, usize)> = Vec::new();
         for (_, start, size) in schedule.batch_spans() {
-            let blocks: u64 = schedule.order[start..start + size]
-                .iter()
-                .map(|&j| {
-                    let job = &self.jobs[j];
-                    kv.job_blocks(job.input_len, job.output_len)
-                })
-                .sum();
-            excess += kv.batch_excess(blocks);
+            let demand = match kv.phase {
+                KvPhaseModel::Reserve => schedule.order[start..start + size]
+                    .iter()
+                    .map(|&j| {
+                        let job = &self.jobs[j];
+                        kv.job_blocks(job.input_len, job.output_len)
+                    })
+                    .sum(),
+                KvPhaseModel::Phased => {
+                    members.clear();
+                    members.extend(
+                        schedule.order[start..start + size].iter().map(|&j| {
+                            let job = &self.jobs[j];
+                            (job.input_len, job.output_len)
+                        }),
+                    );
+                    kv::phased_peak_blocks(&members, kv.block_tokens)
+                }
+            };
+            excess += kv.batch_excess(demand);
         }
         excess
     }
@@ -254,21 +418,28 @@ impl<'a> Evaluator<'a> {
     ///
     /// `Σ t_e2e` is accumulated as per-batch partial sums — the same
     /// grouping [`IncrementalEval`] reduces over, which is what makes the
-    /// two paths bit-identical (module docs).
+    /// two paths bit-identical (module docs). Batch start times follow the
+    /// timeline rule ([`TimelineOrigin::batch_start`]); with no arrival
+    /// column and `t0 = 0` every operation matches the pre-timeline code
+    /// bit for bit.
     pub fn eval(&self, schedule: &Schedule) -> Eval {
         debug_assert_eq!(schedule.len(), self.jobs.len());
-        let mut wait_ms = self.base_wait_ms;
+        let mut free = self.t0_ms;
         let mut total_e2e = 0.0f64;
         let mut met = 0usize;
         let mut start = 0usize;
         for &bsize in &schedule.batches {
+            let members = &schedule.order[start..start + bsize];
+            let begin =
+                TimelineOrigin::batch_start(free, self.batch_arrival_max(members));
             let mut batch_max = 0.0f64;
             let mut batch_sum = 0.0f64;
-            for &j in &schedule.order[start..start + bsize] {
+            for &j in members {
                 let job = &self.jobs[j];
                 let p = self.predictor.predict(bsize, job.input_len, job.output_len);
-                let e2e = wait_ms + p.exec_ms;
-                let ttft = wait_ms + p.prefill_ms;
+                let wait = begin - self.arrival(j);
+                let e2e = wait + p.exec_ms;
+                let ttft = wait + p.prefill_ms;
                 batch_sum += e2e;
                 if job.slo.met(e2e, ttft, p.tpot_ms) {
                     met += 1;
@@ -278,28 +449,32 @@ impl<'a> Evaluator<'a> {
                 }
             }
             total_e2e += batch_sum;
-            wait_ms += batch_max;
+            free = begin + batch_max;
             start += bsize;
         }
         let g = if total_e2e > 0.0 { met as f64 / total_e2e } else { 0.0 };
-        Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: wait_ms }
+        Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: free }
     }
 
     /// Like [`Evaluator::eval`] but also returns per-job timelines
     /// (allocates).
     pub fn eval_detailed(&self, schedule: &Schedule) -> (Eval, Vec<JobTimeline>) {
         let mut timelines = Vec::with_capacity(self.jobs.len());
-        let mut wait_ms = self.base_wait_ms;
+        let mut free = self.t0_ms;
         let mut total_e2e = 0.0f64;
         let mut met = 0usize;
         for (k, start, bsize) in schedule.batch_spans() {
+            let members = &schedule.order[start..start + bsize];
+            let begin =
+                TimelineOrigin::batch_start(free, self.batch_arrival_max(members));
             let mut batch_max = 0.0f64;
             let mut batch_sum = 0.0f64;
-            for &j in &schedule.order[start..start + bsize] {
+            for &j in members {
                 let job = &self.jobs[j];
                 let p = self.predictor.predict(bsize, job.input_len, job.output_len);
-                let e2e = wait_ms + p.exec_ms;
-                let ttft = wait_ms + p.prefill_ms;
+                let wait = begin - self.arrival(j);
+                let e2e = wait + p.exec_ms;
+                let ttft = wait + p.prefill_ms;
                 let ok = job.slo.met(e2e, ttft, p.tpot_ms);
                 batch_sum += e2e;
                 met += ok as usize;
@@ -307,7 +482,8 @@ impl<'a> Evaluator<'a> {
                 timelines.push(JobTimeline {
                     job: j,
                     batch: k,
-                    wait_ms,
+                    start_ms: begin,
+                    wait_ms: wait,
                     exec_ms: p.exec_ms,
                     ttft_ms: ttft,
                     tpot_ms: p.tpot_ms,
@@ -315,11 +491,11 @@ impl<'a> Evaluator<'a> {
                 });
             }
             total_e2e += batch_sum;
-            wait_ms += batch_max;
+            free = begin + batch_max;
         }
         let g = if total_e2e > 0.0 { met as f64 / total_e2e } else { 0.0 };
         (
-            Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: wait_ms },
+            Eval { g, met, total_e2e_ms: total_e2e, makespan_ms: free },
             timelines,
         )
     }
@@ -332,23 +508,38 @@ impl<'a> Evaluator<'a> {
     }
 }
 
-/// Per-batch KV-block occupancy of `schedule` written into `out` (index =
-/// batch). `job_blocks[j]` is job `j`'s footprint. Shared by the
-/// full-evaluation reference search path, which has no incremental
-/// aggregates to borrow a [`moves::KvVeto`] from.
+/// Per-batch KV-block demand of `schedule` under `kv`'s demand model,
+/// written into `out` (index = batch). `job_blocks[j]` is job `j`'s full
+/// footprint (the `Reserve` summand); `jobs` supplies the raw lengths the
+/// `Phased` peak needs. Shared by the full-evaluation reference search
+/// path, which has no incremental aggregates to borrow a
+/// [`moves::KvVeto`] from.
 pub fn batch_kv_blocks(
     schedule: &Schedule,
+    jobs: &[Job],
     job_blocks: &[u64],
+    kv: &KvConfig,
     out: &mut Vec<u64>,
 ) {
     out.clear();
+    let mut members: Vec<(usize, usize)> = Vec::new();
     for (_, start, size) in schedule.batch_spans() {
-        out.push(
-            schedule.order[start..start + size]
+        let demand = match kv.phase {
+            KvPhaseModel::Reserve => schedule.order[start..start + size]
                 .iter()
                 .map(|&j| job_blocks[j])
                 .sum(),
-        );
+            KvPhaseModel::Phased => {
+                members.clear();
+                members.extend(
+                    schedule.order[start..start + size]
+                        .iter()
+                        .map(|&j| (jobs[j].input_len, jobs[j].output_len)),
+                );
+                kv::phased_peak_blocks(&members, kv.block_tokens)
+            }
+        };
+        out.push(demand);
     }
 }
 
@@ -371,21 +562,26 @@ pub struct IncrementalEval<'a> {
     jobs: &'a [Job],
     table: &'a PredTable,
     kv: KvConfig,
-    /// Wait accrued before the first batch (see
-    /// [`Evaluator::with_base_wait`]); 0.0 for closed waves.
-    base_wait_ms: f64,
+    /// Time the engine is free for the first batch
+    /// ([`TimelineOrigin::t0`]); 0.0 for closed waves.
+    t0_ms: f64,
     schedule: Schedule,
     /// Max exec time in batch k (at its current size).
     bmax: Vec<f64>,
-    /// Σ (entry wait + exec) over batch k's jobs, in order.
+    /// Σ (wait + exec) over batch k's jobs, in order.
     bsum: Vec<f64>,
-    /// SLO-met count in batch k at its current entry wait.
+    /// SLO-met count in batch k at its current start time.
     bmet: Vec<usize>,
-    /// Entry wait of batch k (= Σ bmax of earlier batches, sequentially).
+    /// Start time of batch k on the wave timeline
+    /// (`max(end of batch k−1, barr[k])`, chained sequentially from t0).
     wait: Vec<f64>,
-    /// KV-block occupancy of batch k (Σ member footprints, Eq. 20).
+    /// Latest member arrival in batch k (from the table's arrival
+    /// column; 0.0 throughout for closed waves).
+    barr: Vec<f64>,
+    /// KV-block demand of batch k (Eq. 20; footprint sum under
+    /// `Reserve`, phase-aware occupancy peak under `Phased`).
     bkv: Vec<u64>,
-    /// Σ over batches of occupancy beyond the pool (0 when not binding).
+    /// Σ over batches of demand beyond the pool (0 when not binding).
     kv_excess: u64,
     eval: Eval,
     // Pre-move snapshots (reused buffers) for rollback.
@@ -394,6 +590,7 @@ pub struct IncrementalEval<'a> {
     saved_bsum: Vec<f64>,
     saved_bmet: Vec<usize>,
     saved_wait: Vec<f64>,
+    saved_barr: Vec<f64>,
     saved_bkv: Vec<u64>,
     saved_kv_excess: u64,
     saved_eval: Eval,
@@ -407,10 +604,12 @@ impl<'a> IncrementalEval<'a> {
         IncrementalEval::new_kv(jobs, table, schedule, KvConfig::UNLIMITED, 0.0)
     }
 
-    /// [`IncrementalEval::new`] with a KV configuration and a base wait.
+    /// [`IncrementalEval::new`] with a KV configuration and a timeline
+    /// origin `t0_ms` (the first batch's earliest start; arrival times
+    /// come from the table's arrival column — zeros for closed waves).
     /// Under [`crate::coordinator::kv::KvMode::Hard`] every
     /// [`IncrementalEval::try_random_move_masked`] hands the move
-    /// generator a [`moves::KvVeto`] over the current per-batch occupancy,
+    /// generator a [`moves::KvVeto`] over the current per-batch demand,
     /// so candidates that would overcommit a batch are refused before
     /// application.
     pub fn new_kv(
@@ -418,19 +617,21 @@ impl<'a> IncrementalEval<'a> {
         table: &'a PredTable,
         schedule: Schedule,
         kv: KvConfig,
-        base_wait_ms: f64,
+        t0_ms: f64,
     ) -> Self {
         assert_eq!(schedule.len(), jobs.len());
+        debug_assert_eq!(table.len(), jobs.len());
         let mut s = IncrementalEval {
             jobs,
             table,
             kv,
-            base_wait_ms,
+            t0_ms,
             schedule,
             bmax: Vec::new(),
             bsum: Vec::new(),
             bmet: Vec::new(),
             wait: Vec::new(),
+            barr: Vec::new(),
             bkv: Vec::new(),
             kv_excess: 0,
             eval: Eval::ZERO,
@@ -439,6 +640,7 @@ impl<'a> IncrementalEval<'a> {
             saved_bsum: Vec::new(),
             saved_bmet: Vec::new(),
             saved_wait: Vec::new(),
+            saved_barr: Vec::new(),
             saved_bkv: Vec::new(),
             saved_kv_excess: 0,
             saved_eval: Eval::ZERO,
@@ -471,7 +673,9 @@ impl<'a> IncrementalEval<'a> {
         self.kv_excess
     }
 
-    /// KV-block occupancy of batch `k` (Σ member footprints).
+    /// KV-block demand of batch `k` under the configured phase model:
+    /// the member-footprint sum for [`KvPhaseModel::Reserve`], the exact
+    /// occupancy peak for [`KvPhaseModel::Phased`].
     pub fn batch_kv_blocks(&self, k: usize) -> u64 {
         self.bkv[k]
     }
@@ -499,24 +703,36 @@ impl<'a> IncrementalEval<'a> {
         self.bmet.resize(m, 0);
         self.wait.clear();
         self.wait.resize(m, 0.0);
+        self.barr.clear();
+        self.barr.resize(m, 0.0);
         self.bkv.clear();
         self.bkv.resize(m, 0);
-        let mut w = self.base_wait_ms;
+        let mut free = self.t0_ms;
         let mut start = 0usize;
         for k in 0..m {
-            self.wait[k] = w;
-            self.recompute_batch(k, start, w);
-            w += self.bmax[k];
+            self.recompute_batch(k, start, free);
+            free = self.wait[k] + self.bmax[k];
             start += self.schedule.batches[k];
         }
         self.reduce();
     }
 
-    /// Recompute batch k's aggregates at entry wait `wait` — the same
-    /// per-job order and accumulation as [`Evaluator::eval`]'s inner loop
-    /// — plus its KV-block occupancy.
-    fn recompute_batch(&mut self, k: usize, start: usize, wait: f64) {
+    /// Recompute batch k's aggregates given the engine-free time `free`
+    /// entering it: the batch's arrival max and timeline start first
+    /// (written to `barr[k]` / `wait[k]`), then the same per-job order
+    /// and accumulation as [`Evaluator::eval`]'s inner loop, plus the
+    /// batch's KV demand under the configured phase model.
+    fn recompute_batch(&mut self, k: usize, start: usize, free: f64) {
         let bsize = self.schedule.batches[k];
+        let phased = self.kv.phased();
+        let mut arr = f64::NEG_INFINITY;
+        for &j in &self.schedule.order[start..start + bsize] {
+            let a = self.table.arrival_ms(j);
+            if a > arr {
+                arr = a;
+            }
+        }
+        let begin = TimelineOrigin::batch_start(free, arr);
         let mut max = 0.0f64;
         let mut sum = 0.0f64;
         let mut met = 0usize;
@@ -524,6 +740,7 @@ impl<'a> IncrementalEval<'a> {
         for &j in &self.schedule.order[start..start + bsize] {
             let job = &self.jobs[j];
             let p = self.table.get(j, bsize);
+            let wait = begin - self.table.arrival_ms(j);
             let e2e = wait + p.exec_ms;
             let ttft = wait + p.prefill_ms;
             sum += e2e;
@@ -533,8 +750,26 @@ impl<'a> IncrementalEval<'a> {
             if p.exec_ms > max {
                 max = p.exec_ms;
             }
-            kvb += self.table.kv_blocks(j);
+            if !phased {
+                kvb += self.table.kv_blocks(j);
+            }
         }
+        if phased {
+            // allocation-free closure form over the member span — one
+            // shared peak implementation with the move veto and the
+            // reference evaluator.
+            let order = &self.schedule.order[start..start + bsize];
+            kvb = kv::phased_peak_over(
+                bsize,
+                |i| {
+                    let job = &self.jobs[order[i]];
+                    (job.input_len, job.output_len)
+                },
+                self.kv.block_tokens,
+            );
+        }
+        self.barr[k] = arr;
+        self.wait[k] = begin;
         self.bmax[k] = max;
         self.bsum[k] = sum;
         self.bmet[k] = met;
@@ -596,6 +831,8 @@ impl<'a> IncrementalEval<'a> {
         self.saved_bmet.extend_from_slice(&self.bmet);
         self.saved_wait.clear();
         self.saved_wait.extend_from_slice(&self.wait);
+        self.saved_barr.clear();
+        self.saved_barr.extend_from_slice(&self.barr);
         self.saved_bkv.clear();
         self.saved_bkv.extend_from_slice(&self.bkv);
         self.saved_kv_excess = self.kv_excess;
@@ -610,6 +847,14 @@ impl<'a> IncrementalEval<'a> {
                 job_blocks: self.table.kv_blocks_all(),
                 batch_blocks: &self.bkv,
                 pool_blocks: self.kv.pool_blocks,
+                phased: if self.kv.phased() {
+                    Some(moves::PhasedVeto {
+                        jobs: self.jobs,
+                        block_tokens: self.kv.block_tokens,
+                    })
+                } else {
+                    None
+                },
             })
         } else {
             None
@@ -630,6 +875,7 @@ impl<'a> IncrementalEval<'a> {
             self.bsum.remove(r);
             self.bmet.remove(r);
             self.wait.remove(r);
+            self.barr.remove(r);
             self.bkv.remove(r);
         }
         if mv.appended_batch {
@@ -637,16 +883,18 @@ impl<'a> IncrementalEval<'a> {
             self.bsum.push(0.0);
             self.bmet.push(0);
             self.wait.push(0.0);
+            self.barr.push(0.0);
             self.bkv.push(0);
         }
         let m = self.schedule.batches.len();
         debug_assert_eq!(self.bmax.len(), m);
 
-        // Entry wait of the first touched batch, derived from the untouched
-        // prefix exactly as the sequential full evaluation would.
+        // Engine-free time entering the first touched batch, derived from
+        // the untouched prefix exactly as the sequential full evaluation
+        // would (wait[k-1] is batch k-1's start, so start + bmax = end).
         let b_lo = mv.b_lo;
-        let mut w = if b_lo == 0 {
-            self.base_wait_ms
+        let mut free = if b_lo == 0 {
+            self.t0_ms
         } else {
             self.wait[b_lo - 1] + self.bmax[b_lo - 1]
         };
@@ -654,19 +902,24 @@ impl<'a> IncrementalEval<'a> {
         let mut k = b_lo;
         while k < m {
             let membership_changed = k == mv.b_lo || k == mv.b_hi;
-            if !membership_changed && w == self.wait[k] {
+            if !membership_changed
+                && TimelineOrigin::batch_start(free, self.barr[k])
+                    == self.wait[k]
+            {
                 if k > mv.b_hi {
-                    // Unchanged membership and exactly unchanged entry wait:
-                    // the whole remaining suffix is still valid.
+                    // Unchanged membership (so barr and bmax are valid)
+                    // and exactly unchanged start time: the whole
+                    // remaining suffix is still valid.
                     break;
                 }
                 // Untouched batch between two swapped positions — cached
                 // aggregates remain valid, just pass through.
             } else {
-                self.recompute_batch(k, start, w);
-                self.wait[k] = w;
+                // Membership changed (barr may have too) or the start
+                // shifted: recompute everything at the new timeline slot.
+                self.recompute_batch(k, start, free);
             }
-            w += self.bmax[k];
+            free = self.wait[k] + self.bmax[k];
             start += self.schedule.batches[k];
             k += 1;
         }
@@ -694,6 +947,8 @@ impl<'a> IncrementalEval<'a> {
         self.bmet.extend_from_slice(&self.saved_bmet);
         self.wait.clear();
         self.wait.extend_from_slice(&self.saved_wait);
+        self.barr.clear();
+        self.barr.extend_from_slice(&self.saved_barr);
         self.bkv.clear();
         self.bkv.extend_from_slice(&self.saved_bkv);
         self.kv_excess = self.saved_kv_excess;
@@ -1015,6 +1270,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // with_base_wait stays green through the new path
     fn base_wait_shifts_every_entry_wait() {
         let pred = unit_predictor();
         let jobs = [e2e_job(100, 0, 1e9), e2e_job(200, 0, 1e9)];
@@ -1038,6 +1294,132 @@ mod tests {
             if let Some(e) = inc.try_random_move(2, &mut rng) {
                 assert_eq!(e, shifted.eval(inc.schedule()));
                 inc.commit();
+            }
+        }
+    }
+
+    #[test]
+    fn timeline_models_idle_gaps_and_arrival_offsets() {
+        // unit predictor: exec = input length in ms
+        let pred = unit_predictor();
+        let jobs = [
+            e2e_job(100, 0, 1e9), // arrives at 0
+            e2e_job(200, 0, 1e9), // arrives at 1000 (after batch 0 ends)
+            e2e_job(50, 0, 1e9),  // arrives at 1100 (while batch 1 runs)
+        ];
+        let origin =
+            TimelineOrigin { t0: 0.0, arrivals: vec![0.0, 1_000.0, 1_100.0] };
+        let ev = Evaluator::with_timeline(&jobs, &pred, &origin);
+        let s = Schedule { order: vec![0, 1, 2], batches: vec![1, 1, 1] };
+        let (eval, tl) = ev.eval_detailed(&s);
+        // batch 0: starts at t0 = 0, ends at 100
+        assert_eq!(tl[0].start_ms, 0.0);
+        assert_eq!(tl[0].wait_ms, 0.0);
+        // batch 1: engine idle 100..1000 — starts at the arrival, not 100
+        assert_eq!(tl[1].start_ms, 1_000.0);
+        assert_eq!(tl[1].wait_ms, 0.0);
+        // batch 2: engine busy until 1200 > arrival 1100 — waits 100
+        assert_eq!(tl[2].start_ms, 1_200.0);
+        assert!((tl[2].wait_ms - 100.0).abs() < 1e-9);
+        // makespan is the absolute end of the last batch
+        assert!((eval.makespan_ms - 1_250.0).abs() < 1e-9);
+        // Σ e2e sums arrival-relative latencies
+        assert!((eval.total_e2e_ms - (100.0 + 200.0 + 150.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn explicit_zero_arrivals_are_bit_identical_to_closed_wave() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..9)
+            .map(|i| e2e_job(100 + 41 * i, 20 + 7 * i, 9_000.0))
+            .collect();
+        let zeros = vec![0.0; jobs.len()];
+        let plain = Evaluator::new(&jobs, &pred);
+        let timeline = Evaluator::with_arrivals(&jobs, &pred, 0.0, &zeros);
+        let s = Schedule { order: (0..9).rev().collect(), batches: vec![4, 4, 1] };
+        let a = plain.eval(&s);
+        let b = timeline.eval(&s);
+        assert_eq!(a.g.to_bits(), b.g.to_bits());
+        assert_eq!(a.total_e2e_ms.to_bits(), b.total_e2e_ms.to_bits());
+        assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+        assert_eq!(a.met, b.met);
+    }
+
+    #[test]
+    fn incremental_matches_full_with_arrivals_after_moves() {
+        let pred = LatencyPredictor::paper_table2();
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| e2e_job(80 + 41 * i, 15 + 7 * i, 6_000.0))
+            .collect();
+        // staggered arrivals: every later job ~400 ms apart
+        let arrivals: Vec<f64> = (0..10).map(|i| 400.0 * i as f64).collect();
+        let ev = Evaluator::with_arrivals(&jobs, &pred, 120.0, &arrivals);
+        let mut table = PredTable::build(&jobs, &pred, 3);
+        table.set_arrivals(&arrivals);
+        let mut inc = IncrementalEval::new_kv(
+            &jobs,
+            &table,
+            Schedule::fcfs(10, 3),
+            Default::default(),
+            120.0,
+        );
+        assert_eq!(inc.eval(), ev.eval(inc.schedule()));
+        let mut rng = Rng::new(42);
+        for step in 0..300 {
+            match inc.try_random_move(3, &mut rng) {
+                None => continue,
+                Some(e) => {
+                    assert_eq!(e, ev.eval(inc.schedule()), "step {step}");
+                    if step % 2 == 0 {
+                        inc.commit();
+                    } else {
+                        inc.rollback();
+                        assert_eq!(inc.eval(), ev.eval(inc.schedule()));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phased_demand_tracked_through_moves() {
+        use crate::coordinator::kv::{KvConfig, KvPhaseModel};
+        let pred = LatencyPredictor::paper_table2();
+        // staggered outputs so phased < reserve on mixed batches
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| e2e_job(40 + 60 * i, 5 + 37 * (i % 4), 9_000.0))
+            .collect();
+        let kv = KvConfig::soft(18, 1.0).with_phase(KvPhaseModel::Phased);
+        let ev = Evaluator::new(&jobs, &pred);
+        let table = PredTable::build_kv(&jobs, &pred, 4, &kv);
+        let mut inc = IncrementalEval::new_kv(
+            &jobs,
+            &table,
+            Schedule::fcfs(10, 4),
+            kv,
+            0.0,
+        );
+        let mut rng = Rng::new(5);
+        for step in 0..300 {
+            if let Some(e) = inc.try_random_move_masked(4, 0, &mut rng) {
+                assert_eq!(e, ev.eval(inc.schedule()), "step {step}");
+                assert_eq!(
+                    inc.kv_excess(),
+                    ev.kv_excess(inc.schedule(), &kv),
+                    "step {step}: phased excess drifted"
+                );
+                // phased demand never exceeds the reserve sum
+                let reserve = kv.with_phase(KvPhaseModel::Reserve);
+                assert!(
+                    ev.kv_excess(inc.schedule(), &kv)
+                        <= ev.kv_excess(inc.schedule(), &reserve)
+                );
+                if step % 3 == 0 {
+                    inc.rollback();
+                } else {
+                    inc.commit();
+                }
+                assert_eq!(inc.kv_excess(), ev.kv_excess(inc.schedule(), &kv));
             }
         }
     }

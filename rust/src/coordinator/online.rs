@@ -34,10 +34,21 @@
 //! jobs in the evaluated schedule. Their e2e contributions are constants
 //! with respect to every masked move, but the frozen batch maxima still
 //! feed the suffix's entry wait — so a request stuck behind already
-//! dispatched work is correctly modelled as closer to its SLO bound. Wait
-//! accrued while the engine idled between waves is not modelled; measured
-//! attainment (from [`Completion`]s) is the ground truth the predicted
-//! objective approximates.
+//! dispatched work is correctly modelled as closer to its SLO bound.
+//!
+//! **Arrival-aware timeline** ([`WaveController::admit_at`],
+//! [`OnlineOpts::arrival_aware`]): by default the predicted objective
+//! evaluates on the closed-wave timeline (every job at t = 0 — the
+//! pre-timeline behaviour, bit for bit). When the event loop admits with
+//! real arrival times, the evaluation runs on a
+//! [`TimelineOrigin`] instead: batch `k` starts at
+//! `max(end of batch k−1, latest member arrival)`, so engine idle gaps
+//! between arrival waves and per-job arrival offsets both flow into every
+//! entry wait, and each job's predicted wait/e2e is measured from its own
+//! arrival — the same accounting the measured [`Completion`]s use. The
+//! remaining predicted-vs-executed gap is pure latency-model error (and
+//! exactly zero when the model is exact — see
+//! `tests/timeline_fidelity.rs`).
 //!
 //! **KV admission** ([`SaParams::kv`], Eq. 20): with a binding pool the
 //! controller refuses jobs that could never execute (footprint beyond the
@@ -50,10 +61,12 @@
 //! **Prefix compaction** ([`WaveController::with_compaction`]): by default
 //! the job set and prediction table grow for the lifetime of the
 //! controller — on long traces, without bound. Compaction drops fully
-//! dispatched batches at the next admission: their wait contribution is
-//! preserved as a base-wait offset ([`Evaluator::with_base_wait`]) so the
-//! surviving suffix sees identical entry waits, and the prediction table
-//! rows are dropped by memmove (no predictor recomputation). Dispatched
+//! dispatched batches at the next admission: their predicted end time is
+//! folded into the timeline origin ([`TimelineOrigin::t0`] — the scalar
+//! base-wait offset of the pre-timeline controller is its t = 0
+//! degenerate case) so the surviving suffix sees identical entry waits,
+//! and the prediction table rows are dropped by memmove (no predictor
+//! recomputation). Dispatched
 //! jobs then no longer contribute their (constant) e2e terms to `G`, so
 //! the replanned objective ranks suffixes slightly differently than the
 //! non-compacted controller — compaction is opt-in, and the default
@@ -61,8 +74,10 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::kv;
-use crate::coordinator::objective::{Eval, Evaluator, Job, Schedule};
+use crate::coordinator::kv::{self, KvPhaseModel};
+use crate::coordinator::objective::{
+    Eval, Evaluator, Job, Schedule, TimelineOrigin,
+};
 use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::annealing::{
@@ -133,6 +148,39 @@ pub struct Dispatch {
 }
 
 /// Online admission controller for one instance (module docs).
+///
+/// ```
+/// use slo_serve::coordinator::objective::Job;
+/// use slo_serve::coordinator::online::{ReplanStrategy, WaveController};
+/// use slo_serve::coordinator::predictor::LatencyPredictor;
+/// use slo_serve::coordinator::priority::annealing::SaParams;
+/// use slo_serve::coordinator::request::Slo;
+///
+/// let predictor = LatencyPredictor::paper_table2();
+/// let params = SaParams {
+///     max_batch: 2,
+///     t0: 50.0,
+///     iters_per_temp: 5,
+///     ..Default::default()
+/// };
+/// let mut ctl = WaveController::new(&predictor, params, ReplanStrategy::Warm);
+/// let jobs: Vec<Job> = (0..4)
+///     .map(|i| Job {
+///         req_idx: i,
+///         input_len: 100 + 10 * i,
+///         output_len: 10,
+///         slo: Slo::E2e { e2e_ms: 60_000.0 },
+///     })
+///     .collect();
+/// // admit with per-job arrival times: the replanned objective evaluates
+/// // on the arrival-aware timeline (use `admit` for the t = 0 timeline)
+/// ctl.admit_at(&jobs, &[0.0, 0.0, 40.0, 90.0])?;
+/// assert_eq!(ctl.plan().len(), 4);
+/// let first = ctl.dispatch_next().expect("planned work to dispatch");
+/// assert!(!first.jobs.is_empty());
+/// assert_eq!(ctl.frozen_batches(), 1); // dispatched prefix is frozen
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct WaveController<'a> {
     predictor: &'a LatencyPredictor,
     params: SaParams,
@@ -140,7 +188,8 @@ pub struct WaveController<'a> {
     /// All admitted, still-tracked jobs in admission order (indices are
     /// plan order ids; compaction drops dispatched ones).
     jobs: Vec<Job>,
-    /// Grown in place on every admission — never rebuilt.
+    /// Grown in place on every admission — never rebuilt. Carries the
+    /// per-job arrival column the timeline evaluation reads.
     table: PredTable,
     plan: Schedule,
     eval: Eval,
@@ -149,8 +198,10 @@ pub struct WaveController<'a> {
     /// Compact dispatched batches out of the wave at each admission
     /// (opt-in: changes the replanned objective — module docs).
     compact: bool,
-    /// Wait the compacted-away prefix imposes on the surviving suffix.
-    base_wait_ms: f64,
+    /// Timeline origin: when the engine is free for the first still-live
+    /// batch ([`TimelineOrigin::t0`]). 0.0 until compaction folds a
+    /// dispatched prefix's predicted end into it.
+    t0_ms: f64,
     /// Jobs dropped by compaction so far.
     retired_jobs: usize,
     stats: OnlineStats,
@@ -175,7 +226,7 @@ impl<'a> WaveController<'a> {
             eval: Eval::ZERO,
             frozen_batches: 0,
             compact: false,
-            base_wait_ms: 0.0,
+            t0_ms: 0.0,
             retired_jobs: 0,
             stats: OnlineStats::default(),
             last_search: None,
@@ -185,7 +236,7 @@ impl<'a> WaveController<'a> {
     /// Enable dispatched-prefix compaction (ROADMAP follow-up: the job set
     /// and prediction table otherwise grow unboundedly on long traces).
     /// At each admission, fully dispatched batches are dropped from the
-    /// wave: their batch maxima are folded into a base-wait offset so the
+    /// wave: their predicted end is folded into the timeline origin so the
     /// suffix's predicted entry waits are unchanged, and their table rows
     /// are released. See the module docs for the objective-semantics
     /// caveat.
@@ -230,10 +281,23 @@ impl<'a> WaveController<'a> {
         self.frozen_batches == self.plan.batches.len()
     }
 
-    /// Wait the compacted-away prefix imposes on the live suffix (0 until
-    /// compaction is enabled and something has been compacted).
+    /// Timeline origin of the live wave: predicted end of the
+    /// compacted-away prefix (0 until compaction is enabled and something
+    /// has been compacted).
+    pub fn t0_ms(&self) -> f64 {
+        self.t0_ms
+    }
+
+    /// Alias of [`WaveController::t0_ms`] kept for the pre-timeline name.
     pub fn base_wait_ms(&self) -> f64 {
-        self.base_wait_ms
+        self.t0_ms
+    }
+
+    /// Per-job arrival times of the tracked wave (index = plan job id) —
+    /// the table's arrival column; zeros unless admitted via
+    /// [`WaveController::admit_at`].
+    pub fn arrivals(&self) -> &[f64] {
+        self.table.arrivals_all()
     }
 
     /// Jobs dropped from the wave by compaction so far.
@@ -241,14 +305,38 @@ impl<'a> WaveController<'a> {
         self.retired_jobs
     }
 
-    /// KV blocks of the planned-but-undispatched suffix (Eq. 20
-    /// footprints from the prediction table).
+    /// KV-block demand of the planned-but-undispatched suffix (Eq. 20):
+    /// the footprint sum under [`KvPhaseModel::Reserve`], the sum of
+    /// per-batch occupancy peaks under [`KvPhaseModel::Phased`] (each
+    /// batch's peak bounds what it can pin at once, so a phased backlog
+    /// saturates later — more admission on the same pool).
     pub fn undispatched_blocks(&self) -> u64 {
         let frozen_pos = self.frozen_positions();
-        self.plan.order[frozen_pos..]
-            .iter()
-            .map(|&j| self.table.kv_blocks(j))
-            .sum()
+        match self.params.kv.phase {
+            KvPhaseModel::Reserve => self.plan.order[frozen_pos..]
+                .iter()
+                .map(|&j| self.table.kv_blocks(j))
+                .sum(),
+            KvPhaseModel::Phased => {
+                let mut total = 0u64;
+                let mut members: Vec<(usize, usize)> = Vec::new();
+                for (k, start, size) in self.plan.batch_spans() {
+                    if k < self.frozen_batches {
+                        continue;
+                    }
+                    members.clear();
+                    members.extend(
+                        self.plan.order[start..start + size].iter().map(|&j| {
+                            let job = &self.jobs[j];
+                            (job.input_len, job.output_len)
+                        }),
+                    );
+                    total +=
+                        kv::phased_peak_blocks(&members, self.params.kv.block_tokens);
+                }
+                total
+            }
+        }
     }
 
     /// True when a binding KV pool is fully covered by undispatched work:
@@ -326,28 +414,36 @@ impl<'a> WaveController<'a> {
     }
 
     /// Drop fully dispatched batches from the wave (see
-    /// [`WaveController::with_compaction`]): fold their batch maxima into
-    /// the base wait, drop their jobs and prediction-table rows, and remap
-    /// the surviving plan onto the compacted indices.
+    /// [`WaveController::with_compaction`]): fold their predicted end
+    /// time into the timeline origin `t0`, drop their jobs and
+    /// prediction-table rows, and remap the surviving plan onto the
+    /// compacted indices.
     fn compact_dispatched(&mut self) {
         if self.frozen_batches == 0 {
             return;
         }
         let frozen_pos = self.frozen_positions();
-        // Accumulate the dispatched batches' maxima exactly as the
-        // sequential evaluation would have (same order, same values), so
-        // the suffix's predicted entry waits are unchanged.
+        // Replay the dispatched batches on the timeline exactly as the
+        // sequential evaluation would have (same order, same values —
+        // including each batch's arrival max), so the suffix's predicted
+        // entry waits are unchanged. With the arrival column at zero this
+        // is the plain batch-maxima sum of the pre-timeline controller.
         let mut start = 0usize;
         for k in 0..self.frozen_batches {
             let bsize = self.plan.batches[k];
+            let mut barr = f64::NEG_INFINITY;
             let mut bmax = 0.0f64;
             for &j in &self.plan.order[start..start + bsize] {
+                let a = self.table.arrival_ms(j);
+                if a > barr {
+                    barr = a;
+                }
                 let e = self.table.get(j, bsize).exec_ms;
                 if e > bmax {
                     bmax = e;
                 }
             }
-            self.base_wait_ms += bmax;
+            self.t0_ms = TimelineOrigin::batch_start(self.t0_ms, barr) + bmax;
             start += bsize;
         }
         let n = self.jobs.len();
@@ -390,6 +486,36 @@ impl<'a> WaveController<'a> {
     /// pool can never execute on this instance; admission fails with a
     /// descriptive error rather than planning a fiction.
     pub fn admit(&mut self, new_jobs: &[Job]) -> Result<SearchStats> {
+        self.admit_impl(new_jobs, None)
+    }
+
+    /// [`WaveController::admit`] with per-job arrival times (ms): the
+    /// arrival column feeds the timeline evaluation, so idle gaps before
+    /// late arrivals and per-job arrival offsets shape every replanned
+    /// entry wait (module docs). `arrivals.len()` must equal
+    /// `new_jobs.len()`. With every arrival at 0.0 this is bit-identical
+    /// to [`WaveController::admit`].
+    ///
+    /// # Errors
+    /// Same oversize-job rule as [`WaveController::admit`].
+    pub fn admit_at(
+        &mut self,
+        new_jobs: &[Job],
+        arrivals: &[f64],
+    ) -> Result<SearchStats> {
+        assert_eq!(
+            new_jobs.len(),
+            arrivals.len(),
+            "one arrival time per admitted job"
+        );
+        self.admit_impl(new_jobs, Some(arrivals))
+    }
+
+    fn admit_impl(
+        &mut self,
+        new_jobs: &[Job],
+        arrivals: Option<&[f64]>,
+    ) -> Result<SearchStats> {
         assert!(!new_jobs.is_empty(), "admit called with no jobs");
         let kv = self.params.kv;
         if kv.binding() {
@@ -411,13 +537,17 @@ impl<'a> WaveController<'a> {
         }
         let old_n = self.jobs.len();
         self.jobs.extend_from_slice(new_jobs);
-        self.table.extend(new_jobs, self.predictor);
+        match arrivals {
+            Some(a) => self.table.extend_at(new_jobs, self.predictor, a),
+            None => self.table.extend(new_jobs, self.predictor),
+        }
 
         let params = SaParams { seed: self.replan_seed(), ..self.params };
-        let ev = Evaluator::with_base_wait(
+        let ev = Evaluator::with_arrivals(
             &self.jobs,
             self.predictor,
-            self.base_wait_ms,
+            self.t0_ms,
+            self.table.arrivals_all(),
         );
         let first_admission = old_n == 0 && self.frozen_batches == 0;
         let warm = if first_admission {
@@ -473,6 +603,19 @@ impl<'a> WaveController<'a> {
     }
 }
 
+/// Predicted timeline of one request under the controller's final plan
+/// (the objective-fidelity diagnostic: compare against the measured
+/// [`Completion`] with the same id).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictedJob {
+    pub id: u64,
+    /// Predicted waiting time (ms) — batch start minus arrival on the
+    /// evaluation timeline.
+    pub wait_ms: f64,
+    /// Predicted e2e latency (ms) — wait plus predicted execution.
+    pub e2e_ms: f64,
+}
+
 /// Outcome of one online serving run.
 #[derive(Debug, Clone)]
 pub struct OnlineOutcome {
@@ -481,6 +624,12 @@ pub struct OnlineOutcome {
     pub stats: OnlineStats,
     /// Predicted evaluation of the final plan (diagnostics).
     pub final_eval: Eval,
+    /// Per-request predicted waits/e2e under the final plan, sorted by
+    /// request id. Covers every request when compaction is off; with
+    /// compaction on, only the requests still tracked at the end of the
+    /// trace. Join with `completions` to measure predicted-vs-executed
+    /// error (`examples/online_serving.rs` reports it).
+    pub predicted: Vec<PredictedJob>,
     /// Base SA seed of the run — with the trace seed, everything needed to
     /// reproduce the run exactly.
     pub seed: u64,
@@ -495,6 +644,12 @@ pub struct OnlineOpts {
     /// long traces, at the cost of the dispatched jobs' constant terms
     /// dropping out of the replanned objective.
     pub compact_dispatched: bool,
+    /// Admit with real arrival times ([`WaveController::admit_at`]): the
+    /// predicted objective evaluates on the arrival-aware timeline
+    /// instead of the closed-wave t = 0 timeline. Off by default — the
+    /// historical behaviour, bit for bit (and identical to on when every
+    /// request arrives at t = 0).
+    pub arrival_aware: bool,
 }
 
 /// Event loop: drive one engine from a timestamped arrival stream (module
@@ -577,6 +732,12 @@ pub fn run_online_opts(
                 // Admission would overcommit the planned backlog: defer to
                 // the next replan (after dispatching frees the pool).
                 deferred = fresh;
+            } else if opts.arrival_aware {
+                let arrs: Vec<f64> = fresh
+                    .iter()
+                    .map(|job| requests[job.req_idx].arrival_ms)
+                    .collect();
+                ctl.admit_at(&fresh, &arrs)?;
             } else {
                 ctl.admit(&fresh)?;
             }
@@ -623,10 +784,32 @@ pub fn run_online_opts(
     }
 
     completions.sort_by_key(|c| c.id);
+    // Final-plan predicted timelines (objective-fidelity diagnostic):
+    // evaluate the fully dispatched plan once on the controller's
+    // timeline and key each job back to its request id.
+    let mut predicted: Vec<PredictedJob> = {
+        let ev = Evaluator::with_arrivals(
+            ctl.jobs(),
+            predictor,
+            ctl.t0_ms(),
+            ctl.arrivals(),
+        );
+        let (_, timelines) = ev.eval_detailed(ctl.plan());
+        timelines
+            .iter()
+            .map(|t| PredictedJob {
+                id: requests[ctl.jobs()[t.job].req_idx].id,
+                wait_ms: t.wait_ms,
+                e2e_ms: t.wait_ms + t.exec_ms,
+            })
+            .collect()
+    };
+    predicted.sort_by_key(|p| p.id);
     Ok(OnlineOutcome {
         completions,
         stats: *ctl.stats(),
         final_eval: ctl.eval(),
+        predicted,
         seed: params.seed,
     })
 }
@@ -1037,6 +1220,108 @@ mod tests {
             ctl.base_wait_ms()
         );
         ctl.plan().validate(3).unwrap();
+    }
+
+    #[test]
+    fn admit_at_zero_arrivals_is_bit_identical_to_admit() {
+        let pred = predictor();
+        let mut rng = Rng::new(31);
+        let jobs: Vec<Job> = (0..12).map(|i| job(i, &mut rng)).collect();
+        let p = params(3, 8);
+        let mut legacy = WaveController::new(&pred, p, ReplanStrategy::Warm);
+        let mut timeline = WaveController::new(&pred, p, ReplanStrategy::Warm);
+        legacy.admit(&jobs[..7]).unwrap();
+        timeline.admit_at(&jobs[..7], &[0.0; 7]).unwrap();
+        assert_eq!(legacy.plan(), timeline.plan());
+        assert_eq!(legacy.eval().g.to_bits(), timeline.eval().g.to_bits());
+        legacy.dispatch_next().unwrap();
+        timeline.dispatch_next().unwrap();
+        legacy.admit(&jobs[7..]).unwrap();
+        timeline.admit_at(&jobs[7..], &[0.0; 5]).unwrap();
+        assert_eq!(legacy.plan(), timeline.plan());
+        assert_eq!(
+            legacy.eval().total_e2e_ms.to_bits(),
+            timeline.eval().total_e2e_ms.to_bits()
+        );
+    }
+
+    #[test]
+    fn arrival_aware_admission_measures_waits_from_arrival() {
+        // Two jobs arriving 10 s apart: on the arrival-aware timeline the
+        // second job's predicted wait is ~0 (the engine idles until it
+        // arrives), while the t = 0 timeline charges it the full gap.
+        let pred = predictor();
+        let p = params(1, 4);
+        let jobs: Vec<Job> = (0..2)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 200,
+                output_len: 20,
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        let arrivals = [0.0, 10_000.0];
+        let mut ctl = WaveController::new(&pred, p, ReplanStrategy::Warm);
+        ctl.admit_at(&jobs, &arrivals).unwrap();
+        let ev = Evaluator::with_arrivals(
+            ctl.jobs(),
+            &pred,
+            ctl.t0_ms(),
+            ctl.arrivals(),
+        );
+        let (_, tl) = ev.eval_detailed(ctl.plan());
+        // singleton batches; find the timeline row of plan job 1
+        let late = tl.iter().find(|t| t.job == 1).unwrap();
+        assert_eq!(late.start_ms, 10_000.0, "idle gap not modeled");
+        assert_eq!(late.wait_ms, 0.0, "wait not measured from arrival");
+        // compaction folds the dispatched prefix's *timeline* end into t0
+        let mut ctl2 = WaveController::new(&pred, p, ReplanStrategy::Warm)
+            .with_compaction();
+        ctl2.admit_at(&jobs[..1], &arrivals[..1]).unwrap();
+        while ctl2.dispatch_next().is_some() {}
+        ctl2.admit_at(&jobs[1..], &arrivals[1..]).unwrap();
+        let exec0 = pred.predict(1, 200, 20).exec_ms;
+        assert!(
+            (ctl2.t0_ms() - exec0).abs() < 1e-9,
+            "t0 {} != dispatched prefix end {exec0}",
+            ctl2.t0_ms()
+        );
+    }
+
+    #[test]
+    fn phased_backlog_saturates_later_than_reserve() {
+        use crate::coordinator::kv::{KvConfig, KvPhaseModel};
+        let pred = predictor();
+        // job 0: 160 in / 4 out (11 blocks full); job 1: 160 in / 160 out
+        // (20 blocks). Loose SLOs + a 31-block pool: the sorted seed [2]
+        // meets every SLO and fits, so both controllers early-exit with
+        // the same single-batch plan — deterministically.
+        let mk = |i: usize, out: usize| Job {
+            req_idx: i,
+            input_len: 160,
+            output_len: out,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        };
+        let jobs = vec![mk(0, 4), mk(1, 160)];
+        let kv = KvConfig::hard(31);
+        let p_res = SaParams { kv, ..params(2, 3) };
+        let p_pha = SaParams {
+            kv: kv.with_phase(KvPhaseModel::Phased),
+            ..params(2, 3)
+        };
+        let mut res = WaveController::new(&pred, p_res, ReplanStrategy::Warm);
+        let mut pha = WaveController::new(&pred, p_pha, ReplanStrategy::Warm);
+        res.admit(&jobs).unwrap();
+        pha.admit(&jobs).unwrap();
+        assert_eq!(res.plan().batches, vec![2]);
+        assert_eq!(pha.plan().batches, vec![2]);
+        // reserve charges the batch its footprint sum: 11 + 20 = 31 >= 31
+        assert_eq!(res.undispatched_blocks(), 31);
+        assert!(res.saturated());
+        // phased charges the true occupancy peak: both alive at g = 4 is
+        // 2 x 11 = 22 blocks — the backlog does not saturate the pool
+        assert_eq!(pha.undispatched_blocks(), 22);
+        assert!(!pha.saturated());
     }
 
     #[test]

@@ -20,15 +20,24 @@
 //! blocks — see [`KvConfig::job_blocks`]). Planned batches are static
 //! (Eq. 10): the engine reserves a job's full input + output KV up front,
 //! so the footprint is one number per job, independent of batch size, and
-//! a batch's occupancy is the plain sum over its members — what the
-//! incremental evaluator maintains per batch.
+//! a batch's reserve-model occupancy is the plain sum over its members —
+//! what the incremental evaluator maintains per batch (the phase-aware
+//! model recomputes batch peaks from the raw job lengths instead; see
+//! [`crate::coordinator::kv::KvPhaseModel`]).
+//!
+//! The table also carries each job's **arrival time** (the per-job
+//! `arrival_ms` column of the
+//! [`crate::coordinator::objective::TimelineOrigin`] timeline). Closed
+//! waves leave the column at 0.0 — bit-identical to the pre-timeline
+//! evaluation; the online controller fills it via [`PredTable::extend_at`]
+//! and the column survives [`PredTable::compact`] like every other row.
 
 use crate::coordinator::kv::KvConfig;
 use crate::coordinator::objective::Job;
 use crate::coordinator::predictor::{LatencyPredictor, PredictedLatency};
 
 /// Dense `(job, batch_size)` → predicted-latency table plus per-job
-/// KV-block footprints.
+/// KV-block footprints and arrival times.
 ///
 /// Layout: row-major by job, `max_batch` entries per job, batch sizes
 /// `1..=max_batch` (index `job * max_batch + batch - 1`).
@@ -40,6 +49,9 @@ pub struct PredTable {
     entries: Vec<PredictedLatency>,
     /// Per-job KV footprint in blocks (index = job).
     kv_blocks: Vec<u64>,
+    /// Per-job arrival time (ms) on the wave timeline (index = job);
+    /// 0.0 for closed waves.
+    arrival_ms: Vec<f64>,
 }
 
 impl PredTable {
@@ -80,6 +92,7 @@ impl PredTable {
             block_tokens: kv.block_tokens,
             entries,
             kv_blocks,
+            arrival_ms: vec![0.0; jobs.len()],
         }
     }
 
@@ -88,11 +101,39 @@ impl PredTable {
     /// recomputation of existing rows. Appended entries are laid out
     /// exactly as [`PredTable::build`] would have placed them, so a table
     /// built empty and grown job-batch-by-job-batch is bit-identical to a
-    /// table built over the full job set at once.
+    /// table built over the full job set at once. Arrival times of the new
+    /// rows are 0.0 (closed-wave timeline); use [`PredTable::extend_at`]
+    /// to record real arrivals.
     pub fn extend(&mut self, new_jobs: &[Job], predictor: &LatencyPredictor) {
+        self.extend_inner(new_jobs, predictor, None);
+    }
+
+    /// [`PredTable::extend`] with the new jobs' arrival times (ms), kept
+    /// in the per-job `arrival_ms` column the timeline evaluators read.
+    /// `arrivals.len()` must equal `new_jobs.len()`.
+    pub fn extend_at(
+        &mut self,
+        new_jobs: &[Job],
+        predictor: &LatencyPredictor,
+        arrivals: &[f64],
+    ) {
+        assert_eq!(
+            new_jobs.len(),
+            arrivals.len(),
+            "one arrival per admitted job"
+        );
+        self.extend_inner(new_jobs, predictor, Some(arrivals));
+    }
+
+    fn extend_inner(
+        &mut self,
+        new_jobs: &[Job],
+        predictor: &LatencyPredictor,
+        arrivals: Option<&[f64]>,
+    ) {
         self.entries.reserve(new_jobs.len() * self.max_batch);
         let kv = KvConfig { block_tokens: self.block_tokens, ..KvConfig::UNLIMITED };
-        for job in new_jobs {
+        for (i, job) in new_jobs.iter().enumerate() {
             for b in 1..=self.max_batch {
                 self.entries.push(predictor.predict(
                     b,
@@ -101,8 +142,19 @@ impl PredTable {
                 ));
             }
             self.kv_blocks.push(kv.job_blocks(job.input_len, job.output_len));
+            self.arrival_ms.push(arrivals.map_or(0.0, |a| a[i]));
         }
         self.n += new_jobs.len();
+    }
+
+    /// Overwrite the whole arrival column (one entry per job). Used by
+    /// the closed-wave search to mirror a timeline evaluator's arrivals
+    /// into the table it just built, so the incremental and full
+    /// evaluations stay bit-identical.
+    pub fn set_arrivals(&mut self, arrivals: &[f64]) {
+        assert_eq!(arrivals.len(), self.n, "one arrival per job");
+        self.arrival_ms.clear();
+        self.arrival_ms.extend_from_slice(arrivals);
     }
 
     /// Drop the rows of jobs whose `keep[job]` is false (dispatched-prefix
@@ -120,12 +172,14 @@ impl PredTable {
                         self.entries[dst + b] = self.entries[src + b];
                     }
                     self.kv_blocks[w] = self.kv_blocks[j];
+                    self.arrival_ms[w] = self.arrival_ms[j];
                 }
                 w += 1;
             }
         }
         self.entries.truncate(w * self.max_batch);
         self.kv_blocks.truncate(w);
+        self.arrival_ms.truncate(w);
         self.n = w;
     }
 
@@ -154,6 +208,20 @@ impl PredTable {
     #[inline]
     pub fn kv_blocks_all(&self) -> &[u64] {
         &self.kv_blocks
+    }
+
+    /// Arrival time of `job` (ms) on the wave timeline; 0.0 unless set by
+    /// [`PredTable::extend_at`] / [`PredTable::set_arrivals`].
+    #[inline]
+    pub fn arrival_ms(&self, job: usize) -> f64 {
+        self.arrival_ms[job]
+    }
+
+    /// The whole arrival column (index = job) — the timeline evaluators
+    /// borrow this slice directly.
+    #[inline]
+    pub fn arrivals_all(&self) -> &[f64] {
+        &self.arrival_ms
     }
 
     /// Block granularity the footprints were rounded at.
@@ -276,6 +344,40 @@ mod tests {
             &pred,
         );
         assert_eq!(grown.kv_blocks(2), 2);
+    }
+
+    #[test]
+    fn arrival_column_survives_extend_and_compact() {
+        let pred = LatencyPredictor::paper_table2();
+        let job = |i: usize| Job {
+            req_idx: i,
+            input_len: 50 + i,
+            output_len: 5,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        };
+        let jobs: Vec<Job> = (0..6).map(job).collect();
+        let mut table = PredTable::build(&jobs[..2], &pred, 3);
+        // closed-wave rows default to t = 0
+        assert_eq!(table.arrivals_all(), &[0.0, 0.0]);
+        table.extend_at(&jobs[2..4], &pred, &[100.0, 250.0]);
+        table.extend(&jobs[4..5], &pred); // legacy extend keeps 0.0
+        table.extend_at(&jobs[5..6], &pred, &[900.0]);
+        assert_eq!(
+            table.arrivals_all(),
+            &[0.0, 0.0, 100.0, 250.0, 0.0, 900.0]
+        );
+        assert_eq!(table.arrival_ms(3), 250.0);
+        // compaction keeps the surviving rows' arrivals aligned
+        table.compact(&[false, true, true, false, true, true]);
+        assert_eq!(table.arrivals_all(), &[0.0, 100.0, 0.0, 900.0]);
+        // entries stayed aligned with their jobs too
+        assert_eq!(
+            table.get(1, 2),
+            pred.predict(2, jobs[2].input_len, jobs[2].output_len)
+        );
+        // set_arrivals overwrites the whole column
+        table.set_arrivals(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(table.arrivals_all(), &[1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

@@ -39,10 +39,27 @@
 //! qualitative behaviour Fig. 8 reports (higher T₀ ⇒ more escapes).
 //!
 //! **KV feasibility** ([`SaParams::kv`], Eq. 20): the search carries each
-//! batch's KV-block occupancy. Hard mode vetoes overcommitting moves
-//! inside the generator and ranks candidates by (excess, G); soft mode
-//! penalizes the score by `weight · excess`. The default unlimited pool
-//! reproduces the pre-KV search bit for bit (`tests/kv_feasibility.rs`).
+//! batch's KV-block demand — footprint sums under
+//! [`crate::coordinator::kv::KvPhaseModel::Reserve`], exact phase-aware
+//! occupancy peaks under
+//! [`crate::coordinator::kv::KvPhaseModel::Phased`]. Hard mode vetoes
+//! overcommitting moves inside the generator and ranks candidates by
+//! (excess, G); soft mode penalizes the score by `weight · excess`. The
+//! default unlimited pool reproduces the pre-KV search bit for bit
+//! (`tests/kv_feasibility.rs`). Under `Phased`, the generator veto
+//! re-prices candidate batches at their exact occupancy peaks
+//! ([`crate::coordinator::priority::moves::PhasedVeto`]), so hard-mode
+//! searches can legally form batches the reserve model would refuse; the
+//! `hard_repack` fallback still packs by footprint sums, which bound the
+//! phased peak from above, so its feasibility guarantee carries over
+//! unchanged.
+//!
+//! **Timeline** ([`crate::coordinator::objective::TimelineOrigin`]): the
+//! evaluators place batches on an arrival-aware timeline; the search is
+//! agnostic to it beyond evaluating candidates on whatever timeline the
+//! caller's [`Evaluator`] carries. [`priority_mapping`] mirrors the
+//! evaluator's arrival column into the [`PredTable`] it builds so the
+//! incremental path is bit-identical to the full one, timelines included.
 
 use crate::coordinator::kv::{self, KvConfig, KvMode};
 use crate::coordinator::objective::{
@@ -228,12 +245,23 @@ fn anneal(
 ) -> SaResult {
     let kv = params.kv;
     // Layer 2: incremental evaluator owns the walking candidate state.
+    // The table's arrival column must mirror the evaluator's timeline —
+    // the two are the same storage on the online path, and
+    // `priority_mapping` syncs them on the closed path.
+    debug_assert!(
+        if ev.arrivals().is_empty() {
+            table.arrivals_all().iter().all(|&a| a == 0.0)
+        } else {
+            ev.arrivals() == table.arrivals_all()
+        },
+        "prediction-table arrival column diverges from the evaluator"
+    );
     let mut inc = IncrementalEval::new_kv(
         ev.jobs(),
         table,
         seed_schedule,
         kv,
-        ev.base_wait_ms(),
+        ev.t0_ms(),
     );
     debug_assert!(
         eval_bits_equal(&inc.eval(), &f_seed),
@@ -373,8 +401,14 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
     }
 
     // Layer 1: precompute every (job, batch_size) prediction — and each
-    // job's KV-block footprint — for the wave.
-    let table = PredTable::build_kv(ev.jobs(), ev.predictor(), max_batch, &params.kv);
+    // job's KV-block footprint — for the wave, mirroring the evaluator's
+    // timeline arrivals into the table so the incremental path sees the
+    // exact same per-job arrival column (zeros for closed waves).
+    let mut table =
+        PredTable::build_kv(ev.jobs(), ev.predictor(), max_batch, &params.kv);
+    if !ev.arrivals().is_empty() {
+        table.set_arrivals(ev.arrivals());
+    }
     anneal(
         ev,
         &table,
@@ -548,11 +582,19 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
             candidate.batches.clear();
             candidate.batches.extend_from_slice(&current.batches);
             let moved = if kv.vetoes_moves() {
-                batch_kv_blocks(&candidate, &job_blocks, &mut bb);
+                batch_kv_blocks(&candidate, ev.jobs(), &job_blocks, &kv, &mut bb);
                 let veto = moves::KvVeto {
                     job_blocks: &job_blocks,
                     batch_blocks: &bb,
                     pool_blocks: kv.pool_blocks,
+                    phased: if kv.phased() {
+                        Some(moves::PhasedVeto {
+                            jobs: ev.jobs(),
+                            block_tokens: kv.block_tokens,
+                        })
+                    } else {
+                        None
+                    },
                 };
                 moves::random_move_desc_kv(
                     &mut candidate,
@@ -929,12 +971,14 @@ mod tests {
 
     #[test]
     fn fast_and_full_paths_agree_under_finite_pools() {
-        use crate::coordinator::kv::KvConfig;
+        use crate::coordinator::kv::{KvConfig, KvPhaseModel};
         let pred = LatencyPredictor::paper_table2();
         for (seed, kv) in [
             (0u64, KvConfig::hard(18)),
             (1, KvConfig::soft(18, 0.5)),
             (2, KvConfig::hard(6)),
+            (3, KvConfig::hard(18).with_phase(KvPhaseModel::Phased)),
+            (4, KvConfig::soft(12, 0.5).with_phase(KvPhaseModel::Phased)),
         ] {
             let mut rng = Rng::new(seed ^ 0x3A3A);
             let jobs: Vec<Job> = (0..13)
@@ -960,6 +1004,68 @@ mod tests {
             assert_eq!(fast.eval, full.eval, "seed {seed}");
             assert_eq!(fast.stats.evals, full.stats.evals, "seed {seed}");
             assert_eq!(fast.stats.accepted, full.stats.accepted, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn phased_hard_mode_returns_feasible_plans() {
+        use crate::coordinator::kv::{KvConfig, KvPhaseModel};
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x50A5);
+        for seed in 0..4u64 {
+            // mixed output lengths: short jobs free their blocks early,
+            // so the phased peak sits well below the reserve sum.
+            let jobs: Vec<Job> = (0..14)
+                .map(|i| Job {
+                    req_idx: 0,
+                    input_len: 1 + rng.below(120),
+                    output_len: 1 + 60 * (i % 3),
+                    slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+                })
+                .collect();
+            let reserve = KvConfig::hard(20);
+            let phased = reserve.with_phase(KvPhaseModel::Phased);
+            let ev = Evaluator::new(&jobs, &pred);
+            let res_r =
+                priority_mapping(&ev, &SaParams { kv: reserve, ..params(6, seed) });
+            let res_p =
+                priority_mapping(&ev, &SaParams { kv: phased, ..params(6, seed) });
+            // both feasible under their own demand model …
+            assert_eq!(ev.kv_excess(&res_r.schedule, &reserve), 0, "seed {seed}");
+            assert_eq!(ev.kv_excess(&res_p.schedule, &phased), 0, "seed {seed}");
+            // … and every reserve-feasible plan is phased-feasible too
+            assert_eq!(ev.kv_excess(&res_r.schedule, &phased), 0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn timeline_evaluator_fast_equals_full() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x71AE);
+        let jobs: Vec<Job> = (0..13)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(1200),
+                output_len: 1 + rng.below(300),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+            })
+            .collect();
+        let arrivals: Vec<f64> =
+            (0..13).map(|i| 150.0 * i as f64).collect();
+        let ev = Evaluator::with_arrivals(&jobs, &pred, 40.0, &arrivals);
+        for seed in 0..3u64 {
+            let p = SaParams {
+                max_batch: 4,
+                seed,
+                t0: 100.0,
+                iters_per_temp: 25,
+                ..Default::default()
+            };
+            let fast = priority_mapping(&ev, &p);
+            let full = priority_mapping_full(&ev, &p);
+            assert_eq!(fast.schedule, full.schedule, "seed {seed}");
+            assert_eq!(fast.eval, full.eval, "seed {seed}");
+            assert_eq!(fast.stats.evals, full.stats.evals, "seed {seed}");
         }
     }
 

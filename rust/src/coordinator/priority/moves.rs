@@ -38,57 +38,153 @@
 //! variant taking an optional [`KvVeto`] — a view of the per-job block
 //! footprints and current per-batch occupancy maintained by the
 //! incremental evaluator. With a veto present (hard KV mode), a move that
-//! would push any batch's occupancy over the pool is refused *after* its
+//! would push any batch's demand over the pool is refused *after* its
 //! RNG draws but *before* any mutation, so the schedule is untouched and
-//! [`random_move_desc_kv`] falls through to the next move family. Because
-//! the source batch only ever shrinks, a vetoed generator can never
-//! increase any batch's excess — a feasible schedule stays feasible for
-//! the whole search. With `kv == None` the `*_kv` variants draw the exact
-//! RNG stream of the plain/masked ones.
+//! [`random_move_desc_kv`] falls through to the next move family. Demand
+//! is priced per the active model — footprint sums under reserve
+//! accounting, exact occupancy peaks when a [`PhasedVeto`] is present —
+//! and in both cases the source batch's demand only ever shrinks, so a
+//! vetoed generator can never increase any batch's excess: a feasible
+//! schedule stays feasible for the whole search. With `kv == None` the
+//! `*_kv` variants draw the exact RNG stream of the plain/masked ones.
 
-use crate::coordinator::objective::Schedule;
+use crate::coordinator::kv;
+use crate::coordinator::objective::{Job, Schedule};
 use crate::util::rng::Rng;
+
+/// Phase-aware demand inputs for the veto
+/// ([`crate::coordinator::kv::KvPhaseModel::Phased`]): raw job lengths
+/// plus the block granularity, enough to recompute a candidate batch's
+/// exact occupancy peak without allocating.
+#[derive(Debug, Clone, Copy)]
+pub struct PhasedVeto<'a> {
+    /// The wave's jobs (index = job id) — inputs/predicted outputs feed
+    /// the peak computation.
+    pub jobs: &'a [Job],
+    /// Tokens per KV block.
+    pub block_tokens: usize,
+}
+
+impl PhasedVeto<'_> {
+    #[inline]
+    fn lens(&self, j: usize) -> (usize, usize) {
+        let job = &self.jobs[j];
+        (job.input_len, job.output_len)
+    }
+
+    /// Peak of `members ∪ {extra}` — the one shared peak implementation
+    /// ([`kv::phased_peak_over`]) over a virtual member set, so the veto
+    /// can never diverge from the evaluators' demand accounting.
+    fn peak_with(&self, members: &[usize], extra: usize) -> u64 {
+        kv::phased_peak_over(
+            members.len() + 1,
+            |i| {
+                if i < members.len() {
+                    self.lens(members[i])
+                } else {
+                    self.lens(extra)
+                }
+            },
+            self.block_tokens,
+        )
+    }
+
+    /// Peak of `members` with member `from` replaced by `to`.
+    fn peak_swapped(&self, members: &[usize], from: usize, to: usize) -> u64 {
+        kv::phased_peak_over(
+            members.len(),
+            |i| {
+                let j = members[i];
+                self.lens(if j == from { to } else { j })
+            },
+            self.block_tokens,
+        )
+    }
+}
 
 /// Read-only KV state the hard-feasibility veto consults (borrowed from
 /// [`crate::coordinator::objective::IncrementalEval`]'s per-batch
 /// aggregates and the
 /// [`crate::coordinator::pred_table::PredTable`] footprints).
+///
+/// Under reserve demand the sum-based checks are exact. With `phased`
+/// present, candidate batches are re-priced at their exact phase-aware
+/// occupancy peak instead — also exact, so in both models a vetoed
+/// generator never materializes an overcommitting candidate and a
+/// feasible schedule stays feasible for the whole search.
 #[derive(Debug, Clone, Copy)]
 pub struct KvVeto<'a> {
     /// Per-job KV footprint in blocks (index = job id).
     pub job_blocks: &'a [u64],
-    /// Current per-batch occupancy in blocks (index = batch).
+    /// Current per-batch demand in blocks (index = batch).
     pub batch_blocks: &'a [u64],
     /// Pool capacity in blocks.
     pub pool_blocks: u64,
+    /// Phase-aware demand inputs; `None` under reserve accounting.
+    pub phased: Option<PhasedVeto<'a>>,
 }
 
 impl KvVeto<'_> {
-    /// Would moving `job` into existing batch `target` overcommit it?
+    /// Would moving `job` into the existing batch `target` (whose member
+    /// jobs are `target_members`) overcommit it?
     #[inline]
-    fn into_batch_ok(&self, target: usize, job: usize) -> bool {
-        self.batch_blocks[target] + self.job_blocks[job] <= self.pool_blocks
+    fn into_batch_ok(
+        &self,
+        target: usize,
+        target_members: &[usize],
+        job: usize,
+    ) -> bool {
+        match &self.phased {
+            None => {
+                self.batch_blocks[target] + self.job_blocks[job]
+                    <= self.pool_blocks
+            }
+            Some(p) => p.peak_with(target_members, job) <= self.pool_blocks,
+        }
     }
 
-    /// Can `job` open a fresh singleton batch?
+    /// Can `job` open a fresh singleton batch? (A singleton's phased peak
+    /// equals its full footprint, so one rule serves both models.)
     #[inline]
     fn alone_ok(&self, job: usize) -> bool {
         self.job_blocks[job] <= self.pool_blocks
     }
 
-    /// Would exchanging `job_a` (in batch `ba`) with `job_b` (in batch
-    /// `bb`) overcommit either batch?
+    /// Would exchanging `job_a` (in batch `ba`, members `ma`) with
+    /// `job_b` (in batch `bb`, members `mb`) overcommit either batch?
     #[inline]
-    fn swap_ok(&self, ba: usize, job_a: usize, bb: usize, job_b: usize) -> bool {
+    fn swap_ok(
+        &self,
+        ba: usize,
+        ma: &[usize],
+        job_a: usize,
+        bb: usize,
+        mb: &[usize],
+        job_b: usize,
+    ) -> bool {
         if ba == bb {
             return true; // intra-batch swap never changes occupancy
         }
-        let a = self.batch_blocks[ba] - self.job_blocks[job_a]
-            + self.job_blocks[job_b];
-        let b = self.batch_blocks[bb] - self.job_blocks[job_b]
-            + self.job_blocks[job_a];
-        a <= self.pool_blocks && b <= self.pool_blocks
+        match &self.phased {
+            None => {
+                let a = self.batch_blocks[ba] - self.job_blocks[job_a]
+                    + self.job_blocks[job_b];
+                let b = self.batch_blocks[bb] - self.job_blocks[job_b]
+                    + self.job_blocks[job_a];
+                a <= self.pool_blocks && b <= self.pool_blocks
+            }
+            Some(p) => {
+                p.peak_swapped(ma, job_a, job_b) <= self.pool_blocks
+                    && p.peak_swapped(mb, job_b, job_a) <= self.pool_blocks
+            }
+        }
     }
+}
+
+/// Start offset of batch `k` within the order (Σ earlier batch sizes).
+#[inline]
+fn span_start(batches: &[usize], k: usize) -> usize {
+    batches[..k].iter().sum()
 }
 
 /// How to revert an in-place `order` edit (the `order` length never
@@ -214,7 +310,8 @@ pub fn squeeze_prev_desc_kv(
     // pick a random member of batch k and move it to the end of batch k-1
     let pick = start_k + rng.below(s.batches[k]);
     if let Some(v) = kv {
-        if !v.into_batch_ok(k - 1, s.order[pick]) {
+        let target_members = &s.order[start_k - s.batches[k - 1]..start_k];
+        if !v.into_batch_ok(k - 1, target_members, s.order[pick]) {
             return None; // target batch would overcommit the KV pool
         }
     }
@@ -296,7 +393,10 @@ pub fn delay_next_desc_kv(
     let pick = start_k + rng.below(s.batches[k]);
     if let Some(v) = kv {
         let feasible = if k + 1 < m {
-            v.into_batch_ok(k + 1, s.order[pick])
+            let next_start = start_k + s.batches[k];
+            let target_members =
+                &s.order[next_start..next_start + s.batches[k + 1]];
+            v.into_batch_ok(k + 1, target_members, s.order[pick])
         } else {
             v.alone_ok(s.order[pick])
         };
@@ -381,7 +481,20 @@ pub fn rand_swap_desc_kv(
     let b_lo = batch_of(&s.batches, lo_pos);
     let b_hi = batch_of(&s.batches, hi_pos);
     if let Some(v) = kv {
-        if !v.swap_ok(b_lo, s.order[lo_pos], b_hi, s.order[hi_pos]) {
+        // member spans are only needed by the phased arm; the O(m) span
+        // sums are skipped entirely under reserve accounting.
+        let (ma, mb): (&[usize], &[usize]) =
+            if v.phased.is_some() && b_lo != b_hi {
+                let sa = span_start(&s.batches, b_lo);
+                let sb = span_start(&s.batches, b_hi);
+                (
+                    &s.order[sa..sa + s.batches[b_lo]],
+                    &s.order[sb..sb + s.batches[b_hi]],
+                )
+            } else {
+                (&[], &[])
+            };
+        if !v.swap_ok(b_lo, ma, s.order[lo_pos], b_hi, mb, s.order[hi_pos]) {
             return None; // exchange would overcommit a batch's KV pool
         }
     }
@@ -735,6 +848,7 @@ mod tests {
                     job_blocks: &job_blocks,
                     batch_blocks: &bb,
                     pool_blocks: pool,
+                    phased: None,
                 };
                 random_move_desc_kv(&mut s, max_batch, 0, Some(&veto), rng);
                 s.validate(max_batch)
@@ -762,6 +876,7 @@ mod tests {
                 job_blocks: &job_blocks,
                 batch_blocks: &bb,
                 pool_blocks: 4,
+                phased: None,
             };
             if let Some(_mv) =
                 random_move_desc_kv(&mut s, 2, 0, Some(&veto), &mut rng)
@@ -770,6 +885,67 @@ mod tests {
                 assert_eq!(s.batches, vec![1, 1], "{s:?}");
             }
         }
+    }
+
+    #[test]
+    fn phased_veto_admits_what_reserve_refuses_and_never_overcommits() {
+        use crate::coordinator::request::Slo;
+        // job 0: 160 in / 4 out (11 blocks full); job 1: 160 in / 160 out
+        // (20 blocks full). Reserve sum 31; phased peak 22 (job 0 frees
+        // its blocks after 4 tokens). Pool 22: merging the two singleton
+        // batches must be vetoed under reserve and allowed under phased.
+        let jobs = vec![
+            Job {
+                req_idx: 0,
+                input_len: 160,
+                output_len: 4,
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            },
+            Job {
+                req_idx: 1,
+                input_len: 160,
+                output_len: 160,
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            },
+        ];
+        let job_blocks = vec![11u64, 20];
+        let phased = PhasedVeto { jobs: &jobs, block_tokens: 16 };
+        assert_eq!(phased.peak_with(&[0], 1), 22);
+        assert_eq!(phased.peak_with(&[1], 0), 22);
+        let mut saw_merge = false;
+        let mut rng = Rng::new(9);
+        for _ in 0..60 {
+            let mut s = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+            let bb = batch_blocks_of(&s, &job_blocks);
+            // reserve veto refuses the merge outright
+            let reserve = KvVeto {
+                job_blocks: &job_blocks,
+                batch_blocks: &bb,
+                pool_blocks: 22,
+                phased: None,
+            };
+            if random_move_desc_kv(&mut s, 2, 0, Some(&reserve), &mut rng)
+                .is_some()
+            {
+                assert_eq!(s.batches, vec![1, 1], "reserve veto leaked: {s:?}");
+            }
+            // phased veto prices the merged batch at its true 22-block peak
+            let mut s = Schedule { order: vec![0, 1], batches: vec![1, 1] };
+            let bb = vec![11u64, 20]; // singleton peaks == footprints
+            let veto = KvVeto {
+                job_blocks: &job_blocks,
+                batch_blocks: &bb,
+                pool_blocks: 22,
+                phased: Some(phased),
+            };
+            if random_move_desc_kv(&mut s, 2, 0, Some(&veto), &mut rng)
+                .is_some()
+                && s.batches == vec![2]
+            {
+                saw_merge = true;
+            }
+        }
+        assert!(saw_merge, "phased veto never allowed the legal merge");
     }
 
     #[test]

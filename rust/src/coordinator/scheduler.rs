@@ -183,8 +183,14 @@ pub fn assign_instances(
 /// instance's search additionally runs against *its own* pool — the
 /// smaller of the instance's [`InstanceInfo::pool_blocks`] and any
 /// engine-level cap in `sa.kv.pool_blocks` — replacing the old standalone
-/// Eq. 20 check with end-to-end feasibility. With the default unlimited
-/// config the searches are bit-identical to the pre-KV scheduler.
+/// Eq. 20 check with end-to-end feasibility. `sa.kv.phase` flows into the
+/// per-instance searches unchanged, so a
+/// [`crate::coordinator::kv::KvPhaseModel::Phased`] config prices each
+/// planned batch at its occupancy peak; *assignment* itself keeps the
+/// conservative full-footprint accounting (requests from one wave may
+/// coexist across batches, and reserve sums bound every phased peak).
+/// With the default unlimited config the searches are bit-identical to
+/// the pre-KV scheduler.
 ///
 /// # Errors
 /// Fails when a request's KV footprint exceeds every instance's pool

@@ -18,6 +18,7 @@
 use anyhow::Result;
 
 use crate::config::profiles::HardwareProfile;
+use crate::coordinator::kv::{phased_peak_blocks, KvPhaseModel};
 use crate::engine::kv_cache::{BlockAllocator, KvCacheConfig};
 use crate::engine::{validate_batch, Engine, EngineRequest, ItemResult};
 use crate::util::rng::Rng;
@@ -32,6 +33,12 @@ pub struct SimEngine {
     /// run's timing can be reproduced exactly (online/bench provenance).
     seed: u64,
     kv: BlockAllocator,
+    /// Planned-batch KV accounting mode: `Reserve` (default) allocates
+    /// every member's full footprint up front — the legacy behaviour bit
+    /// for bit; `Phased` allocates prompt KV at prefill, grows one block
+    /// boundary at a time during decode, and frees each member the step
+    /// it completes, admitting any batch whose *occupancy peak* fits.
+    kv_phase: KvPhaseModel,
     /// Batches executed (diagnostics).
     pub batches_run: usize,
     /// Decode iterations executed (diagnostics).
@@ -55,10 +62,24 @@ impl SimEngine {
             rng: Rng::new(seed ^ 0x51_E2_61_4E),
             seed,
             kv: BlockAllocator::new(kv_cfg),
+            kv_phase: KvPhaseModel::Reserve,
             batches_run: 0,
             decode_steps: 0,
             peak_used_blocks: 0,
         }
+    }
+
+    /// This engine with phase-aware planned-batch KV accounting (see the
+    /// `kv_phase` field docs). Timing is unaffected — only admission and
+    /// the occupancy profile change.
+    pub fn with_kv_phase(mut self, phase: KvPhaseModel) -> Self {
+        self.kv_phase = phase;
+        self
+    }
+
+    /// The planned-batch KV accounting mode.
+    pub fn kv_phase(&self) -> KvPhaseModel {
+        self.kv_phase
     }
 
     pub fn profile(&self) -> &HardwareProfile {
@@ -253,28 +274,48 @@ impl Engine for SimEngine {
     fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
         validate_batch(self, batch)?;
         let b = batch.len();
+        let phased = matches!(self.kv_phase, KvPhaseModel::Phased);
         // KV admission for the whole batch, checked up front: a planned
         // batch that does not fit the pool is a scheduler bug (the
         // KV-aware search guarantees feasibility), and failing before any
         // allocation keeps the allocator consistent — no partial batch
-        // ever holds blocks.
-        let need_blocks: usize = batch
-            .iter()
-            .map(|r| self.kv.blocks_needed(r.input_len + r.max_new_tokens))
-            .sum();
+        // ever holds blocks. Reserve mode checks (and then pins) the sum
+        // of full footprints; phased mode checks the exact occupancy peak
+        // of the lockstep profile it is about to execute, then allocates
+        // prompt KV only.
+        let need_blocks: usize = if phased {
+            let members: Vec<(usize, usize)> = batch
+                .iter()
+                .map(|r| (r.input_len, r.max_new_tokens))
+                .collect();
+            phased_peak_blocks(&members, self.kv.config().block_tokens) as usize
+        } else {
+            batch
+                .iter()
+                .map(|r| self.kv.blocks_needed(r.input_len + r.max_new_tokens))
+                .sum()
+        };
         if need_blocks > self.kv.free_blocks() {
             anyhow::bail!(
                 "planned batch of {b} requests overcommits the KV pool: \
-                 needs {need_blocks} blocks, {} free of {} total — the \
-                 scheduler planned an infeasible batch",
+                 needs {need_blocks} blocks ({:?} demand), {} free of {} \
+                 total — the scheduler planned an infeasible batch",
+                self.kv_phase,
                 self.kv.free_blocks(),
                 self.kv.config().total_blocks,
             );
         }
         for (i, r) in batch.iter().enumerate() {
-            if let Err(e) =
-                self.kv.alloc_seq(r.id, r.input_len + r.max_new_tokens)
-            {
+            // phased: prompt + the first token prefill emits (clamped to
+            // the token budget, so a zero-output request never pins more
+            // than its reserve footprint); reserve: the full
+            // input + output footprint, pinned until batch end.
+            let tokens = if phased {
+                r.input_len + r.max_new_tokens.min(1)
+            } else {
+                r.input_len + r.max_new_tokens
+            };
+            if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
                 // e.g. duplicate request ids within one batch: release the
                 // already-allocated prefix so the refusal leaks nothing.
                 for done in &batch[..i] {
@@ -300,6 +341,15 @@ impl Engine for SimEngine {
             batch.iter().map(|r| r.input_len + 1).collect();
         let mut finish = vec![first_token_ms; b];
         let mut live = remaining.iter().filter(|&&r| r > 0).count();
+        if phased {
+            // members whose single token came out of prefill are done:
+            // release their blocks before any decode occupancy grows.
+            for (i, r) in batch.iter().enumerate() {
+                if remaining[i] == 0 {
+                    self.kv.free_seq(r.id)?;
+                }
+            }
+        }
         while live > 0 {
             let max_acc = accumulated
                 .iter()
@@ -311,6 +361,19 @@ impl Engine for SimEngine {
             let step = self.profile.truth.tpot_at(b, max_acc) * self.noise();
             self.clock_ms += step;
             self.decode_steps += 1;
+            if phased {
+                // grow every live member by the token it is about to
+                // emit (the pre-checked peak covers this by construction),
+                // record the occupancy high-water mark, then let
+                // completing members release below.
+                for (i, r) in batch.iter().enumerate() {
+                    if remaining[i] > 0 {
+                        self.kv.extend_seq(r.id, 1)?;
+                    }
+                }
+                self.peak_used_blocks =
+                    self.peak_used_blocks.max(self.kv.used_blocks());
+            }
             for i in 0..b {
                 if remaining[i] > 0 {
                     remaining[i] -= 1;
@@ -318,6 +381,9 @@ impl Engine for SimEngine {
                     finish[i] = self.clock_ms;
                     if remaining[i] == 0 {
                         live -= 1;
+                        if phased {
+                            self.kv.free_seq(batch[i].id)?;
+                        }
                     }
                 }
             }
@@ -335,8 +401,12 @@ impl Engine for SimEngine {
                 text: None,
             })
             .collect();
-        for r in batch {
-            self.kv.free_seq(r.id)?;
+        if !phased {
+            // reserve mode pinned full footprints; phased mode already
+            // released every member at its completion.
+            for r in batch {
+                self.kv.free_seq(r.id)?;
+            }
         }
         Ok(results)
     }
@@ -527,6 +597,70 @@ mod tests {
         e.run_batch(&[req(3, 100, 10)]).unwrap();
         assert_eq!(e.peak_used_blocks(), 7);
         assert_eq!(e.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn phased_engine_admits_peak_fitting_batch_reserve_refuses() {
+        use crate::coordinator::kv::KvPhaseModel;
+        let mut p = quiet_profile();
+        // 200 MB at 0.5 MB/token -> 400 tokens -> 25 blocks
+        p.kv_pool_mb = 200.0;
+        // job A: 160 in / 4 out (11 blocks full); job B: 160 in / 160 out
+        // (20 blocks full). Reserve sum 31 > 25; phased peak 22 <= 25.
+        let batch = vec![req(1, 160, 4), req(2, 160, 160)];
+
+        let mut reserve = SimEngine::new(p.clone(), 4, 0);
+        assert_eq!(reserve.kv().config().total_blocks, 25);
+        let err = reserve.run_batch(&batch).unwrap_err();
+        assert!(format!("{err}").contains("overcommits the KV pool"), "{err}");
+        assert_eq!(reserve.kv().active_seqs(), 0);
+
+        let mut phased = SimEngine::new(p, 4, 0)
+            .with_kv_phase(KvPhaseModel::Phased);
+        assert_eq!(phased.kv_phase(), KvPhaseModel::Phased);
+        let out = phased.run_batch(&batch).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].generated, 4);
+        assert_eq!(out[1].generated, 160);
+        // the high-water mark is the phased peak, within the pool
+        assert_eq!(phased.peak_used_blocks(), 22);
+        // everything released at completion — no leaks
+        assert_eq!(phased.kv().active_seqs(), 0);
+        assert_eq!(phased.kv().free_blocks(), 25);
+    }
+
+    #[test]
+    fn phased_timing_matches_reserve_timing() {
+        use crate::coordinator::kv::KvPhaseModel;
+        let p = quiet_profile();
+        let batch = vec![req(1, 500, 20), req(2, 300, 7)];
+        let mut a = SimEngine::new(p.clone(), 4, 3);
+        let mut b =
+            SimEngine::new(p, 4, 3).with_kv_phase(KvPhaseModel::Phased);
+        let ra = a.run_batch(&batch).unwrap();
+        let rb = b.run_batch(&batch).unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.first_token_ms.to_bits(), y.first_token_ms.to_bits());
+        }
+        // phased never exceeds the reserve high-water mark
+        assert!(b.peak_used_blocks() <= a.peak_used_blocks());
+        assert_eq!(b.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn phased_one_token_member_frees_at_prefill() {
+        use crate::coordinator::kv::KvPhaseModel;
+        let mut e = SimEngine::new(quiet_profile(), 4, 0)
+            .with_kv_phase(KvPhaseModel::Phased);
+        let out = e
+            .run_batch(&[req(1, 50, 1), req(2, 50, 8)])
+            .unwrap();
+        assert_eq!(out[0].generated, 1);
+        assert!(out[1].finish_ms > out[0].finish_ms);
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
     }
 
     #[test]

@@ -39,11 +39,13 @@ pub mod workload;
 pub mod prelude {
     pub use crate::config::profiles::{by_name, HardwareProfile};
     pub use crate::config::{OutputPrediction, RunConfig, SloTargets};
-    pub use crate::coordinator::kv::{KvConfig, KvMode};
-    pub use crate::coordinator::objective::{Evaluator, Job, Schedule};
+    pub use crate::coordinator::kv::{KvConfig, KvMode, KvPhaseModel};
+    pub use crate::coordinator::objective::{
+        Evaluator, Job, Schedule, TimelineOrigin,
+    };
     pub use crate::coordinator::online::{
         run_online, run_online_fleet, run_online_fleet_opts, run_online_opts,
-        OnlineOpts, ReplanStrategy, WaveController,
+        OnlineOpts, PredictedJob, ReplanStrategy, WaveController,
     };
     pub use crate::coordinator::policies::Policy;
     pub use crate::coordinator::predictor::LatencyPredictor;

@@ -13,7 +13,7 @@ use anyhow::{anyhow, Result};
 use slo_serve::bench;
 use slo_serve::config::profiles;
 use slo_serve::config::RunConfig;
-use slo_serve::coordinator::kv::{KvConfig, KvMode};
+use slo_serve::coordinator::kv::{KvConfig, KvMode, KvPhaseModel};
 use slo_serve::coordinator::online::{
     run_online_fleet_opts, OnlineOpts, ReplanStrategy,
 };
@@ -43,6 +43,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "slo-scale", help: "scale all SLO bounds", default: Some("1.0") },
         OptSpec { name: "output-pred", help: "profiler | oracle:<rel_err>", default: Some("profiler") },
         OptSpec { name: "kv", help: "off | hard | soft:<weight> (Eq. 20 pool from the profile)", default: Some("off") },
+        OptSpec { name: "kv-phase", help: "reserve | phased (batch KV demand model under --kv)", default: Some("reserve") },
     ]
 }
 
@@ -69,6 +70,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         return Err(anyhow!("bad --output-pred {op}"));
     };
     let kv_spec = args.str("kv");
+    let kv_phase = parse_kv_phase(&args.str("kv-phase"))?;
     if kv_spec != "off" {
         // KV enforcement lives in the SA search; for baseline policies the
         // flag would silently do nothing — refuse instead of misleading.
@@ -80,7 +82,12 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         }
         let profile = profiles::by_name(&cfg.profile)
             .ok_or_else(|| anyhow!("unknown profile '{}'", cfg.profile))?;
-        cfg.sa.kv = parse_kv(&kv_spec, &profile)?;
+        cfg.sa.kv = parse_kv(&kv_spec, &profile)?.with_phase(kv_phase);
+    } else if kv_phase != KvPhaseModel::Reserve {
+        return Err(anyhow!(
+            "--kv-phase phased needs a binding pool: pass --kv hard or \
+             --kv soft:<w> as well"
+        ));
     }
     let run = bench::run_scenario(&cfg)?;
     let m = &run.metrics;
@@ -134,11 +141,31 @@ fn online_specs() -> Vec<OptSpec> {
             default: Some("off"),
         },
         OptSpec {
+            name: "kv-phase",
+            help: "reserve | phased (batch KV demand model under --kv)",
+            default: Some("reserve"),
+        },
+        OptSpec {
             name: "compact",
             help: "compact dispatched batches out of the controller (0|1)",
             default: Some("0"),
         },
+        OptSpec {
+            name: "arrival-aware",
+            help: "evaluate the objective on the arrival-aware timeline \
+                   (idle gaps + per-job arrival offsets) (0|1)",
+            default: Some("0"),
+        },
     ]
+}
+
+/// Parse `--kv-phase reserve|phased`.
+fn parse_kv_phase(spec: &str) -> Result<KvPhaseModel> {
+    match spec {
+        "reserve" => Ok(KvPhaseModel::Reserve),
+        "phased" => Ok(KvPhaseModel::Phased),
+        other => Err(anyhow!("bad --kv-phase {other} (reserve|phased)")),
+    }
 }
 
 /// Parse `--kv off|hard|soft:<w>` into a [`KvConfig`] over the profile's
@@ -205,9 +232,17 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         &mut pred_rng,
         profile.max_total_tokens / 2,
     );
-    let kv = parse_kv(&args.str("kv"), &profile)?;
+    let kv_phase = parse_kv_phase(&args.str("kv-phase"))?;
+    let kv = parse_kv(&args.str("kv"), &profile)?.with_phase(kv_phase);
+    if !kv.binding() && kv_phase != KvPhaseModel::Reserve {
+        return Err(anyhow!(
+            "--kv-phase phased needs a binding pool: pass --kv hard or \
+             --kv soft:<w> as well"
+        ));
+    }
     let opts = OnlineOpts {
         compact_dispatched: args.str("compact") == "1",
+        arrival_aware: args.str("arrival-aware") == "1",
     };
     let sa = SaParams { max_batch, seed, kv, ..Default::default() };
 
@@ -224,11 +259,14 @@ fn cmd_online(argv: &[String]) -> Result<()> {
     for strategy in strategies {
         let mut engines: Vec<Box<dyn Engine + Send>> = (0..n_inst)
             .map(|i| {
-                Box::new(SimEngine::new(
-                    profile.clone(),
-                    max_batch,
-                    seed ^ (i as u64).wrapping_mul(0xE5317),
-                )) as Box<dyn Engine + Send>
+                Box::new(
+                    SimEngine::new(
+                        profile.clone(),
+                        max_batch,
+                        seed ^ (i as u64).wrapping_mul(0xE5317),
+                    )
+                    .with_kv_phase(kv_phase),
+                ) as Box<dyn Engine + Send>
             })
             .collect();
         let (completions, outcomes) = run_online_fleet_opts(

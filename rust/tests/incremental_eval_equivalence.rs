@@ -163,6 +163,61 @@ fn incremental_eval_survives_long_committed_walks() {
 }
 
 #[test]
+fn incremental_eval_matches_full_on_random_timelines() {
+    // The arrival-aware timeline (TimelineOrigin) must keep the
+    // incremental == full guarantee: random arrivals, random t0, random
+    // moves — every field exactly equal after every move.
+    check("incremental == full on random timelines", 150, |rng| {
+        let n = 1 + rng.below(24);
+        let max_batch = 1 + rng.below(6);
+        let pred = random_predictor(rng);
+        let jobs = random_jobs(rng, n);
+        let t0 = rng.uniform(0.0, 500.0);
+        let arrivals: Vec<f64> =
+            (0..n).map(|_| rng.uniform(0.0, 5_000.0)).collect();
+        let ev = Evaluator::with_arrivals(&jobs, &pred, t0, &arrivals);
+        let mut table = PredTable::build(&jobs, &pred, max_batch);
+        table.set_arrivals(&arrivals);
+        let mut inc = IncrementalEval::new_kv(
+            &jobs,
+            &table,
+            random_start(rng, n, max_batch),
+            Default::default(),
+            t0,
+        );
+        if inc.eval() != ev.eval(inc.schedule()) {
+            return Err(format!(
+                "init mismatch: inc {:?} full {:?}",
+                inc.eval(),
+                ev.eval(inc.schedule())
+            ));
+        }
+        for step in 0..60 {
+            let moved = match inc.try_random_move(max_batch, rng) {
+                None => continue,
+                Some(e) => e,
+            };
+            let full = ev.eval(inc.schedule());
+            if moved != full {
+                return Err(format!(
+                    "step {step} (n={n} mb={max_batch} t0={t0}): \
+                     incremental {moved:?} != full {full:?}"
+                ));
+            }
+            if rng.chance(0.5) {
+                inc.commit();
+            } else {
+                inc.rollback();
+                if inc.eval() != ev.eval(inc.schedule()) {
+                    return Err(format!("step {step}: rollback drifted"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn fast_and_full_search_paths_agree_end_to_end() {
     // Bit-identical evaluations + a shared RNG stream force the two
     // priority_mapping implementations onto the same trajectory.

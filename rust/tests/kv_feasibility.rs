@@ -14,7 +14,7 @@
 
 use slo_serve::config::profiles::by_name;
 use slo_serve::coordinator::execute_plans;
-use slo_serve::coordinator::kv::{KvConfig, KvMode};
+use slo_serve::coordinator::kv::{KvConfig, KvMode, KvPhaseModel};
 use slo_serve::coordinator::objective::{Evaluator, Job, Schedule};
 use slo_serve::coordinator::online::{ReplanStrategy, WaveController};
 use slo_serve::coordinator::predictor::LatencyPredictor;
@@ -58,6 +58,10 @@ fn unlimited_pool_is_bit_identical_across_modes() {
         for kv in [
             KvConfig { pool_blocks: u64::MAX, ..KvConfig::hard(0) },
             KvConfig { pool_blocks: u64::MAX, ..KvConfig::soft(0, 123.0) },
+            // phased demand with an unlimited pool never binds either:
+            // same RNG stream, same plan, same stats
+            KvConfig { pool_blocks: u64::MAX, ..KvConfig::hard(0) }
+                .with_phase(KvPhaseModel::Phased),
         ] {
             let res = priority_mapping(&ev, &SaParams { kv, ..base });
             assert_eq!(res.schedule, legacy.schedule, "seed {seed} {kv:?}");
@@ -112,6 +116,127 @@ fn unlimited_pool_schedule_outcome_matches_legacy() {
         assert_eq!(a.schedule, b.schedule, "instance {}", a.instance);
         assert_eq!(a.request_order(), b.request_order());
     }
+}
+
+/// ISSUE 4 escape hatch: `KvPhaseModel::Reserve` (the default) with
+/// explicit zero arrivals replays the pre-timeline, pre-phase scheduler
+/// byte for byte — `ScheduleOutcome` plans, objective bits, seed, and
+/// search stats all equal the plain configuration's.
+#[test]
+fn reserve_mode_t0_schedule_outcome_is_byte_equal_to_pre_timeline() {
+    let pred = LatencyPredictor::paper_table2();
+    for seed in [0u64, 5, 21] {
+        let mut rng = Rng::new(seed ^ 0x1EAF);
+        let jobs = random_jobs(&mut rng, 14);
+        // search level: a timeline evaluator with all-zero arrivals and
+        // t0 = 0 must walk the identical trajectory
+        let zeros = vec![0.0; jobs.len()];
+        let plain = Evaluator::new(&jobs, &pred);
+        let timeline = Evaluator::with_arrivals(&jobs, &pred, 0.0, &zeros);
+        let p = SaParams {
+            max_batch: 4,
+            seed,
+            t0: 150.0,
+            iters_per_temp: 25,
+            // Reserve is the default phase; every job fits the pool alone
+            kv: KvConfig::hard(128),
+            ..Default::default()
+        };
+        let a = priority_mapping(&plain, &p);
+        let b = priority_mapping(&timeline, &p);
+        assert_eq!(a.schedule, b.schedule, "seed {seed}");
+        assert_eq!(a.eval.g.to_bits(), b.eval.g.to_bits(), "seed {seed}");
+        assert_eq!(
+            a.eval.total_e2e_ms.to_bits(),
+            b.eval.total_e2e_ms.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(a.stats.evals, b.stats.evals, "seed {seed}");
+        assert_eq!(a.stats.accepted, b.stats.accepted, "seed {seed}");
+        assert_eq!(a.stats.improved, b.stats.improved, "seed {seed}");
+
+        // scheduler level: the full Algorithm 2 outcome (t = 0 requests)
+        // is equal plan for plan, seed included
+        let reqs: Vec<Request> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| {
+                Request::synthetic(
+                    i as u64,
+                    TaskType::Code,
+                    j.input_len,
+                    j.output_len,
+                    j.slo,
+                )
+            })
+            .collect();
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let instances: Vec<InstanceInfo> = (0..2)
+            .map(|id| InstanceInfo { id, mem_mb: 16_000.0 })
+            .collect();
+        let mem = MemoryModel::default();
+        let x = schedule(&reqs, &outs, &instances, &pred, &mem, &p).unwrap();
+        let y = schedule(&reqs, &outs, &instances, &pred, &mem, &p).unwrap();
+        assert_eq!(x.seed, y.seed);
+        for (pa, pb) in x.plans.iter().zip(&y.plans) {
+            assert_eq!(pa.schedule, pb.schedule);
+            assert_eq!(pa.request_order(), pb.request_order());
+        }
+    }
+}
+
+/// Acceptance: with staggered output lengths, the phased demand model
+/// legally forms batches the reserve model must refuse — and the phased
+/// engine executes them within the same physical pool.
+#[test]
+fn phased_mode_batches_beyond_reserve_and_executes() {
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    profile.kv_pool_mb = 200.0; // engine: 400 tokens -> 25 blocks
+    let pred = profile.truth;
+    // job A: 160 in / 4 out (11 blocks full), job B: 160 in / 160 out
+    // (20 blocks): reserve demand 31 > 25, phased peak 22 <= 25.
+    let reqs = vec![
+        Request::synthetic(0, TaskType::Code, 160, 4, Slo::E2e { e2e_ms: 1e12 }),
+        Request::synthetic(1, TaskType::Code, 160, 160, Slo::E2e { e2e_ms: 1e12 }),
+    ];
+    let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+    let jobs: Vec<Job> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Job::from_request(i, r, outs[i]))
+        .collect();
+    let ev = Evaluator::new(&jobs, &pred);
+    let both = Schedule { order: vec![0, 1], batches: vec![2] };
+    let reserve = KvConfig::hard(25);
+    let phased = reserve.with_phase(KvPhaseModel::Phased);
+    // demand models disagree on the same batch
+    assert_eq!(ev.kv_excess(&both, &reserve), 6);
+    assert_eq!(ev.kv_excess(&both, &phased), 0);
+    // the phased hard search may (and here, seeded trivially, does)
+    // return the merged batch: loose SLOs -> sorted seed early-exits
+    let res = priority_mapping(
+        &ev,
+        &SaParams { kv: phased, ..SaParams::with_max_batch(2) },
+    );
+    assert_eq!(res.schedule.batches, vec![2], "{:?}", res.schedule);
+    // and the phased engine executes it within the 25-block pool
+    let mut engine = SimEngine::new(profile, 2, 0)
+        .with_kv_phase(KvPhaseModel::Phased);
+    let batch: Vec<slo_serve::engine::EngineRequest> = res
+        .schedule
+        .order
+        .iter()
+        .map(|&j| slo_serve::engine::EngineRequest {
+            id: reqs[jobs[j].req_idx].id,
+            input_len: reqs[jobs[j].req_idx].input_len,
+            max_new_tokens: reqs[jobs[j].req_idx].output_len,
+            prompt: None,
+        })
+        .collect();
+    engine.run_batch(&batch).unwrap();
+    assert_eq!(engine.peak_used_blocks(), 22);
+    assert_eq!(engine.kv().active_seqs(), 0);
 }
 
 /// Acceptance: a single job larger than the pool hard-fails with a clear

@@ -94,6 +94,76 @@ fn online_equals_offline_for_t0_arrivals() {
     }
 }
 
+/// Timeline escape hatch (ISSUE 4 acceptance): with every arrival at
+/// t = 0 and `KvPhaseModel::Reserve`, the arrival-aware controller is
+/// bit-identical to the legacy (pre-timeline) admission — plans,
+/// objective bits, and executed completions — which in turn equals the
+/// closed-wave `schedule` (`online_equals_offline_for_t0_arrivals`).
+#[test]
+fn arrival_aware_equals_legacy_at_t0() {
+    use slo_serve::coordinator::online::{run_online_opts, OnlineOpts};
+    let predictor = paper_predictor();
+    for seed in [1u64, 13] {
+        let (reqs, outs) = t0_wave(13, seed);
+        let sa = SaParams { max_batch: 4, seed, ..Default::default() };
+
+        // controller level: admit vs admit_at(zeros) — same plan bits
+        let online_params = SaParams { seed: instance_seed(sa.seed, 0), ..sa };
+        let jobs: Vec<Job> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Job::from_request(i, r, outs[i]))
+            .collect();
+        let mut legacy =
+            WaveController::new(&predictor, online_params, ReplanStrategy::Warm);
+        legacy.admit(&jobs).unwrap();
+        let mut aware =
+            WaveController::new(&predictor, online_params, ReplanStrategy::Warm);
+        let zeros: Vec<f64> = reqs.iter().map(|r| r.arrival_ms).collect();
+        assert!(zeros.iter().all(|&a| a == 0.0));
+        aware.admit_at(&jobs, &zeros).unwrap();
+        assert_eq!(legacy.plan(), aware.plan(), "seed {seed}");
+        assert_eq!(
+            legacy.eval().g.to_bits(),
+            aware.eval().g.to_bits(),
+            "seed {seed}"
+        );
+
+        // event-loop level: executed completions are bit-identical
+        let run = |arrival_aware: bool| {
+            let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+            profile.noise_std = 0.0;
+            let mut engine = SimEngine::new(profile, 4, 0);
+            run_online_opts(
+                &reqs,
+                &outs,
+                &mut engine,
+                &predictor,
+                &SaParams { seed: instance_seed(sa.seed, 0), ..sa },
+                ReplanStrategy::Warm,
+                OnlineOpts { arrival_aware, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.e2e_ms.to_bits(), y.e2e_ms.to_bits(), "seed {seed}");
+            assert_eq!(x.ttft_ms.to_bits(), y.ttft_ms.to_bits());
+            assert_eq!(x.batch_size, y.batch_size);
+        }
+        // the predicted timelines agree bit for bit too
+        assert_eq!(a.predicted.len(), b.predicted.len());
+        for (x, y) in a.predicted.iter().zip(&b.predicted) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.wait_ms.to_bits(), y.wait_ms.to_bits());
+            assert_eq!(x.e2e_ms.to_bits(), y.e2e_ms.to_bits());
+        }
+    }
+}
+
 /// The executed path agrees too: running the t = 0 trace through the
 /// online event loop produces the same completions as executing the
 /// closed-wave plan on an identical engine.

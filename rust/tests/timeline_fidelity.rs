@@ -1,0 +1,218 @@
+//! Predicted-vs-executed timeline fidelity (ISSUE 4 acceptance):
+//!
+//! * **exact-model equality** — with a constant-duration latency model
+//!   (zero noise, oracle outputs), the arrival-aware timeline evaluator's
+//!   predicted completion times equal `SimEngine`'s executed completions
+//!   on random arrival traces, seed for seed. The timeline machinery
+//!   (idle-gap jumps, per-job arrival offsets, frozen-prefix chaining,
+//!   KV deferral) is thereby pinned exactly; with a real latency model
+//!   the only residual error is model error, not timeline error.
+//! * **phased-mode equality** — the same property holds with a binding
+//!   `KvPhaseModel::Phased` pool driving admission back-pressure, on
+//!   ≥ 3 seeds.
+//! * **legacy gap** — on sparse traces the t = 0 (pre-timeline)
+//!   evaluation overestimates waits by the un-modelled idle gaps, while
+//!   the arrival-aware timeline is exact — the fidelity gap this change
+//!   closes.
+
+use slo_serve::config::profiles::HardwareProfile;
+use slo_serve::coordinator::kv::{KvConfig, KvPhaseModel};
+use slo_serve::coordinator::online::{
+    run_online_opts, OnlineOpts, OnlineOutcome, ReplanStrategy,
+};
+use slo_serve::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::coordinator::profiler::MemoryModel;
+use slo_serve::coordinator::request::{Request, Slo, TaskType};
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::util::rng::Rng;
+
+/// Profile whose ground truth is a constant per-batch duration: prefill
+/// is `exec_ms` regardless of batch size or lengths, decode is free, and
+/// every request generates exactly one token at prefill. The predictor
+/// is *exact* for this engine, so any predicted-vs-executed difference
+/// is timeline error.
+fn constant_profile(exec_ms: f64) -> HardwareProfile {
+    HardwareProfile {
+        name: "const-exec".into(),
+        truth: LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 0.0, delta: exec_ms },
+            PhaseCoeffs::ZERO,
+        ),
+        kv_pool_mb: 2_000.0, // 4000 tokens -> 250 blocks
+        mem: MemoryModel { utility: 1.0, mb_per_token: 0.5 },
+        noise_std: 0.0,
+        max_total_tokens: 4096,
+    }
+}
+
+/// Random single-token requests with increasing arrival times; `min_gap`
+/// and `max_gap` bound the inter-arrival spacing.
+fn random_trace(
+    rng: &mut Rng,
+    n: usize,
+    min_gap: f64,
+    max_gap: f64,
+) -> Vec<Request> {
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            t += rng.uniform(min_gap, max_gap);
+            let mut r = Request::synthetic(
+                i as u64,
+                TaskType::Code,
+                1 + rng.below(500),
+                1, // one token: completion == batch start + exec
+                Slo::E2e { e2e_ms: 1e9 },
+            );
+            r.arrival_ms = t;
+            r
+        })
+        .collect()
+}
+
+fn run(
+    trace: &[Request],
+    profile: &HardwareProfile,
+    sa: &SaParams,
+    opts: OnlineOpts,
+) -> OnlineOutcome {
+    let outs: Vec<usize> = trace.iter().map(|r| r.output_len).collect();
+    let mut engine = SimEngine::new(profile.clone(), sa.max_batch, 0)
+        .with_kv_phase(sa.kv.phase);
+    run_online_opts(
+        trace,
+        &outs,
+        &mut engine,
+        &profile.truth,
+        sa,
+        ReplanStrategy::Warm,
+        opts,
+    )
+    .unwrap()
+}
+
+/// Assert every request's predicted wait/e2e equals its executed
+/// counterpart (the outcome's vectors are both sorted by id).
+fn assert_predictions_exact(out: &OnlineOutcome, tag: &str) {
+    assert_eq!(out.predicted.len(), out.completions.len(), "{tag}");
+    for (p, c) in out.predicted.iter().zip(&out.completions) {
+        assert_eq!(p.id, c.id, "{tag}");
+        assert!(
+            (p.e2e_ms - c.e2e_ms).abs() < 1e-9,
+            "{tag}: request {} predicted e2e {} != executed {}",
+            p.id,
+            p.e2e_ms,
+            c.e2e_ms
+        );
+        assert!(
+            (p.wait_ms - c.wait_ms).abs() < 1e-9,
+            "{tag}: request {} predicted wait {} != executed {}",
+            p.id,
+            p.wait_ms,
+            c.wait_ms
+        );
+    }
+}
+
+#[test]
+fn predicted_completions_equal_executed_under_exact_model() {
+    const EXEC_MS: f64 = 100.0;
+    let profile = constant_profile(EXEC_MS);
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed ^ 0x71D3);
+        let n = 12 + rng.below(20);
+        // mixed spacing: some arrivals land mid-batch (queueing), some
+        // after idle gaps (the un-modelled case before this change)
+        let trace = random_trace(&mut rng, n, 0.0, 2.5 * EXEC_MS);
+        let sa = SaParams {
+            max_batch: 4,
+            seed,
+            t0: 100.0,
+            iters_per_temp: 10,
+            ..Default::default()
+        };
+        let out = run(
+            &trace,
+            &profile,
+            &sa,
+            OnlineOpts { arrival_aware: true, ..Default::default() },
+        );
+        assert_eq!(out.completions.len(), n, "seed {seed}");
+        assert_predictions_exact(&out, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn predicted_completions_equal_executed_in_phased_mode() {
+    const EXEC_MS: f64 = 80.0;
+    let profile = constant_profile(EXEC_MS);
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed ^ 0x0F1A);
+        let n = 10 + rng.below(14);
+        // bursty arrivals so a binding pool actually defers admissions
+        let trace = random_trace(&mut rng, n, 0.0, 0.6 * EXEC_MS);
+        let sa = SaParams {
+            max_batch: 4,
+            seed,
+            t0: 100.0,
+            iters_per_temp: 10,
+            // every request fits alone (<= 32 blocks), small enough that
+            // backlog saturation defers admissions mid-trace
+            kv: KvConfig::hard(64).with_phase(KvPhaseModel::Phased),
+            ..Default::default()
+        };
+        let out = run(
+            &trace,
+            &profile,
+            &sa,
+            OnlineOpts { arrival_aware: true, ..Default::default() },
+        );
+        assert_eq!(out.completions.len(), n, "seed {seed}");
+        assert_predictions_exact(&out, &format!("phased seed {seed}"));
+    }
+}
+
+#[test]
+fn legacy_timeline_overestimates_waits_on_sparse_traces() {
+    const EXEC_MS: f64 = 100.0;
+    let profile = constant_profile(EXEC_MS);
+    let mut rng = Rng::new(0xBEE);
+    // every gap exceeds the batch duration: the engine idles before each
+    // request, executed waits are ~0, and the t = 0 evaluation charges
+    // each job the full (fictional) backlog of earlier batch maxima.
+    let trace = random_trace(&mut rng, 12, 2.0 * EXEC_MS, 4.0 * EXEC_MS);
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 7,
+        t0: 100.0,
+        iters_per_temp: 10,
+        ..Default::default()
+    };
+    let mean_err = |out: &OnlineOutcome| {
+        let total: f64 = out
+            .predicted
+            .iter()
+            .zip(&out.completions)
+            .map(|(p, c)| (p.wait_ms - c.wait_ms).abs())
+            .sum();
+        total / out.predicted.len() as f64
+    };
+    let legacy = run(&trace, &profile, &sa, OnlineOpts::default());
+    let aware = run(
+        &trace,
+        &profile,
+        &sa,
+        OnlineOpts { arrival_aware: true, ..Default::default() },
+    );
+    let (err_legacy, err_aware) = (mean_err(&legacy), mean_err(&aware));
+    assert!(
+        err_aware < 1e-9,
+        "arrival-aware timeline should be exact here, err {err_aware}"
+    );
+    assert!(
+        err_legacy > EXEC_MS,
+        "legacy timeline should accumulate un-modelled idle gaps, \
+         err {err_legacy}"
+    );
+}
