@@ -135,6 +135,7 @@ fn execute(
                 task: r.task,
                 slo: r.slo,
                 input_len: r.input_len,
+                predicted_lo: r.output_len,
                 generated: item.generated,
                 e2e_ms: item.finish_ms - epoch_ms,
                 ttft_ms: item.first_token_ms - epoch_ms,

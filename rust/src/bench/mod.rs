@@ -105,7 +105,9 @@ pub fn policy_from_name(name: &str, sa: SaParams) -> Result<Policy> {
 /// Build one simulated engine per instance. The engines mirror the
 /// scheduler's KV demand model (`cfg.sa.kv.phase`), so a phased-planned
 /// wave is admitted against the same occupancy-peak accounting it was
-/// planned with (the default `Reserve` keeps the legacy behaviour).
+/// planned with (the default `Reserve` keeps the legacy behaviour), and
+/// carry the configured output-length divergence model
+/// (`cfg.divergence`; `Off` keeps the legacy engines bit for bit).
 pub fn sim_engines(
     profile: &HardwareProfile,
     cfg: &RunConfig,
@@ -118,6 +120,7 @@ pub fn sim_engines(
                 cfg.seed ^ (i as u64).wrapping_mul(0xE5317),
             )
             .with_kv_phase(cfg.sa.kv.phase)
+            .with_divergence(cfg.divergence)
         })
         .collect()
 }

@@ -90,6 +90,10 @@ pub struct RunConfig {
     pub sa: SaParams,
     pub output_pred: OutputPrediction,
     pub slos: SloTargets,
+    /// Actual-vs-predicted output-length divergence in the simulated
+    /// engines ([`crate::engine::sim::DivergenceModel`]); `Off` (the
+    /// default) replays the pre-divergence engines bit for bit.
+    pub divergence: crate::engine::sim::DivergenceModel,
 }
 
 impl Default for RunConfig {
@@ -104,6 +108,7 @@ impl Default for RunConfig {
             sa: SaParams::default(),
             output_pred: OutputPrediction::Profiler,
             slos: SloTargets::default(),
+            divergence: crate::engine::sim::DivergenceModel::Off,
         }
     }
 }
@@ -154,6 +159,10 @@ impl RunConfig {
                 cfg.sa.decay = d;
             }
         }
+        if let Some(spec) = v.get("divergence").as_str() {
+            cfg.divergence = crate::engine::sim::DivergenceModel::parse(spec)
+                .map_err(|e| anyhow!(e))?;
+        }
         let op = v.get("output_pred");
         if let Some(kind) = op.get("kind").as_str() {
             cfg.output_pred = match kind {
@@ -193,6 +202,7 @@ impl RunConfig {
             ("n_instances", Json::num(self.n_instances as f64)),
             ("profile", Json::str(self.profile.clone())),
             ("policy", Json::str(self.policy.clone())),
+            ("divergence", Json::str(self.divergence.spec())),
             (
                 "sa",
                 Json::obj(vec![
@@ -241,12 +251,15 @@ mod tests {
         c.max_batch = 2;
         c.policy = "fcfs".into();
         c.sa.t0 = 200.0;
+        c.divergence =
+            crate::engine::sim::DivergenceModel::Lognormal { sigma: 0.5 };
         let back = RunConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.seed, 7);
         assert_eq!(back.n_requests, 40);
         assert_eq!(back.max_batch, 2);
         assert_eq!(back.policy, "fcfs");
         assert_eq!(back.sa.t0, 200.0);
+        assert_eq!(back.divergence, c.divergence);
     }
 
     #[test]
@@ -264,6 +277,8 @@ mod tests {
             r#"{"n_instances": 0}"#,
             r#"{"sa": {"decay": 1.5}}"#,
             r#"{"output_pred": {"kind": "magic"}}"#,
+            r#"{"divergence": "gamma:0.5"}"#,
+            r#"{"divergence": "lognormal:-1"}"#,
         ] {
             let v = Json::parse(bad).unwrap();
             assert!(RunConfig::from_json(&v).is_err(), "{bad}");

@@ -35,10 +35,7 @@ pub struct HardwareProfile {
 }
 
 fn scale(p: &LatencyPredictor, factor: f64) -> LatencyPredictor {
-    LatencyPredictor {
-        prefill: p.prefill.scaled(factor),
-        decode: p.decode.scaled(factor),
-    }
+    LatencyPredictor::new(p.prefill.scaled(factor), p.decode.scaled(factor))
 }
 
 /// Paper Table 2 anchor: Qwen2.5-7B @ 2×V100, vLLM (ms).
@@ -64,10 +61,10 @@ pub fn builtin_profiles() -> Vec<HardwareProfile> {
         },
         HardwareProfile {
             name: "qwen7b-v100x2-lmdeploy".into(),
-            truth: LatencyPredictor {
-                prefill: t2.prefill.scaled(0.85),
-                decode: PhaseCoeffs { delta: t2.decode.delta * 0.80, ..t2.decode.scaled(0.85) },
-            },
+            truth: LatencyPredictor::new(
+                t2.prefill.scaled(0.85),
+                PhaseCoeffs { delta: t2.decode.delta * 0.80, ..t2.decode.scaled(0.85) },
+            ),
             kv_pool_mb: 22_000.0, // quantized weights free memory
             mem: mem7b,
             noise_std: 0.03,
@@ -130,20 +127,20 @@ pub fn builtin_profiles() -> Vec<HardwareProfile> {
         // profiling the actual PJRT engine; placeholder coefficients here)
         HardwareProfile {
             name: "tinylm-cpu".into(),
-            truth: LatencyPredictor {
-                prefill: PhaseCoeffs {
+            truth: LatencyPredictor::new(
+                PhaseCoeffs {
                     alpha: 0.002,
                     beta: 2.0,
                     gamma: 0.05,
                     delta: 5.0,
                 },
-                decode: PhaseCoeffs {
+                PhaseCoeffs {
                     alpha: 0.0002,
                     beta: 1.0,
                     gamma: 0.002,
                     delta: 8.0,
                 },
-            },
+            ),
             kv_pool_mb: 2_000.0,
             mem: MemoryModel { utility: 0.9, mb_per_token: 0.03 },
             noise_std: 0.05,

@@ -109,6 +109,15 @@ pub struct KvConfig {
     /// Batch demand model; [`KvPhaseModel::Reserve`] reproduces the
     /// pre-phase accounting bit for bit.
     pub phase: KvPhaseModel,
+    /// **Quantile reservation column** (`lo_q`): multiplier applied to the
+    /// predicted output length inside [`KvConfig::job_blocks`] before block
+    /// rounding — typically
+    /// [`crate::coordinator::predictor::LatencyPredictor::quantile`] at a
+    /// conservative quantile, so KV footprints reserve for an upper
+    /// output-length quantile while the latency objective keeps pricing
+    /// the mean prediction. Exactly `1.0` (the default) is the escape
+    /// hatch: footprints are the pre-quantile ones, bit for bit.
+    pub lo_mult: f64,
 }
 
 impl Default for KvConfig {
@@ -124,6 +133,7 @@ impl KvConfig {
         pool_blocks: u64::MAX,
         mode: KvMode::Unlimited,
         phase: KvPhaseModel::Reserve,
+        lo_mult: 1.0,
     };
 
     /// Hard-feasibility pool of `pool_blocks` blocks.
@@ -133,6 +143,7 @@ impl KvConfig {
             pool_blocks,
             mode: KvMode::Hard,
             phase: KvPhaseModel::Reserve,
+            lo_mult: 1.0,
         }
     }
 
@@ -143,12 +154,33 @@ impl KvConfig {
             pool_blocks,
             mode: KvMode::Soft { weight },
             phase: KvPhaseModel::Reserve,
+            lo_mult: 1.0,
         }
     }
 
     /// This configuration with a different batch demand model.
     pub fn with_phase(self, phase: KvPhaseModel) -> KvConfig {
         KvConfig { phase, ..self }
+    }
+
+    /// This configuration with the quantile reservation multiplier set
+    /// (see the `lo_mult` field docs). Non-finite or sub-1 multipliers are
+    /// clamped to `1.0` — reservations never shrink below the prediction.
+    pub fn with_lo_mult(self, lo_mult: f64) -> KvConfig {
+        let lo_mult = if lo_mult.is_finite() { lo_mult.max(1.0) } else { 1.0 };
+        KvConfig { lo_mult, ..self }
+    }
+
+    /// Output length the reservation column charges a job for: the point
+    /// prediction under the exact head (`lo_mult == 1.0`, same value bit
+    /// for bit), a ceil-scaled conservative quantile otherwise.
+    #[inline]
+    pub fn reserved_lo(&self, output_len: usize) -> usize {
+        if self.lo_mult == 1.0 {
+            output_len
+        } else {
+            (output_len as f64 * self.lo_mult).ceil() as usize
+        }
     }
 
     /// True when batch demand uses the phase-aware occupancy model.
@@ -171,6 +203,7 @@ impl KvConfig {
             pool_blocks: pool_blocks_from_mb(pool_mb, mem, block_tokens),
             mode,
             phase: KvPhaseModel::Reserve,
+            lo_mult: 1.0,
         }
     }
 
@@ -181,11 +214,14 @@ impl KvConfig {
         blocks_for(tokens, self.block_tokens)
     }
 
-    /// Total KV footprint of one job: prompt + predicted decode growth
-    /// (the engine reserves both up front for a planned batch).
+    /// Total KV footprint of one job: prompt + the decode growth the
+    /// reservation column charges (the point prediction by default, a
+    /// conservative output-length quantile when `lo_mult > 1` — see
+    /// [`KvConfig::reserved_lo`]). The engine reserves both up front for a
+    /// planned batch.
     #[inline]
     pub fn job_blocks(&self, input_len: usize, output_len: usize) -> u64 {
-        self.blocks_for_tokens(input_len + output_len)
+        self.blocks_for_tokens(input_len + self.reserved_lo(output_len))
     }
 
     /// Footprint right after prefill (before any decode growth) —
@@ -500,6 +536,97 @@ mod tests {
         assert!(phased.phased() && !kv.phased());
         assert_eq!(phased.pool_blocks, kv.pool_blocks);
         assert_eq!(phased.mode, kv.mode);
+    }
+
+    #[test]
+    fn quantile_reservation_column() {
+        let kv = KvConfig::hard(100);
+        // default: exact head — footprints bit-identical to pre-quantile
+        assert_eq!(kv.lo_mult, 1.0);
+        assert_eq!(kv.job_blocks(30, 10), KvConfig::hard(100).job_blocks(30, 10));
+        // a 1.5× conservative column inflates the decode part only
+        let q = kv.with_lo_mult(1.5);
+        assert_eq!(q.reserved_lo(10), 15);
+        assert_eq!(q.reserved_lo(0), 0);
+        assert_eq!(q.job_blocks(30, 10), blocks_for(45, 16)); // 3 blocks
+        assert!(q.job_blocks(30, 100) > kv.job_blocks(30, 100));
+        // prompt-only footprints are untouched by the column
+        assert_eq!(q.prefill_blocks(30), kv.prefill_blocks(30));
+        // sub-1 / non-finite multipliers clamp to the exact head
+        assert_eq!(kv.with_lo_mult(0.5).lo_mult, 1.0);
+        assert_eq!(kv.with_lo_mult(f64::NAN).lo_mult, 1.0);
+        // with_phase preserves the column; with_lo_mult preserves the mode
+        assert_eq!(q.with_phase(KvPhaseModel::Phased).lo_mult, 1.5);
+        assert_eq!(q.mode, kv.mode);
+    }
+
+    #[test]
+    fn phased_peak_edge_cases() {
+        // empty batch: nothing alive, zero occupancy
+        assert_eq!(phased_peak_blocks(&[], 16), 0);
+        // single job: peak is exactly its full footprint
+        assert_eq!(
+            phased_peak_blocks(&[(100, 60)], 16),
+            blocks_for(160, 16)
+        );
+        assert_eq!(phased_peak_blocks(&[(1, 1)], 16), 1);
+        // all-prefill-dominant (outputs ≤ 1): everyone completes at the
+        // first token holding prompt + that token — peak == reserve sum
+        let prefill_heavy = [(500usize, 1usize), (700, 0), (320, 1)];
+        let reserve: u64 = prefill_heavy
+            .iter()
+            .map(|&(i, o)| blocks_for(i + o, 16))
+            .sum();
+        assert_eq!(phased_peak_blocks(&prefill_heavy, 16), reserve);
+        // all-decode-dominant with equal outputs: no early release, so
+        // the peak again equals the reserve sum …
+        let decode_heavy = [(4usize, 400usize), (8, 400), (2, 400)];
+        let reserve: u64 = decode_heavy
+            .iter()
+            .map(|&(i, o)| blocks_for(i + o, 16))
+            .sum();
+        assert_eq!(phased_peak_blocks(&decode_heavy, 16), reserve);
+        // … while staggered outputs release early and peak strictly below
+        let staggered = [(4usize, 40usize), (4, 400)];
+        let reserve: u64 =
+            staggered.iter().map(|&(i, o)| blocks_for(i + o, 16)).sum();
+        assert!(phased_peak_blocks(&staggered, 16) < reserve);
+    }
+
+    #[test]
+    fn phased_peak_bounded_by_reserve_sum_property() {
+        use crate::util::prop::check;
+        check("phased_peak ≤ reserve_sum (and ≥ max member)", 300, |rng| {
+            let b = rng.below(9); // empty batches included
+            let members: Vec<(usize, usize)> = (0..b)
+                .map(|_| (rng.below(1200), rng.below(500)))
+                .collect();
+            let bt = 1 + rng.below(32);
+            let peak = phased_peak_blocks(&members, bt);
+            let reserve: u64 = members
+                .iter()
+                .map(|&(i, o)| blocks_for(i + o, bt))
+                .sum();
+            if peak > reserve {
+                return Err(format!(
+                    "{members:?} @ {bt}: peak {peak} > reserve {reserve}"
+                ));
+            }
+            if let Some(max_member) = members
+                .iter()
+                .map(|&(i, o)| blocks_for(i + o, bt))
+                .max()
+            {
+                if peak < max_member {
+                    return Err(format!(
+                        "{members:?} @ {bt}: peak {peak} < member {max_member}"
+                    ));
+                }
+            } else if peak != 0 {
+                return Err("empty batch with nonzero peak".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -78,15 +78,20 @@ pub fn predict_outputs(
 
 /// Convert an engine [`crate::engine::ItemResult`] into a [`Completion`]
 /// using the request's arrival time for waiting/e2e accounting.
+/// `predicted_lo` is the output length the scheduler planned the request
+/// at — paired with the engine's `generated` it makes actual-vs-predicted
+/// output-length divergence observable per request.
 fn to_completion(
     req: &Request,
     item: &crate::engine::ItemResult,
+    predicted_lo: usize,
 ) -> Completion {
     Completion {
         id: req.id,
         task: req.task,
         slo: req.slo,
         input_len: req.input_len,
+        predicted_lo,
         generated: item.generated,
         e2e_ms: item.finish_ms - req.arrival_ms,
         ttft_ms: item.first_token_ms - req.arrival_ms,
@@ -113,15 +118,17 @@ pub fn execute_plans(
     for plan in plans {
         let engine = &mut engines[plan.instance];
         for (_, start, size) in plan.schedule.batch_spans() {
-            let members: Vec<usize> = plan.schedule.order
+            // member jobs carry both the request index and the predicted
+            // output length the plan priced them at
+            let members: Vec<&objective::Job> = plan.schedule.order
                 [start..start + size]
                 .iter()
-                .map(|&j| plan.jobs[j].req_idx)
+                .map(|&j| &plan.jobs[j])
                 .collect();
             let batch: Vec<EngineRequest> = members
                 .iter()
-                .map(|&ri| {
-                    let r = &requests[ri];
+                .map(|job| {
+                    let r = &requests[job.req_idx];
                     EngineRequest {
                         id: r.id,
                         input_len: r.input_len,
@@ -131,10 +138,10 @@ pub fn execute_plans(
                 })
                 .collect();
             let items = engine.run_batch(&batch)?;
-            for (&ri, item) in members.iter().zip(&items) {
-                let req = &requests[ri];
+            for (job, item) in members.iter().zip(&items) {
+                let req = &requests[job.req_idx];
                 profiler.observe_output(req.task, item.generated);
-                completions.push(to_completion(req, item));
+                completions.push(to_completion(req, item, job.output_len));
             }
         }
     }
@@ -173,7 +180,8 @@ pub fn execute_fcfs_continuous(
         for item in items {
             let req = by_id[&item.id];
             profiler.observe_output(req.task, item.generated);
-            completions.push(to_completion(req, &item));
+            // FCFS plans nothing: its "prediction" is the nominal budget
+            completions.push(to_completion(req, &item, req.output_len));
         }
     }
     completions.sort_by_key(|c| c.id);

@@ -46,6 +46,16 @@
 //! [`Evaluator::kv_excess`] is the O(N) reference the
 //! equivalence tests check against. With an unlimited pool the excess is
 //! identically zero and nothing about the pre-KV behaviour changes.
+//!
+//! **Latency prices the mean, KV reserves the quantile**: every latency
+//! term above uses the *point* output-length prediction, while reserve
+//! footprints go through [`KvConfig::job_blocks`], which can charge a
+//! conservative output-length quantile instead
+//! ([`KvConfig::lo_mult`], fed by
+//! [`crate::coordinator::predictor::LatencyPredictor::quantile`]). Both
+//! evaluators read footprints through the same `KvConfig`/`PredTable`
+//! column, so the incremental–full equivalence holds at any quantile;
+//! `lo_mult == 1.0` is the pre-quantile accounting bit for bit.
 
 use crate::coordinator::kv::{self, KvConfig, KvPhaseModel};
 use crate::coordinator::pred_table::PredTable;

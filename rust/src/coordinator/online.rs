@@ -58,6 +58,23 @@
 //! work is still undispatched — the deferred jobs are admitted at a later
 //! replan, once dispatching has drained the backlog.
 //!
+//! **Drift reconciliation** ([`WaveController::reconcile`],
+//! [`OnlineOpts::replan_drift_ms`]): predictions err — under
+//! output-length divergence ([`crate::engine::sim::DivergenceModel`])
+//! systematically so. After each dispatched batch executes, `reconcile`
+//! compares the engine's **measured** clock against the predicted end of
+//! the dispatched prefix and records the signed drift (plus per-request
+//! output-length divergence from the batch's completions). Reconciling
+//! is pure bookkeeping — no RNG, no plan change — so it never perturbs a
+//! run. When the event loop is given a positive
+//! [`OnlineOpts::replan_drift_ms`] and the |drift| crosses it,
+//! [`WaveController::replan_from_drift`] shifts the timeline origin to
+//! the measured time (compacting the dispatched prefix — measured work
+//! must not be re-predicted) and re-runs the warm search over the live
+//! suffix, so subsequent scheduling decisions price waits from reality
+//! instead of a stale prediction. The default threshold of 0 disables
+//! the loop entirely — the historical behaviour, bit for bit.
+//!
 //! **Prefix compaction** ([`WaveController::with_compaction`]): by default
 //! the job set and prediction table grow for the lifetime of the
 //! controller — on long traces, without bound. Compaction drops fully
@@ -124,6 +141,15 @@ pub struct OnlineStats {
     pub dispatched_batches: usize,
     /// Jobs dispatched.
     pub dispatched_jobs: usize,
+    /// Replans triggered by timeline drift
+    /// ([`WaveController::replan_from_drift`]); also counted in `replans`.
+    pub drift_replans: usize,
+    /// Largest |measured − predicted| prefix-end drift seen (ms).
+    pub max_abs_drift_ms: f64,
+    /// Completions reconciled so far.
+    pub reconciled_jobs: usize,
+    /// Σ |actual − predicted| output length over reconciled completions.
+    pub lo_abs_divergence_sum: f64,
 }
 
 impl OnlineStats {
@@ -133,6 +159,16 @@ impl OnlineStats {
             0.0
         } else {
             self.replan_ms_total / self.replans as f64
+        }
+    }
+
+    /// Mean |actual − predicted| output length over reconciled
+    /// completions (tokens); 0 before anything was reconciled.
+    pub fn avg_abs_lo_divergence(&self) -> f64 {
+        if self.reconciled_jobs == 0 {
+            0.0
+        } else {
+            self.lo_abs_divergence_sum / self.reconciled_jobs as f64
         }
     }
 }
@@ -204,6 +240,23 @@ pub struct WaveController<'a> {
     t0_ms: f64,
     /// Jobs dropped by compaction so far.
     retired_jobs: usize,
+    /// Latest measured-minus-predicted prefix-end drift (ms), recorded by
+    /// [`WaveController::reconcile`]; reset to 0 by a drift replan.
+    drift_ms: f64,
+    /// Engine clock at the last reconcile — the measured timeline origin
+    /// a drift replan shifts to.
+    reconciled_now: Option<f64>,
+    /// Incremental prefix-end fold (batches folded, positions covered,
+    /// running end): the frozen prefix is append-only between
+    /// compactions, so [`WaveController::reconcile`] folds only the
+    /// batches frozen since the last call — O(new batch) per dispatch
+    /// instead of O(prefix), which would go quadratic on long
+    /// non-compacted traces. Reset whenever compaction rewrites the
+    /// prefix. Bit-identical to the O(prefix)
+    /// [`WaveController::predicted_prefix_end`] fold (same op order).
+    fold_k: usize,
+    fold_pos: usize,
+    fold_end: f64,
     stats: OnlineStats,
     /// Last replan's search stats (None before the first admission).
     last_search: Option<SearchStats>,
@@ -228,6 +281,11 @@ impl<'a> WaveController<'a> {
             compact: false,
             t0_ms: 0.0,
             retired_jobs: 0,
+            drift_ms: 0.0,
+            reconciled_now: None,
+            fold_k: 0,
+            fold_pos: 0,
+            fold_end: 0.0,
             stats: OnlineStats::default(),
             last_search: None,
         }
@@ -419,33 +477,34 @@ impl<'a> WaveController<'a> {
     /// prediction-table rows, and remap the surviving plan onto the
     /// compacted indices.
     fn compact_dispatched(&mut self) {
+        self.compact_dispatched_at(None);
+    }
+
+    /// [`WaveController::compact_dispatched`] with an optional **measured**
+    /// timeline origin: `Some(now)` adopts the engine's actual free time
+    /// as the new origin instead of the predicted prefix end (drift
+    /// reconciliation — every subsequent predicted start then carries the
+    /// observed drift), `None` keeps the predicted fold, bit for bit.
+    fn compact_dispatched_at(&mut self, measured_t0: Option<f64>) {
         if self.frozen_batches == 0 {
             return;
         }
         let frozen_pos = self.frozen_positions();
-        // Replay the dispatched batches on the timeline exactly as the
-        // sequential evaluation would have (same order, same values —
-        // including each batch's arrival max), so the suffix's predicted
-        // entry waits are unchanged. With the arrival column at zero this
-        // is the plain batch-maxima sum of the pre-timeline controller.
-        let mut start = 0usize;
-        for k in 0..self.frozen_batches {
-            let bsize = self.plan.batches[k];
-            let mut barr = f64::NEG_INFINITY;
-            let mut bmax = 0.0f64;
-            for &j in &self.plan.order[start..start + bsize] {
-                let a = self.table.arrival_ms(j);
-                if a > barr {
-                    barr = a;
-                }
-                let e = self.table.get(j, bsize).exec_ms;
-                if e > bmax {
-                    bmax = e;
-                }
-            }
-            self.t0_ms = TimelineOrigin::batch_start(self.t0_ms, barr) + bmax;
-            start += bsize;
-        }
+        self.t0_ms = match measured_t0 {
+            // Replay the dispatched batches on the timeline exactly as the
+            // sequential evaluation would have (same order, same values —
+            // including each batch's arrival max), so the suffix's
+            // predicted entry waits are unchanged. With the arrival column
+            // at zero this is the plain batch-maxima sum of the
+            // pre-timeline controller.
+            None => self.predicted_prefix_end(),
+            Some(now) => now,
+        };
+        // compaction rewrites plan indices and the origin: restart the
+        // incremental prefix-end fold from the new t0
+        self.fold_k = 0;
+        self.fold_pos = 0;
+        self.fold_end = self.t0_ms;
         let n = self.jobs.len();
         let mut keep = vec![true; n];
         for &j in &self.plan.order[..frozen_pos] {
@@ -583,6 +642,144 @@ impl<'a> WaveController<'a> {
         Ok(res.stats)
     }
 
+    /// Predicted end time (ms) of the dispatched prefix on the wave
+    /// timeline — what the engine clock *should* read once the prefix has
+    /// executed, under the predictions the plan was priced with. Equals
+    /// [`WaveController::t0_ms`] when nothing is frozen.
+    pub fn predicted_prefix_end(&self) -> f64 {
+        let mut free = self.t0_ms;
+        let mut start = 0usize;
+        for k in 0..self.frozen_batches {
+            let bsize = self.plan.batches[k];
+            let mut barr = f64::NEG_INFINITY;
+            let mut bmax = 0.0f64;
+            for &j in &self.plan.order[start..start + bsize] {
+                let a = self.table.arrival_ms(j);
+                if a > barr {
+                    barr = a;
+                }
+                let e = self.table.get(j, bsize).exec_ms;
+                if e > bmax {
+                    bmax = e;
+                }
+            }
+            free = TimelineOrigin::batch_start(free, barr) + bmax;
+            start += bsize;
+        }
+        free
+    }
+
+    /// Latest measured-minus-predicted prefix-end drift (ms); 0 until a
+    /// [`WaveController::reconcile`] with dispatched work, and reset to 0
+    /// by [`WaveController::replan_from_drift`].
+    pub fn drift_ms(&self) -> f64 {
+        self.drift_ms
+    }
+
+    /// Advance the incremental prefix-end fold over the batches frozen
+    /// since the last call and return the predicted prefix end —
+    /// bit-identical to [`WaveController::predicted_prefix_end`] at
+    /// O(newly frozen batches) instead of O(prefix) per call (see the
+    /// `fold_*` field docs).
+    fn fold_prefix_end(&mut self) -> f64 {
+        while self.fold_k < self.frozen_batches {
+            let bsize = self.plan.batches[self.fold_k];
+            let start = self.fold_pos;
+            let mut barr = f64::NEG_INFINITY;
+            let mut bmax = 0.0f64;
+            for &j in &self.plan.order[start..start + bsize] {
+                let a = self.table.arrival_ms(j);
+                if a > barr {
+                    barr = a;
+                }
+                let e = self.table.get(j, bsize).exec_ms;
+                if e > bmax {
+                    bmax = e;
+                }
+            }
+            self.fold_end =
+                TimelineOrigin::batch_start(self.fold_end, barr) + bmax;
+            self.fold_pos += bsize;
+            self.fold_k += 1;
+        }
+        self.fold_end
+    }
+
+    /// Reconcile executed completions against the prediction timeline
+    /// (module docs): record the signed drift between the engine's
+    /// measured clock and [`WaveController::predicted_prefix_end`], plus
+    /// per-request output-length divergence diagnostics from the batch's
+    /// completions. Pure bookkeeping — no RNG, no plan mutation — so
+    /// reconciling never perturbs a run. Returns the signed drift (ms);
+    /// 0 when nothing is dispatched.
+    pub fn reconcile(
+        &mut self,
+        completions: &[Completion],
+        engine_now_ms: f64,
+    ) -> f64 {
+        for c in completions {
+            self.stats.reconciled_jobs += 1;
+            self.stats.lo_abs_divergence_sum +=
+                c.lo_divergence().unsigned_abs() as f64;
+        }
+        if self.frozen_batches == 0 {
+            return 0.0;
+        }
+        let predicted_end = self.fold_prefix_end();
+        debug_assert_eq!(
+            predicted_end.to_bits(),
+            self.predicted_prefix_end().to_bits(),
+            "incremental prefix-end fold diverged from the full fold"
+        );
+        let drift = engine_now_ms - predicted_end;
+        self.drift_ms = drift;
+        self.reconciled_now = Some(engine_now_ms);
+        if drift.abs() > self.stats.max_abs_drift_ms {
+            self.stats.max_abs_drift_ms = drift.abs();
+        }
+        drift
+    }
+
+    /// Shift the timeline origin to the measured engine time recorded by
+    /// the last [`WaveController::reconcile`] and re-run the warm search
+    /// over the undispatched suffix — the drift-reconciling replan behind
+    /// [`OnlineOpts::replan_drift_ms`]. Implies prefix compaction: the
+    /// dispatched work has been *measured*, so re-predicting it would
+    /// re-introduce exactly the drift being corrected. Returns `None`
+    /// when there is nothing to do (no reconciled measurement, nothing
+    /// dispatched, or no live suffix — the origin still shifts in the
+    /// last case).
+    pub fn replan_from_drift(&mut self) -> Option<SearchStats> {
+        let now = self.reconciled_now.take()?;
+        if self.frozen_batches == 0 {
+            return None;
+        }
+        self.compact_dispatched_at(Some(now));
+        self.drift_ms = 0.0;
+        if self.jobs.is_empty() {
+            return None; // origin shifted; nothing live to replan
+        }
+        let params = SaParams { seed: self.replan_seed(), ..self.params };
+        let warm = self.plan.clone();
+        let ev = Evaluator::with_arrivals(
+            &self.jobs,
+            self.predictor,
+            self.t0_ms,
+            self.table.arrivals_all(),
+        );
+        let res =
+            priority_mapping_warm(&ev, &self.table, &params, Some(&warm), 0);
+        debug_assert!(res.schedule.validate(params.max_batch.max(1)).is_ok());
+        self.plan = res.schedule;
+        self.eval = res.eval;
+        self.stats.replans += 1;
+        self.stats.drift_replans += 1;
+        self.stats.replan_ms_total += res.stats.overhead_ms;
+        self.stats.sa_evals += res.stats.evals;
+        self.last_search = Some(res.stats);
+        Some(res.stats)
+    }
+
     /// Pop the next undispatched batch, freezing it in place. Returns
     /// `None` when the whole plan has been dispatched.
     pub fn dispatch_next(&mut self) -> Option<Dispatch> {
@@ -650,6 +847,16 @@ pub struct OnlineOpts {
     /// historical behaviour, bit for bit (and identical to on when every
     /// request arrives at t = 0).
     pub arrival_aware: bool,
+    /// Drift-reconciling replan threshold (ms): after each dispatched
+    /// batch executes, the controller reconciles the measured engine
+    /// clock against the predicted prefix end, and when the |drift|
+    /// reaches this threshold it shifts the timeline origin to the
+    /// measured time and warm-replans the live suffix
+    /// ([`WaveController::replan_from_drift`]). `0.0` (the default)
+    /// disables drift replanning — the historical behaviour, bit for bit
+    /// (reconciliation still records diagnostics; it never mutates the
+    /// plan).
+    pub replan_drift_ms: f64,
 }
 
 /// Event loop: drive one engine from a timestamped arrival stream (module
@@ -759,9 +966,23 @@ pub fn run_online_opts(
                 })
                 .collect();
             let items = engine.run_batch(&batch)?;
+            let first_new = completions.len();
             for (job, item) in d.jobs.iter().zip(&items) {
-                completions
-                    .push(super::to_completion(&requests[job.req_idx], item));
+                completions.push(super::to_completion(
+                    &requests[job.req_idx],
+                    item,
+                    job.output_len,
+                ));
+            }
+            // Reconcile the measured outcome against the prediction
+            // timeline; a drift past the configured threshold triggers
+            // the origin-shifting warm replan (module docs).
+            let drift =
+                ctl.reconcile(&completions[first_new..], engine.now_ms());
+            if opts.replan_drift_ms > 0.0
+                && drift.abs() >= opts.replan_drift_ms
+            {
+                ctl.replan_from_drift();
             }
             continue;
         }
@@ -1325,6 +1546,137 @@ mod tests {
     }
 
     #[test]
+    fn reconcile_measures_prefix_drift_and_replan_shifts_origin() {
+        let pred = predictor();
+        let mut rng = Rng::new(41);
+        let jobs: Vec<Job> = (0..9).map(|i| job(i, &mut rng)).collect();
+        let mut ctl =
+            WaveController::new(&pred, params(3, 6), ReplanStrategy::Warm);
+        ctl.admit(&jobs).unwrap();
+        // nothing dispatched: reconcile is a no-op returning zero drift
+        assert_eq!(ctl.reconcile(&[], 123.0), 0.0);
+        assert_eq!(ctl.drift_ms(), 0.0);
+        assert_eq!(ctl.predicted_prefix_end(), 0.0);
+
+        ctl.dispatch_next().unwrap();
+        let predicted_end = ctl.predicted_prefix_end();
+        assert!(predicted_end > 0.0);
+        // the engine finished 500 ms later than predicted
+        let measured = predicted_end + 500.0;
+        let drift = ctl.reconcile(&[], measured);
+        assert!((drift - 500.0).abs() < 1e-6);
+        assert!((ctl.drift_ms() - 500.0).abs() < 1e-6);
+        assert!((ctl.stats().max_abs_drift_ms - 500.0).abs() < 1e-6);
+
+        let live_before: Vec<usize> = {
+            let fp = ctl.frozen_positions();
+            ctl.plan().order[fp..]
+                .iter()
+                .map(|&j| ctl.jobs()[j].req_idx)
+                .collect()
+        };
+        let stats = ctl.replan_from_drift().expect("drift replan runs");
+        assert!(stats.evals > 0);
+        // the origin is now the measured time, the prefix is compacted,
+        // and the live suffix is preserved as a set
+        assert_eq!(ctl.t0_ms(), measured);
+        assert_eq!(ctl.frozen_batches(), 0);
+        assert_eq!(ctl.drift_ms(), 0.0);
+        assert_eq!(ctl.stats().drift_replans, 1);
+        let mut live_after: Vec<usize> =
+            ctl.jobs().iter().map(|j| j.req_idx).collect();
+        let mut expected = live_before;
+        expected.sort_unstable();
+        live_after.sort_unstable();
+        assert_eq!(live_after, expected);
+        ctl.plan().validate(3).unwrap();
+        // a second replan without a new reconcile is a no-op
+        assert!(ctl.replan_from_drift().is_none());
+    }
+
+    #[test]
+    fn reconcile_tracks_output_length_divergence() {
+        use crate::coordinator::request::TaskType;
+        let pred = predictor();
+        let mut ctl =
+            WaveController::new(&pred, params(2, 1), ReplanStrategy::Warm);
+        let mk = |predicted: usize, actual: usize| Completion {
+            id: 0,
+            task: TaskType::Code,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+            input_len: 10,
+            predicted_lo: predicted,
+            generated: actual,
+            e2e_ms: 1.0,
+            ttft_ms: 1.0,
+            tpot_ms: 0.0,
+            wait_ms: 0.0,
+            batch_size: 1,
+            text: None,
+        };
+        ctl.reconcile(&[mk(10, 14), mk(10, 4)], 0.0);
+        assert_eq!(ctl.stats().reconciled_jobs, 2);
+        // |14 − 10| + |4 − 10| = 10 -> mean 5
+        assert_eq!(ctl.stats().avg_abs_lo_divergence(), 5.0);
+    }
+
+    #[test]
+    fn zero_drift_threshold_run_matches_default_run_bit_for_bit() {
+        // replan_drift_ms = 0 must be the historical event loop exactly —
+        // reconciliation is bookkeeping only.
+        let run = |opts: OnlineOpts| {
+            let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+            profile.noise_std = 0.03; // noisy timing => nonzero drift
+            let pred = profile.truth;
+            let mut engine = SimEngine::new(profile, 2, 9);
+            let mut reqs: Vec<Request> = (0..10)
+                .map(|i| {
+                    Request::synthetic(
+                        i as u64,
+                        TaskType::Code,
+                        120 + 25 * i as usize,
+                        10,
+                        Slo::E2e { e2e_ms: 30_000.0 },
+                    )
+                })
+                .collect();
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ms = 300.0 * (i / 2) as f64;
+            }
+            let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+            run_online_opts(
+                &reqs,
+                &outs,
+                &mut engine,
+                &pred,
+                &params(2, 9),
+                ReplanStrategy::Warm,
+                opts,
+            )
+            .unwrap()
+        };
+        let base = run(OnlineOpts::default());
+        let explicit = run(OnlineOpts { replan_drift_ms: 0.0, ..Default::default() });
+        assert_eq!(base.completions.len(), explicit.completions.len());
+        for (a, b) in base.completions.iter().zip(&explicit.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.e2e_ms.to_bits(), b.e2e_ms.to_bits());
+        }
+        assert_eq!(base.stats.drift_replans, 0);
+        // noisy timing was reconciled (diagnostics only)
+        assert!(base.stats.max_abs_drift_ms > 0.0);
+        // a tiny threshold on the same trace triggers drift replans and
+        // still serves everything exactly once
+        let drifted =
+            run(OnlineOpts { replan_drift_ms: 1e-6, ..Default::default() });
+        assert_eq!(drifted.completions.len(), 10);
+        assert!(drifted.stats.drift_replans > 0);
+        let ids: Vec<u64> =
+            drifted.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
     fn kv_admission_rejects_job_larger_than_pool() {
         use crate::coordinator::kv::KvConfig;
         let pred = predictor();
@@ -1374,7 +1726,7 @@ mod tests {
             &pred,
             &SaParams { kv, ..params(4, 7) },
             ReplanStrategy::Warm,
-            OnlineOpts { compact_dispatched: true },
+            OnlineOpts { compact_dispatched: true, ..Default::default() },
         )
         .unwrap();
         assert_eq!(out.completions.len(), 10);

@@ -52,9 +52,13 @@ impl Policy {
         match self {
             Policy::Fcfs => (Schedule::fcfs(n, max_batch), None),
             Policy::Sjf => {
+                // total_cmp (not partial_cmp().unwrap()): a degenerate
+                // predictor fit can yield NaN solo-e2e values, which must
+                // degrade the ordering, not panic the scheduler — the same
+                // rule the SA seed sort and assign_instances follow.
                 let mut order: Vec<usize> = (0..n).collect();
                 order.sort_by(|&a, &b| {
-                    ev.solo_e2e_ms(a).partial_cmp(&ev.solo_e2e_ms(b)).unwrap()
+                    ev.solo_e2e_ms(a).total_cmp(&ev.solo_e2e_ms(b))
                 });
                 (Schedule::from_order(order, max_batch), None)
             }
@@ -64,10 +68,10 @@ impl Policy {
                     Slo::Interactive { ttft_ms, .. } => ttft_ms,
                 };
                 let mut order: Vec<usize> = (0..n).collect();
+                // total_cmp for the same NaN-safety as Sjf (SLO bounds are
+                // caller-supplied floats).
                 order.sort_by(|&a, &b| {
-                    deadline(&ev.jobs()[a])
-                        .partial_cmp(&deadline(&ev.jobs()[b]))
-                        .unwrap()
+                    deadline(&ev.jobs()[a]).total_cmp(&deadline(&ev.jobs()[b]))
                 });
                 (Schedule::from_order(order, max_batch), None)
             }
@@ -194,6 +198,34 @@ mod tests {
         let (s, stats) = Policy::Exhaustive.plan(&ev, 2);
         assert_eq!(s.order, (0..20).collect::<Vec<_>>()); // FCFS fallback
         assert!(stats.is_none());
+    }
+
+    #[test]
+    fn sjf_survives_degenerate_and_nan_predictors() {
+        // Regression (PR 5): Sjf used partial_cmp().unwrap(), which
+        // panicked whenever a degenerate fit produced NaN solo-e2e.
+        let js = jobs();
+        // all-zero coefficients: every solo e2e is 0.0 — ordering must be
+        // total (stable schedule, no panic) and valid
+        let zero = LatencyPredictor::new(PhaseCoeffs::ZERO, PhaseCoeffs::ZERO);
+        let ev = Evaluator::new(&js, &zero);
+        let (s, _) = Policy::Sjf.plan(&ev, 2);
+        s.validate(2).unwrap();
+        assert_eq!(s.order, vec![0, 1, 2]); // ties keep index order
+        // NaN coefficients (0·NaN propagates): must not panic either
+        let nan = LatencyPredictor::new(
+            PhaseCoeffs { alpha: f64::NAN, beta: 0.0, gamma: 1.0, delta: 0.0 },
+            PhaseCoeffs { alpha: 0.0, beta: f64::NAN, gamma: 0.0, delta: 1.0 },
+        );
+        let ev = Evaluator::new(&js, &nan);
+        let (s, _) = Policy::Sjf.plan(&ev, 2);
+        s.validate(2).unwrap();
+        // Edf shares the total ordering rule for NaN SLO bounds
+        let mut weird = jobs();
+        weird[1].slo = Slo::E2e { e2e_ms: f64::NAN };
+        let ev = Evaluator::new(&weird, &zero);
+        let (s, _) = Policy::Edf.plan(&ev, 2);
+        s.validate(2).unwrap();
     }
 
     #[test]

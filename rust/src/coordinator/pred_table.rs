@@ -46,6 +46,9 @@ pub struct PredTable {
     n: usize,
     max_batch: usize,
     block_tokens: usize,
+    /// Quantile-reservation multiplier the footprints were computed at
+    /// ([`KvConfig::lo_mult`]); 1.0 for the exact (pre-quantile) column.
+    lo_mult: f64,
     entries: Vec<PredictedLatency>,
     /// Per-job KV footprint in blocks (index = job).
     kv_blocks: Vec<u64>,
@@ -90,6 +93,7 @@ impl PredTable {
             n: jobs.len(),
             max_batch,
             block_tokens: kv.block_tokens,
+            lo_mult: kv.lo_mult,
             entries,
             kv_blocks,
             arrival_ms: vec![0.0; jobs.len()],
@@ -132,7 +136,11 @@ impl PredTable {
         arrivals: Option<&[f64]>,
     ) {
         self.entries.reserve(new_jobs.len() * self.max_batch);
-        let kv = KvConfig { block_tokens: self.block_tokens, ..KvConfig::UNLIMITED };
+        let kv = KvConfig {
+            block_tokens: self.block_tokens,
+            lo_mult: self.lo_mult,
+            ..KvConfig::UNLIMITED
+        };
         for (i, job) in new_jobs.iter().enumerate() {
             for b in 1..=self.max_batch {
                 self.entries.push(predictor.predict(
@@ -227,6 +235,12 @@ impl PredTable {
     /// Block granularity the footprints were rounded at.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// Quantile-reservation multiplier the footprints were computed at
+    /// (1.0 unless built with a [`KvConfig::lo_mult`] above one).
+    pub fn lo_mult(&self) -> f64 {
+        self.lo_mult
     }
 
     pub fn max_batch(&self) -> usize {
@@ -344,6 +358,31 @@ mod tests {
             &pred,
         );
         assert_eq!(grown.kv_blocks(2), 2);
+    }
+
+    #[test]
+    fn quantile_column_survives_extend() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let job = |i: usize| Job {
+            req_idx: i,
+            input_len: 30,
+            output_len: 10,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        };
+        let kv = KvConfig::hard(100).with_lo_mult(2.0);
+        let mut table = PredTable::build_kv(&[job(0)], &pred, 3, &kv);
+        assert_eq!(table.lo_mult(), 2.0);
+        // 30 + 2×10 = 50 tokens -> 4 blocks of 16
+        assert_eq!(table.kv_blocks(0), 4);
+        // extend must keep charging the same conservative column
+        table.extend(&[job(1)], &pred);
+        assert_eq!(table.kv_blocks(1), 4);
+        assert_eq!(table.kv_blocks(1), kv.job_blocks(30, 10));
+        // the default column is the exact one
+        let plain = PredTable::build(&[job(0)], &pred, 3);
+        assert_eq!(plain.lo_mult(), 1.0);
+        assert_eq!(plain.kv_blocks(0), 3); // 40 tokens -> 3 blocks
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! Coefficients are fitted from profiling samples with ordinary least
 //! squares ([`fit_phase`]), exactly as §4.2 prescribes.
 
-use crate::util::stats::{least_squares, r_squared};
+use crate::util::stats::{least_squares, normal_quantile, r_squared};
 
 /// Fitting coefficients for one phase (Eq. 14 / Eq. 15).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -128,6 +128,16 @@ pub fn fit_phase(samples: &[PhaseSample]) -> Option<(PhaseCoeffs, f64)> {
 pub struct LatencyPredictor {
     pub prefill: PhaseCoeffs,
     pub decode: PhaseCoeffs,
+    /// **Quantile head**: lognormal σ of the output-length residuals
+    /// `ln(actual_lo / predicted_lo)`, fitted from profiling residuals
+    /// ([`fit_lo_sigma`]). `0.0` (the default) means the point prediction
+    /// is treated as exact and every quantile collapses onto it —
+    /// bit-identical to the pre-quantile predictor. A positive σ lets the
+    /// KV layer reserve at a conservative output-length quantile
+    /// ([`LatencyPredictor::quantile`]) while the latency objective keeps
+    /// pricing the mean prediction — separating latency optimism from
+    /// memory safety.
+    pub lo_sigma: f64,
 }
 
 /// Predicted phase latencies for one request at a given batch size.
@@ -143,7 +153,14 @@ pub struct PredictedLatency {
 
 impl LatencyPredictor {
     pub fn new(prefill: PhaseCoeffs, decode: PhaseCoeffs) -> Self {
-        LatencyPredictor { prefill, decode }
+        LatencyPredictor { prefill, decode, lo_sigma: 0.0 }
+    }
+
+    /// This predictor with the quantile head's residual σ set (see the
+    /// `lo_sigma` field docs). `0.0` restores the exact-point behaviour.
+    pub fn with_lo_sigma(mut self, lo_sigma: f64) -> Self {
+        self.lo_sigma = lo_sigma.max(0.0);
+        self
     }
 
     /// Paper Table 2 coefficients (Qwen2.5-7B on 2×V100, ms units).
@@ -161,7 +178,31 @@ impl LatencyPredictor {
                 gamma: 0.00088,
                 delta: 15.85,
             },
+            lo_sigma: 0.0,
         }
+    }
+
+    /// Quantile-head multiplier at quantile `q`: `exp(σ·Φ⁻¹(q))` on the
+    /// fitted lognormal residual model. Returns exactly `1.0` at the
+    /// median or when no residual model is fitted (`lo_sigma == 0`) — the
+    /// bit-identity escape hatch every pre-quantile caller relies on.
+    /// `q` is clamped to (0, 1) exclusive so the multiplier stays finite.
+    #[inline]
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_multiplier(self.lo_sigma, q)
+    }
+
+    /// Conservative output length at quantile `q`: the point prediction
+    /// scaled by the quantile-head multiplier, rounded up (never below the
+    /// point prediction for q ≥ 0.5). Equals `predicted_lo` verbatim when
+    /// the head is unfitted — the `lo_q` column then *is* the mean column.
+    #[inline]
+    pub fn lo_quantile(&self, predicted_lo: usize, q: f64) -> usize {
+        let m = self.quantile(q);
+        if m == 1.0 {
+            return predicted_lo;
+        }
+        (predicted_lo as f64 * m).ceil() as usize
     }
 
     /// Eq. 14: prefill latency (ms).
@@ -220,8 +261,37 @@ impl LatencyPredictor {
     ) -> Option<(Self, f64, f64)> {
         let (prefill, r2_p) = fit_phase(prefill_samples)?;
         let (decode, r2_d) = fit_phase(decode_samples)?;
-        Some((LatencyPredictor { prefill, decode }, r2_p, r2_d))
+        Some((LatencyPredictor { prefill, decode, lo_sigma: 0.0 }, r2_p, r2_d))
     }
+}
+
+/// Quantile multiplier of a lognormal residual model: `exp(σ·Φ⁻¹(q))`,
+/// exactly `1.0` at `σ = 0` or `q = 0.5`. The single definition behind
+/// [`LatencyPredictor::quantile`] and the CLI's `--kv-quantile`.
+#[inline]
+pub fn quantile_multiplier(sigma: f64, q: f64) -> f64 {
+    if sigma == 0.0 || q == 0.5 {
+        return 1.0;
+    }
+    let q = q.clamp(1e-9, 1.0 - 1e-9);
+    (sigma * normal_quantile(q)).exp()
+}
+
+/// Fit the quantile head's lognormal σ from observed
+/// `(predicted_lo, actual_lo)` residual pairs: the standard deviation of
+/// `ln(actual / predicted)` over pairs where both sides are positive.
+/// Returns `0.0` (the exact-point head) when fewer than two usable pairs
+/// exist — an unfitted head must never inflate reservations.
+pub fn fit_lo_sigma(pairs: &[(usize, usize)]) -> f64 {
+    let logs: Vec<f64> = pairs
+        .iter()
+        .filter(|&&(p, a)| p > 0 && a > 0)
+        .map(|&(p, a)| (a as f64 / p as f64).ln())
+        .collect();
+    if logs.len() < 2 {
+        return 0.0;
+    }
+    crate::util::stats::std_dev(&logs)
 }
 
 #[cfg(test)]
@@ -335,6 +405,55 @@ mod tests {
         let s = vec![PhaseSample { batch: 1, len: 100, ms: 1.0 }; 10];
         assert!(fit_phase(&s).is_none());
         assert!(fit_phase(&s[..2]).is_none());
+    }
+
+    #[test]
+    fn quantile_head_unfitted_is_identity() {
+        let pred = p();
+        assert_eq!(pred.lo_sigma, 0.0);
+        for &q in &[0.01, 0.5, 0.9, 0.99] {
+            assert_eq!(pred.quantile(q).to_bits(), 1.0f64.to_bits());
+            assert_eq!(pred.lo_quantile(137, q), 137);
+        }
+    }
+
+    #[test]
+    fn quantile_head_is_monotone_and_median_exact() {
+        let pred = p().with_lo_sigma(0.5);
+        assert!(pred.quantile(0.9) > 1.0);
+        assert!(pred.quantile(0.1) < 1.0);
+        assert!(pred.quantile(0.99) > pred.quantile(0.9));
+        // the median always returns the point prediction, same bits
+        assert_eq!(pred.quantile(0.5).to_bits(), 1.0f64.to_bits());
+        assert_eq!(pred.lo_quantile(200, 0.5), 200);
+        // a conservative quantile rounds up, never below the prediction
+        assert!(pred.lo_quantile(200, 0.9) > 200);
+        // known value: exp(0.5 · Φ⁻¹(0.9)) ≈ exp(0.6408) ≈ 1.898
+        assert!((pred.quantile(0.9) - 1.8979).abs() < 1e-3);
+        // negative σ is clamped to the exact head
+        assert_eq!(p().with_lo_sigma(-1.0).lo_sigma, 0.0);
+    }
+
+    #[test]
+    fn lo_sigma_fit_recovers_known_residual_spread() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x51_6A);
+        let truth = 0.3f64;
+        let pairs: Vec<(usize, usize)> = (0..4000)
+            .map(|_| {
+                let p = 50 + rng.below(400);
+                let a = ((p as f64) * (truth * rng.normal()).exp())
+                    .round()
+                    .max(1.0) as usize;
+                (p, a)
+            })
+            .collect();
+        let sigma = fit_lo_sigma(&pairs);
+        assert!((sigma - truth).abs() < 0.03, "fitted σ {sigma}");
+        // degenerate inputs fall back to the exact head
+        assert_eq!(fit_lo_sigma(&[]), 0.0);
+        assert_eq!(fit_lo_sigma(&[(10, 12)]), 0.0);
+        assert_eq!(fit_lo_sigma(&[(0, 5), (7, 0)]), 0.0);
     }
 
     #[test]

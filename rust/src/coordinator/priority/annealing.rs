@@ -474,6 +474,13 @@ pub fn priority_mapping_warm(
         table.block_tokens(),
         params.kv.block_tokens
     );
+    assert!(
+        !params.kv.binding() || table.lo_mult() == params.kv.lo_mult,
+        "prediction table reservation column computed at lo_mult {} but \
+         the search enforces lo_mult {}",
+        table.lo_mult(),
+        params.kv.lo_mult
+    );
 
     if frozen_batches > 0 {
         let warm = warm.expect("a frozen prefix requires a warm-start schedule");

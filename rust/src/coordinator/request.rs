@@ -151,7 +151,11 @@ pub struct Completion {
     pub task: TaskType,
     pub slo: Slo,
     pub input_len: usize,
-    /// Tokens actually generated.
+    /// Output length the scheduler planned this request at (its predicted
+    /// `l_o`); compare against `generated` — the actual `l_o` — to
+    /// measure output-length divergence per request.
+    pub predicted_lo: usize,
+    /// Tokens actually generated (the actual `l_o`).
     pub generated: usize,
     /// Wall/virtual-clock timings (ms).
     pub e2e_ms: f64,
@@ -168,6 +172,12 @@ impl Completion {
     /// Eq. 7 attainment flag.
     pub fn slo_met(&self) -> bool {
         self.slo.met(self.e2e_ms, self.ttft_ms, self.tpot_ms)
+    }
+
+    /// Signed actual-minus-predicted output-length divergence (tokens):
+    /// positive for overruns, negative for early EOS.
+    pub fn lo_divergence(&self) -> i64 {
+        self.generated as i64 - self.predicted_lo as i64
     }
 }
 
@@ -218,6 +228,7 @@ mod tests {
             task: TaskType::Code,
             slo: Slo::E2e { e2e_ms: 50.0 },
             input_len: 10,
+            predicted_lo: 8,
             generated: 5,
             e2e_ms: 49.0,
             ttft_ms: 1.0,
@@ -227,5 +238,6 @@ mod tests {
             text: None,
         };
         assert!(c.slo_met());
+        assert_eq!(c.lo_divergence(), -3); // 5 generated vs 8 predicted
     }
 }

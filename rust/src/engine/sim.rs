@@ -22,6 +22,125 @@ use crate::coordinator::kv::{phased_peak_blocks, KvPhaseModel};
 use crate::engine::kv_cache::{BlockAllocator, KvCacheConfig};
 use crate::engine::{validate_batch, Engine, EngineRequest, ItemResult};
 use crate::util::rng::Rng;
+use crate::util::stats::normal_quantile;
+
+/// How each request's **true** decode length diverges from the nominal
+/// (predicted) length the engine is handed in
+/// [`EngineRequest::max_new_tokens`].
+///
+/// The scheduler plans on predicted output lengths; a real serving stack
+/// then watches requests hit EOS earlier or later than predicted. With a
+/// divergence model on, the engine re-interprets `max_new_tokens` as the
+/// *prediction* and samples the true decode length around it — finishing
+/// each member at its true EOS step, releasing its KV then (short
+/// outputs free memory early, overruns hold it and keep growing). The
+/// sampled lengths come from a dedicated divergence RNG stream, so the
+/// timing-noise stream — and therefore every [`DivergenceModel::Off`]
+/// run — is byte-identical to the pre-divergence engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DivergenceModel {
+    /// No divergence: true length == nominal length, execution takes the
+    /// legacy code path bit for bit (the escape hatch pinned by
+    /// `tests/divergence_robustness.rs`).
+    Off,
+    /// `actual = round(nominal · exp(σ·z))`, `z ~ N(0,1)` drawn per
+    /// request (in batch/admission order) from the divergence stream.
+    Lognormal { sigma: f64 },
+    /// Same lognormal family, but the multiplier is a pure function of
+    /// the request **id** — a reproducible divergence *trace* that stays
+    /// identical across policies, schedulers, engines, and execution
+    /// orders (the apples-to-apples setting for baseline comparisons).
+    QuantileTrace { sigma: f64 },
+}
+
+impl DivergenceModel {
+    #[inline]
+    pub fn is_off(&self) -> bool {
+        matches!(self, DivergenceModel::Off)
+    }
+
+    /// The model's lognormal σ (0 for [`DivergenceModel::Off`]).
+    pub fn sigma(&self) -> f64 {
+        match *self {
+            DivergenceModel::Off => 0.0,
+            DivergenceModel::Lognormal { sigma }
+            | DivergenceModel::QuantileTrace { sigma } => sigma,
+        }
+    }
+
+    /// The CLI/JSON spec string this model parses back from
+    /// ([`DivergenceModel::parse`] roundtrip).
+    pub fn spec(&self) -> String {
+        match *self {
+            DivergenceModel::Off => "off".into(),
+            DivergenceModel::Lognormal { sigma } => format!("lognormal:{sigma}"),
+            DivergenceModel::QuantileTrace { sigma } => {
+                format!("quantile-trace:{sigma}")
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `off | lognormal:<σ> | quantile-trace:<σ>`.
+    pub fn parse(spec: &str) -> Result<DivergenceModel, String> {
+        fn sigma_of(s: &str, spec: &str) -> Result<f64, String> {
+            let sigma: f64 = s
+                .parse()
+                .map_err(|_| format!("bad σ in divergence spec '{spec}'"))?;
+            if !sigma.is_finite() || sigma < 0.0 {
+                return Err(format!(
+                    "divergence σ must be finite and ≥ 0, got {sigma}"
+                ));
+            }
+            Ok(sigma)
+        }
+        if spec == "off" {
+            Ok(DivergenceModel::Off)
+        } else if let Some(s) = spec.strip_prefix("lognormal:") {
+            Ok(DivergenceModel::Lognormal { sigma: sigma_of(s, spec)? })
+        } else if let Some(s) = spec.strip_prefix("quantile-trace:") {
+            Ok(DivergenceModel::QuantileTrace { sigma: sigma_of(s, spec)? })
+        } else {
+            Err(format!(
+                "bad divergence spec '{spec}' \
+                 (off | lognormal:<σ> | quantile-trace:<σ>)"
+            ))
+        }
+    }
+
+    /// Sample the true decode length for a request predicted at `nominal`
+    /// tokens. Draw discipline: [`DivergenceModel::Lognormal`] consumes
+    /// exactly one normal variate per call (even for `nominal == 0`, so
+    /// the stream position is independent of request content);
+    /// [`DivergenceModel::QuantileTrace`] consumes nothing — its
+    /// multiplier is derived from the request id alone.
+    pub fn actual_lo(&self, id: u64, nominal: usize, rng: &mut Rng) -> usize {
+        match *self {
+            DivergenceModel::Off => nominal,
+            DivergenceModel::Lognormal { sigma } => {
+                let mult = (sigma * rng.normal()).exp();
+                scale_lo(nominal, mult)
+            }
+            DivergenceModel::QuantileTrace { sigma } => {
+                let u = Rng::new(id ^ 0xD1_5C0D_E5)
+                    .f64()
+                    .clamp(1e-9, 1.0 - 1e-9);
+                scale_lo(nominal, (sigma * normal_quantile(u)).exp())
+            }
+        }
+    }
+}
+
+/// Scale a nominal output length by a divergence multiplier: rounded,
+/// never below one token (prefill always emits one) — except that a
+/// zero-token nominal stays zero, mirroring the engine's legacy
+/// zero-budget handling.
+#[inline]
+fn scale_lo(nominal: usize, mult: f64) -> usize {
+    if nominal == 0 {
+        return 0;
+    }
+    ((nominal as f64 * mult).round() as usize).max(1)
+}
 
 /// Virtual-clock engine over a hardware profile.
 pub struct SimEngine {
@@ -39,6 +158,17 @@ pub struct SimEngine {
     /// boundary at a time during decode, and frees each member the step
     /// it completes, admitting any batch whose *occupancy peak* fits.
     kv_phase: KvPhaseModel,
+    /// Actual-vs-predicted output-length divergence (see
+    /// [`DivergenceModel`]); `Off` replays the legacy engine byte for
+    /// byte — same RNG stream, same KV behaviour, same completions.
+    divergence: DivergenceModel,
+    /// Dedicated RNG stream for divergence sampling, separate from the
+    /// timing-noise stream so enabling divergence never perturbs timing.
+    div_rng: Rng,
+    /// Members whose decode was force-stopped by KV-pool exhaustion under
+    /// divergence (EOS-on-OOM; diagnostics — see
+    /// [`SimEngine::kv_truncations`]).
+    kv_truncations: usize,
     /// Batches executed (diagnostics).
     pub batches_run: usize,
     /// Decode iterations executed (diagnostics).
@@ -63,10 +193,33 @@ impl SimEngine {
             seed,
             kv: BlockAllocator::new(kv_cfg),
             kv_phase: KvPhaseModel::Reserve,
+            divergence: DivergenceModel::Off,
+            div_rng: Rng::new(seed ^ 0xD117_E26E),
+            kv_truncations: 0,
             batches_run: 0,
             decode_steps: 0,
             peak_used_blocks: 0,
         }
+    }
+
+    /// This engine with an output-length divergence model (see
+    /// [`DivergenceModel`]). [`DivergenceModel::Off`] (the default) is a
+    /// no-op — the constructor's engine, bit for bit.
+    pub fn with_divergence(mut self, divergence: DivergenceModel) -> Self {
+        self.divergence = divergence;
+        self
+    }
+
+    /// The configured output-length divergence model.
+    pub fn divergence(&self) -> DivergenceModel {
+        self.divergence
+    }
+
+    /// Members force-stopped at EOS by KV-pool exhaustion under
+    /// divergence (always 0 with divergence off: planned batches are
+    /// pre-checked and static).
+    pub fn kv_truncations(&self) -> usize {
+        self.kv_truncations
     }
 
     /// This engine with phase-aware planned-batch KV accounting (see the
@@ -109,11 +262,13 @@ impl SimEngine {
     pub fn reset(&mut self, seed: u64) {
         self.clock_ms = 0.0;
         self.rng = Rng::new(seed ^ 0x51_E2_61_4E);
+        self.div_rng = Rng::new(seed ^ 0xD117_E26E);
         self.seed = seed;
         self.kv.reset();
         self.batches_run = 0;
         self.decode_steps = 0;
         self.peak_used_blocks = 0;
+        self.kv_truncations = 0;
     }
 
     /// Continuous-batching FCFS execution (the vLLM baseline).
@@ -126,23 +281,45 @@ impl SimEngine {
         &mut self,
         arrivals: &[(f64, EngineRequest)],
     ) -> Result<Vec<ItemResult>> {
-        let mut pending: std::collections::VecDeque<&(f64, EngineRequest)> =
-            arrivals.iter().collect();
+        // True decode lengths under the divergence model, sampled once per
+        // request in input order (a single draw each, independent of the
+        // admission dynamics below). With divergence off this is the
+        // nominal budget verbatim and no RNG is consumed.
+        let actuals: Vec<usize> = arrivals
+            .iter()
+            .map(|(_, r)| {
+                self.divergence
+                    .actual_lo(r.id, r.max_new_tokens, &mut self.div_rng)
+                    .min(
+                        self.profile
+                            .max_total_tokens
+                            .saturating_sub(r.input_len),
+                    )
+            })
+            .collect();
+        let mut pending: std::collections::VecDeque<usize> =
+            (0..arrivals.len()).collect();
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<ItemResult> = Vec::new();
 
         while !pending.is_empty() || !active.is_empty() {
             // jump to the next arrival if idle
             if active.is_empty() {
-                if let Some((t, _)) = pending.front() {
-                    if *t > self.clock_ms {
-                        self.clock_ms = *t;
+                if let Some(&idx) = pending.front() {
+                    let t = arrivals[idx].0;
+                    if t > self.clock_ms {
+                        self.clock_ms = t;
                     }
                 }
             }
-            // admit: arrival time passed + slot free + KV fits
-            let mut admitted: Vec<&EngineRequest> = Vec::new();
-            while let Some((t, req)) = pending.front() {
+            // admit: arrival time passed + slot free + KV fits. Admission
+            // always prices the NOMINAL budget — under divergence the
+            // true length is unknown until EOS, so the baseline gets no
+            // oracle knowledge; overruns extend (or truncate) below,
+            // exactly like the planned-batch path.
+            let mut admitted: Vec<usize> = Vec::new();
+            while let Some(&idx) = pending.front() {
+                let (t, req) = &arrivals[idx];
                 if *t > self.clock_ms
                     || active.len() + admitted.len() >= self.max_batch
                 {
@@ -155,7 +332,7 @@ impl SimEngine {
                 self.kv.alloc_seq(req.id, total)?;
                 self.peak_used_blocks =
                     self.peak_used_blocks.max(self.kv.used_blocks());
-                admitted.push(req);
+                admitted.push(idx);
                 pending.pop_front();
             }
             if !admitted.is_empty() {
@@ -163,7 +340,7 @@ impl SimEngine {
                 let b = admitted.len();
                 let max_in = admitted
                     .iter()
-                    .map(|r| r.input_len)
+                    .map(|&i| arrivals[i].1.input_len)
                     .max()
                     .unwrap_or(1);
                 let start = self.clock_ms;
@@ -171,12 +348,17 @@ impl SimEngine {
                     * self.noise();
                 self.clock_ms += t_prefill;
                 self.batches_run += 1;
-                for req in admitted {
+                for &idx in &admitted {
+                    let req = &arrivals[idx].1;
                     active.push(Active {
                         id: req.id,
-                        // prefill emits the first token
-                        remaining: req.max_new_tokens.max(1) - 1,
+                        // prefill emits the first token; the true length
+                        // (== nominal when divergence is off) drives EOS
+                        remaining: actuals[idx].max(1) - 1,
                         accumulated: req.input_len + 1,
+                        // tokens the admission reservation covers; decode
+                        // growth beyond it must extend the allocation
+                        alloc_tokens: req.input_len + req.max_new_tokens,
                         start_ms: start,
                         first_token_ms: self.clock_ms,
                         generated: 1,
@@ -204,15 +386,183 @@ impl SimEngine {
             let step = self.profile.truth.tpot_at(b, max_acc) * self.noise();
             self.clock_ms += step;
             self.decode_steps += 1;
+            let diverging = !self.divergence.is_off();
             for a in active.iter_mut() {
+                if diverging && a.accumulated + 1 > a.alloc_tokens {
+                    // overrun past the nominal reservation: grow the
+                    // allocation, or force EOS leak-free if the pool is
+                    // exhausted (the member retires this iteration)
+                    if self.kv.extend_seq(a.id, 1).is_err() {
+                        a.remaining = 0;
+                        self.kv_truncations += 1;
+                        continue;
+                    }
+                    a.alloc_tokens += 1;
+                }
                 a.accumulated += 1;
                 a.generated += 1;
                 a.remaining = a.remaining.saturating_sub(1);
+            }
+            if diverging {
+                self.peak_used_blocks =
+                    self.peak_used_blocks.max(self.kv.used_blocks());
             }
             Self::retire(&mut active, &mut done, &mut self.kv, self.clock_ms, b);
         }
         done.sort_by_key(|r| r.id);
         Ok(done)
+    }
+
+    /// Planned-batch KV demand (blocks) under the configured phase model,
+    /// over the **nominal** budgets — the quantity the scheduler's
+    /// feasibility proof speaks about, shared by both execution paths.
+    fn planned_demand_blocks(&self, batch: &[EngineRequest]) -> usize {
+        if matches!(self.kv_phase, KvPhaseModel::Phased) {
+            let members: Vec<(usize, usize)> = batch
+                .iter()
+                .map(|r| (r.input_len, r.max_new_tokens))
+                .collect();
+            phased_peak_blocks(&members, self.kv.config().block_tokens) as usize
+        } else {
+            batch
+                .iter()
+                .map(|r| self.kv.blocks_needed(r.input_len + r.max_new_tokens))
+                .sum()
+        }
+    }
+
+    /// Planned-batch execution under an active [`DivergenceModel`]: each
+    /// member's true decode length is sampled around its nominal budget,
+    /// and the member finishes (and frees its KV) at its true EOS step.
+    ///
+    /// KV discipline: admission is pre-checked against the *nominal*
+    /// demand under the configured phase model — the scheduler's
+    /// feasibility contract — then execution tracks occupancy exactly
+    /// (prompt + first token at prefill, one-token growth per decode
+    /// step, release at EOS), because divergence invalidates both static
+    /// reservation models. A member whose growth hits an exhausted pool
+    /// is force-stopped at its current length (EOS-on-OOM, counted in
+    /// [`SimEngine::kv_truncations`]) rather than overcommitting,
+    /// erroring, or leaking.
+    fn run_batch_divergent(
+        &mut self,
+        batch: &[EngineRequest],
+    ) -> Result<Vec<ItemResult>> {
+        let b = batch.len();
+        // One divergence draw per member, batch order (see
+        // `DivergenceModel::actual_lo` for the draw discipline).
+        let actual: Vec<usize> = batch
+            .iter()
+            .map(|r| {
+                self.divergence
+                    .actual_lo(r.id, r.max_new_tokens, &mut self.div_rng)
+                    .min(
+                        self.profile
+                            .max_total_tokens
+                            .saturating_sub(r.input_len),
+                    )
+            })
+            .collect();
+        let need_blocks = self.planned_demand_blocks(batch);
+        if need_blocks > self.kv.free_blocks() {
+            anyhow::bail!(
+                "planned batch of {b} requests overcommits the KV pool: \
+                 needs {need_blocks} blocks ({:?} demand), {} free of {} \
+                 total — the scheduler planned an infeasible batch",
+                self.kv_phase,
+                self.kv.free_blocks(),
+                self.kv.config().total_blocks,
+            );
+        }
+        for (i, r) in batch.iter().enumerate() {
+            // prompt + the prefill token (zero-output members pin only
+            // their prompt, mirroring the phased path's clamp)
+            let tokens = r.input_len + actual[i].min(1);
+            if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
+                for done in &batch[..i] {
+                    let _ = self.kv.free_seq(done.id);
+                }
+                return Err(e.into());
+            }
+        }
+        self.peak_used_blocks = self.peak_used_blocks.max(self.kv.used_blocks());
+        let start = self.clock_ms;
+        let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
+        let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
+        self.clock_ms += t_prefill;
+        self.batches_run += 1;
+        let first_token_ms = self.clock_ms;
+
+        let mut remaining: Vec<usize> =
+            actual.iter().map(|&a| a.max(1) - 1).collect();
+        let mut accumulated: Vec<usize> =
+            batch.iter().map(|r| r.input_len + 1).collect();
+        let mut generated = vec![1usize; b];
+        let mut finish = vec![first_token_ms; b];
+        let mut truncated = vec![false; b];
+        let mut live = remaining.iter().filter(|&&r| r > 0).count();
+        // members whose single token came out of prefill free immediately
+        for (i, r) in batch.iter().enumerate() {
+            if remaining[i] == 0 {
+                self.kv.free_seq(r.id)?;
+            }
+        }
+        while live > 0 {
+            let max_acc = accumulated
+                .iter()
+                .zip(&remaining)
+                .filter(|(_, rem)| **rem > 0)
+                .map(|(a, _)| *a)
+                .max()
+                .unwrap_or(0);
+            let step = self.profile.truth.tpot_at(b, max_acc) * self.noise();
+            self.clock_ms += step;
+            self.decode_steps += 1;
+            // grow every live member by the token it is about to emit,
+            // recording the true within-step peak before any release
+            for (i, r) in batch.iter().enumerate() {
+                if remaining[i] > 0 && self.kv.extend_seq(r.id, 1).is_err() {
+                    truncated[i] = true;
+                }
+            }
+            self.peak_used_blocks =
+                self.peak_used_blocks.max(self.kv.used_blocks());
+            for i in 0..b {
+                if remaining[i] == 0 {
+                    continue;
+                }
+                if truncated[i] {
+                    // EOS-on-OOM: stop at the current length, free now
+                    truncated[i] = false;
+                    remaining[i] = 0;
+                    live -= 1;
+                    self.kv_truncations += 1;
+                    self.kv.free_seq(batch[i].id)?;
+                    continue;
+                }
+                remaining[i] -= 1;
+                accumulated[i] += 1;
+                generated[i] += 1;
+                finish[i] = self.clock_ms;
+                if remaining[i] == 0 {
+                    live -= 1;
+                    self.kv.free_seq(batch[i].id)?;
+                }
+            }
+        }
+        Ok(batch
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ItemResult {
+                id: r.id,
+                start_ms: start,
+                first_token_ms,
+                finish_ms: finish[i],
+                generated: generated[i],
+                batch_size: b,
+                text: None,
+            })
+            .collect())
     }
 
     fn retire(
@@ -248,6 +598,10 @@ struct Active {
     id: u64,
     remaining: usize,
     accumulated: usize,
+    /// Tokens covered by the admission-time KV reservation (prompt +
+    /// nominal budget); only consulted under divergence, where decode
+    /// may overrun it and must extend the allocation.
+    alloc_tokens: usize,
     start_ms: f64,
     first_token_ms: f64,
     generated: usize,
@@ -273,6 +627,12 @@ impl Engine for SimEngine {
 
     fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
         validate_batch(self, batch)?;
+        if !self.divergence.is_off() {
+            // Divergent execution is a separate path so that `Off` keeps
+            // this legacy body — RNG stream, KV behaviour, completions —
+            // byte for byte.
+            return self.run_batch_divergent(batch);
+        }
         let b = batch.len();
         let phased = matches!(self.kv_phase, KvPhaseModel::Phased);
         // KV admission for the whole batch, checked up front: a planned
@@ -283,18 +643,7 @@ impl Engine for SimEngine {
         // of full footprints; phased mode checks the exact occupancy peak
         // of the lockstep profile it is about to execute, then allocates
         // prompt KV only.
-        let need_blocks: usize = if phased {
-            let members: Vec<(usize, usize)> = batch
-                .iter()
-                .map(|r| (r.input_len, r.max_new_tokens))
-                .collect();
-            phased_peak_blocks(&members, self.kv.config().block_tokens) as usize
-        } else {
-            batch
-                .iter()
-                .map(|r| self.kv.blocks_needed(r.input_len + r.max_new_tokens))
-                .sum()
-        };
+        let need_blocks = self.planned_demand_blocks(batch);
         if need_blocks > self.kv.free_blocks() {
             anyhow::bail!(
                 "planned batch of {b} requests overcommits the KV pool: \
@@ -681,5 +1030,157 @@ mod tests {
         assert_eq!(out[0].generated, 1);
         assert!((out[0].finish_ms - out[0].first_token_ms).abs() < 1e-9);
         assert_eq!(out[0].tpot_ms(), 0.0);
+    }
+
+    #[test]
+    fn divergence_spec_parsing() {
+        assert_eq!(DivergenceModel::parse("off"), Ok(DivergenceModel::Off));
+        assert_eq!(
+            DivergenceModel::parse("lognormal:0.5"),
+            Ok(DivergenceModel::Lognormal { sigma: 0.5 })
+        );
+        assert_eq!(
+            DivergenceModel::parse("quantile-trace:0.2"),
+            Ok(DivergenceModel::QuantileTrace { sigma: 0.2 })
+        );
+        assert!(DivergenceModel::parse("lognormal:x").is_err());
+        assert!(DivergenceModel::parse("lognormal:-1").is_err());
+        assert!(DivergenceModel::parse("gamma:0.5").is_err());
+        assert_eq!(DivergenceModel::Off.sigma(), 0.0);
+        assert_eq!(
+            DivergenceModel::Lognormal { sigma: 0.3 }.sigma(),
+            0.3
+        );
+    }
+
+    #[test]
+    fn divergence_off_is_bit_identical_to_default_engine() {
+        // the escape hatch: `with_divergence(Off)` must replay the
+        // constructor's engine byte for byte — noisy timing included.
+        let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        let batch = vec![req(1, 500, 20), req(2, 400, 10)];
+        let mut plain = SimEngine::new(profile.clone(), 4, 7);
+        let mut off = SimEngine::new(profile, 4, 7)
+            .with_divergence(DivergenceModel::Off);
+        let a = plain.run_batch(&batch).unwrap();
+        let b = off.run_batch(&batch).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.first_token_ms.to_bits(), y.first_token_ms.to_bits());
+            assert_eq!(x.generated, y.generated);
+        }
+        assert_eq!(off.kv_truncations(), 0);
+        assert_eq!(plain.peak_used_blocks(), off.peak_used_blocks());
+    }
+
+    #[test]
+    fn lognormal_sigma_zero_has_off_timing_and_lengths() {
+        // σ = 0 draws from the divergence stream but scales by exactly
+        // 1.0: actual == nominal, and because the divergence stream is
+        // separate from the noise stream, timing matches Off bit for bit.
+        let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        let batch = vec![req(1, 500, 20), req(2, 300, 7)];
+        let mut off = SimEngine::new(profile.clone(), 4, 5);
+        let mut zero = SimEngine::new(profile, 4, 5)
+            .with_divergence(DivergenceModel::Lognormal { sigma: 0.0 });
+        let a = off.run_batch(&batch).unwrap();
+        let b = zero.run_batch(&batch).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.generated, y.generated);
+        }
+        assert_eq!(zero.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn lognormal_divergence_changes_lengths_without_leaking() {
+        let mut e = SimEngine::new(quiet_profile(), 4, 3)
+            .with_divergence(DivergenceModel::Lognormal { sigma: 0.5 });
+        let batch: Vec<EngineRequest> =
+            (0..4).map(|i| req(i, 200, 40)).collect();
+        let out = e.run_batch(&batch).unwrap();
+        assert_eq!(out.len(), 4);
+        // identical nominals, per-request divergence: lengths spread out
+        assert!(
+            out.iter().any(|r| r.generated != 40),
+            "σ=0.5 produced no divergence: {:?}",
+            out.iter().map(|r| r.generated).collect::<Vec<_>>()
+        );
+        // short members finish before long ones; everyone frees its KV
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
+        // reruns with the same seed replay the same divergence
+        let mut e2 = SimEngine::new(quiet_profile(), 4, 3)
+            .with_divergence(DivergenceModel::Lognormal { sigma: 0.5 });
+        let out2 = e2.run_batch(&batch).unwrap();
+        for (x, y) in out.iter().zip(&out2) {
+            assert_eq!(x.generated, y.generated);
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantile_trace_is_a_pure_function_of_the_request_id() {
+        let model = DivergenceModel::QuantileTrace { sigma: 0.4 };
+        let mut rng_a = Rng::new(1);
+        let mut rng_b = Rng::new(999);
+        for id in 0..200u64 {
+            let a = model.actual_lo(id, 100, &mut rng_a);
+            let b = model.actual_lo(id, 100, &mut rng_b);
+            assert_eq!(a, b, "id {id} depends on more than the id");
+        }
+        // the trace stream consumed nothing
+        assert_eq!(rng_a.next_u64(), Rng::new(1).next_u64());
+        // and the multipliers actually vary across ids
+        let distinct: std::collections::BTreeSet<usize> = (0..50)
+            .map(|id| model.actual_lo(id, 100, &mut rng_a))
+            .collect();
+        assert!(distinct.len() > 5, "degenerate trace: {distinct:?}");
+    }
+
+    #[test]
+    fn divergent_overrun_on_tight_pool_truncates_without_leaking() {
+        // pool of exactly 7 blocks (112 tokens): a 100-token prompt with
+        // a 10-token nominal fits the pre-check, but an actual length
+        // beyond 12 tokens exhausts the pool mid-decode — the member must
+        // be force-stopped at EOS-on-OOM, leak-free.
+        let model = DivergenceModel::QuantileTrace { sigma: 1.0 };
+        let mut probe = Rng::new(0);
+        let id = (0..1000u64)
+            .find(|&id| model.actual_lo(id, 10, &mut probe) >= 13)
+            .expect("some id must overrun");
+        let mut p = quiet_profile();
+        p.kv_pool_mb = 56.0; // 112 tokens at 0.5 MB/token -> 7 blocks
+        let mut e = SimEngine::new(p, 4, 0).with_divergence(model);
+        assert_eq!(e.kv().config().total_blocks, 7);
+        let out = e.run_batch(&[req(id, 100, 10)]).unwrap();
+        assert_eq!(e.kv_truncations(), 1);
+        // truncated exactly at the pool's 12-token decode headroom
+        assert_eq!(out[0].generated, 12);
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), 7);
+        assert_eq!(e.peak_used_blocks(), 7);
+    }
+
+    #[test]
+    fn continuous_mode_runs_under_divergence() {
+        let mut e = SimEngine::new(quiet_profile(), 4, 2)
+            .with_divergence(DivergenceModel::Lognormal { sigma: 0.5 });
+        let arrivals: Vec<(f64, EngineRequest)> =
+            (0..8).map(|i| (50.0 * i as f64, req(i, 150, 30))).collect();
+        let out = e.run_continuous(&arrivals).unwrap();
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().any(|r| r.generated != 30));
+        assert_eq!(e.kv().active_seqs(), 0);
+        // divergence off replays the legacy continuous path bit for bit
+        let mut a = SimEngine::new(quiet_profile(), 4, 2);
+        let mut b = SimEngine::new(quiet_profile(), 4, 2)
+            .with_divergence(DivergenceModel::Off);
+        let ra = a.run_continuous(&arrivals).unwrap();
+        let rb = b.run_continuous(&arrivals).unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.generated, y.generated);
+        }
     }
 }

@@ -57,7 +57,7 @@ pub mod prelude {
     pub use crate::coordinator::scheduler::{
         instance_seed, schedule, InstanceInfo,
     };
-    pub use crate::engine::sim::SimEngine;
+    pub use crate::engine::sim::{DivergenceModel, SimEngine};
     pub use crate::engine::{Engine, EngineRequest};
     pub use crate::metrics::RunMetrics;
     pub use crate::util::rng::Rng;

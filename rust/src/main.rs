@@ -22,7 +22,8 @@ use slo_serve::coordinator::predictor::LatencyPredictor;
 use slo_serve::coordinator::priority::annealing::SaParams;
 use slo_serve::coordinator::request::TaskType;
 use slo_serve::engine::instance::InstanceHandle;
-use slo_serve::engine::sim::SimEngine;
+use slo_serve::coordinator::predictor::quantile_multiplier;
+use slo_serve::engine::sim::{DivergenceModel, SimEngine};
 use slo_serve::engine::Engine;
 use slo_serve::metrics::{fmt, RunMetrics, Table};
 use slo_serve::server;
@@ -44,6 +45,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "output-pred", help: "profiler | oracle:<rel_err>", default: Some("profiler") },
         OptSpec { name: "kv", help: "off | hard | soft:<weight> (Eq. 20 pool from the profile)", default: Some("off") },
         OptSpec { name: "kv-phase", help: "reserve | phased (batch KV demand model under --kv)", default: Some("reserve") },
+        OptSpec { name: "divergence", help: "off | lognormal:<σ> | quantile-trace:<σ> (actual-vs-predicted output lengths)", default: Some("off") },
+        OptSpec { name: "kv-quantile", help: "output-length quantile KV reserves at (needs --kv and a --divergence σ; 0.5 = mean column)", default: Some("0.5") },
     ]
 }
 
@@ -71,6 +74,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     };
     let kv_spec = args.str("kv");
     let kv_phase = parse_kv_phase(&args.str("kv-phase"))?;
+    cfg.divergence = DivergenceModel::parse(&args.str("divergence"))
+        .map_err(|e| anyhow!(e))?;
     if kv_spec != "off" {
         // KV enforcement lives in the SA search; for baseline policies the
         // flag would silently do nothing — refuse instead of misleading.
@@ -83,9 +88,18 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         let profile = profiles::by_name(&cfg.profile)
             .ok_or_else(|| anyhow!("unknown profile '{}'", cfg.profile))?;
         cfg.sa.kv = parse_kv(&kv_spec, &profile)?.with_phase(kv_phase);
+        cfg.sa.kv = cfg.sa.kv.with_lo_mult(parse_kv_quantile(
+            args.f64("kv-quantile")?,
+            cfg.divergence,
+        )?);
     } else if kv_phase != KvPhaseModel::Reserve {
         return Err(anyhow!(
             "--kv-phase phased needs a binding pool: pass --kv hard or \
+             --kv soft:<w> as well"
+        ));
+    } else if args.f64("kv-quantile")? != 0.5 {
+        return Err(anyhow!(
+            "--kv-quantile needs a binding pool: pass --kv hard or \
              --kv soft:<w> as well"
         ));
     }
@@ -156,7 +170,53 @@ fn online_specs() -> Vec<OptSpec> {
                    (idle gaps + per-job arrival offsets) (0|1)",
             default: Some("0"),
         },
+        OptSpec {
+            name: "divergence",
+            help: "off | lognormal:<σ> | quantile-trace:<σ> \
+                   (actual-vs-predicted output lengths in the engine)",
+            default: Some("off"),
+        },
+        OptSpec {
+            name: "replan-drift-ms",
+            help: "warm-replan when |measured − predicted| prefix-end \
+                   drift reaches this many ms (0 = off)",
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "kv-quantile",
+            help: "output-length quantile KV reserves at (needs --kv and \
+                   a --divergence σ; 0.5 = mean column)",
+            default: Some("0.5"),
+        },
     ]
+}
+
+/// Resolve `--kv-quantile <q>` into the [`KvConfig::with_lo_mult`]
+/// multiplier: `exp(σ·Φ⁻¹(q))` using the divergence model's σ as the
+/// operator's declared output-length uncertainty. `q = 0.5` is the mean
+/// column (multiplier exactly 1 — the pre-quantile behaviour); any other
+/// quantile needs a positive divergence σ to be meaningful.
+fn parse_kv_quantile(q: f64, divergence: DivergenceModel) -> Result<f64> {
+    if !(0.5..1.0).contains(&q) {
+        // below the median the multiplier would be < 1 and KvConfig
+        // clamps it back to the mean column — refuse loudly instead of
+        // silently ignoring the request.
+        return Err(anyhow!(
+            "--kv-quantile must be in [0.5, 1) — reservations never \
+             shrink below the prediction — got {q}"
+        ));
+    }
+    if q == 0.5 {
+        return Ok(1.0);
+    }
+    let sigma = divergence.sigma();
+    if sigma <= 0.0 {
+        return Err(anyhow!(
+            "--kv-quantile {q} needs an output-length uncertainty: pass \
+             --divergence lognormal:<σ> or quantile-trace:<σ> as well"
+        ));
+    }
+    Ok(quantile_multiplier(sigma, q))
 }
 
 /// Parse `--kv-phase reserve|phased`.
@@ -222,7 +282,15 @@ fn cmd_online(argv: &[String]) -> Result<()> {
     let mut trace_rng = Rng::new(seed ^ 0x0411_13E);
     let trace = TraceSpec { n, arrivals }.generate(&mut factory, &mut trace_rng);
 
-    let predictor = bench::fit_predictor_from_profile(&profile, seed);
+    let kv_phase = parse_kv_phase(&args.str("kv-phase"))?;
+    let divergence = DivergenceModel::parse(&args.str("divergence"))
+        .map_err(|e| anyhow!(e))?;
+    // The declared divergence σ doubles as the predictor's quantile-head
+    // residual model, so the head travels with the predictor everywhere
+    // it is consulted (σ = 0 leaves the head unfitted — exact point
+    // predictions, the pre-quantile behaviour).
+    let predictor = bench::fit_predictor_from_profile(&profile, seed)
+        .with_lo_sigma(divergence.sigma());
     let profiler = bench::warm_output_profiler(seed, 200);
     let mut pred_rng = Rng::new(seed ^ 0x007_FEED);
     let predicted = predict_outputs(
@@ -232,17 +300,34 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         &mut pred_rng,
         profile.max_total_tokens / 2,
     );
-    let kv_phase = parse_kv_phase(&args.str("kv-phase"))?;
-    let kv = parse_kv(&args.str("kv"), &profile)?.with_phase(kv_phase);
+    let mut kv = parse_kv(&args.str("kv"), &profile)?.with_phase(kv_phase);
     if !kv.binding() && kv_phase != KvPhaseModel::Reserve {
         return Err(anyhow!(
             "--kv-phase phased needs a binding pool: pass --kv hard or \
              --kv soft:<w> as well"
         ));
     }
+    if kv.binding() {
+        kv = kv.with_lo_mult(parse_kv_quantile(
+            args.f64("kv-quantile")?,
+            divergence,
+        )?);
+    } else if args.f64("kv-quantile")? != 0.5 {
+        return Err(anyhow!(
+            "--kv-quantile needs a binding pool: pass --kv hard or \
+             --kv soft:<w> as well"
+        ));
+    }
+    let replan_drift_ms = args.f64("replan-drift-ms")?;
+    if !replan_drift_ms.is_finite() || replan_drift_ms < 0.0 {
+        return Err(anyhow!(
+            "--replan-drift-ms must be finite and ≥ 0, got {replan_drift_ms}"
+        ));
+    }
     let opts = OnlineOpts {
         compact_dispatched: args.str("compact") == "1",
         arrival_aware: args.str("arrival-aware") == "1",
+        replan_drift_ms,
     };
     let sa = SaParams { max_batch, seed, kv, ..Default::default() };
 
@@ -253,6 +338,7 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         "code",
         "G (req/s)",
         "replans",
+        "drift replans",
         "avg replan ms",
         "pred G (req/s)",
     ]);
@@ -265,7 +351,8 @@ fn cmd_online(argv: &[String]) -> Result<()> {
                         max_batch,
                         seed ^ (i as u64).wrapping_mul(0xE5317),
                     )
-                    .with_kv_phase(kv_phase),
+                    .with_kv_phase(kv_phase)
+                    .with_divergence(divergence),
                 ) as Box<dyn Engine + Send>
             })
             .collect();
@@ -281,6 +368,8 @@ fn cmd_online(argv: &[String]) -> Result<()> {
                 .map_or("-".to_string(), |(_, a, _)| fmt(*a))
         };
         let replans: usize = outcomes.iter().map(|o| o.stats.replans).sum();
+        let drift_replans: usize =
+            outcomes.iter().map(|o| o.stats.drift_replans).sum();
         let replan_ms: f64 =
             outcomes.iter().map(|o| o.stats.replan_ms_total).sum();
         let pred_g: f64 =
@@ -292,6 +381,7 @@ fn cmd_online(argv: &[String]) -> Result<()> {
             task_att(TaskType::Code),
             fmt(m.g_req_per_s),
             replans.to_string(),
+            drift_replans.to_string(),
             fmt(if replans == 0 { 0.0 } else { replan_ms / replans as f64 }),
             fmt(pred_g),
         ]);

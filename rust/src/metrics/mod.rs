@@ -156,6 +156,7 @@ mod tests {
             task,
             slo: Slo::E2e { e2e_ms: bound },
             input_len: 10,
+            predicted_lo: 5,
             generated: 5,
             e2e_ms: e2e,
             ttft_ms: e2e * 0.2,

@@ -333,6 +333,9 @@ fn dispatcher_loop(
                             task: req.task,
                             slo: req.slo,
                             input_len: req.input_len,
+                            // the server plans at the client's token
+                            // budget — that is its output prediction
+                            predicted_lo: req.output_len,
                             generated: item.generated,
                             e2e_ms: item.finish_ms - req.arrival_ms,
                             ttft_ms: item.first_token_ms - req.arrival_ms,

@@ -133,6 +133,7 @@ mod tests {
             task: TaskType::Chat,
             slo: Slo::Interactive { ttft_ms: 100.0, tpot_ms: 10.0 },
             input_len: 20,
+            predicted_lo: 4,
             generated: 4,
             e2e_ms: 50.0,
             ttft_ms: 30.0,

@@ -66,6 +66,69 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Standard-normal quantile function Φ⁻¹(p) (the probit), Acklam's
+/// rational approximation (|relative error| < 1.15e-9 on (0, 1)).
+/// Out-of-range `p` saturates: 0 → −∞, 1 → +∞, NaN → NaN — callers that
+/// must stay finite clamp `p` first.
+pub fn normal_quantile(p: f64) -> f64 {
+    if p.is_nan() {
+        return f64::NAN;
+    }
+    if p <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p >= 1.0 {
+        return f64::INFINITY;
+    }
+    // Coefficients of Acklam's approximation.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
 /// Population standard deviation.
 pub fn std_dev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
@@ -166,6 +229,27 @@ pub fn r_squared(predicted: &[f64], actual: &[f64]) -> f64 {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn normal_quantile_matches_known_values() {
+        // Φ⁻¹ at tabulated points (to the approximation's accuracy).
+        assert!(normal_quantile(0.5).abs() < 1e-9);
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.025) + 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.9) - 1.281552).abs() < 1e-4);
+        assert!((normal_quantile(0.0013498980316301) + 3.0).abs() < 1e-4);
+        // symmetry: Φ⁻¹(p) = −Φ⁻¹(1−p)
+        for &p in &[0.01f64, 0.1, 0.3, 0.42] {
+            assert!(
+                (normal_quantile(p) + normal_quantile(1.0 - p)).abs() < 1e-6,
+                "asymmetric at {p}"
+            );
+        }
+        // saturation + NaN propagation
+        assert_eq!(normal_quantile(0.0), f64::NEG_INFINITY);
+        assert_eq!(normal_quantile(1.0), f64::INFINITY);
+        assert!(normal_quantile(f64::NAN).is_nan());
+    }
 
     #[test]
     fn summary_basics() {

@@ -1,0 +1,311 @@
+//! Divergence robustness harness (ISSUE 5 acceptance).
+//!
+//! Output-length divergence makes the engine finish jobs at a *true* EOS
+//! step that differs from the scheduler's prediction — short outputs free
+//! KV early, overruns hold and keep growing it, and the online loop may
+//! reconcile and replan mid-trace. This harness pins the two properties
+//! that make that safe to ship:
+//!
+//! * **escape hatch** — `DivergenceModel::Off` (and the σ = 0 divergence
+//!   models) replay the pre-divergence scheduler byte for byte: same
+//!   plans, same `ScheduleOutcome`, same executed completions, same RNG
+//!   streams (the divergence stream is separate from the timing-noise
+//!   stream by construction);
+//! * **safety invariants under divergence** — across seeds × σ = 0.5
+//!   lognormal × {Reserve, Phased} × {Hard, Soft, Unlimited} KV modes,
+//!   with drift-reconciling replans active: no KV-block leak (the
+//!   allocator returns to empty after drain), every admitted job
+//!   completes exactly once, and waits/e2e are measured from true
+//!   completions (non-negative, wait ≤ e2e).
+
+use slo_serve::config::profiles::by_name;
+use slo_serve::coordinator::execute_plans;
+use slo_serve::coordinator::kv::{KvConfig, KvPhaseModel};
+use slo_serve::coordinator::online::{
+    run_online_opts, OnlineOpts, ReplanStrategy,
+};
+use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::coordinator::profiler::{MemoryModel, RequestProfiler};
+use slo_serve::coordinator::request::{Completion, Request, Slo, TaskType};
+use slo_serve::coordinator::scheduler::{schedule, InstanceInfo};
+use slo_serve::engine::sim::{DivergenceModel, SimEngine};
+use slo_serve::engine::Engine;
+use slo_serve::util::rng::Rng;
+
+fn random_trace(rng: &mut Rng, n: usize) -> Vec<Request> {
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            t += rng.uniform(0.0, 300.0);
+            let mut r = Request::synthetic(
+                i as u64,
+                if rng.chance(0.5) { TaskType::Chat } else { TaskType::Code },
+                1 + rng.below(240),
+                1 + rng.below(60),
+                Slo::E2e { e2e_ms: rng.uniform(2_000.0, 60_000.0) },
+            );
+            r.arrival_ms = t;
+            r
+        })
+        .collect()
+}
+
+fn completion_bits(c: &Completion) -> (u64, u64, u64, u64, usize) {
+    (
+        c.id,
+        c.e2e_ms.to_bits(),
+        c.ttft_ms.to_bits(),
+        c.wait_ms.to_bits(),
+        c.generated,
+    )
+}
+
+/// Escape hatch, closed-wave path: the full PR 4 pipeline
+/// (`schedule` + `execute_plans`) is byte-equal between a default engine,
+/// a `with_divergence(Off)` engine, and the σ = 0 divergence models
+/// (whose multiplier is exactly 1 and whose draws come from a stream the
+/// timing noise never touches).
+#[test]
+fn divergence_off_closed_wave_is_bit_identical() {
+    let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    let predictor = profile.truth;
+    let mem = MemoryModel::default();
+    let mut rng = Rng::new(0xD1F_F);
+    let reqs: Vec<Request> = (0..14)
+        .map(|i| {
+            Request::synthetic(
+                i as u64,
+                TaskType::Code,
+                1 + rng.below(800),
+                1 + rng.below(150),
+                Slo::E2e { e2e_ms: 60_000.0 },
+            )
+        })
+        .collect();
+    let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+    let instances = vec![InstanceInfo { id: 0, mem_mb: profile.kv_pool_mb }];
+    let sa = SaParams::with_max_batch(4);
+
+    // plans are a pure function of the inputs — divergence never sees them
+    let a = schedule(&reqs, &outs, &instances, &predictor, &mem, &sa).unwrap();
+    let b = schedule(&reqs, &outs, &instances, &predictor, &mem, &sa).unwrap();
+    assert_eq!(a.seed, b.seed);
+    for (pa, pb) in a.plans.iter().zip(&b.plans) {
+        assert_eq!(pa.schedule, pb.schedule, "ScheduleOutcome diverged");
+    }
+
+    let run = |model: Option<DivergenceModel>| {
+        let mut engine = SimEngine::new(profile.clone(), 4, 7);
+        if let Some(m) = model {
+            engine = engine.with_divergence(m);
+        }
+        let mut engines: Vec<Box<dyn Engine + Send>> = vec![Box::new(engine)];
+        let mut profiler = RequestProfiler::new();
+        execute_plans(&reqs, &a.plans, &mut engines, &mut profiler).unwrap()
+    };
+    let base = run(None);
+    assert_eq!(base.len(), reqs.len());
+    for model in [
+        DivergenceModel::Off,
+        DivergenceModel::Lognormal { sigma: 0.0 },
+        DivergenceModel::QuantileTrace { sigma: 0.0 },
+    ] {
+        let got = run(Some(model));
+        for (x, y) in base.iter().zip(&got) {
+            assert_eq!(
+                completion_bits(x),
+                completion_bits(y),
+                "{model:?} diverged from the pre-divergence engine"
+            );
+        }
+    }
+}
+
+/// Escape hatch, online path: `run_online_opts` with a default engine and
+/// default opts is byte-equal to an engine with `Off` divergence and an
+/// explicitly-zero drift threshold — reconciliation is bookkeeping only.
+#[test]
+fn divergence_off_online_is_bit_identical() {
+    let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    let predictor = profile.truth;
+    let mut rng = Rng::new(0x0FF_1);
+    let trace = random_trace(&mut rng, 14);
+    let outs: Vec<usize> = trace.iter().map(|r| r.output_len).collect();
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 3,
+        t0: 100.0,
+        iters_per_temp: 15,
+        ..Default::default()
+    };
+    let run = |model: Option<DivergenceModel>, opts: OnlineOpts| {
+        let mut engine = SimEngine::new(profile.clone(), 4, 3);
+        if let Some(m) = model {
+            engine = engine.with_divergence(m);
+        }
+        run_online_opts(
+            &trace,
+            &outs,
+            &mut engine,
+            &predictor,
+            &sa,
+            ReplanStrategy::Warm,
+            opts,
+        )
+        .unwrap()
+    };
+    let base = run(None, OnlineOpts::default());
+    let off = run(
+        Some(DivergenceModel::Off),
+        OnlineOpts { replan_drift_ms: 0.0, ..Default::default() },
+    );
+    assert_eq!(base.completions.len(), off.completions.len());
+    for (x, y) in base.completions.iter().zip(&off.completions) {
+        assert_eq!(completion_bits(x), completion_bits(y));
+    }
+    assert_eq!(base.stats.replans, off.stats.replans);
+    assert_eq!(base.stats.drift_replans, 0);
+    assert_eq!(off.stats.drift_replans, 0);
+    for (x, y) in base.predicted.iter().zip(&off.predicted) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.e2e_ms.to_bits(), y.e2e_ms.to_bits());
+        assert_eq!(x.wait_ms.to_bits(), y.wait_ms.to_bits());
+    }
+}
+
+/// Safety invariants under real divergence: seeds × {Reserve, Phased} ×
+/// {Hard, Soft, Unlimited}, σ = 0.5 lognormal, arrival-aware timeline,
+/// drift-reconciling replans on, compaction alternating.
+#[test]
+fn no_leak_no_double_completion_under_divergence() {
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.03;
+    let predictor = profile.truth;
+    for seed in 0..5u64 {
+        for phase in [KvPhaseModel::Reserve, KvPhaseModel::Phased] {
+            for kv in [
+                KvConfig::UNLIMITED,
+                KvConfig::hard(48),
+                KvConfig::soft(48, 1.0),
+            ] {
+                let kv = kv.with_phase(phase);
+                let mut rng = Rng::new(seed.wrapping_mul(0x5109) ^ 0xD1E5);
+                let n = 10 + rng.below(8);
+                let trace = random_trace(&mut rng, n);
+                let outs: Vec<usize> =
+                    trace.iter().map(|r| r.output_len).collect();
+                let sa = SaParams {
+                    max_batch: 4,
+                    seed,
+                    t0: 100.0,
+                    iters_per_temp: 10,
+                    kv,
+                    ..Default::default()
+                };
+                let mut engine = SimEngine::new(profile.clone(), 4, seed)
+                    .with_kv_phase(phase)
+                    .with_divergence(DivergenceModel::Lognormal {
+                        sigma: 0.5,
+                    });
+                let tag = format!("seed {seed} {phase:?} {:?}", kv.mode);
+                let out = run_online_opts(
+                    &trace,
+                    &outs,
+                    &mut engine,
+                    &predictor,
+                    &sa,
+                    ReplanStrategy::Warm,
+                    OnlineOpts {
+                        arrival_aware: true,
+                        replan_drift_ms: 150.0,
+                        compact_dispatched: seed % 2 == 0,
+                    },
+                )
+                .unwrap_or_else(|e| panic!("{tag}: run failed: {e}"));
+
+                // every admitted job completes exactly once
+                assert_eq!(out.completions.len(), n, "{tag}");
+                let ids: Vec<u64> =
+                    out.completions.iter().map(|c| c.id).collect();
+                assert_eq!(
+                    ids,
+                    (0..n as u64).collect::<Vec<u64>>(),
+                    "{tag}: duplicate or missing completions"
+                );
+                // waits are measured from true completions on the real
+                // arrival clock
+                for c in &out.completions {
+                    assert!(c.wait_ms >= -1e-9, "{tag}: {c:?}");
+                    assert!(c.ttft_ms >= c.wait_ms - 1e-9, "{tag}: {c:?}");
+                    assert!(c.e2e_ms >= c.wait_ms - 1e-9, "{tag}: {c:?}");
+                    assert!(c.generated >= 1, "{tag}: {c:?}");
+                }
+                // σ = 0.5 divergence actually happened …
+                assert!(
+                    out.completions
+                        .iter()
+                        .any(|c| c.generated != c.predicted_lo),
+                    "{tag}: no divergence at σ = 0.5"
+                );
+                assert!(
+                    out.stats.avg_abs_lo_divergence() > 0.0,
+                    "{tag}: reconcile saw no divergence"
+                );
+                // … and the allocator drained back to zero: no KV leak
+                assert_eq!(engine.kv().active_seqs(), 0, "{tag}: leaked seqs");
+                assert_eq!(
+                    engine.kv().free_blocks(),
+                    engine.kv().config().total_blocks,
+                    "{tag}: leaked blocks"
+                );
+                assert!(
+                    engine.peak_used_blocks()
+                        <= engine.kv().config().total_blocks,
+                    "{tag}"
+                );
+            }
+        }
+    }
+}
+
+/// The conservative quantile reservation column composes with divergence:
+/// a hard pool reserving at the 0.9 output-length quantile still plans
+/// feasibly, serves everything, and leaks nothing when actual lengths
+/// diverge.
+#[test]
+fn quantile_reservation_column_serves_divergent_trace() {
+    use slo_serve::coordinator::predictor::quantile_multiplier;
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    let predictor = profile.truth;
+    let mut rng = Rng::new(0x9_01);
+    let trace = random_trace(&mut rng, 12);
+    let outs: Vec<usize> = trace.iter().map(|r| r.output_len).collect();
+    let sigma = 0.5;
+    let mult = quantile_multiplier(sigma, 0.9);
+    assert!(mult > 1.0);
+    let kv = KvConfig::hard(64).with_lo_mult(mult);
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 1,
+        t0: 100.0,
+        iters_per_temp: 10,
+        kv,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(profile, 4, 1)
+        .with_divergence(DivergenceModel::Lognormal { sigma });
+    let out = run_online_opts(
+        &trace,
+        &outs,
+        &mut engine,
+        &predictor,
+        &sa,
+        ReplanStrategy::Warm,
+        OnlineOpts { arrival_aware: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.completions.len(), trace.len());
+    assert_eq!(engine.kv().active_seqs(), 0);
+    assert_eq!(engine.kv().free_blocks(), engine.kv().config().total_blocks);
+}

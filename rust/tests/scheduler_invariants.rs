@@ -110,6 +110,103 @@ fn eval_consistent_under_batch_merging_when_costs_flat() {
 }
 
 #[test]
+fn edf_golden_orders_by_slo_deadline() {
+    // Golden ordering for the previously untested Edf baseline: along the
+    // emitted priority sequence, deadlines (e2e bound; TTFT bound for
+    // interactive jobs) are non-decreasing.
+    let pred = LatencyPredictor::paper_table2();
+    let deadline = |j: &Job| match j.slo {
+        Slo::E2e { e2e_ms } => e2e_ms,
+        Slo::Interactive { ttft_ms, .. } => ttft_ms,
+    };
+    check("Edf orders by SLO deadline", 60, |rng| {
+        let n = 1 + rng.below(20);
+        let max_batch = 1 + rng.below(4);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let (s, _) = Policy::Edf.plan(&ev, max_batch);
+        s.validate(max_batch)?;
+        for w in s.order.windows(2) {
+            let (a, b) = (deadline(&jobs[w[0]]), deadline(&jobs[w[1]]));
+            if a > b {
+                return Err(format!(
+                    "deadline {a} before {b} in {:?}",
+                    s.order
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mlfq_golden_orders_by_input_length() {
+    // Golden ordering for the Mlfq baseline: FastServe's skip-join MLFQ
+    // assigns queues by prompt length, so the emitted sequence is
+    // non-decreasing in input length.
+    let pred = LatencyPredictor::paper_table2();
+    check("Mlfq orders by input length", 60, |rng| {
+        let n = 1 + rng.below(20);
+        let max_batch = 1 + rng.below(4);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let (s, _) = Policy::Mlfq.plan(&ev, max_batch);
+        s.validate(max_batch)?;
+        for w in s.order.windows(2) {
+            let (a, b) = (jobs[w[0]].input_len, jobs[w[1]].input_len);
+            if a > b {
+                return Err(format!("input {a} before {b} in {:?}", s.order));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exhaustive_is_optimal_and_sa_matches_it_at_small_n() {
+    // At N ≤ 7 the exhaustive strawman enumerates the whole
+    // (order × partition) space, so its G is the optimum: SA can never
+    // beat it, and with its default budget (≈6.3k evaluations over a
+    // ≤322k-state space) it should land on the same objective value.
+    let pred = LatencyPredictor::paper_table2();
+    let max_batch = 2;
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed ^ 0x90_1D);
+        let n = 4 + rng.below(4); // 4..=7
+        let jobs = random_jobs(&mut rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let (ex, ex_stats) = Policy::Exhaustive.plan(&ev, max_batch);
+        assert!(ex_stats.is_some(), "seed {seed}: exhaustive fell back");
+        let g_ex = ev.eval(&ex).g;
+        // best SA objective over three independent search seeds at a
+        // boosted budget (≈25k evaluations over a ≤106k-state space)
+        let mut g_sa_best = f64::NEG_INFINITY;
+        for sa_seed in 0..3u64 {
+            let sa_params = SaParams {
+                seed: seed.wrapping_mul(31).wrapping_add(sa_seed),
+                iters_per_temp: 400,
+                ..SaParams::default()
+            };
+            let (sa, _) = Policy::SloAware(sa_params).plan(&ev, max_batch);
+            let g_sa = ev.eval(&sa).g;
+            // optimality: exhaustive dominates every SA schedule
+            assert!(
+                g_ex >= g_sa - 1e-12,
+                "seed {seed}/{sa_seed}: exhaustive g={g_ex} below SA \
+                 g={g_sa}"
+            );
+            g_sa_best = g_sa_best.max(g_sa);
+        }
+        // … and SA converges to the same objective value at this size
+        assert!(
+            (g_ex - g_sa_best).abs() <= 1e-9 * g_ex.abs().max(1e-12),
+            "seed {seed} (n={n}, mb={max_batch}): best SA g={g_sa_best} \
+             != exhaustive optimum g={g_ex}"
+        );
+    }
+}
+
+#[test]
 fn policies_preserve_job_multiset() {
     let pred = LatencyPredictor::paper_table2();
     check("every policy emits a permutation", 40, |rng| {
