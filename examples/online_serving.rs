@@ -275,6 +275,40 @@ fn main() -> anyhow::Result<()> {
         quantile_multiplier(fitted, 0.9),
     );
 
+    // -- Deadline-adaptive budgets (ISSUE 6): replans size their SA
+    // iteration budget to the predicted execution window of the next
+    // batch to dispatch. Report how much of the allotted window the
+    // budgeted replans actually used.
+    {
+        let mut engine = SimEngine::new(profile.clone(), MAX_BATCH, SEED);
+        let out = run_online_opts(
+            &trace,
+            &predicted,
+            &mut engine,
+            &predictor,
+            &sa,
+            ReplanStrategy::Warm,
+            OnlineOpts {
+                arrival_aware: true,
+                adaptive_budget: true,
+                ..Default::default()
+            },
+        )?;
+        let s = &out.stats;
+        println!(
+            "\nbudget utilization (adaptive replans): {:.3} ms measured vs \
+             {:.3} ms allotted across {} budgeted replans ({:.1}% of the \
+             dispatch windows; wall {:.3} ms / cpu {:.3} ms total replan \
+             overhead)",
+            s.budget_spent_ms_total,
+            s.budget_allotted_ms_total,
+            s.budget_replans,
+            100.0 * s.budget_utilization(),
+            s.replan_ms_total,
+            s.replan_cpu_ms_total,
+        );
+    }
+
     println!(
         "\nseeds: trace/search {SEED} (engine noise seed {SEED}); all \
          streams are deterministic — rerun reproduces these numbers bit \

@@ -1,6 +1,8 @@
 //! SA scheduler throughput: incremental (prediction table + delta
 //! evaluation + zero-alloc moves) vs the full-evaluation reference path,
-//! at wave sizes N ∈ {16, 64, 256, 512}.
+//! at wave sizes N ∈ {16, 64, 256, 512} — plus a parallel-tempering
+//! chains axis (K ∈ {1, 2, 4, 8} at N = 256: wall time and final G per
+//! chain count) and a SoA-vs-AoS per-batch reduce microbench.
 //!
 //! Reports per-mapping wall time and objective evaluations per second for
 //! both paths, and writes machine-readable results to
@@ -48,6 +50,72 @@ fn jobs(n: usize, seed: u64) -> Vec<Job> {
             Job { req_idx: i, input_len, output_len, slo }
         })
         .collect()
+}
+
+/// AoS emulation of the evaluator's per-batch aggregates, for the layout
+/// microbench only: the production [`slo_serve::coordinator::objective`]
+/// store is the SoA this file measures against.
+#[derive(Clone, Copy, Default)]
+struct BatchAgg {
+    bsum: f64,
+    bmet: usize,
+    bend: f64,
+    bkv: u64,
+}
+
+/// SoA-vs-AoS reduce microbench: fold ~`m` per-batch aggregates into the
+/// objective totals the SA hot path re-reduces after every move, with the
+/// aggregates held as an array of structs vs parallel flat columns.
+/// Returns (aos_ms, soa_ms) per full reduce pass.
+fn reduce_layout_bench(m: usize) -> (f64, f64) {
+    let mut rng = Rng::new(0xA05_50A);
+    let aos: Vec<BatchAgg> = (0..m)
+        .map(|_| BatchAgg {
+            bsum: rng.uniform(10.0, 5_000.0),
+            bmet: rng.below(9),
+            bend: rng.uniform(10.0, 100_000.0),
+            bkv: rng.below(4_000) as u64,
+        })
+        .collect();
+    let bsum: Vec<f64> = aos.iter().map(|a| a.bsum).collect();
+    let bmet: Vec<usize> = aos.iter().map(|a| a.bmet).collect();
+    let bkv: Vec<u64> = aos.iter().map(|a| a.bkv).collect();
+    let pool = 2_000u64;
+
+    let reps = 2_000;
+    let mut sink = 0.0f64;
+    let aos_ms = time_ms(2, 5, || {
+        for _ in 0..reps {
+            let mut total = 0.0f64;
+            let mut met = 0usize;
+            let mut excess = 0u64;
+            for a in &aos {
+                total += a.bsum;
+                met += a.bmet;
+                excess += a.bkv.saturating_sub(pool);
+            }
+            sink += total + met as f64 + excess as f64;
+        }
+    });
+    let soa_ms = time_ms(2, 5, || {
+        for _ in 0..reps {
+            let mut total = 0.0f64;
+            for &s in &bsum {
+                total += s;
+            }
+            let mut met = 0usize;
+            for &c in &bmet {
+                met += c;
+            }
+            let mut excess = 0u64;
+            for &b in &bkv {
+                excess += b.saturating_sub(pool);
+            }
+            sink += total + met as f64 + excess as f64;
+        }
+    });
+    assert!(sink.is_finite()); // keep the folds observable
+    (aos_ms / reps as f64, soa_ms / reps as f64)
 }
 
 fn main() {
@@ -107,6 +175,65 @@ fn main() {
     }
     print!("{}", t.render());
 
+    // Parallel-tempering chains axis at N = 256: deeper search per unit
+    // wall time. Each K reports its wall per mapping and the final G the
+    // tempered search converges to (same seed, same workload).
+    println!("\n== parallel tempering: chains axis (N = 256) ==\n");
+    let mut ct = Table::new(&[
+        "chains",
+        "wall (ms)",
+        "final G",
+        "evals",
+        "exchanges",
+        "winner",
+    ]);
+    let mut chain_rows: Vec<Json> = Vec::new();
+    {
+        let n = 256usize;
+        let jobs_seed = 0xBEEF ^ n as u64;
+        let js = jobs(n, jobs_seed);
+        let ev = Evaluator::new(&js, &pred);
+        for &k in &[1usize, 2, 4, 8] {
+            let params = SaParams {
+                max_batch: MAX_BATCH,
+                seed: SA_SEED,
+                chains: k,
+                ..Default::default()
+            };
+            let res = priority_mapping(&ev, &params);
+            let wall_ms = time_ms(1, 3, || {
+                let _ = priority_mapping(&ev, &params);
+            });
+            ct.row(vec![
+                k.to_string(),
+                format!("{wall_ms:.3}"),
+                format!("{:.6e}", res.eval.g),
+                res.stats.evals.to_string(),
+                res.stats.exchanges.to_string(),
+                res.stats.winner_chain.to_string(),
+            ]);
+            chain_rows.push(Json::obj(vec![
+                ("chains", Json::num(k as f64)),
+                ("wall_ms", Json::num(wall_ms)),
+                ("final_g", Json::num(res.eval.g)),
+                ("sa_evals", Json::num(res.stats.evals as f64)),
+                ("exchanges", Json::num(res.stats.exchanges as f64)),
+                ("winner_chain", Json::num(res.stats.winner_chain as f64)),
+            ]));
+        }
+    }
+    print!("{}", ct.render());
+
+    // Evaluator layout microbench: the per-move re-reduction over batch
+    // aggregates, AoS vs the SoA layout the evaluator actually uses.
+    let (aos_reduce_ms, soa_reduce_ms) = reduce_layout_bench(4096);
+    let soa_speedup = aos_reduce_ms / soa_reduce_ms;
+    println!(
+        "\nreduce layout (4096 batches): AoS {:.6} ms, SoA {:.6} ms \
+         ({soa_speedup:.2}x)",
+        aos_reduce_ms, soa_reduce_ms
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::str("sa_throughput")),
         ("max_batch", Json::num(MAX_BATCH as f64)),
@@ -114,6 +241,10 @@ fn main() {
         ("sa_t0", Json::num(SaParams::default().t0)),
         ("sa_iters_per_temp", Json::num(SaParams::default().iters_per_temp as f64)),
         ("sizes", Json::arr(sizes)),
+        ("chains", Json::arr(chain_rows)),
+        ("aos_reduce_ms", Json::num(aos_reduce_ms)),
+        ("soa_reduce_ms", Json::num(soa_reduce_ms)),
+        ("soa_speedup", Json::num(soa_speedup)),
     ]);
     let out = format!("{}\n", doc.to_string_pretty());
     std::fs::write("BENCH_sa_throughput.json", out)

@@ -191,6 +191,10 @@ pub fn plan_wave(
                     improved: prev.improved + s.improved,
                     early_exit: prev.early_exit && s.early_exit,
                     overhead_ms: prev.overhead_ms + s.overhead_ms,
+                    cpu_ms: prev.cpu_ms + s.cpu_ms,
+                    exchanges: prev.exchanges + s.exchanges,
+                    // not meaningful summed across instances
+                    winner_chain: 0,
                 },
             });
         }
@@ -204,6 +208,9 @@ pub fn plan_wave(
                 improved: 0,
                 early_exit: false,
                 overhead_ms: 0.0,
+                cpu_ms: 0.0,
+                exchanges: 0,
+                winner_chain: 0,
             }),
         });
     }

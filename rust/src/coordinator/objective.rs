@@ -66,7 +66,7 @@ use crate::util::rng::Rng;
 
 /// Scheduler's view of one job: lengths are *predictions* (the true output
 /// length is hidden from the scheduler — §4.2).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Job {
     /// Index into the coordinator's request slice.
     pub req_idx: usize,
@@ -553,9 +553,109 @@ pub fn batch_kv_blocks(
     }
 }
 
+/// Struct-of-arrays store for the per-batch aggregates the incremental
+/// evaluator maintains (index = batch). Keeping each aggregate in its own
+/// flat column — rather than a `Vec` of per-batch structs — makes the
+/// suffix re-reduction, the snapshot/restore pair, and the KV-excess
+/// pricing straight single-array passes the compiler can unroll and
+/// auto-vectorize, and it means a rollback touches only the columns as
+/// contiguous `memcpy`s.
+///
+/// The `bend` column caches `wait[k] + bmax[k]` (batch k's end time) so
+/// the changed-wait suffix walk and the makespan read one column instead
+/// of recombining two; it is written from the exact same expression the
+/// sequential evaluation uses, so every read is bit-identical to the
+/// recombination it replaces.
+#[derive(Debug, Clone, Default)]
+struct BatchSoa {
+    /// Max exec time in batch k (at its current size).
+    bmax: Vec<f64>,
+    /// Σ (wait + exec) over batch k's jobs, in order.
+    bsum: Vec<f64>,
+    /// SLO-met count in batch k at its current start time.
+    bmet: Vec<usize>,
+    /// Start time of batch k on the wave timeline
+    /// (`max(end of batch k−1, barr[k])`, chained sequentially from t0).
+    wait: Vec<f64>,
+    /// End time of batch k (`wait[k] + bmax[k]`, cached).
+    bend: Vec<f64>,
+    /// Latest member arrival in batch k (from the table's arrival
+    /// column; 0.0 throughout for closed waves).
+    barr: Vec<f64>,
+    /// KV-block demand of batch k (Eq. 20; footprint sum under
+    /// `Reserve`, phase-aware occupancy peak under `Phased`).
+    bkv: Vec<u64>,
+}
+
+impl BatchSoa {
+    /// Zero-fill every column at length `m`.
+    fn clear_resize(&mut self, m: usize) {
+        self.bmax.clear();
+        self.bmax.resize(m, 0.0);
+        self.bsum.clear();
+        self.bsum.resize(m, 0.0);
+        self.bmet.clear();
+        self.bmet.resize(m, 0);
+        self.wait.clear();
+        self.wait.resize(m, 0.0);
+        self.bend.clear();
+        self.bend.resize(m, 0.0);
+        self.barr.clear();
+        self.barr.resize(m, 0.0);
+        self.bkv.clear();
+        self.bkv.resize(m, 0);
+    }
+
+    /// Copy every column from `src` into reused buffers (no allocation
+    /// once warm) — the snapshot and restore primitive.
+    fn copy_from(&mut self, src: &BatchSoa) {
+        self.bmax.clear();
+        self.bmax.extend_from_slice(&src.bmax);
+        self.bsum.clear();
+        self.bsum.extend_from_slice(&src.bsum);
+        self.bmet.clear();
+        self.bmet.extend_from_slice(&src.bmet);
+        self.wait.clear();
+        self.wait.extend_from_slice(&src.wait);
+        self.bend.clear();
+        self.bend.extend_from_slice(&src.bend);
+        self.barr.clear();
+        self.barr.extend_from_slice(&src.barr);
+        self.bkv.clear();
+        self.bkv.extend_from_slice(&src.bkv);
+    }
+
+    /// Mirror a batch removal at index `r` across every column.
+    fn remove(&mut self, r: usize) {
+        self.bmax.remove(r);
+        self.bsum.remove(r);
+        self.bmet.remove(r);
+        self.wait.remove(r);
+        self.bend.remove(r);
+        self.barr.remove(r);
+        self.bkv.remove(r);
+    }
+
+    /// Mirror a trailing batch append (zeroed; recomputed by the caller).
+    fn push_zero(&mut self) {
+        self.bmax.push(0.0);
+        self.bsum.push(0.0);
+        self.bmet.push(0);
+        self.wait.push(0.0);
+        self.bend.push(0.0);
+        self.barr.push(0.0);
+        self.bkv.push(0);
+    }
+
+    fn len(&self) -> usize {
+        self.bmax.len()
+    }
+}
+
 /// Delta evaluator driving the simulated-annealing hot path.
 ///
-/// Owns the current candidate [`Schedule`] plus per-batch aggregates; a
+/// Owns the current candidate [`Schedule`] plus per-batch aggregates in a
+/// struct-of-arrays layout ([`BatchSoa`]); a
 /// [`IncrementalEval::try_random_move`] applies one neighbourhood move
 /// in-place, updates only what the move invalidated, and returns the new
 /// [`Eval`]. The caller then either [`IncrementalEval::commit`]s (free) or
@@ -566,8 +666,8 @@ pub fn batch_kv_blocks(
 /// Cost per move: O(touched-batch sizes) table lookups, plus a recompute of
 /// the downstream suffix only while its entry wait differs (exact `f64`
 /// comparison) from the cached value, plus an O(M) re-reduction over
-/// per-batch partials (M = batch count). See the module docs for why the
-/// result is bit-identical to [`Evaluator::eval`].
+/// per-batch partial columns (M = batch count). See the module docs for
+/// why the result is bit-identical to [`Evaluator::eval`].
 pub struct IncrementalEval<'a> {
     jobs: &'a [Job],
     table: &'a PredTable,
@@ -576,32 +676,14 @@ pub struct IncrementalEval<'a> {
     /// ([`TimelineOrigin::t0`]); 0.0 for closed waves.
     t0_ms: f64,
     schedule: Schedule,
-    /// Max exec time in batch k (at its current size).
-    bmax: Vec<f64>,
-    /// Σ (wait + exec) over batch k's jobs, in order.
-    bsum: Vec<f64>,
-    /// SLO-met count in batch k at its current start time.
-    bmet: Vec<usize>,
-    /// Start time of batch k on the wave timeline
-    /// (`max(end of batch k−1, barr[k])`, chained sequentially from t0).
-    wait: Vec<f64>,
-    /// Latest member arrival in batch k (from the table's arrival
-    /// column; 0.0 throughout for closed waves).
-    barr: Vec<f64>,
-    /// KV-block demand of batch k (Eq. 20; footprint sum under
-    /// `Reserve`, phase-aware occupancy peak under `Phased`).
-    bkv: Vec<u64>,
+    /// Per-batch aggregate columns (SoA).
+    agg: BatchSoa,
     /// Σ over batches of demand beyond the pool (0 when not binding).
     kv_excess: u64,
     eval: Eval,
     // Pre-move snapshots (reused buffers) for rollback.
     saved_batches: Vec<usize>,
-    saved_bmax: Vec<f64>,
-    saved_bsum: Vec<f64>,
-    saved_bmet: Vec<usize>,
-    saved_wait: Vec<f64>,
-    saved_barr: Vec<f64>,
-    saved_bkv: Vec<u64>,
+    saved: BatchSoa,
     saved_kv_excess: u64,
     saved_eval: Eval,
     pending: Option<OrderUndo>,
@@ -637,21 +719,11 @@ impl<'a> IncrementalEval<'a> {
             kv,
             t0_ms,
             schedule,
-            bmax: Vec::new(),
-            bsum: Vec::new(),
-            bmet: Vec::new(),
-            wait: Vec::new(),
-            barr: Vec::new(),
-            bkv: Vec::new(),
+            agg: BatchSoa::default(),
             kv_excess: 0,
             eval: Eval::ZERO,
             saved_batches: Vec::new(),
-            saved_bmax: Vec::new(),
-            saved_bsum: Vec::new(),
-            saved_bmet: Vec::new(),
-            saved_wait: Vec::new(),
-            saved_barr: Vec::new(),
-            saved_bkv: Vec::new(),
+            saved: BatchSoa::default(),
             saved_kv_excess: 0,
             saved_eval: Eval::ZERO,
             pending: None,
@@ -687,7 +759,7 @@ impl<'a> IncrementalEval<'a> {
     /// the member-footprint sum for [`KvPhaseModel::Reserve`], the exact
     /// occupancy peak for [`KvPhaseModel::Phased`].
     pub fn batch_kv_blocks(&self, k: usize) -> u64 {
-        self.bkv[k]
+        self.agg.bkv[k]
     }
 
     /// The KV configuration this evaluator enforces.
@@ -705,23 +777,12 @@ impl<'a> IncrementalEval<'a> {
 
     fn rebuild(&mut self) {
         let m = self.schedule.batches.len();
-        self.bmax.clear();
-        self.bmax.resize(m, 0.0);
-        self.bsum.clear();
-        self.bsum.resize(m, 0.0);
-        self.bmet.clear();
-        self.bmet.resize(m, 0);
-        self.wait.clear();
-        self.wait.resize(m, 0.0);
-        self.barr.clear();
-        self.barr.resize(m, 0.0);
-        self.bkv.clear();
-        self.bkv.resize(m, 0);
+        self.agg.clear_resize(m);
         let mut free = self.t0_ms;
         let mut start = 0usize;
         for k in 0..m {
             self.recompute_batch(k, start, free);
-            free = self.wait[k] + self.bmax[k];
+            free = self.agg.bend[k];
             start += self.schedule.batches[k];
         }
         self.reduce();
@@ -778,28 +839,38 @@ impl<'a> IncrementalEval<'a> {
                 self.kv.block_tokens,
             );
         }
-        self.barr[k] = arr;
-        self.wait[k] = begin;
-        self.bmax[k] = max;
-        self.bsum[k] = sum;
-        self.bmet[k] = met;
-        self.bkv[k] = kvb;
+        self.agg.barr[k] = arr;
+        self.agg.wait[k] = begin;
+        self.agg.bmax[k] = max;
+        self.agg.bsum[k] = sum;
+        self.agg.bmet[k] = met;
+        self.agg.bkv[k] = kvb;
+        // Same expression the sequential evaluation chains (`wait + bmax`),
+        // cached so suffix walks and makespan read one column.
+        self.agg.bend[k] = begin + max;
     }
 
-    /// Re-reduce totals over per-batch partials — same grouping as the
-    /// full evaluator, so the result is bit-identical.
+    /// Re-reduce totals over per-batch partial columns — same grouping as
+    /// the full evaluator, so the result is bit-identical. Each accumulator
+    /// folds its own column in one tight pass (the accumulators are
+    /// independent, so splitting the loop per column keeps every sequential
+    /// summation order unchanged while letting the compiler vectorize the
+    /// single-array walks).
     fn reduce(&mut self) {
         let m = self.schedule.batches.len();
         let mut total = 0.0f64;
-        let mut met = 0usize;
-        let mut excess = 0u64;
-        for k in 0..m {
-            total += self.bsum[k];
-            met += self.bmet[k];
-            excess += self.kv.batch_excess(self.bkv[k]);
+        for &s in &self.agg.bsum {
+            total += s;
         }
-        let makespan =
-            if m == 0 { 0.0 } else { self.wait[m - 1] + self.bmax[m - 1] };
+        let mut met = 0usize;
+        for &c in &self.agg.bmet {
+            met += c;
+        }
+        let mut excess = 0u64;
+        for &b in &self.agg.bkv {
+            excess += self.kv.batch_excess(b);
+        }
+        let makespan = if m == 0 { 0.0 } else { self.agg.bend[m - 1] };
         let g = if total > 0.0 { met as f64 / total } else { 0.0 };
         self.kv_excess = excess;
         self.eval = Eval { g, met, total_e2e_ms: total, makespan_ms: makespan };
@@ -830,21 +901,11 @@ impl<'a> IncrementalEval<'a> {
         rng: &mut Rng,
     ) -> Option<Eval> {
         debug_assert!(self.pending.is_none(), "move pending; commit or rollback");
-        // Snapshot into reused buffers (no allocation once warm).
+        // Snapshot into reused buffers (no allocation once warm): the
+        // batch boundaries plus a straight per-column copy of the SoA.
         self.saved_batches.clear();
         self.saved_batches.extend_from_slice(&self.schedule.batches);
-        self.saved_bmax.clear();
-        self.saved_bmax.extend_from_slice(&self.bmax);
-        self.saved_bsum.clear();
-        self.saved_bsum.extend_from_slice(&self.bsum);
-        self.saved_bmet.clear();
-        self.saved_bmet.extend_from_slice(&self.bmet);
-        self.saved_wait.clear();
-        self.saved_wait.extend_from_slice(&self.wait);
-        self.saved_barr.clear();
-        self.saved_barr.extend_from_slice(&self.barr);
-        self.saved_bkv.clear();
-        self.saved_bkv.extend_from_slice(&self.bkv);
+        self.saved.copy_from(&self.agg);
         self.saved_kv_excess = self.kv_excess;
         self.saved_eval = self.eval;
 
@@ -855,7 +916,7 @@ impl<'a> IncrementalEval<'a> {
         let veto = if self.kv.vetoes_moves() {
             Some(moves::KvVeto {
                 job_blocks: self.table.kv_blocks_all(),
-                batch_blocks: &self.bkv,
+                batch_blocks: &self.agg.bkv,
                 pool_blocks: self.kv.pool_blocks,
                 phased: if self.kv.phased() {
                     Some(moves::PhasedVeto {
@@ -878,43 +939,33 @@ impl<'a> IncrementalEval<'a> {
         )?;
         self.pending = Some(mv.undo);
 
-        // Mirror the move's structural edits on the per-batch arrays so
+        // Mirror the move's structural edits on the per-batch columns so
         // entry k still describes the batch now at index k.
         if let Some(r) = mv.removed_batch {
-            self.bmax.remove(r);
-            self.bsum.remove(r);
-            self.bmet.remove(r);
-            self.wait.remove(r);
-            self.barr.remove(r);
-            self.bkv.remove(r);
+            self.agg.remove(r);
         }
         if mv.appended_batch {
-            self.bmax.push(0.0);
-            self.bsum.push(0.0);
-            self.bmet.push(0);
-            self.wait.push(0.0);
-            self.barr.push(0.0);
-            self.bkv.push(0);
+            self.agg.push_zero();
         }
         let m = self.schedule.batches.len();
-        debug_assert_eq!(self.bmax.len(), m);
+        debug_assert_eq!(self.agg.len(), m);
 
         // Engine-free time entering the first touched batch, derived from
         // the untouched prefix exactly as the sequential full evaluation
-        // would (wait[k-1] is batch k-1's start, so start + bmax = end).
+        // would (bend[k-1] caches batch k-1's start + bmax = end).
         let b_lo = mv.b_lo;
         let mut free = if b_lo == 0 {
             self.t0_ms
         } else {
-            self.wait[b_lo - 1] + self.bmax[b_lo - 1]
+            self.agg.bend[b_lo - 1]
         };
         let mut start: usize = self.schedule.batches[..b_lo].iter().sum();
         let mut k = b_lo;
         while k < m {
             let membership_changed = k == mv.b_lo || k == mv.b_hi;
             if !membership_changed
-                && TimelineOrigin::batch_start(free, self.barr[k])
-                    == self.wait[k]
+                && TimelineOrigin::batch_start(free, self.agg.barr[k])
+                    == self.agg.wait[k]
             {
                 if k > mv.b_hi {
                     // Unchanged membership (so barr and bmax are valid)
@@ -929,7 +980,7 @@ impl<'a> IncrementalEval<'a> {
                 // shifted: recompute everything at the new timeline slot.
                 self.recompute_batch(k, start, free);
             }
-            free = self.wait[k] + self.bmax[k];
+            free = self.agg.bend[k];
             start += self.schedule.batches[k];
             k += 1;
         }
@@ -949,18 +1000,7 @@ impl<'a> IncrementalEval<'a> {
         undo.revert(&mut self.schedule.order);
         self.schedule.batches.clear();
         self.schedule.batches.extend_from_slice(&self.saved_batches);
-        self.bmax.clear();
-        self.bmax.extend_from_slice(&self.saved_bmax);
-        self.bsum.clear();
-        self.bsum.extend_from_slice(&self.saved_bsum);
-        self.bmet.clear();
-        self.bmet.extend_from_slice(&self.saved_bmet);
-        self.wait.clear();
-        self.wait.extend_from_slice(&self.saved_wait);
-        self.barr.clear();
-        self.barr.extend_from_slice(&self.saved_barr);
-        self.bkv.clear();
-        self.bkv.extend_from_slice(&self.saved_bkv);
+        self.agg.copy_from(&self.saved);
         self.kv_excess = self.saved_kv_excess;
         self.eval = self.saved_eval;
     }

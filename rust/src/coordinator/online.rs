@@ -88,6 +88,19 @@
 //! the replanned objective ranks suffixes slightly differently than the
 //! non-compacted controller — compaction is opt-in, and the default
 //! controller remains bit-identical to the pre-compaction behaviour.
+//!
+//! **Deadline-adaptive budgets**
+//! ([`WaveController::with_adaptive_budget`],
+//! [`OnlineOpts::adaptive_budget`]): a replan is only free while the
+//! engine is busy executing the batch dispatched ahead of it — a fixed
+//! `iters_per_temp` either wastes that window or overruns it. With
+//! adaptive budgets on, the controller keeps an EWMA of measured replan
+//! wall time per SA unit (one iteration at one temperature on one chain)
+//! and sizes each replan's `iters_per_temp` so the predicted search time
+//! fills the predicted execution window of the next batch to dispatch,
+//! clamped to `[4, 16 × configured]`. The first replan (no measurement
+//! yet) and replans with no planned next batch run at the configured
+//! budget. Off by default — the fixed-budget behaviour, bit for bit.
 
 use anyhow::{bail, Result};
 
@@ -133,8 +146,24 @@ pub struct OnlineStats {
     pub admitted: usize,
     /// Replans executed (one per non-empty admission).
     pub replans: usize,
-    /// Total replanning wall time (ms).
+    /// Total replanning wall time (ms): Σ per-replan
+    /// [`SearchStats::overhead_ms`], the max across tempered chains since
+    /// they run concurrently. What a dispatch actually waits for.
     pub replan_ms_total: f64,
+    /// Total replanning CPU time (ms): Σ per-replan
+    /// [`SearchStats::cpu_ms`] — wall plus the concurrent busy time of
+    /// the extra tempered chains. Equals `replan_ms_total` at
+    /// `chains == 1`. Fig. 11(B)-style overhead comparisons across chain
+    /// counts must use this, not wall.
+    pub replan_cpu_ms_total: f64,
+    /// Replans that ran under a deadline-adaptive iteration budget
+    /// ([`WaveController::with_adaptive_budget`]).
+    pub budget_replans: usize,
+    /// Σ wall-clock window (ms) allotted to the budgeted replans (the
+    /// predicted dispatch gap each was sized to fit).
+    pub budget_allotted_ms_total: f64,
+    /// Σ measured wall time (ms) the budgeted replans actually spent.
+    pub budget_spent_ms_total: f64,
     /// Total objective evaluations across all replans.
     pub sa_evals: usize,
     /// Batches dispatched (frozen).
@@ -159,6 +188,27 @@ impl OnlineStats {
             0.0
         } else {
             self.replan_ms_total / self.replans as f64
+        }
+    }
+
+    /// Mean replanning CPU time (ms) per admission (Σ across tempered
+    /// chains; equals [`OnlineStats::avg_replan_ms`] at `chains == 1`).
+    pub fn avg_replan_cpu_ms(&self) -> f64 {
+        if self.replans == 0 {
+            0.0
+        } else {
+            self.replan_cpu_ms_total / self.replans as f64
+        }
+    }
+
+    /// Measured-over-allotted wall-time ratio of the budgeted replans
+    /// (1.0 = replans exactly fill their predicted dispatch gaps; 0 when
+    /// no replan was budgeted).
+    pub fn budget_utilization(&self) -> f64 {
+        if self.budget_allotted_ms_total > 0.0 {
+            self.budget_spent_ms_total / self.budget_allotted_ms_total
+        } else {
+            0.0
         }
     }
 
@@ -257,10 +307,28 @@ pub struct WaveController<'a> {
     fold_k: usize,
     fold_pos: usize,
     fold_end: f64,
+    /// Size each replan's iteration budget to the next predicted dispatch
+    /// gap ([`WaveController::with_adaptive_budget`]); off by default —
+    /// the fixed-`iters_per_temp` behaviour, bit for bit.
+    adaptive_budget: bool,
+    /// EWMA of measured replan wall ms per SA *unit* (one iteration at
+    /// one temperature on one chain); `None` until the first replan
+    /// provides a measurement.
+    ewma_ms_per_unit: Option<f64>,
     stats: OnlineStats,
     /// Last replan's search stats (None before the first admission).
     last_search: Option<SearchStats>,
 }
+
+/// EWMA smoothing constant for the measured SA cost-per-unit estimate
+/// driving deadline-adaptive budgets.
+const BUDGET_EWMA_ALPHA: f64 = 0.3;
+/// Adaptive-budget floor: a replan never drops below this many iterations
+/// per temperature, however tight the predicted dispatch gap.
+const BUDGET_MIN_ITERS: usize = 4;
+/// Adaptive-budget ceiling: a replan never exceeds this multiple of the
+/// configured `iters_per_temp`, however wide the gap.
+const BUDGET_MAX_SCALE: usize = 16;
 
 impl<'a> WaveController<'a> {
     pub fn new(
@@ -286,6 +354,8 @@ impl<'a> WaveController<'a> {
             fold_k: 0,
             fold_pos: 0,
             fold_end: 0.0,
+            adaptive_budget: false,
+            ewma_ms_per_unit: None,
             stats: OnlineStats::default(),
             last_search: None,
         }
@@ -300,6 +370,20 @@ impl<'a> WaveController<'a> {
     /// caveat.
     pub fn with_compaction(mut self) -> Self {
         self.compact = true;
+        self
+    }
+
+    /// Enable deadline-adaptive iteration budgets: each replan's
+    /// `iters_per_temp` is sized so the predicted search wall time — an
+    /// EWMA of measured ms per SA unit (iteration × temperature × chain)
+    /// over past replans — fits the predicted execution time of the next
+    /// batch to dispatch, clamped to
+    /// `[BUDGET_MIN_ITERS, BUDGET_MAX_SCALE × iters_per_temp]`. Replans
+    /// with no measurement yet (the first) or no planned next batch run
+    /// at the configured budget. Off by default — the fixed-budget
+    /// behaviour, bit for bit.
+    pub fn with_adaptive_budget(mut self) -> Self {
+        self.adaptive_budget = true;
         self
     }
 
@@ -416,6 +500,63 @@ impl<'a> WaveController<'a> {
         self.params
             .seed
             .wrapping_add(r.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Predicted wall-clock window (ms) this replan has before the engine
+    /// needs its next plan: the predicted execution time (member exec max
+    /// at the batch's size) of the next batch to dispatch — the replan
+    /// overlaps that batch's execution, so finishing within it costs no
+    /// engine idle time. `None` when nothing is planned or everything is
+    /// dispatched (no gap to size against).
+    fn next_dispatch_window_ms(&self) -> Option<f64> {
+        if self.frozen_batches >= self.plan.batches.len() {
+            return None;
+        }
+        let k = self.frozen_batches;
+        let start: usize = self.plan.batches[..k].iter().sum();
+        let bsize = self.plan.batches[k];
+        Some(self.table.batch_exec_max_ms(&self.plan.order[start..start + bsize]))
+    }
+
+    /// Deadline-adaptive budget for the upcoming replan: `Some((window,
+    /// iters))` when adaptive budgets are on, a cost estimate exists, and
+    /// there is a next dispatch gap to size against — `iters` is the
+    /// per-temperature budget whose predicted wall time fills `window`,
+    /// clamped to `[BUDGET_MIN_ITERS, BUDGET_MAX_SCALE × configured]`.
+    fn adaptive_window(&self) -> Option<(f64, usize)> {
+        if !self.adaptive_budget {
+            return None;
+        }
+        let cost = self.ewma_ms_per_unit?;
+        let window = self.next_dispatch_window_ms()?;
+        let levels = self.params.temp_levels().max(1);
+        let chains = self.params.chains.max(1);
+        let base = self.params.iters_per_temp.max(1);
+        // Tempered chains run concurrently, so wall cost scales with the
+        // ladder length only; per-unit cost already averages over chains.
+        let per_iter = cost * (levels * chains) as f64;
+        let raw = if per_iter > 0.0 {
+            (window / per_iter) as usize
+        } else {
+            base * BUDGET_MAX_SCALE
+        };
+        Some((window, raw.clamp(BUDGET_MIN_ITERS, base * BUDGET_MAX_SCALE)))
+    }
+
+    /// Fold one measured replan into the EWMA cost model: wall ms per SA
+    /// unit under the parameters the replan actually ran with.
+    fn observe_replan_cost(&mut self, params: &SaParams, stats: &SearchStats) {
+        if !self.adaptive_budget {
+            return;
+        }
+        let units = (params.temp_levels().max(1)
+            * params.iters_per_temp.max(1)
+            * params.chains.max(1)) as f64;
+        let measured = stats.overhead_ms / units;
+        self.ewma_ms_per_unit = Some(match self.ewma_ms_per_unit {
+            None => measured,
+            Some(prev) => prev + BUDGET_EWMA_ALPHA * (measured - prev),
+        });
     }
 
     /// Pack the jobs at `order[from..]` into trailing batches appended to
@@ -601,7 +742,11 @@ impl<'a> WaveController<'a> {
             None => self.table.extend(new_jobs, self.predictor),
         }
 
-        let params = SaParams { seed: self.replan_seed(), ..self.params };
+        let mut params = SaParams { seed: self.replan_seed(), ..self.params };
+        let budget = self.adaptive_window();
+        if let Some((_, iters)) = budget {
+            params.iters_per_temp = iters;
+        }
         let ev = Evaluator::with_arrivals(
             &self.jobs,
             self.predictor,
@@ -637,7 +782,14 @@ impl<'a> WaveController<'a> {
         self.stats.admitted += new_jobs.len();
         self.stats.replans += 1;
         self.stats.replan_ms_total += res.stats.overhead_ms;
+        self.stats.replan_cpu_ms_total += res.stats.cpu_ms;
         self.stats.sa_evals += res.stats.evals;
+        if let Some((window, _)) = budget {
+            self.stats.budget_replans += 1;
+            self.stats.budget_allotted_ms_total += window;
+            self.stats.budget_spent_ms_total += res.stats.overhead_ms;
+        }
+        self.observe_replan_cost(&params, &res.stats);
         self.last_search = Some(res.stats);
         Ok(res.stats)
     }
@@ -759,7 +911,15 @@ impl<'a> WaveController<'a> {
         if self.jobs.is_empty() {
             return None; // origin shifted; nothing live to replan
         }
-        let params = SaParams { seed: self.replan_seed(), ..self.params };
+        let mut params = SaParams { seed: self.replan_seed(), ..self.params };
+        // A drift replan has just compacted the dispatched prefix away, so
+        // the "next batch to dispatch" window is plan batch 0's predicted
+        // execution — the adaptive sizing reads it the same way as an
+        // admission replan.
+        let budget = self.adaptive_window();
+        if let Some((_, iters)) = budget {
+            params.iters_per_temp = iters;
+        }
         let warm = self.plan.clone();
         let ev = Evaluator::with_arrivals(
             &self.jobs,
@@ -775,7 +935,14 @@ impl<'a> WaveController<'a> {
         self.stats.replans += 1;
         self.stats.drift_replans += 1;
         self.stats.replan_ms_total += res.stats.overhead_ms;
+        self.stats.replan_cpu_ms_total += res.stats.cpu_ms;
         self.stats.sa_evals += res.stats.evals;
+        if let Some((window, _)) = budget {
+            self.stats.budget_replans += 1;
+            self.stats.budget_allotted_ms_total += window;
+            self.stats.budget_spent_ms_total += res.stats.overhead_ms;
+        }
+        self.observe_replan_cost(&params, &res.stats);
         self.last_search = Some(res.stats);
         Some(res.stats)
     }
@@ -857,6 +1024,12 @@ pub struct OnlineOpts {
     /// (reconciliation still records diagnostics; it never mutates the
     /// plan).
     pub replan_drift_ms: f64,
+    /// Deadline-adaptive iteration budgets
+    /// ([`WaveController::with_adaptive_budget`]): each replan's
+    /// `iters_per_temp` is sized so its predicted wall time fits the
+    /// predicted execution window of the next batch to dispatch. Off by
+    /// default — the fixed-budget behaviour, bit for bit.
+    pub adaptive_budget: bool,
 }
 
 /// Event loop: drive one engine from a timestamped arrival stream (module
@@ -916,6 +1089,9 @@ pub fn run_online_opts(
     let mut ctl = WaveController::new(predictor, *params, strategy);
     if opts.compact_dispatched {
         ctl = ctl.with_compaction();
+    }
+    if opts.adaptive_budget {
+        ctl = ctl.with_adaptive_budget();
     }
     let mut completions: Vec<Completion> = Vec::with_capacity(requests.len());
     let mut next = 0usize;
@@ -1240,6 +1416,52 @@ mod tests {
             }
             ctl.dispatch_next();
         }
+    }
+
+    #[test]
+    fn adaptive_budget_first_replan_runs_at_the_configured_budget() {
+        // No cost measurement exists before the first replan, so the
+        // adaptive controller must replay the fixed-budget controller bit
+        // for bit on it.
+        let pred = predictor();
+        let mut rng = Rng::new(21);
+        let jobs: Vec<Job> = (0..12).map(|i| job(i, &mut rng)).collect();
+        let p = params(4, 17);
+        let mut fixed = WaveController::new(&pred, p, ReplanStrategy::Warm);
+        let mut adaptive = WaveController::new(&pred, p, ReplanStrategy::Warm)
+            .with_adaptive_budget();
+        let sf = fixed.admit(&jobs).unwrap();
+        let sa = adaptive.admit(&jobs).unwrap();
+        assert_eq!(fixed.plan(), adaptive.plan());
+        assert_eq!(fixed.eval(), adaptive.eval());
+        assert_eq!(sf.evals, sa.evals);
+        assert_eq!(adaptive.stats().budget_replans, 0);
+        assert_eq!(adaptive.stats().budget_allotted_ms_total, 0.0);
+    }
+
+    #[test]
+    fn adaptive_budget_sizes_later_replans_and_records_utilization() {
+        let pred = predictor();
+        let mut rng = Rng::new(22);
+        let first: Vec<Job> = (0..10).map(|i| job(i, &mut rng)).collect();
+        let mut ctl = WaveController::new(&pred, params(3, 5), ReplanStrategy::Warm)
+            .with_adaptive_budget();
+        ctl.admit(&first).unwrap();
+        // first replan measured a cost and a next batch is planned: the
+        // second replan runs under a budget window
+        let second: Vec<Job> = (10..16).map(|i| job(i, &mut rng)).collect();
+        let stats = ctl.admit(&second).unwrap();
+        assert_eq!(ctl.stats().budget_replans, 1);
+        assert!(ctl.stats().budget_allotted_ms_total > 0.0);
+        assert!(ctl.stats().budget_spent_ms_total >= 0.0);
+        assert!(ctl.stats().budget_utilization() >= 0.0);
+        // the budgeted search still did real work within the clamp
+        assert!(stats.evals > 0);
+        ctl.plan().validate(3).unwrap();
+        assert_eq!(ctl.plan().len(), 16);
+        // wall and cpu accounting agree at chains == 1
+        let s = ctl.stats();
+        assert!((s.replan_cpu_ms_total - s.replan_ms_total).abs() < 1e-9);
     }
 
     #[test]

@@ -94,6 +94,9 @@ impl Policy {
                             improved: 0,
                             early_exit: false,
                             overhead_ms: res.overhead_ms,
+                            cpu_ms: res.overhead_ms,
+                            exchanges: 0,
+                            winner_chain: 0,
                         };
                         (res.schedule, Some(stats))
                     }

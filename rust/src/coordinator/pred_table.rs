@@ -205,6 +205,22 @@ impl PredTable {
         self.get(job, 1).exec_ms
     }
 
+    /// Predicted execution time of a batch made of `members` — the max of
+    /// each member's exec at the batch's size (Eq. 11's inner max). This
+    /// is the dispatch window the deadline-adaptive replan budget races
+    /// against ([`crate::coordinator::online::OnlineOpts::adaptive_budget`]).
+    pub fn batch_exec_max_ms(&self, members: &[usize]) -> f64 {
+        let bsize = members.len();
+        let mut bmax = 0.0f64;
+        for &j in members {
+            let e = self.get(j, bsize).exec_ms;
+            if e > bmax {
+                bmax = e;
+            }
+        }
+        bmax
+    }
+
     /// KV footprint of `job` in blocks (prompt + predicted output).
     #[inline]
     pub fn kv_blocks(&self, job: usize) -> u64 {
@@ -287,6 +303,28 @@ mod tests {
                 table.solo_exec_ms(j),
                 pred.predict(1, job.input_len, job.output_len).exec_ms
             );
+        }
+    }
+
+    #[test]
+    fn batch_exec_max_is_the_member_max_at_the_batch_size() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(11);
+        let jobs: Vec<Job> = (0..9)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 1 + rng.below(1500),
+                output_len: rng.below(300),
+                slo: Slo::E2e { e2e_ms: 1e9 },
+            })
+            .collect();
+        let table = PredTable::build(&jobs, &pred, 4);
+        for members in [&[2usize][..], &[0, 3], &[1, 4, 7], &[5, 6, 8, 0]] {
+            let expect = members
+                .iter()
+                .map(|&j| table.get(j, members.len()).exec_ms)
+                .fold(0.0f64, f64::max);
+            assert_eq!(table.batch_exec_max_ms(members), expect);
         }
     }
 

@@ -60,6 +60,19 @@
 //! caller's [`Evaluator`] carries. [`priority_mapping`] mirrors the
 //! evaluator's arrival column into the [`PredTable`] it builds so the
 //! incremental path is bit-identical to the full one, timelines included.
+//!
+//! **Parallel tempering** ([`SaParams::chains`]): `chains == K ≥ 2` runs K
+//! Metropolis chains from the same seed schedule on scoped threads —
+//! chain 0 at the configured temperature schedule and seed, chain c at
+//! effective temperature ×[`TEMPER_STAGGER`]ᶜ under a [`chain_seed`]-
+//! derived RNG stream. Chains run in lockstep rounds of
+//! [`SaParams::exchange_period`] temperature levels; between rounds a
+//! deterministic best-exchange installs the global champion's incumbent
+//! into every chain whose walking state is strictly worse. The result is
+//! deterministic for a fixed seed and exchange schedule regardless of
+//! thread interleaving, and `chains == 1` (the default) replays the
+//! pre-tempering single-chain stream bit for bit (invariant 11 in
+//! `docs/ARCHITECTURE.md`).
 
 use crate::coordinator::kv::{self, KvConfig, KvMode};
 use crate::coordinator::objective::{
@@ -85,6 +98,18 @@ pub struct SaParams {
     /// and orders candidates by (excess, G), under [`KvMode::Soft`]
     /// penalizes the score by `weight · excess_blocks`.
     pub kv: KvConfig,
+    /// Parallel-tempering chain count. `1` (the default) runs the classic
+    /// single-chain search and replays its RNG stream bit for bit
+    /// (invariant 11 in `docs/ARCHITECTURE.md`). `K ≥ 2` runs K chains on
+    /// scoped threads: chain 0 at the configured temperature/seed, chain c
+    /// at effective temperature ×[`TEMPER_STAGGER`]ᶜ under a derived seed
+    /// ([`chain_seed`]), exchanging the global best every
+    /// [`SaParams::exchange_period`] temperature levels. Deterministic for
+    /// a fixed seed regardless of thread interleaving.
+    pub chains: usize,
+    /// Temperature levels between deterministic best-exchanges when
+    /// `chains ≥ 2` (clamped to ≥ 1). Irrelevant at `chains == 1`.
+    pub exchange_period: usize,
 }
 
 impl Default for SaParams {
@@ -97,6 +122,8 @@ impl Default for SaParams {
             max_batch: 8,
             seed: 0,
             kv: KvConfig::UNLIMITED,
+            chains: 1,
+            exchange_period: 4,
         }
     }
 }
@@ -116,19 +143,30 @@ impl SaParams {
     }
 }
 
-/// Search diagnostics (Table 1 overhead, Fig. 8 sweeps).
+/// Search diagnostics (Table 1 overhead, Fig. 8 sweeps). With tempering
+/// (`chains ≥ 2`) the counters aggregate over every chain.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SearchStats {
-    /// Objective evaluations performed.
+    /// Objective evaluations performed (summed across chains).
     pub evals: usize,
-    /// Candidate acceptances (better or Metropolis).
+    /// Candidate acceptances (better or Metropolis; summed across chains).
     pub accepted: usize,
-    /// Strict improvements over the incumbent best.
+    /// Strict improvements over a chain's incumbent best (summed).
     pub improved: usize,
     /// True if the sorted seed met all SLOs (lines 7–10 fast path).
     pub early_exit: bool,
-    /// Wall-clock search time (ms).
+    /// Wall-clock search time (ms): what the caller actually waited.
     pub overhead_ms: f64,
+    /// CPU-time search cost (ms): `overhead_ms` plus the off-critical-path
+    /// chain time when chains run in parallel. Equals `overhead_ms`
+    /// exactly at `chains == 1` — the honest quantity to *sum* across
+    /// instances for Fig. 11(B)-style comparisons.
+    pub cpu_ms: f64,
+    /// Accepted best-exchange adoptions across chains (0 at `chains == 1`).
+    pub exchanges: usize,
+    /// Temperature index of the chain that produced the returned best
+    /// (0 = the base-temperature chain; always 0 at `chains == 1`).
+    pub winner_chain: usize,
 }
 
 impl SearchStats {
@@ -139,6 +177,9 @@ impl SearchStats {
             improved: 0,
             early_exit: false,
             overhead_ms: 0.0,
+            cpu_ms: 0.0,
+            exchanges: 0,
+            winner_chain: 0,
         }
     }
 }
@@ -219,19 +260,253 @@ fn hard_repack(
     Schedule { order: order.to_vec(), batches }
 }
 
+/// Effective-temperature stagger between adjacent tempering chains: chain
+/// `c` runs its Metropolis rule at `T_eff × TEMPER_STAGGER^c`, so higher
+/// chains escape local optima more readily while chain 0 exploits at the
+/// configured schedule.
+pub const TEMPER_STAGGER: f64 = 1.5;
+
+/// Per-chain RNG seed: chain 0 keeps the base seed verbatim (the K=1
+/// bit-identity hinge), higher chains get SplitMix64-style mixed streams
+/// so seeded multi-chain runs stay reproducible without replaying each
+/// other.
+pub fn chain_seed(base: u64, chain: usize) -> u64 {
+    if chain == 0 {
+        return base;
+    }
+    let mut z = base ^ (chain as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The exact temperature sequence the classic loop visits: seeded at `t0`,
+/// multiplied by `decay` while `≥ t_thres`. Materialized so tempering
+/// rounds can chunk it at exchange boundaries; iterating the returned
+/// ladder reproduces `while t >= t_thres { …; t *= decay }` bit for bit.
+fn temp_ladder(params: &SaParams) -> Vec<f64> {
+    let mut temps = Vec::new();
+    let mut t = params.t0;
+    while t >= params.t_thres {
+        temps.push(t);
+        t *= params.decay;
+    }
+    temps
+}
+
+/// `(f_a, x_a)` strictly better than `(f_b, x_b)` under `kv`'s candidate
+/// ordering — the exact comparison the acceptance loop uses for its
+/// incumbent-best update, shared with the exchange step so adopting the
+/// global best can never disagree with chain-local best tracking.
+fn kv_better(kv: &KvConfig, f_a: &Eval, x_a: u64, f_b: &Eval, x_b: u64) -> bool {
+    match kv.mode {
+        KvMode::Soft { weight } => {
+            KvConfig::soft_score(f_a.g, x_a, weight)
+                > KvConfig::soft_score(f_b.g, x_b, weight)
+        }
+        _ => x_a < x_b || (x_a == x_b && f_a.g > f_b.g),
+    }
+}
+
+/// One Metropolis chain: the walking incremental state, its RNG stream,
+/// and its incumbent best. At `stagger == 1.0` and the full temperature
+/// ladder this replays the pre-tempering single-chain loop bit for bit
+/// (`x * 1.0` is exact), which is how `chains == 1` keeps invariant 11.
+struct ChainState<'e> {
+    inc: IncrementalEval<'e>,
+    rng: Rng,
+    f_cur: Eval,
+    x_cur: u64,
+    best: Schedule,
+    f_best: Eval,
+    x_best: u64,
+    /// Constant effective-temperature multiplier ([`TEMPER_STAGGER`]ᶜ).
+    stagger: f64,
+    evals: usize,
+    accepted: usize,
+    improved: usize,
+    /// Wall time this chain spent inside [`ChainState::run_levels`] (ms).
+    busy_ms: f64,
+}
+
+impl<'e> ChainState<'e> {
+    fn new(
+        ev: &'e Evaluator<'_>,
+        table: &'e PredTable,
+        kv: KvConfig,
+        seed_schedule: Schedule,
+        f_seed: Eval,
+        rng: Rng,
+        stagger: f64,
+    ) -> Self {
+        let inc = IncrementalEval::new_kv(
+            ev.jobs(),
+            table,
+            seed_schedule,
+            kv,
+            ev.t0_ms(),
+        );
+        debug_assert!(
+            eval_bits_equal(&inc.eval(), &f_seed),
+            "incremental seed eval {:?} != full {:?}",
+            inc.eval(),
+            f_seed
+        );
+        let x_cur = inc.kv_excess();
+        let best = inc.schedule().clone();
+        ChainState {
+            inc,
+            rng,
+            f_cur: f_seed,
+            x_cur,
+            best,
+            f_best: f_seed,
+            x_best: x_cur,
+            stagger,
+            evals: 0,
+            accepted: 0,
+            improved: 0,
+            busy_ms: 0.0,
+        }
+    }
+
+    /// Run the Metropolis loop over a slice of the temperature ladder —
+    /// the chain-local section of one tempering round. The body is the
+    /// classic acceptance loop verbatim, with the chain's stagger folded
+    /// into the normalized temperature.
+    fn run_levels(
+        &mut self,
+        temps: &[f64],
+        params: &SaParams,
+        max_batch: usize,
+        frozen_batches: usize,
+        f_scale: f64,
+    ) {
+        let kv = params.kv;
+        let t_in = crate::util::now_ms();
+        for &t in temps {
+            for _ in 0..params.iters_per_temp {
+                // Allocation-free move applied against the incremental
+                // state; commit or rollback below.
+                let mv = self.inc.try_random_move_masked(
+                    max_batch,
+                    frozen_batches,
+                    &mut self.rng,
+                );
+                let f_new = match mv {
+                    Some(e) => e,
+                    None => continue,
+                };
+                let x_new = self.inc.kv_excess();
+                self.evals += 1;
+                let accept = match kv.mode {
+                    KvMode::Soft { weight } => {
+                        let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
+                        let s_cur =
+                            KvConfig::soft_score(self.f_cur.g, self.x_cur, weight);
+                        if s_new > s_cur {
+                            true
+                        } else {
+                            // Metropolis with normalized temperature
+                            // (see module docs).
+                            let t_eff =
+                                (t * self.stagger / params.t0) * f_scale;
+                            self.rng.chance(((s_new - s_cur) / t_eff).exp())
+                        }
+                    }
+                    // Unlimited (x always 0) and Hard share one structure.
+                    _ => {
+                        if x_new != self.x_cur {
+                            x_new < self.x_cur
+                        } else if f_new.g > self.f_cur.g {
+                            true
+                        } else {
+                            let t_eff =
+                                (t * self.stagger / params.t0) * f_scale;
+                            self.rng.chance(
+                                ((f_new.g - self.f_cur.g) / t_eff).exp(),
+                            )
+                        }
+                    }
+                };
+                if accept {
+                    self.inc.commit();
+                    self.f_cur = f_new;
+                    self.x_cur = x_new;
+                    self.accepted += 1;
+                    if kv_better(
+                        &kv,
+                        &self.f_cur,
+                        self.x_cur,
+                        &self.f_best,
+                        self.x_best,
+                    ) {
+                        self.best.order.clear();
+                        self.best
+                            .order
+                            .extend_from_slice(&self.inc.schedule().order);
+                        self.best.batches.clear();
+                        self.best
+                            .batches
+                            .extend_from_slice(&self.inc.schedule().batches);
+                        self.f_best = self.f_cur;
+                        self.x_best = self.x_cur;
+                        self.improved += 1;
+                    }
+                } else {
+                    self.inc.rollback();
+                }
+            }
+        }
+        self.busy_ms += crate::util::now_ms() - t_in;
+    }
+}
+
+/// Index of the chain holding the strictly best incumbent (ties keep the
+/// lowest index — deterministic regardless of thread interleaving).
+fn champion(chains: &[ChainState<'_>], kv: &KvConfig) -> usize {
+    let mut champ = 0usize;
+    for (c, chain) in chains.iter().enumerate().skip(1) {
+        if kv_better(
+            kv,
+            &chain.f_best,
+            chain.x_best,
+            &chains[champ].f_best,
+            chains[champ].x_best,
+        ) {
+            champ = c;
+        }
+    }
+    champ
+}
+
 /// The shared Metropolis loop: anneal from `seed_schedule` against a
 /// prebuilt prediction table, with the first `frozen_batches` batches
 /// masked off from every move. `frozen_batches == 0` reproduces the
 /// classic closed-wave search bit for bit.
 ///
+/// **Parallel tempering** (`params.chains`): at `chains == 1` one chain
+/// runs the classic loop — same RNG stream, same stats, same result as
+/// the pre-tempering search (invariant 11). At `chains == K ≥ 2`, K
+/// chains start from the same seed schedule with [`chain_seed`]-derived
+/// RNG streams and [`TEMPER_STAGGER`]-staggered effective temperatures,
+/// running in lockstep rounds of [`SaParams::exchange_period`]
+/// temperature levels on scoped threads. Between rounds the driver
+/// performs a deterministic best-exchange: every chain whose walking
+/// state is strictly worse (under the same candidate ordering the
+/// acceptance loop uses) than the global champion's incumbent adopts that
+/// incumbent. The final result is the champion's best after the last
+/// round — deterministic for a fixed seed and exchange schedule.
+///
 /// **KV acceptance** (`params.kv`): with an unlimited pool every excess
-/// is zero and the rule below collapses to the pre-KV comparison, drawing
+/// is zero and the rule collapses to the pre-KV comparison, drawing
 /// the identical RNG stream. Under [`KvMode::Hard`] candidates are
 /// ordered lexicographically by (excess, G) — the veto inside the move
 /// generator already prevents excess from growing, and the lexicon lets a
 /// search seeded infeasibly descend into feasibility first. Under
 /// [`KvMode::Soft`] the Metropolis rule runs on the penalized score
 /// `G − weight · excess`.
+#[allow(clippy::too_many_arguments)]
 fn anneal(
     ev: &Evaluator,
     table: &PredTable,
@@ -244,7 +519,7 @@ fn anneal(
     t_start: f64,
 ) -> SaResult {
     let kv = params.kv;
-    // Layer 2: incremental evaluator owns the walking candidate state.
+    // Layer 2: incremental evaluators own the walking candidate state.
     // The table's arrival column must mirror the evaluator's timeline —
     // the two are the same storage on the online path, and
     // `priority_mapping` syncs them on the closed path.
@@ -256,96 +531,117 @@ fn anneal(
         },
         "prediction-table arrival column diverges from the evaluator"
     );
-    let mut inc = IncrementalEval::new_kv(
-        ev.jobs(),
-        table,
-        seed_schedule,
-        kv,
-        ev.t0_ms(),
-    );
-    debug_assert!(
-        eval_bits_equal(&inc.eval(), &f_seed),
-        "incremental seed eval {:?} != full {:?}",
-        inc.eval(),
-        f_seed
-    );
+    let f_scale = f_seed.g.abs().max(1e-12);
+    let temps = temp_ladder(params);
+    let n_chains = params.chains.max(1);
 
-    let mut f_cur = f_seed;
-    let mut x_cur = inc.kv_excess();
-    let mut best = inc.schedule().clone();
-    let mut f_best = f_cur;
-    let mut x_best = x_cur;
-
-    let f_scale = f_cur.g.abs().max(1e-12);
-    let mut rng = Rng::new(params.seed);
-    let mut t = params.t0;
-
-    while t >= params.t_thres {
-        for _ in 0..params.iters_per_temp {
-            // Layer 3: allocation-free move applied against the
-            // incremental state; commit or rollback below.
-            let mv = inc.try_random_move_masked(max_batch, frozen_batches, &mut rng);
-            let f_new = match mv {
-                Some(e) => e,
-                None => continue,
-            };
-            let x_new = inc.kv_excess();
-            stats.evals += 1;
-            let accept = match kv.mode {
-                KvMode::Soft { weight } => {
-                    let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
-                    let s_cur = KvConfig::soft_score(f_cur.g, x_cur, weight);
-                    if s_new > s_cur {
-                        true
-                    } else {
-                        // Metropolis with normalized temperature
-                        // (see module docs).
-                        let t_eff = (t / params.t0) * f_scale;
-                        rng.chance(((s_new - s_cur) / t_eff).exp())
+    let (mut best, mut f_best, x_best, extra_cpu_ms) = if n_chains == 1 {
+        // Single chain: the pre-tempering search, bit for bit.
+        let mut chain = ChainState::new(
+            ev,
+            table,
+            kv,
+            seed_schedule,
+            f_seed,
+            Rng::new(params.seed),
+            1.0,
+        );
+        chain.run_levels(&temps, params, max_batch, frozen_batches, f_scale);
+        stats.evals += chain.evals;
+        stats.accepted += chain.accepted;
+        stats.improved += chain.improved;
+        stats.winner_chain = 0;
+        (chain.best, chain.f_best, chain.x_best, 0.0)
+    } else {
+        let mut chains: Vec<ChainState> = (0..n_chains)
+            .map(|c| {
+                ChainState::new(
+                    ev,
+                    table,
+                    kv,
+                    seed_schedule.clone(),
+                    f_seed,
+                    Rng::new(chain_seed(params.seed, c)),
+                    TEMPER_STAGGER.powi(c as i32),
+                )
+            })
+            .collect();
+        let period = params.exchange_period.max(1);
+        let mut rounds_wall_ms = 0.0f64;
+        let mut round_temps_iter = temps.chunks(period).peekable();
+        while let Some(round_temps) = round_temps_iter.next() {
+            let round_in = crate::util::now_ms();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = chains
+                    .iter_mut()
+                    .map(|chain| {
+                        scope.spawn(move || {
+                            chain.run_levels(
+                                round_temps,
+                                params,
+                                max_batch,
+                                frozen_batches,
+                                f_scale,
+                            )
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("tempering chain panicked");
+                }
+            });
+            rounds_wall_ms += crate::util::now_ms() - round_in;
+            // Deterministic best-exchange between rounds (skipped after
+            // the final round — the champion is extracted below anyway).
+            if round_temps_iter.peek().is_none() {
+                break;
+            }
+            let champ = champion(&chains, &kv);
+            let champ_best = chains[champ].best.clone();
+            let champ_f = chains[champ].f_best;
+            let champ_x = chains[champ].x_best;
+            for (c, chain) in chains.iter_mut().enumerate() {
+                if c == champ {
+                    continue;
+                }
+                if kv_better(&kv, &champ_f, champ_x, &chain.f_cur, chain.x_cur)
+                {
+                    // Adopt the global best as this chain's walking state
+                    // (rebuilt aggregates keep the incremental == full
+                    // guarantee; the chain's own RNG stream continues).
+                    chain.inc.reset(champ_best.clone());
+                    chain.f_cur = chain.inc.eval();
+                    chain.x_cur = chain.inc.kv_excess();
+                    stats.exchanges += 1;
+                    if kv_better(
+                        &kv,
+                        &champ_f,
+                        champ_x,
+                        &chain.f_best,
+                        chain.x_best,
+                    ) {
+                        chain.best.clone_from(&champ_best);
+                        chain.f_best = champ_f;
+                        chain.x_best = champ_x;
                     }
                 }
-                // Unlimited (x always 0) and Hard share one structure.
-                _ => {
-                    if x_new != x_cur {
-                        x_new < x_cur
-                    } else if f_new.g > f_cur.g {
-                        true
-                    } else {
-                        let t_eff = (t / params.t0) * f_scale;
-                        rng.chance(((f_new.g - f_cur.g) / t_eff).exp())
-                    }
-                }
-            };
-            if accept {
-                inc.commit();
-                f_cur = f_new;
-                x_cur = x_new;
-                stats.accepted += 1;
-                let improved = match kv.mode {
-                    KvMode::Soft { weight } => {
-                        KvConfig::soft_score(f_cur.g, x_cur, weight)
-                            > KvConfig::soft_score(f_best.g, x_best, weight)
-                    }
-                    _ => {
-                        x_cur < x_best
-                            || (x_cur == x_best && f_cur.g > f_best.g)
-                    }
-                };
-                if improved {
-                    best.order.clear();
-                    best.order.extend_from_slice(&inc.schedule().order);
-                    best.batches.clear();
-                    best.batches.extend_from_slice(&inc.schedule().batches);
-                    f_best = f_cur;
-                    x_best = x_cur;
-                    stats.improved += 1;
-                }
-            } else {
-                inc.rollback();
             }
         }
-        t *= params.decay;
-    }
+        let champ = champion(&chains, &kv);
+        stats.winner_chain = champ;
+        let busy_ms: f64 = chains.iter().map(|c| c.busy_ms).sum();
+        for chain in &chains {
+            stats.evals += chain.evals;
+            stats.accepted += chain.accepted;
+            stats.improved += chain.improved;
+        }
+        let winner = chains.swap_remove(champ);
+        // Off-critical-path chain time: what parallelism hid from wall
+        // clock (clamped — spawn overhead can exceed tiny workloads).
+        ((winner.best), winner.f_best, winner.x_best, {
+            (busy_ms - rounds_wall_ms).max(0.0)
+        })
+    };
 
     // Hard-mode fallback: if the budgeted walk never reached zero excess,
     // repack the best order within the pool (feasible whenever every job
@@ -370,6 +666,7 @@ fn anneal(
     }
 
     stats.overhead_ms = crate::util::now_ms() - t_start;
+    stats.cpu_ms = stats.overhead_ms + extra_cpu_ms;
     SaResult { schedule: best, eval: f_best, stats }
 }
 
@@ -397,6 +694,7 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
     if early_exit {
         stats.early_exit = true;
         stats.overhead_ms = crate::util::now_ms() - t_start;
+        stats.cpu_ms = stats.overhead_ms;
         return SaResult { schedule: seed_schedule, eval: f_seed, stats };
     }
 
@@ -510,6 +808,7 @@ pub fn priority_mapping_warm(
     if early_exit {
         stats.early_exit = true;
         stats.overhead_ms = crate::util::now_ms() - t_start;
+        stats.cpu_ms = stats.overhead_ms;
         return SaResult { schedule: seed_schedule, eval: f_seed, stats };
     }
     if let Some(w) = warm {
@@ -538,6 +837,10 @@ pub fn priority_mapping_warm(
 /// reference path. Kept for the equivalence property tests and the
 /// old-vs-new comparison in `benches/sa_throughput.rs`; use
 /// [`priority_mapping`] everywhere else.
+///
+/// Always single-chain: `params.chains` is ignored, so this is the
+/// untempered reference the `chains == 1` production path must match bit
+/// for bit (invariant 11).
 pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
     let t_start = crate::util::now_ms();
     let n = ev.jobs().len();
@@ -558,6 +861,7 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
     if early_exit {
         stats.early_exit = true;
         stats.overhead_ms = crate::util::now_ms() - t_start;
+        stats.cpu_ms = stats.overhead_ms;
         return SaResult { schedule: seed_schedule, eval: f_seed, stats };
     }
 
@@ -690,6 +994,7 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
     }
 
     stats.overhead_ms = crate::util::now_ms() - t_start;
+    stats.cpu_ms = stats.overhead_ms;
     SaResult { schedule: best, eval: f_best, stats }
 }
 
@@ -1110,5 +1415,165 @@ mod tests {
         let p = SaParams::default();
         // ln(20/500)/ln(0.95) ≈ 62.7 -> 63 levels
         assert_eq!(p.temp_levels(), 63);
+    }
+
+    #[test]
+    fn temp_ladder_replays_the_classic_cooling_loop() {
+        let p = SaParams::default();
+        let temps = temp_ladder(&p);
+        assert_eq!(temps.len(), 63);
+        assert_eq!(temps[0].to_bits(), p.t0.to_bits());
+        let mut t = p.t0;
+        for &lt in &temps {
+            assert_eq!(lt.to_bits(), t.to_bits());
+            t *= p.decay;
+        }
+        assert!(t < p.t_thres);
+    }
+
+    #[test]
+    fn chain_seed_keeps_chain_zero_and_mixes_the_rest() {
+        assert_eq!(chain_seed(0xDEAD_BEEF, 0), 0xDEAD_BEEF);
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..16 {
+            assert!(seen.insert(chain_seed(7, c)), "chain {c} seed collides");
+        }
+    }
+
+    #[test]
+    fn single_chain_tempering_is_bit_identical_to_the_untempered_reference() {
+        // Invariant 11: chains == 1 (explicit or default) must replay the
+        // untempered search exactly — same schedule, eval, and RNG-driven
+        // stats. priority_mapping_full ignores `chains`, so it is the
+        // pre-tempering reference stream.
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(seed ^ 0x7E3);
+            let jobs: Vec<Job> = (0..15)
+                .map(|_| Job {
+                    req_idx: 0,
+                    input_len: 1 + rng.below(1300),
+                    output_len: 1 + rng.below(320),
+                    slo: Slo::E2e { e2e_ms: rng.uniform(900.0, 18_000.0) },
+                })
+                .collect();
+            let ev = Evaluator::new(&jobs, &pred);
+            let base = SaParams {
+                max_batch: 4,
+                seed,
+                t0: 100.0,
+                iters_per_temp: 25,
+                ..Default::default()
+            };
+            let explicit = SaParams { chains: 1, exchange_period: 2, ..base };
+            let a = priority_mapping(&ev, &base);
+            let b = priority_mapping(&ev, &explicit);
+            let full = priority_mapping_full(&ev, &base);
+            assert_eq!(a.schedule, b.schedule, "seed {seed}");
+            assert_eq!(a.eval, b.eval, "seed {seed}");
+            assert_eq!(a.schedule, full.schedule, "seed {seed}");
+            assert_eq!(a.eval, full.eval, "seed {seed}");
+            for (x, y) in [(&a.stats, &b.stats), (&a.stats, &full.stats)] {
+                assert_eq!(x.evals, y.evals, "seed {seed}");
+                assert_eq!(x.accepted, y.accepted, "seed {seed}");
+                assert_eq!(x.improved, y.improved, "seed {seed}");
+                assert_eq!(x.early_exit, y.early_exit, "seed {seed}");
+                assert_eq!(x.exchanges, y.exchanges, "seed {seed}");
+                assert_eq!(x.winner_chain, y.winner_chain, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn tempered_search_is_deterministic_and_never_below_its_seeds() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x7E44);
+        let jobs: Vec<Job> = (0..16)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(1400),
+                output_len: 1 + rng.below(350),
+                slo: Slo::E2e { e2e_ms: rng.uniform(700.0, 12_000.0) },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        for chains in [2usize, 4] {
+            let p = SaParams {
+                max_batch: 4,
+                seed: 11,
+                t0: 100.0,
+                iters_per_temp: 25,
+                chains,
+                ..Default::default()
+            };
+            let a = priority_mapping(&ev, &p);
+            let b = priority_mapping(&ev, &p);
+            assert_eq!(a.schedule, b.schedule, "chains {chains}");
+            assert_eq!(a.eval, b.eval, "chains {chains}");
+            assert_eq!(a.stats.evals, b.stats.evals, "chains {chains}");
+            assert_eq!(a.stats.exchanges, b.stats.exchanges, "chains {chains}");
+            assert_eq!(
+                a.stats.winner_chain, b.stats.winner_chain,
+                "chains {chains}"
+            );
+            assert!(a.stats.winner_chain < chains);
+            a.schedule.validate(4).unwrap();
+            // never below the cold seeds the chains all start from
+            let fcfs = ev.eval(&Schedule::fcfs(jobs.len(), 4));
+            assert!(
+                a.eval.g >= fcfs.g - 1e-15,
+                "chains {chains}: {:?} below FCFS {:?}",
+                a.eval,
+                fcfs
+            );
+        }
+    }
+
+    #[test]
+    fn tempered_hard_kv_mode_stays_feasible() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x7E55);
+        let jobs: Vec<Job> = (0..14)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(120),
+                output_len: 1 + rng.below(60),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+            })
+            .collect();
+        let kv = KvConfig::hard(20);
+        let ev = Evaluator::new(&jobs, &pred);
+        let p = SaParams { kv, chains: 3, ..params(6, 2) };
+        let res = priority_mapping(&ev, &p);
+        res.schedule.validate(6).unwrap();
+        assert_eq!(ev.kv_excess(&res.schedule, &kv), 0, "{:?}", res.schedule);
+    }
+
+    #[test]
+    fn tempered_warm_start_keeps_the_frozen_prefix() {
+        use crate::coordinator::pred_table::PredTable;
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x7E66);
+        let jobs: Vec<Job> = (0..12)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(1200),
+                output_len: 1 + rng.below(300),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 10_000.0) },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let p = SaParams { chains: 4, ..params(3, 4) };
+        let table = PredTable::build(&jobs, &pred, p.max_batch);
+        let warm = Schedule::fcfs(12, 3);
+        let f_warm = ev.eval(&warm);
+        let frozen = 2usize;
+        let frozen_pos: usize = warm.batches[..frozen].iter().sum();
+        let res = priority_mapping_warm(&ev, &table, &p, Some(&warm), frozen);
+        res.schedule.validate(3).unwrap();
+        assert!(res.eval.g >= f_warm.g, "{:?} < {f_warm:?}", res.eval);
+        assert_eq!(res.schedule.order[..frozen_pos], warm.order[..frozen_pos]);
+        assert_eq!(res.schedule.batches[..frozen], warm.batches[..frozen]);
     }
 }

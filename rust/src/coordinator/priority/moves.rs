@@ -47,6 +47,14 @@
 //! vetoed generator can never increase any batch's excess: a feasible
 //! schedule stays feasible for the whole search. With `kv == None` the
 //! `*_kv` variants draw the exact RNG stream of the plain/masked ones.
+//!
+//! **Per-chain move streams** (parallel tempering): the generators hold
+//! no state beyond the `&mut Rng` handed in, so each tempering chain
+//! drives its own derived RNG
+//! ([`crate::coordinator::priority::annealing::SaParams::chains`])
+//! through the same allocation-free move code with zero sharing — chain
+//! 0's stream is byte-identical to the untempered search's (invariant
+//! 11), and K chains never contend on anything but their own schedule.
 
 use crate::coordinator::kv;
 use crate::coordinator::objective::{Job, Schedule};

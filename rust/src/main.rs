@@ -47,6 +47,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "kv-phase", help: "reserve | phased (batch KV demand model under --kv)", default: Some("reserve") },
         OptSpec { name: "divergence", help: "off | lognormal:<σ> | quantile-trace:<σ> (actual-vs-predicted output lengths)", default: Some("off") },
         OptSpec { name: "kv-quantile", help: "output-length quantile KV reserves at (needs --kv and a --divergence σ; 0.5 = mean column)", default: Some("0.5") },
+        OptSpec { name: "chains", help: "parallel-tempering chains per instance (1 = the single-chain search, bit for bit)", default: Some("1") },
+        OptSpec { name: "exchange-period", help: "temperature levels between tempering best-exchanges", default: Some("4") },
     ]
 }
 
@@ -63,6 +65,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     cfg.max_batch = args.usize("max-batch")?;
     cfg.n_instances = args.usize("instances")?;
     cfg.seed = args.u64("seed")?;
+    cfg.sa.chains = args.usize("chains")?.max(1);
+    cfg.sa.exchange_period = args.usize("exchange-period")?.max(1);
     cfg.slos = cfg.slos.scaled(args.f64("slo-scale")?);
     let op = args.str("output-pred");
     cfg.output_pred = if op == "profiler" {
@@ -180,6 +184,23 @@ fn online_specs() -> Vec<OptSpec> {
             name: "replan-drift-ms",
             help: "warm-replan when |measured − predicted| prefix-end \
                    drift reaches this many ms (0 = off)",
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "chains",
+            help: "parallel-tempering chains per instance (1 = the \
+                   single-chain search, bit for bit)",
+            default: Some("1"),
+        },
+        OptSpec {
+            name: "exchange-period",
+            help: "temperature levels between tempering best-exchanges",
+            default: Some("4"),
+        },
+        OptSpec {
+            name: "adaptive-budget",
+            help: "size each replan's SA iteration budget to the next \
+                   predicted dispatch gap (0|1)",
             default: Some("0"),
         },
         OptSpec {
@@ -328,8 +349,16 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         compact_dispatched: args.str("compact") == "1",
         arrival_aware: args.str("arrival-aware") == "1",
         replan_drift_ms,
+        adaptive_budget: args.str("adaptive-budget") == "1",
     };
-    let sa = SaParams { max_batch, seed, kv, ..Default::default() };
+    let sa = SaParams {
+        max_batch,
+        seed,
+        kv,
+        chains: args.usize("chains")?.max(1),
+        exchange_period: args.usize("exchange-period")?.max(1),
+        ..Default::default()
+    };
 
     let mut t = Table::new(&[
         "replan",

@@ -219,6 +219,7 @@ fn no_leak_no_double_completion_under_divergence() {
                         arrival_aware: true,
                         replan_drift_ms: 150.0,
                         compact_dispatched: seed % 2 == 0,
+                        ..Default::default()
                     },
                 )
                 .unwrap_or_else(|e| panic!("{tag}: run failed: {e}"));

@@ -9,6 +9,7 @@
 //! Thousands of random move sequences run per test (see the case counts);
 //! replay a failure with `PROP_SEED=<n>` as printed by the harness.
 
+use slo_serve::coordinator::kv::{KvConfig, KvPhaseModel};
 use slo_serve::coordinator::objective::{
     Evaluator, IncrementalEval, Job, Schedule,
 };
@@ -210,6 +211,85 @@ fn incremental_eval_matches_full_on_random_timelines() {
                 inc.rollback();
                 if inc.eval() != ev.eval(inc.schedule()) {
                     return Err(format!("step {step}: rollback drifted"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn soa_incremental_matches_full_across_the_kv_grid() {
+    // Regression gate for the struct-of-arrays aggregate store: random
+    // timelines × {Reserve, Phased} × {Unlimited, Hard, Soft} — every
+    // per-column aggregate must keep the incremental Eval AND the KV
+    // excess bit-identical to the full reference after every move,
+    // commit, and rollback.
+    check("SoA incremental == full across the KV grid", 120, |rng| {
+        let n = 1 + rng.below(20);
+        let max_batch = 1 + rng.below(6);
+        let pred = random_predictor(rng);
+        let jobs = random_jobs(rng, n);
+        let t0 = rng.uniform(0.0, 500.0);
+        let arrivals: Vec<f64> =
+            (0..n).map(|_| rng.uniform(0.0, 5_000.0)).collect();
+        let pool = 1 + rng.below(4_000) as u64;
+        let base = match rng.below(3) {
+            0 => KvConfig::UNLIMITED,
+            1 => KvConfig::hard(pool),
+            _ => KvConfig::soft(pool, rng.uniform(1e-6, 1e-3)),
+        };
+        let kv = if rng.chance(0.5) {
+            base.with_phase(KvPhaseModel::Phased)
+        } else {
+            base
+        };
+        let ev = Evaluator::with_arrivals(&jobs, &pred, t0, &arrivals);
+        let mut table = PredTable::build_kv(&jobs, &pred, max_batch, &kv);
+        table.set_arrivals(&arrivals);
+        let mut inc = IncrementalEval::new_kv(
+            &jobs,
+            &table,
+            random_start(rng, n, max_batch),
+            kv,
+            t0,
+        );
+        let tag = format!("n={n} mb={max_batch} kv={kv:?}");
+        if inc.eval() != ev.eval(inc.schedule())
+            || inc.kv_excess() != ev.kv_excess(inc.schedule(), &kv)
+        {
+            return Err(format!("init mismatch ({tag})"));
+        }
+        for step in 0..50 {
+            let pre_eval = inc.eval();
+            let pre_excess = inc.kv_excess();
+            let pre_schedule = inc.schedule().clone();
+            let moved = match inc.try_random_move(max_batch, rng) {
+                None => continue,
+                Some(e) => e,
+            };
+            let full = ev.eval(inc.schedule());
+            if moved != full {
+                return Err(format!(
+                    "step {step} ({tag}): eval {moved:?} != full {full:?}"
+                ));
+            }
+            let full_excess = ev.kv_excess(inc.schedule(), &kv);
+            if inc.kv_excess() != full_excess {
+                return Err(format!(
+                    "step {step} ({tag}): excess {} != full {full_excess}",
+                    inc.kv_excess()
+                ));
+            }
+            if rng.chance(0.5) {
+                inc.commit();
+            } else {
+                inc.rollback();
+                if inc.schedule() != &pre_schedule
+                    || inc.eval() != pre_eval
+                    || inc.kv_excess() != pre_excess
+                {
+                    return Err(format!("step {step} ({tag}): rollback drifted"));
                 }
             }
         }
