@@ -1,0 +1,102 @@
+//! Async streaming front door walkthrough: a 2-shard [`FrontDoor`] over
+//! simulated engines, one streaming submission (token events printed as
+//! they arrive), a burst of plain submissions, and the aggregate serving
+//! stats.
+//!
+//! ```sh
+//! cargo run --example front_door
+//! ```
+
+use anyhow::Result;
+use slo_serve::config::profiles::by_name;
+use slo_serve::config::SloTargets;
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::engine::Engine;
+use slo_serve::server::{FrontDoor, FrontDoorConfig, StreamEvent};
+use slo_serve::workload::dataset::RequestFactory;
+
+fn main() -> Result<()> {
+    let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    let seed = 42u64;
+
+    let mut cfg = FrontDoorConfig::new(
+        profile.truth,
+        profile.max_total_tokens,
+    );
+    cfg.shards = 2;
+    cfg.queue_depth = 64;
+    cfg.stream_tokens = true;
+    cfg.sa.max_batch = 4;
+    cfg.sa.seed = seed;
+    let engines: Vec<Box<dyn Engine + Send>> = (0..2)
+        .map(|s| {
+            Box::new(SimEngine::new(profile.clone(), 4, seed ^ s))
+                as Box<dyn Engine + Send>
+        })
+        .collect();
+    let door = FrontDoor::start(cfg, engines)?;
+
+    let mut factory =
+        RequestFactory::new(seed, SloTargets::default().scaled(4.0));
+    let mut wave = factory.mixed_wave(32);
+
+    // One streaming client: watch its tokens arrive.
+    let streamed = wave.pop().unwrap();
+    let stream = door
+        .submit(0, streamed, true)
+        .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;
+    println!("streaming request id={} -> shard {}", stream.id, stream.shard);
+
+    // The rest submit fire-and-forget across 32 sessions.
+    let handles: Vec<_> = wave
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| door.submit(1 + i as u64, r, false).unwrap())
+        .collect();
+
+    let mut tokens = 0usize;
+    while let Some(ev) = stream.next_event() {
+        match ev {
+            StreamEvent::Admitted { shard, queue_ms, .. } => {
+                println!("  admitted on shard {shard} after {queue_ms:.2} ms in queue");
+            }
+            StreamEvent::Token { index, t_ms, .. } => {
+                tokens += 1;
+                if index < 3 {
+                    println!("  token {index} at engine t={t_ms:.1} ms");
+                }
+            }
+            StreamEvent::Done { completion, .. } => {
+                println!(
+                    "  done: {} tokens, e2e {:.1} ms, ttft {:.1} ms ({} total token events)",
+                    completion.generated,
+                    completion.e2e_ms,
+                    completion.ttft_ms,
+                    tokens
+                );
+                break;
+            }
+            StreamEvent::Failed { error, .. } => {
+                println!("  failed: {error}");
+                break;
+            }
+        }
+    }
+
+    for h in handles {
+        h.wait_done()?;
+    }
+    assert!(door.wait_drained(60_000));
+    door.shutdown();
+
+    let stats = door.stats_json();
+    println!(
+        "served {} / accepted {} | attainment {:.3} | handoffs {} | p99 admission {:.2} ms",
+        stats.get("served").as_usize().unwrap(),
+        stats.get("accepted").as_usize().unwrap(),
+        stats.get("attainment").as_f64().unwrap(),
+        stats.get("handoffs").as_usize().unwrap(),
+        stats.get("admission_ms").get("p99").as_f64().unwrap(),
+    );
+    Ok(())
+}

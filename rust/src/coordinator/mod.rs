@@ -81,7 +81,7 @@ pub fn predict_outputs(
 /// `predicted_lo` is the output length the scheduler planned the request
 /// at — paired with the engine's `generated` it makes actual-vs-predicted
 /// output-length divergence observable per request.
-fn to_completion(
+pub(crate) fn to_completion(
     req: &Request,
     item: &crate::engine::ItemResult,
     predicted_lo: usize,

@@ -179,6 +179,13 @@ pub struct OnlineStats {
     pub reconciled_jobs: usize,
     /// Σ |actual − predicted| output length over reconciled completions.
     pub lo_abs_divergence_sum: f64,
+    /// Arrivals whose admission was deferred at least once because the
+    /// controller was [`WaveController::saturated`] (each arrival counts
+    /// once, however many retries it took). Queue-driven callers — the
+    /// event loops here and the serving front door
+    /// ([`crate::server::front`]) — report it via
+    /// [`WaveController::note_deferrals`].
+    pub deferrals: usize,
 }
 
 impl OnlineStats {
@@ -490,6 +497,15 @@ impl<'a> WaveController<'a> {
     pub fn saturated(&self) -> bool {
         self.params.kv.binding()
             && self.undispatched_blocks() >= self.params.kv.pool_blocks.max(1)
+    }
+
+    /// Record `n` arrivals newly deferred by saturation
+    /// ([`OnlineStats::deferrals`]). The controller cannot see deferrals
+    /// itself — the admission queue lives with the caller — so the event
+    /// loops and the serving front door report them here, keeping the
+    /// counter next to the rest of the admission diagnostics.
+    pub fn note_deferrals(&mut self, n: usize) {
+        self.stats.deferrals += n;
     }
 
     /// Per-replan SA seed: the first replan uses the configured seed
@@ -1102,6 +1118,7 @@ pub fn run_online_opts(
         // with jobs deferred while the KV backlog was saturated.
         let now = engine.now_ms();
         let mut fresh: Vec<Job> = std::mem::take(&mut deferred);
+        let carried = fresh.len();
         while next < requests.len() && requests[next].arrival_ms <= now {
             fresh.push(Job::from_request(
                 next,
@@ -1114,6 +1131,9 @@ pub fn run_online_opts(
             if ctl.saturated() {
                 // Admission would overcommit the planned backlog: defer to
                 // the next replan (after dispatching frees the pool).
+                // Only first-time deferrals count — carried jobs already
+                // did.
+                ctl.note_deferrals(fresh.len() - carried);
                 deferred = fresh;
             } else if opts.arrival_aware {
                 let arrs: Vec<f64> = fresh

@@ -20,7 +20,9 @@ use anyhow::Result;
 use crate::config::profiles::HardwareProfile;
 use crate::coordinator::kv::{phased_peak_blocks, KvPhaseModel};
 use crate::engine::kv_cache::{BlockAllocator, KvCacheConfig};
-use crate::engine::{validate_batch, Engine, EngineRequest, ItemResult};
+use crate::engine::{
+    validate_batch, Engine, EngineRequest, ItemResult, StepEvent,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::normal_quantile;
 
@@ -176,6 +178,13 @@ pub struct SimEngine {
     /// High-water mark of KV-block occupancy (diagnostics: a KV-aware
     /// scheduler must keep this at or below the pool by construction).
     peak_used_blocks: usize,
+    /// Per-decode-step token tracing ([`Engine::enable_step_trace`]).
+    /// Off by default: recording consumes no RNG and touches no timing,
+    /// so the disabled engine is the pre-trace engine bit for bit.
+    record_steps: bool,
+    /// Step events recorded since the last [`Engine::take_step_events`]
+    /// (planned-batch paths only; `run_continuous` does not trace).
+    step_events: Vec<StepEvent>,
 }
 
 impl SimEngine {
@@ -199,7 +208,16 @@ impl SimEngine {
             batches_run: 0,
             decode_steps: 0,
             peak_used_blocks: 0,
+            record_steps: false,
+            step_events: Vec::new(),
         }
+    }
+
+    /// This engine with per-decode-step token tracing enabled from the
+    /// start (builder form of [`Engine::enable_step_trace`]).
+    pub fn with_step_trace(mut self) -> Self {
+        self.record_steps = true;
+        self
     }
 
     /// This engine with an output-length divergence model (see
@@ -269,6 +287,7 @@ impl SimEngine {
         self.decode_steps = 0;
         self.peak_used_blocks = 0;
         self.kv_truncations = 0;
+        self.step_events.clear();
     }
 
     /// Continuous-batching FCFS execution (the vLLM baseline).
@@ -492,6 +511,12 @@ impl SimEngine {
         self.clock_ms += t_prefill;
         self.batches_run += 1;
         let first_token_ms = self.clock_ms;
+        if self.record_steps {
+            self.step_events.push(StepEvent {
+                t_ms: first_token_ms,
+                emitted: batch.iter().map(|r| r.id).collect(),
+            });
+        }
 
         let mut remaining: Vec<usize> =
             actual.iter().map(|&a| a.max(1) - 1).collect();
@@ -527,6 +552,7 @@ impl SimEngine {
             }
             self.peak_used_blocks =
                 self.peak_used_blocks.max(self.kv.used_blocks());
+            let mut emitted: Vec<u64> = Vec::new();
             for i in 0..b {
                 if remaining[i] == 0 {
                     continue;
@@ -544,10 +570,17 @@ impl SimEngine {
                 accumulated[i] += 1;
                 generated[i] += 1;
                 finish[i] = self.clock_ms;
+                if self.record_steps {
+                    emitted.push(batch[i].id);
+                }
                 if remaining[i] == 0 {
                     live -= 1;
                     self.kv.free_seq(batch[i].id)?;
                 }
+            }
+            if self.record_steps && !emitted.is_empty() {
+                self.step_events
+                    .push(StepEvent { t_ms: self.clock_ms, emitted });
             }
         }
         Ok(batch
@@ -625,6 +658,14 @@ impl Engine for SimEngine {
         self.profile.max_total_tokens
     }
 
+    fn enable_step_trace(&mut self) {
+        self.record_steps = true;
+    }
+
+    fn take_step_events(&mut self) -> Vec<StepEvent> {
+        std::mem::take(&mut self.step_events)
+    }
+
     fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
         validate_batch(self, batch)?;
         if !self.divergence.is_off() {
@@ -680,6 +721,13 @@ impl Engine for SimEngine {
         self.clock_ms += t_prefill;
         self.batches_run += 1;
         let first_token_ms = self.clock_ms;
+        if self.record_steps {
+            // prefill emits every member's first token at once
+            self.step_events.push(StepEvent {
+                t_ms: first_token_ms,
+                emitted: batch.iter().map(|r| r.id).collect(),
+            });
+        }
 
         // decode: every member advances one token per iteration until all
         // reach their budget; the batch-size term stays b for stragglers
@@ -723,11 +771,15 @@ impl Engine for SimEngine {
                 self.peak_used_blocks =
                     self.peak_used_blocks.max(self.kv.used_blocks());
             }
+            let mut emitted: Vec<u64> = Vec::new();
             for i in 0..b {
                 if remaining[i] > 0 {
                     remaining[i] -= 1;
                     accumulated[i] += 1;
                     finish[i] = self.clock_ms;
+                    if self.record_steps {
+                        emitted.push(batch[i].id);
+                    }
                     if remaining[i] == 0 {
                         live -= 1;
                         if phased {
@@ -735,6 +787,10 @@ impl Engine for SimEngine {
                         }
                     }
                 }
+            }
+            if self.record_steps && !emitted.is_empty() {
+                self.step_events
+                    .push(StepEvent { t_ms: self.clock_ms, emitted });
             }
         }
         let results = batch

@@ -1,12 +1,13 @@
 //! slo-serve CLI: leader entrypoint for the SLO-aware serving system.
 //!
 //! Subcommands:
-//!   run       — run a scheduling scenario on the simulated fleet
-//!   online    — online wave admission over a timed arrival trace
-//!   serve     — start the TCP JSON-lines serving front-end
-//!   profile   — profiling rounds + least-squares fit (paper Table 2)
-//!   profiles  — list built-in hardware profiles
-//!   help      — this text
+//!   run        — run a scheduling scenario on the simulated fleet
+//!   online     — online wave admission over a timed arrival trace
+//!   serve      — async streaming front door (sharded controllers + TCP reactor)
+//!   bench-http — in-process open-loop serving load test (JSON report)
+//!   profile    — profiling rounds + least-squares fit (paper Table 2)
+//!   profiles   — list built-in hardware profiles
+//!   help       — this text
 
 use anyhow::{anyhow, Result};
 
@@ -21,7 +22,6 @@ use slo_serve::coordinator::predict_outputs;
 use slo_serve::coordinator::predictor::LatencyPredictor;
 use slo_serve::coordinator::priority::annealing::SaParams;
 use slo_serve::coordinator::request::TaskType;
-use slo_serve::engine::instance::InstanceHandle;
 use slo_serve::coordinator::predictor::quantile_multiplier;
 use slo_serve::engine::sim::{DivergenceModel, SimEngine};
 use slo_serve::engine::Engine;
@@ -456,87 +456,168 @@ fn print_fit_table(p: &LatencyPredictor) {
     print!("{}", t.render());
 }
 
-fn cmd_serve(argv: &[String]) -> Result<()> {
-    let specs = vec![
+fn serve_specs() -> Vec<OptSpec> {
+    vec![
         OptSpec { name: "engine", help: "real|sim", default: Some("sim") },
         OptSpec { name: "artifacts", help: "artifacts dir (real engine)", default: Some("artifacts") },
         OptSpec { name: "profile", help: "profile (sim engine)", default: Some("qwen7b-v100x2-vllm") },
-        OptSpec { name: "instances", help: "instance count", default: Some("1") },
+        OptSpec { name: "shards", help: "controller shards (one engine each)", default: Some("1") },
+        OptSpec { name: "queue-depth", help: "bounded queue depth per shard", default: Some("1024") },
         OptSpec { name: "max-batch", help: "batch cap", default: Some("4") },
-        OptSpec { name: "window-ms", help: "dispatch window", default: Some("20") },
-        OptSpec { name: "requests", help: "exit after N served (0 = forever)", default: Some("0") },
-    ];
-    let args = Args::parse(argv, &specs)?;
-    let n_inst = args.usize("instances")?.max(1);
+        OptSpec { name: "iters-per-temp", help: "SA iteration budget per temperature", default: Some("20") },
+        OptSpec { name: "handoff", help: "cross-shard handoff when the home queue is full (0|1)", default: Some("1") },
+        OptSpec { name: "stream", help: "record step traces for per-token streaming (0|1)", default: Some("1") },
+        OptSpec { name: "seed", help: "base SA seed (shard 0 runs it verbatim)", default: Some("42") },
+        OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:0") },
+        OptSpec { name: "requests", help: "exit after N served (0 = until shutdown op)", default: Some("0") },
+    ]
+}
+
+/// Start the async streaming front end: sharded [`server::FrontDoor`]
+/// admission behind the single-threaded TCP reactor.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &serve_specs())?;
+    let shards = args.usize("shards")?.max(1);
     let max_batch = args.usize("max-batch")?.max(1);
-    let mut instances = Vec::new();
-    let (predictor, max_total) = if args.str("engine") == "real" {
-        spawn_real_instances(&args, n_inst, max_batch, &mut instances)?
+    let (engines, predictor, max_total) = if args.str("engine") == "real" {
+        build_real_engines(&args, shards, max_batch)?
     } else {
         let profile = profiles::by_name(&args.str("profile"))
             .ok_or_else(|| anyhow!("unknown profile"))?;
         let max_total = profile.max_total_tokens;
-        for i in 0..n_inst {
-            let e = SimEngine::new(profile.clone(), max_batch, i as u64);
-            instances.push(InstanceHandle::spawn(i, Box::new(e)));
-        }
-        (bench::fit_predictor_from_profile(&profile, 0), max_total)
+        let seed = args.u64("seed")?;
+        let engines: Vec<Box<dyn Engine + Send>> = (0..shards)
+            .map(|s| {
+                Box::new(SimEngine::new(
+                    profile.clone(),
+                    max_batch,
+                    seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
+                )) as Box<dyn Engine + Send>
+            })
+            .collect();
+        (
+            engines,
+            bench::fit_predictor_from_profile(&profile, seed),
+            max_total,
+        )
     };
-    let cfg = server::ServerConfig {
-        policy: slo_serve::coordinator::policies::Policy::SloAware(
-            SaParams::with_max_batch(max_batch),
-        ),
-        predictor,
-        window_ms: args.u64("window-ms")?,
-        max_batch,
-        max_total_tokens: max_total,
-    };
-    let handle = server::start(cfg, instances)?;
-    println!("slo-serve listening on {}", handle.addr);
+    let mut cfg = server::FrontDoorConfig::new(predictor, max_total);
+    cfg.shards = shards;
+    cfg.queue_depth = args.usize("queue-depth")?.max(1);
+    cfg.handoff = args.str("handoff") != "0";
+    cfg.stream_tokens = args.str("stream") != "0";
+    cfg.sa.max_batch = max_batch;
+    cfg.sa.iters_per_temp = args.usize("iters-per-temp")?.max(1);
+    cfg.sa.seed = args.u64("seed")?;
+    let door = server::FrontDoor::start(cfg, engines)?;
+    let mut tcp = server::serve_tcp(door.clone(), &args.str("addr"))?;
+    println!("slo-serve listening on {} ({shards} shard(s))", tcp.addr);
     let stop_after = args.usize("requests")?;
     loop {
         std::thread::sleep(std::time::Duration::from_millis(200));
-        if stop_after > 0 && handle.served() >= stop_after {
+        if tcp.stopped() {
+            break; // a client sent {"op":"shutdown"}
+        }
+        if stop_after > 0 && door.served() >= stop_after as u64 {
             break;
         }
     }
-    handle.shutdown();
+    tcp.stop();
+    door.shutdown();
     Ok(())
 }
 
-/// Spawn PJRT-backed real-engine instances (requires the `real-engine`
-/// feature, which in turn needs the external `xla` crate).
+/// Build PJRT-backed real engines (requires the `real-engine` feature,
+/// which in turn needs the external `xla` crate).
 #[cfg(feature = "real-engine")]
-fn spawn_real_instances(
+fn build_real_engines(
     args: &Args,
-    n_inst: usize,
+    shards: usize,
     max_batch: usize,
-    instances: &mut Vec<InstanceHandle>,
-) -> Result<(LatencyPredictor, usize)> {
+) -> Result<(Vec<Box<dyn Engine + Send>>, LatencyPredictor, usize)> {
     use slo_serve::engine::real::RealEngine;
-    use slo_serve::engine::Engine;
+    let mut engines: Vec<Box<dyn Engine + Send>> = Vec::new();
     let mut max_total = 0;
-    for i in 0..n_inst {
+    for _ in 0..shards {
         let mut e = RealEngine::load(&args.str("artifacts"))?;
         e.warmup(max_batch.min(e.max_batch()))?;
         max_total = e.max_total_tokens();
-        instances.push(InstanceHandle::spawn(i, Box::new(e)));
+        engines.push(Box::new(e));
     }
     let p = profiles::by_name("tinylm-cpu").unwrap();
-    Ok((p.truth, max_total))
+    Ok((engines, p.truth, max_total))
 }
 
 #[cfg(not(feature = "real-engine"))]
-fn spawn_real_instances(
+fn build_real_engines(
     _args: &Args,
-    _n_inst: usize,
+    _shards: usize,
     _max_batch: usize,
-    _instances: &mut Vec<InstanceHandle>,
-) -> Result<(LatencyPredictor, usize)> {
+) -> Result<(Vec<Box<dyn Engine + Send>>, LatencyPredictor, usize)> {
     Err(anyhow!(
         "this binary was built without the 'real-engine' feature \
          (the PJRT runtime needs the external xla crate); use --engine sim"
     ))
+}
+
+fn bench_http_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "clients", help: "concurrent simulated clients (burst size + session modulus)", default: Some("200") },
+        OptSpec { name: "shards", help: "controller shards", default: Some("2") },
+        OptSpec { name: "queue-depth", help: "bounded queue depth per shard", default: Some("4096") },
+        OptSpec { name: "max-batch", help: "engine batch cap", default: Some("8") },
+        OptSpec { name: "profile", help: "hardware profile for the simulated engines", default: Some("qwen7b-v100x2-vllm") },
+        OptSpec { name: "seed", help: "rng seed (trace + search)", default: Some("42") },
+        OptSpec { name: "duration-s", help: "Poisson tail duration (s); 0 = burst only", default: Some("0") },
+        OptSpec { name: "rps", help: "Poisson tail rate (req/s); 0 = burst only", default: Some("0") },
+        OptSpec { name: "slo-scale", help: "scale all SLO bounds", default: Some("10") },
+        OptSpec { name: "iters-per-temp", help: "SA iteration budget per temperature", default: Some("10") },
+        OptSpec { name: "handoff", help: "cross-shard handoff (0|1)", default: Some("1") },
+        OptSpec { name: "stream", help: "stream every 8th request (0|1)", default: Some("1") },
+        OptSpec { name: "out", help: "write the JSON report here too", default: Some("") },
+    ]
+}
+
+/// In-process open-loop serving load test over the front door; prints
+/// the JSON report (CI's serving smoke gate reads it).
+fn cmd_bench_http(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &bench_http_specs())?;
+    let duration_s = args.f64("duration-s")?;
+    let rps = args.f64("rps")?;
+    if !duration_s.is_finite() || duration_s < 0.0 {
+        return Err(anyhow!("--duration-s must be finite and ≥ 0"));
+    }
+    if !rps.is_finite() || rps < 0.0 {
+        return Err(anyhow!("--rps must be finite and ≥ 0"));
+    }
+    let cfg = server::bench_http::BenchHttpConfig {
+        clients: args.usize("clients")?.max(1),
+        shards: args.usize("shards")?.max(1),
+        queue_depth: args.usize("queue-depth")?.max(1),
+        max_batch: args.usize("max-batch")?.max(1),
+        profile: args.str("profile"),
+        seed: args.u64("seed")?,
+        duration_s,
+        rps,
+        slo_scale: args.f64("slo-scale")?,
+        iters_per_temp: args.usize("iters-per-temp")?.max(1),
+        handoff: args.str("handoff") != "0",
+        stream: args.str("stream") != "0",
+    };
+    let report = server::bench_http::run(&cfg)?;
+    println!("{}", report.to_string_pretty());
+    let out = args.str("out");
+    if !out.is_empty() {
+        std::fs::write(&out, report.to_string_compact())?;
+        eprintln!("report written to {out}");
+    }
+    if report.get("drained").as_bool() != Some(true) {
+        return Err(anyhow!(
+            "front door failed to drain within the timeout — wedged \
+             shard or runaway backlog"
+        ));
+    }
+    Ok(())
 }
 
 fn cmd_profiles() {
@@ -557,6 +638,7 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&argv[1..]),
         Some("online") => cmd_online(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("bench-http") => cmd_bench_http(&argv[1..]),
         Some("profile") => cmd_profile(&argv[1..]),
         Some("profiles") => {
             cmd_profiles();
@@ -565,7 +647,7 @@ fn main() -> Result<()> {
         Some("help") | None => {
             println!(
                 "slo-serve — SLO-aware LLM inference scheduling (CS.DC 2025 reproduction)\n\n\
-                 subcommands: run | online | serve | profile | profiles | help\n"
+                 subcommands: run | online | serve | bench-http | profile | profiles | help\n"
             );
             print!("{}", render_help("slo-serve run", "run a scheduling scenario", &run_specs()));
             print!(
@@ -574,6 +656,22 @@ fn main() -> Result<()> {
                     "slo-serve online",
                     "online admission over an arrival trace",
                     &online_specs(),
+                )
+            );
+            print!(
+                "{}",
+                render_help(
+                    "slo-serve serve",
+                    "async streaming front door (TCP JSON-lines)",
+                    &serve_specs(),
+                )
+            );
+            print!(
+                "{}",
+                render_help(
+                    "slo-serve bench-http",
+                    "open-loop serving load test",
+                    &bench_http_specs(),
                 )
             );
             Ok(())

@@ -1,0 +1,208 @@
+//! Serving-side latency histograms: fixed-memory geometric buckets.
+//!
+//! The offline bench path keeps raw samples ([`crate::util::stats`]); a
+//! serving front door cannot — admission latencies arrive per request at
+//! load-test rates and the report wants p50/p99 over the whole run. A
+//! [`Histogram`] records into ~120 geometrically spaced buckets (1 µs to
+//! ~10⁵ s at 25% relative width), so percentiles cost O(buckets) with a
+//! bounded ~1 KiB footprint per histogram and O(1) recording. Quantile
+//! error is bounded by the bucket width (≤ 25% relative), which is ample
+//! for latency reporting; exact `count`/`mean`/`max` are tracked on the
+//! side.
+
+use crate::util::json::Json;
+
+/// Smallest bucket upper bound (ms): 1 µs.
+const MIN_BOUND_MS: f64 = 1e-3;
+/// Geometric growth factor between bucket bounds.
+const GROWTH: f64 = 1.25;
+/// Bucket count: covers `MIN_BOUND_MS · GROWTH^(N-2)` ≈ 1.6e8 ms (~44 h)
+/// before the final catch-all bucket.
+const N_BUCKETS: usize = 120;
+
+/// Fixed-memory latency histogram with geometric buckets (module docs).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; N_BUCKETS], count: 0, sum: 0.0, max: 0.0 }
+    }
+
+    /// Bucket index for a value: bucket `i` covers
+    /// `(MIN_BOUND·G^(i-1), MIN_BOUND·G^i]`, bucket 0 everything at or
+    /// below `MIN_BOUND`, the last bucket everything above the range.
+    fn bucket(v: f64) -> usize {
+        if v.is_nan() || v <= MIN_BOUND_MS {
+            // NaN and non-positive values land in the smallest bucket
+            // rather than poisoning percentiles.
+            return 0;
+        }
+        let i = ((v / MIN_BOUND_MS).ln() / GROWTH.ln()).ceil();
+        (i as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Upper bound (ms) of bucket `i` — the value percentiles report.
+    fn bound(i: usize) -> f64 {
+        MIN_BOUND_MS * GROWTH.powi(i as i32)
+    }
+
+    /// Record one sample (ms).
+    pub fn record(&mut self, v_ms: f64) {
+        self.counts[Self::bucket(v_ms)] += 1;
+        self.count += 1;
+        if v_ms.is_finite() {
+            self.sum += v_ms;
+            if v_ms > self.max {
+                self.max = v_ms;
+            }
+        }
+    }
+
+    /// Merge another histogram into this one (shard aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Largest recorded finite sample (ms).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile `q ∈ [0, 1]` (ms): the upper bound of the bucket holding
+    /// the ⌈q·count⌉-th sample, clamped to the exact max so the tail never
+    /// over-reports past an observed value. 0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bound(i).min(self.max.max(MIN_BOUND_MS));
+            }
+        }
+        self.max
+    }
+
+    /// Standard report object: count/mean/p50/p90/p99/max (ms).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.percentile(0.50))),
+            ("p90", Json::num(self.percentile(0.90))),
+            ("p99", Json::num(self.percentile(0.99))),
+            ("max", Json::num(self.max())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_bucket_accurate() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64); // 1..1000 ms uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile(0.5);
+        let p99 = h.percentile(0.99);
+        // 25% relative bucket width bounds the quantile error
+        assert!((400.0..=650.0).contains(&p50), "p50 {p50}");
+        assert!((900.0..=1250.0).contains(&p99), "p99 {p99}");
+        assert!(h.percentile(1.0) <= 1000.0 + 1e-9);
+        assert!((h.mean() - 500.5).abs() < 1e-6);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn extremes_clamp_into_range() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(1e12); // beyond the last bound: catch-all bucket
+        assert_eq!(h.count(), 4);
+        assert!(h.percentile(0.25) <= MIN_BOUND_MS + 1e-12);
+        assert_eq!(h.max(), 1e12);
+        // tail percentile is clamped to the observed max
+        assert!(h.percentile(1.0) <= 1e12 + 1e-3);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for i in 0..200 {
+            let v = 0.5 + 7.3 * i as f64;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.max(), c.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(q), c.percentile(q));
+        }
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut h = Histogram::new();
+        h.record(10.0);
+        let v = h.to_json();
+        assert_eq!(v.get("count").as_usize(), Some(1));
+        assert!(v.get("p99").as_f64().unwrap() > 0.0);
+    }
+}

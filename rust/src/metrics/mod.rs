@@ -1,5 +1,12 @@
 //! Serving metrics: SLO attainment, the paper's objective `G`, latency
 //! summaries, and table rendering for the bench harness.
+//!
+//! [`histogram`] adds the serving-side counterpart: fixed-memory latency
+//! histograms for the front door's admission/e2e percentiles.
+
+pub mod histogram;
+
+pub use histogram::Histogram;
 
 use crate::coordinator::request::{Completion, TaskType};
 use crate::util::stats::Summary;

@@ -1,0 +1,216 @@
+//! `slo-serve bench-http`: in-process open-loop load generator for the
+//! serving front door.
+//!
+//! Drives K concurrent simulated clients against a live [`FrontDoor`]
+//! (simulated engines, real threads + queues): an initial burst of
+//! `clients` concurrent arrivals plus an optional Poisson tail paced on
+//! the wall clock, with per-class SLO traces from the paper's chat+code
+//! mix. Open loop: arrivals never wait for completions, so saturation
+//! shows up as queue growth and 429 rejections, not as a slowed
+//! generator. The report is a flat JSON object — admission/e2e latency
+//! histograms (p50/p99), per-class attainment, accepted/rejected/
+//! deferred counts, handoffs, tokens/sec — written to stdout and
+//! optionally a file; CI gates on it.
+
+use anyhow::{anyhow, Result};
+
+use crate::bench;
+use crate::config::profiles::by_name;
+use crate::config::SloTargets;
+use crate::engine::sim::SimEngine;
+use crate::engine::Engine;
+use crate::server::front::{FrontDoor, FrontDoorConfig, SubmitError};
+use crate::util;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::dataset::RequestFactory;
+use crate::workload::trace::{finalize_trace, ArrivalProcess, ClassMix};
+
+/// Wall-clock drain allowance after the last submission (ms).
+const DRAIN_TIMEOUT_MS: u64 = 120_000;
+
+/// bench-http knobs (CLI flags map 1:1).
+pub struct BenchHttpConfig {
+    /// Concurrent simulated clients: the initial burst size and the
+    /// session-id modulus.
+    pub clients: usize,
+    pub shards: usize,
+    pub queue_depth: usize,
+    pub max_batch: usize,
+    /// Hardware profile name for the simulated engines.
+    pub profile: String,
+    pub seed: u64,
+    /// Poisson tail duration (s); 0 disables the tail.
+    pub duration_s: f64,
+    /// Poisson tail rate (req/s across both classes); 0 disables.
+    pub rps: f64,
+    /// SLO scale factor (>1 loosens; the paper's knob).
+    pub slo_scale: f64,
+    /// SA iteration budget per temperature for the shard controllers.
+    pub iters_per_temp: usize,
+    pub handoff: bool,
+    /// Submit a fraction of requests in streaming mode (exercises the
+    /// step-trace relay under load).
+    pub stream: bool,
+}
+
+impl Default for BenchHttpConfig {
+    fn default() -> BenchHttpConfig {
+        BenchHttpConfig {
+            clients: 200,
+            shards: 2,
+            queue_depth: 4096,
+            max_batch: 8,
+            profile: "qwen7b-v100x2-vllm".into(),
+            seed: 42,
+            duration_s: 0.0,
+            rps: 0.0,
+            slo_scale: 10.0,
+            iters_per_temp: 10,
+            handoff: true,
+            stream: false,
+        }
+    }
+}
+
+/// Run the load test; returns the flat JSON report.
+pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
+    anyhow::ensure!(cfg.clients > 0, "need at least one client");
+    let profile = by_name(&cfg.profile)
+        .ok_or_else(|| anyhow!("unknown profile '{}'", cfg.profile))?;
+    let predictor = bench::fit_predictor_from_profile(&profile, cfg.seed);
+    let shards = cfg.shards.max(1);
+    let engines: Vec<Box<dyn Engine + Send>> = (0..shards)
+        .map(|s| {
+            Box::new(SimEngine::new(
+                profile.clone(),
+                cfg.max_batch,
+                cfg.seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
+            )) as Box<dyn Engine + Send>
+        })
+        .collect();
+    let max_total = engines[0].max_total_tokens();
+
+    // ---- trace: concurrent burst + optional Poisson tail, chat+code
+    // mix with per-class SLOs scaled by the configured factor.
+    let mut factory = RequestFactory::new(
+        cfg.seed ^ 0xBE9C_4071,
+        SloTargets::default().scaled(cfg.slo_scale),
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0x70AD_5EED);
+    let burst = ClassMix::chat_code(
+        cfg.clients,
+        ArrivalProcess::Concurrent,
+        ArrivalProcess::Concurrent,
+    );
+    let mut trace = burst.generate(&mut factory, &mut rng);
+    let n_tail = (cfg.rps * cfg.duration_s) as usize;
+    if n_tail > 0 {
+        let half = (cfg.rps / 2.0).max(f64::MIN_POSITIVE);
+        let tail = ClassMix::chat_code(
+            n_tail,
+            ArrivalProcess::Poisson { rps: half },
+            ArrivalProcess::Poisson { rps: half },
+        );
+        trace.extend(tail.generate(&mut factory, &mut rng.fork(1)));
+        finalize_trace(&mut trace);
+    }
+
+    // ---- front door
+    let mut door_cfg = FrontDoorConfig::new(predictor, max_total);
+    door_cfg.shards = shards;
+    door_cfg.queue_depth = cfg.queue_depth.max(1);
+    door_cfg.handoff = cfg.handoff;
+    door_cfg.stream_tokens = cfg.stream;
+    door_cfg.sa.max_batch = cfg.max_batch;
+    door_cfg.sa.iters_per_temp = cfg.iters_per_temp.max(1);
+    door_cfg.sa.seed = cfg.seed;
+    let door = FrontDoor::start(door_cfg, engines)?;
+
+    // ---- open-loop submission paced on the wall clock
+    let submitted = trace.len();
+    let mut saturated_rejects = 0u64;
+    let mut invalid_rejects = 0u64;
+    let t_start = util::now_ms();
+    for (i, mut r) in trace.into_iter().enumerate() {
+        let target = t_start + r.arrival_ms;
+        loop {
+            let now = util::now_ms();
+            if now >= target {
+                break;
+            }
+            let gap = (target - now).min(5.0).max(0.1);
+            std::thread::sleep(std::time::Duration::from_micros(
+                (gap * 1000.0) as u64,
+            ));
+        }
+        let session = (i % cfg.clients) as u64;
+        // streaming mode: every 8th request subscribes to token events
+        let stream = cfg.stream && i % 8 == 0;
+        r.arrival_ms = 0.0; // the door stamps its own arrival clock
+        match door.submit(session, r, stream) {
+            Ok(handle) => drop(handle), // shard metrics are the record
+            Err(SubmitError::Saturated { .. }) => saturated_rejects += 1,
+            Err(SubmitError::Invalid(_)) => invalid_rejects += 1,
+            Err(SubmitError::ShuttingDown) => {
+                anyhow::bail!("front door shut down mid-bench")
+            }
+        }
+    }
+    let submit_wall_ms = util::now_ms() - t_start;
+
+    // ---- drain and report
+    let drained = door.wait_drained(DRAIN_TIMEOUT_MS);
+    if drained {
+        door.shutdown(); // join workers: final metrics snapshots land
+    }
+    let wall_s = (util::now_ms() - t_start) / 1000.0;
+    let stats = door.stats_json();
+    let tokens_out = stats.get("tokens_out").as_f64().unwrap_or(0.0);
+    let mut report = stats;
+    if let Json::Obj(map) = &mut report {
+        map.insert("bench".into(), Json::str("bench-http"));
+        map.insert("profile".into(), Json::str(cfg.profile.clone()));
+        map.insert("clients".into(), Json::num(cfg.clients as f64));
+        map.insert("n_shards".into(), Json::num(shards as f64));
+        map.insert(
+            "queue_depth".into(),
+            Json::num(cfg.queue_depth as f64),
+        );
+        map.insert("max_batch".into(), Json::num(cfg.max_batch as f64));
+        map.insert("seed".into(), Json::num(cfg.seed as f64));
+        map.insert("duration_s".into(), Json::num(cfg.duration_s));
+        map.insert("rps".into(), Json::num(cfg.rps));
+        map.insert("slo_scale".into(), Json::num(cfg.slo_scale));
+        map.insert(
+            "iters_per_temp".into(),
+            Json::num(cfg.iters_per_temp as f64),
+        );
+        map.insert("handoff_enabled".into(), Json::Bool(cfg.handoff));
+        map.insert("submitted".into(), Json::num(submitted as f64));
+        map.insert(
+            "rejected_saturated".into(),
+            Json::num(saturated_rejects as f64),
+        );
+        map.insert(
+            "rejected_invalid".into(),
+            Json::num(invalid_rejects as f64),
+        );
+        map.insert(
+            "submit_wall_ms".into(),
+            Json::num(submit_wall_ms),
+        );
+        map.insert("wall_s".into(), Json::num(wall_s));
+        map.insert(
+            "tokens_per_s".into(),
+            Json::num(if wall_s > 0.0 { tokens_out / wall_s } else { 0.0 }),
+        );
+        map.insert("drained".into(), Json::Bool(drained));
+    }
+    if !drained {
+        // A wedged shard would make shutdown() join forever; leak the
+        // door instead and let the caller fail the run on `drained`.
+        std::mem::forget(door);
+    }
+    Ok(report)
+}

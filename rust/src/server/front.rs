@@ -1,0 +1,795 @@
+//! Sharded admission front door: bounded queues in front of per-shard
+//! [`WaveController`] workers.
+//!
+//! The [`FrontDoor`] is the serving system's admission boundary. Each
+//! shard owns one engine and one controller, fed by a bounded
+//! [`std::sync::mpsc::sync_channel`]; submission is non-blocking:
+//!
+//! * the session's home shard (consistent hash, [`session_shard`]) is
+//!   tried first;
+//! * if its queue is full and handoff is enabled, the remaining shards
+//!   are tried in ring order ([`DoorStats::handoffs`] counts the moves);
+//! * if every queue is full the request is rejected with
+//!   [`SubmitError::Saturated`] and a `retry_after_ms` hint sized from
+//!   the home shard's measured drain rate — the 429 path, explicit
+//!   backpressure instead of unbounded buffering.
+//!
+//! Accepted requests return a [`StreamHandle`] delivering
+//! [`StreamEvent`]s: `Admitted` once the shard's controller plans the
+//! request, `Token` per decode step (when the engine records step traces,
+//! [`crate::engine::Engine::enable_step_trace`]), and a final `Done` with
+//! the measured [`Completion`] (or `Failed`).
+//!
+//! **Escape hatch (invariant 12)**: [`serve_trace`] is the synchronous
+//! zero-queue replay of the same sharded topology — it partitions a
+//! recorded trace by [`session_shard`] over request ids and runs each
+//! shard through [`run_online_opts`] with the shard's seed
+//! ([`shard_seed`], which is the base seed verbatim for shard 0). With
+//! one shard it is byte-for-byte `run_online_opts` on the full trace:
+//! no queue, no threads, no divergence.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::online::{
+    run_online_opts, OnlineOpts, OnlineOutcome, ReplanStrategy,
+};
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::priority::annealing::SaParams;
+use crate::coordinator::request::{Completion, Request};
+use crate::coordinator::scheduler::instance_seed;
+use crate::engine::Engine;
+use crate::server::shard::{
+    shard_loop, ShardCtx, ShardShared, SubmitMsg,
+};
+use crate::util;
+use crate::util::json::Json;
+
+/// Fallback per-item drain estimate (ms) used for the `retry_after_ms`
+/// hint before a shard has measured anything.
+const DEFAULT_DRAIN_MS: f64 = 5.0;
+
+/// Events a client observes for one submitted request, in order:
+/// `Admitted`, zero or more `Token`s, then exactly one `Done` or `Failed`.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// The shard's controller admitted (planned) the request.
+    Admitted {
+        id: u64,
+        /// Shard that accepted it (after any handoff).
+        shard: usize,
+        /// Queue wait: submit to admission (ms).
+        queue_ms: f64,
+    },
+    /// One token emitted at a decode step (step-traced engines only).
+    Token {
+        id: u64,
+        /// 0-based token index within the reply.
+        index: usize,
+        /// Engine clock at emission (ms).
+        t_ms: f64,
+    },
+    /// The request finished; the measured completion record.
+    Done { id: u64, completion: Completion },
+    /// The request failed inside the shard (admission or engine error).
+    Failed { id: u64, error: String },
+}
+
+/// Why a submission was not accepted.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    /// Every eligible shard queue is full — retry after the hint.
+    #[error("saturated: retry after {retry_after_ms} ms")]
+    Saturated { retry_after_ms: u64 },
+    /// The request can never be served (empty prompt, over token cap).
+    #[error("invalid request: {0}")]
+    Invalid(String),
+    /// The front door is shutting down.
+    #[error("shutting down")]
+    ShuttingDown,
+}
+
+/// Non-blocking poll result of a [`StreamHandle`].
+#[derive(Debug)]
+pub enum TryNext {
+    /// An event is ready.
+    Event(StreamEvent),
+    /// No event yet; the request is still in flight.
+    Empty,
+    /// The stream ended (terminal event already delivered, or the shard
+    /// dropped the sender without one — a server-side failure).
+    Closed,
+}
+
+/// Client-side end of one accepted request's event stream.
+pub struct StreamHandle {
+    /// Request id assigned by the front door.
+    pub id: u64,
+    /// Shard the request landed on (after any handoff).
+    pub shard: usize,
+    rx: Receiver<StreamEvent>,
+}
+
+impl StreamHandle {
+    /// Block for the next event; `None` once the stream is closed.
+    pub fn next_event(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll (the TCP reactor's accessor).
+    pub fn try_next(&self) -> TryNext {
+        match self.rx.try_recv() {
+            Ok(e) => TryNext::Event(e),
+            Err(std::sync::mpsc::TryRecvError::Empty) => TryNext::Empty,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                TryNext::Closed
+            }
+        }
+    }
+
+    /// Block until the terminal event and return the completion.
+    pub fn wait_done(self) -> Result<Completion> {
+        loop {
+            match self.rx.recv() {
+                Ok(StreamEvent::Done { completion, .. }) => {
+                    return Ok(completion)
+                }
+                Ok(StreamEvent::Failed { error, .. }) => {
+                    anyhow::bail!("request {} failed: {error}", self.id)
+                }
+                Ok(_) => {}
+                Err(_) => anyhow::bail!(
+                    "request {} stream closed without completion",
+                    self.id
+                ),
+            }
+        }
+    }
+}
+
+/// Front-door configuration. [`FrontDoorConfig::new`] picks serving
+/// defaults (1 shard, queue depth 1024, compacted arrival-aware
+/// controllers with a light SA budget); override fields as needed.
+pub struct FrontDoorConfig {
+    /// Controller workers (each owns one engine).
+    pub shards: usize,
+    /// Bounded queue depth per shard (≥ 1 for the live door; the
+    /// zero-queue configuration is the synchronous [`serve_trace`]).
+    pub queue_depth: usize,
+    /// SA parameters for every shard's controller; `sa.seed` is the base
+    /// seed shards derive theirs from ([`shard_seed`]), `sa.max_batch`
+    /// bounds dispatch batches.
+    pub sa: SaParams,
+    pub strategy: ReplanStrategy,
+    pub opts: OnlineOpts,
+    pub predictor: LatencyPredictor,
+    /// Longest input + output accepted per request.
+    pub max_total_tokens: usize,
+    /// Cross-shard handoff when the home queue is full.
+    pub handoff: bool,
+    /// Record engine step traces and relay per-token events to streaming
+    /// clients.
+    pub stream_tokens: bool,
+}
+
+impl FrontDoorConfig {
+    pub fn new(
+        predictor: LatencyPredictor,
+        max_total_tokens: usize,
+    ) -> FrontDoorConfig {
+        FrontDoorConfig {
+            shards: 1,
+            queue_depth: 1024,
+            sa: SaParams { iters_per_temp: 20, ..SaParams::default() },
+            strategy: ReplanStrategy::Warm,
+            opts: OnlineOpts {
+                compact_dispatched: true,
+                arrival_aware: true,
+                ..OnlineOpts::default()
+            },
+            predictor,
+            max_total_tokens,
+            handoff: true,
+            stream_tokens: false,
+        }
+    }
+}
+
+/// Door-level counters (shard-independent admission accounting).
+#[derive(Debug, Default)]
+pub(crate) struct DoorShared {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub invalid: AtomicU64,
+    pub handoffs: AtomicU64,
+    /// Accepted but not yet completed (queued + admitted + executing).
+    pub inflight: AtomicU64,
+    pub peak_inflight: AtomicU64,
+    pub running: AtomicBool,
+}
+
+/// Point-in-time door counters (`accepted + rejected + invalid` equals
+/// submissions attempted).
+#[derive(Debug, Clone, Copy)]
+pub struct DoorStats {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub invalid: u64,
+    pub handoffs: u64,
+    pub inflight: u64,
+    pub peak_inflight: u64,
+}
+
+struct ShardHandle {
+    tx: SyncSender<SubmitMsg>,
+    shared: Arc<ShardShared>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// The sharded admission front door (module docs).
+pub struct FrontDoor {
+    shards: Vec<ShardHandle>,
+    door: Arc<DoorShared>,
+    handoff: bool,
+    queue_depth: usize,
+    max_total_tokens: usize,
+    next_id: AtomicU64,
+}
+
+/// Consistent session → shard hash (splitmix64 finalizer): stable across
+/// runs, uniform across shards, and independent of shard load so a
+/// session's requests always start on the same home shard.
+pub fn session_shard(session: u64, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut z = session.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % shards as u64) as usize
+}
+
+/// Per-shard SA seed. Shard 0 runs the base seed **verbatim** — so the
+/// single-shard topology replays [`run_online_opts`] bit for bit
+/// (invariant 12) — and shards > 0 decorrelate via [`instance_seed`].
+pub fn shard_seed(base: u64, shard: usize) -> u64 {
+    if shard == 0 {
+        base
+    } else {
+        instance_seed(base, shard)
+    }
+}
+
+impl FrontDoor {
+    /// Start the door: one worker thread per shard, each owning one
+    /// engine from `engines` (`engines.len()` must equal `cfg.shards`).
+    pub fn start(
+        cfg: FrontDoorConfig,
+        mut engines: Vec<Box<dyn Engine + Send>>,
+    ) -> Result<Arc<FrontDoor>> {
+        let n = cfg.shards.max(1);
+        anyhow::ensure!(
+            engines.len() == n,
+            "need exactly one engine per shard ({} != {n})",
+            engines.len()
+        );
+        anyhow::ensure!(
+            cfg.queue_depth >= 1,
+            "live front door needs queue_depth >= 1 \
+             (the zero-queue configuration is serve_trace)"
+        );
+        let door = Arc::new(DoorShared {
+            running: AtomicBool::new(true),
+            ..DoorShared::default()
+        });
+        let mut shards = Vec::with_capacity(n);
+        for (s, mut engine) in engines.drain(..).enumerate() {
+            if cfg.stream_tokens {
+                engine.enable_step_trace();
+            }
+            let (tx, rx) = std::sync::mpsc::sync_channel(cfg.queue_depth);
+            let shared = Arc::new(ShardShared::default());
+            let ctx = ShardCtx {
+                shard: s,
+                predictor: cfg.predictor,
+                sa: SaParams {
+                    seed: shard_seed(cfg.sa.seed, s),
+                    ..cfg.sa
+                },
+                strategy: cfg.strategy,
+                opts: cfg.opts,
+                max_total_tokens: cfg.max_total_tokens,
+                stream_tokens: cfg.stream_tokens,
+            };
+            let worker_shared = shared.clone();
+            let worker_door = door.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("shard-{s}"))
+                .spawn(move || {
+                    shard_loop(ctx, rx, worker_shared, worker_door, engine);
+                })?;
+            shards.push(ShardHandle {
+                tx,
+                shared,
+                join: Mutex::new(Some(join)),
+            });
+        }
+        Ok(Arc::new(FrontDoor {
+            shards,
+            door,
+            handoff: cfg.handoff,
+            queue_depth: cfg.queue_depth,
+            max_total_tokens: cfg.max_total_tokens,
+            next_id: AtomicU64::new(0),
+        }))
+    }
+
+    /// Submit one request. Non-blocking: either it lands on a shard
+    /// queue (home first, then ring handoff when enabled) and a
+    /// [`StreamHandle`] is returned, or it is rejected with a
+    /// [`SubmitError`]. The request's `id` and `arrival_ms` are assigned
+    /// here; `stream` opts into per-token events.
+    pub fn submit(
+        &self,
+        session: u64,
+        mut request: Request,
+        stream: bool,
+    ) -> Result<StreamHandle, SubmitError> {
+        if !self.door.running.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let input = request
+            .prompt
+            .as_ref()
+            .map_or(request.input_len, |p| p.len());
+        if input == 0 {
+            self.door.invalid.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::Invalid("empty prompt".into()));
+        }
+        if input + request.output_len.max(1) > self.max_total_tokens {
+            self.door.invalid.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::Invalid(format!(
+                "input {} + output {} exceeds cap {}",
+                input,
+                request.output_len.max(1),
+                self.max_total_tokens
+            )));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        request.id = id;
+        request.arrival_ms = util::now_ms();
+        let submit_ms = request.arrival_ms;
+        let home = session_shard(session, self.shards.len());
+        let (events, rx) = std::sync::mpsc::channel();
+        let mut msg = SubmitMsg {
+            request,
+            submit_ms,
+            deferred: false,
+            stream,
+            events,
+        };
+        let tries = if self.handoff { self.shards.len() } else { 1 };
+        for k in 0..tries {
+            let s = (home + k) % self.shards.len();
+            match self.shards[s].tx.try_send(msg) {
+                Ok(()) => {
+                    if k > 0 {
+                        self.door.handoffs.fetch_add(1, Ordering::SeqCst);
+                    }
+                    self.door.accepted.fetch_add(1, Ordering::SeqCst);
+                    let inflight =
+                        self.door.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                    self.door
+                        .peak_inflight
+                        .fetch_max(inflight, Ordering::SeqCst);
+                    return Ok(StreamHandle { id, shard: s, rx });
+                }
+                Err(TrySendError::Full(m)) => msg = m,
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(SubmitError::ShuttingDown)
+                }
+            }
+        }
+        self.door.rejected.fetch_add(1, Ordering::SeqCst);
+        Err(SubmitError::Saturated {
+            retry_after_ms: self.retry_after_ms(home),
+        })
+    }
+
+    /// 429 hint: time to drain the home shard's full queue at its
+    /// measured per-item drain rate (EWMA; [`DEFAULT_DRAIN_MS`] before
+    /// any measurement), clamped to [1 ms, 30 s].
+    fn retry_after_ms(&self, home: usize) -> u64 {
+        let bits = self.shards[home]
+            .shared
+            .drain_ewma_ms_bits
+            .load(Ordering::SeqCst);
+        let per_item = match f64::from_bits(bits) {
+            v if v > 0.0 && v.is_finite() => v,
+            _ => DEFAULT_DRAIN_MS,
+        };
+        (self.queue_depth as f64 * per_item).clamp(1.0, 30_000.0) as u64
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Longest input + output accepted per request.
+    pub fn max_total_tokens(&self) -> usize {
+        self.max_total_tokens
+    }
+
+    /// Door-level counter snapshot.
+    pub fn door_stats(&self) -> DoorStats {
+        DoorStats {
+            accepted: self.door.accepted.load(Ordering::SeqCst),
+            rejected: self.door.rejected.load(Ordering::SeqCst),
+            invalid: self.door.invalid.load(Ordering::SeqCst),
+            handoffs: self.door.handoffs.load(Ordering::SeqCst),
+            inflight: self.door.inflight.load(Ordering::SeqCst),
+            peak_inflight: self.door.peak_inflight.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Completions served across all shards.
+    pub fn served(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.shared.served.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Per-shard shared state (metrics readers).
+    pub fn shard_shared(&self, s: usize) -> &Arc<ShardShared> {
+        &self.shards[s].shared
+    }
+
+    /// Poll until nothing is in flight (accepted == completed) or the
+    /// timeout expires. Returns whether the door drained.
+    pub fn wait_drained(&self, timeout_ms: u64) -> bool {
+        let deadline = util::now_ms() + timeout_ms as f64;
+        loop {
+            if self.door.inflight.load(Ordering::SeqCst) == 0 {
+                return true;
+            }
+            if util::now_ms() > deadline {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Aggregate serving stats (door counters + merged shard metrics) as
+    /// the `stats` reply / bench report body.
+    pub fn stats_json(&self) -> Json {
+        let d = self.door_stats();
+        let mut admission = crate::metrics::Histogram::new();
+        let mut e2e = crate::metrics::Histogram::new();
+        let mut served = 0u64;
+        let mut met = 0u64;
+        let mut failed = 0u64;
+        let mut tokens_out = 0u64;
+        let mut deferrals = 0usize;
+        let mut replans = 0usize;
+        let mut per_class: Vec<(
+            crate::coordinator::request::TaskType,
+            usize,
+            usize,
+        )> = Vec::new();
+        let mut shard_rows = Vec::new();
+        for (s, h) in self.shards.iter().enumerate() {
+            served += h.shared.served.load(Ordering::SeqCst);
+            met += h.shared.met.load(Ordering::SeqCst);
+            failed += h.shared.failed.load(Ordering::SeqCst);
+            tokens_out += h.shared.tokens_out.load(Ordering::SeqCst);
+            let m = h.shared.metrics.lock().unwrap();
+            admission.merge(&m.admission);
+            e2e.merge(&m.e2e);
+            deferrals += m.online.deferrals;
+            replans += m.online.replans;
+            for &(task, n, k) in &m.per_class {
+                match per_class.iter_mut().find(|(t, _, _)| *t == task) {
+                    Some(row) => {
+                        row.1 += n;
+                        row.2 += k;
+                    }
+                    None => per_class.push((task, n, k)),
+                }
+            }
+            shard_rows.push(Json::obj(vec![
+                ("shard", Json::num(s as f64)),
+                (
+                    "served",
+                    Json::num(h.shared.served.load(Ordering::SeqCst) as f64),
+                ),
+                ("admitted", Json::num(m.online.admitted as f64)),
+                ("replans", Json::num(m.online.replans as f64)),
+                ("sa_evals", Json::num(m.online.sa_evals as f64)),
+                (
+                    "drift_replans",
+                    Json::num(m.online.drift_replans as f64),
+                ),
+                ("deferrals", Json::num(m.online.deferrals as f64)),
+            ]));
+        }
+        let attainment = if served > 0 {
+            met as f64 / served as f64
+        } else {
+            0.0
+        };
+        let classes: Vec<Json> = per_class
+            .iter()
+            .map(|&(task, n, k)| {
+                Json::obj(vec![
+                    ("task", Json::str(task.name())),
+                    ("n", Json::num(n as f64)),
+                    ("met", Json::num(k as f64)),
+                    (
+                        "attainment",
+                        Json::num(if n > 0 {
+                            k as f64 / n as f64
+                        } else {
+                            0.0
+                        }),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("accepted", Json::num(d.accepted as f64)),
+            ("rejected", Json::num(d.rejected as f64)),
+            ("invalid", Json::num(d.invalid as f64)),
+            ("handoffs", Json::num(d.handoffs as f64)),
+            ("inflight", Json::num(d.inflight as f64)),
+            ("peak_inflight", Json::num(d.peak_inflight as f64)),
+            ("served", Json::num(served as f64)),
+            ("met", Json::num(met as f64)),
+            ("failed", Json::num(failed as f64)),
+            ("tokens_out", Json::num(tokens_out as f64)),
+            ("deferrals", Json::num(deferrals as f64)),
+            ("replans", Json::num(replans as f64)),
+            ("attainment", Json::num(attainment)),
+            ("admission_ms", admission.to_json()),
+            ("e2e_ms", e2e.to_json()),
+            ("per_class", Json::Arr(classes)),
+            ("shards", Json::Arr(shard_rows)),
+        ])
+    }
+
+    /// Stop accepting, let the shards finish their backlog, and join the
+    /// worker threads. Idempotent.
+    pub fn shutdown(&self) {
+        self.door.running.store(false, Ordering::SeqCst);
+        for h in &self.shards {
+            let join = h.join.lock().unwrap().take();
+            if let Some(j) = join {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Synchronous sharded trace replay — the zero-queue, zero-thread escape
+/// hatch (module docs, invariant 12). Partitions the recorded trace by
+/// [`session_shard`] over request ids and runs each non-empty shard
+/// through [`run_online_opts`] at its [`shard_seed`]. With
+/// `cfg.shards == 1` this is byte-identical to calling
+/// [`run_online_opts`] on the full trace with `cfg.sa` directly.
+///
+/// Returns merged completions (sorted by id) plus the per-shard outcomes
+/// tagged with their shard index (empty shards are skipped).
+pub fn serve_trace(
+    cfg: &FrontDoorConfig,
+    requests: &[Request],
+    predicted_out: &[usize],
+    engines: &mut [Box<dyn Engine + Send>],
+) -> Result<(Vec<Completion>, Vec<(usize, OnlineOutcome)>)> {
+    assert_eq!(requests.len(), predicted_out.len());
+    let n = cfg.shards.max(1);
+    anyhow::ensure!(
+        engines.len() == n,
+        "need exactly one engine per shard ({} != {n})",
+        engines.len()
+    );
+    let mut per_req: Vec<Vec<Request>> = vec![Vec::new(); n];
+    let mut per_out: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, r) in requests.iter().enumerate() {
+        let s = session_shard(r.id, n);
+        per_req[s].push(r.clone());
+        per_out[s].push(predicted_out[i]);
+    }
+    let mut completions: Vec<Completion> =
+        Vec::with_capacity(requests.len());
+    let mut outcomes = Vec::new();
+    for (s, engine) in engines.iter_mut().enumerate() {
+        if per_req[s].is_empty() {
+            continue;
+        }
+        let p = SaParams { seed: shard_seed(cfg.sa.seed, s), ..cfg.sa };
+        let outcome = run_online_opts(
+            &per_req[s],
+            &per_out[s],
+            engine.as_mut(),
+            &cfg.predictor,
+            &p,
+            cfg.strategy,
+            cfg.opts,
+        )?;
+        completions.extend_from_slice(&outcome.completions);
+        outcomes.push((s, outcome));
+    }
+    completions.sort_by_key(|c| c.id);
+    Ok((completions, outcomes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Slo, TaskType};
+
+    /// Door wired to raw queues with NO worker threads: deterministic
+    /// backpressure tests (queues fill and stay full).
+    fn test_door(
+        shards: usize,
+        queue_depth: usize,
+        handoff: bool,
+    ) -> (FrontDoor, Vec<Receiver<SubmitMsg>>) {
+        let mut handles = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..shards {
+            let (tx, rx) = std::sync::mpsc::sync_channel(queue_depth);
+            handles.push(ShardHandle {
+                tx,
+                shared: Arc::new(ShardShared::default()),
+                join: Mutex::new(None),
+            });
+            rxs.push(rx);
+        }
+        let door = FrontDoor {
+            shards: handles,
+            door: Arc::new(DoorShared {
+                running: AtomicBool::new(true),
+                ..DoorShared::default()
+            }),
+            handoff,
+            queue_depth,
+            max_total_tokens: 4096,
+            next_id: AtomicU64::new(0),
+        };
+        (door, rxs)
+    }
+
+    fn req(input: usize, output: usize) -> Request {
+        Request::synthetic(
+            0,
+            TaskType::Chat,
+            input,
+            output,
+            Slo::Interactive { ttft_ms: 10_000.0, tpot_ms: 50.0 },
+        )
+    }
+
+    #[test]
+    fn session_shard_stable_and_in_range() {
+        for session in 0..256u64 {
+            let s = session_shard(session, 4);
+            assert!(s < 4);
+            assert_eq!(s, session_shard(session, 4), "stable");
+        }
+        // single shard: everything routes to 0
+        assert_eq!(session_shard(12345, 1), 0);
+        // multi-shard hashing actually spreads sessions out
+        let hit: std::collections::HashSet<usize> =
+            (0..64u64).map(|s| session_shard(s, 4)).collect();
+        assert_eq!(hit.len(), 4, "64 sessions should cover 4 shards");
+    }
+
+    #[test]
+    fn shard_seed_is_base_verbatim_at_zero() {
+        // invariant 12 hinges on this: the single-shard replay must run
+        // the SAME seed run_online would.
+        assert_eq!(shard_seed(42, 0), 42);
+        assert_eq!(shard_seed(42, 1), instance_seed(42, 1));
+        assert_ne!(shard_seed(42, 1), 42);
+    }
+
+    #[test]
+    fn submit_routes_to_home_shard_queue() {
+        let (door, rxs) = test_door(2, 4, true);
+        let session = 7u64;
+        let home = session_shard(session, 2);
+        let h = door.submit(session, req(100, 10), false).unwrap();
+        assert_eq!(h.shard, home);
+        let msg = rxs[home].try_recv().expect("queued on home shard");
+        assert_eq!(msg.request.id, h.id);
+        assert_eq!(msg.request.input_len, 100);
+        assert!(!msg.deferred);
+        let d = door.door_stats();
+        assert_eq!(d.accepted, 1);
+        assert_eq!(d.inflight, 1);
+        assert_eq!(d.handoffs, 0);
+    }
+
+    #[test]
+    fn full_home_queue_hands_off_to_idle_shard() {
+        let (door, rxs) = test_door(2, 2, true);
+        // find a session homed on shard 0 and fill shard 0's queue
+        let session =
+            (0..64u64).find(|&s| session_shard(s, 2) == 0).unwrap();
+        door.submit(session, req(10, 1), false).unwrap();
+        door.submit(session, req(10, 1), false).unwrap();
+        // third submission: home full -> lands on shard 1
+        let h = door.submit(session, req(10, 1), false).unwrap();
+        assert_eq!(h.shard, 1);
+        assert_eq!(door.door_stats().handoffs, 1);
+        assert_eq!(rxs[1].try_recv().unwrap().request.id, h.id);
+    }
+
+    #[test]
+    fn all_queues_full_rejects_with_retry_after() {
+        let (door, _rxs) = test_door(2, 1, true);
+        door.submit(0, req(10, 1), false).unwrap();
+        door.submit(1, req(10, 1), false).unwrap();
+        // some session's home is full AND the handoff target is full
+        let err = door.submit(2, req(10, 1), false).unwrap_err();
+        match err {
+            SubmitError::Saturated { retry_after_ms } => {
+                assert!(retry_after_ms >= 1);
+                assert!(retry_after_ms <= 30_000);
+            }
+            other => panic!("expected Saturated, got {other:?}"),
+        }
+        let d = door.door_stats();
+        assert_eq!(d.rejected, 1);
+        assert_eq!(d.accepted, 2);
+    }
+
+    #[test]
+    fn handoff_disabled_rejects_despite_idle_peer() {
+        let (door, _rxs) = test_door(2, 1, false);
+        let s_home0 =
+            (0..64u64).find(|&s| session_shard(s, 2) == 0).unwrap();
+        door.submit(s_home0, req(10, 1), false).unwrap();
+        let err = door.submit(s_home0, req(10, 1), false).unwrap_err();
+        assert!(matches!(err, SubmitError::Saturated { .. }));
+        // shard 1 never saw traffic, yet the request was rejected
+        assert_eq!(door.door_stats().handoffs, 0);
+    }
+
+    #[test]
+    fn invalid_requests_rejected_up_front() {
+        let (door, rxs) = test_door(1, 4, true);
+        let err = door.submit(0, req(0, 10), false).unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)));
+        let err = door.submit(0, req(4000, 4000), false).unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)));
+        assert_eq!(door.door_stats().invalid, 2);
+        assert_eq!(door.door_stats().accepted, 0);
+        assert!(rxs[0].try_recv().is_err(), "nothing reached the queue");
+    }
+
+    #[test]
+    fn ids_are_unique_and_monotonic() {
+        let (door, rxs) = test_door(1, 8, true);
+        let ids: Vec<u64> = (0..5)
+            .map(|_| door.submit(0, req(50, 5), false).unwrap().id)
+            .collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        for want in ids {
+            assert_eq!(rxs[0].try_recv().unwrap().request.id, want);
+        }
+    }
+}

@@ -1,421 +1,58 @@
-//! TCP serving front-end: JSON-lines protocol over a leader/dispatcher loop.
+//! Async streaming serving front end.
 //!
-//! Production shape without tokio (DESIGN.md §2): a listener thread accepts
-//! connections; per-connection threads parse newline-delimited JSON
-//! requests into a shared pool; a dispatcher thread wakes every
-//! `window_ms`, drains the pool, runs the configured scheduling policy
-//! (SLO-aware SA by default), executes batches on instance workers, and
-//! replies on each request's channel.
+//! Architecture (replaces the former thread-per-connection server — see
+//! `docs/ARCHITECTURE.md` §server):
+//!
+//! ```text
+//!            ┌───────────────────────────── FrontDoor ──────────────┐
+//!  clients ─►│ validate ─► session_shard ─► bounded queue (per shard)│
+//!  (submit)  │        429 + retry_after when every queue is full     │
+//!            └───────┬───────────────┬──────────────────────────────┘
+//!                    ▼               ▼
+//!              [shard worker 0] [shard worker N-1]   (threads)
+//!              WaveController + engine each; admit/defer, dispatch,
+//!              reconcile — run_online's loop on a live clock
+//!                    │               │
+//!                    └── StreamEvent channels back to the clients:
+//!                        Admitted → Token* → Done/Failed
+//! ```
+//!
+//! * [`front`]      — the sharded admission door: bounded MPSC queues,
+//!   consistent-hash routing, cross-shard handoff, 429 backpressure, and
+//!   the synchronous [`front::serve_trace`] replay (invariant 12's
+//!   escape hatch).
+//! * [`shard`]      — the per-shard worker loop (controller + engine).
+//! * [`tcp`]        — single-threaded non-blocking reactor speaking the
+//!   JSON-lines protocol, streaming frames per decode step.
+//! * [`protocol`]   — wire parsing + reply/stream frame serialization.
+//! * [`bench_http`] — the in-process open-loop load generator behind
+//!   `slo-serve bench-http` (CI's serving smoke gate).
 //!
 //! Protocol (one JSON object per line):
 //!
 //! ```text
 //! -> {"op":"generate","task":"chat","input_len":120,"max_tokens":40,
-//!     "slo":{"kind":"interactive","ttft_ms":10000,"tpot_ms":50},
-//!     "prompt":"optional text"}
-//! <- {"id":3,"ok":true,"text":"…","e2e_ms":412.5,"ttft_ms":80.1,
-//!     "tpot_ms":8.4,"slo_met":true}
-//! -> {"op":"stats"}
-//! <- {"ok":true,"served":17,"attainment":0.94,"g_req_per_s":1.3,…}
-//! -> {"op":"shutdown"}
+//!     "session":7,"stream":true,
+//!     "slo":{"kind":"interactive","ttft_ms":10000,"tpot_ms":50}}
+//! <- {"ok":true,"event":"admitted","id":3,"shard":1,"queue_ms":0.4}
+//! <- {"ok":true,"event":"token","id":3,"index":0,"t_ms":812.5}
+//! <- …
+//! <- {"ok":true,"event":"done","id":3,"generated":40,"e2e_ms":912.0,…}
+//! -> {"op":"generate","input_len":64}          (no "stream")
+//! <- {"ok":true,"id":4,"generated":32,…}       (single completion line)
+//! <- {"ok":false,"code":429,"error":"saturated","retry_after_ms":180}
+//! -> {"op":"stats"}   ·   {"op":"shutdown"}
 //! ```
 
+pub mod bench_http;
+pub mod front;
 pub mod protocol;
+pub mod shard;
+pub mod tcp;
 
-use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-
-use anyhow::{anyhow, Result};
-
-use crate::coordinator::objective::Evaluator;
-use crate::coordinator::policies::Policy;
-use crate::coordinator::predictor::LatencyPredictor;
-use crate::coordinator::profiler::RequestProfiler;
-use crate::coordinator::request::{Completion, Request};
-use crate::engine::instance::InstanceHandle;
-use crate::engine::EngineRequest;
-use crate::metrics::RunMetrics;
-use crate::util::json::Json;
-use crate::util::rng::Rng;
-use protocol::{completion_to_json, parse_generate};
-
-/// A queued request plus its reply channel.
-struct PendingReq {
-    request: Request,
-    reply: Sender<Json>,
-}
-
-/// Server configuration.
-pub struct ServerConfig {
-    /// Scheduling policy for each dispatch window.
-    pub policy: Policy,
-    /// Predictor used by the priority mapper.
-    pub predictor: LatencyPredictor,
-    /// Dispatch window (ms): how long requests pool before scheduling.
-    pub window_ms: u64,
-    /// Engine batch cap.
-    pub max_batch: usize,
-    /// Longest (input + output) accepted.
-    pub max_total_tokens: usize,
-}
-
-struct Shared {
-    pool: Mutex<VecDeque<PendingReq>>,
-    served: Mutex<Vec<Completion>>,
-    next_id: AtomicU64,
-    running: AtomicBool,
-}
-
-/// Handle to a running server.
-pub struct ServerHandle {
-    pub addr: std::net::SocketAddr,
-    shared: Arc<Shared>,
-    accept_thread: Option<JoinHandle<()>>,
-    dispatch_thread: Option<JoinHandle<()>>,
-}
-
-/// Start the server on an ephemeral local port with the given instances.
-pub fn start(
-    cfg: ServerConfig,
-    instances: Vec<InstanceHandle>,
-) -> Result<ServerHandle> {
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
-    let shared = Arc::new(Shared {
-        pool: Mutex::new(VecDeque::new()),
-        served: Mutex::new(Vec::new()),
-        next_id: AtomicU64::new(0),
-        running: AtomicBool::new(true),
-    });
-
-    // ---- acceptor + per-connection readers
-    let accept_shared = shared.clone();
-    let max_total = cfg.max_total_tokens;
-    let accept_thread = std::thread::Builder::new()
-        .name("server-accept".into())
-        .spawn(move || {
-            // Connection threads are detached: they block on client reads
-            // and exit when the peer closes or a read times out with the
-            // server stopped (joining them here would deadlock shutdown
-            // against any still-open client).
-            while accept_shared.running.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let sh = accept_shared.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_connection(stream, sh, max_total);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(
-                            std::time::Duration::from_millis(5),
-                        );
-                    }
-                    Err(_) => break,
-                }
-            }
-        })?;
-
-    // ---- dispatcher: window -> schedule -> execute -> reply
-    let dispatch_shared = shared.clone();
-    let dispatch_thread = std::thread::Builder::new()
-        .name("server-dispatch".into())
-        .spawn(move || {
-            dispatcher_loop(cfg, instances, dispatch_shared);
-        })?;
-
-    Ok(ServerHandle {
-        addr,
-        shared,
-        accept_thread: Some(accept_thread),
-        dispatch_thread: Some(dispatch_thread),
-    })
-}
-
-fn handle_connection(
-    stream: TcpStream,
-    shared: Arc<Shared>,
-    max_total_tokens: usize,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // Periodic read timeout so idle connections notice server shutdown.
-    stream
-        .set_read_timeout(Some(std::time::Duration::from_millis(250)))
-        .ok();
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    loop {
-        let mut line = String::new();
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // peer closed
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if shared.running.load(Ordering::SeqCst) {
-                    continue;
-                }
-                break;
-            }
-            Err(e) => return Err(e.into()),
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let msg = match Json::parse(&line) {
-            Ok(m) => m,
-            Err(e) => {
-                send_line(
-                    &mut writer,
-                    &Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str(format!("bad json: {e}"))),
-                    ]),
-                )?;
-                continue;
-            }
-        };
-        match msg.get("op").as_str() {
-            Some("generate") => {
-                let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
-                match parse_generate(&msg, id, max_total_tokens) {
-                    Ok(request) => {
-                        let (tx, rx) = std::sync::mpsc::channel();
-                        shared
-                            .pool
-                            .lock()
-                            .unwrap()
-                            .push_back(PendingReq { request, reply: tx });
-                        // block this connection until its reply is ready
-                        match rx.recv() {
-                            Ok(reply) => send_line(&mut writer, &reply)?,
-                            Err(_) => {
-                                send_line(
-                                    &mut writer,
-                                    &Json::obj(vec![
-                                        ("ok", Json::Bool(false)),
-                                        ("error", Json::str("server shutdown")),
-                                    ]),
-                                )?;
-                            }
-                        }
-                    }
-                    Err(e) => send_line(
-                        &mut writer,
-                        &Json::obj(vec![
-                            ("ok", Json::Bool(false)),
-                            ("error", Json::str(e.to_string())),
-                        ]),
-                    )?,
-                }
-            }
-            Some("stats") => {
-                let served = shared.served.lock().unwrap();
-                let m = RunMetrics::from_completions(&served);
-                send_line(
-                    &mut writer,
-                    &Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("served", Json::num(m.n as f64)),
-                        ("met", Json::num(m.met as f64)),
-                        ("attainment", Json::num(m.attainment())),
-                        ("g_req_per_s", Json::num(m.g_req_per_s)),
-                        ("avg_latency_ms", Json::num(m.avg_latency_ms())),
-                    ]),
-                )?;
-            }
-            Some("shutdown") => {
-                shared.running.store(false, Ordering::SeqCst);
-                send_line(
-                    &mut writer,
-                    &Json::obj(vec![("ok", Json::Bool(true))]),
-                )?;
-                break;
-            }
-            other => send_line(
-                &mut writer,
-                &Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    (
-                        "error",
-                        Json::str(format!("unknown op {other:?}")),
-                    ),
-                ]),
-            )?,
-        }
-    }
-    Ok(())
-}
-
-fn send_line(writer: &mut TcpStream, v: &Json) -> Result<()> {
-    let mut text = v.to_string_compact();
-    text.push('\n');
-    writer.write_all(text.as_bytes())?;
-    Ok(())
-}
-
-fn dispatcher_loop(
-    cfg: ServerConfig,
-    instances: Vec<InstanceHandle>,
-    shared: Arc<Shared>,
-) {
-    let mut rng = Rng::new(0x5E12_70E);
-    let mut profiler = RequestProfiler::new();
-    let mut next_instance = 0usize;
-    while shared.running.load(Ordering::SeqCst) {
-        std::thread::sleep(std::time::Duration::from_millis(cfg.window_ms));
-        let mut pending: Vec<PendingReq> = {
-            let mut pool = shared.pool.lock().unwrap();
-            pool.drain(..).collect()
-        };
-        if pending.is_empty() {
-            continue;
-        }
-        // predicted output lengths from the profiler (falls back to prior)
-        let requests: Vec<Request> =
-            pending.iter().map(|p| p.request.clone()).collect();
-        let predicted: Vec<usize> = requests
-            .iter()
-            .map(|r| {
-                profiler
-                    .predict_output(r.task, &mut rng, cfg.max_total_tokens / 2)
-                    .min(r.output_len.max(1))
-            })
-            .collect();
-        let jobs: Vec<crate::coordinator::objective::Job> = requests
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                crate::coordinator::objective::Job::from_request(
-                    i,
-                    r,
-                    predicted[i],
-                )
-            })
-            .collect();
-        let ev = Evaluator::new(&jobs, &cfg.predictor);
-        let (schedule, _) = cfg.policy.plan(&ev, cfg.max_batch);
-        // dispatch batches round-robin over instances
-        for (_, start, size) in schedule.batch_spans() {
-            let member_ids: Vec<usize> = schedule.order
-                [start..start + size]
-                .iter()
-                .map(|&j| jobs[j].req_idx)
-                .collect();
-            let batch: Vec<EngineRequest> = member_ids
-                .iter()
-                .map(|&i| {
-                    let r = &requests[i];
-                    EngineRequest {
-                        id: r.id,
-                        input_len: r.input_len,
-                        max_new_tokens: r.output_len,
-                        prompt: r.prompt.clone(),
-                    }
-                })
-                .collect();
-            let inst = &instances[next_instance % instances.len()];
-            next_instance += 1;
-            match inst.run_batch(batch) {
-                Ok(items) => {
-                    for (&i, item) in member_ids.iter().zip(&items) {
-                        let req = &requests[i];
-                        profiler.observe_output(req.task, item.generated);
-                        let completion = Completion {
-                            id: req.id,
-                            task: req.task,
-                            slo: req.slo,
-                            input_len: req.input_len,
-                            // the server plans at the client's token
-                            // budget — that is its output prediction
-                            predicted_lo: req.output_len,
-                            generated: item.generated,
-                            e2e_ms: item.finish_ms - req.arrival_ms,
-                            ttft_ms: item.first_token_ms - req.arrival_ms,
-                            tpot_ms: item.tpot_ms(),
-                            wait_ms: item.start_ms - req.arrival_ms,
-                            batch_size: item.batch_size,
-                            text: item.text.clone(),
-                        };
-                        let reply = completion_to_json(&completion);
-                        // record BEFORE replying: a client that got its
-                        // reply must observe itself in `stats`
-                        shared.served.lock().unwrap().push(completion);
-                        if let Some(p) = pending
-                            .iter_mut()
-                            .find(|p| p.request.id == req.id)
-                        {
-                            let _ = p.reply.send(reply);
-                        }
-                    }
-                }
-                Err(e) => {
-                    for &i in &member_ids {
-                        if let Some(p) = pending
-                            .iter_mut()
-                            .find(|p| p.request.id == requests[i].id)
-                        {
-                            let _ = p.reply.send(Json::obj(vec![
-                                ("ok", Json::Bool(false)),
-                                ("error", Json::str(e.to_string())),
-                            ]));
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
-impl ServerHandle {
-    /// Request shutdown and join the threads.
-    pub fn shutdown(mut self) {
-        self.shared.running.store(false, Ordering::SeqCst);
-        if let Some(t) = self.dispatch_thread.take() {
-            let _ = t.join();
-        }
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-
-    /// Completions served so far.
-    pub fn served(&self) -> usize {
-        self.shared.served.lock().unwrap().len()
-    }
-}
-
-/// Minimal blocking client for the JSON-lines protocol.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
-    }
-
-    /// Send one request object, wait for one reply line.
-    pub fn call(&mut self, msg: &Json) -> Result<Json> {
-        let mut text = msg.to_string_compact();
-        text.push('\n');
-        self.writer.write_all(text.as_bytes())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        if line.is_empty() {
-            return Err(anyhow!("connection closed"));
-        }
-        Json::parse(&line).map_err(|e| anyhow!("bad reply: {e}"))
-    }
-}
+pub use front::{
+    serve_trace, session_shard, shard_seed, FrontDoor, FrontDoorConfig,
+    StreamEvent, StreamHandle, SubmitError, TryNext,
+};
+pub use shard::{ShardMetrics, ShardShared};
+pub use tcp::{serve_tcp, Client, TcpServer};

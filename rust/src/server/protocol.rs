@@ -1,4 +1,11 @@
-//! JSON-lines wire protocol: request parsing + completion serialization.
+//! JSON-lines wire protocol: request parsing, completion serialization,
+//! and the streaming event frames.
+//!
+//! Reply frames carry an `event` discriminator when they are part of a
+//! stream (`admitted` / `token` / `done`); single-reply mode sends the
+//! bare completion object for backward compatibility. Rejections use
+//! HTTP-style `code`s: 429 saturated (with `retry_after_ms`), 400
+//! invalid, 503 shutting down.
 
 use anyhow::{anyhow, Result};
 
@@ -54,6 +61,88 @@ pub fn parse_generate(
         arrival_ms: crate::util::now_ms(),
         prompt,
     })
+}
+
+/// Transport-level options a generate message carries beyond the core
+/// [`Request`] fields.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenerateOpts {
+    /// Session id for consistent shard routing
+    /// ([`crate::server::front::session_shard`]); the connection id is
+    /// the fallback when absent.
+    pub session: Option<u64>,
+    /// Stream `admitted`/`token` frames instead of a single reply.
+    pub stream: bool,
+}
+
+/// Parse the transport options of a generate message (never fails:
+/// absent fields fall back to defaults).
+pub fn parse_generate_opts(msg: &Json) -> GenerateOpts {
+    GenerateOpts {
+        session: msg.get("session").as_i64().map(|v| v as u64),
+        stream: msg.get("stream").as_bool().unwrap_or(false),
+    }
+}
+
+/// `{"event":"admitted", …}` stream frame.
+pub fn admitted_json(id: u64, shard: usize, queue_ms: f64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("event", Json::str("admitted")),
+        ("id", Json::num(id as f64)),
+        ("shard", Json::num(shard as f64)),
+        ("queue_ms", Json::num(queue_ms)),
+    ])
+}
+
+/// `{"event":"token", …}` stream frame (one per emitted token).
+pub fn token_json(id: u64, index: usize, t_ms: f64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("event", Json::str("token")),
+        ("id", Json::num(id as f64)),
+        ("index", Json::num(index as f64)),
+        ("t_ms", Json::num(t_ms)),
+    ])
+}
+
+/// Terminal stream frame: the completion object tagged
+/// `"event":"done"`.
+pub fn done_json(c: &Completion) -> Json {
+    let mut v = completion_to_json(c);
+    if let Json::Obj(map) = &mut v {
+        map.insert("event".into(), Json::str("done"));
+    }
+    v
+}
+
+/// Failure frame/reply for one request.
+pub fn failed_json(id: u64, error: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("event", Json::str("failed")),
+        ("id", Json::num(id as f64)),
+        ("error", Json::str(error)),
+    ])
+}
+
+/// 429 backpressure rejection with the drain-rate-derived retry hint.
+pub fn reject_saturated_json(retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::num(429.0)),
+        ("error", Json::str("saturated")),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
+    ])
+}
+
+/// Generic error reply with an HTTP-style code.
+pub fn error_json(code: u32, error: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::num(code as f64)),
+        ("error", Json::str(error)),
+    ])
 }
 
 /// Serialize a completion into the reply object.
@@ -124,6 +213,64 @@ mod tests {
             Json::parse(r#"{"op":"generate","task":"x","input_len":5}"#)
                 .unwrap();
         assert!(parse_generate(&bad_task, 0, 380).is_err());
+    }
+
+    #[test]
+    fn generate_opts_defaults_and_overrides() {
+        let plain = Json::parse(r#"{"op":"generate","input_len":5}"#).unwrap();
+        let o = parse_generate_opts(&plain);
+        assert_eq!(o.session, None);
+        assert!(!o.stream);
+        let full = Json::parse(
+            r#"{"op":"generate","input_len":5,"session":99,"stream":true}"#,
+        )
+        .unwrap();
+        let o = parse_generate_opts(&full);
+        assert_eq!(o.session, Some(99));
+        assert!(o.stream);
+    }
+
+    #[test]
+    fn stream_frames_roundtrip() {
+        let a = admitted_json(3, 1, 2.5);
+        assert_eq!(a.get("event").as_str(), Some("admitted"));
+        assert_eq!(a.get("shard").as_usize(), Some(1));
+        let t = token_json(3, 7, 120.0);
+        assert_eq!(t.get("event").as_str(), Some("token"));
+        assert_eq!(t.get("index").as_usize(), Some(7));
+        let r = reject_saturated_json(250);
+        assert_eq!(r.get("ok"), &Json::Bool(false));
+        assert_eq!(r.get("code").as_i64(), Some(429));
+        assert_eq!(r.get("retry_after_ms").as_usize(), Some(250));
+        let f = failed_json(4, "boom");
+        assert_eq!(f.get("error").as_str(), Some("boom"));
+        // every frame parses back from the wire
+        for v in [a, t, r, f, error_json(400, "bad")] {
+            assert_eq!(Json::parse(&v.to_string_compact()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn done_frame_is_completion_plus_event_tag() {
+        let c = Completion {
+            id: 1,
+            task: TaskType::Code,
+            slo: Slo::E2e { e2e_ms: 1000.0 },
+            input_len: 10,
+            predicted_lo: 5,
+            generated: 5,
+            e2e_ms: 500.0,
+            ttft_ms: 100.0,
+            tpot_ms: 8.0,
+            wait_ms: 0.0,
+            batch_size: 1,
+            text: None,
+        };
+        let v = done_json(&c);
+        assert_eq!(v.get("event").as_str(), Some("done"));
+        assert_eq!(v.get("ok"), &Json::Bool(true));
+        assert_eq!(v.get("id").as_i64(), Some(1));
+        assert_eq!(v.get("slo_met"), &Json::Bool(true));
     }
 
     #[test]

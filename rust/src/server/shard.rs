@@ -1,0 +1,426 @@
+//! Shard worker: one engine + one [`WaveController`] driven by a bounded
+//! submission queue.
+//!
+//! The worker mirrors [`run_online_opts`]'s event loop on a live clock:
+//! drain the queue, admit (or defer while the controller is saturated —
+//! the KV backpressure rule), dispatch the next planned batch, execute,
+//! reconcile, repeat. The engine's virtual clock is pinned to the wall
+//! axis by [`Engine::advance_to`]`(now_ms())` before every admission and
+//! dispatch, so wall-clock arrivals and virtual execution share one
+//! timeline — exactly the unified axis the synchronous replay uses with
+//! recorded arrivals.
+//!
+//! [`run_online_opts`]: crate::coordinator::online::run_online_opts
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::objective::Job;
+use crate::coordinator::online::{OnlineOpts, OnlineStats, ReplanStrategy, WaveController};
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::priority::annealing::SaParams;
+use crate::coordinator::profiler::RequestProfiler;
+use crate::coordinator::request::{Completion, Request, TaskType};
+use crate::coordinator::to_completion;
+use crate::engine::{Engine, EngineRequest};
+use crate::metrics::Histogram;
+use crate::server::front::{DoorShared, StreamEvent};
+use crate::util;
+use crate::util::rng::Rng;
+
+/// EWMA smoothing for the per-item drain-time estimate feeding the
+/// front door's `retry_after_ms` hint.
+const DRAIN_EWMA_ALPHA: f64 = 0.2;
+
+/// One queued submission (front door → shard worker).
+pub(crate) struct SubmitMsg {
+    pub(crate) request: Request,
+    /// Wall clock at submission (ms; the request's `arrival_ms`).
+    pub(crate) submit_ms: f64,
+    /// Already counted as a saturation deferral (count-once semantics).
+    pub(crate) deferred: bool,
+    /// Client opted into per-token events.
+    pub(crate) stream: bool,
+    /// Event stream back to the submitting client.
+    pub(crate) events: Sender<StreamEvent>,
+}
+
+/// Mutex-guarded shard metrics (merged across shards by the door).
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    /// Submit → admission wait (ms).
+    pub admission: Histogram,
+    /// Measured request e2e latency (ms).
+    pub e2e: Histogram,
+    /// Per task class: (task, completed, SLO-met).
+    pub per_class: Vec<(TaskType, usize, usize)>,
+    /// Snapshot of the controller's [`OnlineStats`] (refreshed after
+    /// every batch and at worker exit).
+    pub online: OnlineStats,
+}
+
+/// Lock-free counters + guarded metrics one shard exposes to the door.
+#[derive(Debug, Default)]
+pub struct ShardShared {
+    pub admitted: AtomicU64,
+    pub served: AtomicU64,
+    pub met: AtomicU64,
+    pub failed: AtomicU64,
+    pub tokens_out: AtomicU64,
+    /// f64 bits of the per-item drain-time EWMA (ms); 0 = no measurement.
+    pub drain_ewma_ms_bits: AtomicU64,
+    pub metrics: Mutex<ShardMetrics>,
+}
+
+/// Immutable worker parameters (built by the front door at start).
+pub(crate) struct ShardCtx {
+    pub(crate) shard: usize,
+    pub(crate) predictor: LatencyPredictor,
+    /// `sa.seed` is already shard-resolved
+    /// ([`crate::server::front::shard_seed`]).
+    pub(crate) sa: SaParams,
+    pub(crate) strategy: ReplanStrategy,
+    pub(crate) opts: OnlineOpts,
+    pub(crate) max_total_tokens: usize,
+    pub(crate) stream_tokens: bool,
+}
+
+/// Slab entry for one in-flight request; the slot index doubles as the
+/// controller-side `Job::req_idx`, so a `Dispatch` maps straight back.
+struct Entry {
+    request: Request,
+    stream: bool,
+    events: Sender<StreamEvent>,
+    submit_ms: f64,
+}
+
+fn alloc(
+    slots: &mut Vec<Option<Entry>>,
+    free: &mut Vec<usize>,
+    e: Entry,
+) -> usize {
+    match free.pop() {
+        Some(i) => {
+            slots[i] = Some(e);
+            i
+        }
+        None => {
+            slots.push(Some(e));
+            slots.len() - 1
+        }
+    }
+}
+
+/// The worker thread body (module docs).
+pub(crate) fn shard_loop(
+    ctx: ShardCtx,
+    rx: Receiver<SubmitMsg>,
+    shared: Arc<ShardShared>,
+    door: Arc<DoorShared>,
+    mut engine: Box<dyn Engine + Send>,
+) {
+    // The controller borrows the predictor: declare the owned predictor
+    // first so it outlives (drops after) the controller.
+    let predictor = ctx.predictor;
+    let mut ctl =
+        WaveController::new(&predictor, ctx.sa, ctx.strategy);
+    if ctx.opts.compact_dispatched {
+        ctl = ctl.with_compaction();
+    }
+    if ctx.opts.adaptive_budget {
+        ctl = ctl.with_adaptive_budget();
+    }
+    let mut profiler = RequestProfiler::new();
+    let mut rng = Rng::new(ctx.sa.seed ^ 0x5EA2_D00E);
+    // Bounded request slab: slots are freed on completion/failure, so
+    // memory tracks the in-flight set, not the request history.
+    let mut slots: Vec<Option<Entry>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut waiting: Vec<SubmitMsg> = Vec::new();
+    let mut disconnected = false;
+
+    loop {
+        // ---- intake: saturation-deferred submissions first, then drain
+        // the queue (non-blocking).
+        let mut intake: Vec<SubmitMsg> = std::mem::take(&mut waiting);
+        loop {
+            match rx.try_recv() {
+                Ok(m) => intake.push(m),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if !intake.is_empty() {
+            if ctl.saturated() {
+                // KV backpressure: defer admission until dispatch frees
+                // planned backlog. Each arrival counts once, however
+                // many retries it takes.
+                let newly =
+                    intake.iter().filter(|m| !m.deferred).count();
+                ctl.note_deferrals(newly);
+                for m in &mut intake {
+                    m.deferred = true;
+                }
+                waiting = intake;
+            } else {
+                admit_intake(
+                    intake, &mut ctl, &mut slots, &mut free,
+                    &mut profiler, &mut rng, engine.as_mut(), &ctx,
+                    &shared, &door,
+                );
+            }
+        }
+
+        // ---- dispatch the next planned batch (work-conserving).
+        if let Some(d) = ctl.dispatch_next() {
+            run_dispatch(
+                d, &mut ctl, &mut slots, &mut free, &mut profiler,
+                engine.as_mut(), &ctx, &shared, &door,
+            );
+            continue;
+        }
+
+        // ---- idle: retry deferred work, exit when told and drained,
+        // else wait briefly for a submission.
+        if !waiting.is_empty() {
+            continue;
+        }
+        let stopping =
+            disconnected || !door.running.load(Ordering::SeqCst);
+        if stopping && ctl.drained() {
+            break;
+        }
+        match rx.recv_timeout(std::time::Duration::from_millis(2)) {
+            Ok(m) => waiting.push(m),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                disconnected = true;
+            }
+        }
+    }
+    shared.metrics.lock().unwrap().online = *ctl.stats();
+}
+
+/// Admit a non-empty intake: predict output lengths, slot the entries,
+/// and replan. On admission error the whole intake fails back to its
+/// clients (the controller rejects oversize-KV jobs as a unit).
+#[allow(clippy::too_many_arguments)]
+fn admit_intake(
+    intake: Vec<SubmitMsg>,
+    ctl: &mut WaveController,
+    slots: &mut Vec<Option<Entry>>,
+    free: &mut Vec<usize>,
+    profiler: &mut RequestProfiler,
+    rng: &mut Rng,
+    engine: &mut dyn Engine,
+    ctx: &ShardCtx,
+    shared: &ShardShared,
+    door: &DoorShared,
+) {
+    engine.advance_to(util::now_ms());
+    let mut jobs: Vec<Job> = Vec::with_capacity(intake.len());
+    let mut arrs: Vec<f64> = Vec::with_capacity(intake.len());
+    let mut new_slots: Vec<usize> = Vec::with_capacity(intake.len());
+    for m in intake {
+        let predicted = profiler
+            .predict_output(
+                m.request.task,
+                rng,
+                ctx.max_total_tokens / 2,
+            )
+            .min(m.request.output_len.max(1));
+        let slot = alloc(
+            slots,
+            free,
+            Entry {
+                request: m.request,
+                stream: m.stream,
+                events: m.events,
+                submit_ms: m.submit_ms,
+            },
+        );
+        let entry = slots[slot].as_ref().unwrap();
+        jobs.push(Job::from_request(slot, &entry.request, predicted));
+        arrs.push(m.submit_ms);
+        new_slots.push(slot);
+    }
+    let res = if ctx.opts.arrival_aware {
+        ctl.admit_at(&jobs, &arrs)
+    } else {
+        ctl.admit(&jobs)
+    };
+    match res {
+        Ok(_) => {
+            let now = util::now_ms();
+            let mut m = shared.metrics.lock().unwrap();
+            for &slot in &new_slots {
+                let entry = slots[slot].as_ref().unwrap();
+                m.admission.record(now - entry.submit_ms);
+                let _ = entry.events.send(StreamEvent::Admitted {
+                    id: entry.request.id,
+                    shard: ctx.shard,
+                    queue_ms: now - entry.submit_ms,
+                });
+            }
+            shared
+                .admitted
+                .fetch_add(new_slots.len() as u64, Ordering::SeqCst);
+        }
+        Err(e) => {
+            // Admission failed as a unit: fail every member back to its
+            // client rather than planning a fiction.
+            for &slot in &new_slots {
+                let entry = slots[slot].take().unwrap();
+                free.push(slot);
+                let _ = entry.events.send(StreamEvent::Failed {
+                    id: entry.request.id,
+                    error: e.to_string(),
+                });
+                shared.failed.fetch_add(1, Ordering::SeqCst);
+                door.inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Execute one dispatched batch: run it, relay step-trace token events
+/// to streaming subscribers, complete the members, reconcile drift.
+#[allow(clippy::too_many_arguments)]
+fn run_dispatch(
+    d: crate::coordinator::online::Dispatch,
+    ctl: &mut WaveController,
+    slots: &mut [Option<Entry>],
+    free: &mut Vec<usize>,
+    profiler: &mut RequestProfiler,
+    engine: &mut dyn Engine,
+    ctx: &ShardCtx,
+    shared: &ShardShared,
+    door: &DoorShared,
+) {
+    engine.advance_to(util::now_ms());
+    let batch: Vec<EngineRequest> = d
+        .jobs
+        .iter()
+        .map(|job| {
+            let r = &slots[job.req_idx].as_ref().unwrap().request;
+            EngineRequest {
+                id: r.id,
+                input_len: r.input_len,
+                max_new_tokens: r.output_len,
+                prompt: r.prompt.clone(),
+            }
+        })
+        .collect();
+    let wall_start = util::now_ms();
+    match engine.run_batch(&batch) {
+        Ok(items) => {
+            let wall_ms = util::now_ms() - wall_start;
+            // Streaming: drain the engine's step trace and fan tokens
+            // out to the batch members that asked for them.
+            if ctx.stream_tokens {
+                let mut subs: HashMap<u64, (&Sender<StreamEvent>, usize)> =
+                    HashMap::new();
+                for job in &d.jobs {
+                    let e = slots[job.req_idx].as_ref().unwrap();
+                    if e.stream {
+                        subs.insert(e.request.id, (&e.events, 0));
+                    }
+                }
+                for step in engine.take_step_events() {
+                    for id in step.emitted {
+                        if let Some((tx, index)) = subs.get_mut(&id) {
+                            let _ = tx.send(StreamEvent::Token {
+                                id,
+                                index: *index,
+                                t_ms: step.t_ms,
+                            });
+                            *index += 1;
+                        }
+                    }
+                }
+            }
+            let mut completions: Vec<Completion> =
+                Vec::with_capacity(items.len());
+            let mut tokens = 0u64;
+            let mut met_n = 0u64;
+            {
+                let mut m = shared.metrics.lock().unwrap();
+                for (job, item) in d.jobs.iter().zip(&items) {
+                    let entry = slots[job.req_idx].take().unwrap();
+                    free.push(job.req_idx);
+                    profiler
+                        .observe_output(entry.request.task, item.generated);
+                    let c =
+                        to_completion(&entry.request, item, job.output_len);
+                    m.e2e.record(c.e2e_ms);
+                    let met = c.slo_met();
+                    match m
+                        .per_class
+                        .iter_mut()
+                        .find(|(t, _, _)| *t == c.task)
+                    {
+                        Some(row) => {
+                            row.1 += 1;
+                            row.2 += met as usize;
+                        }
+                        None => {
+                            m.per_class.push((c.task, 1, met as usize))
+                        }
+                    }
+                    tokens += c.generated as u64;
+                    met_n += met as u64;
+                    let _ = entry.events.send(StreamEvent::Done {
+                        id: c.id,
+                        completion: c.clone(),
+                    });
+                    completions.push(c);
+                }
+            }
+            let n = items.len() as u64;
+            shared.served.fetch_add(n, Ordering::SeqCst);
+            shared.met.fetch_add(met_n, Ordering::SeqCst);
+            shared.tokens_out.fetch_add(tokens, Ordering::SeqCst);
+            // per-item drain EWMA -> the door's retry_after hint
+            if n > 0 {
+                let sample = (wall_ms / n as f64).max(0.0);
+                let prev = f64::from_bits(
+                    shared.drain_ewma_ms_bits.load(Ordering::SeqCst),
+                );
+                let next = if prev > 0.0 && prev.is_finite() {
+                    DRAIN_EWMA_ALPHA * sample
+                        + (1.0 - DRAIN_EWMA_ALPHA) * prev
+                } else {
+                    sample
+                };
+                shared
+                    .drain_ewma_ms_bits
+                    .store(next.to_bits(), Ordering::SeqCst);
+            }
+            let drift = ctl.reconcile(&completions, engine.now_ms());
+            if ctx.opts.replan_drift_ms > 0.0
+                && drift.abs() >= ctx.opts.replan_drift_ms
+            {
+                ctl.replan_from_drift();
+            }
+            shared.metrics.lock().unwrap().online = *ctl.stats();
+            door.inflight.fetch_sub(n, Ordering::SeqCst);
+        }
+        Err(e) => {
+            for job in &d.jobs {
+                let entry = slots[job.req_idx].take().unwrap();
+                free.push(job.req_idx);
+                let _ = entry.events.send(StreamEvent::Failed {
+                    id: entry.request.id,
+                    error: e.to_string(),
+                });
+                shared.failed.fetch_add(1, Ordering::SeqCst);
+                door.inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}

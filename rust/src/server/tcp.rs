@@ -1,0 +1,380 @@
+//! Single-threaded non-blocking TCP reactor over the [`FrontDoor`].
+//!
+//! One thread serves every connection — no thread-per-connection, no
+//! blocking reads. Each tick the reactor accepts new sockets, drains
+//! readable bytes into per-connection buffers, handles complete
+//! JSON-lines, polls each connection's pending [`StreamHandle`]s for
+//! events (forwarding them as protocol frames), and flushes write
+//! buffers with partial-write carry-over. Clients that merely submitted
+//! (no `"stream":true`) get exactly one reply line — the completion —
+//! so the wire behaviour of the old blocking server is preserved while
+//! the server no longer spends a thread per idle connection.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::server::front::{
+    FrontDoor, StreamEvent, StreamHandle, SubmitError, TryNext,
+};
+use crate::server::protocol::{
+    admitted_json, completion_to_json, done_json, error_json, failed_json,
+    parse_generate, parse_generate_opts, reject_saturated_json, token_json,
+};
+use crate::util::json::Json;
+
+/// Handle to the running reactor thread.
+pub struct TcpServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Ask the reactor to exit and join it. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Whether the reactor already exited (a client sent `shutdown`).
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One live connection's state.
+struct Conn {
+    stream: TcpStream,
+    /// Read buffer; complete lines are consumed from the front.
+    rbuf: Vec<u8>,
+    /// Write buffer; flushed as the socket accepts bytes.
+    wbuf: Vec<u8>,
+    /// In-flight requests submitted by this connection.
+    subs: Vec<Sub>,
+    /// Connection id — the default routing session.
+    id: u64,
+    closed: bool,
+}
+
+struct Sub {
+    handle: StreamHandle,
+    /// Client asked for streaming frames.
+    stream: bool,
+    /// Terminal frame written; the sub can be dropped.
+    done: bool,
+}
+
+/// Start the reactor on `bind` (e.g. `127.0.0.1:0` for an ephemeral
+/// port). The door is shared — callers shut it down separately after
+/// stopping the reactor.
+pub fn serve_tcp(door: Arc<FrontDoor>, bind: &str) -> Result<TcpServer> {
+    let listener = TcpListener::bind(bind)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let reactor_stop = stop.clone();
+    let join = std::thread::Builder::new()
+        .name("tcp-reactor".into())
+        .spawn(move || reactor(listener, door, reactor_stop))?;
+    Ok(TcpServer { addr, stop, join: Some(join) })
+}
+
+fn reactor(
+    listener: TcpListener,
+    door: Arc<FrontDoor>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut next_conn_id = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        let mut busy = false;
+        // ---- accept
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    conns.push(Conn {
+                        stream,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        subs: Vec::new(),
+                        id: next_conn_id,
+                        closed: false,
+                    });
+                    next_conn_id += 1;
+                    busy = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    break
+                }
+                Err(_) => break,
+            }
+        }
+        // ---- per-connection: read, handle lines, pump events, flush
+        for conn in conns.iter_mut() {
+            busy |= read_into(conn);
+            while let Some(line) = take_line(&mut conn.rbuf) {
+                handle_line(&door, conn, &line, &stop);
+                busy = true;
+            }
+            busy |= pump_events(conn);
+            busy |= flush(conn);
+        }
+        conns.retain(|c| !c.closed);
+        if !busy {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}
+
+/// Drain readable bytes; returns whether anything was read.
+fn read_into(conn: &mut Conn) -> bool {
+    let mut any = false;
+    let mut buf = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.closed = true;
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&buf[..n]);
+                any = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.closed = true;
+                break;
+            }
+        }
+    }
+    any
+}
+
+/// Pop one complete line (without the newline) off the read buffer.
+fn take_line(rbuf: &mut Vec<u8>) -> Option<String> {
+    let pos = rbuf.iter().position(|&b| b == b'\n')?;
+    let line: Vec<u8> = rbuf.drain(..=pos).collect();
+    Some(String::from_utf8_lossy(&line[..pos]).into_owned())
+}
+
+fn push_frame(conn: &mut Conn, v: &Json) {
+    conn.wbuf.extend_from_slice(v.to_string_compact().as_bytes());
+    conn.wbuf.push(b'\n');
+}
+
+fn handle_line(
+    door: &Arc<FrontDoor>,
+    conn: &mut Conn,
+    line: &str,
+    stop: &AtomicBool,
+) {
+    if line.trim().is_empty() {
+        return;
+    }
+    let msg = match Json::parse(line) {
+        Ok(m) => m,
+        Err(e) => {
+            push_frame(conn, &error_json(400, &format!("bad json: {e}")));
+            return;
+        }
+    };
+    match msg.get("op").as_str() {
+        Some("generate") => {
+            // The front door assigns the real id; 0 is a placeholder.
+            let request =
+                match parse_generate(&msg, 0, door.max_total_tokens()) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        push_frame(conn, &error_json(400, &e.to_string()));
+                        return;
+                    }
+                };
+            let opts = parse_generate_opts(&msg);
+            let session = opts.session.unwrap_or(conn.id);
+            match door.submit(session, request, opts.stream) {
+                Ok(handle) => conn.subs.push(Sub {
+                    handle,
+                    stream: opts.stream,
+                    done: false,
+                }),
+                Err(SubmitError::Saturated { retry_after_ms }) => {
+                    push_frame(
+                        conn,
+                        &reject_saturated_json(retry_after_ms),
+                    );
+                }
+                Err(SubmitError::Invalid(e)) => {
+                    push_frame(conn, &error_json(400, &e));
+                }
+                Err(SubmitError::ShuttingDown) => {
+                    push_frame(conn, &error_json(503, "shutting down"));
+                }
+            }
+        }
+        Some("stats") => push_frame(conn, &door.stats_json()),
+        Some("shutdown") => {
+            push_frame(conn, &Json::obj(vec![("ok", Json::Bool(true))]));
+            stop.store(true, Ordering::SeqCst);
+        }
+        other => push_frame(
+            conn,
+            &error_json(400, &format!("unknown op {other:?}")),
+        ),
+    }
+}
+
+/// Forward pending stream events as frames; returns whether any event
+/// was handled.
+fn pump_events(conn: &mut Conn) -> bool {
+    let mut any = false;
+    for sub in conn.subs.iter_mut() {
+        loop {
+            match sub.handle.try_next() {
+                TryNext::Event(ev) => {
+                    any = true;
+                    match ev {
+                        StreamEvent::Admitted { id, shard, queue_ms } => {
+                            if sub.stream {
+                                let f = admitted_json(id, shard, queue_ms);
+                                conn.wbuf.extend_from_slice(
+                                    f.to_string_compact().as_bytes(),
+                                );
+                                conn.wbuf.push(b'\n');
+                            }
+                        }
+                        StreamEvent::Token { id, index, t_ms } => {
+                            if sub.stream {
+                                let f = token_json(id, index, t_ms);
+                                conn.wbuf.extend_from_slice(
+                                    f.to_string_compact().as_bytes(),
+                                );
+                                conn.wbuf.push(b'\n');
+                            }
+                        }
+                        StreamEvent::Done { completion, .. } => {
+                            let f = if sub.stream {
+                                done_json(&completion)
+                            } else {
+                                completion_to_json(&completion)
+                            };
+                            conn.wbuf.extend_from_slice(
+                                f.to_string_compact().as_bytes(),
+                            );
+                            conn.wbuf.push(b'\n');
+                            sub.done = true;
+                        }
+                        StreamEvent::Failed { id, error } => {
+                            let f = failed_json(id, &error);
+                            conn.wbuf.extend_from_slice(
+                                f.to_string_compact().as_bytes(),
+                            );
+                            conn.wbuf.push(b'\n');
+                            sub.done = true;
+                        }
+                    }
+                    if sub.done {
+                        break;
+                    }
+                }
+                TryNext::Empty => break,
+                TryNext::Closed => {
+                    // No terminal event arrived — a server-side drop.
+                    if !sub.done {
+                        let f = failed_json(
+                            sub.handle.id,
+                            "stream closed without completion",
+                        );
+                        conn.wbuf.extend_from_slice(
+                            f.to_string_compact().as_bytes(),
+                        );
+                        conn.wbuf.push(b'\n');
+                        sub.done = true;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    conn.subs.retain(|s| !s.done);
+    any
+}
+
+/// Flush as much of the write buffer as the socket accepts; returns
+/// whether bytes moved.
+fn flush(conn: &mut Conn) -> bool {
+    if conn.wbuf.is_empty() {
+        return false;
+    }
+    match conn.stream.write(&conn.wbuf) {
+        Ok(0) => {
+            conn.closed = true;
+            false
+        }
+        Ok(n) => {
+            conn.wbuf.drain(..n);
+            true
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => false,
+        Err(_) => {
+            conn.closed = true;
+            false
+        }
+    }
+}
+
+/// Minimal blocking client for the JSON-lines protocol (tests, examples,
+/// and the CLI's smoke path).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one message line.
+    pub fn send(&mut self, msg: &Json) -> Result<()> {
+        let mut text = msg.to_string_compact();
+        text.push('\n');
+        self.writer.write_all(text.as_bytes())?;
+        Ok(())
+    }
+
+    /// Block for the next reply line.
+    pub fn next_line(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(anyhow!("connection closed"));
+        }
+        Json::parse(&line).map_err(|e| anyhow!("bad reply: {e}"))
+    }
+
+    /// Send one request, wait for one reply line.
+    pub fn call(&mut self, msg: &Json) -> Result<Json> {
+        self.send(msg)?;
+        self.next_line()
+    }
+}

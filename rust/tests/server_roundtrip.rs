@@ -1,36 +1,43 @@
-//! Integration: TCP JSON-lines server over simulated instances.
+//! Integration: TCP JSON-lines reactor over the sharded front door.
+
+use std::sync::Arc;
 
 use slo_serve::config::profiles::by_name;
-use slo_serve::coordinator::policies::Policy;
-use slo_serve::coordinator::priority::annealing::SaParams;
-use slo_serve::engine::instance::InstanceHandle;
 use slo_serve::engine::sim::SimEngine;
-use slo_serve::server::{start, Client, ServerConfig};
+use slo_serve::engine::Engine;
+use slo_serve::server::{
+    serve_tcp, Client, FrontDoor, FrontDoorConfig, TcpServer,
+};
 use slo_serve::util::json::Json;
 
-fn boot(n_instances: usize) -> slo_serve::server::ServerHandle {
+fn boot(shards: usize) -> (TcpServer, Arc<FrontDoor>) {
     let profile = by_name("qwen7b-v100x2-vllm").unwrap();
-    let instances: Vec<InstanceHandle> = (0..n_instances)
-        .map(|i| {
-            InstanceHandle::spawn(
-                i,
-                Box::new(SimEngine::new(profile.clone(), 4, i as u64)),
-            )
+    let mut cfg =
+        FrontDoorConfig::new(profile.truth, profile.max_total_tokens);
+    cfg.shards = shards;
+    cfg.queue_depth = 64;
+    cfg.stream_tokens = true;
+    cfg.sa.max_batch = 4;
+    cfg.sa.iters_per_temp = 5;
+    let engines: Vec<Box<dyn Engine + Send>> = (0..shards)
+        .map(|s| {
+            Box::new(SimEngine::new(profile.clone(), 4, s as u64))
+                as Box<dyn Engine + Send>
         })
         .collect();
-    let cfg = ServerConfig {
-        policy: Policy::SloAware(SaParams::with_max_batch(4)),
-        predictor: profile.truth,
-        window_ms: 10,
-        max_batch: 4,
-        max_total_tokens: profile.max_total_tokens,
-    };
-    start(cfg, instances).unwrap()
+    let door = FrontDoor::start(cfg, engines).unwrap();
+    let server = serve_tcp(door.clone(), "127.0.0.1:0").unwrap();
+    (server, door)
+}
+
+fn teardown(mut server: TcpServer, door: Arc<FrontDoor>) {
+    server.stop();
+    door.shutdown();
 }
 
 #[test]
 fn generate_roundtrip() {
-    let server = boot(1);
+    let (server, door) = boot(1);
     let mut client = Client::connect(server.addr).unwrap();
     let reply = client
         .call(
@@ -44,12 +51,91 @@ fn generate_roundtrip() {
     assert!(reply.get("e2e_ms").as_f64().unwrap() > 0.0);
     assert!(reply.get("ttft_ms").as_f64().unwrap() > 0.0);
     assert_eq!(reply.get("generated").as_usize(), Some(10));
-    server.shutdown();
+    teardown(server, door);
+}
+
+#[test]
+fn streaming_frames_in_order() {
+    let (server, door) = boot(1);
+    let mut client = Client::connect(server.addr).unwrap();
+    client
+        .send(
+            &Json::parse(
+                r#"{"op":"generate","task":"chat","input_len":64,
+                    "max_tokens":8,"stream":true}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+    let first = client.next_line().unwrap();
+    assert_eq!(first.get("event").as_str(), Some("admitted"), "{first}");
+    assert!(first.get("queue_ms").as_f64().unwrap() >= 0.0);
+    let id = first.get("id").as_usize().unwrap();
+    let mut tokens = 0usize;
+    let done = loop {
+        let frame = client.next_line().unwrap();
+        match frame.get("event").as_str() {
+            Some("token") => {
+                assert_eq!(frame.get("id").as_usize(), Some(id));
+                assert_eq!(
+                    frame.get("index").as_usize(),
+                    Some(tokens),
+                    "token indices must be sequential"
+                );
+                assert!(frame.get("t_ms").as_f64().unwrap() >= 0.0);
+                tokens += 1;
+            }
+            Some("done") => break frame,
+            other => panic!("unexpected frame {other:?}: {frame}"),
+        }
+    };
+    assert_eq!(done.get("ok"), &Json::Bool(true), "{done}");
+    assert_eq!(done.get("id").as_usize(), Some(id));
+    let generated = done.get("generated").as_usize().unwrap();
+    assert_eq!(
+        tokens, generated,
+        "one token frame per generated token"
+    );
+    assert_eq!(generated, 8);
+    teardown(server, door);
+}
+
+#[test]
+fn malformed_requests_rejected() {
+    let (server, door) = boot(1);
+    let mut client = Client::connect(server.addr).unwrap();
+    // not an object with an op
+    let reply = client.call(&Json::str("not an op")).unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    assert_eq!(reply.get("code").as_i64(), Some(400));
+    // missing fields
+    let reply = client
+        .call(&Json::parse(r#"{"op":"generate"}"#).unwrap())
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    // unknown op
+    let reply = client
+        .call(&Json::parse(r#"{"op":"fly"}"#).unwrap())
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    // oversized request — rejected by the door before any queue
+    let reply = client
+        .call(
+            &Json::parse(
+                r#"{"op":"generate","input_len":999999,"max_tokens":10}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(false));
+    assert_eq!(reply.get("code").as_i64(), Some(400));
+    assert_eq!(door.door_stats().accepted, 0);
+    teardown(server, door);
 }
 
 #[test]
 fn stats_accumulate() {
-    let server = boot(2);
+    let (server, door) = boot(2);
     let mut a = Client::connect(server.addr).unwrap();
     let mut b = Client::connect(server.addr).unwrap();
     for client in [&mut a, &mut b] {
@@ -66,43 +152,16 @@ fn stats_accumulate() {
     }
     let stats = a.call(&Json::parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
     assert_eq!(stats.get("served").as_usize(), Some(2));
+    assert_eq!(stats.get("accepted").as_usize(), Some(2));
+    assert_eq!(stats.get("failed").as_usize(), Some(0));
     assert!(stats.get("attainment").as_f64().unwrap() > 0.0);
-    server.shutdown();
+    assert!(stats.get("e2e_ms").get("p50").as_f64().unwrap() > 0.0);
+    teardown(server, door);
 }
 
 #[test]
-fn malformed_requests_rejected() {
-    let server = boot(1);
-    let mut client = Client::connect(server.addr).unwrap();
-    // bad json
-    let reply = client.call(&Json::str("not an op")).unwrap();
-    assert_eq!(reply.get("ok"), &Json::Bool(false));
-    // missing fields
-    let reply = client
-        .call(&Json::parse(r#"{"op":"generate"}"#).unwrap())
-        .unwrap();
-    assert_eq!(reply.get("ok"), &Json::Bool(false));
-    // unknown op
-    let reply = client
-        .call(&Json::parse(r#"{"op":"fly"}"#).unwrap())
-        .unwrap();
-    assert_eq!(reply.get("ok"), &Json::Bool(false));
-    // oversized request
-    let reply = client
-        .call(
-            &Json::parse(
-                r#"{"op":"generate","input_len":999999,"max_tokens":10}"#,
-            )
-            .unwrap(),
-        )
-        .unwrap();
-    assert_eq!(reply.get("ok"), &Json::Bool(false));
-    server.shutdown();
-}
-
-#[test]
-fn concurrent_clients_batched_together() {
-    let server = boot(1);
+fn concurrent_clients_all_served() {
+    let (server, door) = boot(1);
     let addr = server.addr;
     let threads: Vec<_> = (0..4)
         .map(|_| {
@@ -118,14 +177,27 @@ fn concurrent_clients_batched_together() {
             })
         })
         .collect();
-    let mut max_batch_seen = 0;
     for t in threads {
         let reply = t.join().unwrap();
         assert_eq!(reply.get("ok"), &Json::Bool(true), "{reply}");
-        max_batch_seen =
-            max_batch_seen.max(reply.get("batch_size").as_usize().unwrap());
+        assert_eq!(reply.get("generated").as_usize(), Some(6));
     }
-    // at least some of the 4 concurrent requests shared a batch
-    assert!(max_batch_seen >= 2, "no batching observed");
-    server.shutdown();
+    assert!(door.wait_drained(30_000));
+    assert_eq!(door.served(), 4);
+    assert_eq!(door.door_stats().accepted, 4);
+    teardown(server, door);
+}
+
+#[test]
+fn shutdown_op_stops_reactor() {
+    let (mut server, door) = boot(1);
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client
+        .call(&Json::parse(r#"{"op":"shutdown"}"#).unwrap())
+        .unwrap();
+    assert_eq!(reply.get("ok"), &Json::Bool(true));
+    // the stop flag is set before the reply is flushed
+    assert!(server.stopped());
+    server.stop(); // joins the reactor thread
+    door.shutdown();
 }

@@ -1,0 +1,247 @@
+//! Serving front door integration (ISSUE 7 acceptance):
+//!
+//! * **invariant 12** — the single-shard, zero-queue replay
+//!   (`serve_trace` with `shards == 1`) reproduces `run_online_opts` on
+//!   the same recorded trace byte for byte: completions, deterministic
+//!   stats counters, final eval, and per-request predictions.
+//! * **sharded replay** — deterministic, and the shard partition covers
+//!   every request exactly once.
+//! * **live door** — a real 2-shard door (threads + bounded queues)
+//!   serves every accepted request and reports coherent counters.
+
+use slo_serve::config::profiles::by_name;
+use slo_serve::config::{OutputPrediction, SloTargets};
+use slo_serve::coordinator::online::{run_online_opts, OnlineStats};
+use slo_serve::coordinator::predict_outputs;
+use slo_serve::coordinator::profiler::RequestProfiler;
+use slo_serve::coordinator::request::{Completion, Request};
+use slo_serve::engine::sim::SimEngine;
+use slo_serve::engine::Engine;
+use slo_serve::server::{
+    serve_trace, session_shard, FrontDoor, FrontDoorConfig,
+};
+use slo_serve::util::rng::Rng;
+use slo_serve::workload::dataset::RequestFactory;
+use slo_serve::workload::trace::{ArrivalProcess, ClassMix};
+
+fn paper_predictor() -> slo_serve::coordinator::predictor::LatencyPredictor {
+    slo_serve::coordinator::predictor::LatencyPredictor::paper_table2()
+}
+
+fn poisson_trace(n: usize, seed: u64) -> (Vec<Request>, Vec<usize>) {
+    let mut factory =
+        RequestFactory::new(seed, SloTargets::default().scaled(0.6));
+    let mut trace_rng = Rng::new(seed ^ 0x0411_13E);
+    let trace = ClassMix::chat_code(
+        n,
+        ArrivalProcess::Poisson { rps: 10.0 },
+        ArrivalProcess::Poisson { rps: 6.0 },
+    )
+    .generate(&mut factory, &mut trace_rng);
+    let profiler = RequestProfiler::new();
+    let mut pred_rng = Rng::new(seed);
+    let outs = predict_outputs(
+        &trace,
+        &profiler,
+        OutputPrediction::Oracle { rel_err: 0.0 },
+        &mut pred_rng,
+        2000,
+    );
+    (trace, outs)
+}
+
+fn noiseless_engine(seed: u64) -> SimEngine {
+    let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+    profile.noise_std = 0.0;
+    SimEngine::new(profile, 4, seed)
+}
+
+fn door_cfg(shards: usize, seed: u64) -> FrontDoorConfig {
+    let mut cfg = FrontDoorConfig::new(paper_predictor(), 4096);
+    cfg.shards = shards;
+    cfg.sa.max_batch = 4;
+    cfg.sa.seed = seed;
+    cfg
+}
+
+/// Completion equality, bit for bit (f64 fields via `to_bits`).
+fn completion_bits(
+    c: &Completion,
+) -> (u64, usize, usize, usize, u64, u64, u64, u64, usize) {
+    (
+        c.id,
+        c.input_len,
+        c.predicted_lo,
+        c.generated,
+        c.e2e_ms.to_bits(),
+        c.ttft_ms.to_bits(),
+        c.tpot_ms.to_bits(),
+        c.wait_ms.to_bits(),
+        c.batch_size,
+    )
+}
+
+/// The deterministic subset of [`OnlineStats`]: everything except the
+/// wall-clock timing accumulators.
+#[allow(clippy::type_complexity)]
+fn stats_bits(
+    s: &OnlineStats,
+) -> (usize, usize, usize, usize, usize, usize, usize, u64, usize, u64, usize)
+{
+    (
+        s.admitted,
+        s.replans,
+        s.budget_replans,
+        s.sa_evals,
+        s.dispatched_batches,
+        s.dispatched_jobs,
+        s.drift_replans,
+        s.max_abs_drift_ms.to_bits(),
+        s.reconciled_jobs,
+        s.lo_abs_divergence_sum.to_bits(),
+        s.deferrals,
+    )
+}
+
+/// Invariant 12: `serve_trace` at one shard IS `run_online_opts`.
+#[test]
+fn single_shard_replay_equals_run_online() {
+    for seed in [3u64, 42] {
+        let (trace, outs) = poisson_trace(20, seed);
+        let cfg = door_cfg(1, seed);
+
+        let mut direct_engine = noiseless_engine(seed);
+        let direct = run_online_opts(
+            &trace,
+            &outs,
+            &mut direct_engine,
+            &cfg.predictor,
+            &cfg.sa,
+            cfg.strategy,
+            cfg.opts,
+        )
+        .unwrap();
+
+        let mut engines: Vec<Box<dyn Engine + Send>> =
+            vec![Box::new(noiseless_engine(seed))];
+        let (completions, outcomes) =
+            serve_trace(&cfg, &trace, &outs, &mut engines).unwrap();
+
+        assert_eq!(completions.len(), direct.completions.len());
+        for (a, b) in completions.iter().zip(&direct.completions) {
+            assert_eq!(
+                completion_bits(a),
+                completion_bits(b),
+                "seed {seed}: completion diverged"
+            );
+        }
+        assert_eq!(outcomes.len(), 1);
+        let (shard, outcome) = &outcomes[0];
+        assert_eq!(*shard, 0);
+        assert_eq!(outcome.seed, direct.seed, "shard 0 runs the base seed");
+        assert_eq!(stats_bits(&outcome.stats), stats_bits(&direct.stats));
+        assert_eq!(
+            outcome.final_eval, direct.final_eval,
+            "seed {seed}: final eval diverged"
+        );
+        assert_eq!(outcome.predicted.len(), direct.predicted.len());
+        for (a, b) in outcome.predicted.iter().zip(&direct.predicted) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.wait_ms.to_bits(), b.wait_ms.to_bits());
+            assert_eq!(a.e2e_ms.to_bits(), b.e2e_ms.to_bits());
+        }
+    }
+}
+
+/// Sharded replay: deterministic across runs, and the hash partition
+/// covers every request exactly once.
+#[test]
+fn sharded_replay_deterministic_and_complete() {
+    let seed = 11u64;
+    let (trace, outs) = poisson_trace(24, seed);
+    let run = || {
+        let cfg = door_cfg(2, seed);
+        let mut engines: Vec<Box<dyn Engine + Send>> = vec![
+            Box::new(noiseless_engine(seed)),
+            Box::new(noiseless_engine(seed ^ 0xE531_7AB1)),
+        ];
+        serve_trace(&cfg, &trace, &outs, &mut engines).unwrap()
+    };
+    let (ca, oa) = run();
+    let (cb, ob) = run();
+
+    // complete: merged ids are exactly the trace's ids, each once
+    let mut ids: Vec<u64> = ca.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), trace.len(), "every request served once");
+
+    // each shard only saw its own partition
+    for (s, outcome) in &oa {
+        for c in &outcome.completions {
+            assert_eq!(session_shard(c.id, 2), *s);
+        }
+    }
+
+    // deterministic
+    assert_eq!(ca.len(), cb.len());
+    for (a, b) in ca.iter().zip(&cb) {
+        assert_eq!(completion_bits(a), completion_bits(b));
+    }
+    assert_eq!(oa.len(), ob.len());
+    for ((sa_, a), (sb, b)) in oa.iter().zip(&ob) {
+        assert_eq!(sa_, sb);
+        assert_eq!(stats_bits(&a.stats), stats_bits(&b.stats));
+    }
+}
+
+/// Live 2-shard door: every accepted request completes, counters add up.
+#[test]
+fn live_door_serves_every_accepted_request() {
+    let seed = 7u64;
+    let mut cfg = door_cfg(2, seed);
+    cfg.queue_depth = 64;
+    cfg.sa.iters_per_temp = 5;
+    let max_total = cfg.max_total_tokens;
+    let engines: Vec<Box<dyn Engine + Send>> = (0..2)
+        .map(|s| {
+            Box::new(noiseless_engine(seed ^ s)) as Box<dyn Engine + Send>
+        })
+        .collect();
+    let door = FrontDoor::start(cfg, engines).unwrap();
+
+    let mut factory =
+        RequestFactory::new(seed, SloTargets::default().scaled(10.0));
+    let mut handles = Vec::new();
+    for (i, r) in factory.mixed_wave(32).into_iter().enumerate() {
+        assert!(r.input_len + r.output_len <= max_total);
+        handles.push(door.submit(i as u64, r, false).unwrap());
+    }
+    assert!(door.wait_drained(60_000), "door must drain");
+    let d = door.door_stats();
+    assert_eq!(d.accepted, 32);
+    assert_eq!(d.rejected, 0);
+    assert_eq!(d.invalid, 0);
+    assert_eq!(d.inflight, 0);
+    assert!(d.peak_inflight >= 1);
+    assert_eq!(door.served(), 32, "served == accepted");
+
+    // both shards saw traffic (32 sessions hash across 2 shards)
+    let shards_hit: std::collections::HashSet<usize> =
+        handles.iter().map(|h| h.shard).collect();
+    assert_eq!(shards_hit.len(), 2);
+
+    for h in handles {
+        let c = h.wait_done().expect("request must complete");
+        assert!(c.generated >= 1);
+        assert!(c.e2e_ms > 0.0);
+    }
+    door.shutdown();
+    let stats = door.stats_json();
+    assert_eq!(stats.get("served").as_usize(), Some(32));
+    assert_eq!(stats.get("failed").as_usize(), Some(0));
+    assert!(stats.get("attainment").as_f64().unwrap() > 0.0);
+    assert!(
+        stats.get("admission_ms").get("count").as_usize().unwrap() >= 32
+    );
+}
