@@ -1,0 +1,107 @@
+//! Optimality-gap walkthrough: how far from *provably optimal* are the
+//! SA search and the cheap index/threshold baselines?
+//!
+//! Runs the gap matrix over divergence σ ∈ {0, 0.2, 0.5} × KV mode
+//! {Hard, Unlimited} at N = 10 and prints per-regime certified gaps —
+//! every number is measured against a branch-and-bound bound
+//! ([`slo_serve::coordinator::gap`]), so "0.00%" means *proven* optimal,
+//! not "matched another heuristic". The σ axis enters through the KV
+//! 0.9-quantile reservation: larger σ charges bigger footprints against
+//! the Hard pool while Unlimited rows are σ-invariant. The last column
+//! flags regimes where an index policy matched the search — the signal a
+//! policy router would use to skip SA there.
+//!
+//!     cargo run --release --example gap_walkthrough
+
+use slo_serve::bench::gap::{run_matrix, summarize, GapConfig, GapKv, SloMix};
+use slo_serve::coordinator::kv::KvPhaseModel;
+use slo_serve::metrics::Table;
+
+fn main() {
+    println!(
+        "optimality-gap walkthrough: σ x KV mode at N = 10 (certified \
+         bounds)\n"
+    );
+    let cfg = GapConfig {
+        ns: vec![10],
+        seeds: vec![1, 2, 3],
+        mixes: vec![SloMix::Mixed],
+        sigmas: vec![0.0, 0.2, 0.5],
+        kvs: vec![
+            (GapKv::Hard, KvPhaseModel::Reserve),
+            (GapKv::Unlimited, KvPhaseModel::Reserve),
+        ],
+        ..GapConfig::default()
+    };
+    let rows = run_matrix(&cfg);
+
+    let mut t = Table::new(&[
+        "sigma",
+        "kv",
+        "closed",
+        "SA gap",
+        "best baseline",
+        "baseline gap",
+        "idx>=SA",
+    ]);
+    for &sigma in &cfg.sigmas {
+        for &(kv, _) in &cfg.kvs {
+            // aggregate the seeds of one (σ, kv) regime
+            let cell: Vec<_> = rows
+                .iter()
+                .filter(|r| r.sigma == sigma && r.kv.name() == kv.name())
+                .collect();
+            let closed = cell.iter().filter(|r| r.closed).count();
+            let k = cell.len() as f64;
+            let sa_gap: f64 =
+                cell.iter().map(|r| r.sa.gap).sum::<f64>() / k;
+            // per-seed best baseline, averaged
+            let mut bl_gap = 0.0;
+            let mut bl_names: Vec<&str> = Vec::new();
+            for r in &cell {
+                let best = r
+                    .baselines
+                    .iter()
+                    .max_by(|a, b| a.g.total_cmp(&b.g))
+                    .expect("baselines non-empty");
+                bl_gap += best.gap;
+                if !bl_names.contains(&best.name) {
+                    bl_names.push(best.name);
+                }
+            }
+            bl_gap /= k;
+            let idx_wins =
+                cell.iter().filter(|r| r.index_beats_sa).count();
+            t.row(vec![
+                format!("{sigma:.1}"),
+                kv.name().to_string(),
+                format!("{closed}/{}", cell.len()),
+                format!("{:.2}%", 100.0 * sa_gap),
+                bl_names.join("/"),
+                format!("{:.2}%", 100.0 * bl_gap),
+                if idx_wins > 0 {
+                    format!("{idx_wins}/{}", cell.len())
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    let s = summarize(&rows);
+    println!(
+        "\n{} cells, {} closed exactly; worst SA certified gap {:.2}% \
+         (gated cells); index policies matched/beat SA in {} cell(s).",
+        s.cells,
+        s.closed,
+        100.0 * s.max_gated_sa_gap,
+        s.index_beats_sa_cells
+    );
+    println!(
+        "reading the table: gaps are against branch-and-bound bounds — a \
+         closed cell's bound IS the optimum, so its gap is exact \
+         suboptimality, not heuristic-vs-heuristic distance."
+    );
+    println!("gap_walkthrough OK");
+}

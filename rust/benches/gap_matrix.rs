@@ -1,0 +1,48 @@
+//! Optimality-gap bench matrix: SA and index/threshold baselines scored
+//! against branch-and-bound certificates across
+//! {N, SLO mix, divergence σ, KV mode, KV phase} × seeds.
+//!
+//! Emits `BENCH_gap.json` (cargo package root): one row per cell plus a
+//! summary block CI's gap gate reads (`max_gated_sa_gap` ≤ 0.05 over the
+//! rows where SA and the bound optimize the same problem). Matrix size is
+//! env-tunable for CI: `GAP_NS`, `GAP_SEEDS`, `GAP_MAX_BATCH`,
+//! `GAP_NODE_BUDGET`, `GAP_SIGMAS` (see [`slo_serve::bench::gap`]).
+//!
+//!     cargo bench --bench gap_matrix
+
+use slo_serve::bench::gap::{
+    render_table, report_json, run_matrix, summarize, GapConfig,
+};
+
+fn main() {
+    let cfg = GapConfig::from_env();
+    println!("== optimality-gap matrix: policies vs certified bounds ==");
+    println!(
+        "axes: N={:?} seeds={} mixes={} sigmas={:?} kv-variants={} \
+         max_batch={} node_budget={}\n",
+        cfg.ns,
+        cfg.seeds.len(),
+        cfg.mixes.len(),
+        cfg.sigmas,
+        cfg.kvs.len(),
+        cfg.max_batch,
+        cfg.node_budget
+    );
+
+    let rows = run_matrix(&cfg);
+    print!("{}", render_table(&rows));
+    let s = summarize(&rows);
+    println!(
+        "\n{} cells: {} closed exactly, max gated SA gap {:.3}%, \
+         index policy matched/beat SA in {}",
+        s.cells,
+        s.closed,
+        100.0 * s.max_gated_sa_gap,
+        s.index_beats_sa_cells
+    );
+
+    let doc = report_json(&cfg, &rows);
+    std::fs::write("BENCH_gap.json", format!("{}\n", doc.to_string_pretty()))
+        .expect("writing BENCH_gap.json");
+    println!("wrote BENCH_gap.json");
+}

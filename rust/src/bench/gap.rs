@@ -1,0 +1,592 @@
+//! Optimality-gap matrix: SA and baseline policies vs branch-and-bound
+//! certificates ([`crate::coordinator::gap`]).
+//!
+//! One *cell* of the matrix is a closed scheduling wave drawn from
+//! {N, SLO class mix, divergence σ, KV mode, KV phase model} × seed. For
+//! each cell the runner:
+//!
+//! 1. runs branch-and-bound to get the exact optimum or a certified
+//!    upper bound `bound_g` (hard KV constrains the search; soft and
+//!    unlimited modes certify against the KV-relaxed space);
+//! 2. runs SA (best of `sa_restarts` seeds at `sa_iters_per_temp`, the
+//!    golden-test configuration) through the same `Evaluator`/KV
+//!    machinery;
+//! 3. runs every cheap baseline (`fcfs`/`sjf`/`edf`/`mlfq`/
+//!    `slack-index`/`edf-threshold`);
+//! 4. emits a row of certified gaps (`(bound − g)/bound`, clamped at 0)
+//!    and wall-clock, flagging any regime where an index/threshold
+//!    policy beats the search (`index_beats_sa`) — the signal a future
+//!    policy router would switch on.
+//!
+//! The divergence σ axis enters through the **KV quantile reservation**
+//! column: footprints are charged at `lo_mult = exp(σ·Φ⁻¹(0.9))`
+//! ([`quantile_multiplier`]) while the latency objective keeps pricing
+//! the mean — so σ moves the Hard/Soft rows (tighter effective pools)
+//! and leaves Unlimited rows unchanged, mirroring how divergence reaches
+//! the planner in the serving path.
+//!
+//! `gated` marks rows where SA and the bound optimize the same problem
+//! (Unlimited and Hard modes); Soft rows trade raw `G` for an excess
+//! penalty, so their gap against the relaxed bound is diagnostic only
+//! and CI's ≤ 5 % SA-gap gate skips them.
+
+use crate::coordinator::gap::{branch_and_bound, certified_gap, BnbParams};
+use crate::coordinator::kv::{KvConfig, KvPhaseModel};
+use crate::coordinator::objective::{Evaluator, Job, Schedule};
+use crate::coordinator::policies::Policy;
+use crate::coordinator::predictor::{quantile_multiplier, LatencyPredictor};
+use crate::coordinator::priority::annealing::{priority_mapping, SaParams};
+use crate::coordinator::request::Slo;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// SLO class composition of a generated wave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloMix {
+    /// Every job carries an e2e-latency SLO (batch-style traffic).
+    E2eOnly,
+    /// Every job carries a TTFT+TPOT SLO (interactive traffic).
+    InteractiveOnly,
+    /// 50/50 split per job (the SLOs-Serve multi-SLO fixture).
+    Mixed,
+}
+
+impl SloMix {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloMix::E2eOnly => "e2e",
+            SloMix::InteractiveOnly => "interactive",
+            SloMix::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloMix> {
+        match s {
+            "e2e" => Some(SloMix::E2eOnly),
+            "interactive" => Some(SloMix::InteractiveOnly),
+            "mixed" => Some(SloMix::Mixed),
+            _ => None,
+        }
+    }
+}
+
+/// KV enforcement axis of the matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GapKv {
+    Unlimited,
+    Hard,
+    /// Soft penalty at the given weight.
+    Soft(f64),
+}
+
+impl GapKv {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GapKv::Unlimited => "unlimited",
+            GapKv::Hard => "hard",
+            GapKv::Soft(_) => "soft",
+        }
+    }
+}
+
+/// Matrix configuration (axes × search budgets).
+#[derive(Debug, Clone)]
+pub struct GapConfig {
+    pub ns: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub mixes: Vec<SloMix>,
+    pub sigmas: Vec<f64>,
+    pub kvs: Vec<(GapKv, KvPhaseModel)>,
+    pub max_batch: usize,
+    pub node_budget: usize,
+    /// SA restarts per cell (best result kept — the golden-test rule).
+    pub sa_restarts: u64,
+    pub sa_iters_per_temp: usize,
+}
+
+impl Default for GapConfig {
+    fn default() -> Self {
+        GapConfig {
+            ns: vec![6, 9, 12],
+            seeds: vec![1, 2, 3],
+            mixes: vec![SloMix::E2eOnly, SloMix::InteractiveOnly, SloMix::Mixed],
+            sigmas: vec![0.0, 0.5],
+            kvs: vec![
+                (GapKv::Unlimited, KvPhaseModel::Reserve),
+                (GapKv::Hard, KvPhaseModel::Reserve),
+                (GapKv::Hard, KvPhaseModel::Phased),
+                (GapKv::Soft(1.0), KvPhaseModel::Reserve),
+            ],
+            max_batch: 4,
+            node_budget: 400_000,
+            sa_restarts: 3,
+            sa_iters_per_temp: 400,
+        }
+    }
+}
+
+impl GapConfig {
+    /// Environment-variable overrides for CI-sized runs:
+    /// `GAP_NS` (comma list), `GAP_SEEDS` (count), `GAP_NODE_BUDGET`,
+    /// `GAP_MAX_BATCH`, `GAP_SIGMAS` (comma list). Unset keeps defaults.
+    pub fn from_env() -> GapConfig {
+        let mut cfg = GapConfig::default();
+        if let Ok(v) = std::env::var("GAP_NS") {
+            let ns: Vec<usize> =
+                v.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+            if !ns.is_empty() {
+                cfg.ns = ns;
+            }
+        }
+        if let Ok(v) = std::env::var("GAP_SEEDS") {
+            if let Ok(k) = v.trim().parse::<u64>() {
+                if k > 0 {
+                    cfg.seeds = (1..=k).collect();
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("GAP_NODE_BUDGET") {
+            if let Ok(b) = v.trim().parse::<usize>() {
+                cfg.node_budget = b;
+            }
+        }
+        if let Ok(v) = std::env::var("GAP_MAX_BATCH") {
+            if let Ok(b) = v.trim().parse::<usize>() {
+                if b > 0 {
+                    cfg.max_batch = b;
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("GAP_SIGMAS") {
+            let ss: Vec<f64> =
+                v.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+            if !ss.is_empty() {
+                cfg.sigmas = ss;
+            }
+        }
+        cfg
+    }
+}
+
+/// One policy's outcome inside a cell.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub name: &'static str,
+    pub g: f64,
+    /// Certified gap vs the cell's bound (`max(0, (bound − g)/bound)`).
+    pub gap: f64,
+    pub wall_ms: f64,
+}
+
+/// One row of `BENCH_gap.json`.
+#[derive(Debug, Clone)]
+pub struct GapRow {
+    pub n: usize,
+    pub seed: u64,
+    pub mix: SloMix,
+    pub sigma: f64,
+    pub kv: GapKv,
+    pub phase: KvPhaseModel,
+    pub max_batch: usize,
+    /// Certified upper bound on the optimal G for this cell's problem.
+    pub bound_g: f64,
+    /// Whether branch-and-bound closed the instance (bound == optimum).
+    pub closed: bool,
+    pub nodes: usize,
+    pub bnb_wall_ms: f64,
+    pub sa: PolicyOutcome,
+    pub baselines: Vec<PolicyOutcome>,
+    /// A cheap index/threshold policy matched or beat the SA result —
+    /// the regime a policy router would hand to the index policy.
+    pub index_beats_sa: bool,
+    /// SA and the bound optimize the same problem (Unlimited/Hard); the
+    /// CI SA-gap gate only applies to these rows.
+    pub gated: bool,
+}
+
+/// Generate one closed wave of `n` jobs for the given SLO mix (the
+/// scheduler-invariants generator, parameterized by class).
+pub fn gen_jobs(rng: &mut Rng, n: usize, mix: SloMix) -> Vec<Job> {
+    (0..n)
+        .map(|i| {
+            let interactive = match mix {
+                SloMix::E2eOnly => false,
+                SloMix::InteractiveOnly => true,
+                SloMix::Mixed => rng.chance(0.5),
+            };
+            Job {
+                req_idx: i,
+                input_len: 1 + rng.below(1500),
+                output_len: 1 + rng.below(400),
+                slo: if interactive {
+                    Slo::Interactive {
+                        ttft_ms: rng.uniform(500.0, 15_000.0),
+                        tpot_ms: rng.uniform(15.0, 60.0),
+                    }
+                } else {
+                    Slo::E2e { e2e_ms: rng.uniform(1_000.0, 60_000.0) }
+                },
+            }
+        })
+        .collect()
+}
+
+/// Build the cell's [`KvConfig`]: footprints charged at the σ-derived
+/// 0.9-quantile multiplier, and for binding modes a pool sized to ~75 %
+/// of the average FCFS batch demand (binding for packed batches) with a
+/// fits-alone floor (so the constrained problem stays feasible).
+pub fn kv_for(
+    jobs: &[Job],
+    kv: GapKv,
+    phase: KvPhaseModel,
+    sigma: f64,
+    max_batch: usize,
+) -> KvConfig {
+    let lo_mult = quantile_multiplier(sigma, 0.9);
+    match kv {
+        GapKv::Unlimited => KvConfig::UNLIMITED.with_lo_mult(lo_mult),
+        GapKv::Hard | GapKv::Soft(_) => {
+            let probe = KvConfig::hard(u64::MAX).with_lo_mult(lo_mult);
+            let blocks: Vec<u64> = jobs
+                .iter()
+                .map(|j| probe.job_blocks(j.input_len, j.output_len))
+                .collect();
+            let total: u64 = blocks.iter().sum();
+            let max_single = blocks.iter().copied().max().unwrap_or(1);
+            let num_batches = jobs.len().div_ceil(max_batch.max(1)) as u64;
+            let pool =
+                ((total * 3) / (4 * num_batches.max(1))).max(max_single);
+            let cfg = match kv {
+                GapKv::Hard => KvConfig::hard(pool),
+                GapKv::Soft(w) => KvConfig::soft(pool, w),
+                GapKv::Unlimited => unreachable!(),
+            };
+            cfg.with_phase(phase).with_lo_mult(lo_mult)
+        }
+    }
+}
+
+/// Run one cell: B&B certificate, best-of-restarts SA, every baseline.
+pub fn run_cell(
+    jobs: &[Job],
+    predictor: &LatencyPredictor,
+    cfg: &GapConfig,
+    seed: u64,
+    mix: SloMix,
+    sigma: f64,
+    kv: GapKv,
+    phase: KvPhaseModel,
+) -> GapRow {
+    let ev = Evaluator::new(jobs, predictor);
+    let kv_cfg = kv_for(jobs, kv, phase, sigma, cfg.max_batch);
+
+    let bnb = branch_and_bound(
+        &ev,
+        &BnbParams {
+            max_batch: cfg.max_batch,
+            node_budget: cfg.node_budget,
+            kv: kv_cfg,
+        },
+    );
+
+    // SA: best of `sa_restarts` derived seeds (the golden-test rule),
+    // raw G of the returned schedule.
+    let t_sa = crate::util::now_ms();
+    let mut sa_best: Option<(Schedule, f64)> = None;
+    for r in 0..cfg.sa_restarts.max(1) {
+        let params = SaParams {
+            max_batch: cfg.max_batch,
+            seed: seed ^ (0x5A ^ r).wrapping_mul(0x9E37_79B9),
+            iters_per_temp: cfg.sa_iters_per_temp,
+            kv: kv_cfg,
+            ..Default::default()
+        };
+        let res = priority_mapping(&ev, &params);
+        let g = ev.eval(&res.schedule).g;
+        let better = match &sa_best {
+            None => true,
+            Some((_, bg)) => g > *bg,
+        };
+        if better {
+            sa_best = Some((res.schedule, g));
+        }
+    }
+    let sa_wall = crate::util::now_ms() - t_sa;
+    let (_, sa_g) = sa_best.expect("at least one SA restart");
+    let sa = PolicyOutcome {
+        name: "slo-aware-sa",
+        g: sa_g,
+        gap: certified_gap(sa_g, bnb.bound_g),
+        wall_ms: sa_wall,
+    };
+
+    let baseline_policies = [
+        Policy::Fcfs,
+        Policy::Sjf,
+        Policy::Edf,
+        Policy::Mlfq,
+        Policy::SlackIndex,
+        Policy::EdfThreshold,
+    ];
+    let mut baselines = Vec::with_capacity(baseline_policies.len());
+    for p in baseline_policies {
+        let t0 = crate::util::now_ms();
+        let (s, _) = p.plan(&ev, cfg.max_batch);
+        let wall = crate::util::now_ms() - t0;
+        let g = ev.eval(&s).g;
+        baselines.push(PolicyOutcome {
+            name: p.name(),
+            g,
+            gap: certified_gap(g, bnb.bound_g),
+            wall_ms: wall,
+        });
+    }
+    let index_beats_sa = baselines
+        .iter()
+        .filter(|b| b.name == "slack-index" || b.name == "edf-threshold")
+        .any(|b| b.g >= sa.g);
+
+    GapRow {
+        n: jobs.len(),
+        seed,
+        mix,
+        sigma,
+        kv,
+        phase,
+        max_batch: cfg.max_batch,
+        bound_g: bnb.bound_g,
+        closed: bnb.closed,
+        nodes: bnb.nodes,
+        bnb_wall_ms: bnb.overhead_ms,
+        sa,
+        baselines,
+        index_beats_sa,
+        gated: !matches!(kv, GapKv::Soft(_)),
+    }
+}
+
+/// Sweep the full matrix. Jobs for a cell depend only on
+/// `(seed, n, mix)`, so every KV/σ variant scores the identical wave.
+pub fn run_matrix(cfg: &GapConfig) -> Vec<GapRow> {
+    let predictor = LatencyPredictor::paper_table2();
+    let mut rows = Vec::new();
+    for &n in &cfg.ns {
+        for &seed in &cfg.seeds {
+            for &mix in &cfg.mixes {
+                let mut rng = Rng::new(
+                    seed ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                let jobs = gen_jobs(&mut rng, n, mix);
+                for &sigma in &cfg.sigmas {
+                    for &(kv, phase) in &cfg.kvs {
+                        rows.push(run_cell(
+                            &jobs, &predictor, cfg, seed, mix, sigma, kv,
+                            phase,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Matrix-level aggregates (the numbers CI gates on).
+#[derive(Debug, Clone, Copy)]
+pub struct GapSummary {
+    pub cells: usize,
+    /// Cells branch-and-bound closed exactly.
+    pub closed: usize,
+    /// Worst SA gap over rows where SA and the bound optimize the same
+    /// problem (CI gates this at ≤ 5 %).
+    pub max_gated_sa_gap: f64,
+    /// Cells where an index/threshold policy matched or beat SA.
+    pub index_beats_sa_cells: usize,
+}
+
+pub fn summarize(rows: &[GapRow]) -> GapSummary {
+    let mut s = GapSummary {
+        cells: rows.len(),
+        closed: 0,
+        max_gated_sa_gap: 0.0,
+        index_beats_sa_cells: 0,
+    };
+    for r in rows {
+        s.closed += r.closed as usize;
+        s.index_beats_sa_cells += r.index_beats_sa as usize;
+        if r.gated && r.sa.gap > s.max_gated_sa_gap {
+            s.max_gated_sa_gap = r.sa.gap;
+        }
+    }
+    s
+}
+
+/// Human-readable matrix table (one line per cell).
+pub fn render_table(rows: &[GapRow]) -> String {
+    let mut t = crate::metrics::Table::new(&[
+        "n", "seed", "mix", "sigma", "kv", "phase", "bound G", "closed",
+        "SA gap", "best baseline", "bl gap", "idx>=SA",
+    ]);
+    for r in rows {
+        let best_bl = r
+            .baselines
+            .iter()
+            .max_by(|a, b| a.g.total_cmp(&b.g))
+            .expect("baselines non-empty");
+        t.row(vec![
+            r.n.to_string(),
+            r.seed.to_string(),
+            r.mix.name().to_string(),
+            format!("{:.1}", r.sigma),
+            r.kv.name().to_string(),
+            format!("{:?}", r.phase).to_lowercase(),
+            format!("{:.4e}", r.bound_g),
+            if r.closed { "yes" } else { "no" }.to_string(),
+            format!("{:.2}%", 100.0 * r.sa.gap),
+            best_bl.name.to_string(),
+            format!("{:.2}%", 100.0 * best_bl.gap),
+            if r.index_beats_sa { "YES" } else { "-" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// The full `BENCH_gap.json` document: config echo + rows + summary.
+pub fn report_json(cfg: &GapConfig, rows: &[GapRow]) -> Json {
+    let s = summarize(rows);
+    Json::obj(vec![
+        ("bench", Json::str("gap_matrix")),
+        ("max_batch", Json::num(cfg.max_batch as f64)),
+        ("node_budget", Json::num(cfg.node_budget as f64)),
+        ("sa_restarts", Json::num(cfg.sa_restarts as f64)),
+        ("sa_iters_per_temp", Json::num(cfg.sa_iters_per_temp as f64)),
+        ("rows", rows_json(rows)),
+        (
+            "summary",
+            Json::obj(vec![
+                ("cells", Json::num(s.cells as f64)),
+                ("closed", Json::num(s.closed as f64)),
+                ("max_gated_sa_gap", Json::num(s.max_gated_sa_gap)),
+                (
+                    "index_beats_sa_cells",
+                    Json::num(s.index_beats_sa_cells as f64),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn outcome_json(o: &PolicyOutcome) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(o.name)),
+        ("g", Json::num(o.g)),
+        ("gap", Json::num(o.gap)),
+        ("wall_ms", Json::num(o.wall_ms)),
+    ])
+}
+
+/// Serialize rows for `BENCH_gap.json`.
+pub fn rows_json(rows: &[GapRow]) -> Json {
+    Json::arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("n", Json::num(r.n as f64)),
+                    ("seed", Json::num(r.seed as f64)),
+                    ("mix", Json::str(r.mix.name())),
+                    ("sigma", Json::num(r.sigma)),
+                    ("kv", Json::str(r.kv.name())),
+                    (
+                        "kv_phase",
+                        Json::str(match r.phase {
+                            KvPhaseModel::Reserve => "reserve",
+                            KvPhaseModel::Phased => "phased",
+                        }),
+                    ),
+                    ("max_batch", Json::num(r.max_batch as f64)),
+                    ("bound_g", Json::num(r.bound_g)),
+                    ("closed", Json::Bool(r.closed)),
+                    ("nodes", Json::num(r.nodes as f64)),
+                    ("bnb_wall_ms", Json::num(r.bnb_wall_ms)),
+                    ("sa_g", Json::num(r.sa.g)),
+                    ("sa_gap", Json::num(r.sa.gap)),
+                    ("sa_wall_ms", Json::num(r.sa.wall_ms)),
+                    (
+                        "baselines",
+                        Json::arr(
+                            r.baselines.iter().map(outcome_json).collect(),
+                        ),
+                    ),
+                    ("index_beats_sa", Json::Bool(r.index_beats_sa)),
+                    ("gated", Json::Bool(r.gated)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_names_roundtrip() {
+        for mix in [SloMix::E2eOnly, SloMix::InteractiveOnly, SloMix::Mixed] {
+            assert_eq!(SloMix::parse(mix.name()), Some(mix));
+        }
+        assert_eq!(SloMix::parse("nope"), None);
+    }
+
+    #[test]
+    fn kv_for_pool_is_feasible_and_sigma_tightens() {
+        let mut rng = Rng::new(7);
+        let jobs = gen_jobs(&mut rng, 10, SloMix::Mixed);
+        let flat = kv_for(&jobs, GapKv::Hard, KvPhaseModel::Reserve, 0.0, 4);
+        assert!(flat.binding());
+        // every job fits alone (the B&B filter precondition)
+        for j in &jobs {
+            assert!(flat.fits_alone(flat.job_blocks(j.input_len, j.output_len)));
+        }
+        // σ > 0 reserves at the 0.9 quantile: strictly larger footprints
+        let tight = kv_for(&jobs, GapKv::Hard, KvPhaseModel::Reserve, 0.5, 4);
+        assert!(tight.lo_mult > flat.lo_mult);
+        let unlimited =
+            kv_for(&jobs, GapKv::Unlimited, KvPhaseModel::Reserve, 0.0, 4);
+        assert!(!unlimited.binding());
+    }
+
+    #[test]
+    fn single_cell_produces_consistent_row() {
+        let mut rng = Rng::new(3);
+        let jobs = gen_jobs(&mut rng, 6, SloMix::Mixed);
+        let pred = LatencyPredictor::paper_table2();
+        let cfg = GapConfig {
+            ns: vec![6],
+            seeds: vec![3],
+            sa_restarts: 2,
+            sa_iters_per_temp: 100,
+            node_budget: 200_000,
+            ..Default::default()
+        };
+        let row = run_cell(
+            &jobs,
+            &pred,
+            &cfg,
+            3,
+            SloMix::Mixed,
+            0.0,
+            GapKv::Unlimited,
+            KvPhaseModel::Reserve,
+        );
+        assert!(row.closed, "n=6 must close");
+        assert!(row.bound_g > 0.0);
+        // certified bound dominates every reported policy
+        assert!(row.sa.g <= row.bound_g + 1e-15);
+        for b in &row.baselines {
+            assert!(b.g <= row.bound_g + 1e-15, "{} beat the bound", b.name);
+            assert!(b.gap >= 0.0);
+        }
+        assert!(row.gated);
+        assert_eq!(row.baselines.len(), 6);
+    }
+}

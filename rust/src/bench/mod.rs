@@ -13,6 +13,8 @@
 //! 4. **Schedule + execute** — the selected policy against per-instance
 //!    engines, measured metrics out.
 
+pub mod gap;
+
 use anyhow::{anyhow, Result};
 
 use crate::config::profiles::{by_name, HardwareProfile};
@@ -96,6 +98,8 @@ pub fn policy_from_name(name: &str, sa: SaParams) -> Result<Policy> {
         "sjf" => Policy::Sjf,
         "edf" => Policy::Edf,
         "mlfq" => Policy::Mlfq,
+        "slack-index" => Policy::SlackIndex,
+        "edf-threshold" => Policy::EdfThreshold,
         "slo-aware-sa" => Policy::SloAware(sa),
         "slo-aware-exhaustive" => Policy::Exhaustive,
         other => return Err(anyhow!("unknown policy '{other}'")),

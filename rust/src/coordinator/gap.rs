@@ -1,0 +1,831 @@
+//! Branch-and-bound optimality certificates for the scheduling objective.
+//!
+//! The exhaustive strawman ([`crate::coordinator::priority::exhaustive`])
+//! enumerates `O(N!·2^N)` candidates and stops being feasible around
+//! N = 11. This module searches the same solution space as a depth-first
+//! branch-and-bound over *canonical* schedules — batches are built left to
+//! right, members within a batch in a fixed heuristic rank order — pruned
+//! by an **admissible upper bound** on the objective `G` (derived below).
+//! That pushes exact closure to N ≈ 12–14, and for instances the node
+//! budget cannot close it still returns a *certified* bound: the true
+//! optimum is guaranteed to lie in `[eval.g, bound_g]`.
+//!
+//! ## Search space
+//!
+//! A node is a prefix of closed batches (their timeline contribution —
+//! engine-free time, met count, Σ t_e2e — maintained incrementally with
+//! exactly the arithmetic and accumulation order of
+//! [`Evaluator::eval`]'s inner loop) plus one open batch and the set of
+//! unplaced jobs. Children either extend the open batch with an unplaced
+//! job of higher heuristic rank (canonical within-batch order) or close
+//! it and start a new batch with any unplaced job. Because [`Eval`] is
+//! symmetric in within-batch membership order up to floating-point
+//! summation order — and *bit-identical* for batches of ≤ 2 members,
+//! where `f64` addition is commutative — the canonical tree covers every
+//! distinct objective value that full permutation enumeration covers at
+//! `max_batch ≤ 2`, and matches it to one ulp of Σ t_e2e above that.
+//!
+//! ## The admissible bound
+//!
+//! For a node with closed-prefix attainment `met_p`, latency mass
+//! `total_p`, and engine-free time `free`, every completion satisfies:
+//!
+//! * **numerator ≤** `met_p` + the count of open/unplaced jobs that could
+//!   meet their SLO at their *minimum possible wait* (`max(free − arr, 0)`;
+//!   waits only grow down any branch since batch starts are monotone) for
+//!   *some* admissible batch size — open members range over
+//!   `open_size..=max_batch`, unplaced jobs over `1..=max_batch`;
+//! * **denominator ≥** `total_p` + Σ per-job `(min wait + min exec)` +,
+//!   for closed waves (empty arrival column), a queueing term: sorting
+//!   unplaced minimum execs ascending `e₀ ≤ e₁ ≤ …`, the job at rank `p`
+//!   lands at the earliest in the `q(p)`-th future batch
+//!   (`q = 0` for the first `max_batch − open_size` ranks, then
+//!   `1 + (p − cap)/max_batch`) and must additionally wait for `q`
+//!   disjoint earlier batches whose total duration is at least the open
+//!   batch's smallest member exec plus the `q−1` smallest unplaced execs.
+//!   With arrivals present the queueing term is dropped (a later start
+//!   can be absorbed by an idle gap, so it is not a valid wait bound).
+//!
+//! `bound = num_ub / den_lb` then dominates the `G` of every leaf under
+//! the node (`f64` division is monotone, so the real-arithmetic dominance
+//! survives rounding), and a node is pruned only when `bound ≤ best.g`.
+//! The incumbent is replaced on strictly greater `g` — the exhaustive
+//! search's tie rule — so at full budget the returned optimum reproduces
+//! the exhaustive golden's `Eval` **byte for byte** at `max_batch ≤ 2`
+//! (invariant 13 in `docs/ARCHITECTURE.md`).
+//!
+//! ## KV feasibility
+//!
+//! Under a hard KV pool ([`KvConfig::vetoes_moves`]) the search rejects
+//! infeasible batches at construction time (footprint sums for
+//! `Reserve`, exact occupancy peaks at batch close for `Phased`), so the
+//! optimum is exact for the *constrained* problem SA-with-hard-KV
+//! solves. If any single job overflows the pool the filter is disabled
+//! (the constrained problem is infeasible) and the result reverts to the
+//! KV-relaxed bound, which still upper-bounds every KV mode. Soft and
+//! unlimited modes always search the relaxed space.
+
+use crate::coordinator::kv::{self, KvConfig, KvPhaseModel};
+use crate::coordinator::objective::{Eval, Evaluator, Schedule, TimelineOrigin};
+use crate::coordinator::request::Slo;
+
+/// Branch-and-bound knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BnbParams {
+    /// Maximum batch size (same meaning as everywhere else).
+    pub max_batch: usize,
+    /// Node expansion budget. When exhausted the search returns its
+    /// incumbent plus a certified `bound_g` folded over every abandoned
+    /// subtree instead of the exact optimum.
+    pub node_budget: usize,
+    /// KV configuration. Hard mode constrains the search (see module
+    /// docs); soft/unlimited modes search the KV-relaxed space.
+    pub kv: KvConfig,
+}
+
+impl Default for BnbParams {
+    fn default() -> Self {
+        BnbParams {
+            max_batch: 8,
+            node_budget: 2_000_000,
+            kv: KvConfig::UNLIMITED,
+        }
+    }
+}
+
+/// Outcome of a branch-and-bound run.
+#[derive(Debug, Clone)]
+pub struct BnbResult {
+    /// Best schedule found (the optimum when `closed`).
+    pub schedule: Schedule,
+    /// Full evaluation of `schedule` via [`Evaluator::eval`] — the same
+    /// code path the exhaustive golden and SA report through.
+    pub eval: Eval,
+    /// Certified upper bound on the optimal `G`. Equals `eval.g` when
+    /// `closed`; otherwise `max(eval.g, bound of every abandoned node)`.
+    pub bound_g: f64,
+    /// Whether the search ran to completion within the node budget.
+    pub closed: bool,
+    /// Nodes expanded.
+    pub nodes: usize,
+    /// Nodes pruned by the admissible bound.
+    pub pruned: usize,
+    pub overhead_ms: f64,
+}
+
+impl BnbResult {
+    /// Certified optimality gap of a competitor objective `g` against
+    /// this run's bound: `max(0, (bound_g − g)/bound_g)`.
+    pub fn gap_of(&self, g: f64) -> f64 {
+        certified_gap(g, self.bound_g)
+    }
+}
+
+/// Relative gap of objective `g` against a certified upper bound:
+/// `max(0, (bound_g − g)/bound_g)`, 0 when the bound is degenerate.
+pub fn certified_gap(g: f64, bound_g: f64) -> f64 {
+    if !(bound_g > 0.0) || !g.is_finite() {
+        return 0.0;
+    }
+    ((bound_g - g) / bound_g).max(0.0)
+}
+
+/// Per-job predictions at every admissible batch size, plus suffix
+/// minima of exec over batch-size ranges (the bound's relaxation table).
+struct PredGrid {
+    /// `exec[j * (mb+1) + b]`, b in 1..=mb (index 0 unused).
+    exec: Vec<f64>,
+    prefill: Vec<f64>,
+    tpot: Vec<f64>,
+    /// `min_from[j * (mb+2) + s]` = min over b in s..=mb of exec(b, j);
+    /// `s = mb+1` slot is +inf (loop sentinel).
+    min_from: Vec<f64>,
+    mb: usize,
+}
+
+impl PredGrid {
+    fn build(ev: &Evaluator, mb: usize) -> PredGrid {
+        let n = ev.jobs().len();
+        let mut exec = vec![0.0; n * (mb + 1)];
+        let mut prefill = vec![0.0; n * (mb + 1)];
+        let mut tpot = vec![0.0; n * (mb + 1)];
+        let mut min_from = vec![f64::INFINITY; n * (mb + 2)];
+        for (j, job) in ev.jobs().iter().enumerate() {
+            for b in 1..=mb {
+                let p = ev.predictor().predict(b, job.input_len, job.output_len);
+                exec[j * (mb + 1) + b] = p.exec_ms;
+                prefill[j * (mb + 1) + b] = p.prefill_ms;
+                tpot[j * (mb + 1) + b] = p.tpot_ms;
+            }
+            for s in (1..=mb).rev() {
+                let next = min_from[j * (mb + 2) + s + 1];
+                let e = exec[j * (mb + 1) + s];
+                min_from[j * (mb + 2) + s] = if e < next { e } else { next };
+            }
+        }
+        PredGrid { exec, prefill, tpot, min_from, mb }
+    }
+
+    #[inline]
+    fn exec(&self, j: usize, b: usize) -> f64 {
+        self.exec[j * (self.mb + 1) + b]
+    }
+
+    #[inline]
+    fn min_exec_from(&self, j: usize, s: usize) -> f64 {
+        self.min_from[j * (self.mb + 2) + s]
+    }
+
+    /// Whether job `j` could meet its SLO at wait `w` for some batch
+    /// size in `s_min..=max_batch` (met is monotone in wait, so this is
+    /// exact feasibility at the relaxed wait).
+    fn can_meet(&self, slo: &Slo, j: usize, w: f64, s_min: usize) -> bool {
+        for b in s_min..=self.mb {
+            let idx = j * (self.mb + 1) + b;
+            if slo.met(w + self.exec[idx], w + self.prefill[idx], self.tpot[idx])
+            {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+struct Searcher<'a, 'b> {
+    ev: &'a Evaluator<'b>,
+    grid: PredGrid,
+    mb: usize,
+    node_budget: usize,
+    /// Job indices in heuristic (EDF deadline, then index) order.
+    heur: Vec<usize>,
+    /// `rank[j]` = position of job j in `heur`.
+    rank: Vec<usize>,
+    /// Job indices sorted by `min_exec_from(j, 1)` ascending (queue term).
+    by_min_exec: Vec<usize>,
+    remaining: Vec<bool>,
+    remaining_count: usize,
+    /// Execution order under construction: closed members then open.
+    order: Vec<usize>,
+    batches: Vec<usize>,
+    best: Option<(Schedule, Eval)>,
+    nodes: usize,
+    pruned: usize,
+    exhausted: bool,
+    open_bound: f64,
+    // KV hard-mode filter (disabled when not binding or infeasible-alone).
+    kv_filter: bool,
+    kv: KvConfig,
+    /// Per-job reserve footprint (`KvConfig::job_blocks`).
+    job_blocks: Vec<u64>,
+    /// Scratch for the queue term (min execs of remaining, ascending).
+    scratch_execs: Vec<f64>,
+    /// Scratch for phased-peak member lengths.
+    scratch_members: Vec<(usize, usize)>,
+}
+
+impl<'a, 'b> Searcher<'a, 'b> {
+    fn best_g(&self) -> f64 {
+        self.best.as_ref().map(|(_, e)| e.g).unwrap_or(f64::NEG_INFINITY)
+    }
+
+    #[inline]
+    fn arrival(&self, j: usize) -> f64 {
+        let arr = self.ev.arrivals();
+        if arr.is_empty() {
+            0.0
+        } else {
+            arr[j]
+        }
+    }
+
+    /// Latest arrival among the current open-batch members (mirrors
+    /// `Evaluator::batch_arrival_max`: 0.0 for an empty arrival column).
+    fn open_arrival_max(&self, open_size: usize) -> f64 {
+        if self.ev.arrivals().is_empty() {
+            return 0.0;
+        }
+        let open = &self.order[self.order.len() - open_size..];
+        let mut arr = f64::NEG_INFINITY;
+        for &j in open {
+            let a = self.ev.arrivals()[j];
+            if a > arr {
+                arr = a;
+            }
+        }
+        arr
+    }
+
+    /// Admissible upper bound on the `G` of every completion of this
+    /// node (module docs).
+    fn bound(&mut self, open_size: usize, free: f64, met: usize, total: f64) -> f64 {
+        let mut num = met as f64;
+        let mut den = total;
+        // --- open-batch members at their relaxed start
+        let mut e_open_min = f64::INFINITY;
+        if open_size > 0 {
+            let begin = TimelineOrigin::batch_start(free, self.open_arrival_max(open_size));
+            let lo = self.order.len() - open_size;
+            for i in lo..self.order.len() {
+                let j = self.order[i];
+                let w = begin - self.arrival(j);
+                let me = self.grid.min_exec_from(j, open_size);
+                den += w + me;
+                if me < e_open_min {
+                    e_open_min = me;
+                }
+                if self.grid.can_meet(&self.ev.jobs()[j].slo, j, w, open_size) {
+                    num += 1.0;
+                }
+            }
+        }
+        // --- unplaced jobs at their relaxed wait
+        self.scratch_execs.clear();
+        for idx in 0..self.by_min_exec.len() {
+            let j = self.by_min_exec[idx];
+            if !self.remaining[j] {
+                continue;
+            }
+            let w = (free - self.arrival(j)).max(0.0);
+            let me = self.grid.min_exec_from(j, 1);
+            den += w + me;
+            self.scratch_execs.push(me);
+            if self.grid.can_meet(&self.ev.jobs()[j].slo, j, w, 1) {
+                num += 1.0;
+            }
+        }
+        // --- closed-wave queueing term (see module docs for validity)
+        if self.ev.arrivals().is_empty() && !self.scratch_execs.is_empty() {
+            let cap0 = if open_size > 0 { self.mb - open_size } else { self.mb };
+            let mut prefix = 0.0f64; // Σ of the first q-ish smallest execs
+            let mut covered = 0usize; // ranks whose prefix is accumulated
+            for p in 0..self.scratch_execs.len() {
+                let q = if p < cap0 { 0 } else { 1 + (p - cap0) / self.mb };
+                if q == 0 {
+                    continue;
+                }
+                let need = if open_size > 0 { q - 1 } else { q };
+                while covered < need {
+                    prefix += self.scratch_execs[covered];
+                    covered += 1;
+                }
+                den += prefix;
+                if open_size > 0 {
+                    den += e_open_min;
+                }
+            }
+        }
+        if den <= 0.0 {
+            return if num > 0.0 { f64::INFINITY } else { 0.0 };
+        }
+        num / den
+    }
+
+    /// Close the open batch: returns `(free', met', total')` computed
+    /// with exactly the arithmetic of `Evaluator::eval`'s inner loop, or
+    /// `None` when the hard-KV filter rejects the batch.
+    fn close_open(
+        &mut self,
+        open_size: usize,
+        free: f64,
+        met: usize,
+        total: f64,
+    ) -> Option<(f64, usize, f64)> {
+        let lo = self.order.len() - open_size;
+        if self.kv_filter {
+            let demand = match self.kv.phase {
+                KvPhaseModel::Reserve => {
+                    self.order[lo..].iter().map(|&j| self.job_blocks[j]).sum()
+                }
+                KvPhaseModel::Phased => {
+                    self.scratch_members.clear();
+                    for &j in &self.order[lo..] {
+                        let job = &self.ev.jobs()[j];
+                        self.scratch_members.push((job.input_len, job.output_len));
+                    }
+                    kv::phased_peak_blocks(&self.scratch_members, self.kv.block_tokens)
+                }
+            };
+            if self.kv.batch_excess(demand) > 0 {
+                return None;
+            }
+        }
+        let begin =
+            TimelineOrigin::batch_start(free, self.open_arrival_max(open_size));
+        let mut batch_max = 0.0f64;
+        let mut batch_sum = 0.0f64;
+        let mut batch_met = 0usize;
+        for i in lo..self.order.len() {
+            let j = self.order[i];
+            let job = &self.ev.jobs()[j];
+            let exec = self.grid.exec(j, open_size);
+            let idx = j * (self.mb + 1) + open_size;
+            let wait = begin - self.arrival(j);
+            let e2e = wait + exec;
+            let ttft = wait + self.grid.prefill[idx];
+            batch_sum += e2e;
+            if job.slo.met(e2e, ttft, self.grid.tpot[idx]) {
+                batch_met += 1;
+            }
+            if exec > batch_max {
+                batch_max = exec;
+            }
+        }
+        Some((begin + batch_max, met + batch_met, total + batch_sum))
+    }
+
+    fn record_leaf(&mut self, open_size: usize, free: f64, met: usize, total: f64) {
+        let Some((end, met_f, total_f)) = self.close_open(open_size, free, met, total)
+        else {
+            return;
+        };
+        let g = if total_f > 0.0 { met_f as f64 / total_f } else { 0.0 };
+        if g > self.best_g() {
+            let mut batches = self.batches.clone();
+            batches.push(open_size);
+            let schedule = Schedule { order: self.order.clone(), batches };
+            let eval = Eval {
+                g,
+                met: met_f,
+                total_e2e_ms: total_f,
+                makespan_ms: end,
+            };
+            debug_assert_eq!(eval, self.ev.eval(&schedule));
+            self.best = Some((schedule, eval));
+        }
+    }
+
+    /// Expand one node: the open batch holds `open_size ≥ 1` members.
+    fn dfs(&mut self, open_size: usize, free: f64, met: usize, total: f64) {
+        self.nodes += 1;
+        if self.nodes > self.node_budget {
+            self.exhausted = true;
+        }
+        if self.exhausted {
+            // Abandoned: fold this subtree's certificate into the bound.
+            let b = self.bound(open_size, free, met, total);
+            if b > self.open_bound {
+                self.open_bound = b;
+            }
+            return;
+        }
+        if self.bound(open_size, free, met, total) <= self.best_g() {
+            self.pruned += 1;
+            return;
+        }
+        if self.remaining_count == 0 {
+            self.record_leaf(open_size, free, met, total);
+            return;
+        }
+        // (a) extend the open batch with a higher-rank unplaced job.
+        if open_size < self.mb {
+            let last_rank = self.rank[self.order[self.order.len() - 1]];
+            for hi in (last_rank + 1)..self.heur.len() {
+                let j = self.heur[hi];
+                if !self.remaining[j] {
+                    continue;
+                }
+                if self.kv_filter
+                    && self.kv.phase == KvPhaseModel::Reserve
+                    && self.reserve_demand(open_size) + self.job_blocks[j]
+                        > self.kv.pool_blocks
+                {
+                    continue;
+                }
+                self.place(j);
+                self.dfs(open_size + 1, free, met, total);
+                self.unplace(j);
+            }
+        }
+        // (b) close the open batch, start a new one with any unplaced job.
+        if let Some((free2, met2, total2)) =
+            self.close_open(open_size, free, met, total)
+        {
+            self.batches.push(open_size);
+            for hi in 0..self.heur.len() {
+                let j = self.heur[hi];
+                if !self.remaining[j] {
+                    continue;
+                }
+                self.place(j);
+                self.dfs(1, free2, met2, total2);
+                self.unplace(j);
+            }
+            self.batches.pop();
+        }
+    }
+
+    fn reserve_demand(&self, open_size: usize) -> u64 {
+        let lo = self.order.len() - open_size;
+        self.order[lo..].iter().map(|&j| self.job_blocks[j]).sum()
+    }
+
+    #[inline]
+    fn place(&mut self, j: usize) {
+        self.order.push(j);
+        self.remaining[j] = false;
+        self.remaining_count -= 1;
+    }
+
+    #[inline]
+    fn unplace(&mut self, j: usize) {
+        self.order.pop();
+        self.remaining[j] = true;
+        self.remaining_count += 1;
+    }
+}
+
+/// Depth-first branch-and-bound over canonical schedules (module docs).
+///
+/// Always returns a result: the exact optimum (with `closed == true` and
+/// `bound_g == eval.g`) when the node budget suffices, otherwise the
+/// incumbent plus a certified upper bound on the optimum.
+pub fn branch_and_bound(ev: &Evaluator, params: &BnbParams) -> BnbResult {
+    let t_start = crate::util::now_ms();
+    let n = ev.jobs().len();
+    let mb = params.max_batch.max(1);
+    if n == 0 {
+        return BnbResult {
+            schedule: Schedule { order: vec![], batches: vec![] },
+            eval: Eval::ZERO,
+            bound_g: 0.0,
+            closed: true,
+            nodes: 0,
+            pruned: 0,
+            overhead_ms: crate::util::now_ms() - t_start,
+        };
+    }
+
+    // EDF-deadline heuristic order (child generation + canonical ranks).
+    let deadline = |j: usize| match ev.jobs()[j].slo {
+        Slo::E2e { e2e_ms } => e2e_ms,
+        Slo::Interactive { ttft_ms, .. } => ttft_ms,
+    };
+    let mut heur: Vec<usize> = (0..n).collect();
+    heur.sort_by(|&a, &b| deadline(a).total_cmp(&deadline(b)));
+    let mut rank = vec![0usize; n];
+    for (r, &j) in heur.iter().enumerate() {
+        rank[j] = r;
+    }
+
+    let grid = PredGrid::build(ev, mb);
+    let mut by_min_exec: Vec<usize> = (0..n).collect();
+    by_min_exec.sort_by(|&a, &b| {
+        grid.min_exec_from(a, 1).total_cmp(&grid.min_exec_from(b, 1))
+    });
+
+    let job_blocks: Vec<u64> = ev
+        .jobs()
+        .iter()
+        .map(|j| params.kv.job_blocks(j.input_len, j.output_len))
+        .collect();
+    // Hard KV constrains the search — unless some job cannot fit alone,
+    // in which case the constrained problem is infeasible and the run
+    // reverts to the KV-relaxed space (module docs).
+    let kv_filter = params.kv.vetoes_moves()
+        && job_blocks.iter().all(|&b| params.kv.fits_alone(b));
+
+    let mut s = Searcher {
+        ev,
+        grid,
+        mb,
+        node_budget: params.node_budget,
+        heur,
+        rank,
+        by_min_exec,
+        remaining: vec![true; n],
+        remaining_count: n,
+        order: Vec::with_capacity(n),
+        batches: Vec::new(),
+        best: None,
+        nodes: 0,
+        pruned: 0,
+        exhausted: false,
+        open_bound: f64::NEG_INFINITY,
+        kv_filter,
+        kv: params.kv,
+        job_blocks,
+        scratch_execs: Vec::with_capacity(n),
+        scratch_members: Vec::with_capacity(mb),
+    };
+
+    // Root: start the first batch with each job in heuristic order.
+    for hi in 0..n {
+        let j = s.heur[hi];
+        s.place(j);
+        s.dfs(1, ev.t0_ms(), 0, 0.0);
+        s.unplace(j);
+    }
+
+    let closed = !s.exhausted;
+    let (schedule, eval) = match s.best.take() {
+        Some(be) => be,
+        // Budget too small to even reach one leaf (or every leaf was
+        // KV-rejected before the first feasible one): report the FCFS
+        // packing so callers always get a valid schedule.
+        None => {
+            let fallback = Schedule::fcfs(n, mb);
+            let e = ev.eval(&fallback);
+            (fallback, e)
+        }
+    };
+    let bound_g = if closed {
+        eval.g
+    } else {
+        let ob = s.open_bound;
+        if ob > eval.g {
+            ob
+        } else {
+            eval.g
+        }
+    };
+    BnbResult {
+        schedule,
+        eval,
+        bound_g,
+        closed,
+        nodes: s.nodes,
+        pruned: s.pruned,
+        overhead_ms: crate::util::now_ms() - t_start,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::objective::Job;
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::priority::exhaustive::exhaustive_mapping;
+    use crate::util::rng::Rng;
+
+    fn random_jobs(rng: &mut Rng, n: usize) -> Vec<Job> {
+        (0..n)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 1 + rng.below(1500),
+                output_len: 1 + rng.below(400),
+                slo: if rng.chance(0.5) {
+                    Slo::E2e { e2e_ms: rng.uniform(1_000.0, 60_000.0) }
+                } else {
+                    Slo::Interactive {
+                        ttft_ms: rng.uniform(500.0, 15_000.0),
+                        tpot_ms: rng.uniform(15.0, 60.0),
+                    }
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_exhaustive_byte_for_byte_at_small_n() {
+        // Invariant 13: at full budget and max_batch ≤ 2 (where Eval is
+        // bit-invariant to within-batch order) the B&B optimum
+        // reproduces the exhaustive golden's Eval byte for byte.
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(seed ^ 0xB0B);
+            let n = 4 + (seed as usize % 4); // 4..=7
+            let jobs = random_jobs(&mut rng, n);
+            let ev = Evaluator::new(&jobs, &pred);
+            let ex = exhaustive_mapping(&ev, 2).unwrap();
+            let bnb = branch_and_bound(
+                &ev,
+                &BnbParams { max_batch: 2, ..Default::default() },
+            );
+            assert!(bnb.closed, "seed {seed}: budget must close n={n}");
+            assert_eq!(
+                bnb.eval.g.to_bits(),
+                ex.eval.g.to_bits(),
+                "seed {seed}: g mismatch {} vs {}",
+                bnb.eval.g,
+                ex.eval.g
+            );
+            assert_eq!(bnb.eval.met, ex.eval.met, "seed {seed}");
+            assert_eq!(
+                bnb.eval.total_e2e_ms.to_bits(),
+                ex.eval.total_e2e_ms.to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(
+                bnb.eval.makespan_ms.to_bits(),
+                ex.eval.makespan_ms.to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(bnb.bound_g.to_bits(), bnb.eval.g.to_bits());
+            // and it does so with far fewer evaluations than O(N!·2^N)
+            assert!(bnb.nodes < ex.evals, "seed {seed}: no pruning win");
+        }
+    }
+
+    #[test]
+    fn closes_n12_within_budget() {
+        let pred = LatencyPredictor::paper_table2();
+        for seed in [1u64, 7] {
+            let mut rng = Rng::new(seed ^ 0x6A9);
+            let jobs = random_jobs(&mut rng, 12);
+            let ev = Evaluator::new(&jobs, &pred);
+            let bnb = branch_and_bound(
+                &ev,
+                &BnbParams { max_batch: 3, ..Default::default() },
+            );
+            assert!(
+                bnb.closed,
+                "seed {seed}: n=12 did not close in {} nodes",
+                bnb.nodes
+            );
+            assert_eq!(bnb.bound_g.to_bits(), bnb.eval.g.to_bits());
+            bnb.schedule.validate(3).unwrap();
+            // sanity: the optimum dominates the FCFS packing
+            let fcfs = ev.eval(&Schedule::fcfs(12, 3));
+            assert!(bnb.eval.g >= fcfs.g - 1e-12);
+        }
+    }
+
+    #[test]
+    fn root_bound_dominates_exhaustive_optimum() {
+        // With a zero node budget the search abandons every root child
+        // immediately; the folded bound must still dominate the true
+        // optimum (admissibility).
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(seed ^ 0xADA);
+            let jobs = random_jobs(&mut rng, 6);
+            let ev = Evaluator::new(&jobs, &pred);
+            for mb in [1usize, 2, 3] {
+                let ex = exhaustive_mapping(&ev, mb).unwrap();
+                let bnb = branch_and_bound(
+                    &ev,
+                    &BnbParams {
+                        max_batch: mb,
+                        node_budget: 0,
+                        ..Default::default()
+                    },
+                );
+                assert!(!bnb.closed);
+                assert!(
+                    bnb.bound_g >= ex.eval.g,
+                    "seed {seed} mb {mb}: bound {} < optimum {}",
+                    bnb.bound_g,
+                    ex.eval.g
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_budget_reports_valid_bracket() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0xFACE);
+        let jobs = random_jobs(&mut rng, 7);
+        let ev = Evaluator::new(&jobs, &pred);
+        let ex = exhaustive_mapping(&ev, 2).unwrap();
+        let bnb = branch_and_bound(
+            &ev,
+            &BnbParams { max_batch: 2, node_budget: 40, ..Default::default() },
+        );
+        assert!(!bnb.closed);
+        // the incumbent and bound bracket the true optimum
+        assert!(bnb.eval.g <= ex.eval.g + 1e-15);
+        assert!(bnb.bound_g >= ex.eval.g);
+        assert!(bnb.bound_g >= bnb.eval.g);
+        bnb.schedule.validate(2).unwrap();
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let pred = LatencyPredictor::paper_table2();
+        let none: Vec<Job> = vec![];
+        let ev = Evaluator::new(&none, &pred);
+        let r = branch_and_bound(&ev, &BnbParams::default());
+        assert!(r.closed);
+        assert_eq!(r.eval, Eval::ZERO);
+        assert_eq!(r.nodes, 0);
+
+        let one = vec![Job {
+            req_idx: 0,
+            input_len: 100,
+            output_len: 10,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        }];
+        let ev = Evaluator::new(&one, &pred);
+        let r = branch_and_bound(&ev, &BnbParams::default());
+        assert!(r.closed);
+        assert_eq!(r.schedule.order, vec![0]);
+        assert_eq!(r.schedule.batches, vec![1]);
+        assert_eq!(r.eval.met, 1);
+    }
+
+    #[test]
+    fn hard_kv_search_is_feasible_and_relaxed_bound_dominates() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0xCAFE);
+        let jobs = random_jobs(&mut rng, 8);
+        let ev = Evaluator::new(&jobs, &pred);
+        let relaxed = branch_and_bound(
+            &ev,
+            &BnbParams { max_batch: 3, ..Default::default() },
+        );
+        // size the pool so singles fit but a full batch is tight
+        let max_single = jobs
+            .iter()
+            .map(|j| KvConfig::hard(1).job_blocks(j.input_len, j.output_len))
+            .max()
+            .unwrap();
+        let hard = KvConfig::hard(max_single + max_single / 2);
+        let constrained = branch_and_bound(
+            &ev,
+            &BnbParams { max_batch: 3, kv: hard, ..Default::default() },
+        );
+        assert!(constrained.closed);
+        assert_eq!(
+            ev.kv_excess(&constrained.schedule, &hard),
+            0,
+            "hard-KV optimum must be feasible"
+        );
+        // the KV-relaxed optimum dominates the constrained one
+        assert!(relaxed.eval.g >= constrained.eval.g - 1e-15);
+    }
+
+    #[test]
+    fn arrivals_still_certify() {
+        // With arrivals the queueing term is dropped; the bound must
+        // still dominate the optimum found by exhaustive enumeration.
+        let pred = LatencyPredictor::paper_table2();
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(seed ^ 0x777);
+            let jobs = random_jobs(&mut rng, 5);
+            let arrivals: Vec<f64> =
+                (0..5).map(|_| rng.uniform(0.0, 3_000.0)).collect();
+            let ev = Evaluator::with_arrivals(&jobs, &pred, 50.0, &arrivals);
+            let ex = exhaustive_mapping(&ev, 2).unwrap();
+            let bnb = branch_and_bound(
+                &ev,
+                &BnbParams { max_batch: 2, ..Default::default() },
+            );
+            assert!(bnb.closed);
+            assert_eq!(
+                bnb.eval.g.to_bits(),
+                ex.eval.g.to_bits(),
+                "seed {seed}: arrival-aware optimum mismatch"
+            );
+            let starved = branch_and_bound(
+                &ev,
+                &BnbParams {
+                    max_batch: 2,
+                    node_budget: 0,
+                    ..Default::default()
+                },
+            );
+            assert!(starved.bound_g >= ex.eval.g, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn certified_gap_basics() {
+        assert_eq!(certified_gap(1.0, 1.0), 0.0);
+        assert!((certified_gap(0.95, 1.0) - 0.05).abs() < 1e-12);
+        // better-than-bound (only possible via fp slack) clamps to zero
+        assert_eq!(certified_gap(1.1, 1.0), 0.0);
+        assert_eq!(certified_gap(0.5, 0.0), 0.0);
+        assert_eq!(certified_gap(f64::NAN, 1.0), 0.0);
+    }
+}

@@ -22,12 +22,17 @@
 //!   arrival-aware timeline ([`objective::TimelineOrigin`]), and the
 //!   full + incremental evaluators.
 //! * [`priority`]   — Algorithm 1 (SA) and the exhaustive strawman.
-//! * [`policies`]   — FCFS/SJF/EDF/MLFQ baselines + policy dispatch.
+//! * [`gap`]        — branch-and-bound optimality certificates: exact
+//!   optima to N ≈ 12–14 plus certified upper bounds beyond (the
+//!   search-quality harness's ground truth).
+//! * [`policies`]   — FCFS/SJF/EDF/MLFQ/index/threshold baselines +
+//!   policy dispatch.
 //! * [`scheduler`]  — Algorithm 2 multi-instance assignment.
 //! * [`online`]     — online wave admission: warm-started SA replanning
 //!   over timestamped arrival streams (the batch-to-streaming bridge).
 //! * this module    — plan execution against engines and completion records.
 
+pub mod gap;
 pub mod kv;
 pub mod objective;
 pub mod online;

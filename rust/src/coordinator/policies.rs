@@ -9,6 +9,23 @@
 //!                  (its skip-join MLFQ assigns queues by prompt length).
 //! * `SloAware`   — Algorithm 1 (simulated annealing).
 //! * `Exhaustive` — the optimality strawman (small N only).
+//!
+//! Two structure-exploiting baselines from the "Optimal Scheduling
+//! Algorithms for LLM Inference: Theory and Practice" line of work
+//! (PAPERS.md) round out the gap harness — cheap index/threshold rules
+//! the search must beat to justify its overhead:
+//!
+//! * `SlackIndex`    — static laxity index: jobs sorted by
+//!                     `(deadline − solo exec) / solo exec` ascending
+//!                     (least relative slack first), greedily packed.
+//!                     O(N log N), SLO- and predictor-aware but blind to
+//!                     batch interaction.
+//! * `EdfThreshold`  — EDF order with a *threshold-style batching rule*:
+//!                     one static batch size `k`, chosen as the argmax of
+//!                     the evaluated objective over `k ∈ 1..=max_batch`
+//!                     (first maximizer wins). O(N·max_batch) evaluator
+//!                     calls — the cheapest policy that adapts batch
+//!                     geometry to load.
 
 use crate::coordinator::objective::{Evaluator, Job, Schedule};
 use crate::coordinator::priority::annealing::{
@@ -24,8 +41,19 @@ pub enum Policy {
     Sjf,
     Edf,
     Mlfq,
+    SlackIndex,
+    EdfThreshold,
     SloAware(SaParams),
     Exhaustive,
+}
+
+/// Deadline a job is urgent against: the e2e bound, or TTFT for
+/// interactive SLOs (shared by `Edf` and the slack index).
+fn deadline(j: &Job) -> f64 {
+    match j.slo {
+        Slo::E2e { e2e_ms } => e2e_ms,
+        Slo::Interactive { ttft_ms, .. } => ttft_ms,
+    }
 }
 
 impl Policy {
@@ -35,6 +63,8 @@ impl Policy {
             Policy::Sjf => "sjf",
             Policy::Edf => "edf",
             Policy::Mlfq => "mlfq",
+            Policy::SlackIndex => "slack-index",
+            Policy::EdfThreshold => "edf-threshold",
             Policy::SloAware(_) => "slo-aware-sa",
             Policy::Exhaustive => "slo-aware-exhaustive",
         }
@@ -63,10 +93,6 @@ impl Policy {
                 (Schedule::from_order(order, max_batch), None)
             }
             Policy::Edf => {
-                let deadline = |j: &Job| match j.slo {
-                    Slo::E2e { e2e_ms } => e2e_ms,
-                    Slo::Interactive { ttft_ms, .. } => ttft_ms,
-                };
                 let mut order: Vec<usize> = (0..n).collect();
                 // total_cmp for the same NaN-safety as Sjf (SLO bounds are
                 // caller-supplied floats).
@@ -79,6 +105,56 @@ impl Policy {
                 let mut order: Vec<usize> = (0..n).collect();
                 order.sort_by_key(|&a| ev.jobs()[a].input_len);
                 (Schedule::from_order(order, max_batch), None)
+            }
+            Policy::SlackIndex => {
+                // Least relative slack first: (deadline − solo exec) /
+                // solo exec ascending. A zero/degenerate solo exec yields
+                // ±inf or NaN — total_cmp keeps the order total (the PR 5
+                // NaN rule), no special-casing.
+                let slack = |j: usize| {
+                    let e = ev.solo_e2e_ms(j);
+                    (deadline(&ev.jobs()[j]) - e) / e
+                };
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| slack(a).total_cmp(&slack(b)));
+                (Schedule::from_order(order, max_batch), None)
+            }
+            Policy::EdfThreshold => {
+                let t_start = crate::util::now_ms();
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    deadline(&ev.jobs()[a]).total_cmp(&deadline(&ev.jobs()[b]))
+                });
+                // Threshold rule: one static batch size, the first
+                // k ∈ 1..=max_batch maximizing the evaluated objective
+                // (strict > replacement, so ties keep the smallest k).
+                let mut best: Option<(Schedule, f64)> = None;
+                let mut evals = 0usize;
+                for k in 1..=max_batch.max(1) {
+                    let s = Schedule::from_order(order.clone(), k);
+                    let g = ev.eval(&s).g;
+                    evals += 1;
+                    let better = match &best {
+                        None => true,
+                        Some((_, bg)) => g > *bg,
+                    };
+                    if better {
+                        best = Some((s, g));
+                    }
+                }
+                let overhead_ms = crate::util::now_ms() - t_start;
+                let stats = SearchStats {
+                    evals,
+                    accepted: 0,
+                    improved: 0,
+                    early_exit: false,
+                    overhead_ms,
+                    cpu_ms: overhead_ms,
+                    exchanges: 0,
+                    winner_chain: 0,
+                };
+                let (s, _) = best.expect("max_batch >= 1 always evaluates");
+                (s, Some(stats))
             }
             Policy::SloAware(params) => {
                 let params = SaParams { max_batch, ..*params };
@@ -204,6 +280,41 @@ mod tests {
     }
 
     #[test]
+    fn slack_index_orders_by_relative_slack() {
+        let pred = unit_predictor();
+        let js = jobs();
+        let ev = Evaluator::new(&js, &pred);
+        // solo exec: j0=500, j1=100, j2=310; deadlines: 900, 5000, 400
+        // slack: j0=(900-500)/500=0.8, j1=49.0, j2=(400-310)/310≈0.29
+        let (s, stats) = Policy::SlackIndex.plan(&ev, 1);
+        assert_eq!(s.order, vec![2, 0, 1]);
+        assert!(stats.is_none());
+    }
+
+    #[test]
+    fn edf_threshold_dominates_plain_edf() {
+        // Edf-at-max-batch is one of the threshold rule's candidates
+        // (k = max_batch over the same order), so it can never win.
+        let pred = LatencyPredictor::paper_table2();
+        let js: Vec<Job> = (0..8)
+            .map(|i| Job {
+                req_idx: i,
+                input_len: 100 + 173 * i,
+                output_len: 20 + 31 * i,
+                slo: Slo::E2e { e2e_ms: 2_000.0 + 911.0 * i as f64 },
+            })
+            .collect();
+        let ev = Evaluator::new(&js, &pred);
+        for mb in [1usize, 2, 4] {
+            let (edf, _) = Policy::Edf.plan(&ev, mb);
+            let (thr, stats) = Policy::EdfThreshold.plan(&ev, mb);
+            thr.validate(mb).unwrap();
+            assert!(ev.eval(&thr).g >= ev.eval(&edf).g);
+            assert_eq!(stats.unwrap().evals, mb);
+        }
+    }
+
+    #[test]
     fn sjf_survives_degenerate_and_nan_predictors() {
         // Regression (PR 5): Sjf used partial_cmp().unwrap(), which
         // panicked whenever a degenerate fit produced NaN solo-e2e.
@@ -229,6 +340,15 @@ mod tests {
         let ev = Evaluator::new(&weird, &zero);
         let (s, _) = Policy::Edf.plan(&ev, 2);
         s.validate(2).unwrap();
+        // the index/threshold policies inherit the same totality: a zero
+        // solo exec makes the slack index ±inf (or NaN for 0/0), and the
+        // threshold rule evaluates NaN objectives — neither may panic
+        for policy in [Policy::SlackIndex, Policy::EdfThreshold] {
+            let (s, _) = policy.plan(&ev, 2);
+            s.validate(2).unwrap_or_else(|e| {
+                panic!("{} under degenerate predictor: {e}", policy.name())
+            });
+        }
     }
 
     #[test]
@@ -241,6 +361,8 @@ mod tests {
             Policy::Sjf,
             Policy::Edf,
             Policy::Mlfq,
+            Policy::SlackIndex,
+            Policy::EdfThreshold,
             Policy::SloAware(SaParams::default()),
             Policy::Exhaustive,
         ] {

@@ -258,6 +258,70 @@ mod tests {
     }
 
     #[test]
+    fn failed_alloc_leaves_state_untouched() {
+        // rollback invariant: a rejected allocation must not perturb the
+        // allocator — same free list, same sequences, same accounting
+        let mut a = alloc(4);
+        a.alloc_seq(1, 40).unwrap(); // 3 blocks, 1 free
+        let used = a.used_blocks();
+        let free = a.free_blocks();
+        assert!(matches!(
+            a.alloc_seq(2, 100), // needs 7 blocks
+            Err(KvError::OutOfMemory { need_blocks: 7, free_blocks: 1 })
+        ));
+        assert_eq!(a.used_blocks(), used);
+        assert_eq!(a.free_blocks(), free);
+        assert_eq!(a.active_seqs(), 1);
+        assert_eq!(a.seq_tokens(2), None);
+        // the survivor is fully intact and can still grow into the slack
+        assert_eq!(a.seq_tokens(1), Some(40));
+        a.extend_seq(1, 8).unwrap();
+        assert_eq!(a.used_blocks(), 3);
+        // double-alloc rejection is equally side-effect-free
+        assert_eq!(a.alloc_seq(1, 1), Err(KvError::AlreadyAllocated(1)));
+        assert_eq!(a.seq_tokens(1), Some(48));
+    }
+
+    #[test]
+    fn failed_extend_leaves_sequence_untouched() {
+        let mut a = alloc(3);
+        a.alloc_seq(1, 16).unwrap(); // 1 block
+        a.alloc_seq(2, 32).unwrap(); // 2 blocks — pool now full
+        // growing seq 1 needs a new block; none free — must fail and
+        // leave seq 1 at its pre-call token count and block count
+        assert!(matches!(
+            a.extend_seq(1, 1),
+            Err(KvError::OutOfMemory { need_blocks: 1, free_blocks: 0 })
+        ));
+        assert_eq!(a.seq_tokens(1), Some(16));
+        assert_eq!(a.used_blocks(), 3);
+        assert_eq!(a.free_blocks(), 0);
+        // freeing the neighbour unblocks the same extend verbatim
+        a.free_seq(2).unwrap();
+        a.extend_seq(1, 1).unwrap();
+        assert_eq!(a.seq_tokens(1), Some(17));
+        assert_eq!(a.used_blocks(), 2);
+    }
+
+    #[test]
+    fn reset_restores_pristine_pool() {
+        let mut a = alloc(8);
+        a.alloc_seq(1, 100).unwrap();
+        a.alloc_seq(2, 16).unwrap();
+        assert!(a.used_blocks() > 0);
+        a.reset();
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(a.free_blocks(), 8);
+        assert_eq!(a.active_seqs(), 0);
+        assert_eq!(a.seq_tokens(1), None);
+        assert_eq!(a.utilization(), 0.0);
+        assert_eq!(a.internal_fragmentation(), 0.0);
+        // the pool is fully reusable after reset
+        a.alloc_seq(1, 128).unwrap(); // all 8 blocks
+        assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
     fn conservation_property() {
         check("block conservation under random ops", 200, |rng: &mut Rng| {
             let total = 1 + rng.below(64);

@@ -378,3 +378,107 @@ impl Client {
         self.next_line()
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_line_pops_complete_lines_in_order() {
+        let mut rbuf = b"first\nsecond\npartial".to_vec();
+        assert_eq!(take_line(&mut rbuf).as_deref(), Some("first"));
+        assert_eq!(take_line(&mut rbuf).as_deref(), Some("second"));
+        // no newline yet: nothing consumed, the partial tail stays intact
+        assert_eq!(take_line(&mut rbuf), None);
+        assert_eq!(rbuf, b"partial");
+        rbuf.extend_from_slice(b" done\n");
+        assert_eq!(take_line(&mut rbuf).as_deref(), Some("partial done"));
+        assert!(rbuf.is_empty());
+    }
+
+    #[test]
+    fn take_line_edge_frames() {
+        // empty line (bare newline) is a line — handle_line ignores it
+        let mut rbuf = b"\nx\n".to_vec();
+        assert_eq!(take_line(&mut rbuf).as_deref(), Some(""));
+        assert_eq!(take_line(&mut rbuf).as_deref(), Some("x"));
+        // CRLF: the \r survives into the line (trimmed by handle_line)
+        let mut rbuf = b"ok\r\n".to_vec();
+        assert_eq!(take_line(&mut rbuf).as_deref(), Some("ok\r"));
+        // invalid UTF-8 is replaced, never panics, and the buffer advances
+        let mut rbuf = vec![0xff, 0xfe, b'a', b'\n', b'z'];
+        let line = take_line(&mut rbuf).unwrap();
+        assert!(line.ends_with('a'));
+        assert!(line.contains('\u{FFFD}'));
+        assert_eq!(rbuf, b"z");
+    }
+
+    /// Connected nonblocking pair: (reactor side wrapped in a Conn, peer).
+    fn conn_pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+        let conn = Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            subs: Vec::new(),
+            id: 0,
+            closed: false,
+        };
+        (conn, peer)
+    }
+
+    fn spin(mut f: impl FnMut() -> bool) {
+        for _ in 0..500 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        panic!("condition not reached within timeout");
+    }
+
+    #[test]
+    fn read_into_handles_wouldblock_data_and_eof() {
+        let (mut conn, mut peer) = conn_pair();
+        // nothing sent yet: the nonblocking read hits EWOULDBLOCK —
+        // no bytes, and crucially the connection is NOT treated as closed
+        assert!(!read_into(&mut conn));
+        assert!(!conn.closed);
+        assert!(conn.rbuf.is_empty());
+        // peer writes a frame: read_into drains it
+        peer.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+        spin(|| read_into(&mut conn));
+        assert_eq!(
+            take_line(&mut conn.rbuf).as_deref(),
+            Some("{\"op\":\"stats\"}")
+        );
+        assert!(!conn.closed);
+        // peer hangs up: read returns 0 ⇒ the conn is marked closed
+        drop(peer);
+        spin(|| {
+            read_into(&mut conn);
+            conn.closed
+        });
+    }
+
+    #[test]
+    fn flush_drains_write_buffer_with_carry_over() {
+        let (mut conn, mut peer) = conn_pair();
+        // empty write buffer: nothing to do
+        assert!(!flush(&mut conn));
+        conn.wbuf.extend_from_slice(b"hello\n");
+        spin(|| {
+            flush(&mut conn);
+            conn.wbuf.is_empty()
+        });
+        assert!(!conn.closed);
+        let mut reader = BufReader::new(&mut peer);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "hello\n");
+    }
+}

@@ -1,0 +1,234 @@
+//! Property suite for the baseline policy zoo ([`Policy`]):
+//!
+//! * ordering determinism — sort-based policies are invariant to the
+//!   input permutation (same jobs in a different order produce the same
+//!   schedule, mapped back through the permutation);
+//! * total-order sanity — NaN SLO bounds and zero-coefficient predictors
+//!   never panic a comparator (regression pin for the PR 5 `total_cmp`
+//!   fix) and still yield valid schedules;
+//! * reference agreement — the new index/threshold policies match naive
+//!   brute-force re-implementations at small N (selection-argmin for
+//!   `SlackIndex`, direct argmax over static batch sizes for
+//!   `EdfThreshold`).
+
+use slo_serve::coordinator::objective::{Evaluator, Job, Schedule};
+use slo_serve::coordinator::policies::Policy;
+use slo_serve::coordinator::predictor::{LatencyPredictor, PhaseCoeffs};
+use slo_serve::coordinator::request::Slo;
+use slo_serve::util::prop::check;
+use slo_serve::util::rng::Rng;
+
+/// Mixed wave with continuous SLO bounds and pairwise-distinct input
+/// lengths — every sort key (solo e2e, deadline, slack) is then distinct
+/// with probability 1, so permutation-invariance has no tie ambiguity.
+fn random_jobs(rng: &mut Rng, n: usize) -> Vec<Job> {
+    let mut lens = std::collections::BTreeSet::new();
+    while lens.len() < n {
+        lens.insert(1 + rng.below(1500));
+    }
+    let lens: Vec<usize> = lens.into_iter().collect();
+    (0..n)
+        .map(|i| Job {
+            req_idx: i,
+            input_len: lens[i],
+            output_len: 1 + rng.below(400),
+            slo: if rng.chance(0.5) {
+                Slo::E2e { e2e_ms: rng.uniform(1_000.0, 60_000.0) }
+            } else {
+                Slo::Interactive {
+                    ttft_ms: rng.uniform(500.0, 15_000.0),
+                    tpot_ms: rng.uniform(15.0, 60.0),
+                }
+            },
+        })
+        .collect()
+}
+
+/// The deadline every EDF-family policy sorts by.
+fn deadline(j: &Job) -> f64 {
+    match j.slo {
+        Slo::E2e { e2e_ms } => e2e_ms,
+        Slo::Interactive { ttft_ms, .. } => ttft_ms,
+    }
+}
+
+#[test]
+fn sort_policies_are_permutation_invariant() {
+    // Shuffling the input wave must not change what gets scheduled when:
+    // position k of the permuted plan names the same job as position k
+    // of the original plan. (FCFS is arrival-order by definition and
+    // MLFQ is queue-order-sensitive; the sorted policies are the ones
+    // that promise input-order independence.)
+    let pred = LatencyPredictor::paper_table2();
+    check("sorted policies ignore input permutation", 40, |rng| {
+        let n = 2 + rng.below(10);
+        let max_batch = 1 + rng.below(4);
+        let jobs = random_jobs(rng, n);
+        // perm[k] = original index of the job at permuted position k
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let permuted: Vec<Job> = perm
+            .iter()
+            .enumerate()
+            .map(|(k, &orig)| Job { req_idx: k, ..jobs[orig] })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let ev_p = Evaluator::new(&permuted, &pred);
+        for policy in [
+            Policy::Sjf,
+            Policy::Edf,
+            Policy::SlackIndex,
+            Policy::EdfThreshold,
+        ] {
+            let (a, _) = policy.plan(&ev, max_batch);
+            let (b, _) = policy.plan(&ev_p, max_batch);
+            let mapped: Vec<usize> =
+                b.order.iter().map(|&j| perm[j]).collect();
+            if mapped != a.order {
+                return Err(format!(
+                    "{}: order {:?} != mapped {:?} (perm {:?})",
+                    policy.name(),
+                    a.order,
+                    mapped,
+                    perm
+                ));
+            }
+            if b.batches != a.batches {
+                return Err(format!(
+                    "{}: batches {:?} != {:?}",
+                    policy.name(),
+                    a.batches,
+                    b.batches
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_policies_total_under_nan_and_zero_predictors() {
+    // PR 5 regression pin: every comparator in the policy zoo must be a
+    // total order even when the predictor emits NaN/0 latencies or an
+    // SLO bound is NaN — no panic, and the plan stays a valid partition.
+    let zero = LatencyPredictor::new(PhaseCoeffs::ZERO, PhaseCoeffs::ZERO);
+    let nan = LatencyPredictor::new(
+        PhaseCoeffs { alpha: f64::NAN, beta: 0.0, gamma: 1.0, delta: 0.0 },
+        PhaseCoeffs { alpha: 0.0, beta: f64::NAN, gamma: 0.0, delta: 1.0 },
+    );
+    let policies = [
+        Policy::Fcfs,
+        Policy::Sjf,
+        Policy::Edf,
+        Policy::Mlfq,
+        Policy::SlackIndex,
+        Policy::EdfThreshold,
+    ];
+    check("policies total under degenerate predictors", 30, |rng| {
+        let n = 1 + rng.below(9);
+        let max_batch = 1 + rng.below(4);
+        let mut jobs = random_jobs(rng, n);
+        // poison one SLO bound with NaN half the time
+        if rng.chance(0.5) {
+            let k = rng.below(n);
+            jobs[k].slo = Slo::E2e { e2e_ms: f64::NAN };
+        }
+        for pred in [&zero, &nan] {
+            let ev = Evaluator::new(&jobs, pred);
+            for policy in policies {
+                let (s, _) = policy.plan(&ev, max_batch);
+                s.validate(max_batch)
+                    .map_err(|e| format!("{}: {e}", policy.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slack_index_matches_selection_argmin_reference() {
+    // SlackIndex is a sort by (deadline − solo_e2e)/solo_e2e; the naive
+    // reference repeatedly extracts the argmin (first index on ties).
+    // Stable sort ⇒ the two must agree exactly.
+    let pred = LatencyPredictor::paper_table2();
+    check("slack-index == selection argmin", 40, |rng| {
+        let n = 1 + rng.below(7);
+        let max_batch = 1 + rng.below(4);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let slack = |j: usize| {
+            let e = ev.solo_e2e_ms(j);
+            (deadline(&jobs[j]) - e) / e
+        };
+        let mut remaining: Vec<usize> = (0..n).collect();
+        let mut reference = Vec::with_capacity(n);
+        while !remaining.is_empty() {
+            let (pos, _) = remaining
+                .iter()
+                .enumerate()
+                .min_by(|(_, &a), (_, &b)| slack(a).total_cmp(&slack(b)))
+                .unwrap();
+            reference.push(remaining.remove(pos));
+        }
+        let (s, _) = Policy::SlackIndex.plan(&ev, max_batch);
+        if s.order != reference {
+            return Err(format!(
+                "order {:?} != reference {:?}",
+                s.order, reference
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn edf_threshold_matches_direct_argmax_reference() {
+    // EdfThreshold = EDF order + the statically-batched G-argmax over
+    // k ∈ 1..=max_batch (smallest k on ties). Recompute that argmax
+    // directly and compare the chosen schedule.
+    let pred = LatencyPredictor::paper_table2();
+    check("edf-threshold == direct argmax", 40, |rng| {
+        let n = 1 + rng.below(7);
+        let max_batch = 1 + rng.below(6);
+        let jobs = random_jobs(rng, n);
+        let ev = Evaluator::new(&jobs, &pred);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            deadline(&jobs[a]).total_cmp(&deadline(&jobs[b]))
+        });
+        let mut best: Option<(Schedule, f64)> = None;
+        for k in 1..=max_batch {
+            let s = Schedule::from_order(order.clone(), k);
+            let g = ev.eval(&s).g;
+            let better = match &best {
+                None => true,
+                Some((_, bg)) => g > *bg,
+            };
+            if better {
+                best = Some((s, g));
+            }
+        }
+        let (reference, g_ref) = best.unwrap();
+        let (s, stats) = Policy::EdfThreshold.plan(&ev, max_batch);
+        let stats = stats.ok_or("edf-threshold must report stats")?;
+        if stats.evals != max_batch {
+            return Err(format!(
+                "evals {} != batch sizes tried {max_batch}",
+                stats.evals
+            ));
+        }
+        if s.order != reference.order || s.batches != reference.batches {
+            return Err(format!(
+                "schedule {:?}/{:?} != reference {:?}/{:?} (G {g_ref})",
+                s.order, s.batches, reference.order, reference.batches
+            ));
+        }
+        // the threshold search dominates plain EDF by construction
+        let (edf, _) = Policy::Edf.plan(&ev, max_batch);
+        let (g_thr, g_edf) = (ev.eval(&s).g, ev.eval(&edf).g);
+        if g_thr < g_edf - 1e-12 {
+            return Err(format!("threshold G {g_thr} below EDF G {g_edf}"));
+        }
+        Ok(())
+    });
+}
