@@ -118,6 +118,18 @@ pub struct KvConfig {
     /// the mean prediction. Exactly `1.0` (the default) is the escape
     /// hatch: footprints are the pre-quantile ones, bit for bit.
     pub lo_mult: f64,
+    /// Modeled host↔device swap link bandwidth in GB/s (1 GB/s = 1 MB/ms),
+    /// mirroring the engine's [`crate::engine::sim::PreemptConfig`]. `0.0`
+    /// (the default) means the search does not price preemption: an
+    /// overcommitted plan is vetoed/penalized exactly as before, bit for
+    /// bit.
+    pub swap_gbps: f64,
+    /// Host swap-buffer capacity in blocks (provenance only; the
+    /// per-block swap cost is what enters the objective).
+    pub host_blocks: u64,
+    /// KV block size in MB (`block_tokens × mb_per_token`), needed to
+    /// turn the link bandwidth into a per-block transfer time.
+    pub block_mb: f64,
 }
 
 impl Default for KvConfig {
@@ -134,6 +146,9 @@ impl KvConfig {
         mode: KvMode::Unlimited,
         phase: KvPhaseModel::Reserve,
         lo_mult: 1.0,
+        swap_gbps: 0.0,
+        host_blocks: 0,
+        block_mb: 0.0,
     };
 
     /// Hard-feasibility pool of `pool_blocks` blocks.
@@ -142,8 +157,7 @@ impl KvConfig {
             block_tokens: DEFAULT_BLOCK_TOKENS,
             pool_blocks,
             mode: KvMode::Hard,
-            phase: KvPhaseModel::Reserve,
-            lo_mult: 1.0,
+            ..KvConfig::UNLIMITED
         }
     }
 
@@ -153,8 +167,7 @@ impl KvConfig {
             block_tokens: DEFAULT_BLOCK_TOKENS,
             pool_blocks,
             mode: KvMode::Soft { weight },
-            phase: KvPhaseModel::Reserve,
-            lo_mult: 1.0,
+            ..KvConfig::UNLIMITED
         }
     }
 
@@ -202,8 +215,7 @@ impl KvConfig {
             block_tokens,
             pool_blocks: pool_blocks_from_mb(pool_mb, mem, block_tokens),
             mode,
-            phase: KvPhaseModel::Reserve,
-            lo_mult: 1.0,
+            ..KvConfig::UNLIMITED
         }
     }
 
@@ -238,11 +250,76 @@ impl KvConfig {
         !matches!(self.mode, KvMode::Unlimited) && self.pool_blocks != u64::MAX
     }
 
+    /// This configuration with swap-preemption pricing enabled: an
+    /// overcommitted plan is no longer vetoed outright but *priced* — the
+    /// excess is assumed to be covered at execution by swap-preempting
+    /// blocks over a `gbps` link (see [`KvConfig::preempt_score`]).
+    pub fn with_swap(
+        self,
+        gbps: f64,
+        block_mb: f64,
+        host_blocks: u64,
+    ) -> KvConfig {
+        KvConfig { swap_gbps: gbps, block_mb, host_blocks, ..self }
+    }
+
+    /// Swap transfer time per block (ms): `block_mb / swap_gbps`
+    /// (1 GB/s = 1 MB/ms). 0 when no link is configured.
+    #[inline]
+    pub fn swap_ms_per_block(&self) -> f64 {
+        if self.swap_gbps > 0.0
+            && self.swap_gbps.is_finite()
+            && self.block_mb > 0.0
+        {
+            self.block_mb / self.swap_gbps
+        } else {
+            0.0
+        }
+    }
+
+    /// True when the search prices overcommitment as preemption cost
+    /// instead of vetoing/penalizing it: a binding pool with a configured
+    /// swap link. With the default `swap_gbps == 0` this is always false
+    /// and every acceptance path keeps its legacy arithmetic bit for bit.
+    #[inline]
+    pub fn prices_preemption(&self) -> bool {
+        self.binding() && self.swap_ms_per_block() > 0.0
+    }
+
+    /// Preemption-priced score of a schedule: at zero excess this is `g`
+    /// unchanged (same bits — the bit-identity hinge); an overcommitted
+    /// schedule is scored as if its excess blocks each pay one swap-out
+    /// plus one swap-in on the critical path, inflating the G
+    /// denominator: `met / (total_e2e + 2·swap_ms_per_block·excess)`.
+    /// Monotone in excess, so the search still descends toward
+    /// feasibility — but a small overcommit with cheap swap can now
+    /// outscore a feasible plan that sacrifices deadlines.
+    #[inline]
+    pub fn preempt_score(
+        &self,
+        g: f64,
+        met: usize,
+        total_e2e_ms: f64,
+        excess_blocks: u64,
+    ) -> f64 {
+        if excess_blocks == 0 {
+            g
+        } else {
+            let penalty_ms =
+                2.0 * self.swap_ms_per_block() * excess_blocks as f64;
+            met as f64 / (total_e2e_ms + penalty_ms)
+        }
+    }
+
     /// True when moves should be vetoed pre-application (hard mode only;
-    /// soft mode lets the search traverse infeasible states).
+    /// soft mode lets the search traverse infeasible states, and a
+    /// configured swap link turns hard vetoes into priced acceptance —
+    /// see [`KvConfig::prices_preemption`]).
     #[inline]
     pub fn vetoes_moves(&self) -> bool {
-        matches!(self.mode, KvMode::Hard) && self.pool_blocks != u64::MAX
+        matches!(self.mode, KvMode::Hard)
+            && self.pool_blocks != u64::MAX
+            && !self.prices_preemption()
     }
 
     /// Blocks by which one batch's occupancy exceeds the pool (0 when the
@@ -627,6 +704,34 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn preemption_pricing_gates_and_score() {
+        // default: no link configured, nothing priced, vetoes unchanged
+        let hard = KvConfig::hard(10);
+        assert_eq!(hard.swap_ms_per_block(), 0.0);
+        assert!(!hard.prices_preemption());
+        assert!(hard.vetoes_moves());
+        // a swap link on a binding hard pool flips vetoes into pricing
+        let priced = hard.with_swap(8.0, 8.0, 64);
+        assert_eq!(priced.swap_ms_per_block(), 1.0);
+        assert!(priced.prices_preemption());
+        assert!(!priced.vetoes_moves());
+        // …but an unlimited pool never prices anything
+        assert!(!KvConfig::UNLIMITED.with_swap(8.0, 8.0, 64).prices_preemption());
+        // degenerate links are treated as absent
+        assert!(!hard.with_swap(0.0, 8.0, 64).prices_preemption());
+        assert!(!hard.with_swap(f64::INFINITY, 8.0, 64).prices_preemption());
+        assert!(!hard.with_swap(8.0, 0.0, 64).prices_preemption());
+        // score: bit-identical g at zero excess, monotone decreasing after
+        let g = 2.0 / 3000.0;
+        assert_eq!(priced.preempt_score(g, 2, 3000.0, 0).to_bits(), g.to_bits());
+        let s1 = priced.preempt_score(g, 2, 3000.0, 5);
+        let s2 = priced.preempt_score(g, 2, 3000.0, 50);
+        assert!(s1 < g && s2 < s1, "score must fall with excess: {s1} {s2}");
+        // 5 excess blocks at 1 ms/block charge 10 ms round-trip
+        assert_eq!(s1, 2.0 / 3010.0);
     }
 
     #[test]

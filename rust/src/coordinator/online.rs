@@ -102,12 +102,15 @@
 //! yet) and replans with no planned next batch run at the configured
 //! budget. Off by default — the fixed-budget behaviour, bit for bit.
 
+use std::collections::{HashSet, VecDeque};
+
 use anyhow::{bail, Result};
 
 use crate::coordinator::kv::{self, KvPhaseModel};
 use crate::coordinator::objective::{
     Eval, Evaluator, Job, Schedule, TimelineOrigin,
 };
+use crate::coordinator::policies::{slack_key, slo_deadline_ms};
 use crate::coordinator::pred_table::PredTable;
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::annealing::{
@@ -186,6 +189,21 @@ pub struct OnlineStats {
     /// ([`crate::server::front`]) — report it via
     /// [`WaveController::note_deferrals`].
     pub deferrals: usize,
+    /// Engine-side preemptions (mid-decode suspensions) observed across
+    /// this run's dispatched batches: the delta of
+    /// [`crate::engine::PreemptionStats::preemptions`] around each
+    /// `run_batch`. Distinct from `deferrals` by construction — a
+    /// deferral holds a request *out* of the wave before admission, a
+    /// preemption suspends it *after* dispatch — so the two counters
+    /// never alias one request event (the pre-split accounting folded
+    /// both into `deferrals` and double-counted
+    /// deferred → admitted → preempted requests).
+    pub preemptions: usize,
+    /// Requests this instance shed to a fleet peer
+    /// ([`run_online_fleet_migrating`]); counted on the shedding (source)
+    /// instance, once per moved request. Always 0 on single-instance
+    /// fleets — there is no peer to steal work.
+    pub migrations: usize,
 }
 
 impl OnlineStats {
@@ -322,6 +340,11 @@ pub struct WaveController<'a> {
     /// one temperature on one chain); `None` until the first replan
     /// provides a measurement.
     ewma_ms_per_unit: Option<f64>,
+    /// Request ids already counted in [`OnlineStats::deferrals`]
+    /// ([`WaveController::note_deferral_of`]): a request that cycles
+    /// defer → admit → defer (e.g. bounced back by a migration) counts
+    /// once for the lifetime of the controller.
+    deferred_ids: HashSet<u64>,
     stats: OnlineStats,
     /// Last replan's search stats (None before the first admission).
     last_search: Option<SearchStats>,
@@ -363,6 +386,7 @@ impl<'a> WaveController<'a> {
             fold_end: 0.0,
             adaptive_budget: false,
             ewma_ms_per_unit: None,
+            deferred_ids: HashSet::new(),
             stats: OnlineStats::default(),
             last_search: None,
         }
@@ -506,6 +530,36 @@ impl<'a> WaveController<'a> {
     /// counter next to the rest of the admission diagnostics.
     pub fn note_deferrals(&mut self, n: usize) {
         self.stats.deferrals += n;
+    }
+
+    /// Record the saturation deferral of request `id`, counting it **at
+    /// most once** for the lifetime of the controller however many
+    /// defer → admit → defer cycles the request goes through (re-deferral
+    /// after a drift replan re-saturated the backlog, or after a fleet
+    /// migration bounced it to — and back from — a peer). Returns whether
+    /// the deferral was newly counted. The bulk
+    /// [`WaveController::note_deferrals`] path cannot dedupe; callers
+    /// holding stable request ids should prefer this.
+    pub fn note_deferral_of(&mut self, id: u64) -> bool {
+        let first = self.deferred_ids.insert(id);
+        if first {
+            self.stats.deferrals += 1;
+        }
+        first
+    }
+
+    /// Accumulate engine-observed preemptions
+    /// ([`OnlineStats::preemptions`]) — the event loops report the
+    /// per-dispatch [`crate::engine::Engine::preemption_stats`] delta
+    /// here, keeping it next to the admission diagnostics.
+    pub fn note_preemptions(&mut self, n: usize) {
+        self.stats.preemptions += n;
+    }
+
+    /// Accumulate requests shed to a fleet peer
+    /// ([`OnlineStats::migrations`]).
+    pub fn note_migrations(&mut self, n: usize) {
+        self.stats.migrations += n;
     }
 
     /// Per-replan SA seed: the first replan uses the configured seed
@@ -1046,6 +1100,13 @@ pub struct OnlineOpts {
     /// predicted execution window of the next batch to dispatch. Off by
     /// default — the fixed-budget behaviour, bit for bit.
     pub adaptive_budget: bool,
+    /// Fleet-level work stealing ([`run_online_fleet_migrating`]): a
+    /// saturated instance sheds slack-ordered deferred work to a
+    /// non-saturated peer's wave queue. Read only by the migrating fleet
+    /// loop — the single-instance loops have no peer to steal from — and
+    /// off by default: the independent per-instance behaviour, bit for
+    /// bit.
+    pub migrate: bool,
 }
 
 /// Event loop: drive one engine from a timestamped arrival stream (module
@@ -1131,9 +1192,11 @@ pub fn run_online_opts(
             if ctl.saturated() {
                 // Admission would overcommit the planned backlog: defer to
                 // the next replan (after dispatching frees the pool).
-                // Only first-time deferrals count — carried jobs already
-                // did.
-                ctl.note_deferrals(fresh.len() - carried);
+                // Counting is per request id — a job can only ever count
+                // one deferral, whatever cycles it goes through.
+                for job in fresh.iter().skip(carried) {
+                    ctl.note_deferral_of(requests[job.req_idx].id);
+                }
                 deferred = fresh;
             } else if opts.arrival_aware {
                 let arrs: Vec<f64> = fresh
@@ -1161,7 +1224,24 @@ pub fn run_online_opts(
                     }
                 })
                 .collect();
+            // Absolute SLO deadlines feed the engine's slack-ordered
+            // preemption victim selection; a no-op on engines without a
+            // preemption model. The preemption counter is delta-tracked
+            // around the dispatch so it stays distinct from deferrals.
+            let deadlines: Vec<(u64, f64)> = d
+                .jobs
+                .iter()
+                .map(|job| {
+                    let r = &requests[job.req_idx];
+                    (r.id, r.arrival_ms + slo_deadline_ms(&r.slo))
+                })
+                .collect();
+            engine.set_deadlines(&deadlines);
+            let pre = engine.preemption_stats().preemptions;
             let items = engine.run_batch(&batch)?;
+            ctl.note_preemptions(
+                engine.preemption_stats().preemptions.saturating_sub(pre),
+            );
             let first_new = completions.len();
             for (job, item) in d.jobs.iter().zip(&items) {
                 completions.push(super::to_completion(
@@ -1294,6 +1374,312 @@ pub fn run_online_fleet_opts(
     }
     completions.sort_by_key(|c| c.id);
     Ok((completions, outcomes))
+}
+
+/// [`run_online_fleet_opts`] with **cross-instance migration**: the
+/// per-instance event loops are interleaved round-robin in one global
+/// loop, and between rounds a saturated instance sheds its deferred work
+/// to a non-saturated peer's wave queue (work stealing between the
+/// per-instance admission queues).
+///
+/// Mechanics per migration round, all deterministic:
+///
+/// * only sources that are [`WaveController::saturated`] **and** holding
+///   deferred arrivals shed work — a deferred request is stuck behind a
+///   full pool's worth of planned backlog, which is exactly the state
+///   migration exists to drain;
+/// * a source considers its deferred requests most-urgent-first
+///   (ascending [`slack_key`] against the source clock, ties by request
+///   index), so the work that can least afford the wait moves first;
+/// * the target is the non-saturated peer with the smallest undispatched
+///   backlog that has block headroom for the request (ties to the lowest
+///   instance index); requests no peer can host stay deferred at the
+///   source — residual overcommit is the engine preemption layer's
+///   problem, not silently dropped;
+/// * migrations are counted on the shedding instance
+///   ([`OnlineStats::migrations`]), and the fleet-level deferral dedup
+///   spans instances, so a request bounced across queues still counts
+///   one deferral.
+///
+/// With `opts.migrate == false` — or a single-instance fleet, which has
+/// no peer — no migration is ever attempted, and because per-instance
+/// state is otherwise independent, the interleaved loop replays
+/// [`run_online_fleet_opts`] bit for bit.
+pub fn run_online_fleet_migrating(
+    requests: &[Request],
+    predicted_out: &[usize],
+    engines: &mut [Box<dyn Engine + Send>],
+    predictor: &LatencyPredictor,
+    params: &SaParams,
+    strategy: ReplanStrategy,
+    opts: OnlineOpts,
+) -> Result<(Vec<Completion>, Vec<OnlineOutcome>)> {
+    assert_eq!(requests.len(), predicted_out.len());
+    assert!(!engines.is_empty());
+    assert!(
+        requests.iter().all(|r| r.arrival_ms.is_finite()),
+        "arrival times must be finite"
+    );
+    debug_assert!(
+        requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+        "arrival stream must be sorted by arrival_ms"
+    );
+    let n_inst = engines.len();
+    // Round-robin assignment of *global* request indices — the same split
+    // run_online_fleet applies. Jobs keep their global req_idx, so a
+    // migrated request needs no re-indexing at the target.
+    let mut pending: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_inst];
+    for g in 0..requests.len() {
+        pending[g % n_inst].push_back(g);
+    }
+    let mut ctls: Vec<WaveController> = (0..n_inst)
+        .map(|inst| {
+            let p =
+                SaParams { seed: instance_seed(params.seed, inst), ..*params };
+            let mut c = WaveController::new(predictor, p, strategy);
+            if opts.compact_dispatched {
+                c = c.with_compaction();
+            }
+            if opts.adaptive_budget {
+                c = c.with_adaptive_budget();
+            }
+            c
+        })
+        .collect();
+    let mut deferred: Vec<Vec<usize>> = vec![Vec::new(); n_inst];
+    let mut completed: Vec<Vec<Completion>> = vec![Vec::new(); n_inst];
+    // Fleet-level first-deferral dedup: a request bounced between
+    // instances by migration must still count exactly one deferral.
+    let mut deferral_counted: HashSet<u64> = HashSet::new();
+
+    loop {
+        let mut progressed = false;
+        // Phase 1 — admission: deferred work first (it arrived long ago),
+        // then everything that has arrived by each instance's clock.
+        // Per instance and per round this is exactly run_online's
+        // admit-then-dispatch sequence; the phases only batch the steps
+        // across instances so migration can observe every queue in its
+        // post-admission (saturated-or-not) state, *before* a dispatch
+        // drains the backlog the deferral was measured against.
+        for i in 0..n_inst {
+            let now = engines[i].now_ms();
+            let carried: Vec<usize> = std::mem::take(&mut deferred[i]);
+            let carried_n = carried.len();
+            let mut fresh: Vec<Job> = carried
+                .iter()
+                .map(|&g| Job::from_request(g, &requests[g], predicted_out[g]))
+                .collect();
+            while let Some(&g) = pending[i].front() {
+                if requests[g].arrival_ms > now {
+                    break;
+                }
+                pending[i].pop_front();
+                fresh.push(Job::from_request(g, &requests[g], predicted_out[g]));
+            }
+            if !fresh.is_empty() {
+                if ctls[i].saturated() {
+                    for job in fresh.iter().skip(carried_n) {
+                        if deferral_counted.insert(requests[job.req_idx].id) {
+                            ctls[i].note_deferrals(1);
+                        }
+                    }
+                    deferred[i] = fresh.iter().map(|j| j.req_idx).collect();
+                } else if opts.arrival_aware {
+                    let arrs: Vec<f64> = fresh
+                        .iter()
+                        .map(|job| requests[job.req_idx].arrival_ms)
+                        .collect();
+                    ctls[i].admit_at(&fresh, &arrs)?;
+                } else {
+                    ctls[i].admit(&fresh)?;
+                }
+            }
+        }
+
+        // Phase 2 — migration: saturated sources shed deferred work to
+        // non-saturated peers (rules in the function docs). Runs between
+        // admission and dispatch so sources are seen in the saturated
+        // state that caused the deferral.
+        if opts.migrate && n_inst > 1 {
+            for src in 0..n_inst {
+                if deferred[src].is_empty() || !ctls[src].saturated() {
+                    continue;
+                }
+                let now = engines[src].now_ms();
+                // Most urgent first: least relative slack on the queue the
+                // request is actually stuck in.
+                deferred[src].sort_by(|&a, &b| {
+                    let key = |g: usize| {
+                        let r = &requests[g];
+                        let exec = predictor
+                            .predict(1, r.input_len, predicted_out[g])
+                            .exec_ms;
+                        slack_key(
+                            r.arrival_ms + slo_deadline_ms(&r.slo) - now,
+                            exec,
+                        )
+                    };
+                    key(a).total_cmp(&key(b)).then(a.cmp(&b))
+                });
+                let mut kept: Vec<usize> = Vec::new();
+                for g in std::mem::take(&mut deferred[src]) {
+                    let need = params
+                        .kv
+                        .job_blocks(requests[g].input_len, predicted_out[g]);
+                    let mut tgt: Option<(u64, usize)> = None;
+                    for j in 0..n_inst {
+                        if j == src || ctls[j].saturated() {
+                            continue;
+                        }
+                        let undis = ctls[j].undispatched_blocks();
+                        let headroom =
+                            params.kv.pool_blocks.saturating_sub(undis);
+                        if params.kv.binding() && headroom < need {
+                            continue;
+                        }
+                        let better = match tgt {
+                            None => true,
+                            Some((u, _)) => undis < u,
+                        };
+                        if better {
+                            tgt = Some((undis, j));
+                        }
+                    }
+                    match tgt {
+                        Some((_, j)) => {
+                            // Into the peer's admission queue: it is not
+                            // saturated, so the next round admits it.
+                            deferred[j].push(g);
+                            ctls[src].note_migrations(1);
+                        }
+                        None => kept.push(g),
+                    }
+                }
+                deferred[src] = kept;
+            }
+        }
+
+        // Phase 3 — dispatch one planned batch per instance, exactly as
+        // run_online would.
+        for i in 0..n_inst {
+            if let Some(d) = ctls[i].dispatch_next() {
+                let batch: Vec<EngineRequest> = d
+                    .jobs
+                    .iter()
+                    .map(|job| {
+                        let r = &requests[job.req_idx];
+                        EngineRequest {
+                            id: r.id,
+                            input_len: r.input_len,
+                            max_new_tokens: r.output_len,
+                            prompt: r.prompt.clone(),
+                        }
+                    })
+                    .collect();
+                let deadlines: Vec<(u64, f64)> = d
+                    .jobs
+                    .iter()
+                    .map(|job| {
+                        let r = &requests[job.req_idx];
+                        (r.id, r.arrival_ms + slo_deadline_ms(&r.slo))
+                    })
+                    .collect();
+                engines[i].set_deadlines(&deadlines);
+                let pre = engines[i].preemption_stats().preemptions;
+                let items = engines[i].run_batch(&batch)?;
+                ctls[i].note_preemptions(
+                    engines[i]
+                        .preemption_stats()
+                        .preemptions
+                        .saturating_sub(pre),
+                );
+                let first_new = completed[i].len();
+                for (job, item) in d.jobs.iter().zip(&items) {
+                    completed[i].push(super::to_completion(
+                        &requests[job.req_idx],
+                        item,
+                        job.output_len,
+                    ));
+                }
+                let drift = ctls[i]
+                    .reconcile(&completed[i][first_new..], engines[i].now_ms());
+                if opts.replan_drift_ms > 0.0
+                    && drift.abs() >= opts.replan_drift_ms
+                {
+                    ctls[i].replan_from_drift();
+                }
+                progressed = true;
+            }
+        }
+
+        let done = (0..n_inst).all(|i| {
+            ctls[i].drained()
+                && pending[i].is_empty()
+                && deferred[i].is_empty()
+        });
+        if done {
+            break;
+        }
+        if progressed {
+            continue;
+        }
+        // Nothing dispatched anywhere, so every controller is drained. A
+        // deferred job is admitted next round (a drained controller is
+        // never saturated); otherwise jump each idle instance's virtual
+        // clock to its next arrival.
+        if (0..n_inst).any(|i| !deferred[i].is_empty()) {
+            continue;
+        }
+        let mut moved = false;
+        for i in 0..n_inst {
+            if let Some(&g) = pending[i].front() {
+                let arrival = requests[g].arrival_ms;
+                engines[i].advance_to(arrival);
+                if engines[i].now_ms() >= arrival {
+                    moved = true;
+                }
+            }
+        }
+        if !moved {
+            // Wall-clock engines: let real time pass (mirrors run_online).
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    let mut merged: Vec<Completion> = Vec::with_capacity(requests.len());
+    let mut outcomes: Vec<OnlineOutcome> = Vec::with_capacity(n_inst);
+    for (inst, ctl) in ctls.iter().enumerate() {
+        let mut completions = std::mem::take(&mut completed[inst]);
+        completions.sort_by_key(|c| c.id);
+        let mut predicted: Vec<PredictedJob> = {
+            let ev = Evaluator::with_arrivals(
+                ctl.jobs(),
+                predictor,
+                ctl.t0_ms(),
+                ctl.arrivals(),
+            );
+            let (_, timelines) = ev.eval_detailed(ctl.plan());
+            timelines
+                .iter()
+                .map(|t| PredictedJob {
+                    id: requests[ctl.jobs()[t.job].req_idx].id,
+                    wait_ms: t.wait_ms,
+                    e2e_ms: t.wait_ms + t.exec_ms,
+                })
+                .collect()
+        };
+        predicted.sort_by_key(|p| p.id);
+        merged.extend_from_slice(&completions);
+        outcomes.push(OnlineOutcome {
+            completions,
+            stats: *ctl.stats(),
+            final_eval: ctl.eval(),
+            predicted,
+            seed: instance_seed(params.seed, inst),
+        });
+    }
+    merged.sort_by_key(|c| c.id);
+    Ok((merged, outcomes))
 }
 
 #[cfg(test)]
@@ -1975,5 +2361,179 @@ mod tests {
         assert_eq!(out.stats.dispatched_jobs, 10);
         // every executed batch was a singleton (pool fits only one job)
         assert!(out.completions.iter().all(|c| c.batch_size == 1));
+    }
+
+    #[test]
+    fn deferral_and_preemption_counters_stay_distinct() {
+        // The pre-split accounting folded engine preemptions into the
+        // deferral counter, double-counting a request that was deferred,
+        // admitted, and then preempted. The counters are now distinct and
+        // deferrals dedupe per request id across defer → admit → defer
+        // cycles.
+        let pred = predictor();
+        let mut ctl =
+            WaveController::new(&pred, params(2, 1), ReplanStrategy::Warm);
+        assert!(ctl.note_deferral_of(7));
+        assert!(!ctl.note_deferral_of(7), "re-deferral must not recount");
+        assert!(ctl.note_deferral_of(9));
+        assert_eq!(ctl.stats().deferrals, 2);
+        ctl.note_preemptions(3);
+        ctl.note_migrations(2);
+        // preemptions and migrations land in their own counters — never
+        // back into deferrals
+        assert_eq!(ctl.stats().deferrals, 2);
+        assert_eq!(ctl.stats().preemptions, 3);
+        assert_eq!(ctl.stats().migrations, 2);
+    }
+
+    fn skewed_fleet_trace() -> (Vec<Request>, Vec<usize>) {
+        // Round-robin sends even indices to instance 0 and odd to
+        // instance 1. Evens are heavy (112+16 tokens = 8 blocks on a
+        // 12-block pool — singleton batches, a few hundred ms each); odds
+        // are tiny (12+4 tokens = 1 block, fast). Pairs arrive together
+        // every 100 ms — far faster than instance 0 can serve — so its
+        // backlog saturates and defers while instance 1 keeps ≤ 4 blocks
+        // of backlog, leaving ≥ 8 blocks of headroom for a stolen heavy:
+        // the work-stealing scenario.
+        let reqs: Vec<Request> = (0..20)
+            .map(|g| {
+                let (input, output) =
+                    if g % 2 == 0 { (112, 16) } else { (12, 4) };
+                let mut r = Request::synthetic(
+                    g as u64,
+                    TaskType::Code,
+                    input,
+                    output,
+                    Slo::E2e { e2e_ms: 60_000.0 },
+                );
+                r.arrival_ms = 100.0 * (g / 2) as f64;
+                r
+            })
+            .collect();
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        (reqs, outs)
+    }
+
+    #[test]
+    fn fleet_migration_sheds_to_idle_peer_and_is_deterministic() {
+        use crate::coordinator::kv::KvConfig;
+        let run = || {
+            let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+            profile.noise_std = 0.0;
+            let pred = profile.truth;
+            let mut engines: Vec<Box<dyn Engine + Send>> = (0..2)
+                .map(|i| {
+                    Box::new(SimEngine::new(profile.clone(), 4, i as u64))
+                        as Box<dyn Engine + Send>
+                })
+                .collect();
+            let (reqs, outs) = skewed_fleet_trace();
+            let sa =
+                SaParams { kv: KvConfig::hard(12), ..params(4, 7) };
+            run_online_fleet_migrating(
+                &reqs,
+                &outs,
+                &mut engines,
+                &pred,
+                &sa,
+                ReplanStrategy::Warm,
+                OnlineOpts {
+                    compact_dispatched: true,
+                    migrate: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let (completions, outcomes) = run();
+        // exactly-once completion across the fleet
+        assert_eq!(completions.len(), 20);
+        let ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+        // the saturated heavy instance shed work to its idle peer
+        let migrations: usize =
+            outcomes.iter().map(|o| o.stats.migrations).sum();
+        assert!(migrations >= 1, "no migration on a skewed fleet");
+        // the saturated heavy queue (instance 0) is a shedding source
+        assert!(outcomes[0].stats.migrations >= 1, "{:?}", outcomes[0].stats);
+        // fleet-level dedup: each request counts at most one deferral
+        let deferrals: usize =
+            outcomes.iter().map(|o| o.stats.deferrals).sum();
+        assert!(deferrals <= 20);
+        // fixed seed ⇒ identical victim/target choices and completions
+        let (c2, o2) = run();
+        assert_eq!(completions.len(), c2.len());
+        for (a, b) in completions.iter().zip(&c2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.e2e_ms.to_bits(), b.e2e_ms.to_bits());
+        }
+        for (a, b) in outcomes.iter().zip(&o2) {
+            assert_eq!(a.stats.migrations, b.stats.migrations);
+            assert_eq!(a.stats.deferrals, b.stats.deferrals);
+            assert_eq!(a.stats.dispatched_jobs, b.stats.dispatched_jobs);
+        }
+    }
+
+    #[test]
+    fn single_instance_fleet_never_migrates_and_replays_fleet_loop() {
+        use crate::coordinator::kv::KvConfig;
+        let mk_engine = || {
+            let mut profile = by_name("qwen7b-v100x2-vllm").unwrap();
+            profile.noise_std = 0.0;
+            vec![Box::new(SimEngine::new(profile, 4, 0))
+                as Box<dyn Engine + Send>]
+        };
+        let profile = by_name("qwen7b-v100x2-vllm").unwrap();
+        let pred = profile.truth;
+        let mut reqs: Vec<Request> = (0..10)
+            .map(|i| {
+                Request::synthetic(
+                    i as u64,
+                    TaskType::Code,
+                    160,
+                    16,
+                    Slo::E2e { e2e_ms: 1e9 },
+                )
+            })
+            .collect();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.arrival_ms = 200.0 * i as f64;
+        }
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let sa = SaParams { kv: KvConfig::hard(12), ..params(4, 7) };
+        let base_opts =
+            OnlineOpts { compact_dispatched: true, ..Default::default() };
+        let mut plain_engines = mk_engine();
+        let (plain, _) = run_online_fleet_opts(
+            &reqs,
+            &outs,
+            &mut plain_engines,
+            &pred,
+            &sa,
+            ReplanStrategy::Warm,
+            base_opts,
+        )
+        .unwrap();
+        let mut mig_engines = mk_engine();
+        let (migrating, outcomes) = run_online_fleet_migrating(
+            &reqs,
+            &outs,
+            &mut mig_engines,
+            &pred,
+            &sa,
+            ReplanStrategy::Warm,
+            OnlineOpts { migrate: true, ..base_opts },
+        )
+        .unwrap();
+        // no peer to steal from: migration never fires, and the
+        // interleaved loop replays the independent fleet loop bit for bit
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].stats.migrations, 0);
+        assert_eq!(plain.len(), migrating.len());
+        for (a, b) in plain.iter().zip(&migrating) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.e2e_ms.to_bits(), b.e2e_ms.to_bits());
+            assert_eq!(a.wait_ms.to_bits(), b.wait_ms.to_bits());
+        }
     }
 }

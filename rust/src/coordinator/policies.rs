@@ -47,13 +47,31 @@ pub enum Policy {
     Exhaustive,
 }
 
-/// Deadline a job is urgent against: the e2e bound, or TTFT for
-/// interactive SLOs (shared by `Edf` and the slack index).
-fn deadline(j: &Job) -> f64 {
-    match j.slo {
+/// Deadline an SLO is urgent against: the e2e bound, or TTFT for
+/// interactive SLOs. Shared by `Edf`, the slack index, and the
+/// preemption/migration layers (`online`, `scheduler`), so every
+/// slack-ordered decision measures urgency against the same bound.
+pub fn slo_deadline_ms(slo: &Slo) -> f64 {
+    match *slo {
         Slo::E2e { e2e_ms } => e2e_ms,
         Slo::Interactive { ttft_ms, .. } => ttft_ms,
     }
+}
+
+/// Deadline a job is urgent against ([`slo_deadline_ms`] of its SLO).
+fn deadline(j: &Job) -> f64 {
+    slo_deadline_ms(&j.slo)
+}
+
+/// The `SlackIndex` ordering key: relative laxity
+/// `(deadline − exec) / exec`, both measured from the same origin
+/// ("now" for a queued job, the current clock for a running one).
+/// Smaller is more urgent; ±inf/NaN degenerate inputs stay total under
+/// `f64::total_cmp`. Shared verbatim with the engine's preemption victim
+/// selection (`engine/sim.rs`), so victim choice and the scheduling
+/// baseline agree on what "slack" means.
+pub fn slack_key(deadline_ms: f64, exec_ms: f64) -> f64 {
+    (deadline_ms - exec_ms) / exec_ms
 }
 
 impl Policy {
@@ -113,7 +131,7 @@ impl Policy {
                 // NaN rule), no special-casing.
                 let slack = |j: usize| {
                     let e = ev.solo_e2e_ms(j);
-                    (deadline(&ev.jobs()[j]) - e) / e
+                    slack_key(deadline(&ev.jobs()[j]), e)
                 };
                 let mut order: Vec<usize> = (0..n).collect();
                 order.sort_by(|&a, &b| slack(a).total_cmp(&slack(b)));
@@ -348,6 +366,26 @@ mod tests {
             s.validate(2).unwrap_or_else(|e| {
                 panic!("{} under degenerate predictor: {e}", policy.name())
             });
+        }
+    }
+
+    #[test]
+    fn slack_key_matches_inline_formula_bitwise() {
+        // The factored-out key must be the PR 8 inline arithmetic, bit
+        // for bit — the SlackIndex ordering and the engine's preemption
+        // victim selection both hang off it.
+        for (d, e) in [
+            (900.0f64, 500.0f64),
+            (5000.0, 100.0),
+            (400.0, 310.0),
+            (0.0, 0.0),      // NaN stays NaN
+            (1.0, 0.0),      // +inf
+            (-3.5, 7.25),
+            (f64::INFINITY, 12.0),
+        ] {
+            let inline = (d - e) / e;
+            let keyed = slack_key(d, e);
+            assert_eq!(inline.to_bits(), keyed.to_bits(), "d={d} e={e}");
         }
     }
 

@@ -49,6 +49,10 @@ pub struct PredTable {
     /// Quantile-reservation multiplier the footprints were computed at
     /// ([`KvConfig::lo_mult`]); 1.0 for the exact (pre-quantile) column.
     lo_mult: f64,
+    /// Per-block swap transfer time captured from the build-time
+    /// [`KvConfig::swap_ms_per_block`]; 0.0 when the pool has no modeled
+    /// swap link (then [`PredTable::swap_cost_ms`] is identically 0).
+    swap_ms_per_block: f64,
     entries: Vec<PredictedLatency>,
     /// Per-job KV footprint in blocks (index = job).
     kv_blocks: Vec<u64>,
@@ -94,6 +98,7 @@ impl PredTable {
             max_batch,
             block_tokens: kv.block_tokens,
             lo_mult: kv.lo_mult,
+            swap_ms_per_block: kv.swap_ms_per_block(),
             entries,
             kv_blocks,
             arrival_ms: vec![0.0; jobs.len()],
@@ -232,6 +237,17 @@ impl PredTable {
     #[inline]
     pub fn kv_blocks_all(&self) -> &[u64] {
         &self.kv_blocks
+    }
+
+    /// One-direction swap transfer time for `job`'s whole KV footprint
+    /// (ms): `kv_blocks(job) × swap_ms_per_block` at the build-time pool
+    /// geometry. 0 when no swap link was configured — the objective then
+    /// never prices preemption. A suspend/resume round trip costs twice
+    /// this (out + in), matching the engine's accounting
+    /// ([`crate::engine::sim::PreemptMode::Swap`]).
+    #[inline]
+    pub fn swap_cost_ms(&self, job: usize) -> f64 {
+        self.kv_blocks[job] as f64 * self.swap_ms_per_block
     }
 
     /// Arrival time of `job` (ms) on the wave timeline; 0.0 unless set by
@@ -396,6 +412,25 @@ mod tests {
             &pred,
         );
         assert_eq!(grown.kv_blocks(2), 2);
+    }
+
+    #[test]
+    fn swap_cost_column_follows_pool_geometry() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let jobs = vec![
+            Job { req_idx: 0, input_len: 30, output_len: 3, slo: Slo::E2e { e2e_ms: 1e9 } },
+            Job { req_idx: 1, input_len: 16, output_len: 0, slo: Slo::E2e { e2e_ms: 1e9 } },
+        ];
+        // 8 MB blocks over an 8 GB/s link: 1 ms per block
+        let kv = KvConfig::hard(100).with_swap(8.0, 8.0, 64);
+        let table = PredTable::build_kv(&jobs, &pred, 3, &kv);
+        assert_eq!(table.swap_cost_ms(0), 3.0); // 3 blocks × 1 ms
+        assert_eq!(table.swap_cost_ms(1), 1.0);
+        // no link configured -> the column is identically zero
+        let plain = PredTable::build_kv(&jobs, &pred, 3, &KvConfig::hard(100));
+        assert_eq!(plain.swap_cost_ms(0), 0.0);
+        assert_eq!(plain.swap_cost_ms(1), 0.0);
     }
 
     #[test]

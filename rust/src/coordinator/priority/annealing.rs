@@ -299,6 +299,14 @@ fn temp_ladder(params: &SaParams) -> Vec<f64> {
 /// incumbent-best update, shared with the exchange step so adopting the
 /// global best can never disagree with chain-local best tracking.
 fn kv_better(kv: &KvConfig, f_a: &Eval, x_a: u64, f_b: &Eval, x_b: u64) -> bool {
+    if kv.prices_preemption() {
+        // Swap-priced ordering: overcommitment is a cost, not a veto.
+        // At zero excess both scores are the raw g (same bits), so a
+        // link-less config can never reach this branch with different
+        // results — `prices_preemption` is false there.
+        return kv.preempt_score(f_a.g, f_a.met, f_a.total_e2e_ms, x_a)
+            > kv.preempt_score(f_b.g, f_b.met, f_b.total_e2e_ms, x_b);
+    }
     match kv.mode {
         KvMode::Soft { weight } => {
             KvConfig::soft_score(f_a.g, x_a, weight)
@@ -399,7 +407,31 @@ impl<'e> ChainState<'e> {
                 };
                 let x_new = self.inc.kv_excess();
                 self.evals += 1;
-                let accept = match kv.mode {
+                let accept = if kv.prices_preemption() {
+                    // Metropolis on the swap-priced score (see
+                    // `KvConfig::preempt_score`): overcommits pay their
+                    // modeled swap round-trip instead of being ordered
+                    // out lexicographically.
+                    let s_new = kv.preempt_score(
+                        f_new.g,
+                        f_new.met,
+                        f_new.total_e2e_ms,
+                        x_new,
+                    );
+                    let s_cur = kv.preempt_score(
+                        self.f_cur.g,
+                        self.f_cur.met,
+                        self.f_cur.total_e2e_ms,
+                        self.x_cur,
+                    );
+                    if s_new > s_cur {
+                        true
+                    } else {
+                        let t_eff = (t * self.stagger / params.t0) * f_scale;
+                        self.rng.chance(((s_new - s_cur) / t_eff).exp())
+                    }
+                } else {
+                    match kv.mode {
                     KvMode::Soft { weight } => {
                         let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
                         let s_cur =
@@ -427,6 +459,7 @@ impl<'e> ChainState<'e> {
                                 ((f_new.g - self.f_cur.g) / t_eff).exp(),
                             )
                         }
+                    }
                     }
                 };
                 if accept {
@@ -647,8 +680,10 @@ fn anneal(
     // repack the best order within the pool (feasible whenever every job
     // fits alone). Never fires with an unlimited pool (x_best == 0), so
     // the bit-identity contract is untouched; mirrored verbatim in
-    // `priority_mapping_full` to keep the fast == full equivalence.
-    if matches!(kv.mode, KvMode::Hard) && x_best > 0 {
+    // `priority_mapping_full` to keep the fast == full equivalence. A
+    // swap-priced pool keeps its (deliberately) overcommitted winner:
+    // the excess is an execution-time preemption plan, not a bug.
+    if kv.vetoes_moves() && x_best > 0 {
         let repacked = hard_repack(
             &best.order,
             &best.batches[..frozen_batches],
@@ -924,25 +959,39 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
             let f_new = ev.eval(&candidate);
             let x_new = ev.kv_excess(&candidate, &kv);
             stats.evals += 1;
-            let accept = match kv.mode {
-                KvMode::Soft { weight } => {
-                    let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
-                    let s_cur = KvConfig::soft_score(f_cur.g, x_cur, weight);
-                    if s_new > s_cur {
-                        true
-                    } else {
-                        let t_eff = (t / params.t0) * f_scale;
-                        rng.chance(((s_new - s_cur) / t_eff).exp())
-                    }
+            let accept = if kv.prices_preemption() {
+                // mirror of the fast path's swap-priced Metropolis rule
+                let s_new =
+                    kv.preempt_score(f_new.g, f_new.met, f_new.total_e2e_ms, x_new);
+                let s_cur =
+                    kv.preempt_score(f_cur.g, f_cur.met, f_cur.total_e2e_ms, x_cur);
+                if s_new > s_cur {
+                    true
+                } else {
+                    let t_eff = (t / params.t0) * f_scale;
+                    rng.chance(((s_new - s_cur) / t_eff).exp())
                 }
-                _ => {
-                    if x_new != x_cur {
-                        x_new < x_cur
-                    } else if f_new.g > f_cur.g {
-                        true
-                    } else {
-                        let t_eff = (t / params.t0) * f_scale;
-                        rng.chance(((f_new.g - f_cur.g) / t_eff).exp())
+            } else {
+                match kv.mode {
+                    KvMode::Soft { weight } => {
+                        let s_new = KvConfig::soft_score(f_new.g, x_new, weight);
+                        let s_cur = KvConfig::soft_score(f_cur.g, x_cur, weight);
+                        if s_new > s_cur {
+                            true
+                        } else {
+                            let t_eff = (t / params.t0) * f_scale;
+                            rng.chance(((s_new - s_cur) / t_eff).exp())
+                        }
+                    }
+                    _ => {
+                        if x_new != x_cur {
+                            x_new < x_cur
+                        } else if f_new.g > f_cur.g {
+                            true
+                        } else {
+                            let t_eff = (t / params.t0) * f_scale;
+                            rng.chance(((f_new.g - f_cur.g) / t_eff).exp())
+                        }
                     }
                 }
             };
@@ -951,16 +1000,7 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
                 f_cur = f_new;
                 x_cur = x_new;
                 stats.accepted += 1;
-                let improved = match kv.mode {
-                    KvMode::Soft { weight } => {
-                        KvConfig::soft_score(f_cur.g, x_cur, weight)
-                            > KvConfig::soft_score(f_best.g, x_best, weight)
-                    }
-                    _ => {
-                        x_cur < x_best
-                            || (x_cur == x_best && f_cur.g > f_best.g)
-                    }
-                };
+                let improved = kv_better(&kv, &f_cur, x_cur, &f_best, x_best);
                 if improved {
                     best.order.clear();
                     best.order.extend_from_slice(&current.order);
@@ -976,7 +1016,7 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
     }
 
     // Hard-mode fallback, mirroring `anneal` (see the comment there).
-    if matches!(kv.mode, KvMode::Hard) && x_best > 0 {
+    if kv.vetoes_moves() && x_best > 0 {
         let repacked = hard_repack(
             &best.order,
             &best.batches[..0],
@@ -1279,6 +1319,51 @@ mod tests {
         let res =
             priority_mapping(&ev, &SaParams { kv, ..params(6, 1) });
         assert_eq!(ev.kv_excess(&res.schedule, &kv), 0, "{:?}", res.schedule);
+    }
+
+    #[test]
+    fn swap_priced_pool_prices_instead_of_vetoing() {
+        use crate::coordinator::kv::KvConfig;
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x5A4B);
+        let jobs: Vec<Job> = (0..12)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(120),
+                output_len: 1 + rng.below(60),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        // A generous swap link makes overcommit cheap: the search may (or
+        // may not) keep an overcommitted plan, but must stay well-formed,
+        // deterministic, and never fall back to hard repack.
+        let priced = KvConfig::hard(20).with_swap(8.0, 8.0, 64);
+        assert!(priced.prices_preemption() && !priced.vetoes_moves());
+        let p = SaParams { kv: priced, ..params(6, 7) };
+        let res = priority_mapping(&ev, &p);
+        res.schedule.validate(6).unwrap();
+        let rerun = priority_mapping(&ev, &p);
+        assert_eq!(res.schedule, rerun.schedule);
+        assert_eq!(res.eval, rerun.eval);
+        // fast == full equivalence holds on the priced branch too
+        let full = priority_mapping_full(&ev, &p);
+        assert_eq!(res.schedule, full.schedule);
+        assert_eq!(res.stats.evals, full.stats.evals);
+        assert_eq!(res.stats.accepted, full.stats.accepted);
+        // escape hatch: a zero-bandwidth link is exactly plain Hard
+        let plain = priority_mapping(&ev, &SaParams {
+            kv: KvConfig::hard(20),
+            ..params(6, 7)
+        });
+        let unpriced = priority_mapping(&ev, &SaParams {
+            kv: KvConfig::hard(20).with_swap(0.0, 8.0, 64),
+            ..params(6, 7)
+        });
+        assert_eq!(plain.schedule, unpriced.schedule);
+        assert_eq!(plain.eval.g.to_bits(), unpriced.eval.g.to_bits());
+        assert_eq!(plain.stats.evals, unpriced.stats.evals);
+        assert_eq!(plain.stats.accepted, unpriced.stats.accepted);
     }
 
     #[test]

@@ -27,8 +27,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::kv::{self, KvConfig, KvMode};
+use crate::coordinator::kv::{self, KvConfig, KvMode, KvPhaseModel};
 use crate::coordinator::objective::{Evaluator, Job, Schedule};
+use crate::coordinator::policies::{slack_key, slo_deadline_ms};
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::annealing::{
     priority_mapping, SaParams, SaResult, SearchStats,
@@ -314,6 +315,250 @@ pub fn schedule(
     })
 }
 
+/// Outcome of one [`rebalance_overcommit`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Jobs moved to a peer instance.
+    pub moved_jobs: usize,
+    /// KV blocks those jobs carried (Eq. 20 footprints).
+    pub moved_blocks: u64,
+    /// Instances that shed at least one job.
+    pub source_instances: usize,
+}
+
+/// Per-instance enforcement pool: the smaller of the engine-level cap and
+/// the instance's own Eq. 20 pool — the same bound the per-instance
+/// searches in [`schedule`] run against.
+fn enforce_pool(
+    sa: &SaParams,
+    instances: &[InstanceInfo],
+    mem: &MemoryModel,
+    inst: usize,
+) -> u64 {
+    sa.kv
+        .pool_blocks
+        .min(instances[inst].pool_blocks(mem, sa.kv.block_tokens))
+}
+
+/// Deterministic cross-instance **work-stealing repair pass** over a
+/// planned wave: while an instance's plan overcommits its KV pool
+/// ([`Evaluator::kv_excess`] > 0 under the configured phase model), the
+/// most-slack job of its worst-overflowing batch is moved to the
+/// least-loaded peer whose whole wave still fits its pool, where it lands
+/// as a trailing singleton batch in that peer's queue. Victims are chosen
+/// by descending [`slack_key`] (ties to the later plan position — the
+/// engine's own preemption-victim rule), targets by ascending block load
+/// (ties to the lowest instance index), so repeated runs over the same
+/// outcome make identical choices.
+///
+/// Overcommitted plans exist by design: a Soft pool prices excess instead
+/// of forbidding it, and a Hard pool with preemption pricing
+/// ([`KvConfig::prices_preemption`]) deliberately keeps overcommitted
+/// plans whose cost model says the engine-side suspend/resume is worth
+/// it. This pass converts that residual overcommit into peer capacity
+/// when a peer has any — jobs no peer can host simply stay, and the
+/// engine's preemption model absorbs them at execution time.
+///
+/// Returns what moved; zero stats (and an untouched outcome) when the
+/// pool is unlimited, the fleet has one instance, or nothing overcommits.
+pub fn rebalance_overcommit(
+    outcome: &mut ScheduleOutcome,
+    instances: &[InstanceInfo],
+    predictor: &LatencyPredictor,
+    mem: &MemoryModel,
+    sa: &SaParams,
+) -> MigrationStats {
+    let mut stats = MigrationStats::default();
+    let n = outcome.plans.len();
+    if !sa.kv.binding() || n <= 1 {
+        return stats;
+    }
+    assert_eq!(n, instances.len());
+    let pools: Vec<u64> =
+        (0..n).map(|i| enforce_pool(sa, instances, mem, i)).collect();
+    // Reserve-style total load: what a peer's whole wave pins if every
+    // job coexists — the conservative bound the assignment pass also
+    // uses, so a target absorbing `need` more blocks never overcommits.
+    fn load(plan: &InstancePlan, kvc: &KvConfig) -> u64 {
+        plan.jobs
+            .iter()
+            .map(|j| kvc.job_blocks(j.input_len, j.output_len))
+            .sum()
+    }
+
+    for src in 0..n {
+        let mut shed_any = false;
+        loop {
+            let kv_src = KvConfig { pool_blocks: pools[src], ..sa.kv };
+            let excess = {
+                let plan = &outcome.plans[src];
+                if plan.jobs.is_empty() {
+                    0
+                } else {
+                    Evaluator::new(&plan.jobs, predictor)
+                        .kv_excess(&plan.schedule, &kv_src)
+                }
+            };
+            if excess == 0 {
+                break;
+            }
+            // Victim batch: the largest per-batch overflow under the
+            // active phase model (ties to the earliest batch).
+            let (pos, lj, job, need) = {
+                let plan = &outcome.plans[src];
+                let mut vb: Option<(u64, usize, usize)> = None;
+                for (_, start, size) in plan.schedule.batch_spans() {
+                    let blocks = match sa.kv.phase {
+                        KvPhaseModel::Reserve => plan.schedule.order
+                            [start..start + size]
+                            .iter()
+                            .map(|&j| {
+                                sa.kv.job_blocks(
+                                    plan.jobs[j].input_len,
+                                    plan.jobs[j].output_len,
+                                )
+                            })
+                            .sum::<u64>(),
+                        KvPhaseModel::Phased => {
+                            let members: Vec<(usize, usize)> = plan
+                                .schedule
+                                .order[start..start + size]
+                                .iter()
+                                .map(|&j| {
+                                    (
+                                        plan.jobs[j].input_len,
+                                        plan.jobs[j].output_len,
+                                    )
+                                })
+                                .collect();
+                            kv::phased_peak_blocks(
+                                &members,
+                                sa.kv.block_tokens,
+                            )
+                        }
+                    };
+                    let over = blocks.saturating_sub(pools[src]);
+                    if over > 0 {
+                        let better = match vb {
+                            None => true,
+                            Some((bo, ..)) => over > bo,
+                        };
+                        if better {
+                            vb = Some((over, start, size));
+                        }
+                    }
+                }
+                let Some((_, start, size)) = vb else { break };
+                // Victim job: most slack within the batch — the work that
+                // can best afford a fresh queue — ties to the later
+                // position, mirroring the engine's victim rule.
+                let mut victim: Option<(f64, usize)> = None;
+                for pos in start..start + size {
+                    let j = plan.schedule.order[pos];
+                    let job = &plan.jobs[j];
+                    let exec = predictor
+                        .predict(1, job.input_len, job.output_len)
+                        .exec_ms;
+                    let s = slack_key(slo_deadline_ms(&job.slo), exec);
+                    let better = match victim {
+                        None => true,
+                        Some((vs, _)) => s >= vs,
+                    };
+                    if better {
+                        victim = Some((s, pos));
+                    }
+                }
+                let (_, pos) = victim.expect("overflowing batch is nonempty");
+                let lj = plan.schedule.order[pos];
+                let job = plan.jobs[lj];
+                (pos, lj, job, sa.kv.job_blocks(job.input_len, job.output_len))
+            };
+            // Target: least-loaded peer whose whole wave still fits its
+            // pool after absorbing the job (ties to the lowest index).
+            let mut tgt: Option<(u64, usize)> = None;
+            for j in 0..n {
+                if j == src {
+                    continue;
+                }
+                let l = load(&outcome.plans[j], &sa.kv);
+                if l + need > pools[j] {
+                    continue;
+                }
+                let better = match tgt {
+                    None => true,
+                    Some((bl, _)) => l < bl,
+                };
+                if better {
+                    tgt = Some((l, j));
+                }
+            }
+            let Some((_, tgt)) = tgt else { break };
+            // Move: drop the victim from the source plan (its batch
+            // shrinks in place; an emptied batch disappears) and append
+            // it to the target as a trailing singleton batch.
+            {
+                let plan = &mut outcome.plans[src];
+                let k = {
+                    // batch containing `pos`
+                    let mut k = 0;
+                    let mut end = plan.schedule.batches[0];
+                    while pos >= end {
+                        k += 1;
+                        end += plan.schedule.batches[k];
+                    }
+                    k
+                };
+                plan.schedule.order.remove(pos);
+                plan.schedule.batches[k] -= 1;
+                if plan.schedule.batches[k] == 0 {
+                    plan.schedule.batches.remove(k);
+                }
+                plan.jobs.remove(lj);
+                for o in plan.schedule.order.iter_mut() {
+                    if *o > lj {
+                        *o -= 1;
+                    }
+                }
+            }
+            {
+                let plan = &mut outcome.plans[tgt];
+                let nl = plan.jobs.len();
+                plan.jobs.push(job);
+                plan.schedule.order.push(nl);
+                plan.schedule.batches.push(1);
+            }
+            stats.moved_jobs += 1;
+            stats.moved_blocks += need;
+            shed_any = true;
+        }
+        if shed_any {
+            stats.source_instances += 1;
+        }
+    }
+    stats
+}
+
+/// [`schedule`] followed by [`rebalance_overcommit`]: Algorithm 2 plus a
+/// cross-instance decode-migration repair pass. [`schedule`] itself is
+/// untouched — callers wanting the paper's independent per-instance plans
+/// keep calling it — and with an unlimited or never-overcommitted pool
+/// this wrapper returns the identical outcome with zeroed
+/// [`MigrationStats`].
+pub fn schedule_with_migration(
+    requests: &[Request],
+    predicted_out: &[usize],
+    instances: &[InstanceInfo],
+    predictor: &LatencyPredictor,
+    mem: &MemoryModel,
+    sa: &SaParams,
+) -> Result<(ScheduleOutcome, MigrationStats)> {
+    let mut outcome =
+        schedule(requests, predicted_out, instances, predictor, mem, sa)?;
+    let stats =
+        rebalance_overcommit(&mut outcome, instances, predictor, mem, sa);
+    Ok((outcome, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -550,5 +795,193 @@ mod tests {
                 plan.schedule
             );
         }
+    }
+
+    fn zero_stats() -> SearchStats {
+        SearchStats {
+            evals: 0,
+            accepted: 0,
+            improved: 0,
+            early_exit: false,
+            overhead_ms: 0.0,
+            cpu_ms: 0.0,
+            exchanges: 0,
+            winner_chain: 0,
+        }
+    }
+
+    /// A hand-built overcommitted wave: instance 0 plans one batch of
+    /// three 4-block jobs (12 blocks on a 10-block pool — excess 2),
+    /// instance 1 holds one 4-block job. Job deadlines differ, so the
+    /// slack order is unambiguous.
+    fn overcommitted_outcome() -> ScheduleOutcome {
+        let job = |req_idx: usize, e2e_ms: f64| Job {
+            req_idx,
+            input_len: 48,
+            output_len: 16, // 64 tokens = 4 blocks at 16 tokens/block
+            slo: Slo::E2e { e2e_ms },
+        };
+        ScheduleOutcome {
+            plans: vec![
+                InstancePlan {
+                    instance: 0,
+                    jobs: vec![
+                        job(0, 1_000.0),
+                        job(1, 50_000.0), // most slack — the victim
+                        job(2, 10_000.0),
+                    ],
+                    schedule: Schedule {
+                        order: vec![0, 1, 2],
+                        batches: vec![3],
+                    },
+                    stats: zero_stats(),
+                },
+                InstancePlan {
+                    instance: 1,
+                    jobs: vec![job(3, 5_000.0)],
+                    schedule: Schedule { order: vec![0], batches: vec![1] },
+                    stats: zero_stats(),
+                },
+            ],
+            overhead_ms: 0.0,
+            cpu_ms: 0.0,
+            exchanges: 0,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_most_slack_job_and_clears_excess() {
+        use crate::coordinator::kv::KvConfig;
+        let predictor = LatencyPredictor::paper_table2();
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        let sa =
+            SaParams { kv: KvConfig::hard(10), ..SaParams::with_max_batch(4) };
+        let inst = instances(2, 1_000_000.0);
+        let mut outcome = overcommitted_outcome();
+        let kv = sa.kv;
+        let before = Evaluator::new(&outcome.plans[0].jobs, &predictor)
+            .kv_excess(&outcome.plans[0].schedule, &kv);
+        assert_eq!(before, 2, "scenario must overcommit by 2 blocks");
+        let stats =
+            rebalance_overcommit(&mut outcome, &inst, &predictor, &mem, &sa);
+        assert_eq!(
+            stats,
+            MigrationStats {
+                moved_jobs: 1,
+                moved_blocks: 4,
+                source_instances: 1
+            }
+        );
+        // the loosest-deadline job moved; tighter deadlines stayed put
+        let src_reqs: Vec<usize> = outcome.plans[0].request_order();
+        assert_eq!(src_reqs, vec![0, 2]);
+        let tgt_reqs: Vec<usize> = outcome.plans[1].request_order();
+        assert_eq!(tgt_reqs, vec![3, 1]);
+        // the migrated job lands as a trailing singleton batch
+        assert_eq!(outcome.plans[1].schedule.batches, vec![1, 1]);
+        // both plans are valid and overcommit-free afterwards
+        for plan in &outcome.plans {
+            plan.schedule.validate(4).unwrap();
+            let ev = Evaluator::new(&plan.jobs, &predictor);
+            assert_eq!(ev.kv_excess(&plan.schedule, &kv), 0);
+        }
+        // exactly-once across the fleet
+        let mut all: Vec<usize> = outcome
+            .plans
+            .iter()
+            .flat_map(|p| p.request_order())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        // deterministic: a fresh copy makes identical choices
+        let mut again = overcommitted_outcome();
+        let stats2 =
+            rebalance_overcommit(&mut again, &inst, &predictor, &mem, &sa);
+        assert_eq!(stats, stats2);
+        for (a, b) in outcome.plans.iter().zip(&again.plans) {
+            assert_eq!(a.schedule, b.schedule);
+            assert_eq!(a.jobs, b.jobs);
+        }
+    }
+
+    #[test]
+    fn rebalance_keeps_residual_when_no_peer_has_headroom() {
+        use crate::coordinator::kv::KvConfig;
+        let predictor = LatencyPredictor::paper_table2();
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        let sa =
+            SaParams { kv: KvConfig::hard(10), ..SaParams::with_max_batch(4) };
+        let inst = instances(2, 1_000_000.0);
+        let mut outcome = overcommitted_outcome();
+        // fill instance 1 so the 4-block victim cannot fit (load 8 + 4 > 10)
+        let filler = Job {
+            req_idx: 4,
+            input_len: 48,
+            output_len: 16,
+            slo: Slo::E2e { e2e_ms: 5_000.0 },
+        };
+        outcome.plans[1].jobs.push(filler);
+        outcome.plans[1].schedule.order.push(1);
+        outcome.plans[1].schedule.batches.push(1);
+        let stats =
+            rebalance_overcommit(&mut outcome, &inst, &predictor, &mem, &sa);
+        // nothing moved: the overcommit stays and is the engine
+        // preemption layer's to absorb at execution time
+        assert_eq!(stats, MigrationStats::default());
+        assert_eq!(outcome.plans[0].jobs.len(), 3);
+        assert_eq!(outcome.plans[1].jobs.len(), 2);
+    }
+
+    #[test]
+    fn schedule_with_migration_is_identity_without_overcommit() {
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| req(i, 100 + 50 * i as usize, 20 + 10 * i as usize))
+            .collect();
+        let outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        let predictor = LatencyPredictor::paper_table2();
+        let mem = MemoryModel::default();
+        let sa = SaParams::with_max_batch(4);
+        let plain = schedule(
+            &reqs,
+            &outs,
+            &instances(3, 16_000.0),
+            &predictor,
+            &mem,
+            &sa,
+        )
+        .unwrap();
+        let (migrated, stats) = schedule_with_migration(
+            &reqs,
+            &outs,
+            &instances(3, 16_000.0),
+            &predictor,
+            &mem,
+            &sa,
+        )
+        .unwrap();
+        // unlimited pool: the repair pass is a guaranteed no-op
+        assert_eq!(stats, MigrationStats::default());
+        assert_eq!(plain.plans.len(), migrated.plans.len());
+        for (a, b) in plain.plans.iter().zip(&migrated.plans) {
+            assert_eq!(a.schedule, b.schedule);
+            assert_eq!(a.jobs, b.jobs);
+        }
+    }
+
+    #[test]
+    fn single_instance_never_migrates() {
+        use crate::coordinator::kv::KvConfig;
+        let predictor = LatencyPredictor::paper_table2();
+        let mem = MemoryModel { utility: 1.0, mb_per_token: 1.0 };
+        let sa =
+            SaParams { kv: KvConfig::hard(10), ..SaParams::with_max_batch(4) };
+        let inst = instances(1, 1_000_000.0);
+        let mut outcome = overcommitted_outcome();
+        outcome.plans.truncate(1);
+        let stats =
+            rebalance_overcommit(&mut outcome, &inst, &predictor, &mem, &sa);
+        assert_eq!(stats, MigrationStats::default());
+        assert_eq!(outcome.plans[0].jobs.len(), 3, "plan left untouched");
     }
 }

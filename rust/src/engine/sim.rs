@@ -15,13 +15,17 @@
 //!   loop, bounded by `max_batch` and KV-cache capacity; new requests
 //!   prefill into freed slots (hybrid batches à la chunked-prefill).
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::config::profiles::HardwareProfile;
 use crate::coordinator::kv::{phased_peak_blocks, KvPhaseModel};
+use crate::coordinator::policies::slack_key;
 use crate::engine::kv_cache::{BlockAllocator, KvCacheConfig};
 use crate::engine::{
-    validate_batch, Engine, EngineRequest, ItemResult, StepEvent,
+    validate_batch, Engine, EngineRequest, ItemResult, PreemptionStats,
+    StepEvent,
 };
 use crate::util::rng::Rng;
 use crate::util::stats::normal_quantile;
@@ -144,6 +148,90 @@ fn scale_lo(nominal: usize, mult: f64) -> usize {
     ((nominal as f64 * mult).round() as usize).max(1)
 }
 
+/// What happens to a victim's KV when pool exhaustion forces a
+/// mid-decode suspension (see [`PreemptConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PreemptMode {
+    /// No preemption: an overrunning member is force-stopped at its
+    /// current length (the legacy EOS-on-OOM truncation, PR 5) — the
+    /// escape hatch replaying the pre-preemption engine byte for byte.
+    #[default]
+    Off,
+    /// Drop the victim's KV; resuming re-prefills the whole context
+    /// (one noiseless `prefill_ms(1, context)` charge on the clock).
+    Recompute,
+    /// Move the victim's KV to a modeled host buffer over a PCIe-class
+    /// link; resuming copies it back. Each direction charges
+    /// `blocks × block_mb / swap_gbps` ms. When the host buffer is
+    /// full the suspension degrades to [`PreemptMode::Recompute`].
+    Swap,
+}
+
+/// Preemption policy for [`SimEngine`]: replaces EOS-on-OOM truncation
+/// with suspend/resume of the SLO-slackest member. Victims are chosen by
+/// descending [`slack_key`] (the `SlackIndex` ordering from
+/// `policies.rs`): the member with the most deadline slack — or no known
+/// deadline at all — yields first. Resume order is the reverse: the most
+/// urgent suspended member re-enters first, as soon as its context (plus
+/// one block of growth headroom) fits the pool again. All preemption
+/// costs are noiseless functions of the profile, so the timing RNG
+/// stream — and therefore every [`PreemptMode::Off`] run — is untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptConfig {
+    pub mode: PreemptMode,
+    /// Host swap-buffer capacity in KV blocks ([`PreemptMode::Swap`]).
+    pub host_blocks: u64,
+    /// Modeled host↔device link bandwidth in GB/s
+    /// ([`PreemptMode::Swap`]; 1 GB/s = 1 MB/ms).
+    pub swap_gbps: f64,
+}
+
+impl PreemptConfig {
+    /// Preemption disabled — the legacy truncation engine, bit for bit.
+    pub const OFF: PreemptConfig =
+        PreemptConfig { mode: PreemptMode::Off, host_blocks: 0, swap_gbps: 0.0 };
+
+    /// Recompute-on-resume preemption (no host buffer).
+    pub fn recompute() -> PreemptConfig {
+        PreemptConfig { mode: PreemptMode::Recompute, ..PreemptConfig::OFF }
+    }
+
+    /// Swap preemption over a `gbps` link into a `host_blocks`-block
+    /// host buffer.
+    pub fn swap(gbps: f64, host_blocks: u64) -> PreemptConfig {
+        PreemptConfig { mode: PreemptMode::Swap, host_blocks, swap_gbps: gbps }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !matches!(self.mode, PreemptMode::Off)
+    }
+
+    /// Parse a CLI spec: `off | recompute | swap`.
+    pub fn parse(
+        spec: &str,
+        swap_gbps: f64,
+        host_blocks: u64,
+    ) -> Result<PreemptConfig, String> {
+        match spec {
+            "off" => Ok(PreemptConfig::OFF),
+            "recompute" => Ok(PreemptConfig::recompute()),
+            "swap" => {
+                if !swap_gbps.is_finite() || swap_gbps <= 0.0 {
+                    return Err(format!(
+                        "swap preemption needs a positive link bandwidth, \
+                         got {swap_gbps} GB/s"
+                    ));
+                }
+                Ok(PreemptConfig::swap(swap_gbps, host_blocks))
+            }
+            other => {
+                Err(format!("bad preempt spec '{other}' (off|recompute|swap)"))
+            }
+        }
+    }
+}
+
 /// Virtual-clock engine over a hardware profile.
 pub struct SimEngine {
     profile: HardwareProfile,
@@ -171,6 +259,21 @@ pub struct SimEngine {
     /// divergence (EOS-on-OOM; diagnostics — see
     /// [`SimEngine::kv_truncations`]).
     kv_truncations: usize,
+    /// Preemption policy for planned-batch pool exhaustion (see
+    /// [`PreemptConfig`]); `Off` keeps the truncation path byte for byte.
+    preempt: PreemptConfig,
+    /// Absolute SLO deadlines (engine-clock ms) by request id, handed in
+    /// by the controller via [`Engine::set_deadlines`]; consulted only
+    /// for slack-ordered victim/resume selection (lookup by id, never
+    /// iterated — determinism does not depend on map order).
+    deadlines: HashMap<u64, f64>,
+    /// Suspend/resume/swap counters (see [`PreemptionStats`];
+    /// `kv_truncations` is merged in by [`Engine::preemption_stats`]).
+    pstats: PreemptionStats,
+    /// Host swap-buffer occupancy in blocks (Swap mode).
+    host_blocks_used: u64,
+    /// High-water mark of [`SimEngine::host_blocks_used`].
+    host_blocks_peak: u64,
     /// Batches executed (diagnostics).
     pub batches_run: usize,
     /// Decode iterations executed (diagnostics).
@@ -205,6 +308,11 @@ impl SimEngine {
             divergence: DivergenceModel::Off,
             div_rng: Rng::new(seed ^ 0xD117_E26E),
             kv_truncations: 0,
+            preempt: PreemptConfig::OFF,
+            deadlines: HashMap::new(),
+            pstats: PreemptionStats::default(),
+            host_blocks_used: 0,
+            host_blocks_peak: 0,
             batches_run: 0,
             decode_steps: 0,
             peak_used_blocks: 0,
@@ -235,9 +343,42 @@ impl SimEngine {
 
     /// Members force-stopped at EOS by KV-pool exhaustion under
     /// divergence (always 0 with divergence off: planned batches are
-    /// pre-checked and static).
+    /// pre-checked and static; with preemption on, truncation remains
+    /// only as the physical-limit fallback for a context no pool state
+    /// can ever host).
     pub fn kv_truncations(&self) -> usize {
         self.kv_truncations
+    }
+
+    /// This engine with a preemption policy for planned-batch pool
+    /// exhaustion (see [`PreemptConfig`]). [`PreemptConfig::OFF`] (the
+    /// default) keeps the EOS-on-OOM truncation path bit for bit.
+    pub fn with_preemption(mut self, preempt: PreemptConfig) -> Self {
+        self.preempt = preempt;
+        self
+    }
+
+    /// The configured preemption policy.
+    pub fn preempt(&self) -> PreemptConfig {
+        self.preempt
+    }
+
+    /// Host swap-buffer occupancy high-water mark (blocks, Swap mode).
+    pub fn host_blocks_peak(&self) -> u64 {
+        self.host_blocks_peak
+    }
+
+    /// Swap transfer time per KV block (ms): `block_mb / swap_gbps`
+    /// (1 GB/s moves 1 MB per ms). 0 outside Swap mode.
+    pub fn swap_ms_per_block(&self) -> f64 {
+        if !matches!(self.preempt.mode, PreemptMode::Swap)
+            || self.preempt.swap_gbps <= 0.0
+        {
+            return 0.0;
+        }
+        let block_mb = self.kv.config().block_tokens as f64
+            * self.profile.mem.mb_per_token;
+        block_mb / self.preempt.swap_gbps
     }
 
     /// This engine with phase-aware planned-batch KV accounting (see the
@@ -287,6 +428,10 @@ impl SimEngine {
         self.decode_steps = 0;
         self.peak_used_blocks = 0;
         self.kv_truncations = 0;
+        self.deadlines.clear();
+        self.pstats = PreemptionStats::default();
+        self.host_blocks_used = 0;
+        self.host_blocks_peak = 0;
         self.step_events.clear();
     }
 
@@ -515,6 +660,7 @@ impl SimEngine {
             self.step_events.push(StepEvent {
                 t_ms: first_token_ms,
                 emitted: batch.iter().map(|r| r.id).collect(),
+                ..StepEvent::default()
             });
         }
 
@@ -579,8 +725,342 @@ impl SimEngine {
                 }
             }
             if self.record_steps && !emitted.is_empty() {
-                self.step_events
-                    .push(StepEvent { t_ms: self.clock_ms, emitted });
+                self.step_events.push(StepEvent {
+                    t_ms: self.clock_ms,
+                    emitted,
+                    ..StepEvent::default()
+                });
+            }
+        }
+        Ok(batch
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ItemResult {
+                id: r.id,
+                start_ms: start,
+                first_token_ms,
+                finish_ms: finish[i],
+                generated: generated[i],
+                batch_size: b,
+                text: None,
+            })
+            .collect())
+    }
+
+    /// Planned-batch execution under divergence **with preemption** — the
+    /// resumable-member variant of [`SimEngine::run_batch_divergent`].
+    ///
+    /// The prefill phase and the happy decode path are arithmetic- and
+    /// RNG-identical to the truncating body, so a run in which the pool
+    /// never exhausts is bit-identical across the two paths (σ = 0 can
+    /// therefore never observe preemption). On an `extend_seq` failure
+    /// the engine suspends the *active member with the most SLO slack*
+    /// (descending [`slack_key`] — the `SlackIndex` ordering; unknown
+    /// deadlines sort as +∞ slack and yield first) instead of
+    /// force-stopping anyone:
+    ///
+    /// * [`PreemptMode::Recompute`] drops the victim's KV; resuming
+    ///   charges a noiseless `prefill_ms(1, context)` on the clock.
+    /// * [`PreemptMode::Swap`] moves the victim's blocks to the modeled
+    ///   host buffer (capacity permitting — otherwise the suspension
+    ///   degrades to recompute) and charges
+    ///   `blocks × block_mb / swap_gbps` ms in each direction.
+    ///
+    /// Suspended members resume most-urgent-first (ascending slack) as
+    /// soon as their context plus one block of growth headroom fits the
+    /// pool; the headroom requirement is waived when nothing is active,
+    /// so the batch cannot deadlock on an empty pool. All preemption
+    /// costs are deterministic functions of the profile — no RNG draw —
+    /// so the timing stream stays aligned with the truncating path.
+    /// Truncation survives only as the physical-limit fallback: a lone
+    /// context that cannot fit even an otherwise-empty pool is stopped
+    /// at its current length, exactly like the legacy path. Suspend and
+    /// resume ids are attached to the step trace
+    /// ([`StepEvent::suspended`] / [`StepEvent::resumed`]).
+    fn run_batch_divergent_preempt(
+        &mut self,
+        batch: &[EngineRequest],
+    ) -> Result<Vec<ItemResult>> {
+        let b = batch.len();
+        let actual: Vec<usize> = batch
+            .iter()
+            .map(|r| {
+                self.divergence
+                    .actual_lo(r.id, r.max_new_tokens, &mut self.div_rng)
+                    .min(
+                        self.profile
+                            .max_total_tokens
+                            .saturating_sub(r.input_len),
+                    )
+            })
+            .collect();
+        let need_blocks = self.planned_demand_blocks(batch);
+        if need_blocks > self.kv.free_blocks() {
+            anyhow::bail!(
+                "planned batch of {b} requests overcommits the KV pool: \
+                 needs {need_blocks} blocks ({:?} demand), {} free of {} \
+                 total — the scheduler planned an infeasible batch",
+                self.kv_phase,
+                self.kv.free_blocks(),
+                self.kv.config().total_blocks,
+            );
+        }
+        for (i, r) in batch.iter().enumerate() {
+            let tokens = r.input_len + actual[i].min(1);
+            if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
+                for done in &batch[..i] {
+                    let _ = self.kv.free_seq(done.id);
+                }
+                return Err(e.into());
+            }
+        }
+        self.peak_used_blocks = self.peak_used_blocks.max(self.kv.used_blocks());
+        let start = self.clock_ms;
+        let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
+        let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
+        self.clock_ms += t_prefill;
+        self.batches_run += 1;
+        let first_token_ms = self.clock_ms;
+        if self.record_steps {
+            self.step_events.push(StepEvent {
+                t_ms: first_token_ms,
+                emitted: batch.iter().map(|r| r.id).collect(),
+                ..StepEvent::default()
+            });
+        }
+
+        let truth = self.profile.truth;
+        let block_tokens = self.kv.config().block_tokens;
+        let swap_ms_per_block = self.swap_ms_per_block();
+        // Absolute deadlines for slack ordering (missing ⇒ +∞: such a
+        // member has "infinite slack" — the preferred victim, the last
+        // resume candidate).
+        let ddl: Vec<f64> = batch
+            .iter()
+            .map(|r| {
+                self.deadlines.get(&r.id).copied().unwrap_or(f64::INFINITY)
+            })
+            .collect();
+        let mut remaining: Vec<usize> =
+            actual.iter().map(|&a| a.max(1) - 1).collect();
+        let mut accumulated: Vec<usize> =
+            batch.iter().map(|r| r.input_len + 1).collect();
+        let mut generated = vec![1usize; b];
+        let mut finish = vec![first_token_ms; b];
+        // A member holds device KV iff it is unfinished and not
+        // suspended; `swapped_blocks[i] > 0` records host-buffer
+        // occupancy while suspended in Swap mode (0 ⇒ recompute resume).
+        let mut suspended = vec![false; b];
+        let mut swapped_blocks = vec![0u64; b];
+        let mut live = remaining.iter().filter(|&&r| r > 0).count();
+        for (i, r) in batch.iter().enumerate() {
+            if remaining[i] == 0 {
+                self.kv.free_seq(r.id)?;
+            }
+        }
+        while live > 0 {
+            // Remaining-work slack of member `i` at the current clock
+            // (recomputed as the clock moves; pure arithmetic, no RNG).
+            let slack = |i: usize,
+                         clock: f64,
+                         accumulated: &[usize],
+                         remaining: &[usize]| {
+                let exec = (remaining[i].max(1) as f64
+                    * truth.tpot_at(b, accumulated[i]))
+                .max(1e-9);
+                slack_key(ddl[i] - clock, exec)
+            };
+            let mut resumed_ids: Vec<u64> = Vec::new();
+            let mut suspended_ids: Vec<u64> = Vec::new();
+            // ---- resume pass: most urgent first, while the context plus
+            // one block of growth headroom fits. With nothing active the
+            // headroom is waived; a context that cannot fit even the
+            // empty pool is truncated (the physical limit).
+            loop {
+                let any_active =
+                    (0..b).any(|i| remaining[i] > 0 && !suspended[i]);
+                let mut cand: Option<(f64, usize)> = None;
+                for i in 0..b {
+                    if remaining[i] == 0 || !suspended[i] {
+                        continue;
+                    }
+                    let s = slack(i, self.clock_ms, &accumulated, &remaining);
+                    let more_urgent = match cand {
+                        Some((cs, _)) => s < cs,
+                        None => true,
+                    };
+                    if more_urgent {
+                        cand = Some((s, i));
+                    }
+                }
+                let Some((_, i)) = cand else { break };
+                let need = if any_active {
+                    accumulated[i] + block_tokens
+                } else {
+                    accumulated[i]
+                };
+                if self.kv.fits(need) {
+                    self.kv.alloc_seq(batch[i].id, accumulated[i])?;
+                    if swapped_blocks[i] > 0 {
+                        let cost =
+                            swapped_blocks[i] as f64 * swap_ms_per_block;
+                        self.clock_ms += cost;
+                        self.pstats.swap_ins += 1;
+                        self.pstats.swap_blocks += swapped_blocks[i];
+                        self.pstats.swap_ms += cost;
+                        self.host_blocks_used -= swapped_blocks[i];
+                        swapped_blocks[i] = 0;
+                    } else {
+                        let cost = truth.prefill_ms(1, accumulated[i]);
+                        self.clock_ms += cost;
+                        self.pstats.recompute_resumes += 1;
+                        self.pstats.recompute_ms += cost;
+                    }
+                    suspended[i] = false;
+                    resumed_ids.push(batch[i].id);
+                    self.peak_used_blocks =
+                        self.peak_used_blocks.max(self.kv.used_blocks());
+                } else if !any_active {
+                    // EOS-on-OOM at the resume boundary: finish stays at
+                    // the last emitted token, like the legacy truncation.
+                    if swapped_blocks[i] > 0 {
+                        self.host_blocks_used -= swapped_blocks[i];
+                        swapped_blocks[i] = 0;
+                    }
+                    suspended[i] = false;
+                    remaining[i] = 0;
+                    live -= 1;
+                    self.kv_truncations += 1;
+                } else {
+                    break; // wait for active members to release KV
+                }
+            }
+            if live == 0 {
+                if self.record_steps
+                    && (!resumed_ids.is_empty() || !suspended_ids.is_empty())
+                {
+                    self.step_events.push(StepEvent {
+                        t_ms: self.clock_ms,
+                        suspended: suspended_ids,
+                        resumed: resumed_ids,
+                        ..StepEvent::default()
+                    });
+                }
+                break;
+            }
+            // ---- one decode iteration over the active set (batch-size
+            // term stays b: static batch semantics, as in the legacy
+            // paths).
+            let max_acc = accumulated
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| remaining[i] > 0 && !suspended[i])
+                .map(|(_, a)| *a)
+                .max()
+                .unwrap_or(0);
+            let step = self.profile.truth.tpot_at(b, max_acc) * self.noise();
+            self.clock_ms += step;
+            self.decode_steps += 1;
+            // ---- growth: extend every active member by the token it is
+            // about to emit; on pool exhaustion suspend the slackest
+            // active member (possibly the grower itself) and retry.
+            for i in 0..b {
+                if remaining[i] == 0 || suspended[i] {
+                    continue;
+                }
+                loop {
+                    if self.kv.extend_seq(batch[i].id, 1).is_ok() {
+                        break;
+                    }
+                    if self.kv.blocks_needed(accumulated[i] + 1)
+                        > self.kv.config().total_blocks
+                    {
+                        // Physical limit: this context plus one token
+                        // exceeds the entire pool — no victim set can
+                        // help, and suspending would only livelock the
+                        // batch in suspend/resume cycles. Legacy
+                        // EOS-on-OOM, exactly like the truncating path
+                        // (finish stays at the last emitted token).
+                        remaining[i] = 0;
+                        live -= 1;
+                        self.kv_truncations += 1;
+                        self.kv.free_seq(batch[i].id)?;
+                        break;
+                    }
+                    let mut victim: Option<(f64, usize)> = None;
+                    for j in 0..b {
+                        if remaining[j] == 0 || suspended[j] {
+                            continue;
+                        }
+                        let s =
+                            slack(j, self.clock_ms, &accumulated, &remaining);
+                        // max slack wins; ties go to the higher index
+                        let slacker = match victim {
+                            Some((vs, _)) => s >= vs,
+                            None => true,
+                        };
+                        if slacker {
+                            victim = Some((s, j));
+                        }
+                    }
+                    // `i` itself is active, so a victim always exists.
+                    let Some((_, v)) = victim else { break };
+                    suspended[v] = true;
+                    self.pstats.preemptions += 1;
+                    suspended_ids.push(batch[v].id);
+                    let ctx_blocks =
+                        self.kv.blocks_needed(accumulated[v]) as u64;
+                    if matches!(self.preempt.mode, PreemptMode::Swap)
+                        && self.host_blocks_used + ctx_blocks
+                            <= self.preempt.host_blocks
+                    {
+                        let cost = ctx_blocks as f64 * swap_ms_per_block;
+                        self.clock_ms += cost;
+                        self.pstats.swap_outs += 1;
+                        self.pstats.swap_blocks += ctx_blocks;
+                        self.pstats.swap_ms += cost;
+                        self.host_blocks_used += ctx_blocks;
+                        self.host_blocks_peak =
+                            self.host_blocks_peak.max(self.host_blocks_used);
+                        swapped_blocks[v] = ctx_blocks;
+                    }
+                    self.kv.free_seq(batch[v].id)?;
+                    if v == i {
+                        break; // the grower yielded: no token this step
+                    }
+                }
+            }
+            self.peak_used_blocks =
+                self.peak_used_blocks.max(self.kv.used_blocks());
+            // ---- emission over the members that grew
+            let mut emitted: Vec<u64> = Vec::new();
+            for i in 0..b {
+                if remaining[i] == 0 || suspended[i] {
+                    continue;
+                }
+                remaining[i] -= 1;
+                accumulated[i] += 1;
+                generated[i] += 1;
+                finish[i] = self.clock_ms;
+                if self.record_steps {
+                    emitted.push(batch[i].id);
+                }
+                if remaining[i] == 0 {
+                    live -= 1;
+                    self.kv.free_seq(batch[i].id)?;
+                }
+            }
+            if self.record_steps
+                && (!emitted.is_empty()
+                    || !suspended_ids.is_empty()
+                    || !resumed_ids.is_empty())
+            {
+                self.step_events.push(StepEvent {
+                    t_ms: self.clock_ms,
+                    emitted,
+                    suspended: suspended_ids,
+                    resumed: resumed_ids,
+                });
             }
         }
         Ok(batch
@@ -666,12 +1146,33 @@ impl Engine for SimEngine {
         std::mem::take(&mut self.step_events)
     }
 
+    fn set_deadlines(&mut self, deadlines: &[(u64, f64)]) {
+        // Later submissions for the same id win (an online controller may
+        // re-submit after a deferral with the same absolute deadline).
+        for &(id, ddl) in deadlines {
+            self.deadlines.insert(id, ddl);
+        }
+    }
+
+    fn preemption_stats(&self) -> PreemptionStats {
+        PreemptionStats {
+            kv_truncations: self.kv_truncations,
+            ..self.pstats
+        }
+    }
+
     fn run_batch(&mut self, batch: &[EngineRequest]) -> Result<Vec<ItemResult>> {
         validate_batch(self, batch)?;
         if !self.divergence.is_off() {
             // Divergent execution is a separate path so that `Off` keeps
             // this legacy body — RNG stream, KV behaviour, completions —
-            // byte for byte.
+            // byte for byte. Preemption only changes behaviour where
+            // divergence can exhaust the pool mid-decode; its path is
+            // split again so `PreemptConfig::OFF` keeps the truncating
+            // divergent body untouched.
+            if self.preempt.enabled() {
+                return self.run_batch_divergent_preempt(batch);
+            }
             return self.run_batch_divergent(batch);
         }
         let b = batch.len();
@@ -726,6 +1227,7 @@ impl Engine for SimEngine {
             self.step_events.push(StepEvent {
                 t_ms: first_token_ms,
                 emitted: batch.iter().map(|r| r.id).collect(),
+                ..StepEvent::default()
             });
         }
 
@@ -789,8 +1291,11 @@ impl Engine for SimEngine {
                 }
             }
             if self.record_steps && !emitted.is_empty() {
-                self.step_events
-                    .push(StepEvent { t_ms: self.clock_ms, emitted });
+                self.step_events.push(StepEvent {
+                    t_ms: self.clock_ms,
+                    emitted,
+                    ..StepEvent::default()
+                });
             }
         }
         let results = batch
@@ -1216,6 +1721,178 @@ mod tests {
         assert_eq!(e.kv().active_seqs(), 0);
         assert_eq!(e.kv().free_blocks(), 7);
         assert_eq!(e.peak_used_blocks(), 7);
+    }
+
+    /// Two-member overrun scenario on a 7-block pool: both pass the
+    /// nominal pre-check, both overrun, and their combined growth
+    /// exhausts the pool mid-decode while each individual context still
+    /// fits — the preemption sweet spot. Returns `(requests, expected
+    /// actual lengths, model)`.
+    fn overrun_pair() -> (Vec<EngineRequest>, Vec<usize>, DivergenceModel) {
+        let model = DivergenceModel::QuantileTrace { sigma: 1.0 };
+        let mut probe = Rng::new(0);
+        let id_a = (0..5000u64)
+            .find(|&id| {
+                (40..=60).contains(&model.actual_lo(id, 10, &mut probe))
+            })
+            .expect("some id must overrun into [40, 60]");
+        let id_b = (0..5000u64)
+            .find(|&id| {
+                id != id_a
+                    && (19..=25).contains(&model.actual_lo(id, 10, &mut probe))
+            })
+            .expect("some id must overrun into [19, 25]");
+        let expect = vec![
+            model.actual_lo(id_a, 10, &mut probe),
+            model.actual_lo(id_b, 10, &mut probe),
+        ];
+        (vec![req(id_a, 30, 10), req(id_b, 30, 10)], expect, model)
+    }
+
+    #[test]
+    fn preemption_recompute_completes_overruns_without_truncation() {
+        let (batch, expect, model) = overrun_pair();
+        let mut p = quiet_profile();
+        p.kv_pool_mb = 56.0; // 7 blocks of 16 tokens
+        let mut e = SimEngine::new(p, 4, 0)
+            .with_divergence(model)
+            .with_preemption(PreemptConfig::recompute());
+        assert_eq!(e.kv().config().total_blocks, 7);
+        let out = e.run_batch(&batch).unwrap();
+        // no member was force-stopped: both ran to their true EOS
+        assert_eq!(e.kv_truncations(), 0);
+        assert_eq!(out[0].generated, expect[0]);
+        assert_eq!(out[1].generated, expect[1]);
+        // ...which was only possible by suspending somebody
+        let ps = e.preemption_stats();
+        assert!(ps.preemptions >= 1, "pool never exhausted: {ps:?}");
+        assert!(ps.recompute_resumes >= 1);
+        assert!(ps.recompute_ms > 0.0);
+        assert_eq!(ps.swap_outs, 0);
+        assert_eq!(ps.kv_truncations, 0);
+        // leak-free: every block returned
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), 7);
+        // deterministic: a fresh engine replays the run bit for bit
+        let mut p2 = quiet_profile();
+        p2.kv_pool_mb = 56.0;
+        let mut e2 = SimEngine::new(p2, 4, 0)
+            .with_divergence(model)
+            .with_preemption(PreemptConfig::recompute());
+        let out2 = e2.run_batch(&batch).unwrap();
+        for (x, y) in out.iter().zip(&out2) {
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.generated, y.generated);
+        }
+        assert_eq!(e2.preemption_stats(), ps);
+    }
+
+    #[test]
+    fn preemption_swap_accounting_matches_link_model() {
+        let (batch, expect, model) = overrun_pair();
+        let mut p = quiet_profile();
+        p.kv_pool_mb = 56.0;
+        // block_mb = 16 tokens × 0.5 MB = 8 MB; at 8 GB/s (1 GB/s =
+        // 1 MB/ms) one block moves in exactly 1 ms
+        let mut e = SimEngine::new(p, 4, 0)
+            .with_divergence(model)
+            .with_preemption(PreemptConfig::swap(8.0, 64));
+        assert_eq!(e.swap_ms_per_block(), 1.0);
+        let out = e.run_batch(&batch).unwrap();
+        assert_eq!(e.kv_truncations(), 0);
+        assert_eq!(out[0].generated, expect[0]);
+        assert_eq!(out[1].generated, expect[1]);
+        let ps = e.preemption_stats();
+        assert!(ps.swap_outs >= 1, "no swap traffic: {ps:?}");
+        // ample host buffer: every suspension swapped, every suspended
+        // member swapped back in — nothing degraded to recompute
+        assert_eq!(ps.swap_ins, ps.swap_outs);
+        assert_eq!(ps.recompute_resumes, 0);
+        // the clock charge is exactly the modeled link transfer
+        let modeled = ps.swap_blocks as f64 * e.swap_ms_per_block();
+        assert!(
+            (ps.swap_ms - modeled).abs() <= 1e-9 * modeled.max(1.0),
+            "swap_ms {} != blocks×per-block {}",
+            ps.swap_ms,
+            modeled
+        );
+        assert!(e.host_blocks_peak() >= 1);
+        assert!(e.host_blocks_peak() <= 64);
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), 7);
+
+        // a host buffer too small for any context degrades to recompute
+        let mut p2 = quiet_profile();
+        p2.kv_pool_mb = 56.0;
+        let mut tiny = SimEngine::new(p2, 4, 0)
+            .with_divergence(model)
+            .with_preemption(PreemptConfig::swap(8.0, 1));
+        let out2 = tiny.run_batch(&batch).unwrap();
+        assert_eq!(out2[0].generated, expect[0]);
+        assert_eq!(out2[1].generated, expect[1]);
+        let ps2 = tiny.preemption_stats();
+        assert_eq!(ps2.swap_outs, 0, "3-block contexts cannot fit 1 block");
+        assert!(ps2.recompute_resumes >= 1);
+        assert_eq!(tiny.kv().active_seqs(), 0);
+    }
+
+    #[test]
+    fn preemption_on_is_bit_identical_when_pool_never_exhausts() {
+        // Ample pool: the preemptive path must replay the truncating
+        // divergent path bit for bit — same RNG stream, same arithmetic.
+        let batch: Vec<EngineRequest> =
+            (0..4).map(|i| req(i, 200, 40)).collect();
+        let mut plain = SimEngine::new(quiet_profile(), 4, 3)
+            .with_divergence(DivergenceModel::Lognormal { sigma: 0.5 });
+        let mut preempt = SimEngine::new(quiet_profile(), 4, 3)
+            .with_divergence(DivergenceModel::Lognormal { sigma: 0.5 })
+            .with_preemption(PreemptConfig::recompute());
+        let a = plain.run_batch(&batch).unwrap();
+        let b = preempt.run_batch(&batch).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.first_token_ms.to_bits(), y.first_token_ms.to_bits());
+            assert_eq!(x.generated, y.generated);
+        }
+        assert_eq!(preempt.preemption_stats(), PreemptionStats::default());
+        assert_eq!(plain.now_ms().to_bits(), preempt.now_ms().to_bits());
+    }
+
+    #[test]
+    fn preemption_single_member_physical_limit_still_truncates() {
+        // The PR 5 scenario with preemption ON: a lone context whose next
+        // token exceeds the whole pool has no victim to preempt — the
+        // engine must fall back to EOS-on-OOM instead of livelocking in
+        // suspend/resume cycles.
+        let model = DivergenceModel::QuantileTrace { sigma: 1.0 };
+        let mut probe = Rng::new(0);
+        let id = (0..1000u64)
+            .find(|&id| model.actual_lo(id, 10, &mut probe) >= 13)
+            .expect("some id must overrun");
+        let mut p = quiet_profile();
+        p.kv_pool_mb = 56.0;
+        let mut e = SimEngine::new(p, 4, 0)
+            .with_divergence(model)
+            .with_preemption(PreemptConfig::recompute());
+        let out = e.run_batch(&[req(id, 100, 10)]).unwrap();
+        assert_eq!(e.kv_truncations(), 1);
+        assert_eq!(out[0].generated, 12);
+        assert_eq!(e.preemption_stats().preemptions, 0);
+        assert_eq!(e.kv().active_seqs(), 0);
+        assert_eq!(e.kv().free_blocks(), 7);
+    }
+
+    #[test]
+    fn preempt_config_parses_and_gates() {
+        assert_eq!(PreemptConfig::parse("off", 0.0, 0).unwrap(), PreemptConfig::OFF);
+        assert!(!PreemptConfig::OFF.enabled());
+        let r = PreemptConfig::parse("recompute", 0.0, 0).unwrap();
+        assert_eq!(r.mode, PreemptMode::Recompute);
+        assert!(r.enabled());
+        let s = PreemptConfig::parse("swap", 16.0, 128).unwrap();
+        assert_eq!(s, PreemptConfig::swap(16.0, 128));
+        assert!(PreemptConfig::parse("swap", 0.0, 128).is_err());
+        assert!(PreemptConfig::parse("sideways", 1.0, 0).is_err());
     }
 
     #[test]

@@ -17,14 +17,17 @@ use slo_serve::config::profiles;
 use slo_serve::config::RunConfig;
 use slo_serve::coordinator::kv::{KvConfig, KvMode, KvPhaseModel};
 use slo_serve::coordinator::online::{
-    run_online_fleet_opts, OnlineOpts, ReplanStrategy,
+    run_online_fleet_migrating, run_online_fleet_opts, OnlineOpts,
+    ReplanStrategy,
 };
 use slo_serve::coordinator::predict_outputs;
 use slo_serve::coordinator::predictor::LatencyPredictor;
 use slo_serve::coordinator::priority::annealing::SaParams;
 use slo_serve::coordinator::request::TaskType;
 use slo_serve::coordinator::predictor::quantile_multiplier;
-use slo_serve::engine::sim::{DivergenceModel, SimEngine};
+use slo_serve::engine::sim::{
+    DivergenceModel, PreemptConfig, PreemptMode, SimEngine,
+};
 use slo_serve::engine::Engine;
 use slo_serve::metrics::{fmt, RunMetrics, Table};
 use slo_serve::server;
@@ -210,6 +213,30 @@ fn online_specs() -> Vec<OptSpec> {
                    a --divergence σ; 0.5 = mean column)",
             default: Some("0.5"),
         },
+        OptSpec {
+            name: "preempt",
+            help: "off | recompute | swap (on pool exhaustion suspend the \
+                   SLO-slackest member instead of truncating it)",
+            default: Some("off"),
+        },
+        OptSpec {
+            name: "kv-swap-gbps",
+            help: "host↔device link bandwidth for --preempt swap (GB/s)",
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "kv-host-blocks",
+            help: "host swap-buffer capacity in KV blocks (--preempt swap; \
+                   a full buffer degrades to recompute)",
+            default: Some("1024"),
+        },
+        OptSpec {
+            name: "migrate",
+            help: "shed deferred work from saturated instances to the \
+                   least-loaded peer's wave queue (0|1; needs --kv and \
+                   ≥ 2 instances to ever fire)",
+            default: Some("0"),
+        },
     ]
 }
 
@@ -346,11 +373,27 @@ fn cmd_online(argv: &[String]) -> Result<()> {
             "--replan-drift-ms must be finite and ≥ 0, got {replan_drift_ms}"
         ));
     }
+    let preempt = PreemptConfig::parse(
+        &args.str("preempt"),
+        args.f64("kv-swap-gbps")?,
+        args.u64("kv-host-blocks")?,
+    )
+    .map_err(|e| anyhow!(e))?;
+    if preempt.mode == PreemptMode::Swap && kv.binding() {
+        // Price recompute-vs-swap into the SA objective: the search sees
+        // the same per-block transfer time the engine will charge.
+        kv = kv.with_swap(
+            preempt.swap_gbps,
+            kv.block_tokens as f64 * profile.mem.mb_per_token,
+            preempt.host_blocks,
+        );
+    }
     let opts = OnlineOpts {
         compact_dispatched: args.str("compact") == "1",
         arrival_aware: args.str("arrival-aware") == "1",
         replan_drift_ms,
         adaptive_budget: args.str("adaptive-budget") == "1",
+        migrate: args.str("migrate") == "1",
     };
     let sa = SaParams {
         max_batch,
@@ -370,6 +413,8 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         "replans",
         "drift replans",
         "avg replan ms",
+        "preempts",
+        "migrations",
         "pred G (req/s)",
     ]);
     for strategy in strategies {
@@ -382,13 +427,22 @@ fn cmd_online(argv: &[String]) -> Result<()> {
                         seed ^ (i as u64).wrapping_mul(0xE5317),
                     )
                     .with_kv_phase(kv_phase)
-                    .with_divergence(divergence),
+                    .with_divergence(divergence)
+                    .with_preemption(preempt),
                 ) as Box<dyn Engine + Send>
             })
             .collect();
-        let (completions, outcomes) = run_online_fleet_opts(
-            &trace, &predicted, &mut engines, &predictor, &sa, strategy, opts,
-        )?;
+        let (completions, outcomes) = if opts.migrate {
+            run_online_fleet_migrating(
+                &trace, &predicted, &mut engines, &predictor, &sa, strategy,
+                opts,
+            )?
+        } else {
+            run_online_fleet_opts(
+                &trace, &predicted, &mut engines, &predictor, &sa, strategy,
+                opts,
+            )?
+        };
         let m = RunMetrics::from_completions(&completions);
         let by_task = RunMetrics::attainment_by_task(&completions);
         let task_att = |task: TaskType| {
@@ -402,6 +456,10 @@ fn cmd_online(argv: &[String]) -> Result<()> {
             outcomes.iter().map(|o| o.stats.drift_replans).sum();
         let replan_ms: f64 =
             outcomes.iter().map(|o| o.stats.replan_ms_total).sum();
+        let preempts: usize =
+            outcomes.iter().map(|o| o.stats.preemptions).sum();
+        let migrations: usize =
+            outcomes.iter().map(|o| o.stats.migrations).sum();
         let pred_g: f64 =
             outcomes.iter().map(|o| o.final_eval.g * 1000.0).sum();
         t.row(vec![
@@ -413,6 +471,8 @@ fn cmd_online(argv: &[String]) -> Result<()> {
             replans.to_string(),
             drift_replans.to_string(),
             fmt(if replans == 0 { 0.0 } else { replan_ms / replans as f64 }),
+            preempts.to_string(),
+            migrations.to_string(),
             fmt(pred_g),
         ]);
     }
@@ -575,6 +635,11 @@ fn bench_http_specs() -> Vec<OptSpec> {
         OptSpec { name: "iters-per-temp", help: "SA iteration budget per temperature", default: Some("10") },
         OptSpec { name: "handoff", help: "cross-shard handoff (0|1)", default: Some("1") },
         OptSpec { name: "stream", help: "stream every 8th request (0|1)", default: Some("1") },
+        OptSpec { name: "kv-pool-mb", help: "override the engines' KV pool (MB); 0 = profile value", default: Some("0") },
+        OptSpec { name: "divergence", help: "off | lognormal:<σ> | quantile-trace:<σ> (engine output-length divergence)", default: Some("off") },
+        OptSpec { name: "preempt", help: "off | recompute | swap (engine pool-exhaustion policy)", default: Some("off") },
+        OptSpec { name: "kv-swap-gbps", help: "host↔device link bandwidth for --preempt swap (GB/s)", default: Some("8") },
+        OptSpec { name: "kv-host-blocks", help: "host swap-buffer capacity in KV blocks (--preempt swap)", default: Some("1024") },
         OptSpec { name: "out", help: "write the JSON report here too", default: Some("") },
     ]
 }
@@ -604,6 +669,11 @@ fn cmd_bench_http(argv: &[String]) -> Result<()> {
         iters_per_temp: args.usize("iters-per-temp")?.max(1),
         handoff: args.str("handoff") != "0",
         stream: args.str("stream") != "0",
+        kv_pool_mb: args.f64("kv-pool-mb")?,
+        divergence: args.str("divergence"),
+        preempt: args.str("preempt"),
+        kv_swap_gbps: args.f64("kv-swap-gbps")?,
+        kv_host_blocks: args.u64("kv-host-blocks")?,
     };
     let report = server::bench_http::run(&cfg)?;
     println!("{}", report.to_string_pretty());

@@ -17,7 +17,8 @@ use anyhow::{anyhow, Result};
 use crate::bench;
 use crate::config::profiles::by_name;
 use crate::config::SloTargets;
-use crate::engine::sim::SimEngine;
+use crate::coordinator::kv::{KvConfig, KvMode, DEFAULT_BLOCK_TOKENS};
+use crate::engine::sim::{DivergenceModel, PreemptConfig, SimEngine};
 use crate::engine::Engine;
 use crate::server::front::{FrontDoor, FrontDoorConfig, SubmitError};
 use crate::util;
@@ -52,6 +53,19 @@ pub struct BenchHttpConfig {
     /// Submit a fraction of requests in streaming mode (exercises the
     /// step-trace relay under load).
     pub stream: bool,
+    /// Override the profile's engine KV pool (MB); 0 keeps the profile
+    /// value. Shrinking it is the saturation scenario's lever: decode
+    /// growth under divergence exhausts the pool mid-batch.
+    pub kv_pool_mb: f64,
+    /// Output-length divergence spec for the engines
+    /// (`off | lognormal:<σ> | quantile-trace:<σ>`).
+    pub divergence: String,
+    /// Preemption spec for the engines (`off | recompute | swap`).
+    pub preempt: String,
+    /// Host↔device link bandwidth for `preempt = swap` (GB/s).
+    pub kv_swap_gbps: f64,
+    /// Host swap-buffer capacity for `preempt = swap` (KV blocks).
+    pub kv_host_blocks: u64,
 }
 
 impl Default for BenchHttpConfig {
@@ -69,6 +83,11 @@ impl Default for BenchHttpConfig {
             iters_per_temp: 10,
             handoff: true,
             stream: false,
+            kv_pool_mb: 0.0,
+            divergence: "off".into(),
+            preempt: "off".into(),
+            kv_swap_gbps: 8.0,
+            kv_host_blocks: 1024,
         }
     }
 }
@@ -76,17 +95,34 @@ impl Default for BenchHttpConfig {
 /// Run the load test; returns the flat JSON report.
 pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
     anyhow::ensure!(cfg.clients > 0, "need at least one client");
-    let profile = by_name(&cfg.profile)
+    let mut profile = by_name(&cfg.profile)
         .ok_or_else(|| anyhow!("unknown profile '{}'", cfg.profile))?;
     let predictor = bench::fit_predictor_from_profile(&profile, cfg.seed);
+    if cfg.kv_pool_mb > 0.0 {
+        // Saturation lever: a deliberately undersized engine pool so
+        // divergence-driven decode growth exhausts it mid-batch.
+        profile.kv_pool_mb = cfg.kv_pool_mb;
+    }
+    let divergence = DivergenceModel::parse(&cfg.divergence)
+        .map_err(|e| anyhow!(e))?;
+    let preempt = PreemptConfig::parse(
+        &cfg.preempt,
+        cfg.kv_swap_gbps,
+        cfg.kv_host_blocks,
+    )
+    .map_err(|e| anyhow!(e))?;
     let shards = cfg.shards.max(1);
     let engines: Vec<Box<dyn Engine + Send>> = (0..shards)
         .map(|s| {
-            Box::new(SimEngine::new(
-                profile.clone(),
-                cfg.max_batch,
-                cfg.seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
-            )) as Box<dyn Engine + Send>
+            Box::new(
+                SimEngine::new(
+                    profile.clone(),
+                    cfg.max_batch,
+                    cfg.seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
+                )
+                .with_divergence(divergence)
+                .with_preemption(preempt),
+            ) as Box<dyn Engine + Send>
         })
         .collect();
     let max_total = engines[0].max_total_tokens();
@@ -125,6 +161,20 @@ pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
     door_cfg.sa.max_batch = cfg.max_batch;
     door_cfg.sa.iters_per_temp = cfg.iters_per_temp.max(1);
     door_cfg.sa.seed = cfg.seed;
+    if cfg.kv_pool_mb > 0.0 {
+        // Bind the shard planners to the shrunken pool too. The Eq. 20
+        // utility discount makes the scheduler's block budget strictly
+        // tighter than the engine's raw pool, so every SA-feasible batch
+        // passes the engine's nominal pre-check — exhaustion can then
+        // only come from divergence-driven decode growth, which is the
+        // preemption path the saturation scenario exercises.
+        door_cfg.sa.kv = KvConfig::from_pool_mb(
+            profile.kv_pool_mb,
+            &profile.mem,
+            DEFAULT_BLOCK_TOKENS,
+            KvMode::Hard,
+        );
+    }
     let door = FrontDoor::start(door_cfg, engines)?;
 
     // ---- open-loop submission paced on the wall clock
@@ -187,6 +237,12 @@ pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
             Json::num(cfg.iters_per_temp as f64),
         );
         map.insert("handoff_enabled".into(), Json::Bool(cfg.handoff));
+        map.insert("kv_pool_mb".into(), Json::num(profile.kv_pool_mb));
+        map.insert(
+            "divergence".into(),
+            Json::str(cfg.divergence.clone()),
+        );
+        map.insert("preempt".into(), Json::str(cfg.preempt.clone()));
         map.insert("submitted".into(), Json::num(submitted as f64));
         map.insert(
             "rejected_saturated".into(),

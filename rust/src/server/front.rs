@@ -477,6 +477,8 @@ impl FrontDoor {
         let mut tokens_out = 0u64;
         let mut deferrals = 0usize;
         let mut replans = 0usize;
+        let mut preemptions = 0u64;
+        let mut kv_truncations = 0u64;
         let mut per_class: Vec<(
             crate::coordinator::request::TaskType,
             usize,
@@ -488,6 +490,9 @@ impl FrontDoor {
             met += h.shared.met.load(Ordering::SeqCst);
             failed += h.shared.failed.load(Ordering::SeqCst);
             tokens_out += h.shared.tokens_out.load(Ordering::SeqCst);
+            preemptions += h.shared.preemptions.load(Ordering::SeqCst);
+            kv_truncations +=
+                h.shared.kv_truncations.load(Ordering::SeqCst);
             let m = h.shared.metrics.lock().unwrap();
             admission.merge(&m.admission);
             e2e.merge(&m.e2e);
@@ -516,6 +521,19 @@ impl FrontDoor {
                     Json::num(m.online.drift_replans as f64),
                 ),
                 ("deferrals", Json::num(m.online.deferrals as f64)),
+                (
+                    "preemptions",
+                    Json::num(
+                        h.shared.preemptions.load(Ordering::SeqCst) as f64,
+                    ),
+                ),
+                (
+                    "kv_truncations",
+                    Json::num(
+                        h.shared.kv_truncations.load(Ordering::SeqCst)
+                            as f64,
+                    ),
+                ),
             ]));
         }
         let attainment = if served > 0 {
@@ -555,6 +573,8 @@ impl FrontDoor {
             ("tokens_out", Json::num(tokens_out as f64)),
             ("deferrals", Json::num(deferrals as f64)),
             ("replans", Json::num(replans as f64)),
+            ("preemptions", Json::num(preemptions as f64)),
+            ("kv_truncations", Json::num(kv_truncations as f64)),
             ("attainment", Json::num(attainment)),
             ("admission_ms", admission.to_json()),
             ("e2e_ms", e2e.to_json()),

@@ -19,6 +19,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::objective::Job;
 use crate::coordinator::online::{OnlineOpts, OnlineStats, ReplanStrategy, WaveController};
+use crate::coordinator::policies::slo_deadline_ms;
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::priority::annealing::SaParams;
 use crate::coordinator::profiler::RequestProfiler;
@@ -69,6 +70,13 @@ pub struct ShardShared {
     pub met: AtomicU64,
     pub failed: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// Engine preemptions so far (absolute snapshot of
+    /// [`crate::engine::PreemptionStats::preemptions`], refreshed after
+    /// every batch).
+    pub preemptions: AtomicU64,
+    /// Engine EOS-on-OOM truncations so far (absolute snapshot; stays 0
+    /// whenever preemption absorbs every pool exhaustion).
+    pub kv_truncations: AtomicU64,
     /// f64 bits of the per-item drain-time EWMA (ms); 0 = no measurement.
     pub drain_ewma_ms_bits: AtomicU64,
     pub metrics: Mutex<ShardMetrics>,
@@ -316,6 +324,20 @@ fn run_dispatch(
             }
         })
         .collect();
+    // Absolute deadlines so pool-exhaustion victim selection runs by SLO
+    // slack (same wiring as the synchronous online path).
+    let deadlines: Vec<(u64, f64)> = d
+        .jobs
+        .iter()
+        .map(|job| {
+            let e = slots[job.req_idx].as_ref().unwrap();
+            (
+                e.request.id,
+                e.submit_ms + slo_deadline_ms(&e.request.slo),
+            )
+        })
+        .collect();
+    engine.set_deadlines(&deadlines);
     let wall_start = util::now_ms();
     match engine.run_batch(&batch) {
         Ok(items) => {
@@ -401,6 +423,13 @@ fn run_dispatch(
                     .drain_ewma_ms_bits
                     .store(next.to_bits(), Ordering::SeqCst);
             }
+            let ps = engine.preemption_stats();
+            shared
+                .preemptions
+                .store(ps.preemptions as u64, Ordering::SeqCst);
+            shared
+                .kv_truncations
+                .store(ps.kv_truncations as u64, Ordering::SeqCst);
             let drift = ctl.reconcile(&completions, engine.now_ms());
             if ctx.opts.replan_drift_ms > 0.0
                 && drift.abs() >= ctx.opts.replan_drift_ms

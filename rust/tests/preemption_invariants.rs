@@ -1,0 +1,812 @@
+//! Preemption / KV-swap / migration fault-injection harness (ISSUE 9
+//! acceptance).
+//!
+//! PR 9 replaces the force-stop truncation of overcommitted decodes with
+//! a real preemption model: suspend the slackest member mid-decode, hold
+//! its KV for recompute or swap it to a modeled host buffer, resume it
+//! most-urgent-first when blocks free up, and (at the fleet level) shed
+//! work from a saturated instance to an idle peer. This harness pins the
+//! properties that make that safe to ship:
+//!
+//! * **fault-injection grid** — seeds × {Reserve, Phased} × {Hard, Soft}
+//!   KV modes × σ ∈ {0, 0.5} × {recompute, swap}: after any sequence of
+//!   suspend / swap-out / swap-in / resume events, no KV block leaks
+//!   (the allocator drains to empty), every admitted request completes
+//!   exactly once with its full divergent output, and `kv_truncations`
+//!   stays zero whenever preemption is enabled and a single context fits
+//!   the pool;
+//! * **invariant 14 (escape hatch)** — preemption off replays the PR 8
+//!   truncating stack byte for byte (`to_bits()` on completions and
+//!   predictions), and the migrating fleet loop with `migrate: false`
+//!   replays the plain fleet loop byte for byte;
+//! * **directed scenarios** — a two-overrunner batch whose geometry is
+//!   computed in-test (QuantileTrace actuals are a pure function of the
+//!   request id) pins victim selection by SLO slack, the exact
+//!   suspension context, and swap/recompute cost accounting against a
+//!   sequential reference;
+//! * **PR 5 regression** — with preemption disabled, pool exhaustion
+//!   still truncates (`kv_truncations` increments) and rolls back
+//!   leak-free.
+
+use slo_serve::config::profiles::{by_name, HardwareProfile};
+use slo_serve::coordinator::kv::{KvConfig, KvPhaseModel};
+use slo_serve::coordinator::online::{
+    run_online_fleet_migrating, run_online_fleet_opts, run_online_opts,
+    OnlineOpts, OnlineOutcome, ReplanStrategy,
+};
+use slo_serve::coordinator::priority::annealing::SaParams;
+use slo_serve::coordinator::request::{Completion, Request, Slo, TaskType};
+use slo_serve::engine::sim::{
+    DivergenceModel, PreemptConfig, PreemptMode, SimEngine,
+};
+use slo_serve::engine::{Engine, EngineRequest, PreemptionStats};
+use slo_serve::util::rng::Rng;
+
+/// Engine block granularity (tokens per KV block), fixed by
+/// `SimEngine`'s pool construction.
+const BLOCK_TOKENS: usize = 16;
+
+fn blocks(tokens: usize) -> usize {
+    tokens.div_ceil(BLOCK_TOKENS)
+}
+
+/// Profile with a pool of exactly `pool_blocks` KV blocks and no timing
+/// noise (noise only scales step times; preemption costs are noiseless
+/// by construction, but determinism assertions are simplest at σ = 0).
+fn pooled_profile(pool_blocks: usize) -> HardwareProfile {
+    let mut p = by_name("qwen7b-v100x2-vllm").unwrap();
+    p.noise_std = 0.0;
+    p.kv_pool_mb =
+        pool_blocks as f64 * BLOCK_TOKENS as f64 * p.mem.mb_per_token;
+    p
+}
+
+/// QuantileTrace actuals are a pure function of the request id — the
+/// rng parameter is never consumed — so tests can *choose* how far a
+/// request overruns by searching ids.
+fn actual_of(model: &DivergenceModel, id: u64, nominal: usize) -> usize {
+    let mut rng = Rng::new(0);
+    model.actual_lo(id, nominal, &mut rng)
+}
+
+/// Smallest unused id whose QuantileTrace actual for `nominal` lands in
+/// `[lo, hi]`.
+fn find_id(
+    model: &DivergenceModel,
+    nominal: usize,
+    lo: usize,
+    hi: usize,
+    used: &[u64],
+) -> u64 {
+    (0..1_000_000u64)
+        .find(|id| {
+            !used.contains(id) && {
+                let a = actual_of(model, *id, nominal);
+                a >= lo && a <= hi
+            }
+        })
+        .expect("no id with the requested overrun window")
+}
+
+fn completion_bits(c: &Completion) -> (u64, u64, u64, u64, usize) {
+    (
+        c.id,
+        c.e2e_ms.to_bits(),
+        c.ttft_ms.to_bits(),
+        c.wait_ms.to_bits(),
+        c.generated,
+    )
+}
+
+struct GridTrace {
+    requests: Vec<Request>,
+    outs: Vec<usize>,
+    /// True output length per request under the cell's divergence model
+    /// (position-aligned with `requests`).
+    actuals: Vec<usize>,
+}
+
+/// `n` requests whose ids are chosen so that *every* request overruns
+/// its nominal output 2–5× under σ = 0.5 QuantileTrace divergence. At
+/// σ = 0 the same ids produce exactly-nominal outputs, so one trace
+/// shape serves both grid columns.
+fn overrun_trace(model: &DivergenceModel, n: usize) -> GridTrace {
+    let search = DivergenceModel::QuantileTrace { sigma: 0.5 };
+    let mut used: Vec<u64> = Vec::new();
+    let mut requests = Vec::new();
+    let mut t = 0.0f64;
+    for i in 0..n {
+        let input = 32 + 8 * (i % 8);
+        let nominal = 8 + 4 * (i % 5);
+        let id = find_id(&search, nominal, 2 * nominal, 5 * nominal, &used);
+        used.push(id);
+        t += 40.0 + 90.0 * (i % 3) as f64;
+        let mut r = Request::synthetic(
+            id,
+            if i % 2 == 0 { TaskType::Chat } else { TaskType::Code },
+            input,
+            nominal,
+            Slo::E2e { e2e_ms: 3_000.0 + 2_500.0 * i as f64 },
+        );
+        r.arrival_ms = t;
+        requests.push(r);
+    }
+    let outs: Vec<usize> = requests.iter().map(|r| r.output_len).collect();
+    let actuals: Vec<usize> = requests
+        .iter()
+        .map(|r| actual_of(model, r.id, r.output_len))
+        .collect();
+    GridTrace { requests, outs, actuals }
+}
+
+/// Pool (blocks) that provably prevents truncation under preemption:
+/// big enough that the single largest true context always fits with a
+/// one-block growth margin, yet far below a typical batch's true
+/// demand, so divergence overruns *must* preempt to make progress.
+fn tight_pool(gt: &GridTrace) -> usize {
+    gt.requests
+        .iter()
+        .zip(&gt.actuals)
+        .map(|(r, &a)| blocks(r.input_len + a.max(r.output_len) + 1))
+        .max()
+        .unwrap()
+        + 2
+}
+
+fn sorted_ids(completions: &[Completion]) -> Vec<u64> {
+    let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// One grid cell: run the online loop under fault injection, check
+/// every safety invariant, and return the engine-side preemption stats
+/// so the caller can assert the grid as a whole actually preempted.
+fn run_grid_cell(
+    seed: u64,
+    phase: KvPhaseModel,
+    soft: bool,
+    sigma: f64,
+    preempt: PreemptConfig,
+    check_determinism: bool,
+) -> PreemptionStats {
+    let model = DivergenceModel::QuantileTrace { sigma };
+    let n = 10;
+    let gt = overrun_trace(&model, n);
+    let tag = format!(
+        "seed {seed} {phase:?} soft={soft} sigma={sigma} {:?}",
+        preempt.mode
+    );
+
+    // Hard cells bind the engine pool and the planner to the same tight
+    // budget; soft cells keep the engine pool at the profile default
+    // (the soft penalty may plan nominal overcommit of its *own* pool,
+    // and the engine rejects truly infeasible batches outright).
+    let (profile, kv) = if soft {
+        let mut p = by_name("qwen7b-v100x2-vllm").unwrap();
+        p.noise_std = 0.0;
+        (p, KvConfig::soft(48, 1.0).with_phase(phase))
+    } else {
+        let pool = tight_pool(&gt);
+        (pooled_profile(pool), KvConfig::hard(pool as u64).with_phase(phase))
+    };
+    let predictor = profile.truth;
+    let sa = SaParams {
+        max_batch: 4,
+        seed,
+        t0: 100.0,
+        iters_per_temp: 8,
+        kv,
+        ..Default::default()
+    };
+    let opts = OnlineOpts {
+        arrival_aware: true,
+        replan_drift_ms: 150.0,
+        ..Default::default()
+    };
+
+    let run = || -> (OnlineOutcome, PreemptionStats) {
+        let mut engine = SimEngine::new(profile.clone(), 4, seed)
+            .with_kv_phase(phase)
+            .with_divergence(model)
+            .with_preemption(preempt);
+        let out = run_online_opts(
+            &gt.requests,
+            &gt.outs,
+            &mut engine,
+            &predictor,
+            &sa,
+            ReplanStrategy::Warm,
+            opts,
+        )
+        .unwrap_or_else(|e| panic!("{tag}: run failed: {e}"));
+        let p = engine.preemption_stats();
+        // no KV leak after any suspend/swap/resume sequence
+        assert_eq!(engine.kv().active_seqs(), 0, "{tag}: leaked seqs");
+        assert_eq!(
+            engine.kv().free_blocks(),
+            engine.kv().config().total_blocks,
+            "{tag}: leaked blocks"
+        );
+        assert!(
+            engine.peak_used_blocks() <= engine.kv().config().total_blocks,
+            "{tag}: pool overrun"
+        );
+        (out, p)
+    };
+    let (out, p) = run();
+
+    // every admitted request completes exactly once …
+    assert_eq!(out.completions.len(), n, "{tag}: wrong completion count");
+    let mut expect: Vec<u64> = gt.requests.iter().map(|r| r.id).collect();
+    expect.sort_unstable();
+    assert_eq!(
+        sorted_ids(&out.completions),
+        expect,
+        "{tag}: duplicate or missing completions"
+    );
+    // … with its *full* divergent output: preemption suspends and
+    // resumes instead of truncating.
+    assert_eq!(p.kv_truncations, 0, "{tag}: truncated under preemption");
+    for c in &out.completions {
+        let i = gt.requests.iter().position(|r| r.id == c.id).unwrap();
+        assert_eq!(
+            c.generated, gt.actuals[i],
+            "{tag}: id {} generated {} != true length {}",
+            c.id, c.generated, gt.actuals[i]
+        );
+    }
+
+    // mode-specific accounting: with truncations at zero, every
+    // suspension is resumed exactly once, by swap-in when the host
+    // buffer fits (it always does here) and by recompute otherwise.
+    match preempt.mode {
+        PreemptMode::Swap => {
+            assert_eq!(p.swap_outs, p.preemptions, "{tag}");
+            assert_eq!(p.swap_ins, p.swap_outs, "{tag}: unresumed swap");
+            assert_eq!(p.recompute_resumes, 0, "{tag}");
+            // swap-cost accounting: total ms == total blocks moved ×
+            // the link's per-block cost (sequential reference).
+            let per_block = profile.mem.mb_per_token
+                * BLOCK_TOKENS as f64
+                / preempt.swap_gbps;
+            let expect_ms = p.swap_blocks as f64 * per_block;
+            assert!(
+                (p.swap_ms - expect_ms).abs()
+                    <= 1e-9 * expect_ms.max(1.0),
+                "{tag}: swap_ms {} != blocks×cost {}",
+                p.swap_ms,
+                expect_ms
+            );
+        }
+        PreemptMode::Recompute => {
+            assert_eq!(p.swap_outs, 0, "{tag}");
+            assert_eq!(p.swap_ins, 0, "{tag}");
+            assert_eq!(p.swap_blocks, 0, "{tag}");
+            assert_eq!(p.swap_ms, 0.0, "{tag}");
+            assert_eq!(p.recompute_resumes, p.preemptions, "{tag}");
+            if p.preemptions > 0 {
+                assert!(p.recompute_ms > 0.0, "{tag}: free recompute");
+            }
+        }
+        PreemptMode::Off => unreachable!("grid only runs enabled modes"),
+    }
+    // the online counter mirrors the engine-side count (and stays
+    // distinct from admission deferrals by construction)
+    assert_eq!(out.stats.preemptions, p.preemptions, "{tag}");
+    assert_eq!(out.stats.migrations, 0, "{tag}");
+
+    if sigma == 0.0 {
+        // exactly-nominal outputs: a Reserve-planned batch can never
+        // outgrow its reservation, so nothing is ever suspended.
+        assert!(gt.actuals == gt.outs, "{tag}: σ=0 must be nominal");
+        if phase == KvPhaseModel::Reserve {
+            assert_eq!(p.preemptions, 0, "{tag}: preempted at σ=0");
+        }
+    }
+
+    if check_determinism {
+        let (out2, p2) = run();
+        assert_eq!(p, p2, "{tag}: preemption stats not deterministic");
+        assert_eq!(out.completions.len(), out2.completions.len(), "{tag}");
+        for (a, b) in out.completions.iter().zip(&out2.completions) {
+            assert_eq!(
+                completion_bits(a),
+                completion_bits(b),
+                "{tag}: completions not deterministic"
+            );
+        }
+    }
+    p
+}
+
+/// The tentpole grid: seeds × {Reserve, Phased} × {Hard, Soft} ×
+/// σ ∈ {0, 0.5} × {recompute, swap}. Invariants per cell are asserted
+/// inside `run_grid_cell`; across the grid, fault injection must have
+/// actually fired (hard pools + universal 2–5× overruns guarantee it).
+#[test]
+fn grid_invariants_under_fault_injection() {
+    let mut total_preemptions = 0usize;
+    let mut total_swaps = 0usize;
+    for seed in [1u64, 2] {
+        for phase in [KvPhaseModel::Reserve, KvPhaseModel::Phased] {
+            for soft in [false, true] {
+                for sigma in [0.0, 0.5] {
+                    for preempt in [
+                        PreemptConfig::recompute(),
+                        PreemptConfig::swap(8.0, 10_000),
+                    ] {
+                        let deterministic = seed == 1 && sigma == 0.5;
+                        let p = run_grid_cell(
+                            seed,
+                            phase,
+                            soft,
+                            sigma,
+                            preempt,
+                            deterministic,
+                        );
+                        total_preemptions += p.preemptions;
+                        total_swaps += p.swap_ins;
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        total_preemptions > 0,
+        "fault injection never fired: the grid exercised no preemption"
+    );
+    assert!(
+        total_swaps > 0,
+        "fault injection never fired: the grid exercised no swap"
+    );
+}
+
+/// Invariant 14, engine half: an engine that never saw the preemption
+/// API and one configured with `PreemptConfig::OFF` replay the PR 8
+/// truncating stack byte for byte — completions, predictions, stats —
+/// even when σ = 0.5 overruns exhaust a tight pool.
+#[test]
+fn preemption_off_replays_truncating_stack_bit_identically() {
+    let model = DivergenceModel::QuantileTrace { sigma: 0.5 };
+    let gt = overrun_trace(&model, 12);
+    let pool = tight_pool(&gt);
+    let profile = pooled_profile(pool);
+    let predictor = profile.truth;
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 5,
+        t0: 100.0,
+        iters_per_temp: 10,
+        kv: KvConfig::hard(pool as u64),
+        ..Default::default()
+    };
+    let run = |explicit_off: bool| {
+        let mut engine = SimEngine::new(profile.clone(), 4, 5)
+            .with_divergence(model);
+        if explicit_off {
+            engine = engine.with_preemption(PreemptConfig::OFF);
+        }
+        let out = run_online_opts(
+            &gt.requests,
+            &gt.outs,
+            &mut engine,
+            &predictor,
+            &sa,
+            ReplanStrategy::Warm,
+            OnlineOpts {
+                arrival_aware: true,
+                replan_drift_ms: 150.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (out, engine.preemption_stats())
+    };
+    let (base, pb) = run(false);
+    let (off, po) = run(true);
+    assert_eq!(base.completions.len(), off.completions.len());
+    for (x, y) in base.completions.iter().zip(&off.completions) {
+        assert_eq!(
+            completion_bits(x),
+            completion_bits(y),
+            "preemption-off diverged from the pre-preemption engine"
+        );
+    }
+    for (x, y) in base.predicted.iter().zip(&off.predicted) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.e2e_ms.to_bits(), y.e2e_ms.to_bits());
+        assert_eq!(x.wait_ms.to_bits(), y.wait_ms.to_bits());
+    }
+    assert_eq!(base.stats.admitted, off.stats.admitted);
+    assert_eq!(base.stats.replans, off.stats.replans);
+    assert_eq!(base.stats.drift_replans, off.stats.drift_replans);
+    assert_eq!(base.stats.deferrals, off.stats.deferrals);
+    assert_eq!(base.stats.dispatched_jobs, off.stats.dispatched_jobs);
+    assert_eq!(base.stats.preemptions, 0);
+    assert_eq!(off.stats.preemptions, 0);
+    assert_eq!(pb, po, "engine-side stats diverged");
+    // the truncating legacy path was actually exercised — this is the
+    // PR 5 behavior the escape hatch preserves
+    assert!(pb.kv_truncations > 0, "tight pool never truncated");
+}
+
+/// Invariant 14, σ = 0 corner: with exactly-nominal outputs the
+/// preempting decode path is arithmetic- and RNG-identical to the
+/// truncating path — enabling preemption changes nothing until a pool
+/// actually exhausts.
+#[test]
+fn preemption_enabled_at_sigma_zero_is_bit_identical() {
+    let model = DivergenceModel::QuantileTrace { sigma: 0.0 };
+    let gt = overrun_trace(&model, 10);
+    let pool = tight_pool(&gt);
+    let profile = pooled_profile(pool);
+    let predictor = profile.truth;
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 9,
+        t0: 100.0,
+        iters_per_temp: 8,
+        kv: KvConfig::hard(pool as u64),
+        ..Default::default()
+    };
+    let run = |preempt: PreemptConfig| {
+        let mut engine = SimEngine::new(profile.clone(), 4, 9)
+            .with_divergence(model)
+            .with_preemption(preempt);
+        run_online_opts(
+            &gt.requests,
+            &gt.outs,
+            &mut engine,
+            &predictor,
+            &sa,
+            ReplanStrategy::Warm,
+            OnlineOpts { arrival_aware: true, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let on = run(PreemptConfig::recompute());
+    let off = run(PreemptConfig::OFF);
+    assert_eq!(on.stats.preemptions, 0);
+    assert_eq!(on.completions.len(), off.completions.len());
+    for (x, y) in on.completions.iter().zip(&off.completions) {
+        assert_eq!(completion_bits(x), completion_bits(y));
+    }
+}
+
+fn fleet_trace(n: usize, seed: u64) -> (Vec<Request>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            t += rng.uniform(0.0, 250.0);
+            let mut r = Request::synthetic(
+                i as u64,
+                if rng.chance(0.5) { TaskType::Chat } else { TaskType::Code },
+                1 + rng.below(240),
+                1 + rng.below(60),
+                Slo::E2e { e2e_ms: rng.uniform(2_000.0, 60_000.0) },
+            );
+            r.arrival_ms = t;
+            r
+        })
+        .collect();
+    let outs = requests.iter().map(|r| r.output_len).collect();
+    (requests, outs)
+}
+
+fn fleet_engines(
+    profile: &HardwareProfile,
+    n: usize,
+    seed: u64,
+    model: DivergenceModel,
+    preempt: PreemptConfig,
+) -> Vec<Box<dyn Engine + Send>> {
+    (0..n)
+        .map(|i| {
+            Box::new(
+                SimEngine::new(profile.clone(), 4, seed ^ ((i as u64) << 8))
+                    .with_divergence(model)
+                    .with_preemption(preempt),
+            ) as Box<dyn Engine + Send>
+        })
+        .collect()
+}
+
+/// Invariant 14, fleet half: the three-phase migrating fleet loop with
+/// `migrate: false` replays the plain round-robin fleet loop byte for
+/// byte on a multi-instance fleet.
+#[test]
+fn fleet_migrate_off_is_bit_identical() {
+    let profile = {
+        let mut p = by_name("qwen7b-v100x2-vllm").unwrap();
+        p.noise_std = 0.0;
+        p
+    };
+    let predictor = profile.truth;
+    let (requests, outs) = fleet_trace(14, 0xF1EE7);
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 2,
+        t0: 100.0,
+        iters_per_temp: 10,
+        kv: KvConfig::hard(48),
+        ..Default::default()
+    };
+    let opts = OnlineOpts { arrival_aware: true, ..Default::default() };
+    let mut base_engines = fleet_engines(
+        &profile, 2, 11, DivergenceModel::Off, PreemptConfig::OFF,
+    );
+    let (base_c, base_o) = run_online_fleet_opts(
+        &requests, &outs, &mut base_engines, &predictor, &sa,
+        ReplanStrategy::Warm, opts,
+    )
+    .unwrap();
+    let mut mig_engines = fleet_engines(
+        &profile, 2, 11, DivergenceModel::Off, PreemptConfig::OFF,
+    );
+    let (mig_c, mig_o) = run_online_fleet_migrating(
+        &requests, &outs, &mut mig_engines, &predictor, &sa,
+        ReplanStrategy::Warm, opts,
+    )
+    .unwrap();
+    assert_eq!(base_c.len(), mig_c.len());
+    for (x, y) in base_c.iter().zip(&mig_c) {
+        assert_eq!(
+            completion_bits(x),
+            completion_bits(y),
+            "migrate:false diverged from the plain fleet loop"
+        );
+    }
+    assert_eq!(base_o.len(), mig_o.len());
+    for (x, y) in base_o.iter().zip(&mig_o) {
+        assert_eq!(x.stats.admitted, y.stats.admitted);
+        assert_eq!(x.stats.replans, y.stats.replans);
+        assert_eq!(x.stats.deferrals, y.stats.deferrals);
+        assert_eq!(y.stats.migrations, 0);
+        for (a, b) in x.completions.iter().zip(&y.completions) {
+            assert_eq!(completion_bits(a), completion_bits(b));
+        }
+    }
+}
+
+/// Migration determinism (satellite 3): a fixed seed reproduces the
+/// exact victim/target choices — identical migration counts and
+/// bit-identical completions across runs — and a single-instance fleet
+/// never migrates.
+#[test]
+fn fleet_migration_is_deterministic_and_single_instance_never_migrates() {
+    let model = DivergenceModel::QuantileTrace { sigma: 0.5 };
+    let gt = overrun_trace(&model, 12);
+    let pool = tight_pool(&gt);
+    let profile = pooled_profile(pool);
+    let predictor = profile.truth;
+    let sa = SaParams {
+        max_batch: 4,
+        seed: 3,
+        t0: 100.0,
+        iters_per_temp: 8,
+        kv: KvConfig::hard(pool as u64),
+        ..Default::default()
+    };
+    let opts = OnlineOpts {
+        arrival_aware: true,
+        replan_drift_ms: 150.0,
+        migrate: true,
+        ..Default::default()
+    };
+    let run = |n_inst: usize| {
+        let mut engines = fleet_engines(
+            &profile, n_inst, 21, model, PreemptConfig::recompute(),
+        );
+        run_online_fleet_migrating(
+            &gt.requests, &gt.outs, &mut engines, &predictor, &sa,
+            ReplanStrategy::Warm, opts,
+        )
+        .unwrap()
+    };
+    let (c1, o1) = run(2);
+    let (c2, o2) = run(2);
+    // exactly-once across the fleet
+    let mut expect: Vec<u64> = gt.requests.iter().map(|r| r.id).collect();
+    expect.sort_unstable();
+    assert_eq!(sorted_ids(&c1), expect, "duplicate or missing completions");
+    // fixed seed ⇒ identical victim/target choices and completions
+    let m1: Vec<usize> = o1.iter().map(|o| o.stats.migrations).collect();
+    let m2: Vec<usize> = o2.iter().map(|o| o.stats.migrations).collect();
+    assert_eq!(m1, m2, "migration choices not deterministic");
+    assert_eq!(c1.len(), c2.len());
+    for (x, y) in c1.iter().zip(&c2) {
+        assert_eq!(completion_bits(x), completion_bits(y));
+    }
+    // single-instance fleets have no peer to steal work
+    let (c_solo, o_solo) = run(1);
+    assert_eq!(sorted_ids(&c_solo), expect);
+    assert_eq!(o_solo.len(), 1);
+    assert_eq!(o_solo[0].stats.migrations, 0, "migrated with no peer");
+}
+
+/// Directed two-overrunner scenario, shared by the recompute and swap
+/// tests. Pool of exactly 8 blocks; both members are 48-token prompts
+/// with nominal 16 but true outputs in [48, 72] (ids searched at
+/// runtime), so both allocate 4 blocks (49 tokens), fill the pool, and
+/// collide at the first block-boundary crossing: context 64 → 65 needs
+/// a 5th block. Member A gets an effectively infinite deadline and B a
+/// tight one, pinning victim selection to A (max SLO slack).
+struct Scenario {
+    profile: HardwareProfile,
+    id_a: u64,
+    id_b: u64,
+    actual_a: usize,
+    actual_b: usize,
+}
+
+fn two_overrunner_scenario() -> Scenario {
+    let model = DivergenceModel::QuantileTrace { sigma: 0.5 };
+    let id_a = find_id(&model, 16, 48, 72, &[]);
+    let id_b = find_id(&model, 16, 48, 72, &[id_a]);
+    Scenario {
+        profile: pooled_profile(8),
+        id_a,
+        id_b,
+        actual_a: actual_of(&model, id_a, 16),
+        actual_b: actual_of(&model, id_b, 16),
+    }
+}
+
+fn ereq(id: u64, input: usize, output: usize) -> EngineRequest {
+    EngineRequest { id, input_len: input, max_new_tokens: output, prompt: None }
+}
+
+fn scenario_engine(s: &Scenario, preempt: PreemptConfig) -> SimEngine {
+    SimEngine::new(s.profile.clone(), 2, 0)
+        .with_divergence(DivergenceModel::QuantileTrace { sigma: 0.5 })
+        .with_preemption(preempt)
+}
+
+/// Both members suspend-collide exactly once, at context 64 (the block
+/// boundary after the 4-block admission alloc): the victim is A (the
+/// slack-maximal member), A yields its step, B runs to its true EOS,
+/// then A resumes by recompute at a cost of exactly one 64-token
+/// prefill — and the whole dance is bit-deterministic.
+#[test]
+fn directed_recompute_preempts_slackest_member_exactly_once() {
+    let s = two_overrunner_scenario();
+    let truth = s.profile.truth;
+    let batch = vec![ereq(s.id_a, 48, 16), ereq(s.id_b, 48, 16)];
+    let run = || {
+        let mut e = scenario_engine(&s, PreemptConfig::recompute());
+        assert_eq!(e.kv().config().total_blocks, 8, "pool sizing drifted");
+        e.set_deadlines(&[(s.id_a, 1e15), (s.id_b, 1_000.0)]);
+        let out = e.run_batch(&batch).unwrap();
+        let p = e.preemption_stats();
+        assert_eq!(e.kv().active_seqs(), 0, "leaked seqs");
+        assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
+        (out, p)
+    };
+    let (out, p) = run();
+    assert_eq!(p.preemptions, 1, "expected exactly one suspension");
+    assert_eq!(p.recompute_resumes, 1);
+    assert_eq!(p.kv_truncations, 0);
+    assert_eq!(p.swap_outs, 0);
+    // the resume recomputes A's exact suspension context: 64 tokens
+    // (the 4-block admission alloc), priced as a batch-1 prefill
+    let expect_ms = truth.prefill_ms(1, 64);
+    assert!(
+        (p.recompute_ms - expect_ms).abs() <= 1e-9 * expect_ms.max(1.0),
+        "recompute_ms {} != reference prefill {}",
+        p.recompute_ms,
+        expect_ms
+    );
+    // exactly-once, full divergent outputs, and A (the victim) finishes
+    // after B (the survivor)
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].id, s.id_a);
+    assert_eq!(out[0].generated, s.actual_a);
+    assert_eq!(out[1].generated, s.actual_b);
+    assert!(
+        out[0].finish_ms > out[1].finish_ms,
+        "victim should finish after the survivor"
+    );
+    // bit-determinism of the whole suspend/resume dance
+    let (out2, p2) = run();
+    assert_eq!(p, p2);
+    for (x, y) in out.iter().zip(&out2) {
+        assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+        assert_eq!(x.first_token_ms.to_bits(), y.first_token_ms.to_bits());
+        assert_eq!(x.generated, y.generated);
+    }
+}
+
+/// Swap flavor of the directed scenario: the suspension swaps A's
+/// 4-block context out and back in, and the accounted cost matches a
+/// sequential reference recomputation of the geometry — 8 block moves
+/// at the link's per-block cost.
+#[test]
+fn directed_swap_cost_matches_sequential_reference() {
+    let s = two_overrunner_scenario();
+    let batch = vec![ereq(s.id_a, 48, 16), ereq(s.id_b, 48, 16)];
+    let mut e = scenario_engine(&s, PreemptConfig::swap(8.0, 64));
+    e.set_deadlines(&[(s.id_a, 1e15), (s.id_b, 1_000.0)]);
+    let per_block = e.swap_ms_per_block();
+    assert!(per_block > 0.0);
+    let out = e.run_batch(&batch).unwrap();
+    let p = e.preemption_stats();
+    assert_eq!(p.preemptions, 1);
+    assert_eq!(p.swap_outs, 1);
+    assert_eq!(p.swap_ins, 1);
+    assert_eq!(p.recompute_resumes, 0);
+    assert_eq!(p.kv_truncations, 0);
+    // sequential reference: A is suspended at context 64 = 4 blocks;
+    // one swap-out + one swap-in moves 8 blocks total
+    assert_eq!(p.swap_blocks, 8, "suspension context drifted");
+    let expect_ms = 8.0 * per_block;
+    assert!(
+        (p.swap_ms - expect_ms).abs() <= 1e-9 * expect_ms.max(1.0),
+        "swap_ms {} != sequential reference {}",
+        p.swap_ms,
+        expect_ms
+    );
+    assert_eq!(out[0].generated, s.actual_a);
+    assert_eq!(out[1].generated, s.actual_b);
+    assert!(out[0].finish_ms > out[1].finish_ms);
+    assert_eq!(e.kv().active_seqs(), 0);
+    assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
+}
+
+/// PR 5 regression (satellite 2): with preemption disabled, exhausting
+/// the pool still force-stops the overrunning member — `kv_truncations`
+/// increments, the member keeps its partial output, and the allocator
+/// rolls back leak-free.
+#[test]
+fn truncation_path_still_fires_when_preemption_disabled() {
+    // σ = 1.0 makes >5× overruns common enough to find by id search: the
+    // big member's true context (48 + actual > 128 tokens) exceeds the
+    // whole 8-block pool, so no amount of freed blocks can save it.
+    let model = DivergenceModel::QuantileTrace { sigma: 1.0 };
+    let id_small = find_id(&model, 16, 1, 16, &[]);
+    let id_big = find_id(&model, 16, 81, 120, &[id_small]);
+    let actual_big = actual_of(&model, id_big, 16);
+    let profile = pooled_profile(8);
+    let mut e = SimEngine::new(profile, 2, 0).with_divergence(model);
+    let out = e
+        .run_batch(&[ereq(id_small, 48, 16), ereq(id_big, 48, 16)])
+        .unwrap();
+    let p = e.preemption_stats();
+    assert_eq!(p.kv_truncations, 1, "pool exhaustion must truncate");
+    assert_eq!(p.preemptions, 0, "preemption is disabled");
+    // the big member is force-stopped exactly when its context fills
+    // the pool: 8 blocks × 16 tokens − 48 prompt = 80 generated
+    assert_eq!(out[1].id, id_big);
+    assert_eq!(out[1].generated, 80);
+    assert!(out[1].generated < actual_big);
+    // the short member is untouched
+    assert_eq!(
+        out[0].generated,
+        actual_of(&model, id_small, 16)
+    );
+    // leak-free rollback
+    assert_eq!(e.kv().active_seqs(), 0);
+    assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
+}
+
+/// Failed admissions roll back cleanly: a batch the planner should
+/// never have sent (nominal demand beyond the physical pool) errors out
+/// without leaking partially-allocated sequences.
+#[test]
+fn infeasible_batch_rejection_rolls_back_leak_free() {
+    let profile = pooled_profile(8);
+    let mut e = SimEngine::new(profile, 2, 0)
+        .with_divergence(DivergenceModel::QuantileTrace { sigma: 0.5 })
+        .with_preemption(PreemptConfig::recompute());
+    // nominal footprint 48 + 1000 tokens = 66 blocks >> 8: rejected
+    // before any decode work
+    assert!(e.run_batch(&[ereq(1, 48, 1000)]).is_err());
+    assert_eq!(e.kv().active_seqs(), 0, "rejection leaked a sequence");
+    assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
+    // and the engine is still serviceable afterwards
+    let out = e.run_batch(&[ereq(2, 48, 4)]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(e.kv().active_seqs(), 0);
+    assert_eq!(e.kv().free_blocks(), e.kv().config().total_blocks);
+}
