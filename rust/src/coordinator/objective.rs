@@ -286,11 +286,31 @@ pub struct Evaluator<'a> {
     t0_ms: f64,
     /// Per-job arrival times; empty ⇒ all at t = 0.
     arrivals: &'a [f64],
+    /// Chunked-prefill chunk size the timeline is priced at; 0 (the
+    /// default) prices whole-batch prefill — the pre-chunking arithmetic
+    /// bit for bit for E2e-class SLOs.
+    chunk_tokens: usize,
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(jobs: &'a [Job], predictor: &'a LatencyPredictor) -> Self {
-        Evaluator { jobs, predictor, t0_ms: 0.0, arrivals: &[] }
+        Evaluator { jobs, predictor, t0_ms: 0.0, arrivals: &[], chunk_tokens: 0 }
+    }
+
+    /// This evaluator pricing chunked prefill at `chunk_tokens` tokens
+    /// per chunk (0 = off): member prefills run sequentially in batch
+    /// order as batch-of-1 chunk calls, a member's TTFT lands at its
+    /// *final* chunk completion, and decode starts after every member's
+    /// prefill — mirroring
+    /// [`crate::engine::sim::SimEngine::with_chunk_tokens`].
+    pub fn with_chunk_tokens(mut self, chunk_tokens: usize) -> Self {
+        self.chunk_tokens = chunk_tokens;
+        self
+    }
+
+    /// The chunked-prefill chunk size this evaluator prices (0 = off).
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk_tokens
     }
 
     /// [`Evaluator::new`] with an initial waiting time: every job's entry
@@ -307,7 +327,13 @@ impl<'a> Evaluator<'a> {
         predictor: &'a LatencyPredictor,
         base_wait_ms: f64,
     ) -> Self {
-        Evaluator { jobs, predictor, t0_ms: base_wait_ms, arrivals: &[] }
+        Evaluator {
+            jobs,
+            predictor,
+            t0_ms: base_wait_ms,
+            arrivals: &[],
+            chunk_tokens: 0,
+        }
     }
 
     /// Evaluate on an explicit timeline (module docs): batch `k` starts at
@@ -335,7 +361,7 @@ impl<'a> Evaluator<'a> {
             arrivals.is_empty() || arrivals.len() == jobs.len(),
             "arrival column must cover every job (or be empty for t = 0)"
         );
-        Evaluator { jobs, predictor, t0_ms, arrivals }
+        Evaluator { jobs, predictor, t0_ms, arrivals, chunk_tokens: 0 }
     }
 
     pub fn jobs(&self) -> &[Job] {
@@ -444,18 +470,71 @@ impl<'a> Evaluator<'a> {
                 TimelineOrigin::batch_start(free, self.batch_arrival_max(members));
             let mut batch_max = 0.0f64;
             let mut batch_sum = 0.0f64;
-            for &j in members {
-                let job = &self.jobs[j];
-                let p = self.predictor.predict(bsize, job.input_len, job.output_len);
-                let wait = begin - self.arrival(j);
-                let e2e = wait + p.exec_ms;
-                let ttft = wait + p.prefill_ms;
-                batch_sum += e2e;
-                if job.slo.met(e2e, ttft, p.tpot_ms) {
-                    met += 1;
+            if self.chunk_tokens == 0 {
+                // Whole-batch prefill: every member's first token lands
+                // at the batch prefill completion, which the max-input
+                // member determines — the engine's `prefill_ms(b, max_in)`
+                // charge, not the member's own solo prefill.
+                let max_in = members
+                    .iter()
+                    .map(|&j| self.jobs[j].input_len)
+                    .max()
+                    .unwrap_or(0);
+                let batch_prefill = self.predictor.prefill_ms(bsize, max_in);
+                for &j in members {
+                    let job = &self.jobs[j];
+                    let p = self
+                        .predictor
+                        .predict(bsize, job.input_len, job.output_len);
+                    let wait = begin - self.arrival(j);
+                    let e2e = wait + p.exec_ms;
+                    let ttft = wait + batch_prefill;
+                    batch_sum += e2e;
+                    if job.slo.met(e2e, ttft, p.tpot_ms) {
+                        met += 1;
+                    }
+                    if p.exec_ms > batch_max {
+                        batch_max = p.exec_ms;
+                    }
                 }
-                if p.exec_ms > batch_max {
-                    batch_max = p.exec_ms;
+            } else {
+                // Chunked prefill: members prefill sequentially in batch
+                // order (batch-of-1 chunks), so member i's first token
+                // lands at its own final chunk completion (prefix sum of
+                // chunk times); decode starts once every member has
+                // prefilled. A ≤1-token member finishes at its final
+                // chunk; the rest decode for `exec − prefill` at the
+                // batch size, on top of the whole chunk phase.
+                let mut chunk_total = 0.0f64;
+                for &j in members {
+                    chunk_total += self
+                        .predictor
+                        .chunked_prefill_ms(self.jobs[j].input_len, self.chunk_tokens);
+                }
+                let mut offset = 0.0f64;
+                for &j in members {
+                    let job = &self.jobs[j];
+                    let p = self
+                        .predictor
+                        .predict(bsize, job.input_len, job.output_len);
+                    offset += self
+                        .predictor
+                        .chunked_prefill_ms(job.input_len, self.chunk_tokens);
+                    let wait = begin - self.arrival(j);
+                    let exec = if job.output_len <= 1 {
+                        offset
+                    } else {
+                        chunk_total + (p.exec_ms - p.prefill_ms)
+                    };
+                    let e2e = wait + exec;
+                    let ttft = wait + offset;
+                    batch_sum += e2e;
+                    if job.slo.met(e2e, ttft, p.tpot_ms) {
+                        met += 1;
+                    }
+                    if exec > batch_max {
+                        batch_max = exec;
+                    }
                 }
             }
             total_e2e += batch_sum;
@@ -479,26 +558,75 @@ impl<'a> Evaluator<'a> {
                 TimelineOrigin::batch_start(free, self.batch_arrival_max(members));
             let mut batch_max = 0.0f64;
             let mut batch_sum = 0.0f64;
-            for &j in members {
-                let job = &self.jobs[j];
-                let p = self.predictor.predict(bsize, job.input_len, job.output_len);
-                let wait = begin - self.arrival(j);
-                let e2e = wait + p.exec_ms;
-                let ttft = wait + p.prefill_ms;
-                let ok = job.slo.met(e2e, ttft, p.tpot_ms);
-                batch_sum += e2e;
-                met += ok as usize;
-                batch_max = batch_max.max(p.exec_ms);
-                timelines.push(JobTimeline {
-                    job: j,
-                    batch: k,
-                    start_ms: begin,
-                    wait_ms: wait,
-                    exec_ms: p.exec_ms,
-                    ttft_ms: ttft,
-                    tpot_ms: p.tpot_ms,
-                    met: ok,
-                });
+            if self.chunk_tokens == 0 {
+                let max_in = members
+                    .iter()
+                    .map(|&j| self.jobs[j].input_len)
+                    .max()
+                    .unwrap_or(0);
+                let batch_prefill = self.predictor.prefill_ms(bsize, max_in);
+                for &j in members {
+                    let job = &self.jobs[j];
+                    let p = self
+                        .predictor
+                        .predict(bsize, job.input_len, job.output_len);
+                    let wait = begin - self.arrival(j);
+                    let e2e = wait + p.exec_ms;
+                    let ttft = wait + batch_prefill;
+                    let ok = job.slo.met(e2e, ttft, p.tpot_ms);
+                    batch_sum += e2e;
+                    met += ok as usize;
+                    batch_max = batch_max.max(p.exec_ms);
+                    timelines.push(JobTimeline {
+                        job: j,
+                        batch: k,
+                        start_ms: begin,
+                        wait_ms: wait,
+                        exec_ms: p.exec_ms,
+                        ttft_ms: ttft,
+                        tpot_ms: p.tpot_ms,
+                        met: ok,
+                    });
+                }
+            } else {
+                let mut chunk_total = 0.0f64;
+                for &j in members {
+                    chunk_total += self
+                        .predictor
+                        .chunked_prefill_ms(self.jobs[j].input_len, self.chunk_tokens);
+                }
+                let mut offset = 0.0f64;
+                for &j in members {
+                    let job = &self.jobs[j];
+                    let p = self
+                        .predictor
+                        .predict(bsize, job.input_len, job.output_len);
+                    offset += self
+                        .predictor
+                        .chunked_prefill_ms(job.input_len, self.chunk_tokens);
+                    let wait = begin - self.arrival(j);
+                    let exec = if job.output_len <= 1 {
+                        offset
+                    } else {
+                        chunk_total + (p.exec_ms - p.prefill_ms)
+                    };
+                    let e2e = wait + exec;
+                    let ttft = wait + offset;
+                    let ok = job.slo.met(e2e, ttft, p.tpot_ms);
+                    batch_sum += e2e;
+                    met += ok as usize;
+                    batch_max = batch_max.max(exec);
+                    timelines.push(JobTimeline {
+                        job: j,
+                        batch: k,
+                        start_ms: begin,
+                        wait_ms: wait,
+                        exec_ms: exec,
+                        ttft_ms: ttft,
+                        tpot_ms: p.tpot_ms,
+                        met: ok,
+                    });
+                }
             }
             total_e2e += batch_sum;
             free = begin + batch_max;
@@ -808,21 +936,69 @@ impl<'a> IncrementalEval<'a> {
         let mut sum = 0.0f64;
         let mut met = 0usize;
         let mut kvb = 0u64;
-        for &j in &self.schedule.order[start..start + bsize] {
-            let job = &self.jobs[j];
-            let p = self.table.get(j, bsize);
-            let wait = begin - self.table.arrival_ms(j);
-            let e2e = wait + p.exec_ms;
-            let ttft = wait + p.prefill_ms;
-            sum += e2e;
-            if job.slo.met(e2e, ttft, p.tpot_ms) {
-                met += 1;
+        if self.table.chunk_tokens() == 0 {
+            // Batch-wide prefill for TTFT: the max-input member's table
+            // row holds exactly `prefill_ms(bsize, max_in)` (entries are
+            // stored predictor outputs), so this is bit-identical to the
+            // full evaluator's direct predictor call. Ties don't matter:
+            // equal inputs produce equal bits.
+            let span = &self.schedule.order[start..start + bsize];
+            let mut arg = span[0];
+            for &j in &span[1..] {
+                if self.jobs[j].input_len > self.jobs[arg].input_len {
+                    arg = j;
+                }
             }
-            if p.exec_ms > max {
-                max = p.exec_ms;
+            let batch_prefill = self.table.get(arg, bsize).prefill_ms;
+            for &j in span {
+                let job = &self.jobs[j];
+                let p = self.table.get(j, bsize);
+                let wait = begin - self.table.arrival_ms(j);
+                let e2e = wait + p.exec_ms;
+                let ttft = wait + batch_prefill;
+                sum += e2e;
+                if job.slo.met(e2e, ttft, p.tpot_ms) {
+                    met += 1;
+                }
+                if p.exec_ms > max {
+                    max = p.exec_ms;
+                }
+                if !phased {
+                    kvb += self.table.kv_blocks(j);
+                }
             }
-            if !phased {
-                kvb += self.table.kv_blocks(j);
+        } else {
+            // Chunked pricing (same two-pass accumulation order as the
+            // full evaluator, so results stay bit-identical): pass A sums
+            // the member chunk times; pass B re-walks the prefix sums for
+            // per-member final-chunk completions.
+            let mut chunk_total = 0.0f64;
+            for &j in &self.schedule.order[start..start + bsize] {
+                chunk_total += self.table.chunk_ms(j);
+            }
+            let mut offset = 0.0f64;
+            for &j in &self.schedule.order[start..start + bsize] {
+                let job = &self.jobs[j];
+                let p = self.table.get(j, bsize);
+                offset += self.table.chunk_ms(j);
+                let wait = begin - self.table.arrival_ms(j);
+                let exec = if job.output_len <= 1 {
+                    offset
+                } else {
+                    chunk_total + (p.exec_ms - p.prefill_ms)
+                };
+                let e2e = wait + exec;
+                let ttft = wait + offset;
+                sum += e2e;
+                if job.slo.met(e2e, ttft, p.tpot_ms) {
+                    met += 1;
+                }
+                if exec > max {
+                    max = exec;
+                }
+                if !phased {
+                    kvb += self.table.kv_blocks(j);
+                }
             }
         }
         if phased {
@@ -900,6 +1076,23 @@ impl<'a> IncrementalEval<'a> {
         frozen_batches: usize,
         rng: &mut Rng,
     ) -> Option<Eval> {
+        self.try_random_move_windowed(max_batch, frozen_batches, 0, rng)
+    }
+
+    /// [`IncrementalEval::try_random_move_masked`] with the search further
+    /// restricted to a sliding window of `window` batches beyond the
+    /// frozen prefix (0 = unbounded). Windowed planning keeps the SA
+    /// focused on the next `window` dispatches — the chunk-granular
+    /// online mode — while batches beyond the window ride along
+    /// untouched. With `window == 0` this is bit-identical (same RNG
+    /// stream, same edits) to the masked path (invariant 15).
+    pub fn try_random_move_windowed(
+        &mut self,
+        max_batch: usize,
+        frozen_batches: usize,
+        window: usize,
+        rng: &mut Rng,
+    ) -> Option<Eval> {
         debug_assert!(self.pending.is_none(), "move pending; commit or rollback");
         // Snapshot into reused buffers (no allocation once warm): the
         // batch boundaries plus a straight per-column copy of the SoA.
@@ -930,10 +1123,11 @@ impl<'a> IncrementalEval<'a> {
         } else {
             None
         };
-        let mv = moves::random_move_desc_kv(
+        let mv = moves::random_move_desc_win(
             &mut self.schedule,
             max_batch,
             frozen_batches,
+            window,
             veto.as_ref(),
             rng,
         )?;

@@ -372,7 +372,13 @@ impl<'a> WaveController<'a> {
             params,
             strategy,
             jobs: Vec::new(),
-            table: PredTable::build_kv(&[], predictor, max_batch, &params.kv),
+            table: PredTable::build_kv_chunked(
+                &[],
+                predictor,
+                max_batch,
+                &params.kv,
+                params.chunk_tokens,
+            ),
             plan: Schedule { order: vec![], batches: vec![] },
             eval: Eval::ZERO,
             frozen_batches: 0,
@@ -822,7 +828,8 @@ impl<'a> WaveController<'a> {
             self.predictor,
             self.t0_ms,
             self.table.arrivals_all(),
-        );
+        )
+        .with_chunk_tokens(self.params.chunk_tokens);
         let first_admission = old_n == 0 && self.frozen_batches == 0;
         let warm = if first_admission {
             // No live plan (first admission, or everything dispatched and
@@ -864,6 +871,42 @@ impl<'a> WaveController<'a> {
         Ok(res.stats)
     }
 
+    /// Execution-time maximum (ms) of one frozen batch under the active
+    /// pricing: the whole-batch `exec_ms` max when chunking is off, the
+    /// chunked per-member exec otherwise — mirroring the evaluators'
+    /// chunk arithmetic operation for operation, so the prefix-end folds
+    /// and the replanned suffix waits stay on one bit-identical timeline.
+    fn frozen_batch_exec_max(&self, members: &[usize], bsize: usize) -> f64 {
+        let mut bmax = 0.0f64;
+        if self.table.chunk_tokens() == 0 {
+            for &j in members {
+                let e = self.table.get(j, bsize).exec_ms;
+                if e > bmax {
+                    bmax = e;
+                }
+            }
+        } else {
+            let mut chunk_total = 0.0f64;
+            for &j in members {
+                chunk_total += self.table.chunk_ms(j);
+            }
+            let mut offset = 0.0f64;
+            for &j in members {
+                offset += self.table.chunk_ms(j);
+                let exec = if self.jobs[j].output_len <= 1 {
+                    offset
+                } else {
+                    let p = self.table.get(j, bsize);
+                    chunk_total + (p.exec_ms - p.prefill_ms)
+                };
+                if exec > bmax {
+                    bmax = exec;
+                }
+            }
+        }
+        bmax
+    }
+
     /// Predicted end time (ms) of the dispatched prefix on the wave
     /// timeline — what the engine clock *should* read once the prefix has
     /// executed, under the predictions the plan was priced with. Equals
@@ -874,17 +917,14 @@ impl<'a> WaveController<'a> {
         for k in 0..self.frozen_batches {
             let bsize = self.plan.batches[k];
             let mut barr = f64::NEG_INFINITY;
-            let mut bmax = 0.0f64;
-            for &j in &self.plan.order[start..start + bsize] {
+            let members = &self.plan.order[start..start + bsize];
+            for &j in members {
                 let a = self.table.arrival_ms(j);
                 if a > barr {
                     barr = a;
                 }
-                let e = self.table.get(j, bsize).exec_ms;
-                if e > bmax {
-                    bmax = e;
-                }
             }
+            let bmax = self.frozen_batch_exec_max(members, bsize);
             free = TimelineOrigin::batch_start(free, barr) + bmax;
             start += bsize;
         }
@@ -908,17 +948,14 @@ impl<'a> WaveController<'a> {
             let bsize = self.plan.batches[self.fold_k];
             let start = self.fold_pos;
             let mut barr = f64::NEG_INFINITY;
-            let mut bmax = 0.0f64;
-            for &j in &self.plan.order[start..start + bsize] {
+            let members = &self.plan.order[start..start + bsize];
+            for &j in members {
                 let a = self.table.arrival_ms(j);
                 if a > barr {
                     barr = a;
                 }
-                let e = self.table.get(j, bsize).exec_ms;
-                if e > bmax {
-                    bmax = e;
-                }
             }
+            let bmax = self.frozen_batch_exec_max(members, bsize);
             self.fold_end =
                 TimelineOrigin::batch_start(self.fold_end, barr) + bmax;
             self.fold_pos += bsize;
@@ -996,7 +1033,8 @@ impl<'a> WaveController<'a> {
             self.predictor,
             self.t0_ms,
             self.table.arrivals_all(),
-        );
+        )
+        .with_chunk_tokens(self.params.chunk_tokens);
         let res =
             priority_mapping_warm(&ev, &self.table, &params, Some(&warm), 0);
         debug_assert!(res.schedule.validate(params.max_batch.max(1)).is_ok());
@@ -1048,6 +1086,10 @@ pub struct PredictedJob {
     pub wait_ms: f64,
     /// Predicted e2e latency (ms) — wait plus predicted execution.
     pub e2e_ms: f64,
+    /// Predicted time-to-first-token (ms) — wait plus the batch-wide
+    /// prefill (whole-prompt mode) or this member's final prefill-chunk
+    /// completion offset (chunked mode).
+    pub ttft_ms: f64,
 }
 
 /// Outcome of one online serving run.
@@ -1290,7 +1332,8 @@ pub fn run_online_opts(
             predictor,
             ctl.t0_ms(),
             ctl.arrivals(),
-        );
+        )
+        .with_chunk_tokens(params.chunk_tokens);
         let (_, timelines) = ev.eval_detailed(ctl.plan());
         timelines
             .iter()
@@ -1298,6 +1341,7 @@ pub fn run_online_opts(
                 id: requests[ctl.jobs()[t.job].req_idx].id,
                 wait_ms: t.wait_ms,
                 e2e_ms: t.wait_ms + t.exec_ms,
+                ttft_ms: t.ttft_ms,
             })
             .collect()
     };
@@ -1657,7 +1701,8 @@ pub fn run_online_fleet_migrating(
                 predictor,
                 ctl.t0_ms(),
                 ctl.arrivals(),
-            );
+            )
+            .with_chunk_tokens(params.chunk_tokens);
             let (_, timelines) = ev.eval_detailed(ctl.plan());
             timelines
                 .iter()
@@ -1665,6 +1710,7 @@ pub fn run_online_fleet_migrating(
                     id: requests[ctl.jobs()[t.job].req_idx].id,
                     wait_ms: t.wait_ms,
                     e2e_ms: t.wait_ms + t.exec_ms,
+                    ttft_ms: t.ttft_ms,
                 })
                 .collect()
         };

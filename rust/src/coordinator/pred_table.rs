@@ -59,6 +59,13 @@ pub struct PredTable {
     /// Per-job arrival time (ms) on the wave timeline (index = job);
     /// 0.0 for closed waves.
     arrival_ms: Vec<f64>,
+    /// Chunked-prefill chunk size the `chunk_ms` column was computed at;
+    /// 0 = chunking off (the column then holds solo whole-prompt prefill
+    /// and the evaluators never read it).
+    chunk_tokens: usize,
+    /// Per-job total chunked prefill time (ms, index = job):
+    /// [`LatencyPredictor::chunked_prefill_ms`] at `chunk_tokens`.
+    chunk_ms: Vec<f64>,
 }
 
 impl PredTable {
@@ -84,14 +91,32 @@ impl PredTable {
         max_batch: usize,
         kv: &KvConfig,
     ) -> PredTable {
+        PredTable::build_kv_chunked(jobs, predictor, max_batch, kv, 0)
+    }
+
+    /// [`PredTable::build_kv`] with a chunked-prefill chunk size: the
+    /// per-job `chunk_ms` column is computed at `chunk_tokens`
+    /// ([`LatencyPredictor::chunked_prefill_ms`]). `chunk_tokens == 0`
+    /// (chunking off) leaves every other column bit-identical to
+    /// [`PredTable::build_kv`] and the evaluators never read `chunk_ms`.
+    pub fn build_kv_chunked(
+        jobs: &[Job],
+        predictor: &LatencyPredictor,
+        max_batch: usize,
+        kv: &KvConfig,
+        chunk_tokens: usize,
+    ) -> PredTable {
         let max_batch = max_batch.max(1);
         let mut entries = Vec::with_capacity(jobs.len() * max_batch);
         let mut kv_blocks = Vec::with_capacity(jobs.len());
+        let mut chunk_ms = Vec::with_capacity(jobs.len());
         for job in jobs {
             for b in 1..=max_batch {
                 entries.push(predictor.predict(b, job.input_len, job.output_len));
             }
             kv_blocks.push(kv.job_blocks(job.input_len, job.output_len));
+            chunk_ms
+                .push(predictor.chunked_prefill_ms(job.input_len, chunk_tokens));
         }
         PredTable {
             n: jobs.len(),
@@ -102,6 +127,8 @@ impl PredTable {
             entries,
             kv_blocks,
             arrival_ms: vec![0.0; jobs.len()],
+            chunk_tokens,
+            chunk_ms,
         }
     }
 
@@ -156,6 +183,9 @@ impl PredTable {
             }
             self.kv_blocks.push(kv.job_blocks(job.input_len, job.output_len));
             self.arrival_ms.push(arrivals.map_or(0.0, |a| a[i]));
+            self.chunk_ms.push(
+                predictor.chunked_prefill_ms(job.input_len, self.chunk_tokens),
+            );
         }
         self.n += new_jobs.len();
     }
@@ -186,6 +216,7 @@ impl PredTable {
                     }
                     self.kv_blocks[w] = self.kv_blocks[j];
                     self.arrival_ms[w] = self.arrival_ms[j];
+                    self.chunk_ms[w] = self.chunk_ms[j];
                 }
                 w += 1;
             }
@@ -193,6 +224,7 @@ impl PredTable {
         self.entries.truncate(w * self.max_batch);
         self.kv_blocks.truncate(w);
         self.arrival_ms.truncate(w);
+        self.chunk_ms.truncate(w);
         self.n = w;
     }
 
@@ -262,6 +294,19 @@ impl PredTable {
     #[inline]
     pub fn arrivals_all(&self) -> &[f64] {
         &self.arrival_ms
+    }
+
+    /// Total chunked prefill time of `job` (ms) at the table's
+    /// `chunk_tokens`; solo whole-prompt prefill when chunking is off.
+    #[inline]
+    pub fn chunk_ms(&self, job: usize) -> f64 {
+        self.chunk_ms[job]
+    }
+
+    /// Chunked-prefill chunk size the `chunk_ms` column was computed at
+    /// (0 = chunking off).
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk_tokens
     }
 
     /// Block granularity the footprints were rounded at.
@@ -490,6 +535,56 @@ mod tests {
         // set_arrivals overwrites the whole column
         table.set_arrivals(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(table.arrivals_all(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn chunk_column_survives_extend_and_compact() {
+        let pred = LatencyPredictor::paper_table2();
+        let job = |i: usize, input: usize| Job {
+            req_idx: i,
+            input_len: input,
+            output_len: 5,
+            slo: Slo::E2e { e2e_ms: 1e9 },
+        };
+        let jobs = vec![job(0, 1000), job(1, 64), job(2, 700)];
+        let mut table = PredTable::build_kv_chunked(
+            &jobs,
+            &pred,
+            3,
+            &KvConfig::UNLIMITED,
+            256,
+        );
+        assert_eq!(table.chunk_tokens(), 256);
+        for (j, jb) in jobs.iter().enumerate() {
+            assert_eq!(
+                table.chunk_ms(j).to_bits(),
+                pred.chunked_prefill_ms(jb.input_len, 256).to_bits()
+            );
+        }
+        // extend fills the column at the table's chunk size
+        table.extend(&[job(3, 900)], &pred);
+        assert_eq!(
+            table.chunk_ms(3).to_bits(),
+            pred.chunked_prefill_ms(900, 256).to_bits()
+        );
+        // compact keeps the surviving rows aligned
+        table.compact(&[false, true, false, true]);
+        assert_eq!(
+            table.chunk_ms(0).to_bits(),
+            pred.chunked_prefill_ms(64, 256).to_bits()
+        );
+        assert_eq!(
+            table.chunk_ms(1).to_bits(),
+            pred.chunked_prefill_ms(900, 256).to_bits()
+        );
+        // chunking off: the column is solo whole-prompt prefill and the
+        // latency entries are bit-identical to the unchunked build
+        let plain = PredTable::build(&jobs, &pred, 3);
+        assert_eq!(plain.chunk_tokens(), 0);
+        assert_eq!(
+            plain.chunk_ms(0).to_bits(),
+            pred.prefill_ms(1, 1000).to_bits()
+        );
     }
 
     #[test]

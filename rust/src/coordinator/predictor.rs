@@ -217,6 +217,37 @@ impl LatencyPredictor {
         self.decode.eval(batch as f64, accumulated_len as f64)
     }
 
+    /// Total prefill latency when the prompt is split into
+    /// `chunk_tokens`-sized chunks, each executed as a batch-of-1 prefill
+    /// call (the chunked-prefill engine's pricing): the sum of Eq. 14 over
+    /// `ceil(input/chunk)` chunks, the last covering the remainder.
+    /// `chunk_tokens == 0` means chunking is off and falls back to the
+    /// whole-prompt `prefill_ms(1, input_len)`.
+    pub fn chunked_prefill_ms(
+        &self,
+        input_len: usize,
+        chunk_tokens: usize,
+    ) -> f64 {
+        if chunk_tokens == 0 || input_len <= chunk_tokens {
+            return self.prefill_ms(1, input_len);
+        }
+        let full = input_len / chunk_tokens;
+        let rem = input_len % chunk_tokens;
+        // Sum identical full-chunk terms via one eval to keep it O(1);
+        // addition order matches the naive loop (all full chunks are
+        // bit-equal terms, so k·t is exact when t·k has no rounding —
+        // we accumulate iteratively to stay bit-identical to the engine.
+        let t_full = self.prefill_ms(1, chunk_tokens);
+        let mut total = 0.0;
+        for _ in 0..full {
+            total += t_full;
+        }
+        if rem > 0 {
+            total += self.prefill_ms(1, rem);
+        }
+        total
+    }
+
     /// Eq. 16 in closed form:
     ///
     /// Σ_{k=1..lo} [α·b·(li+k) + β·b + γ·(li+k) + δ]
@@ -454,6 +485,33 @@ mod tests {
         assert_eq!(fit_lo_sigma(&[]), 0.0);
         assert_eq!(fit_lo_sigma(&[(10, 12)]), 0.0);
         assert_eq!(fit_lo_sigma(&[(0, 5), (7, 0)]), 0.0);
+    }
+
+    #[test]
+    fn chunked_prefill_sums_per_chunk_eq14() {
+        let pred = p();
+        // 1000 tokens in 256-chunks: 3 full + 232 remainder
+        let want = pred.prefill_ms(1, 256) * 3.0 + pred.prefill_ms(1, 232);
+        let got = pred.chunked_prefill_ms(1000, 256);
+        assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+        // exact division: no remainder chunk
+        let got = pred.chunked_prefill_ms(512, 256);
+        assert!((got - pred.prefill_ms(1, 256) * 2.0).abs() < 1e-9);
+        // chunking off or chunk >= input falls back to whole-prompt
+        assert_eq!(
+            pred.chunked_prefill_ms(300, 0).to_bits(),
+            pred.prefill_ms(1, 300).to_bits()
+        );
+        assert_eq!(
+            pred.chunked_prefill_ms(100, 256).to_bits(),
+            pred.prefill_ms(1, 100).to_bits()
+        );
+        // length-proportional coefficients telescope: Σ γ·chunk = γ·input
+        let lin = LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma: 2.0, delta: 0.0 },
+            PhaseCoeffs::ZERO,
+        );
+        assert!((lin.chunked_prefill_ms(1000, 64) - 2000.0).abs() < 1e-9);
     }
 
     #[test]

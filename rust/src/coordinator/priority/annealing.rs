@@ -110,6 +110,17 @@ pub struct SaParams {
     /// Temperature levels between deterministic best-exchanges when
     /// `chains ≥ 2` (clamped to ≥ 1). Irrelevant at `chains == 1`.
     pub exchange_period: usize,
+    /// Sliding-window width in batches: moves may only edit the first
+    /// `window` batches beyond the frozen prefix, so the search plans the
+    /// next W dispatches instead of the whole wave. `0` (the default) is
+    /// unbounded and replays the unwindowed search bit for bit
+    /// (invariant 15 in `docs/ARCHITECTURE.md`).
+    pub window: usize,
+    /// Chunked-prefill chunk size in tokens the evaluators price at (must
+    /// mirror [`crate::engine::sim::SimEngine::with_chunk_tokens`] on the
+    /// executing engine). `0` (the default) prices whole-prompt prefill
+    /// and replays the unchunked stack bit for bit (invariant 15).
+    pub chunk_tokens: usize,
 }
 
 impl Default for SaParams {
@@ -124,6 +135,8 @@ impl Default for SaParams {
             kv: KvConfig::UNLIMITED,
             chains: 1,
             exchange_period: 4,
+            window: 0,
+            chunk_tokens: 0,
         }
     }
 }
@@ -395,10 +408,12 @@ impl<'e> ChainState<'e> {
         for &t in temps {
             for _ in 0..params.iters_per_temp {
                 // Allocation-free move applied against the incremental
-                // state; commit or rollback below.
-                let mv = self.inc.try_random_move_masked(
+                // state; commit or rollback below. `params.window == 0`
+                // keeps the classic whole-wave neighbourhood.
+                let mv = self.inc.try_random_move_windowed(
                     max_batch,
                     frozen_batches,
+                    params.window,
                     &mut self.rng,
                 );
                 let f_new = match mv {
@@ -736,9 +751,17 @@ pub fn priority_mapping(ev: &Evaluator, params: &SaParams) -> SaResult {
     // Layer 1: precompute every (job, batch_size) prediction — and each
     // job's KV-block footprint — for the wave, mirroring the evaluator's
     // timeline arrivals into the table so the incremental path sees the
-    // exact same per-job arrival column (zeros for closed waves).
-    let mut table =
-        PredTable::build_kv(ev.jobs(), ev.predictor(), max_batch, &params.kv);
+    // exact same per-job arrival column (zeros for closed waves). The
+    // chunk column is computed at the evaluator's chunk size (the
+    // authoritative one) so the incremental chunked pricing is
+    // bit-identical to the full evaluation.
+    let mut table = PredTable::build_kv_chunked(
+        ev.jobs(),
+        ev.predictor(),
+        max_batch,
+        &params.kv,
+        ev.chunk_tokens(),
+    );
     if !ev.arrivals().is_empty() {
         table.set_arrivals(ev.arrivals());
     }
@@ -813,6 +836,12 @@ pub fn priority_mapping_warm(
          the search enforces lo_mult {}",
         table.lo_mult(),
         params.kv.lo_mult
+    );
+    assert_eq!(
+        table.chunk_tokens(),
+        ev.chunk_tokens(),
+        "prediction table chunk column computed at a different chunk size \
+         than the evaluator prices at"
     );
 
     if frozen_batches > 0 {
@@ -942,16 +971,26 @@ pub fn priority_mapping_full(ev: &Evaluator, params: &SaParams) -> SaResult {
                         None
                     },
                 };
-                moves::random_move_desc_kv(
+                moves::random_move_desc_win(
                     &mut candidate,
                     max_batch,
                     0,
+                    params.window,
                     Some(&veto),
                     &mut rng,
                 )
                 .is_some()
             } else {
-                moves::random_move(&mut candidate, max_batch, &mut rng)
+                // window = 0 replays `moves::random_move`'s stream exactly.
+                moves::random_move_desc_win(
+                    &mut candidate,
+                    max_batch,
+                    0,
+                    params.window,
+                    None,
+                    &mut rng,
+                )
+                .is_some()
             };
             if !moved {
                 continue;
@@ -1633,6 +1672,91 @@ mod tests {
         let res = priority_mapping(&ev, &p);
         res.schedule.validate(6).unwrap();
         assert_eq!(ev.kv_excess(&res.schedule, &kv), 0, "{:?}", res.schedule);
+    }
+
+    #[test]
+    fn windowed_search_is_valid_deterministic_and_off_means_off() {
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0x31D0);
+        let jobs: Vec<Job> = (0..14)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(1200),
+                output_len: 1 + rng.below(300),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred);
+        let base = SaParams {
+            max_batch: 4,
+            seed: 5,
+            t0: 100.0,
+            iters_per_temp: 25,
+            ..Default::default()
+        };
+        // explicit window = 0 is the default path, bit for bit
+        let a = priority_mapping(&ev, &base);
+        let b = priority_mapping(&ev, &SaParams { window: 0, ..base });
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.eval, b.eval);
+        assert_eq!(a.stats.evals, b.stats.evals);
+        assert_eq!(a.stats.accepted, b.stats.accepted);
+        // finite windows: valid, deterministic, fast == full (both paths
+        // share the windowed generator and the same RNG stream)
+        for w in [1usize, 3] {
+            let p = SaParams { window: w, ..base };
+            let res = priority_mapping(&ev, &p);
+            res.schedule.validate(4).unwrap();
+            let rerun = priority_mapping(&ev, &p);
+            assert_eq!(res.schedule, rerun.schedule, "window {w}");
+            assert_eq!(res.eval, rerun.eval, "window {w}");
+            let full = priority_mapping_full(&ev, &p);
+            assert_eq!(res.schedule, full.schedule, "window {w}");
+            assert_eq!(res.eval, full.eval, "window {w}");
+            assert_eq!(res.stats.evals, full.stats.evals, "window {w}");
+            assert_eq!(res.stats.accepted, full.stats.accepted, "window {w}");
+        }
+    }
+
+    #[test]
+    fn chunked_pricing_fast_equals_full_and_beats_fcfs() {
+        // A chunk-priced evaluator drives the same search machinery: the
+        // incremental path (chunk column in the PredTable) must stay
+        // bit-identical to the full evaluation, and the result can never
+        // fall below the FCFS baseline under the same pricing.
+        let pred = LatencyPredictor::paper_table2();
+        let mut rng = Rng::new(0xC41C);
+        let jobs: Vec<Job> = (0..13)
+            .map(|_| Job {
+                req_idx: 0,
+                input_len: 1 + rng.below(1400),
+                output_len: 1 + rng.below(300),
+                slo: Slo::E2e { e2e_ms: rng.uniform(1_000.0, 20_000.0) },
+            })
+            .collect();
+        let ev = Evaluator::new(&jobs, &pred).with_chunk_tokens(256);
+        for seed in 0..3u64 {
+            let p = SaParams {
+                max_batch: 4,
+                seed,
+                t0: 100.0,
+                iters_per_temp: 25,
+                chunk_tokens: 256,
+                ..Default::default()
+            };
+            let fast = priority_mapping(&ev, &p);
+            let full = priority_mapping_full(&ev, &p);
+            assert_eq!(fast.schedule, full.schedule, "seed {seed}");
+            assert_eq!(fast.eval, full.eval, "seed {seed}");
+            assert_eq!(fast.stats.evals, full.stats.evals, "seed {seed}");
+            let fcfs = ev.eval(&Schedule::fcfs(jobs.len(), 4));
+            assert!(
+                fast.eval.g >= fcfs.g - 1e-15,
+                "seed {seed}: {:?} below FCFS {:?}",
+                fast.eval,
+                fcfs
+            );
+        }
     }
 
     #[test]

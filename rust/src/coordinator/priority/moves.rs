@@ -48,6 +48,19 @@
 //! schedule stays feasible for the whole search. With `kv == None` the
 //! `*_kv` variants draw the exact RNG stream of the plain/masked ones.
 //!
+//! **Sliding-window restriction** (chunk-granular online planning): every
+//! move also has a `*_win` variant taking a `window` — the number of
+//! batches beyond the frozen prefix the search may edit. With `window ==
+//! W > 0` only batches `frozen_batches..hi` are eligible, where
+//! `hi = m.min(frozen_batches + W)`: squeeze sources/targets, delay
+//! sources and targets, and both swap positions must lie inside the
+//! window, and delaying may only open a fresh final batch when the window
+//! already reaches the schedule's end (`hi == m`). Batches at `hi..` keep
+//! their membership and internal order (their indices may shift when a
+//! windowed batch empties). With `window == 0` the window is unbounded
+//! and the `*_win` variants draw the exact RNG stream and produce the
+//! exact edits of the `*_kv` ones — the invariant-15 bit-identity.
+//!
 //! **Per-chain move streams** (parallel tempering): the generators hold
 //! no state beyond the `&mut Rng` handed in, so each tempering chain
 //! drives its own derived RNG
@@ -301,19 +314,35 @@ pub fn squeeze_prev_desc_kv(
     kv: Option<&KvVeto>,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    squeeze_prev_desc_win(s, max_batch, frozen_batches, 0, kv, rng)
+}
+
+/// [`squeeze_prev_desc_kv`] restricted to a sliding window of `window`
+/// batches beyond the frozen prefix (0 = unbounded): both the source and
+/// the (previous) target batch must lie inside the window. `window == 0`
+/// draws the exact RNG stream of [`squeeze_prev_desc_kv`].
+pub fn squeeze_prev_desc_win(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    window: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let m = s.batches.len();
-    // Source k needs an unfrozen target k-1: k ranges over first..m.
+    let hi = if window == 0 { m } else { m.min(frozen_batches + window) };
+    // Source k needs an unfrozen target k-1: k ranges over first..hi.
     let first = frozen_batches + 1;
-    if m < first + 1 {
+    if hi < first + 1 {
         return None;
     }
     // Eligible batches k >= first with batches[k-1] < max_batch.
     let elig = |k: usize| s.batches[k - 1] < max_batch;
-    let count = (first..m).filter(|&k| elig(k)).count();
+    let count = (first..hi).filter(|&k| elig(k)).count();
     if count == 0 {
         return None;
     }
-    let k = nth_eligible(first..m, rng.below(count), elig);
+    let k = nth_eligible(first..hi, rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     // pick a random member of batch k and move it to the end of batch k-1
     let pick = start_k + rng.below(s.batches[k]);
@@ -375,6 +404,23 @@ pub fn delay_next_desc_kv(
     kv: Option<&KvVeto>,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    delay_next_desc_win(s, max_batch, frozen_batches, 0, kv, rng)
+}
+
+/// [`delay_next_desc_kv`] restricted to a sliding window of `window`
+/// batches beyond the frozen prefix (0 = unbounded): the source batch and
+/// its target must lie inside the window, and delaying out of the final
+/// batch (opening a fresh iteration) is only possible when the window
+/// reaches the schedule's end. `window == 0` draws the exact RNG stream
+/// of [`delay_next_desc_kv`].
+pub fn delay_next_desc_win(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    window: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     if s.order.is_empty() {
         return None;
     }
@@ -382,21 +428,27 @@ pub fn delay_next_desc_kv(
     if frozen_batches >= m {
         return None;
     }
-    // Eligible source batches: k < m-1 with batches[k+1] < max_batch, or the
-    // final batch if it holds more than one job (otherwise delaying is a
-    // no-op that recreates the same batch).
+    let hi = if window == 0 { m } else { m.min(frozen_batches + window) };
+    // Eligible source batches: k with an in-window target k+1 that has
+    // room, or the final *schedule* batch — only when the window reaches
+    // it — if it holds more than one job (otherwise delaying is a no-op
+    // that recreates the same batch). A batch whose target would fall
+    // outside the window is ineligible: windowed planning never edits
+    // batches the controller has not yet opened for search.
     let elig = |k: usize| {
-        if k + 1 < m {
+        if k + 1 < hi {
             s.batches[k + 1] < max_batch
+        } else if k + 1 < m {
+            false
         } else {
             s.batches[k] > 1
         }
     };
-    let count = (frozen_batches..m).filter(|&k| elig(k)).count();
+    let count = (frozen_batches..hi).filter(|&k| elig(k)).count();
     if count == 0 {
         return None;
     }
-    let k = nth_eligible(frozen_batches..m, rng.below(count), elig);
+    let k = nth_eligible(frozen_batches..hi, rng.below(count), elig);
     let start_k: usize = s.batches[..k].iter().sum();
     let pick = start_k + rng.below(s.batches[k]);
     if let Some(v) = kv {
@@ -472,14 +524,33 @@ pub fn rand_swap_desc_kv(
     kv: Option<&KvVeto>,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    rand_swap_desc_win(s, frozen_batches, 0, kv, rng)
+}
+
+/// [`rand_swap_desc_kv`] restricted to a sliding window of `window`
+/// batches beyond the frozen prefix (0 = unbounded): both swapped
+/// positions are sampled from the window's order span
+/// `[frozen_pos, Σ batches[..hi])`. `window == 0` draws the exact RNG
+/// stream of [`rand_swap_desc_kv`].
+pub fn rand_swap_desc_win(
+    s: &mut Schedule,
+    frozen_batches: usize,
+    window: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let n = s.order.len();
-    let frozen_pos: usize = s.batches[..frozen_batches.min(s.batches.len())]
-        .iter()
-        .sum();
-    if n - frozen_pos < 2 {
+    let m = s.batches.len();
+    let frozen_pos: usize = s.batches[..frozen_batches.min(m)].iter().sum();
+    let win_end = if window == 0 {
+        n
+    } else {
+        s.batches[..m.min(frozen_batches + window)].iter().sum()
+    };
+    if win_end.saturating_sub(frozen_pos) < 2 {
         return None;
     }
-    let free = n - frozen_pos;
+    let free = win_end - frozen_pos;
     let i = frozen_pos + rng.below(free);
     let mut j = frozen_pos + rng.below(free - 1);
     if j >= i {
@@ -550,12 +621,42 @@ pub fn random_move_desc_kv(
     kv: Option<&KvVeto>,
     rng: &mut Rng,
 ) -> Option<AppliedMove> {
+    random_move_desc_win(s, max_batch, frozen_batches, 0, kv, rng)
+}
+
+/// [`random_move_desc_kv`] restricted to a sliding window of `window`
+/// batches beyond the frozen prefix (0 = unbounded). A move family that
+/// has no in-window candidates counts as infeasible and the rotation
+/// falls through to the next one. `window == 0` draws the exact RNG
+/// stream and produces the exact edits of [`random_move_desc_kv`].
+pub fn random_move_desc_win(
+    s: &mut Schedule,
+    max_batch: usize,
+    frozen_batches: usize,
+    window: usize,
+    kv: Option<&KvVeto>,
+    rng: &mut Rng,
+) -> Option<AppliedMove> {
     let first = rng.below(3);
     for offset in 0..3 {
         let mv = match (first + offset) % 3 {
-            0 => squeeze_prev_desc_kv(s, max_batch, frozen_batches, kv, rng),
-            1 => delay_next_desc_kv(s, max_batch, frozen_batches, kv, rng),
-            _ => rand_swap_desc_kv(s, frozen_batches, kv, rng),
+            0 => squeeze_prev_desc_win(
+                s,
+                max_batch,
+                frozen_batches,
+                window,
+                kv,
+                rng,
+            ),
+            1 => delay_next_desc_win(
+                s,
+                max_batch,
+                frozen_batches,
+                window,
+                kv,
+                rng,
+            ),
+            _ => rand_swap_desc_win(s, frozen_batches, window, kv, rng),
         };
         if mv.is_some() {
             return mv;
@@ -954,6 +1055,107 @@ mod tests {
             }
         }
         assert!(saw_merge, "phased veto never allowed the legal merge");
+    }
+
+    #[test]
+    fn win_zero_matches_kv_stream() {
+        // window = 0 must replay the exact edits and RNG stream of the
+        // unwindowed path (invariant 15's search-side half).
+        let mut a = Schedule::fcfs(9, 3);
+        let mut b = Schedule::fcfs(9, 3);
+        let mut rng_a = Rng::new(41);
+        let mut rng_b = Rng::new(41);
+        for _ in 0..200 {
+            let ma = random_move_desc_kv(&mut a, 3, 0, None, &mut rng_a);
+            let mb =
+                random_move_desc_win(&mut b, 3, 0, 0, None, &mut rng_b);
+            assert_eq!(ma, mb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn windowed_moves_stay_inside_window() {
+        check("windowed moves never reorder beyond the window", 300, |rng| {
+            let n = 1 + rng.below(14);
+            let max_batch = 1 + rng.below(4);
+            let mut s = Schedule::fcfs(n, max_batch);
+            for _ in 0..10 {
+                random_move_desc(&mut s, max_batch, rng);
+            }
+            let frozen = rng.below(s.batches.len() + 1);
+            let window = 1 + rng.below(3);
+            for _ in 0..30 {
+                let m = s.batches.len();
+                let hi = m.min(frozen + window);
+                let frozen_pos: usize =
+                    s.batches[..frozen.min(m)].iter().sum();
+                let win_end: usize = s.batches[..hi].iter().sum();
+                let prefix = s.order[..frozen_pos.min(s.order.len())].to_vec();
+                let suffix = s.order[win_end..].to_vec();
+                let tail_batches = s.batches[hi..].to_vec();
+                if let Some(mv) = random_move_desc_win(
+                    &mut s, max_batch, frozen, window, None, rng,
+                ) {
+                    s.validate(max_batch)
+                        .map_err(|e| format!("after windowed move: {e}"))?;
+                    if s.order[..prefix.len()] != prefix[..] {
+                        return Err("frozen order changed".into());
+                    }
+                    if s.order[win_end..] != suffix[..] {
+                        return Err(format!(
+                            "order beyond window changed: {:?} != {suffix:?}",
+                            &s.order[win_end..]
+                        ));
+                    }
+                    // Batches beyond the window keep membership; their
+                    // indices shift down by one when a windowed batch is
+                    // removed. An append only happens when hi == m.
+                    let new_hi = if mv.removed_batch.is_some() {
+                        hi - 1
+                    } else if mv.appended_batch {
+                        hi + 1
+                    } else {
+                        hi
+                    };
+                    if mv.appended_batch && hi != m {
+                        return Err(format!(
+                            "append escaped the window: hi={hi} m={m}"
+                        ));
+                    }
+                    if s.batches[new_hi.min(s.batches.len())..]
+                        != tail_batches[..]
+                    {
+                        return Err(format!(
+                            "batches beyond window changed: {:?} != \
+                             {tail_batches:?}",
+                            &s.batches[new_hi.min(s.batches.len())..]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn window_blocks_delay_escape_and_append() {
+        // [2, 2] with window 1: squeeze has no in-window target, delay's
+        // target (batch 1) is outside the window and the final-batch
+        // append is out of reach, so only intra-window swaps survive and
+        // the batch structure is pinned.
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let mut s =
+                Schedule { order: vec![0, 1, 2, 3], batches: vec![2, 2] };
+            if let Some(mv) =
+                random_move_desc_win(&mut s, 4, 0, 1, None, &mut rng)
+            {
+                assert_eq!(s.batches, vec![2, 2], "{mv:?}");
+                assert!(matches!(mv.undo, OrderUndo::Swap { .. }), "{mv:?}");
+                assert_eq!(s.order[2..], [2, 3][..], "window leaked: {s:?}");
+            }
+        }
     }
 
     #[test]

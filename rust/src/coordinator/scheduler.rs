@@ -256,7 +256,11 @@ pub fn schedule(
         job_sets
             .iter()
             .zip(&params)
-            .map(|(jobs, p)| priority_mapping(&Evaluator::new(jobs, predictor), p))
+            .map(|(jobs, p)| {
+                let ev = Evaluator::new(jobs, predictor)
+                    .with_chunk_tokens(p.chunk_tokens);
+                priority_mapping(&ev, p)
+            })
             .collect()
     } else {
         std::thread::scope(|scope| {
@@ -270,7 +274,9 @@ pub fn schedule(
                         None
                     } else {
                         Some(scope.spawn(move || {
-                            priority_mapping(&Evaluator::new(jobs, predictor), p)
+                            let ev = Evaluator::new(jobs, predictor)
+                                .with_chunk_tokens(p.chunk_tokens);
+                            priority_mapping(&ev, p)
                         }))
                     }
                 })
@@ -283,7 +289,9 @@ pub fn schedule(
                         h.join().expect("priority-mapping thread panicked")
                     }
                     None => {
-                        priority_mapping(&Evaluator::new(jobs, predictor), p)
+                        let ev = Evaluator::new(jobs, predictor)
+                            .with_chunk_tokens(p.chunk_tokens);
+                        priority_mapping(&ev, p)
                     }
                 })
                 .collect()

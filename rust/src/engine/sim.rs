@@ -281,6 +281,15 @@ pub struct SimEngine {
     /// High-water mark of KV-block occupancy (diagnostics: a KV-aware
     /// scheduler must keep this at or below the pool by construction).
     peak_used_blocks: usize,
+    /// Chunked-prefill chunk size in tokens. `0` (the default) runs the
+    /// legacy whole-prompt prefill byte for byte — same RNG stream, same
+    /// KV behaviour, same completions (invariant 15). Positive: each
+    /// prompt is split into `chunk_tokens`-sized chunks executed
+    /// sequentially in batch order as batch-of-1 prefill calls, one
+    /// noise draw per chunk, with the member's first token emitted at
+    /// its *final* chunk completion and phased/divergent KV allocated
+    /// progressively per chunk.
+    chunk_tokens: usize,
     /// Per-decode-step token tracing ([`Engine::enable_step_trace`]).
     /// Off by default: recording consumes no RNG and touches no timing,
     /// so the disabled engine is the pre-trace engine bit for bit.
@@ -316,9 +325,23 @@ impl SimEngine {
             batches_run: 0,
             decode_steps: 0,
             peak_used_blocks: 0,
+            chunk_tokens: 0,
             record_steps: false,
             step_events: Vec::new(),
         }
+    }
+
+    /// This engine with chunked prefill at `chunk_tokens` tokens per
+    /// chunk (see the `chunk_tokens` field docs). `0` (the default) is
+    /// the whole-prompt engine bit for bit — invariant 15's escape hatch.
+    pub fn with_chunk_tokens(mut self, chunk_tokens: usize) -> Self {
+        self.chunk_tokens = chunk_tokens;
+        self
+    }
+
+    /// The configured chunked-prefill chunk size (0 = off).
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk_tokens
     }
 
     /// This engine with per-decode-step token tracing enabled from the
@@ -595,6 +618,77 @@ impl SimEngine {
         }
     }
 
+    /// Chunked prefill phase shared by every planned-batch path when
+    /// `chunk_tokens > 0`: members prefill **sequentially in batch
+    /// order**, each prompt split into `chunk_tokens`-sized chunks
+    /// charged as batch-of-1 prefill calls with one noise draw per chunk
+    /// (`prefill_ms(1, chunk_len) · noise`). A member's first token is
+    /// emitted at its *final* chunk completion, so short-prompt members
+    /// no longer wait on the batch's longest prompt — the TTFT win the
+    /// sliding-window scheduler prices. Returns per-member first-token
+    /// times (engine clock, batch order).
+    ///
+    /// KV handling: with `kv_first_tok = Some(ft)` the allocation is
+    /// progressive — `alloc_seq` on the member's first chunk,
+    /// `extend_seq` per subsequent chunk, plus `ft[i]` extra tokens on
+    /// the final chunk (the prefill-emitted first token) — ending in
+    /// exactly the post-prefill state the upfront loops produce. `None`
+    /// performs no KV ops (reserve mode pinned full footprints before
+    /// the call). Chunk completions are tagged in the step trace via
+    /// [`StepEvent::chunked`]; the final chunk also carries the
+    /// member's id in `emitted` (its first token).
+    fn chunked_prefill_phase(
+        &mut self,
+        batch: &[EngineRequest],
+        kv_first_tok: Option<&[usize]>,
+    ) -> Result<Vec<f64>> {
+        let chunk = self.chunk_tokens;
+        debug_assert!(chunk > 0);
+        let mut first_token = Vec::with_capacity(batch.len());
+        for (i, r) in batch.iter().enumerate() {
+            let mut done = 0usize;
+            while done < r.input_len {
+                let len = chunk.min(r.input_len - done);
+                let is_first = done == 0;
+                done += len;
+                let is_last = done == r.input_len;
+                if let Some(ft) = kv_first_tok {
+                    let tokens = len + if is_last { ft[i] } else { 0 };
+                    if is_first {
+                        if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
+                            // e.g. duplicate ids within one batch: release
+                            // the finished members so the refusal leaks
+                            // nothing (this member holds no blocks yet).
+                            for prev in &batch[..i] {
+                                let _ = self.kv.free_seq(prev.id);
+                            }
+                            return Err(e.into());
+                        }
+                    } else {
+                        // pre-checked demand: a failure here means the
+                        // scheduler planned an infeasible batch.
+                        self.kv.extend_seq(r.id, tokens)?;
+                    }
+                    self.peak_used_blocks =
+                        self.peak_used_blocks.max(self.kv.used_blocks());
+                }
+                let t = self.profile.truth.prefill_ms(1, len) * self.noise();
+                self.clock_ms += t;
+                if self.record_steps {
+                    self.step_events.push(StepEvent {
+                        t_ms: self.clock_ms,
+                        emitted: if is_last { vec![r.id] } else { Vec::new() },
+                        chunked: vec![r.id],
+                        ..StepEvent::default()
+                    });
+                }
+            }
+            first_token.push(self.clock_ms);
+        }
+        self.batches_run += 1;
+        Ok(first_token)
+    }
+
     /// Planned-batch execution under an active [`DivergenceModel`]: each
     /// member's true decode length is sampled around its nominal budget,
     /// and the member finishes (and frees its KV) at its true EOS step.
@@ -638,38 +732,49 @@ impl SimEngine {
                 self.kv.config().total_blocks,
             );
         }
-        for (i, r) in batch.iter().enumerate() {
-            // prompt + the prefill token (zero-output members pin only
-            // their prompt, mirroring the phased path's clamp)
-            let tokens = r.input_len + actual[i].min(1);
-            if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
-                for done in &batch[..i] {
-                    let _ = self.kv.free_seq(done.id);
-                }
-                return Err(e.into());
-            }
-        }
-        self.peak_used_blocks = self.peak_used_blocks.max(self.kv.used_blocks());
         let start = self.clock_ms;
-        let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
-        let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
-        self.clock_ms += t_prefill;
-        self.batches_run += 1;
-        let first_token_ms = self.clock_ms;
-        if self.record_steps {
-            self.step_events.push(StepEvent {
-                t_ms: first_token_ms,
-                emitted: batch.iter().map(|r| r.id).collect(),
-                ..StepEvent::default()
-            });
-        }
+        let first_token: Vec<f64> = if self.chunk_tokens > 0 {
+            // progressive per-chunk allocation ends in the same
+            // post-prefill state as the upfront loop below: prompt + the
+            // prefill token per member.
+            let ft: Vec<usize> = actual.iter().map(|&a| a.min(1)).collect();
+            self.chunked_prefill_phase(batch, Some(&ft))?
+        } else {
+            for (i, r) in batch.iter().enumerate() {
+                // prompt + the prefill token (zero-output members pin only
+                // their prompt, mirroring the phased path's clamp)
+                let tokens = r.input_len + actual[i].min(1);
+                if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
+                    for done in &batch[..i] {
+                        let _ = self.kv.free_seq(done.id);
+                    }
+                    return Err(e.into());
+                }
+            }
+            self.peak_used_blocks =
+                self.peak_used_blocks.max(self.kv.used_blocks());
+            let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
+            let t_prefill =
+                self.profile.truth.prefill_ms(b, max_in) * self.noise();
+            self.clock_ms += t_prefill;
+            self.batches_run += 1;
+            let first_token_ms = self.clock_ms;
+            if self.record_steps {
+                self.step_events.push(StepEvent {
+                    t_ms: first_token_ms,
+                    emitted: batch.iter().map(|r| r.id).collect(),
+                    ..StepEvent::default()
+                });
+            }
+            vec![first_token_ms; b]
+        };
 
         let mut remaining: Vec<usize> =
             actual.iter().map(|&a| a.max(1) - 1).collect();
         let mut accumulated: Vec<usize> =
             batch.iter().map(|r| r.input_len + 1).collect();
         let mut generated = vec![1usize; b];
-        let mut finish = vec![first_token_ms; b];
+        let mut finish = first_token.clone();
         let mut truncated = vec![false; b];
         let mut live = remaining.iter().filter(|&&r| r > 0).count();
         // members whose single token came out of prefill free immediately
@@ -738,7 +843,7 @@ impl SimEngine {
             .map(|(i, r)| ItemResult {
                 id: r.id,
                 start_ms: start,
-                first_token_ms,
+                first_token_ms: first_token[i],
                 finish_ms: finish[i],
                 generated: generated[i],
                 batch_size: b,
@@ -805,29 +910,37 @@ impl SimEngine {
                 self.kv.config().total_blocks,
             );
         }
-        for (i, r) in batch.iter().enumerate() {
-            let tokens = r.input_len + actual[i].min(1);
-            if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
-                for done in &batch[..i] {
-                    let _ = self.kv.free_seq(done.id);
-                }
-                return Err(e.into());
-            }
-        }
-        self.peak_used_blocks = self.peak_used_blocks.max(self.kv.used_blocks());
         let start = self.clock_ms;
-        let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
-        let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
-        self.clock_ms += t_prefill;
-        self.batches_run += 1;
-        let first_token_ms = self.clock_ms;
-        if self.record_steps {
-            self.step_events.push(StepEvent {
-                t_ms: first_token_ms,
-                emitted: batch.iter().map(|r| r.id).collect(),
-                ..StepEvent::default()
-            });
-        }
+        let first_token: Vec<f64> = if self.chunk_tokens > 0 {
+            let ft: Vec<usize> = actual.iter().map(|&a| a.min(1)).collect();
+            self.chunked_prefill_phase(batch, Some(&ft))?
+        } else {
+            for (i, r) in batch.iter().enumerate() {
+                let tokens = r.input_len + actual[i].min(1);
+                if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
+                    for done in &batch[..i] {
+                        let _ = self.kv.free_seq(done.id);
+                    }
+                    return Err(e.into());
+                }
+            }
+            self.peak_used_blocks =
+                self.peak_used_blocks.max(self.kv.used_blocks());
+            let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
+            let t_prefill =
+                self.profile.truth.prefill_ms(b, max_in) * self.noise();
+            self.clock_ms += t_prefill;
+            self.batches_run += 1;
+            let first_token_ms = self.clock_ms;
+            if self.record_steps {
+                self.step_events.push(StepEvent {
+                    t_ms: first_token_ms,
+                    emitted: batch.iter().map(|r| r.id).collect(),
+                    ..StepEvent::default()
+                });
+            }
+            vec![first_token_ms; b]
+        };
 
         let truth = self.profile.truth;
         let block_tokens = self.kv.config().block_tokens;
@@ -846,7 +959,7 @@ impl SimEngine {
         let mut accumulated: Vec<usize> =
             batch.iter().map(|r| r.input_len + 1).collect();
         let mut generated = vec![1usize; b];
-        let mut finish = vec![first_token_ms; b];
+        let mut finish = first_token.clone();
         // A member holds device KV iff it is unfinished and not
         // suspended; `swapped_blocks[i] > 0` records host-buffer
         // occupancy while suspended in Swap mode (0 ⇒ recompute resume).
@@ -1060,6 +1173,7 @@ impl SimEngine {
                     emitted,
                     suspended: suspended_ids,
                     resumed: resumed_ids,
+                    ..StepEvent::default()
                 });
             }
         }
@@ -1069,7 +1183,7 @@ impl SimEngine {
             .map(|(i, r)| ItemResult {
                 id: r.id,
                 start_ms: start,
-                first_token_ms,
+                first_token_ms: first_token[i],
                 finish_ms: finish[i],
                 generated: generated[i],
                 batch_size: b,
@@ -1196,40 +1310,57 @@ impl Engine for SimEngine {
                 self.kv.config().total_blocks,
             );
         }
-        for (i, r) in batch.iter().enumerate() {
-            // phased: prompt + the first token prefill emits (clamped to
-            // the token budget, so a zero-output request never pins more
-            // than its reserve footprint); reserve: the full
-            // input + output footprint, pinned until batch end.
-            let tokens = if phased {
-                r.input_len + r.max_new_tokens.min(1)
-            } else {
-                r.input_len + r.max_new_tokens
-            };
-            if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
-                // e.g. duplicate request ids within one batch: release the
-                // already-allocated prefix so the refusal leaks nothing.
-                for done in &batch[..i] {
-                    let _ = self.kv.free_seq(done.id);
+        let chunked = self.chunk_tokens > 0;
+        if !(chunked && phased) {
+            // Upfront allocation: reserve mode always (full footprints
+            // pinned before any timing); phased mode only when chunking
+            // is off — chunked phased allocates progressively per chunk.
+            for (i, r) in batch.iter().enumerate() {
+                // phased: prompt + the first token prefill emits (clamped
+                // to the token budget, so a zero-output request never pins
+                // more than its reserve footprint); reserve: the full
+                // input + output footprint, pinned until batch end.
+                let tokens = if phased {
+                    r.input_len + r.max_new_tokens.min(1)
+                } else {
+                    r.input_len + r.max_new_tokens
+                };
+                if let Err(e) = self.kv.alloc_seq(r.id, tokens) {
+                    // e.g. duplicate request ids within one batch: release
+                    // the already-allocated prefix so the refusal leaks
+                    // nothing.
+                    for done in &batch[..i] {
+                        let _ = self.kv.free_seq(done.id);
+                    }
+                    return Err(e.into());
                 }
-                return Err(e.into());
             }
+            self.peak_used_blocks =
+                self.peak_used_blocks.max(self.kv.used_blocks());
         }
-        self.peak_used_blocks = self.peak_used_blocks.max(self.kv.used_blocks());
         let start = self.clock_ms;
-        let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
-        let t_prefill = self.profile.truth.prefill_ms(b, max_in) * self.noise();
-        self.clock_ms += t_prefill;
-        self.batches_run += 1;
-        let first_token_ms = self.clock_ms;
-        if self.record_steps {
-            // prefill emits every member's first token at once
-            self.step_events.push(StepEvent {
-                t_ms: first_token_ms,
-                emitted: batch.iter().map(|r| r.id).collect(),
-                ..StepEvent::default()
-            });
-        }
+        let first_token: Vec<f64> = if chunked {
+            let ft: Vec<usize> =
+                batch.iter().map(|r| r.max_new_tokens.min(1)).collect();
+            let kv_arg = if phased { Some(ft.as_slice()) } else { None };
+            self.chunked_prefill_phase(batch, kv_arg)?
+        } else {
+            let max_in = batch.iter().map(|r| r.input_len).max().unwrap();
+            let t_prefill =
+                self.profile.truth.prefill_ms(b, max_in) * self.noise();
+            self.clock_ms += t_prefill;
+            self.batches_run += 1;
+            let first_token_ms = self.clock_ms;
+            if self.record_steps {
+                // prefill emits every member's first token at once
+                self.step_events.push(StepEvent {
+                    t_ms: first_token_ms,
+                    emitted: batch.iter().map(|r| r.id).collect(),
+                    ..StepEvent::default()
+                });
+            }
+            vec![first_token_ms; b]
+        };
 
         // decode: every member advances one token per iteration until all
         // reach their budget; the batch-size term stays b for stragglers
@@ -1238,7 +1369,7 @@ impl Engine for SimEngine {
             batch.iter().map(|r| r.max_new_tokens.saturating_sub(1)).collect();
         let mut accumulated: Vec<usize> =
             batch.iter().map(|r| r.input_len + 1).collect();
-        let mut finish = vec![first_token_ms; b];
+        let mut finish = first_token.clone();
         let mut live = remaining.iter().filter(|&&r| r > 0).count();
         if phased {
             // members whose single token came out of prefill are done:
@@ -1304,7 +1435,7 @@ impl Engine for SimEngine {
             .map(|(i, r)| ItemResult {
                 id: r.id,
                 start_ms: start,
-                first_token_ms,
+                first_token_ms: first_token[i],
                 finish_ms: finish[i],
                 generated: r.max_new_tokens.max(1),
                 batch_size: b,
@@ -1834,6 +1965,133 @@ mod tests {
         assert_eq!(ps2.swap_outs, 0, "3-block contexts cannot fit 1 block");
         assert!(ps2.recompute_resumes >= 1);
         assert_eq!(tiny.kv().active_seqs(), 0);
+    }
+
+    /// Three-member staggered-overrun scenario on a 9-block pool: equal
+    /// 30-token prompts with 10-token nominals exactly fill the reserve
+    /// pre-check, and the disjoint actual-length bands (short / long /
+    /// long) make the pool exhaust at *different* decode depths — once
+    /// while all three are live, again after the short member has
+    /// retired. The member with no deadline (+∞ slack) is the designated
+    /// victim both times, so the test pins the resume-pass/headroom rule
+    /// across repeated suspensions of the same member. Returns
+    /// `(requests, expected actual lengths, model, victim index)`.
+    fn staggered_trio(
+    ) -> (Vec<EngineRequest>, Vec<usize>, DivergenceModel, usize) {
+        let model = DivergenceModel::QuantileTrace { sigma: 1.0 };
+        let mut probe = Rng::new(0);
+        // the deadline-carrying long member must outlive the victim's
+        // second block-boundary crossing (≥ 50 keeps it live past the
+        // victim's catch-up window after the short member retires)
+        let id_a = (0..5000u64)
+            .find(|&id| {
+                (50..=60).contains(&model.actual_lo(id, 10, &mut probe))
+            })
+            .expect("some id must overrun into [50, 60]");
+        let id_b = (0..5000u64)
+            .find(|&id| {
+                id != id_a
+                    && (40..=60).contains(&model.actual_lo(id, 10, &mut probe))
+            })
+            .expect("a second id must overrun into [40, 60]");
+        let id_c = (0..5000u64)
+            .find(|&id| {
+                id != id_a
+                    && id != id_b
+                    && (22..=28).contains(&model.actual_lo(id, 10, &mut probe))
+            })
+            .expect("some id must overrun into [22, 28]");
+        let expect = vec![
+            model.actual_lo(id_a, 10, &mut probe),
+            model.actual_lo(id_b, 10, &mut probe),
+            model.actual_lo(id_c, 10, &mut probe),
+        ];
+        (
+            vec![req(id_a, 30, 10), req(id_b, 30, 10), req(id_c, 30, 10)],
+            expect,
+            model,
+            1,
+        )
+    }
+
+    #[test]
+    fn preemption_multi_member_staggered_resumes_exactly_once() {
+        for swap in [false, true] {
+            let (batch, expect, model, victim) = staggered_trio();
+            let mut p = quiet_profile();
+            p.kv_pool_mb = 72.0; // 144 tokens at 0.5 MB/token -> 9 blocks
+            let pc = if swap {
+                PreemptConfig::swap(8.0, 64)
+            } else {
+                PreemptConfig::recompute()
+            };
+            let mut e = SimEngine::new(p, 4, 0)
+                .with_divergence(model)
+                .with_preemption(pc)
+                .with_step_trace();
+            assert_eq!(e.kv().config().total_blocks, 9);
+            // deadlines for the two non-victims only: the victim's
+            // unknown deadline sorts as +∞ slack, so every exhaustion
+            // suspends it and never the deadline-carrying members
+            e.set_deadlines(&[
+                (batch[0].id, 50_000.0),
+                (batch[2].id, 20_000.0),
+            ]);
+            let out = e.run_batch(&batch).unwrap();
+            // no starvation: every member — including the repeatedly
+            // suspended one — runs to its true actual length
+            assert_eq!(e.kv_truncations(), 0, "swap={swap}");
+            for (i, r) in out.iter().enumerate() {
+                assert_eq!(r.generated, expect[i], "swap={swap} member {i}");
+            }
+            let ps = e.preemption_stats();
+            // staggered exhaustion: the pool runs out at least twice
+            // (once with all three live, again after the short member
+            // retires and the survivors grow past the freed blocks)
+            assert!(ps.preemptions >= 2, "swap={swap}: {ps:?}");
+            // exactly-once pairing: every suspension is matched by one
+            // resume — no double-resume, no forgotten member
+            let resumes = ps.recompute_resumes + ps.swap_ins;
+            assert_eq!(resumes, ps.preemptions, "swap={swap}: {ps:?}");
+            if swap {
+                // ample host buffer: nothing degrades to recompute, and
+                // the buffer drains completely
+                assert_eq!(ps.recompute_resumes, 0, "{ps:?}");
+                assert_eq!(ps.swap_ins, ps.swap_outs, "{ps:?}");
+                assert!(e.host_blocks_peak() >= 1);
+            }
+            // only the designated (slackest) member was ever suspended
+            let suspended: Vec<u64> = e
+                .take_step_events()
+                .iter()
+                .flat_map(|ev| ev.suspended.iter().copied())
+                .collect();
+            assert!(!suspended.is_empty(), "swap={swap}");
+            assert!(
+                suspended.iter().all(|&id| id == batch[victim].id),
+                "swap={swap}: a deadline-carrying member was suspended: \
+                 {suspended:?}"
+            );
+            // leak-free on both the device pool and the host buffer
+            assert_eq!(e.kv().active_seqs(), 0, "swap={swap}");
+            assert_eq!(e.kv().free_blocks(), 9, "swap={swap}");
+            // deterministic: a fresh engine replays the run bit for bit
+            let mut p2 = quiet_profile();
+            p2.kv_pool_mb = 72.0;
+            let mut e2 = SimEngine::new(p2, 4, 0)
+                .with_divergence(model)
+                .with_preemption(pc);
+            e2.set_deadlines(&[
+                (batch[0].id, 50_000.0),
+                (batch[2].id, 20_000.0),
+            ]);
+            let out2 = e2.run_batch(&batch).unwrap();
+            for (x, y) in out.iter().zip(&out2) {
+                assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+                assert_eq!(x.generated, y.generated);
+            }
+            assert_eq!(e2.preemption_stats(), ps);
+        }
     }
 
     #[test]

@@ -237,7 +237,39 @@ fn online_specs() -> Vec<OptSpec> {
                    ≥ 2 instances to ever fire)",
             default: Some("0"),
         },
+        OptSpec {
+            name: "chunk-tokens",
+            help: "off | <N>: split each prefill into N-token chunks in \
+                   the engine and price per-member first tokens in the \
+                   search (off = whole-prompt prefill, bit-identical to \
+                   the unchunked stack)",
+            default: Some("off"),
+        },
+        OptSpec {
+            name: "window",
+            help: "sliding-window SA: restrict moves to the next W \
+                   undispatched batches (0 = whole-schedule search)",
+            default: Some("0"),
+        },
     ]
+}
+
+/// Parse `--chunk-tokens off|<N>` into the engine/evaluator chunk size
+/// (0 = whole-prompt prefill — the byte-for-byte default, invariant 15).
+fn parse_chunk_tokens(spec: &str) -> Result<usize> {
+    if spec == "off" {
+        return Ok(0);
+    }
+    let n: usize = spec
+        .parse()
+        .map_err(|_| anyhow!("bad --chunk-tokens {spec} (off|<tokens>)"))?;
+    if n == 0 {
+        return Err(anyhow!(
+            "--chunk-tokens must be positive (or 'off' for whole-prompt \
+             prefill)"
+        ));
+    }
+    Ok(n)
 }
 
 /// Resolve `--kv-quantile <q>` into the [`KvConfig::with_lo_mult`]
@@ -395,12 +427,15 @@ fn cmd_online(argv: &[String]) -> Result<()> {
         adaptive_budget: args.str("adaptive-budget") == "1",
         migrate: args.str("migrate") == "1",
     };
+    let chunk_tokens = parse_chunk_tokens(&args.str("chunk-tokens"))?;
     let sa = SaParams {
         max_batch,
         seed,
         kv,
         chains: args.usize("chains")?.max(1),
         exchange_period: args.usize("exchange-period")?.max(1),
+        window: args.usize("window")?,
+        chunk_tokens,
         ..Default::default()
     };
 
@@ -428,7 +463,8 @@ fn cmd_online(argv: &[String]) -> Result<()> {
                     )
                     .with_kv_phase(kv_phase)
                     .with_divergence(divergence)
-                    .with_preemption(preempt),
+                    .with_preemption(preempt)
+                    .with_chunk_tokens(chunk_tokens),
                 ) as Box<dyn Engine + Send>
             })
             .collect();
@@ -531,6 +567,8 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "base SA seed (shard 0 runs it verbatim)", default: Some("42") },
         OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:0") },
         OptSpec { name: "requests", help: "exit after N served (0 = until shutdown op)", default: Some("0") },
+        OptSpec { name: "chunk-tokens", help: "off | <N>: chunked prefill in sim engines + per-member TTFT pricing in the shards", default: Some("off") },
+        OptSpec { name: "window", help: "sliding-window SA over the next W undispatched batches (0 = whole schedule)", default: Some("0") },
     ]
 }
 
@@ -540,7 +578,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &serve_specs())?;
     let shards = args.usize("shards")?.max(1);
     let max_batch = args.usize("max-batch")?.max(1);
+    let chunk_tokens = parse_chunk_tokens(&args.str("chunk-tokens"))?;
     let (engines, predictor, max_total) = if args.str("engine") == "real" {
+        if chunk_tokens != 0 {
+            return Err(anyhow!(
+                "--chunk-tokens applies to the simulated engines only; \
+                 the real engine prefills whole prompts"
+            ));
+        }
         build_real_engines(&args, shards, max_batch)?
     } else {
         let profile = profiles::by_name(&args.str("profile"))
@@ -549,11 +594,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let seed = args.u64("seed")?;
         let engines: Vec<Box<dyn Engine + Send>> = (0..shards)
             .map(|s| {
-                Box::new(SimEngine::new(
-                    profile.clone(),
-                    max_batch,
-                    seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
-                )) as Box<dyn Engine + Send>
+                Box::new(
+                    SimEngine::new(
+                        profile.clone(),
+                        max_batch,
+                        seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
+                    )
+                    .with_chunk_tokens(chunk_tokens),
+                ) as Box<dyn Engine + Send>
             })
             .collect();
         (
@@ -570,6 +618,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     cfg.sa.max_batch = max_batch;
     cfg.sa.iters_per_temp = args.usize("iters-per-temp")?.max(1);
     cfg.sa.seed = args.u64("seed")?;
+    cfg.sa.chunk_tokens = chunk_tokens;
+    cfg.sa.window = args.usize("window")?;
     let door = server::FrontDoor::start(cfg, engines)?;
     let mut tcp = server::serve_tcp(door.clone(), &args.str("addr"))?;
     println!("slo-serve listening on {} ({shards} shard(s))", tcp.addr);
@@ -640,6 +690,8 @@ fn bench_http_specs() -> Vec<OptSpec> {
         OptSpec { name: "preempt", help: "off | recompute | swap (engine pool-exhaustion policy)", default: Some("off") },
         OptSpec { name: "kv-swap-gbps", help: "host↔device link bandwidth for --preempt swap (GB/s)", default: Some("8") },
         OptSpec { name: "kv-host-blocks", help: "host swap-buffer capacity in KV blocks (--preempt swap)", default: Some("1024") },
+        OptSpec { name: "chunk-tokens", help: "off | <N>: chunked prefill in the engines + per-member TTFT pricing in the shards", default: Some("off") },
+        OptSpec { name: "window", help: "sliding-window SA over the next W undispatched batches (0 = whole schedule)", default: Some("0") },
         OptSpec { name: "out", help: "write the JSON report here too", default: Some("") },
     ]
 }
@@ -674,6 +726,8 @@ fn cmd_bench_http(argv: &[String]) -> Result<()> {
         preempt: args.str("preempt"),
         kv_swap_gbps: args.f64("kv-swap-gbps")?,
         kv_host_blocks: args.u64("kv-host-blocks")?,
+        chunk_tokens: parse_chunk_tokens(&args.str("chunk-tokens"))?,
+        window: args.usize("window")?,
     };
     let report = server::bench_http::run(&cfg)?;
     println!("{}", report.to_string_pretty());

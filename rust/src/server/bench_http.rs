@@ -66,6 +66,13 @@ pub struct BenchHttpConfig {
     pub kv_swap_gbps: f64,
     /// Host swap-buffer capacity for `preempt = swap` (KV blocks).
     pub kv_host_blocks: u64,
+    /// Chunked-prefill chunk size (tokens) for the engines and the shard
+    /// planners' TTFT pricing; 0 = whole-prompt prefill (invariant 15's
+    /// byte-for-byte default).
+    pub chunk_tokens: usize,
+    /// Sliding-window SA width for the shard planners; 0 = whole-schedule
+    /// search.
+    pub window: usize,
 }
 
 impl Default for BenchHttpConfig {
@@ -88,6 +95,8 @@ impl Default for BenchHttpConfig {
             preempt: "off".into(),
             kv_swap_gbps: 8.0,
             kv_host_blocks: 1024,
+            chunk_tokens: 0,
+            window: 0,
         }
     }
 }
@@ -121,7 +130,8 @@ pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
                     cfg.seed ^ (s as u64).wrapping_mul(0xE531_7AB1),
                 )
                 .with_divergence(divergence)
-                .with_preemption(preempt),
+                .with_preemption(preempt)
+                .with_chunk_tokens(cfg.chunk_tokens),
             ) as Box<dyn Engine + Send>
         })
         .collect();
@@ -161,6 +171,8 @@ pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
     door_cfg.sa.max_batch = cfg.max_batch;
     door_cfg.sa.iters_per_temp = cfg.iters_per_temp.max(1);
     door_cfg.sa.seed = cfg.seed;
+    door_cfg.sa.chunk_tokens = cfg.chunk_tokens;
+    door_cfg.sa.window = cfg.window;
     if cfg.kv_pool_mb > 0.0 {
         // Bind the shard planners to the shrunken pool too. The Eq. 20
         // utility discount makes the scheduler's block budget strictly
@@ -243,6 +255,11 @@ pub fn run(cfg: &BenchHttpConfig) -> Result<Json> {
             Json::str(cfg.divergence.clone()),
         );
         map.insert("preempt".into(), Json::str(cfg.preempt.clone()));
+        map.insert(
+            "chunk_tokens".into(),
+            Json::num(cfg.chunk_tokens as f64),
+        );
+        map.insert("window".into(), Json::num(cfg.window as f64));
         map.insert("submitted".into(), Json::num(submitted as f64));
         map.insert(
             "rejected_saturated".into(),

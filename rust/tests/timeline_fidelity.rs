@@ -79,7 +79,8 @@ fn run(
 ) -> OnlineOutcome {
     let outs: Vec<usize> = trace.iter().map(|r| r.output_len).collect();
     let mut engine = SimEngine::new(profile.clone(), sa.max_batch, 0)
-        .with_kv_phase(sa.kv.phase);
+        .with_kv_phase(sa.kv.phase)
+        .with_chunk_tokens(sa.chunk_tokens);
     run_online_opts(
         trace,
         &outs,
@@ -111,6 +112,13 @@ fn assert_predictions_exact(out: &OnlineOutcome, tag: &str) {
             p.id,
             p.wait_ms,
             c.wait_ms
+        );
+        assert!(
+            (p.ttft_ms - c.ttft_ms).abs() < 1e-9,
+            "{tag}: request {} predicted ttft {} != executed {}",
+            p.id,
+            p.ttft_ms,
+            c.ttft_ms
         );
     }
 }
@@ -170,6 +178,119 @@ fn predicted_completions_equal_executed_in_phased_mode() {
         );
         assert_eq!(out.completions.len(), n, "seed {seed}");
         assert_predictions_exact(&out, &format!("phased seed {seed}"));
+    }
+}
+
+/// Profile whose prefill cost is purely length-proportional
+/// (`γ · max_input` per batch, decode free): per-member prefill pricing
+/// is observably wrong for every non-longest batch member, so this is
+/// the model that distinguishes the batch-wide TTFT formula from the
+/// old `wait + own-prefill` one.
+fn gamma_profile(gamma: f64) -> HardwareProfile {
+    HardwareProfile {
+        name: "gamma-prefill".into(),
+        truth: LatencyPredictor::new(
+            PhaseCoeffs { alpha: 0.0, beta: 0.0, gamma, delta: 0.0 },
+            PhaseCoeffs::ZERO,
+        ),
+        kv_pool_mb: 2_000.0,
+        mem: MemoryModel { utility: 1.0, mb_per_token: 0.5 },
+        noise_std: 0.0,
+        max_total_tokens: 4096,
+    }
+}
+
+#[test]
+fn predicted_ttft_equals_executed_batch_first_token() {
+    // The engine emits every member's first token when the *batch*
+    // prefill (`γ · max_input`) finishes; under the old per-member TTFT
+    // formula a short prompt sharing a batch with a long one was
+    // predicted an earlier first token than the engine can produce.
+    const GAMMA: f64 = 0.5;
+    let profile = gamma_profile(GAMMA);
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed ^ 0x77F7);
+        let n = 12 + rng.below(12);
+        let trace = random_trace(&mut rng, n, 0.0, 60.0);
+        let sa = SaParams {
+            max_batch: 4,
+            seed,
+            t0: 100.0,
+            iters_per_temp: 10,
+            ..Default::default()
+        };
+        let out = run(
+            &trace,
+            &profile,
+            &sa,
+            OnlineOpts { arrival_aware: true, ..Default::default() },
+        );
+        assert_eq!(out.completions.len(), n, "seed {seed}");
+        // the property is only sharp if some batch actually mixes
+        // members (prompt lengths are random, so almost surely distinct)
+        assert!(
+            out.completions.iter().any(|c| c.batch_size > 1),
+            "seed {seed}: trace degenerated to singleton batches"
+        );
+        for (p, c) in out.predicted.iter().zip(&out.completions) {
+            assert_eq!(p.id, c.id, "seed {seed}");
+            assert!(
+                (p.ttft_ms - c.ttft_ms).abs() < 1e-9,
+                "seed {seed}: request {} predicted ttft {} != executed \
+                 {} (batch size {})",
+                p.id,
+                p.ttft_ms,
+                c.ttft_ms,
+                c.batch_size
+            );
+            assert!(
+                (p.wait_ms - c.wait_ms).abs() < 1e-9,
+                "seed {seed}: request {} predicted wait {} != executed {}",
+                p.id,
+                p.wait_ms,
+                c.wait_ms
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_predictions_equal_executed() {
+    // Chunked execution under the constant-duration model: every chunk
+    // costs δ, so a member's first token lands at
+    // `batch start + Σ_{j ≤ i} ceil(input_j / C) · δ` — a *different*
+    // number per member, and (for multi-chunk prompts) a different batch
+    // duration than whole-prompt prefill. Predicted wait/ttft/e2e must
+    // all track it exactly (invariant 15's chunked half).
+    const EXEC_MS: f64 = 50.0;
+    const CHUNK: usize = 128;
+    let profile = constant_profile(EXEC_MS);
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed ^ 0xC41C);
+        let n = 10 + rng.below(14);
+        let trace = random_trace(&mut rng, n, 0.0, 2.0 * EXEC_MS);
+        let sa = SaParams {
+            max_batch: 4,
+            seed,
+            t0: 100.0,
+            iters_per_temp: 10,
+            chunk_tokens: CHUNK,
+            ..Default::default()
+        };
+        let out = run(
+            &trace,
+            &profile,
+            &sa,
+            OnlineOpts { arrival_aware: true, ..Default::default() },
+        );
+        assert_eq!(out.completions.len(), n, "seed {seed}");
+        // at least one prompt must span several chunks or the test
+        // degenerates to the unchunked one (lengths reach 500 > 2·128)
+        assert!(
+            trace.iter().any(|r| r.input_len > CHUNK),
+            "seed {seed}: no multi-chunk prompt in the trace"
+        );
+        assert_predictions_exact(&out, &format!("chunked seed {seed}"));
     }
 }
 

@@ -1,0 +1,92 @@
+#!/usr/bin/env bash
+# Commit one (or more) bench JSONL rows into perf/TRAJECTORY.jsonl on
+# origin/main and prove they landed. Shared by the bench, bench-http,
+# and gap CI jobs so the merge/push/verify protocol exists exactly once.
+#
+#   scripts/trajectory_commit.sh <row-file> <label>
+#
+# <row-file>: JSONL whose rows to union-merge into the trajectory; must
+#             contain a row carrying $GITHUB_SHA (the append step tags
+#             every row with the commit it measured).
+# <label>:    short job name for commit messages and log lines.
+#
+# Success REQUIRES the $GITHUB_SHA row to be present on origin/main when
+# the script exits — including on the "nothing to commit" path. The
+# previous inline version declared victory whenever `git diff --cached
+# --quiet` said there was nothing to stage, which is exactly how five
+# PRs of bench rows vanished while perf/TRAJECTORY.jsonl sat at 0 bytes:
+# an empty merge input produced an empty diff, the step exited 0, and
+# the SHA check lived in a separate step that only guarded the happy
+# path. Every exit path here re-reads the file from origin/main and
+# fails on an *empty* file as well as a missing SHA row.
+set -euo pipefail
+
+row_file="${1:?usage: trajectory_commit.sh <row-file> <label>}"
+label="${2:?usage: trajectory_commit.sh <row-file> <label>}"
+: "${GITHUB_SHA:?GITHUB_SHA must be set}"
+
+# The input must already carry this run's row: failing here separates
+# "the append step produced nothing" from "the push lost it".
+if ! test -s "$row_file"; then
+  echo "FAIL: $label row file '$row_file' is empty — nothing to commit"
+  exit 1
+fi
+if ! grep -q "$GITHUB_SHA" "$row_file"; then
+  echo "FAIL: $label row file '$row_file' has no row for $GITHUB_SHA"
+  exit 1
+fi
+
+git config user.name "github-actions[bot]"
+git config user.email \
+  "41898282+github-actions[bot]@users.noreply.github.com"
+
+# Retry with an order-preserving union merge so concurrent bench jobs
+# never conflict a row away: rebuild on top of the freshest main each
+# attempt, dedup committed + new rows.
+pushed=0
+for attempt in 1 2 3; do
+  git fetch origin main
+  git reset --hard origin/main
+  awk '!seen[$0]++' perf/TRAJECTORY.jsonl "$row_file" \
+    > /tmp/trajectory_merged.jsonl
+  cp /tmp/trajectory_merged.jsonl perf/TRAJECTORY.jsonl
+  git add perf/TRAJECTORY.jsonl
+  if git diff --cached --quiet; then
+    # Nothing to stage is success ONLY if the row is already committed
+    # (e.g. a rerun of this workflow) — never because the merge input
+    # was empty. This branch is the old silent-drop bug.
+    if grep -q "$GITHUB_SHA" perf/TRAJECTORY.jsonl; then
+      echo "$label row for $GITHUB_SHA already committed on main"
+      pushed=1
+      break
+    fi
+    echo "FAIL: nothing to commit, yet main has no $label row for" \
+      "$GITHUB_SHA — the merge dropped this run's row"
+    exit 1
+  fi
+  git commit -m "ci: append $label result to perf trajectory [skip ci]"
+  if git push origin HEAD:main; then
+    pushed=1
+    break
+  fi
+  echo "push rejected (concurrent run?), retry ${attempt}"
+done
+if [ "$pushed" != "1" ]; then
+  echo "FAIL: $label row not pushed to main after 3 attempts"
+  exit 1
+fi
+
+# Prove it landed: re-read from the remote, not the local tree. Both
+# checks block — non-empty AND carrying this run's row.
+git fetch origin main
+git show origin/main:perf/TRAJECTORY.jsonl > /tmp/trajectory_remote.jsonl
+if ! test -s /tmp/trajectory_remote.jsonl; then
+  echo "FAIL: perf/TRAJECTORY.jsonl on origin/main is empty"
+  exit 1
+fi
+if ! grep -q "$GITHUB_SHA" /tmp/trajectory_remote.jsonl; then
+  echo "FAIL: no $label row for $GITHUB_SHA on origin/main — the" \
+    "append/commit chain dropped this run's bench result"
+  exit 1
+fi
+echo "OK: $label trajectory row for $GITHUB_SHA is on origin/main"
